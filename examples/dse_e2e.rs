@@ -1,0 +1,91 @@
+//! End-to-end driver (EXPERIMENTS.md §E2E): exercises every layer of the
+//! stack on the paper's full headline workload — the 121-configuration
+//! MAC×SRAM design space × 5 Table 4 clusters × 3 embodied-carbon
+//! scenarios — through the AOT-compiled XLA path, then cross-checks the
+//! PJRT results against the pure-Rust host mirror and reports throughput.
+//!
+//!     make artifacts && cargo run --release --example dse_e2e
+
+use std::time::Instant;
+
+use xrcarbon::dse::batching::evaluate_chunked;
+use xrcarbon::dse::{design_grid, explore, lifetime_for_ratio, profile_configs, profiles_to_rows};
+use xrcarbon::carbon::FabGrid;
+use xrcarbon::experiments::common::{default_use_grid, rows_request, suite_task};
+use xrcarbon::matrixform::MetricRow;
+use xrcarbon::runtime::{HostEngine, PjrtEngine};
+use xrcarbon::workloads::{cluster_workloads, Cluster};
+
+fn main() -> anyhow::Result<()> {
+    let t0 = Instant::now();
+    let mut pjrt = PjrtEngine::load("artifacts")?;
+    println!(
+        "[setup] PJRT {} engine, variants {:?}, loaded in {:?}",
+        pjrt.platform(),
+        pjrt.variants(),
+        t0.elapsed()
+    );
+    let mut host = HostEngine::new();
+
+    let grid = design_grid();
+    let configs: Vec<_> = grid.iter().map(|p| p.config.clone()).collect();
+    let ci = default_use_grid().g_per_joule();
+
+    // Scenario calibration on the All cluster.
+    let all_w = cluster_workloads(Cluster::All);
+    let t1 = Instant::now();
+    let all_profiles = profile_configs(&configs, &all_w);
+    println!("[profile] 121 configs x {} kernels in {:?}", all_w.len(), t1.elapsed());
+    let all_rows = profiles_to_rows(&configs, &all_profiles, FabGrid::Coal);
+    let all_tasks = suite_task(&all_w);
+
+    let mut evals = 0usize;
+    let mut max_rel_err = 0.0f64;
+    let t2 = Instant::now();
+    for ratio in [0.98, 0.65, 0.25] {
+        let lifetime = lifetime_for_ratio(&all_rows, &all_tasks, ratio, ci);
+        for cluster in Cluster::ALL {
+            let ws = cluster_workloads(cluster);
+            let rows = if cluster == Cluster::All {
+                all_rows.clone()
+            } else {
+                let p = profile_configs(&configs, &ws);
+                profiles_to_rows(&configs, &p, FabGrid::Coal)
+            };
+            let req = rows_request(rows, &ws, lifetime, 1.0);
+            let out = explore(&mut pjrt, &req)?;
+            let href = evaluate_chunked(&mut host, &req)?;
+            // Cross-check PJRT vs host on the tCDP row.
+            for i in 0..out.result.c {
+                let (a, b) = (
+                    out.result.metric(MetricRow::Tcdp, i),
+                    href.metric(MetricRow::Tcdp, i),
+                );
+                let rel = (a - b).abs() / a.abs().max(b.abs()).max(1e-12);
+                max_rel_err = max_rel_err.max(rel);
+            }
+            evals += out.result.c;
+            let best = out.optimal["tCDP"];
+            println!(
+                "[dse] {:4.0}% embodied | {:14} -> {} (tCDP {:.3e}, best/avg {:.1}x, {} feasible)",
+                ratio * 100.0,
+                cluster.label(),
+                out.result.names[best],
+                out.stats.best,
+                out.stats.mean / out.stats.best,
+                out.stats.feasible
+            );
+        }
+    }
+    let dt = t2.elapsed();
+    println!(
+        "\n[e2e] {} config-evaluations through PJRT in {:?} ({:.0} configs/s)",
+        evals,
+        dt,
+        evals as f64 / dt.as_secs_f64()
+    );
+    println!("[e2e] max PJRT-vs-host relative error: {max_rel_err:.2e}");
+    assert!(max_rel_err < 2e-4, "numeric drift between PJRT and host mirror");
+    println!("[e2e] OK — all layers compose (Pallas kernel -> JAX graph -> HLO text -> PJRT -> coordinator)");
+    Ok(())
+}

@@ -1,0 +1,25 @@
+//! Operational-lifetime studies (paper §5.3 and §5.5, Figs 10/14): the
+//! embodied/operational crossovers of A-1..A-4 and the carbon-optimal
+//! replacement period.
+//!
+//!     cargo run --release --example lifetime_sweep
+
+use xrcarbon::experiments::common::Ctx;
+use xrcarbon::experiments::{fig10_lifetime_crossover as fig10, fig14_replacement};
+use xrcarbon::report::ascii_series;
+
+fn main() -> anyhow::Result<()> {
+    let mut ctx = Ctx::auto();
+    println!("engine: {}\n", ctx.backend);
+    let f = fig10::run(ctx.engine.as_mut(), &fig10::default_axis())?;
+    print!("{}", f.table.render());
+    let labels: Vec<String> = f.n_inf.iter().map(|n| format!("{:.0}", n.log10())).collect();
+    let series: Vec<(&str, Vec<f64>)> = f
+        .series
+        .iter()
+        .map(|(n, v)| (n.as_str(), v.iter().map(|x| x.log10()).collect()))
+        .collect();
+    println!("{}", ascii_series(&labels, &series, 60));
+    print!("{}", fig14_replacement::run().table.render());
+    Ok(())
+}

@@ -1,0 +1,48 @@
+//! Quickstart: run a small carbon-aware design space exploration and
+//! print the tCDP-optimal accelerator for the 5-AI workload cluster.
+//!
+//!     cargo run --release --example quickstart
+
+use xrcarbon::dse::{design_grid, explore, lifetime_for_ratio, profile_configs, profiles_to_rows};
+use xrcarbon::carbon::FabGrid;
+use xrcarbon::experiments::common::{default_use_grid, rows_request, suite_task, Ctx};
+use xrcarbon::matrixform::MetricRow;
+use xrcarbon::workloads::{cluster_workloads, Cluster};
+
+fn main() -> anyhow::Result<()> {
+    // 1. Enumerate the hardware design space (121 MAC×SRAM points).
+    let grid = design_grid();
+    let configs: Vec<_> = grid.iter().map(|p| p.config.clone()).collect();
+
+    // 2. Profile the cluster's kernels on every candidate (Fig 6 simulator).
+    let workloads = cluster_workloads(Cluster::Ai5);
+    let profiles = profile_configs(&configs, &workloads);
+    let rows = profiles_to_rows(&configs, &profiles, FabGrid::Coal);
+
+    // 3. Pick a carbon scenario (65% embodied share) and evaluate the
+    //    whole space through the XLA runtime in one batch.
+    let ci = default_use_grid().g_per_joule();
+    let lifetime = lifetime_for_ratio(&rows, &suite_task(&workloads), 0.65, ci);
+    let req = rows_request(rows, &workloads, lifetime, 1.0);
+
+    let mut ctx = Ctx::auto();
+    println!("engine: {}", ctx.backend);
+    let out = explore(ctx.engine.as_mut(), &req)?;
+
+    // 4. Report the optimum.
+    let best = out.optimal["tCDP"];
+    println!(
+        "tCDP-optimal design for {:?}: {}  (tCDP {:.3e} g*s; {} feasible designs)",
+        Cluster::Ai5,
+        out.result.names[best],
+        out.result.metric(MetricRow::Tcdp, best),
+        out.stats.feasible,
+    );
+    let edp = out.optimal["EDP"];
+    println!(
+        "EDP would have picked:        {}  (its tCDP is {:.2}x worse)",
+        out.result.names[edp],
+        out.result.metric(MetricRow::Tcdp, edp) / out.result.metric(MetricRow::Tcdp, best)
+    );
+    Ok(())
+}

@@ -1,0 +1,17 @@
+//! 3-D integration case study (paper §5.6, Figs 15/16): carbon efficiency
+//! of F2F-stacked SRAM accelerators vs the 2-D baseline.
+//!
+//!     cargo run --release --example stacking3d
+
+use xrcarbon::accel::Workload;
+use xrcarbon::experiments::common::Ctx;
+use xrcarbon::experiments::{fig15_stacking, fig16_stacking_kernels};
+
+fn main() -> anyhow::Result<()> {
+    let mut ctx = Ctx::auto();
+    println!("engine: {}\n", ctx.backend);
+    print!("{}", fig15_stacking::run(ctx.engine.as_mut(), Workload::Sr512)?.table.render());
+    println!();
+    print!("{}", fig16_stacking_kernels::run(ctx.engine.as_mut())?.table.render());
+    Ok(())
+}

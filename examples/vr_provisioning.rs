@@ -1,0 +1,26 @@
+//! VR CPU provisioning case study (paper §5.4, Figs 11–13): find the
+//! carbon-optimal core configuration per application and the resulting
+//! embodied/total savings.
+//!
+//!     cargo run --release --example vr_provisioning
+
+use xrcarbon::experiments::common::Ctx;
+use xrcarbon::experiments::{fig11_provisioning_savings, fig12_tlp_breakdown, fig13_core_configs};
+use xrcarbon::workloads::FleetConfig;
+
+fn main() -> anyhow::Result<()> {
+    let mut ctx = Ctx::auto();
+    println!("engine: {}\n", ctx.backend);
+    print!("{}", fig12_tlp_breakdown::run(&FleetConfig::default()).table.render());
+    println!();
+    print!("{}", fig13_core_configs::run(ctx.engine.as_mut())?.table.render());
+    println!();
+    let f11 = fig11_provisioning_savings::run(ctx.engine.as_mut())?;
+    print!("{}", f11.table.render());
+    println!(
+        "\nmean embodied saving {:.0}% | mean total saving {:.1}%",
+        f11.mean_embodied_saving * 100.0,
+        f11.mean_total_saving * 100.0
+    );
+    Ok(())
+}

@@ -1,0 +1,70 @@
+"""AOT lowering: JAX model → HLO *text* artifacts for the Rust runtime.
+
+HLO text (not serialized HloModuleProto and not `jax.export` bytes) is the
+interchange format: jax ≥ 0.5 emits protos with 64-bit instruction ids
+that the xla crate's xla_extension 0.5.1 rejects (`proto.id() <= INT_MAX`);
+the text parser reassigns ids and round-trips cleanly. See
+/opt/xla-example/README.md and gen_hlo.py.
+
+Usage:
+    cd python && python -m compile.aot --out-dir ../artifacts
+"""
+
+import argparse
+import hashlib
+import json
+import os
+
+import jax
+from jax._src.lib import xla_client as xc
+
+from . import model
+
+
+def to_hlo_text(lowered):
+    """StableHLO → XlaComputation → HLO text (id-safe interchange)."""
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def lower_variant(c):
+    """Lower the model at config-batch size `c` and return HLO text."""
+    lowered = jax.jit(model.dse_metrics).lower(*model.example_args(c))
+    return to_hlo_text(lowered)
+
+
+def main():
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--out-dir", default="../artifacts")
+    args = ap.parse_args()
+    os.makedirs(args.out_dir, exist_ok=True)
+
+    manifest = {
+        "version": model.ARTIFACT_VERSION,
+        "t": model.T_PAD,
+        "k": model.K_PAD,
+        "j": model.J_PAD,
+        "num_metrics": 12,
+        "variants": {},
+    }
+    for c in model.C_VARIANTS:
+        text = lower_variant(c)
+        name = f"dse_metrics_c{c}.hlo.txt"
+        path = os.path.join(args.out_dir, name)
+        with open(path, "w") as f:
+            f.write(text)
+        digest = hashlib.sha256(text.encode()).hexdigest()[:16]
+        manifest["variants"][str(c)] = {"file": name, "sha256_16": digest}
+        print(f"wrote {path} ({len(text)} chars, sha256/16 {digest})")
+
+    with open(os.path.join(args.out_dir, "manifest.json"), "w") as f:
+        json.dump(manifest, f, indent=2, sort_keys=True)
+        f.write("\n")
+    print(f"wrote {os.path.join(args.out_dir, 'manifest.json')}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,96 @@
+"""Pure-jnp oracle for the batched tCDP metric evaluation (paper §3.3).
+
+This is the ground-truth implementation of the matrix formalization the
+Pallas kernel (``tcdp_kernel.py``) must match bit-for-bit (up to f32
+accumulation order):
+
+* task energy   ``E_T = N × (P_leak/f_clk + P_dyn/f_clk)``   (§3.3.1)
+* task delay    ``D_T = N × D_k``                             (§3.3.2)
+* operational   ``C_op = CI_use · ||E||₁``                    (§3.3.3)
+* embodied      ``C_emb = (C_comp · online) · ||D||₁ / LT_op``(§3.3.3)
+* tCDP          ``(C_op + β·C_emb) · ||D||₁``                 (§3.1/3.2)
+
+plus the classic metric suite (EDP/CDP/CEP/CE²P/C²EP) and the §3.2
+feasibility mask (per-task QoS bounds and an average-power cap).
+
+Everything is batched over the leading config dimension ``C`` — one row
+per candidate hardware configuration.
+"""
+
+import jax.numpy as jnp
+
+#: Number of metric rows in the output.
+NUM_METRICS = 12
+
+#: Output row order of the metrics matrix.
+METRIC_ROWS = (
+    "energy",    # 0  ||E||1 per config, J
+    "delay",     # 1  ||D||1 per config, s
+    "c_op",      # 2  operational carbon, g
+    "c_emb",     # 3  amortized embodied carbon, g
+    "c_total",   # 4  c_op + c_emb, g
+    "tcdp",      # 5  (c_op + beta*c_emb) * delay, g*s
+    "edp",       # 6  energy * delay
+    "cdp",       # 7  c_emb * delay
+    "cep",       # 8  c_emb * energy
+    "ce2p",      # 9  c_emb * energy^2
+    "c2ep",      # 10 c_emb^2 * energy
+    "feasible",  # 11 1.0 if QoS and power constraints hold
+)
+
+
+def dse_metrics_ref(n, p_leak, p_dyn, f_clk, d_k, c_comp, online, qos, scalars):
+    """Reference evaluation.
+
+    Args:
+      n:       f32[T, K]  kernel calls per task.
+      p_leak:  f32[C, K]  leakage power term per config/kernel (paper's
+               P_leak; scaled so that P/f_clk is energy per call, J).
+      p_dyn:   f32[C, K]  dynamic power term per config/kernel.
+      f_clk:   f32[C, 1]  clock per config, Hz (pad rows with 1.0).
+      d_k:     f32[C, K]  per-kernel delay per config, s.
+      c_comp:  f32[C, J]  per-component embodied carbon, g.
+      online:  f32[J]     provisioning mask (§3.3.3 binary vector).
+      qos:     f32[T]     per-task delay bounds, s (+inf = unconstrained).
+      scalars: f32[4]     [CI_use (g/J), operational lifetime (s), beta,
+                           p_max (W)].
+
+    Returns:
+      (metrics f32[12, C], d_task f32[C, T])
+    """
+    ci_use, lifetime, beta, p_max = scalars[0], scalars[1], scalars[2], scalars[3]
+
+    # §3.3.1 task energy: per-call energy e = (P_leak + P_dyn) / f_clk.
+    e_k = (p_leak + p_dyn) / f_clk                      # [C, K]
+    e_task = e_k @ n.T                                  # [C, T]
+    # §3.3.2 task delay.
+    d_task = d_k @ n.T                                  # [C, T]
+
+    energy = jnp.sum(e_task, axis=1)                    # [C]
+    delay = jnp.sum(d_task, axis=1)                     # [C]
+
+    # §3.3.3 operational and amortized embodied carbon.
+    c_op = ci_use * energy
+    c_emb_overall = c_comp @ online                     # [C]
+    c_emb = c_emb_overall * delay / lifetime
+
+    c_total = c_op + c_emb
+    tcdp = (c_op + beta * c_emb) * delay
+
+    edp = energy * delay
+    cdp = c_emb * delay
+    cep = c_emb * energy
+    ce2p = cep * energy
+    c2ep = c_emb * cep
+
+    # §3.2 constraints: per-task QoS delay bounds and average power cap.
+    qos_ok = jnp.all(d_task <= qos[None, :], axis=1)
+    avg_power = energy / jnp.maximum(delay, 1e-30)
+    power_ok = avg_power <= p_max
+    feasible = jnp.where(qos_ok & power_ok, 1.0, 0.0).astype(jnp.float32)
+
+    metrics = jnp.stack(
+        [energy, delay, c_op, c_emb, c_total, tcdp, edp, cdp, cep, ce2p, c2ep, feasible],
+        axis=0,
+    )
+    return metrics, d_task

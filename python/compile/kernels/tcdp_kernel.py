@@ -1,0 +1,140 @@
+"""Layer-1 Pallas kernel: blocked batched tCDP metric evaluation.
+
+The DSE hot loop evaluates the §3.3 matrix formalization for a *batch* of
+candidate hardware configurations. This kernel tiles the config dimension
+``C`` into VMEM-resident blocks of ``block_c`` rows; each grid step
+
+1. loads one ``[Cb, K]`` slab of per-config kernel power/delay data,
+2. runs the two MXU-shaped contractions ``[Cb, K] @ [K, T]`` (task energy
+   and task delay),
+3. fuses the whole carbon + metric suite elementwise in VMEM, and
+4. writes one ``[12, Cb]`` metrics slab and one ``[Cb, T]`` task-delay
+   slab — a single HBM round trip per slab.
+
+Scalars (CI_use, lifetime, β, p_max) ride in a broadcast ``(1, 4)`` block.
+
+TPU notes (DESIGN.md §Hardware-Adaptation): ``K`` and ``T`` are padded to
+lane-friendly sizes at AOT time (32 and 8); the contraction uses
+``preferred_element_type=f32``. Lowered with ``interpret=True`` because
+the CPU PJRT client cannot execute Mosaic custom-calls; the block
+structure is what we optimize, not interpret-mode wallclock.
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from . import ref
+
+
+def _kernel(n_ref, p_leak_ref, p_dyn_ref, f_clk_ref, d_k_ref, c_comp_ref,
+            online_ref, qos_ref, scalars_ref, metrics_ref, d_task_ref):
+    """One config-tile step (see module docstring)."""
+    n = n_ref[...]                 # [T, K]
+    p_leak = p_leak_ref[...]       # [Cb, K]
+    p_dyn = p_dyn_ref[...]         # [Cb, K]
+    f_clk = f_clk_ref[...]         # [Cb, 1]
+    d_k = d_k_ref[...]             # [Cb, K]
+    c_comp = c_comp_ref[...]       # [Cb, J]
+    online = online_ref[...]       # [1, J]
+    qos = qos_ref[...]             # [1, T]
+    scalars = scalars_ref[...]     # [1, 4]
+
+    ci_use = scalars[0, 0]
+    lifetime = scalars[0, 1]
+    beta = scalars[0, 2]
+    p_max = scalars[0, 3]
+
+    # §3.3.1 / §3.3.2 — the two contractions, MXU-shaped.
+    e_k = (p_leak + p_dyn) / f_clk
+    e_task = jax.lax.dot_general(
+        e_k, n, (((1,), (1,)), ((), ())), preferred_element_type=jnp.float32
+    )                                                   # [Cb, T]
+    d_task = jax.lax.dot_general(
+        d_k, n, (((1,), (1,)), ((), ())), preferred_element_type=jnp.float32
+    )                                                   # [Cb, T]
+
+    energy = jnp.sum(e_task, axis=1)                    # [Cb]
+    delay = jnp.sum(d_task, axis=1)                     # [Cb]
+
+    # §3.3.3 — carbon terms (provisioning contraction [Cb,J]@[J]).
+    c_op = ci_use * energy
+    c_emb_overall = jnp.sum(c_comp * online, axis=1)    # [Cb]
+    c_emb = c_emb_overall * delay / lifetime
+
+    c_total = c_op + c_emb
+    tcdp = (c_op + beta * c_emb) * delay
+
+    edp = energy * delay
+    cdp = c_emb * delay
+    cep = c_emb * energy
+    ce2p = cep * energy
+    c2ep = c_emb * cep
+
+    qos_ok = jnp.all(d_task <= qos, axis=1)
+    avg_power = energy / jnp.maximum(delay, 1e-30)
+    feasible = jnp.where(qos_ok & (avg_power <= p_max), 1.0, 0.0)
+
+    metrics_ref[...] = jnp.stack(
+        [energy, delay, c_op, c_emb, c_total, tcdp, edp, cdp, cep, ce2p, c2ep, feasible],
+        axis=0,
+    ).astype(jnp.float32)
+    d_task_ref[...] = d_task.astype(jnp.float32)
+
+
+@functools.partial(jax.jit, static_argnames=("block_c",))
+def dse_metrics_pallas(n, p_leak, p_dyn, f_clk, d_k, c_comp, online, qos,
+                       scalars, *, block_c=128):
+    """Blocked Pallas evaluation; same contract as `ref.dse_metrics_ref`.
+
+    ``C`` must be a multiple of ``block_c``.
+    """
+    t, k = n.shape
+    c = p_leak.shape[0]
+    j = c_comp.shape[1]
+    if c % block_c != 0:
+        raise ValueError(f"C={c} not a multiple of block_c={block_c}")
+    grid = (c // block_c,)
+
+    online2 = online.reshape(1, j)
+    qos2 = qos.reshape(1, t)
+    scalars2 = scalars.reshape(1, 4)
+
+    return pl.pallas_call(
+        _kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((t, k), lambda i: (0, 0)),          # n (broadcast)
+            pl.BlockSpec((block_c, k), lambda i: (i, 0)),    # p_leak
+            pl.BlockSpec((block_c, k), lambda i: (i, 0)),    # p_dyn
+            pl.BlockSpec((block_c, 1), lambda i: (i, 0)),    # f_clk
+            pl.BlockSpec((block_c, k), lambda i: (i, 0)),    # d_k
+            pl.BlockSpec((block_c, j), lambda i: (i, 0)),    # c_comp
+            pl.BlockSpec((1, j), lambda i: (0, 0)),          # online
+            pl.BlockSpec((1, t), lambda i: (0, 0)),          # qos
+            pl.BlockSpec((1, 4), lambda i: (0, 0)),          # scalars
+        ],
+        out_specs=[
+            pl.BlockSpec((ref.NUM_METRICS, block_c), lambda i: (0, i)),
+            pl.BlockSpec((block_c, t), lambda i: (i, 0)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((ref.NUM_METRICS, c), jnp.float32),
+            jax.ShapeDtypeStruct((c, t), jnp.float32),
+        ],
+        interpret=True,
+    )(n, p_leak, p_dyn, f_clk, d_k, c_comp, online2, qos2, scalars2)
+
+
+def vmem_bytes_estimate(block_c, k, t, j):
+    """Static VMEM footprint estimate for one grid step, bytes (f32).
+
+    Used by the perf notes in DESIGN.md/EXPERIMENTS.md: the tile must sit
+    comfortably under ~16 MiB of VMEM on a real TPU core.
+    """
+    ins = t * k + 3 * block_c * k + block_c + block_c * j + j + t + 4
+    outs = ref.NUM_METRICS * block_c + block_c * t
+    scratch = 2 * block_c * t + 8 * block_c  # e_task/d_task + metric temps
+    return 4 * (ins + outs + scratch)

@@ -1,0 +1,62 @@
+"""Layer-2 JAX model: the batched DSE metric-evaluation graph.
+
+Wraps the Layer-1 Pallas kernel (`kernels.tcdp_kernel`) into the function
+that gets AOT-lowered for the Rust coordinator. The runtime contract
+(shapes, input order, output order) is documented in DESIGN.md §2 and
+mirrored by `rust/src/runtime/host.rs`; any change here must bump
+`ARTIFACT_VERSION` so stale artifacts are rejected.
+"""
+
+import jax
+import jax.numpy as jnp
+
+from .kernels import ref
+from .kernels.tcdp_kernel import dse_metrics_pallas
+
+#: Bumped whenever the artifact interface changes.
+ARTIFACT_VERSION = 1
+
+#: Padded task dimension.
+T_PAD = 8
+#: Padded kernel dimension.
+K_PAD = 32
+#: Padded provisioning-component dimension.
+J_PAD = 16
+
+#: Config-batch variants AOT-compiled into artifacts/.
+C_VARIANTS = (128, 1024)
+
+
+def dse_metrics(n, p_leak, p_dyn, f_clk, d_k, c_comp, online, qos, scalars):
+    """The exported model function (tuple of metrics[12,C], d_task[C,T]).
+
+    All heavy lifting happens in the Pallas kernel; the model layer exists
+    so future extensions (e.g. gradient-based design-knob search via
+    jax.grad over a relaxed objective) compose at the JAX level.
+    """
+    metrics, d_task = dse_metrics_pallas(
+        n, p_leak, p_dyn, f_clk, d_k, c_comp, online, qos, scalars,
+        block_c=128,
+    )
+    return metrics, d_task
+
+
+def dse_metrics_reference(n, p_leak, p_dyn, f_clk, d_k, c_comp, online, qos, scalars):
+    """Pure-jnp path (no Pallas) — used for differential testing."""
+    return ref.dse_metrics_ref(n, p_leak, p_dyn, f_clk, d_k, c_comp, online, qos, scalars)
+
+
+def example_args(c):
+    """ShapeDtypeStructs for AOT lowering at config-batch size `c`."""
+    f32 = jnp.float32
+    return (
+        jax.ShapeDtypeStruct((T_PAD, K_PAD), f32),   # n
+        jax.ShapeDtypeStruct((c, K_PAD), f32),       # p_leak
+        jax.ShapeDtypeStruct((c, K_PAD), f32),       # p_dyn
+        jax.ShapeDtypeStruct((c, 1), f32),           # f_clk
+        jax.ShapeDtypeStruct((c, K_PAD), f32),       # d_k
+        jax.ShapeDtypeStruct((c, J_PAD), f32),       # c_comp
+        jax.ShapeDtypeStruct((J_PAD,), f32),         # online
+        jax.ShapeDtypeStruct((T_PAD,), f32),         # qos
+        jax.ShapeDtypeStruct((4,), f32),             # scalars
+    )

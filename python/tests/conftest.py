@@ -1,0 +1,31 @@
+"""Shared fixtures: realistic random inputs for the DSE evaluation."""
+
+import numpy as np
+import pytest
+
+
+def make_inputs(rng, c=128, t=8, k=32, j=16, ci_use=1.2e-4, lifetime=4.0e6,
+                beta=1.0, p_max=np.inf):
+    """Random-but-realistic §3.3 inputs (f32)."""
+    f32 = np.float32
+    n = rng.integers(0, 50, size=(t, k)).astype(f32)
+    d_k = rng.uniform(1e-4, 5e-2, size=(c, k)).astype(f32)
+    f_clk = rng.uniform(0.5e9, 1.5e9, size=(c, 1)).astype(f32)
+    # Power terms scaled so (p_leak+p_dyn)/f_clk lands in the mJ..J range.
+    p_leak = (rng.uniform(0.001, 0.05, size=(c, k)) * f_clk).astype(f32)
+    p_dyn = (rng.uniform(0.01, 0.5, size=(c, k)) * f_clk).astype(f32)
+    c_comp = rng.uniform(10.0, 800.0, size=(c, j)).astype(f32)
+    online = (rng.uniform(size=j) < 0.8).astype(f32)
+    qos = np.full(t, np.inf, dtype=f32)
+    scalars = np.array([ci_use, lifetime, beta, p_max], dtype=f32)
+    return n, p_leak, p_dyn, f_clk, d_k, c_comp, online, qos, scalars
+
+
+@pytest.fixture
+def rng():
+    return np.random.default_rng(1234)
+
+
+@pytest.fixture
+def inputs(rng):
+    return make_inputs(rng)

@@ -1,0 +1,63 @@
+"""AOT path: lowering produces loadable HLO text with the locked contract."""
+
+import json
+import os
+
+import numpy as np
+import pytest
+
+from compile import aot, model
+
+
+def test_lowered_hlo_is_text_with_entry():
+    text = aot.lower_variant(128)
+    assert "ENTRY" in text
+    assert "f32[12,128]" in text, "metrics output shape missing from HLO"
+    assert "f32[128,8]" in text, "d_task output shape missing from HLO"
+
+
+def test_variant_shapes_differ():
+    t128 = aot.lower_variant(128)
+    t1024 = aot.lower_variant(1024)
+    assert "f32[12,1024]" in t1024
+    assert t128 != t1024
+
+
+def test_example_args_match_contract():
+    args = model.example_args(128)
+    assert args[0].shape == (model.T_PAD, model.K_PAD)
+    assert args[1].shape == (128, model.K_PAD)
+    assert args[5].shape == (128, model.J_PAD)
+    assert args[8].shape == (4,)
+    assert all(a.dtype == np.float32 for a in args)
+
+
+def test_artifacts_on_disk_match_manifest():
+    # `make artifacts` must have produced a coherent manifest; skip if the
+    # build step has not run in this checkout.
+    art = os.path.join(os.path.dirname(__file__), "..", "..", "artifacts")
+    manifest_path = os.path.join(art, "manifest.json")
+    if not os.path.exists(manifest_path):
+        pytest.skip("artifacts not built")
+    with open(manifest_path) as f:
+        manifest = json.load(f)
+    assert manifest["version"] == model.ARTIFACT_VERSION
+    assert manifest["k"] == model.K_PAD
+    assert manifest["num_metrics"] == 12
+    for c, entry in manifest["variants"].items():
+        path = os.path.join(art, entry["file"])
+        assert os.path.exists(path), f"missing artifact {path}"
+        text = open(path).read()
+        assert f"f32[12,{c}]" in text
+
+
+def test_model_executes_like_kernel():
+    # The exported model function is a thin wrapper — verify it returns the
+    # kernel's numbers.
+    rng = np.random.default_rng(7)
+    from .conftest import make_inputs
+    inputs = make_inputs(rng)
+    m_model, d_model = model.dse_metrics(*inputs)
+    m_ref, d_ref = model.dse_metrics_reference(*inputs)
+    np.testing.assert_allclose(np.asarray(m_model), np.asarray(m_ref), rtol=1e-5, atol=1e-7)
+    np.testing.assert_allclose(np.asarray(d_model), np.asarray(d_ref), rtol=1e-5, atol=1e-7)

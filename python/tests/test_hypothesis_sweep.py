@@ -1,0 +1,83 @@
+"""Hypothesis sweeps: the Pallas kernel matches the oracle across the
+shape/value envelope, not just the fixture shapes."""
+
+import numpy as np
+from hypothesis import given, settings, strategies as st
+from numpy.testing import assert_allclose
+
+from compile.kernels.ref import dse_metrics_ref
+from compile.kernels.tcdp_kernel import dse_metrics_pallas
+
+F32 = np.float32
+
+
+def build(seed, c, t, k, j, beta, lifetime_exp, block_c):
+    rng = np.random.default_rng(seed)
+    n = rng.integers(0, 20, size=(t, k)).astype(F32)
+    d_k = rng.uniform(1e-5, 1e-1, size=(c, k)).astype(F32)
+    f_clk = rng.uniform(1e8, 2e9, size=(c, 1)).astype(F32)
+    p_leak = (rng.uniform(1e-4, 0.1, size=(c, k)) * f_clk).astype(F32)
+    p_dyn = (rng.uniform(1e-3, 1.0, size=(c, k)) * f_clk).astype(F32)
+    c_comp = rng.uniform(0.0, 1000.0, size=(c, j)).astype(F32)
+    online = (rng.uniform(size=j) < 0.7).astype(F32)
+    qos = np.where(rng.uniform(size=t) < 0.3,
+                   rng.uniform(0.01, 10.0, size=t),
+                   np.inf).astype(F32)
+    scalars = np.array([1e-4, 10.0 ** lifetime_exp, beta, 50.0], dtype=F32)
+    return (n, p_leak, p_dyn, f_clk, d_k, c_comp, online, qos, scalars), block_c
+
+
+@settings(max_examples=40, deadline=None)
+@given(
+    seed=st.integers(0, 2**31 - 1),
+    shapes=st.sampled_from([
+        # (c, t, k, j, block_c)
+        (32, 8, 32, 16, 32),
+        (64, 4, 16, 8, 32),
+        (128, 8, 32, 16, 128),
+        (128, 2, 8, 4, 64),
+        (256, 8, 32, 16, 128),
+        (64, 1, 1, 1, 16),
+    ]),
+    beta=st.sampled_from([0.0, 0.25, 1.0, 3.0]),
+    lifetime_exp=st.integers(3, 8),
+)
+def test_kernel_matches_oracle_everywhere(seed, shapes, beta, lifetime_exp):
+    c, t, k, j, block_c = shapes
+    inputs, block_c = build(seed, c, t, k, j, beta, lifetime_exp, block_c)
+    m_ref, d_ref = dse_metrics_ref(*inputs)
+    m_pal, d_pal = dse_metrics_pallas(*inputs, block_c=block_c)
+    assert_allclose(np.asarray(m_pal), np.asarray(m_ref), rtol=2e-5, atol=1e-6)
+    assert_allclose(np.asarray(d_pal), np.asarray(d_ref), rtol=2e-5, atol=1e-6)
+
+
+@settings(max_examples=25, deadline=None)
+@given(seed=st.integers(0, 2**31 - 1), beta=st.floats(0.0, 10.0))
+def test_metric_invariants_hold(seed, beta):
+    inputs, block_c = build(seed, 64, 4, 8, 8, beta, 6, 32)
+    m, d_task = dse_metrics_pallas(*inputs, block_c=block_c)
+    m = np.asarray(m)
+    energy, delay, c_op, c_emb, c_total, tcdp = m[0], m[1], m[2], m[3], m[4], m[5]
+    # Physical sanity across random draws.
+    assert np.all(energy >= 0) and np.all(delay >= 0)
+    assert np.all(c_op >= 0) and np.all(c_emb >= 0)
+    assert_allclose(c_total, c_op + c_emb, rtol=1e-5)
+    # tCDP bounded below by both pure objectives (scaled by beta).
+    assert np.all(tcdp >= c_op * delay - 1e-6)
+    # d_task rows sum to the delay row.
+    assert_allclose(np.asarray(d_task).sum(axis=1), delay, rtol=1e-5)
+
+
+@settings(max_examples=15, deadline=None)
+@given(seed=st.integers(0, 2**31 - 1))
+def test_permutation_equivariance(seed):
+    # Shuffling config rows shuffles outputs identically: no cross-config
+    # leakage through the block structure.
+    inputs, block_c = build(seed, 64, 4, 8, 8, 1.0, 6, 16)
+    perm = np.random.default_rng(seed).permutation(64)
+    m1, _ = dse_metrics_pallas(*inputs, block_c=block_c)
+    shuffled = list(inputs)
+    for idx in (1, 2, 3, 4, 5):
+        shuffled[idx] = inputs[idx][perm]
+    m2, _ = dse_metrics_pallas(*shuffled, block_c=block_c)
+    assert_allclose(np.asarray(m2), np.asarray(m1)[:, perm], rtol=1e-6, atol=1e-8)

@@ -1,0 +1,154 @@
+"""L1 correctness: the Pallas kernel must match the pure-jnp oracle.
+
+This is the CORE correctness signal of the build path — the same HLO the
+kernel lowers to here is what the Rust runtime executes.
+"""
+
+import numpy as np
+import pytest
+from numpy.testing import assert_allclose
+
+from compile.kernels.ref import dse_metrics_ref, METRIC_ROWS, NUM_METRICS
+from compile.kernels.tcdp_kernel import dse_metrics_pallas, vmem_bytes_estimate
+
+from .conftest import make_inputs
+
+
+def run_both(inputs, block_c=128):
+    m_ref, d_ref = dse_metrics_ref(*inputs)
+    m_pal, d_pal = dse_metrics_pallas(*inputs, block_c=block_c)
+    return (np.asarray(m_ref), np.asarray(d_ref)), (np.asarray(m_pal), np.asarray(d_pal))
+
+
+class TestKernelMatchesOracle:
+    def test_default_shapes(self, inputs):
+        (m_ref, d_ref), (m_pal, d_pal) = run_both(inputs)
+        assert_allclose(m_pal, m_ref, rtol=1e-5, atol=1e-7)
+        assert_allclose(d_pal, d_ref, rtol=1e-5, atol=1e-7)
+
+    @pytest.mark.parametrize("block_c", [16, 32, 64, 128])
+    def test_block_size_invariance(self, rng, block_c):
+        inputs = make_inputs(rng, c=128)
+        (m_ref, _), (m_pal, _) = run_both(inputs, block_c=block_c)
+        assert_allclose(m_pal, m_ref, rtol=1e-5, atol=1e-7)
+
+    @pytest.mark.parametrize("c", [128, 256, 1024])
+    def test_large_batches(self, rng, c):
+        inputs = make_inputs(rng, c=c)
+        (m_ref, _), (m_pal, _) = run_both(inputs)
+        assert_allclose(m_pal, m_ref, rtol=1e-5, atol=1e-7)
+
+    def test_non_divisible_batch_rejected(self, rng):
+        inputs = make_inputs(rng, c=100)
+        with pytest.raises(ValueError, match="multiple"):
+            dse_metrics_pallas(*inputs, block_c=128)
+
+    def test_zero_padded_rows_are_inert(self, rng):
+        # Rows with d_k = 0 and zero power terms must produce zero metrics
+        # (f_clk padded to 1.0, not 0, per the runtime contract).
+        inputs = list(make_inputs(rng, c=128))
+        for idx in (1, 2, 4):  # p_leak, p_dyn, d_k
+            inputs[idx][64:] = 0.0
+        inputs[3][64:] = 1.0  # f_clk pad
+        m_pal, _ = dse_metrics_pallas(*inputs)
+        m_pal = np.asarray(m_pal)
+        for row, name in enumerate(METRIC_ROWS):
+            if name == "feasible":
+                continue
+            assert np.all(m_pal[row, 64:] == 0.0), f"{name} not inert in padding"
+
+
+class TestMetricSemantics:
+    def test_tcdp_equals_ctotal_times_delay_at_beta_one(self, inputs):
+        m, _ = dse_metrics_pallas(*inputs)
+        m = np.asarray(m)
+        energy, delay = m[0], m[1]
+        c_total, tcdp = m[4], m[5]
+        assert_allclose(tcdp, c_total * delay, rtol=1e-5)
+        assert_allclose(m[6], energy * delay, rtol=1e-5)  # EDP
+
+    def test_metric_identities(self, inputs):
+        m, _ = dse_metrics_pallas(*inputs)
+        m = np.asarray(m)
+        energy, c_emb = m[0], m[3]
+        assert_allclose(m[7], c_emb * m[1], rtol=1e-5)        # CDP
+        assert_allclose(m[8], c_emb * energy, rtol=1e-5)      # CEP
+        assert_allclose(m[9], m[8] * energy, rtol=1e-4)       # CE2P
+        assert_allclose(m[10], c_emb * m[8], rtol=1e-4)       # C2EP
+
+    def test_beta_zero_drops_embodied_from_tcdp(self, rng):
+        inputs = list(make_inputs(rng))
+        inputs[8] = inputs[8].copy()
+        inputs[8][2] = 0.0  # beta = 0
+        m, _ = dse_metrics_pallas(*inputs)
+        m = np.asarray(m)
+        assert_allclose(m[5], m[2] * m[1], rtol=1e-5)  # tCDP -> C_op * D
+
+    def test_beta_monotonicity(self, rng):
+        base = list(make_inputs(rng))
+        tcdps = []
+        for beta in (0.0, 0.5, 1.0, 4.0):
+            s = base[8].copy()
+            s[2] = beta
+            m, _ = dse_metrics_pallas(*base[:8], s)
+            tcdps.append(np.asarray(m)[5])
+        for lo, hi in zip(tcdps, tcdps[1:]):
+            assert np.all(lo <= hi + 1e-6)
+
+    def test_qos_constraint_flips_feasibility(self, rng):
+        inputs = list(make_inputs(rng))
+        m_unconstrained, d_task = dse_metrics_pallas(*inputs)
+        d_task = np.asarray(d_task)
+        # Bound task 0 at the median per-task delay: roughly half the
+        # configs must become infeasible.
+        qos = inputs[7].copy()
+        qos[0] = np.median(d_task[:, 0])
+        inputs[7] = qos
+        m_bound, _ = dse_metrics_pallas(*inputs)
+        feas0 = np.asarray(m_unconstrained)[11]
+        feas1 = np.asarray(m_bound)[11]
+        assert feas0.sum() == len(feas0)
+        assert 0 < feas1.sum() < len(feas1)
+        expected = (d_task[:, 0] <= qos[0]).astype(np.float32)
+        assert_allclose(feas1, expected)
+
+    def test_power_constraint(self, rng):
+        inputs = list(make_inputs(rng))
+        m, _ = dse_metrics_pallas(*inputs)
+        m = np.asarray(m)
+        avg_power = m[0] / m[1]
+        cap = float(np.median(avg_power))
+        s = inputs[8].copy()
+        s[3] = cap
+        m2, _ = dse_metrics_pallas(*inputs[:8], s)
+        feas = np.asarray(m2)[11]
+        assert_allclose(feas, (avg_power <= cap).astype(np.float32))
+
+    def test_provisioning_mask_scales_embodied(self, rng):
+        inputs = list(make_inputs(rng))
+        inputs[6] = np.ones_like(inputs[6])
+        m_full, _ = dse_metrics_pallas(*inputs)
+        half = inputs[6].copy()
+        half[: len(half) // 2] = 0.0
+        inputs[6] = half
+        m_half, _ = dse_metrics_pallas(*inputs)
+        c_emb_full = np.asarray(m_full)[3]
+        c_emb_half = np.asarray(m_half)[3]
+        assert np.all(c_emb_half <= c_emb_full + 1e-9)
+        assert c_emb_half.sum() < c_emb_full.sum()
+
+
+class TestVmemEstimate:
+    def test_tile_fits_vmem(self):
+        # The c128 tile must sit far below a 16 MiB VMEM budget.
+        assert vmem_bytes_estimate(128, 32, 8, 16) < 2 * 1024 * 1024
+
+    def test_estimate_scales_with_block(self):
+        small = vmem_bytes_estimate(16, 32, 8, 16)
+        big = vmem_bytes_estimate(128, 32, 8, 16)
+        assert big > small * 4
+
+    def test_row_count_is_locked(self):
+        # Runtime contract: 12 metric rows.
+        assert NUM_METRICS == 12
+        assert len(METRIC_ROWS) == 12

@@ -1,0 +1,14 @@
+//! Bench: Fig 10 lifetime sweep (11 whole-life evaluations of A-1..A-4).
+use xrcarbon::bench::Bencher;
+use xrcarbon::experiments::common::Ctx;
+use xrcarbon::experiments::fig10_lifetime_crossover as fig10;
+
+fn main() {
+    let mut ctx = Ctx::auto();
+    println!("[engine: {}]", ctx.backend);
+    let axis = fig10::default_axis();
+    let r = Bencher::new("fig10/sweep_11pts").throughput(axis.len() as u64).run(|| {
+        fig10::run(ctx.engine.as_mut(), &axis).unwrap()
+    });
+    println!("{}", r.report());
+}

@@ -1,0 +1,17 @@
+//! Bench: Fig 11/13 core-provisioning optimization over the top-10 apps.
+use xrcarbon::bench::Bencher;
+use xrcarbon::experiments::common::Ctx;
+use xrcarbon::experiments::{fig11_provisioning_savings, fig13_core_configs};
+
+fn main() {
+    let mut ctx = Ctx::auto();
+    println!("[engine: {}]", ctx.backend);
+    let r = Bencher::new("fig11/top10_provisioning").throughput(10).run(|| {
+        fig11_provisioning_savings::run(ctx.engine.as_mut()).unwrap()
+    });
+    println!("{}", r.report());
+    let r = Bencher::new("fig13/core_configs").run(|| {
+        fig13_core_configs::run(ctx.engine.as_mut()).unwrap()
+    });
+    println!("{}", r.report());
+}

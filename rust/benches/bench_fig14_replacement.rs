@@ -1,0 +1,8 @@
+//! Bench: Fig 14 replacement-period sweep (pure host-side model).
+use xrcarbon::bench::Bencher;
+use xrcarbon::experiments::fig14_replacement;
+
+fn main() {
+    let r = Bencher::new("fig14/three_panels").run(fig14_replacement::run);
+    println!("{}", r.report());
+}

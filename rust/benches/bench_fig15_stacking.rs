@@ -1,0 +1,18 @@
+//! Bench: Fig 15/16 3D-stacking studies.
+use xrcarbon::accel::Workload;
+use xrcarbon::bench::Bencher;
+use xrcarbon::experiments::common::Ctx;
+use xrcarbon::experiments::{fig15_stacking, fig16_stacking_kernels};
+
+fn main() {
+    let mut ctx = Ctx::auto();
+    println!("[engine: {}]", ctx.backend);
+    let r = Bencher::new("fig15/sr512").run(|| {
+        fig15_stacking::run(ctx.engine.as_mut(), Workload::Sr512).unwrap()
+    });
+    println!("{}", r.report());
+    let r = Bencher::new("fig16/five_kernels").quick().run(|| {
+        fig16_stacking_kernels::run(ctx.engine.as_mut()).unwrap()
+    });
+    println!("{}", r.report());
+}

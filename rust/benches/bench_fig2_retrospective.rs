@@ -1,0 +1,16 @@
+//! Bench: Fig 1/2 retrospective analyses (host-side carbon model).
+use xrcarbon::bench::Bencher;
+use xrcarbon::experiments::common::Ctx;
+use xrcarbon::experiments::{fig01_metric_comparison, fig02_retrospective};
+
+fn main() {
+    let r = Bencher::new("fig2/cpu_panel").run(fig02_retrospective::run_cpus);
+    println!("{}", r.report());
+    let r = Bencher::new("fig2/soc_panel").run(fig02_retrospective::run_socs);
+    println!("{}", r.report());
+    let mut ctx = Ctx::auto();
+    let r = Bencher::new("fig1/metric_suite_a1_a4").run(|| {
+        fig01_metric_comparison::run(&mut ctx).unwrap()
+    });
+    println!("{}", r.report());
+}

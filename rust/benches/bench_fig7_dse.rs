@@ -1,0 +1,35 @@
+//! Bench: the Fig 7 headline DSE (121 configs × 5 clusters × 3 scenarios)
+//! end-to-end, plus a single-cluster exploration, on the auto engine.
+use xrcarbon::bench::Bencher;
+use xrcarbon::carbon::FabGrid;
+use xrcarbon::dse::{design_grid, explore, lifetime_for_ratio, profile_configs, profiles_to_rows};
+use xrcarbon::experiments::common::{default_use_grid, rows_request, suite_task, Ctx};
+use xrcarbon::experiments::fig07_dse_clusters;
+use xrcarbon::workloads::{cluster_workloads, Cluster};
+
+fn main() {
+    let mut ctx = Ctx::auto();
+    println!("[engine: {}]", ctx.backend);
+
+    // Single-cluster exploration (profile + evaluate 121 configs).
+    let grid = design_grid();
+    let configs: Vec<_> = grid.iter().map(|p| p.config.clone()).collect();
+    let ws = cluster_workloads(Cluster::Ai5);
+    let profiles = profile_configs(&configs, &ws);
+    let rows = profiles_to_rows(&configs, &profiles, FabGrid::Coal);
+    let ci = default_use_grid().g_per_joule();
+    let lt = lifetime_for_ratio(&rows, &suite_task(&ws), 0.65, ci);
+    let r = Bencher::new("fig7/explore_5ai_121configs")
+        .throughput(121)
+        .run(|| {
+            let req = rows_request(rows.clone(), &ws, lt, 1.0);
+            explore(ctx.engine.as_mut(), &req).unwrap()
+        });
+    println!("{}", r.report());
+
+    // Full figure (dominated by 6x grid profiling).
+    let r = Bencher::new("fig7/full_3x5x121").quick().run(|| {
+        fig07_dse_clusters::run(ctx.engine.as_mut()).unwrap()
+    });
+    println!("{}", r.report());
+}

@@ -1,0 +1,13 @@
+//! Bench: Fig 8 (tCDP-vs-EDP design comparison across clusters).
+use xrcarbon::bench::Bencher;
+use xrcarbon::experiments::common::Ctx;
+use xrcarbon::experiments::fig08_tcdp_vs_edp;
+
+fn main() {
+    let mut ctx = Ctx::auto();
+    println!("[engine: {}]", ctx.backend);
+    let r = Bencher::new("fig8/full").quick().run(|| {
+        fig08_tcdp_vs_edp::run(ctx.engine.as_mut()).unwrap()
+    });
+    println!("{}", r.report());
+}

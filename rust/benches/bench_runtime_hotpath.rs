@@ -1,0 +1,68 @@
+//! Bench: the L3 hot path in isolation — pack → engine execute → unpack —
+//! for both engines and both artifact variants, plus the accelerator
+//! simulator and fleet generator substrates.
+use xrcarbon::accel::{network, production_accelerators, simulate, Workload};
+use xrcarbon::bench::Bencher;
+use xrcarbon::matrixform::{ConfigRow, EvalRequest, PackedProblem, TaskMatrix};
+use xrcarbon::runtime::{evaluate, Engine, HostEngine, PjrtEngine};
+use xrcarbon::testkit::Rng;
+use xrcarbon::workloads::{generate_fleet, FleetConfig};
+
+fn request(c: usize) -> EvalRequest {
+    let mut rng = Rng::new(1);
+    let k = 16;
+    let tm = TaskMatrix::single_task(
+        "t",
+        (0..k).map(|i| format!("k{i}")).collect(),
+        &(0..k).map(|_| rng.below(30) as f64).collect::<Vec<_>>(),
+    );
+    EvalRequest {
+        tasks: tm,
+        configs: (0..c)
+            .map(|i| ConfigRow {
+                name: format!("cfg{i}"),
+                f_clk: 1e9,
+                d_k: (0..k).map(|_| rng.range(1e-4, 1e-2)).collect(),
+                e_dyn: (0..k).map(|_| rng.range(1e-3, 1e-1)).collect(),
+                leak_w: 0.01,
+                c_comp: vec![rng.range(50.0, 500.0), rng.range(10.0, 100.0), 20.0],
+            })
+            .collect(),
+        online: vec![1.0, 1.0, 1.0],
+        qos: vec![f64::INFINITY],
+        ci_use_g_per_j: 1.2e-4,
+        lifetime_s: 1e7,
+        beta: 1.0,
+        p_max_w: f64::INFINITY,
+    }
+}
+
+fn main() {
+    for &c in &[121usize, 1024] {
+        let req = request(c);
+        if let Ok(mut pjrt) = PjrtEngine::load("artifacts") {
+            let r = Bencher::new(&format!("runtime/pjrt_eval_c{c}"))
+                .throughput(c as u64)
+                .run(|| evaluate(&mut pjrt, &req).unwrap());
+            println!("{}", r.report());
+        }
+        let mut host = HostEngine::new();
+        let r = Bencher::new(&format!("runtime/host_eval_c{c}"))
+            .throughput(c as u64)
+            .run(|| evaluate(&mut host, &req).unwrap());
+        println!("{}", r.report());
+        let r = Bencher::new(&format!("runtime/pack_only_c{c}"))
+            .throughput(c as u64)
+            .run(|| PackedProblem::from_request(&req));
+        println!("{}", r.report());
+    }
+    // Substrates.
+    let a2 = &production_accelerators()[1];
+    let rn50 = network(Workload::Rn50);
+    let r = Bencher::new("substrate/simulate_rn50").run(|| simulate(a2, &rn50));
+    println!("{}", r.report());
+    let r = Bencher::new("substrate/fleet_50dev_5days").quick().run(|| {
+        generate_fleet(&FleetConfig { devices: 50, days: 5, ..Default::default() })
+    });
+    println!("{}", r.report());
+}

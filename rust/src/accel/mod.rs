@@ -1,0 +1,31 @@
+//! Analytical accelerator performance/power simulator (paper §4.4, Fig 6).
+//!
+//! The paper evaluates candidate hardware with "an accelerator simulator
+//! based on a scaled-up version of Sumbul et al's work \[CICC'22\]": a
+//! neural network goes in, the simulator extracts the operators and
+//! reports TOPS, latency, utilization and energy for a specified hardware
+//! configuration. That simulator is proprietary, so this module implements
+//! the closest analytical equivalent:
+//!
+//! * [`ops`] — operator model: each layer reduces to MAC count, weight
+//!   bytes and activation bytes;
+//! * [`networks`] — the twelve Table 3 AI/XR workloads as operator lists
+//!   built from first principles (layer shapes);
+//! * [`config`] — hardware configuration (MAC count, on-chip SRAM, clock,
+//!   voltage, memory interface) and its die area / embodied carbon;
+//! * [`simulator`] — the roofline-style performance and energy model
+//!   (MAC-array utilization from layer shape, working-set-driven DRAM
+//!   traffic, double-buffered compute/memory overlap);
+//! * [`stacking`] — 3D F2F-stacked SRAM variants (§5.6, Fig 15a).
+
+pub mod config;
+pub mod networks;
+pub mod ops;
+pub mod simulator;
+pub mod stacking;
+
+pub use config::{AcceleratorConfig, MemoryInterface, production_accelerators};
+pub use networks::{network, Workload};
+pub use ops::{OpGraph, OpKind};
+pub use simulator::{simulate, KernelProfile};
+pub use stacking::{stacked_configs, StackedDesign};

@@ -1,0 +1,525 @@
+//! The Table 3 AI/XR workload suite as operator graphs.
+//!
+//! Layer lists are built from the published architectures (ResNet /
+//! GoogleNet / MobileNet-V2 / SegNet / UNet / HRNet / FAN / ...) at the
+//! paper's use-case resolutions. These are first-principles
+//! reconstructions — aggregate MAC counts land on the published numbers
+//! (e.g. ResNet-50 ≈ 4.1 GMACs at 224²) — not framework exports; the
+//! simulator only needs per-layer MACs/bytes/shapes.
+
+use super::ops::{conv2d, conv3d, deconv2d, dwconv, eltwise, fc, OpGraph};
+
+/// The Table 3 workloads (plus the three SR resolutions of Table 4).
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum Workload {
+    /// ResNet-18 object classification (AI).
+    Rn18,
+    /// ResNet-50 object classification (AI).
+    Rn50,
+    /// ResNet-152 object classification (AI).
+    Rn152,
+    /// GoogleNet object classification (AI).
+    Gn,
+    /// MobileNet-V2 object detection backbone (AI).
+    Mn2,
+    /// SegNet eye tracking (XR).
+    Et,
+    /// 3-D aggregation depth estimation (XR).
+    Agg3d,
+    /// High-resolution net, depth for augmented calls (XR).
+    Hrn,
+    /// EmoFAN emotion detection (XR).
+    EFan,
+    /// Joint-location-predictor hand tracking (XR).
+    Jlp,
+    /// Plain UNet segmentation/denoising trunk (XR).
+    Unet,
+    /// UNet + Feature-Align image denoising (XR).
+    Dn,
+    /// Burst super-resolution at 256×256 (XR).
+    Sr256,
+    /// Burst super-resolution at 512×512 (XR).
+    Sr512,
+    /// Burst super-resolution at 1024×1024 (XR).
+    Sr1024,
+}
+
+impl Workload {
+    /// Every workload, Table 3 order (SR expanded per Table 4).
+    pub const ALL: [Workload; 15] = [
+        Workload::Rn18,
+        Workload::Rn50,
+        Workload::Rn152,
+        Workload::Gn,
+        Workload::Mn2,
+        Workload::Et,
+        Workload::Agg3d,
+        Workload::Hrn,
+        Workload::EFan,
+        Workload::Jlp,
+        Workload::Unet,
+        Workload::Dn,
+        Workload::Sr256,
+        Workload::Sr512,
+        Workload::Sr1024,
+    ];
+
+    /// Table 3 abbreviation.
+    pub fn label(self) -> &'static str {
+        match self {
+            Workload::Rn18 => "RN-18",
+            Workload::Rn50 => "RN-50",
+            Workload::Rn152 => "RN-152",
+            Workload::Gn => "GN",
+            Workload::Mn2 => "MN2",
+            Workload::Et => "ET",
+            Workload::Agg3d => "3D-Agg",
+            Workload::Hrn => "HRN",
+            Workload::EFan => "E-FAN",
+            Workload::Jlp => "JLP",
+            Workload::Unet => "UNet",
+            Workload::Dn => "DN",
+            Workload::Sr256 => "SR-256",
+            Workload::Sr512 => "SR-512",
+            Workload::Sr1024 => "SR-1024",
+        }
+    }
+
+    /// True for the paper's XR category (Table 3).
+    pub fn is_xr(self) -> bool {
+        !matches!(
+            self,
+            Workload::Rn18 | Workload::Rn50 | Workload::Rn152 | Workload::Gn | Workload::Mn2
+        )
+    }
+
+    /// Parse a Table 3 abbreviation (case-insensitive).
+    pub fn parse(s: &str) -> Option<Workload> {
+        let up = s.to_ascii_uppercase();
+        Workload::ALL.into_iter().find(|w| w.label().eq_ignore_ascii_case(&up))
+    }
+}
+
+/// Build the operator graph for a workload.
+pub fn network(w: Workload) -> OpGraph {
+    match w {
+        Workload::Rn18 => resnet("RN-18", &[2, 2, 2, 2], false),
+        Workload::Rn50 => resnet("RN-50", &[3, 4, 6, 3], true),
+        Workload::Rn152 => resnet("RN-152", &[3, 8, 36, 3], true),
+        Workload::Gn => googlenet(),
+        Workload::Mn2 => mobilenet_v2(),
+        Workload::Et => segnet_et(),
+        Workload::Agg3d => agg3d(),
+        Workload::Hrn => hrnet(),
+        Workload::EFan => emofan(),
+        Workload::Jlp => jlp(),
+        Workload::Unet => unet_plain(),
+        Workload::Dn => unet_dn(),
+        Workload::Sr256 => superres("SR-256", 256),
+        Workload::Sr512 => superres("SR-512", 512),
+        Workload::Sr1024 => superres("SR-1024", 1024),
+    }
+}
+
+/// ResNet family at 224². `bottleneck` selects the 1-3-1 block (RN-50+).
+fn resnet(name: &str, blocks: &[usize; 4], bottleneck: bool) -> OpGraph {
+    let mut ops = vec![conv2d("stem", 224, 224, 3, 64, 7, 2)];
+    ops.push(eltwise("stem-pool", 112 * 112 * 64));
+    let widths = [64u32, 128, 256, 512];
+    let mut h = 56u32; // after stem + maxpool
+    let expansion = if bottleneck { 4 } else { 1 };
+    let mut cin = 64u32;
+    for (stage, (&n, &width)) in blocks.iter().zip(widths.iter()).enumerate() {
+        for b in 0..n {
+            let stride = if stage > 0 && b == 0 { 2 } else { 1 };
+            if stride == 2 {
+                h /= 2;
+            }
+            let cout = width * expansion;
+            if bottleneck {
+                ops.push(conv2d(&format!("s{stage}b{b}-1x1a"), h * stride, h * stride, cin, width, 1, stride));
+                ops.push(conv2d(&format!("s{stage}b{b}-3x3"), h, h, width, width, 3, 1));
+                ops.push(conv2d(&format!("s{stage}b{b}-1x1b"), h, h, width, cout, 1, 1));
+            } else {
+                ops.push(conv2d(&format!("s{stage}b{b}-3x3a"), h * stride, h * stride, cin, width, 3, stride));
+                ops.push(conv2d(&format!("s{stage}b{b}-3x3b"), h, h, width, cout, 3, 1));
+            }
+            if cin != cout || stride == 2 {
+                ops.push(conv2d(&format!("s{stage}b{b}-proj"), h * stride, h * stride, cin, cout, 1, stride));
+            }
+            ops.push(eltwise(&format!("s{stage}b{b}-add"), (h * h * cout) as u64));
+            cin = cout;
+        }
+    }
+    ops.push(fc("fc", cin, 1000));
+    OpGraph { name: name.to_string(), ops }
+}
+
+/// GoogleNet (Inception-v1) approximation at 224²: stem + 9 inception
+/// modules with the published channel mixes.
+fn googlenet() -> OpGraph {
+    let mut ops = vec![
+        conv2d("stem-7x7", 224, 224, 3, 64, 7, 2),
+        conv2d("stem-3x3r", 56, 56, 64, 64, 1, 1),
+        conv2d("stem-3x3", 56, 56, 64, 192, 3, 1),
+    ];
+    // (h, cin, [b1, b3r, b3, b5r, b5, pool_proj])
+    let modules: [(u32, u32, [u32; 6]); 9] = [
+        (28, 192, [64, 96, 128, 16, 32, 32]),
+        (28, 256, [128, 128, 192, 32, 96, 64]),
+        (14, 480, [192, 96, 208, 16, 48, 64]),
+        (14, 512, [160, 112, 224, 24, 64, 64]),
+        (14, 512, [128, 128, 256, 24, 64, 64]),
+        (14, 512, [112, 144, 288, 32, 64, 64]),
+        (14, 528, [256, 160, 320, 32, 128, 128]),
+        (7, 832, [256, 160, 320, 32, 128, 128]),
+        (7, 832, [384, 192, 384, 48, 128, 128]),
+    ];
+    for (i, (h, cin, b)) in modules.iter().enumerate() {
+        let tag = format!("inc{i}");
+        ops.push(conv2d(&format!("{tag}-1x1"), *h, *h, *cin, b[0], 1, 1));
+        ops.push(conv2d(&format!("{tag}-3x3r"), *h, *h, *cin, b[1], 1, 1));
+        ops.push(conv2d(&format!("{tag}-3x3"), *h, *h, b[1], b[2], 3, 1));
+        ops.push(conv2d(&format!("{tag}-5x5r"), *h, *h, *cin, b[3], 1, 1));
+        ops.push(conv2d(&format!("{tag}-5x5"), *h, *h, b[3], b[4], 5, 1));
+        ops.push(conv2d(&format!("{tag}-pool"), *h, *h, *cin, b[5], 1, 1));
+    }
+    ops.push(fc("fc", 1024, 1000));
+    OpGraph { name: "GN".to_string(), ops }
+}
+
+/// MobileNet-V2 at 224²: inverted residual stages.
+fn mobilenet_v2() -> OpGraph {
+    let mut ops = vec![conv2d("stem", 224, 224, 3, 32, 3, 2)];
+    // (t expansion, c out, n repeats, s stride) per the paper.
+    let cfg: [(u32, u32, u32, u32); 7] = [
+        (1, 16, 1, 1),
+        (6, 24, 2, 2),
+        (6, 32, 3, 2),
+        (6, 64, 4, 2),
+        (6, 96, 3, 1),
+        (6, 160, 3, 2),
+        (6, 320, 1, 1),
+    ];
+    let mut h = 112u32;
+    let mut cin = 32u32;
+    for (si, &(t, c, n, s)) in cfg.iter().enumerate() {
+        for b in 0..n {
+            let stride = if b == 0 { s } else { 1 };
+            let hidden = cin * t;
+            let tag = format!("ir{si}.{b}");
+            if t != 1 {
+                ops.push(conv2d(&format!("{tag}-expand"), h, h, cin, hidden, 1, 1));
+            }
+            if stride == 2 {
+                h /= 2;
+            }
+            ops.push(dwconv(&format!("{tag}-dw"), h * stride, h * stride, hidden, 3, stride));
+            ops.push(conv2d(&format!("{tag}-project"), h, h, hidden, c, 1, 1));
+            cin = c;
+        }
+    }
+    ops.push(conv2d("head", 7, 7, 320, 1280, 1, 1));
+    ops.push(fc("fc", 1280, 1000));
+    OpGraph { name: "MN2".to_string(), ops }
+}
+
+/// SegNet eye-tracking variant: VGG-ish encoder/decoder at 320×240 on a
+/// near-eye camera crop, thinned channels (eye tracking runs at high rate
+/// on a tiny power budget).
+fn segnet_et() -> OpGraph {
+    let mut ops = Vec::new();
+    let (w, h) = (320u32, 240u32);
+    let enc = [(32u32, 1u32), (64, 2), (128, 2), (256, 2)];
+    let mut cin = 1u32; // IR camera, single channel
+    let (mut cw, mut ch) = (w, h);
+    for (i, &(c, down)) in enc.iter().enumerate() {
+        ops.push(conv2d(&format!("enc{i}a"), cw, ch, cin, c, 3, down));
+        cw /= down;
+        ch /= down;
+        ops.push(conv2d(&format!("enc{i}b"), cw, ch, c, c, 3, 1));
+        cin = c;
+    }
+    for (i, &(c, up)) in enc.iter().rev().enumerate() {
+        let cout = if i + 1 < enc.len() { enc[enc.len() - 2 - i].0 } else { 16 };
+        ops.push(deconv2d(&format!("dec{i}"), cw, ch, cin, c, 3, up));
+        cw *= up;
+        ch *= up;
+        ops.push(conv2d(&format!("dec{i}b"), cw, ch, c, cout, 3, 1));
+        cin = cout;
+    }
+    ops.push(conv2d("seg-head", w, h, cin, 4, 1, 1)); // pupil/iris/sclera/bg
+    OpGraph { name: "ET".to_string(), ops }
+}
+
+/// Temporally-consistent depth: 2-D feature extraction + 3-D cost-volume
+/// aggregation at 160×120 with 24 depth hypotheses.
+fn agg3d() -> OpGraph {
+    let mut ops = vec![
+        conv2d("feat-a", 320, 240, 3, 32, 3, 2),
+        conv2d("feat-b", 160, 120, 32, 32, 3, 1),
+        conv2d("feat-c", 160, 120, 32, 32, 3, 1),
+    ];
+    for i in 0..4 {
+        ops.push(conv3d(&format!("agg{i}"), 160, 120, 24, if i == 0 { 16 } else { 16 }, 16, 3));
+    }
+    ops.push(conv3d("agg-out", 160, 120, 24, 16, 1, 3));
+    ops.push(eltwise("softargmax", 160 * 120 * 24));
+    OpGraph { name: "3D-Agg".to_string(), ops }
+}
+
+/// HRNet-W18-ish: parallel multi-resolution branches at 256×192 input
+/// (the depth-for-augmented-calls use case keeps a high-res stream alive).
+fn hrnet() -> OpGraph {
+    let mut ops = vec![
+        conv2d("stem-a", 256, 192, 3, 64, 3, 2),
+        conv2d("stem-b", 128, 96, 64, 64, 3, 1),
+    ];
+    // Branch resolutions and widths (HRNet-W18).
+    let branches = [(64u32, 48u32, 18u32), (32, 24, 36), (16, 12, 72), (8, 6, 144)];
+    // 3 multi-resolution stages, 4 blocks each, on every active branch.
+    for stage in 0..3 {
+        let active = stage + 2; // stage0 -> 2 branches, ... stage2 -> 4
+        for (bi, &(bw, bh, c)) in branches.iter().take(active).enumerate() {
+            for blk in 0..4 {
+                ops.push(conv2d(&format!("s{stage}br{bi}blk{blk}a"), bw * 4, bh * 4, c, c, 3, 1));
+                ops.push(conv2d(&format!("s{stage}br{bi}blk{blk}b"), bw * 4, bh * 4, c, c, 3, 1));
+            }
+            // Fusion convs to the neighbouring resolution.
+            if bi + 1 < active {
+                let (nw, nh, nc) = branches[bi + 1];
+                ops.push(conv2d(&format!("s{stage}fuse{bi}"), nw * 4, nh * 4, c, nc, 3, 2));
+            }
+        }
+    }
+    ops.push(conv2d("head", 256, 192, 18, 1, 1, 1));
+    OpGraph { name: "HRN".to_string(), ops }
+}
+
+/// EmoFAN: FAN-style hourglass on a 128² face crop + valence/arousal head.
+fn emofan() -> OpGraph {
+    let mut ops = vec![conv2d("stem", 128, 128, 3, 64, 7, 2)];
+    let mut h = 64u32;
+    let mut cin = 64u32;
+    // Hourglass down path.
+    for i in 0..3 {
+        let c = 128 + 64 * i as u32;
+        ops.push(conv2d(&format!("hg-down{i}"), h, h, cin, c, 3, 2));
+        h /= 2;
+        cin = c;
+    }
+    // Bottleneck residuals.
+    for i in 0..2 {
+        ops.push(conv2d(&format!("hg-mid{i}"), h, h, cin, cin, 3, 1));
+    }
+    // Up path.
+    for i in 0..3 {
+        let c = if i < 2 { 128 + 64 * (1 - i as u32) } else { 68 };
+        ops.push(deconv2d(&format!("hg-up{i}"), h, h, cin, c, 3, 2));
+        h *= 2;
+        cin = c;
+    }
+    ops.push(conv2d("heatmap", 64, 64, 68, 68, 1, 1));
+    ops.push(fc("emotion-head", 68 * 8 * 8, 256));
+    ops.push(fc("va-out", 256, 2));
+    OpGraph { name: "E-FAN".to_string(), ops }
+}
+
+/// Joint-location predictor (hand tracking): small regression CNN on a
+/// 128² hand crop from the egocentric RGB-D stream, 21 joints.
+fn jlp() -> OpGraph {
+    let mut ops = vec![conv2d("stem", 128, 128, 4, 32, 3, 2)];
+    let widths = [64u32, 128, 192];
+    let mut h = 64u32;
+    let mut cin = 32u32;
+    for (i, &c) in widths.iter().enumerate() {
+        ops.push(conv2d(&format!("b{i}a"), h, h, cin, c, 3, 2));
+        h /= 2;
+        ops.push(conv2d(&format!("b{i}b"), h, h, c, c, 3, 1));
+        cin = c;
+    }
+    ops.push(fc("fc1", cin * 8 * 8, 512));
+    ops.push(fc("joints", 512, 21 * 3));
+    OpGraph { name: "JLP".to_string(), ops }
+}
+
+/// Plain UNet trunk at 256×256 (the Table 4 "UNet" kernel without the
+/// Feature-Align burst stage).
+fn unet_plain() -> OpGraph {
+    let mut ops = Vec::new();
+    let widths = [24u32, 48, 96, 192];
+    let mut h = 256u32;
+    let mut cin = 3u32;
+    for (i, &c) in widths.iter().enumerate() {
+        ops.push(conv2d(&format!("enc{i}a"), h, h, cin, c, 3, 1));
+        ops.push(conv2d(&format!("enc{i}b"), h, h, c, c, 3, 1));
+        if i + 1 < widths.len() {
+            ops.push(eltwise(&format!("pool{i}"), (h / 2 * h / 2 * c) as u64));
+            h /= 2;
+        }
+        cin = c;
+    }
+    for (i, &c) in widths.iter().rev().skip(1).enumerate() {
+        ops.push(deconv2d(&format!("up{i}"), h, h, cin, c, 2, 2));
+        h *= 2;
+        ops.push(conv2d(&format!("dec{i}a"), h, h, c * 2, c, 3, 1));
+        ops.push(conv2d(&format!("dec{i}b"), h, h, c, c, 3, 1));
+        cin = c;
+    }
+    ops.push(conv2d("out", 256, 256, 24, 3, 3, 1));
+    OpGraph { name: "UNet".to_string(), ops }
+}
+
+/// UNet + Feature-Align denoiser at 512×512 (burst denoise for
+/// low-light passthrough).
+fn unet_dn() -> OpGraph {
+    let mut ops = Vec::new();
+    let widths = [32u32, 64, 128, 256];
+    let mut h = 512u32;
+    let mut cin = 4u32; // packed Bayer
+    // Feature-align pre-stage (KD-distilled alignment of 4 burst frames).
+    ops.push(conv2d("align-a", 512, 512, 16, 32, 3, 1));
+    ops.push(conv2d("align-b", 512, 512, 32, 16, 3, 1));
+    for (i, &c) in widths.iter().enumerate() {
+        ops.push(conv2d(&format!("enc{i}a"), h, h, cin, c, 3, 1));
+        ops.push(conv2d(&format!("enc{i}b"), h, h, c, c, 3, 1));
+        if i + 1 < widths.len() {
+            ops.push(eltwise(&format!("pool{i}"), (h / 2 * h / 2 * c) as u64));
+            h /= 2;
+        }
+        cin = c;
+    }
+    for (i, &c) in widths.iter().rev().skip(1).enumerate() {
+        ops.push(deconv2d(&format!("up{i}"), h, h, cin, c, 2, 2));
+        h *= 2;
+        // Skip connection doubles input channels.
+        ops.push(conv2d(&format!("dec{i}a"), h, h, c * 2, c, 3, 1));
+        ops.push(conv2d(&format!("dec{i}b"), h, h, c, c, 3, 1));
+        cin = c;
+    }
+    ops.push(conv2d("out", 512, 512, 32, 4, 3, 1));
+    OpGraph { name: "DN".to_string(), ops }
+}
+
+/// Burst super-resolution (deep-burst-SR style): shallow feature
+/// extraction per frame, fusion, reconstruction trunk at the input
+/// resolution, one pixel-shuffle 2× upsample to the named **output**
+/// resolution (`size×size` is the delivered frame, as in the paper's
+/// SR(512×512) passthrough use case).
+fn superres(name: &str, size: u32) -> OpGraph {
+    let inres = size / 2;
+    let mut ops = vec![
+        conv2d("feat", inres, inres, 3, 24, 3, 1),
+        conv2d("fuse", inres, inres, 24 * 2, 32, 3, 1), // burst fusion (2 eff. frames)
+    ];
+    for i in 0..4 {
+        ops.push(conv2d(&format!("res{i}a"), inres, inres, 32, 32, 3, 1));
+        ops.push(conv2d(&format!("res{i}b"), inres, inres, 32, 32, 3, 1));
+    }
+    // Pixel-shuffle 2x upsampler.
+    ops.push(conv2d("ps", inres, inres, 32, 128, 3, 1));
+    ops.push(eltwise("shuffle", size as u64 * size as u64 * 32));
+    ops.push(conv2d("out", size, size, 32, 3, 3, 1));
+    OpGraph { name: name.to_string(), ops }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn resnet50_macs_near_published() {
+        // Published: ~4.1 GMACs at 224^2.
+        let g = network(Workload::Rn50);
+        let gmacs = g.total_macs() as f64 / 1e9;
+        assert!((3.2..5.2).contains(&gmacs), "RN-50 GMACs = {gmacs}");
+    }
+
+    #[test]
+    fn resnet18_macs_near_published() {
+        // Published: ~1.8 GMACs.
+        let gmacs = network(Workload::Rn18).total_macs() as f64 / 1e9;
+        assert!((1.3..2.6).contains(&gmacs), "RN-18 GMACs = {gmacs}");
+    }
+
+    #[test]
+    fn resnet152_macs_near_published() {
+        // Published: ~11.5 GMACs.
+        let gmacs = network(Workload::Rn152).total_macs() as f64 / 1e9;
+        assert!((9.0..14.5).contains(&gmacs), "RN-152 GMACs = {gmacs}");
+    }
+
+    #[test]
+    fn mobilenet_is_light() {
+        // Published: ~0.3 GMACs; must be far lighter than ResNet-18.
+        let mn2 = network(Workload::Mn2).total_macs();
+        let rn18 = network(Workload::Rn18).total_macs();
+        assert!((mn2 as f64 / 1e9) < 0.8, "MN2 GMACs = {}", mn2 as f64 / 1e9);
+        assert!(rn18 > mn2 * 3);
+    }
+
+    #[test]
+    fn googlenet_macs_near_published() {
+        // Published: ~1.5 GMACs.
+        let gmacs = network(Workload::Gn).total_macs() as f64 / 1e9;
+        assert!((1.0..2.4).contains(&gmacs), "GN GMACs = {gmacs}");
+    }
+
+    #[test]
+    fn resnet_depth_ordering() {
+        let m18 = network(Workload::Rn18).total_macs();
+        let m50 = network(Workload::Rn50).total_macs();
+        let m152 = network(Workload::Rn152).total_macs();
+        assert!(m18 < m50 && m50 < m152);
+    }
+
+    #[test]
+    fn sr_scales_quadratically_with_resolution() {
+        let s256 = network(Workload::Sr256).total_macs() as f64;
+        let s512 = network(Workload::Sr512).total_macs() as f64;
+        let s1024 = network(Workload::Sr1024).total_macs() as f64;
+        assert!((s512 / s256 - 4.0).abs() < 0.4, "ratio={}", s512 / s256);
+        assert!((s1024 / s512 - 4.0).abs() < 0.4);
+    }
+
+    #[test]
+    fn sr1024_has_huge_activations() {
+        // The §5.6 motivation: SR's working set dwarfs on-chip SRAM.
+        let g = network(Workload::Sr1024);
+        assert!(g.peak_activation_bytes() > 16 * 1024 * 1024);
+    }
+
+    #[test]
+    fn all_networks_build_and_are_nonempty() {
+        for w in Workload::ALL {
+            let g = network(w);
+            assert!(!g.ops.is_empty(), "{} empty", w.label());
+            assert!(g.total_macs() > 0, "{} zero macs", w.label());
+            assert!(g.total_weight_bytes() > 0, "{} zero weights", w.label());
+        }
+    }
+
+    #[test]
+    fn xr_category_matches_table3() {
+        assert!(!Workload::Rn50.is_xr());
+        assert!(!Workload::Mn2.is_xr());
+        assert!(Workload::Et.is_xr());
+        assert!(Workload::Sr512.is_xr());
+        assert!(Workload::EFan.is_xr());
+    }
+
+    #[test]
+    fn labels_roundtrip() {
+        for w in Workload::ALL {
+            assert_eq!(Workload::parse(w.label()), Some(w));
+        }
+        assert_eq!(Workload::parse("not-a-net"), None);
+    }
+
+    #[test]
+    fn depthwise_layers_present_in_mn2() {
+        let g = network(Workload::Mn2);
+        let dw = g.ops.iter().filter(|o| o.kind == super::super::ops::OpKind::DepthwiseConv).count();
+        assert!(dw >= 10, "expected many depthwise layers, got {dw}");
+    }
+}

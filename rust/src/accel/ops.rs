@@ -1,0 +1,222 @@
+//! Operator model: the simulator reduces every network layer to MAC count,
+//! weight footprint and activation footprint (Fig 6's "extract operators"
+//! stage). Shapes are NCHW; datatypes are int8-equivalent (1 byte) as in
+//! edge inference accelerators.
+
+/// Operator category — determines how the MAC array maps the computation
+/// and therefore the utilization model in [`super::simulator`].
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum OpKind {
+    /// Dense 2-D convolution.
+    Conv2d,
+    /// Depthwise convolution (no cross-channel reduction — maps poorly to
+    /// wide MAC arrays, the classic MobileNet effect).
+    DepthwiseConv,
+    /// Fully connected / matmul.
+    FullyConnected,
+    /// Transposed convolution (decoder upsampling in SegNet/UNet/SR).
+    Deconv2d,
+    /// 3-D convolution (cost-volume aggregation in depth estimation).
+    Conv3d,
+    /// Elementwise / activation / pooling — negligible MACs but real
+    /// activation traffic.
+    Elementwise,
+}
+
+/// One operator instance with its reduced costs.
+#[derive(Debug, Clone)]
+pub struct Op {
+    /// Layer name for reports.
+    pub name: String,
+    /// Operator category.
+    pub kind: OpKind,
+    /// Multiply-accumulate operations.
+    pub macs: u64,
+    /// Weight bytes (int8).
+    pub weight_bytes: u64,
+    /// Input activation bytes.
+    pub in_bytes: u64,
+    /// Output activation bytes.
+    pub out_bytes: u64,
+    /// Reduction depth: the dot-product length the array can exploit
+    /// (Cin·kh·kw for dense conv; kh·kw for depthwise).
+    pub reduction: u32,
+    /// Output channels (the array's broadcast dimension).
+    pub out_channels: u32,
+}
+
+/// A whole network as an ordered operator list.
+#[derive(Debug, Clone)]
+pub struct OpGraph {
+    /// Network name (Table 3 abbreviation).
+    pub name: String,
+    /// Operators in execution order.
+    pub ops: Vec<Op>,
+}
+
+impl OpGraph {
+    /// Total MACs over the graph.
+    pub fn total_macs(&self) -> u64 {
+        self.ops.iter().map(|o| o.macs).sum()
+    }
+
+    /// Total weight bytes (the model's parameter footprint).
+    pub fn total_weight_bytes(&self) -> u64 {
+        self.ops.iter().map(|o| o.weight_bytes).sum()
+    }
+
+    /// Largest single-layer activation working set (in + out), bytes.
+    pub fn peak_activation_bytes(&self) -> u64 {
+        self.ops.iter().map(|o| o.in_bytes + o.out_bytes).max().unwrap_or(0)
+    }
+}
+
+/// Dense conv2d: `out = (H/s, W/s, Cout)`, MACs = H/s·W/s·Cout·Cin·k².
+pub fn conv2d(name: &str, h: u32, w: u32, cin: u32, cout: u32, k: u32, stride: u32) -> Op {
+    assert!(stride >= 1 && k >= 1 && cin >= 1 && cout >= 1);
+    let oh = (h / stride).max(1) as u64;
+    let ow = (w / stride).max(1) as u64;
+    let macs = oh * ow * cout as u64 * cin as u64 * (k * k) as u64;
+    Op {
+        name: name.to_string(),
+        kind: OpKind::Conv2d,
+        macs,
+        weight_bytes: cin as u64 * cout as u64 * (k * k) as u64,
+        in_bytes: h as u64 * w as u64 * cin as u64,
+        out_bytes: oh * ow * cout as u64,
+        reduction: cin * k * k,
+        out_channels: cout,
+    }
+}
+
+/// Depthwise conv: one filter per channel.
+pub fn dwconv(name: &str, h: u32, w: u32, c: u32, k: u32, stride: u32) -> Op {
+    let oh = (h / stride).max(1) as u64;
+    let ow = (w / stride).max(1) as u64;
+    let macs = oh * ow * c as u64 * (k * k) as u64;
+    Op {
+        name: name.to_string(),
+        kind: OpKind::DepthwiseConv,
+        macs,
+        weight_bytes: c as u64 * (k * k) as u64,
+        in_bytes: h as u64 * w as u64 * c as u64,
+        out_bytes: oh * ow * c as u64,
+        reduction: k * k,
+        out_channels: c,
+    }
+}
+
+/// Fully connected `cin → cout`.
+pub fn fc(name: &str, cin: u32, cout: u32) -> Op {
+    Op {
+        name: name.to_string(),
+        kind: OpKind::FullyConnected,
+        macs: cin as u64 * cout as u64,
+        weight_bytes: cin as u64 * cout as u64,
+        in_bytes: cin as u64,
+        out_bytes: cout as u64,
+        reduction: cin,
+        out_channels: cout,
+    }
+}
+
+/// Transposed conv upsampling by `up`, kernel k.
+pub fn deconv2d(name: &str, h: u32, w: u32, cin: u32, cout: u32, k: u32, up: u32) -> Op {
+    let oh = (h * up) as u64;
+    let ow = (w * up) as u64;
+    let macs = oh * ow * cout as u64 * cin as u64 * (k * k) as u64 / (up * up) as u64;
+    Op {
+        name: name.to_string(),
+        kind: OpKind::Deconv2d,
+        macs,
+        weight_bytes: cin as u64 * cout as u64 * (k * k) as u64,
+        in_bytes: h as u64 * w as u64 * cin as u64,
+        out_bytes: oh * ow * cout as u64,
+        reduction: cin * k * k,
+        out_channels: cout,
+    }
+}
+
+/// 3-D convolution over a cost volume of depth `d`.
+pub fn conv3d(name: &str, h: u32, w: u32, d: u32, cin: u32, cout: u32, k: u32) -> Op {
+    let vox = h as u64 * w as u64 * d as u64;
+    let macs = vox * cout as u64 * cin as u64 * (k as u64).pow(3);
+    Op {
+        name: name.to_string(),
+        kind: OpKind::Conv3d,
+        macs,
+        weight_bytes: cin as u64 * cout as u64 * (k as u64).pow(3),
+        in_bytes: vox * cin as u64,
+        out_bytes: vox * cout as u64,
+        reduction: cin * k * k * k,
+        out_channels: cout,
+    }
+}
+
+/// Elementwise / pool / norm stage: zero MACs, pure activation traffic.
+pub fn eltwise(name: &str, bytes: u64) -> Op {
+    Op {
+        name: name.to_string(),
+        kind: OpKind::Elementwise,
+        macs: 0,
+        weight_bytes: 0,
+        in_bytes: bytes,
+        out_bytes: bytes,
+        reduction: 1,
+        out_channels: 1,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn conv2d_macs_formula() {
+        // 224x224x3 -> 7x7x64 stride2: 112*112*64*3*49.
+        let op = conv2d("c1", 224, 224, 3, 64, 7, 2);
+        assert_eq!(op.macs, 112 * 112 * 64 * 3 * 49);
+        assert_eq!(op.weight_bytes, 3 * 64 * 49);
+        assert_eq!(op.out_bytes, 112 * 112 * 64);
+        assert_eq!(op.reduction, 3 * 49);
+    }
+
+    #[test]
+    fn depthwise_has_no_channel_reduction() {
+        let op = dwconv("dw", 56, 56, 128, 3, 1);
+        assert_eq!(op.reduction, 9);
+        assert_eq!(op.macs, 56 * 56 * 128 * 9);
+        assert_eq!(op.weight_bytes, 128 * 9);
+    }
+
+    #[test]
+    fn fc_is_square_in_weights() {
+        let op = fc("fc", 2048, 1000);
+        assert_eq!(op.macs, op.weight_bytes);
+        assert_eq!(op.macs, 2048 * 1000);
+    }
+
+    #[test]
+    fn deconv_upsamples_output() {
+        let op = deconv2d("up", 28, 28, 64, 32, 4, 2);
+        assert_eq!(op.out_bytes, 56 * 56 * 32);
+    }
+
+    #[test]
+    fn conv3d_cubic_kernel() {
+        let op = conv3d("agg", 64, 64, 24, 16, 16, 3);
+        assert_eq!(op.reduction, 16 * 27);
+        assert_eq!(op.macs, 64 * 64 * 24 * 16 * 16 * 27);
+    }
+
+    #[test]
+    fn graph_aggregates() {
+        let g = OpGraph {
+            name: "tiny".into(),
+            ops: vec![conv2d("a", 8, 8, 4, 8, 3, 1), fc("b", 128, 10)],
+        };
+        assert_eq!(g.total_macs(), 8 * 8 * 8 * 4 * 9 + 1280);
+        assert_eq!(g.total_weight_bytes(), 4 * 8 * 9 + 1280);
+        assert!(g.peak_activation_bytes() >= 8 * 8 * 4);
+    }
+}

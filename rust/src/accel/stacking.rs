@@ -1,0 +1,100 @@
+//! 3-D stacked accelerator variants (§5.6, Fig 15a).
+//!
+//! The paper compares the 2-D baseline A-4 (off-chip memory over an
+//! energy-hungry LPDDR interface) against six 3-D configurations that
+//! stack SRAM dies on the logic die with face-to-face hybrid bonding:
+//! `K ∈ {1K, 2K}` MAC arrays × `M ∈ {4, 8, 16}` MB stacked SRAM.
+
+use super::config::{AcceleratorConfig, MemoryInterface};
+
+/// A named 3-D design point.
+#[derive(Debug, Clone)]
+pub struct StackedDesign {
+    /// Paper-style label ("3D_2K_16M").
+    pub label: String,
+    /// The configuration (stacked SRAM, F2F interface).
+    pub config: AcceleratorConfig,
+}
+
+/// The 2-D baseline of Fig 15a: A-4 (1K MACs, 2 MB on-die, LPDDR).
+pub fn baseline_2d() -> AcceleratorConfig {
+    let mut a4 = AcceleratorConfig::new_2d("2D_1K_2M", 1024, 2 * 1024 * 1024);
+    a4.freq_hz = 1.2e9;
+    a4
+}
+
+/// The six 3-D configurations of Fig 15a.
+pub fn stacked_configs() -> Vec<StackedDesign> {
+    let mut out = Vec::new();
+    for &k in &[1024u32, 2048] {
+        for &mb in &[4u64, 8, 16] {
+            let label = format!("3D_{}K_{}M", k / 1024, mb);
+            let mut cfg = AcceleratorConfig::new_2d(&label, k, mb * 1024 * 1024);
+            cfg.freq_hz = 1.2e9;
+            cfg.stacked_sram = true;
+            cfg.mem = MemoryInterface::f2f();
+            cfg.arrays = k / 1024; // Fig 15a: K counts 1024-MAC arrays
+            out.push(StackedDesign { label, config: cfg });
+        }
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::accel::networks::{network, Workload};
+    use crate::accel::simulate;
+    use crate::carbon::FabGrid;
+
+    #[test]
+    fn six_configs_with_paper_labels() {
+        let cfgs = stacked_configs();
+        assert_eq!(cfgs.len(), 6);
+        let labels: Vec<&str> = cfgs.iter().map(|c| c.label.as_str()).collect();
+        assert!(labels.contains(&"3D_2K_16M"));
+        assert!(labels.contains(&"3D_1K_4M"));
+    }
+
+    #[test]
+    fn stacked_embodied_exceeds_baseline() {
+        // More silicon -> more embodied carbon than the lean 2-D baseline.
+        let base = baseline_2d().embodied_g(FabGrid::Coal);
+        for d in stacked_configs() {
+            assert!(
+                d.config.embodied_g(FabGrid::Coal) > base,
+                "{} embodied below 2D baseline",
+                d.label
+            );
+        }
+    }
+
+    #[test]
+    fn stacked_wins_operationally_on_sr() {
+        // §5.6: for SR the 3-D configs cut energy (and usually latency).
+        let base = baseline_2d();
+        let g = network(Workload::Sr512);
+        let pb = simulate(&base, &g);
+        let d = &stacked_configs()[5]; // 3D_2K_16M
+        let ps = simulate(&d.config, &g);
+        assert!(ps.energy_j() < pb.energy_j() * 0.7, "{} vs {}", ps.energy_j(), pb.energy_j());
+        assert!(ps.delay_s < pb.delay_s);
+    }
+
+    #[test]
+    fn footprint_stays_within_form_factor() {
+        // Stacking grows capacity without growing the 2-D outline much —
+        // the XR form-factor argument.
+        let base = baseline_2d().chip_design(FabGrid::Coal);
+        for d in stacked_configs() {
+            let des = d.config.chip_design(FabGrid::Coal);
+            assert!(
+                des.footprint_cm2() < base.footprint_cm2() * 1.6,
+                "{} footprint {} vs base {}",
+                d.label,
+                des.footprint_cm2(),
+                base.footprint_cm2()
+            );
+        }
+    }
+}

@@ -1,0 +1,131 @@
+//! Timing harness: warmup then fixed-duration sampling.
+
+use std::time::{Duration, Instant};
+
+/// Statistics for one benchmark.
+#[derive(Debug, Clone)]
+pub struct BenchResult {
+    /// Benchmark name.
+    pub name: String,
+    /// Samples collected.
+    pub samples: usize,
+    /// Mean iteration time.
+    pub mean: Duration,
+    /// Median iteration time.
+    pub p50: Duration,
+    /// 95th-percentile iteration time.
+    pub p95: Duration,
+    /// Items/s if `throughput_items` was set.
+    pub throughput: Option<f64>,
+}
+
+impl BenchResult {
+    /// One-line report.
+    pub fn report(&self) -> String {
+        let tp = self
+            .throughput
+            .map(|t| format!("  {:>12.0} items/s", t))
+            .unwrap_or_default();
+        format!(
+            "bench {:40} mean {:>12?}  p50 {:>12?}  p95 {:>12?}  n={}{}",
+            self.name, self.mean, self.p50, self.p95, self.samples, tp
+        )
+    }
+}
+
+/// Builder-style bench runner.
+pub struct Bencher {
+    name: String,
+    warmup: Duration,
+    measure: Duration,
+    max_samples: usize,
+    throughput_items: Option<u64>,
+}
+
+impl Bencher {
+    /// New bencher with defaults (0.3 s warmup, 1.5 s measurement).
+    pub fn new(name: &str) -> Self {
+        Bencher {
+            name: name.to_string(),
+            warmup: Duration::from_millis(300),
+            measure: Duration::from_millis(1500),
+            max_samples: 2000,
+            throughput_items: None,
+        }
+    }
+
+    /// Set items-per-iteration for throughput reporting.
+    pub fn throughput(mut self, items: u64) -> Self {
+        self.throughput_items = Some(items);
+        self
+    }
+
+    /// Shrink the measurement window (for slow end-to-end benches).
+    pub fn quick(mut self) -> Self {
+        self.warmup = Duration::from_millis(50);
+        self.measure = Duration::from_millis(400);
+        self
+    }
+
+    /// Run the closure repeatedly and report stats. The closure's return
+    /// value is black-boxed to keep the optimizer honest.
+    pub fn run<T, F: FnMut() -> T>(self, mut f: F) -> BenchResult {
+        // Warmup.
+        let start = Instant::now();
+        while start.elapsed() < self.warmup {
+            std::hint::black_box(f());
+        }
+        // Measure.
+        let mut samples = Vec::new();
+        let start = Instant::now();
+        while start.elapsed() < self.measure && samples.len() < self.max_samples {
+            let t0 = Instant::now();
+            std::hint::black_box(f());
+            samples.push(t0.elapsed());
+        }
+        samples.sort_unstable();
+        let n = samples.len().max(1);
+        let total: Duration = samples.iter().sum();
+        let mean = total / n as u32;
+        let p50 = samples.get(n / 2).copied().unwrap_or_default();
+        let p95 = samples.get((n as f64 * 0.95) as usize % n).copied().unwrap_or_default();
+        let throughput = self
+            .throughput_items
+            .map(|items| items as f64 / mean.as_secs_f64());
+        BenchResult { name: self.name, samples: n, mean, p50, p95, throughput }
+    }
+}
+
+/// Run a named closure benchmark, print its report line, return stats.
+pub fn run<T, F: FnMut() -> T>(name: &str, f: F) -> BenchResult {
+    let r = Bencher::new(name).run(f);
+    println!("{}", r.report());
+    r
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn collects_samples_and_orders_percentiles() {
+        let r = Bencher::new("noop").quick().run(|| 1 + 1);
+        assert!(r.samples > 10);
+        assert!(r.p50 <= r.p95);
+        assert!(r.mean.as_nanos() > 0);
+    }
+
+    #[test]
+    fn throughput_computed() {
+        let r = Bencher::new("tp").quick().throughput(1000).run(|| {
+            std::hint::black_box((0..100).sum::<u64>())
+        });
+        assert!(r.throughput.unwrap() > 0.0);
+    }
+
+    #[test]
+    fn report_contains_name() {
+        let r = Bencher::new("my-bench").quick().run(|| ());
+        assert!(r.report().contains("my-bench"));
+    }
+}

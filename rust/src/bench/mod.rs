@@ -1,0 +1,10 @@
+//! Miniature benchmark harness (offline substitute for `criterion`).
+//!
+//! `rust/benches/*.rs` are `harness = false` binaries built on this:
+//! warmup, timed sampling, robust statistics (mean/p50/p95), optional
+//! throughput, and a one-line-per-benchmark report compatible with
+//! `cargo bench` output expectations.
+
+mod harness;
+
+pub use harness::{run, BenchResult, Bencher};

@@ -1,0 +1,190 @@
+//! Embodied carbon: the ACT die equation, multi-die designs (chiplets and
+//! 3D stacks), and provisioning-aware component vectors (§3.3.3).
+
+use super::intensity::FabGrid;
+use super::process::ProcessNode;
+use super::yield_model::YieldModel;
+
+/// One die in a design (monolithic part, chiplet, or a layer of a 3D
+/// stack).
+#[derive(Debug, Clone)]
+pub struct Die {
+    /// Descriptive name ("logic", "sram-l1", "ccd0", ...).
+    pub name: String,
+    /// Die area in cm².
+    pub area_cm2: f64,
+    /// Technology node the die is fabbed on.
+    pub node: ProcessNode,
+    /// Yield model for this die.
+    pub yield_model: YieldModel,
+}
+
+impl Die {
+    /// Convenience constructor.
+    pub fn new(name: &str, area_cm2: f64, node: ProcessNode, yield_model: YieldModel) -> Self {
+        Die { name: name.to_string(), area_cm2, node, yield_model }
+    }
+
+    /// Embodied carbon of this die in gCO₂e for a given fab grid:
+    /// `(CI_fab·EPA + GPA + MPA) × A / Y(A)`.
+    pub fn embodied_g(&self, grid: FabGrid) -> f64 {
+        let y = self.yield_model.yield_for(self.area_cm2);
+        self.node.carbon_per_cm2(grid, y) * self.area_cm2
+    }
+}
+
+/// A chip design: one or more dies plus a packaging overhead factor.
+///
+/// Chiplet CPUs (Fig 2's AMD parts) and the paper's 3D-stacked
+/// accelerators (§5.6) are both multi-die designs; for the 3D study the
+/// paper states TSV/stacking carbon is excluded, which corresponds to
+/// `packaging_overhead = 0`.
+#[derive(Debug, Clone)]
+pub struct ChipDesign {
+    /// Design name.
+    pub name: String,
+    /// Constituent dies.
+    pub dies: Vec<Die>,
+    /// Fab grid the dies are manufactured on.
+    pub fab_grid: FabGrid,
+    /// Extra embodied carbon for packaging/assembly as a fraction of die
+    /// carbon (0 = ignore, matching the paper's 3D assumption).
+    pub packaging_overhead: f64,
+}
+
+impl ChipDesign {
+    /// Single-die design helper.
+    pub fn monolithic(name: &str, area_cm2: f64, node: ProcessNode, y: YieldModel, grid: FabGrid) -> Self {
+        ChipDesign {
+            name: name.to_string(),
+            dies: vec![Die::new(name, area_cm2, node, y)],
+            fab_grid: grid,
+            packaging_overhead: 0.0,
+        }
+    }
+
+    /// Total embodied carbon in gCO₂e.
+    pub fn embodied_g(&self) -> f64 {
+        let dies: f64 = self.dies.iter().map(|d| d.embodied_g(self.fab_grid)).sum();
+        dies * (1.0 + self.packaging_overhead)
+    }
+
+    /// Total silicon area (cm²), across all dies.
+    pub fn total_area_cm2(&self) -> f64 {
+        self.dies.iter().map(|d| d.area_cm2).sum()
+    }
+
+    /// Footprint area (cm²): max die area — the 2D outline a stacked design
+    /// occupies (form-factor constraint of §5.6).
+    pub fn footprint_cm2(&self) -> f64 {
+        self.dies.iter().map(|d| d.area_cm2).fold(0.0, f64::max)
+    }
+}
+
+/// Stand-alone ACT embodied equation (gCO₂e) for callers that do not need
+/// the [`Die`] struct.
+pub fn embodied_carbon(node: ProcessNode, grid: FabGrid, area_cm2: f64, yield_frac: f64) -> f64 {
+    node.carbon_per_cm2(grid, yield_frac) * area_cm2
+}
+
+/// Overall embodied carbon of a provisioned system (§3.3.3):
+/// `[C_emb,x1 … C_emb,xi] × online-mask`, where the mask marks components
+/// that are actually powered/provisioned (1) versus dark silicon that a
+/// carbon-aware design would not have paid for (0).
+///
+/// Panics if the vectors disagree in length or the mask has entries
+/// outside [0, 1] (fractional provisioning is allowed — e.g. a core online
+/// for part of the product's life).
+pub fn provisioned_embodied_g(per_component_g: &[f64], online: &[f64]) -> f64 {
+    assert_eq!(per_component_g.len(), online.len(), "component/mask length mismatch");
+    per_component_g
+        .iter()
+        .zip(online)
+        .map(|(&c, &m)| {
+            assert!((0.0..=1.0).contains(&m), "mask entry {m} outside [0,1]");
+            assert!(c >= 0.0, "negative embodied carbon");
+            c * m
+        })
+        .sum()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn vr_soc_cpu_dies() -> (Die, Die) {
+        // Table 5: gold cores 0.3 cm², silver 0.15 cm², 7nm, 85% yield.
+        let gold = Die::new("cpu-gold", 0.3, ProcessNode::N7, YieldModel::Fixed(0.85));
+        let silver = Die::new("cpu-silver", 0.15, ProcessNode::N7, YieldModel::Fixed(0.85));
+        (gold, silver)
+    }
+
+    #[test]
+    fn table5_gold_and_silver() {
+        let (gold, silver) = vr_soc_cpu_dies();
+        assert!((gold.embodied_g(FabGrid::Coal) - 895.89).abs() < 0.5);
+        assert!((silver.embodied_g(FabGrid::Coal) - 447.94).abs() < 0.3);
+    }
+
+    #[test]
+    fn embodied_scales_linearly_with_area_at_fixed_yield() {
+        let a = embodied_carbon(ProcessNode::N7, FabGrid::Coal, 1.0, 0.85);
+        let b = embodied_carbon(ProcessNode::N7, FabGrid::Coal, 2.0, 0.85);
+        assert!((b / a - 2.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn chiplet_design_beats_monolithic_with_murphy_yield() {
+        // Re-partitioning a large die into 4 chiplets raises yield and
+        // lowers total embodied carbon (the paper's AMD observation).
+        let grid = FabGrid::Taiwan;
+        let m = YieldModel::Murphy { d0: 0.15 };
+        let mono = ChipDesign::monolithic("mono", 6.0, ProcessNode::N14, m, grid);
+        let chiplet = ChipDesign {
+            name: "chiplet".into(),
+            dies: (0..4)
+                .map(|i| Die::new(&format!("ccd{i}"), 1.5, ProcessNode::N14, m))
+                .collect(),
+            fab_grid: grid,
+            packaging_overhead: 0.05,
+        };
+        assert!(chiplet.embodied_g() < mono.embodied_g());
+        assert_eq!(chiplet.total_area_cm2(), mono.total_area_cm2());
+    }
+
+    #[test]
+    fn stacked_design_footprint_is_max_die() {
+        let grid = FabGrid::Coal;
+        let stack = ChipDesign {
+            name: "3d".into(),
+            dies: vec![
+                Die::new("logic", 0.5, ProcessNode::N7, YieldModel::Fixed(0.9)),
+                Die::new("sram", 0.4, ProcessNode::N7, YieldModel::Fixed(0.95)),
+            ],
+            fab_grid: grid,
+            packaging_overhead: 0.0,
+        };
+        assert!((stack.footprint_cm2() - 0.5).abs() < 1e-12);
+        assert!((stack.total_area_cm2() - 0.9).abs() < 1e-12);
+    }
+
+    #[test]
+    fn provisioning_masks_components() {
+        let comps = [100.0, 200.0, 300.0];
+        assert_eq!(provisioned_embodied_g(&comps, &[1.0, 1.0, 1.0]), 600.0);
+        assert_eq!(provisioned_embodied_g(&comps, &[1.0, 0.0, 1.0]), 400.0);
+        assert_eq!(provisioned_embodied_g(&comps, &[0.5, 0.0, 0.0]), 50.0);
+    }
+
+    #[test]
+    #[should_panic(expected = "length mismatch")]
+    fn provisioning_length_mismatch_panics() {
+        provisioned_embodied_g(&[1.0], &[1.0, 0.0]);
+    }
+
+    #[test]
+    #[should_panic(expected = "outside")]
+    fn provisioning_bad_mask_panics() {
+        provisioned_embodied_g(&[1.0], &[1.5]);
+    }
+}

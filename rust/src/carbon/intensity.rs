@@ -1,0 +1,94 @@
+//! Electrical-grid carbon intensities.
+//!
+//! Two roles in the paper's model: `CI_fab` (where the part is
+//! manufactured — Taiwan for TSMC-fabbed AMD/Qualcomm parts, US for Intel,
+//! coal-heavy worst case for the VR SoC calibration) and `CI_use` (where
+//! the device operates). Values are in gCO₂ per kWh, in line with the
+//! sources ACT cites (IEA country averages).
+
+/// Fab-location electrical grid.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum FabGrid {
+    /// Coal-dominated grid (paper's VR SoC assumption; ~820 g/kWh).
+    Coal,
+    /// Taiwan average grid (TSMC; ~560 g/kWh).
+    Taiwan,
+    /// US average grid (Intel fabs; ~380 g/kWh).
+    UnitedStates,
+    /// South Korea average (Samsung; ~430 g/kWh).
+    Korea,
+    /// Fully renewable / offset fab ("clean fab" scenario, Table 1).
+    Renewable,
+}
+
+impl FabGrid {
+    /// Grid carbon intensity in gCO₂/kWh.
+    pub fn g_per_kwh(self) -> f64 {
+        match self {
+            FabGrid::Coal => 820.0,
+            FabGrid::Taiwan => 560.0,
+            FabGrid::UnitedStates => 380.0,
+            FabGrid::Korea => 430.0,
+            FabGrid::Renewable => 30.0,
+        }
+    }
+}
+
+/// Use-phase electrical grid.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum UseGrid {
+    /// World average (~440 g/kWh).
+    WorldAverage,
+    /// US average (~380 g/kWh).
+    UnitedStates,
+    /// Wind/solar-dominated grid (~30 g/kWh) — the "100 % renewable
+    /// energy-grid" row of Table 1 (β → ∞).
+    Renewable,
+    /// Coal-dominated grid (~820 g/kWh) — operational-carbon-dominant.
+    Coal,
+    /// Custom intensity (g/kWh).
+    Custom(u32),
+}
+
+impl UseGrid {
+    /// Grid carbon intensity in gCO₂/kWh.
+    pub fn g_per_kwh(self) -> f64 {
+        match self {
+            UseGrid::WorldAverage => 440.0,
+            UseGrid::UnitedStates => 380.0,
+            UseGrid::Renewable => 30.0,
+            UseGrid::Coal => 820.0,
+            UseGrid::Custom(v) => v as f64,
+        }
+    }
+
+    /// Grid carbon intensity in gCO₂ per joule (the unit the batched
+    /// runtime graph consumes: energies there are in J).
+    pub fn g_per_joule(self) -> f64 {
+        self.g_per_kwh() / 3.6e6
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn joule_conversion() {
+        // 1 kWh = 3.6e6 J.
+        let g_per_j = UseGrid::WorldAverage.g_per_joule();
+        assert!((g_per_j * 3.6e6 - 440.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn ordering_of_grids() {
+        assert!(FabGrid::Renewable.g_per_kwh() < FabGrid::UnitedStates.g_per_kwh());
+        assert!(FabGrid::UnitedStates.g_per_kwh() < FabGrid::Taiwan.g_per_kwh());
+        assert!(FabGrid::Taiwan.g_per_kwh() < FabGrid::Coal.g_per_kwh());
+    }
+
+    #[test]
+    fn custom_grid_passthrough() {
+        assert_eq!(UseGrid::Custom(123).g_per_kwh(), 123.0);
+    }
+}

@@ -1,0 +1,277 @@
+//! Carbon-efficiency metric suite (§3.1–§3.2, Table 1, Fig 1).
+//!
+//! The paper contrasts the classic energy-delay product (EDP) with the
+//! ACT-era carbon metrics (CDP, CEP, CE²P, C²EP — all on *embodied*
+//! carbon) and proposes **tCDP = C_total × D**, where C_total is the sum
+//! of operational carbon and embodied carbon *amortized over operational
+//! lifetime*. The β-scalarized objective
+//! `(C_operational + β·C_embodied) × D` sweeps the Pareto front between
+//! operational- and embodied-dominant regimes.
+
+/// Raw per-design quantities every metric is computed from.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct MetricInputs {
+    /// Total task energy, J (||E||₁).
+    pub energy_j: f64,
+    /// Total task delay, s (||D||₁).
+    pub delay_s: f64,
+    /// Operational carbon for the task window, gCO₂e.
+    pub c_operational_g: f64,
+    /// Amortized embodied carbon for the task window, gCO₂e.
+    pub c_embodied_g: f64,
+}
+
+/// The full metric suite for one design point.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct MetricSet {
+    /// Energy-delay product, J·s (carbon-oblivious baseline).
+    pub edp: f64,
+    /// Embodied-carbon × delay (ACT's CDP), g·s.
+    pub cdp: f64,
+    /// Embodied-carbon × energy (ACT's CEP), g·J.
+    pub cep: f64,
+    /// Embodied-carbon × energy², g·J².
+    pub ce2p: f64,
+    /// Embodied-carbon² × energy, g²·J.
+    pub c2ep: f64,
+    /// Total life-cycle carbon × delay (the paper's tCDP), g·s.
+    pub tcdp: f64,
+    /// Total life-cycle carbon, g.
+    pub c_total_g: f64,
+}
+
+impl MetricInputs {
+    /// Compute the whole suite.
+    pub fn metrics(&self) -> MetricSet {
+        let MetricInputs { energy_j: e, delay_s: d, c_operational_g: co, c_embodied_g: ce } = *self;
+        assert!(e >= 0.0 && d >= 0.0 && co >= 0.0 && ce >= 0.0, "negative metric input: {self:?}");
+        MetricSet {
+            edp: e * d,
+            cdp: ce * d,
+            cep: ce * e,
+            ce2p: ce * e * e,
+            c2ep: ce * ce * e,
+            tcdp: (co + ce) * d,
+            c_total_g: co + ce,
+        }
+    }
+
+    /// The β-scalarized objective of §3.2:
+    /// `F₁ + β·F₂ = (C_operational + β·C_embodied) × D`.
+    pub fn scalarized(&self, beta: f64) -> f64 {
+        assert!(beta >= 0.0, "beta must be non-negative");
+        (self.c_operational_g + beta * self.c_embodied_g) * self.delay_s
+    }
+}
+
+/// Which figure-of-merit to optimize a design for (Figs 1, 2, 8).
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum MetricKind {
+    /// Energy-delay product (carbon-oblivious).
+    Edp,
+    /// Embodied carbon-delay product.
+    Cdp,
+    /// Embodied carbon-energy product.
+    Cep,
+    /// Embodied carbon-energy² product.
+    Ce2p,
+    /// Embodied carbon²-energy product.
+    C2ep,
+    /// Total-carbon-delay product (the paper's proposal).
+    Tcdp,
+}
+
+impl MetricKind {
+    /// All metrics in the Fig 1 comparison order.
+    pub const ALL: [MetricKind; 6] = [
+        MetricKind::Edp,
+        MetricKind::Cdp,
+        MetricKind::Cep,
+        MetricKind::Ce2p,
+        MetricKind::C2ep,
+        MetricKind::Tcdp,
+    ];
+
+    /// Display label.
+    pub fn label(self) -> &'static str {
+        match self {
+            MetricKind::Edp => "EDP",
+            MetricKind::Cdp => "CDP",
+            MetricKind::Cep => "CEP",
+            MetricKind::Ce2p => "CE2P",
+            MetricKind::C2ep => "C2EP",
+            MetricKind::Tcdp => "tCDP",
+        }
+    }
+
+    /// Extract this metric's value from a computed [`MetricSet`].
+    pub fn value(self, m: &MetricSet) -> f64 {
+        match self {
+            MetricKind::Edp => m.edp,
+            MetricKind::Cdp => m.cdp,
+            MetricKind::Cep => m.cep,
+            MetricKind::Ce2p => m.ce2p,
+            MetricKind::C2ep => m.c2ep,
+            MetricKind::Tcdp => m.tcdp,
+        }
+    }
+
+    /// Parse from a CLI string.
+    pub fn parse(s: &str) -> Option<MetricKind> {
+        match s.to_ascii_lowercase().as_str() {
+            "edp" => Some(MetricKind::Edp),
+            "cdp" => Some(MetricKind::Cdp),
+            "cep" => Some(MetricKind::Cep),
+            "ce2p" => Some(MetricKind::Ce2p),
+            "c2ep" => Some(MetricKind::C2ep),
+            "tcdp" => Some(MetricKind::Tcdp),
+            _ => None,
+        }
+    }
+}
+
+/// The β regimes of Table 1.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum BetaRegime {
+    /// β → 0: clean fab, operational-carbon-dominant system
+    /// (objective degenerates to `C_operational × D`).
+    OperationalOnly,
+    /// 0 < β < 1: operational-carbon dominance range.
+    OperationalDominant,
+    /// β = 1: both carbons in CO₂e with known relation — exact tCDP.
+    Exact,
+    /// 1 < β < ∞: embodied-carbon dominance range.
+    EmbodiedDominant,
+    /// β → ∞: 100 % renewable use grid
+    /// (objective degenerates to `C_embodied × D`).
+    EmbodiedOnly,
+}
+
+/// Classify a β value into its Table 1 regime.
+pub fn beta_regime(beta: f64) -> BetaRegime {
+    assert!(beta >= 0.0 && !beta.is_nan(), "beta must be a non-negative number");
+    if beta == 0.0 {
+        BetaRegime::OperationalOnly
+    } else if beta < 1.0 {
+        BetaRegime::OperationalDominant
+    } else if beta == 1.0 {
+        BetaRegime::Exact
+    } else if beta.is_infinite() {
+        BetaRegime::EmbodiedOnly
+    } else {
+        BetaRegime::EmbodiedDominant
+    }
+}
+
+/// Index of the minimum value (the "metric-optimal" star in Figs 1/2).
+/// Ties resolve to the first occurrence; non-finite values never win.
+pub fn argmin(values: &[f64]) -> Option<usize> {
+    let mut best: Option<(usize, f64)> = None;
+    for (i, &v) in values.iter().enumerate() {
+        if !v.is_finite() {
+            continue;
+        }
+        match best {
+            Some((_, bv)) if bv <= v => {}
+            _ => best = Some((i, v)),
+        }
+    }
+    best.map(|(i, _)| i)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::testkit::{forall, Rng};
+
+    fn inputs(e: f64, d: f64, co: f64, ce: f64) -> MetricInputs {
+        MetricInputs { energy_j: e, delay_s: d, c_operational_g: co, c_embodied_g: ce }
+    }
+
+    #[test]
+    fn tcdp_is_total_carbon_times_delay() {
+        let m = inputs(10.0, 2.0, 3.0, 7.0).metrics();
+        assert!((m.tcdp - 20.0).abs() < 1e-12);
+        assert!((m.c_total_g - 10.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn suite_matches_definitions() {
+        let m = inputs(4.0, 3.0, 1.0, 2.0).metrics();
+        assert_eq!(m.edp, 12.0);
+        assert_eq!(m.cdp, 6.0);
+        assert_eq!(m.cep, 8.0);
+        assert_eq!(m.ce2p, 32.0);
+        assert_eq!(m.c2ep, 16.0);
+    }
+
+    #[test]
+    fn scalarized_beta_one_equals_tcdp() {
+        let i = inputs(5.0, 2.5, 4.0, 6.0);
+        assert!((i.scalarized(1.0) - i.metrics().tcdp).abs() < 1e-12);
+    }
+
+    #[test]
+    fn scalarized_limits_match_table1() {
+        let i = inputs(5.0, 2.0, 4.0, 6.0);
+        // β→0: C_op · D.
+        assert!((i.scalarized(0.0) - 8.0).abs() < 1e-12);
+        // Large β: dominated by C_emb · D (per unit β).
+        let big = i.scalarized(1e9) / 1e9;
+        assert!((big - 12.0).abs() < 1e-6);
+    }
+
+    #[test]
+    fn beta_regimes() {
+        assert_eq!(beta_regime(0.0), BetaRegime::OperationalOnly);
+        assert_eq!(beta_regime(0.5), BetaRegime::OperationalDominant);
+        assert_eq!(beta_regime(1.0), BetaRegime::Exact);
+        assert_eq!(beta_regime(7.0), BetaRegime::EmbodiedDominant);
+        assert_eq!(beta_regime(f64::INFINITY), BetaRegime::EmbodiedOnly);
+    }
+
+    #[test]
+    fn metric_kind_roundtrip() {
+        for k in MetricKind::ALL {
+            assert_eq!(MetricKind::parse(k.label()), Some(k));
+        }
+        assert_eq!(MetricKind::parse("nope"), None);
+    }
+
+    #[test]
+    fn argmin_basic_and_nonfinite() {
+        assert_eq!(argmin(&[3.0, 1.0, 2.0]), Some(1));
+        assert_eq!(argmin(&[f64::NAN, 5.0, f64::INFINITY]), Some(1));
+        assert_eq!(argmin(&[]), None);
+        assert_eq!(argmin(&[f64::NAN]), None);
+    }
+
+    #[test]
+    fn prop_scalarized_monotonic_in_beta() {
+        forall(
+            |r: &mut Rng| {
+                (
+                    inputs(r.range(0.0, 100.0), r.range(0.0, 10.0), r.range(0.0, 50.0), r.range(0.0, 50.0)),
+                    r.range(0.0, 5.0),
+                    r.range(0.0, 5.0),
+                )
+            },
+            |(i, b1, b2)| {
+                let (lo, hi) = if b1 <= b2 { (*b1, *b2) } else { (*b2, *b1) };
+                i.scalarized(lo) <= i.scalarized(hi) + 1e-9
+            },
+        );
+    }
+
+    #[test]
+    fn prop_tcdp_between_pure_objectives_scaled() {
+        // (C_op + C_emb)·D >= max(C_op·D, C_emb·D) always.
+        forall(
+            |r: &mut Rng| inputs(r.range(0.0, 10.0), r.range(0.0, 10.0), r.range(0.0, 10.0), r.range(0.0, 10.0)),
+            |i| {
+                let t = i.metrics().tcdp;
+                t + 1e-12 >= i.c_operational_g * i.delay_s && t + 1e-12 >= i.c_embodied_g * i.delay_s
+            },
+        );
+    }
+}

@@ -1,0 +1,39 @@
+//! ACT-style life-cycle carbon model (paper §3.3, §4.2).
+//!
+//! The paper computes embodied carbon per die with the ACT equation
+//!
+//! ```text
+//! C_embodied = (CI_fab × EPA + MPA + GPA) × A / Y
+//! ```
+//!
+//! and operational carbon as `CI_use × E`. This module provides:
+//!
+//! * [`process`] — per-technology-node fab footprint constants
+//!   (EPA/GPA/MPA), calibrated so Table 5 of the paper reproduces exactly
+//!   at 7 nm / coal grid / 85 % yield;
+//! * [`intensity`] — electrical-grid carbon intensities for fab locations
+//!   and use-phase grids;
+//! * [`yield_model`] — fixed, Murphy and negative-binomial die-yield models
+//!   plus the de Vries gross-die-per-wafer formula;
+//! * [`embodied`] — the embodied-carbon equation, multi-die (chiplet /
+//!   3D-stack) aggregation and provisioning-aware component vectors;
+//! * [`operational`] — use-phase carbon and lifetime amortization;
+//! * [`metrics`] — EDP and the carbon metric suite (CDP, CEP, CE²P, C²EP,
+//!   tCDP) with the β-scalarized objective of §3.2 (Table 1);
+//! * [`replacement`] — the hardware-replacement-frequency model behind
+//!   Fig 14.
+
+pub mod embodied;
+pub mod intensity;
+pub mod metrics;
+pub mod operational;
+pub mod process;
+pub mod replacement;
+pub mod yield_model;
+
+pub use embodied::{embodied_carbon, ChipDesign, Die};
+pub use intensity::{FabGrid, UseGrid};
+pub use metrics::{beta_regime, BetaRegime, MetricInputs, MetricKind, MetricSet};
+pub use operational::{amortized_embodied, operational_carbon};
+pub use process::{ProcessNode, ProcessParams};
+pub use yield_model::{gross_die_per_wafer, YieldModel};

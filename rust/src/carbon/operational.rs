@@ -1,0 +1,94 @@
+//! Operational carbon and embodied-carbon amortization (§3.3.3).
+
+use super::intensity::UseGrid;
+
+/// Operational carbon (gCO₂e) for a total energy `energy_j` (J) on a
+/// use-phase grid: `CI_use × ||E||₁`.
+pub fn operational_carbon(grid: UseGrid, energy_j: f64) -> f64 {
+    assert!(energy_j >= 0.0, "energy must be non-negative");
+    grid.g_per_joule() * energy_j
+}
+
+/// Amortized embodied carbon (gCO₂e) attributed to a workload occupying
+/// `task_delay_s` of the hardware's *operational* lifetime
+/// `LT − D_idle` (both in seconds):
+///
+/// ```text
+/// C_embodied = C_embodied,overall × ||D||₁ / (LT − D_idle)
+/// ```
+///
+/// The paper amortizes over operational (non-idle) time so embodied carbon
+/// is not hidden by shelf/idle time.
+pub fn amortized_embodied(overall_g: f64, task_delay_s: f64, operational_lifetime_s: f64) -> f64 {
+    assert!(overall_g >= 0.0, "embodied carbon must be non-negative");
+    assert!(task_delay_s >= 0.0, "task delay must be non-negative");
+    assert!(operational_lifetime_s > 0.0, "operational lifetime must be positive");
+    overall_g * task_delay_s / operational_lifetime_s
+}
+
+/// Operational lifetime in seconds for a device used `hours_per_day` for
+/// `years` (the Fig 4 assumption: 1 h daily × 3 years).
+pub fn operational_lifetime_s(hours_per_day: f64, years: f64) -> f64 {
+    assert!(hours_per_day > 0.0 && hours_per_day <= 24.0);
+    assert!(years > 0.0);
+    hours_per_day * 3600.0 * 365.25 * years
+}
+
+/// Fraction of total life-cycle carbon that is embodied, given the
+/// amortized embodied and operational carbon for the same workload window.
+pub fn embodied_ratio(embodied_g: f64, operational_g: f64) -> f64 {
+    let total = embodied_g + operational_g;
+    if total <= 0.0 {
+        return 0.0;
+    }
+    embodied_g / total
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn operational_carbon_matches_hand_calc() {
+        // 1 kWh on the world-average grid = 440 g.
+        let c = operational_carbon(UseGrid::WorldAverage, 3.6e6);
+        assert!((c - 440.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn amortization_is_linear_in_delay() {
+        let full = amortized_embodied(1000.0, 100.0, 100.0);
+        assert!((full - 1000.0).abs() < 1e-12);
+        let half = amortized_embodied(1000.0, 50.0, 100.0);
+        assert!((half - 500.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn idle_time_concentrates_embodied() {
+        // Shorter operational lifetime (more idle) -> larger amortized share
+        // for the same task.
+        let busy = amortized_embodied(1000.0, 10.0, 1000.0);
+        let idle_heavy = amortized_embodied(1000.0, 10.0, 100.0);
+        assert!(idle_heavy > busy * 9.9);
+    }
+
+    #[test]
+    fn lifetime_seconds_for_fig4_assumption() {
+        // 1 h/day for 3 years ≈ 1096 hours.
+        let s = operational_lifetime_s(1.0, 3.0);
+        assert!((s / 3600.0 - 1095.75).abs() < 0.1);
+    }
+
+    #[test]
+    fn embodied_ratio_bounds() {
+        assert_eq!(embodied_ratio(0.0, 0.0), 0.0);
+        assert!((embodied_ratio(30.0, 70.0) - 0.3).abs() < 1e-12);
+        assert_eq!(embodied_ratio(5.0, 0.0), 1.0);
+    }
+
+    #[test]
+    #[should_panic(expected = "positive")]
+    fn zero_lifetime_panics() {
+        amortized_embodied(1.0, 1.0, 0.0);
+    }
+}

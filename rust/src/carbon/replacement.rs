@@ -1,0 +1,160 @@
+//! Hardware replacement-frequency model (§5.5, Fig 14).
+//!
+//! A device generation consumes embodied carbon up front and operational
+//! carbon over its life; each replacement buys the 1.21×/year average
+//! energy-efficiency improvement the paper cites from ACT. Given a fixed
+//! service horizon, replacing every `R` years costs
+//!
+//! ```text
+//! C(R) = (H/R)·C_emb + Σ_gen Σ_year CI_use · E_year / eff(gen)
+//! ```
+//!
+//! where `eff(gen) = improvement^(R·gen)` — hardware bought later is more
+//! efficient. Short `R` amortizes efficiency gains; long `R` amortizes
+//! embodied carbon. The optimum shifts with daily usage exactly as Fig 14
+//! shows.
+
+use super::intensity::UseGrid;
+
+/// Inputs for the replacement study.
+#[derive(Debug, Clone, Copy)]
+pub struct ReplacementScenario {
+    /// Embodied carbon per device generation, gCO₂e.
+    pub embodied_g: f64,
+    /// Average power while in use for generation-0 hardware, W.
+    pub active_power_w: f64,
+    /// Daily usage, hours.
+    pub hours_per_day: f64,
+    /// Use-phase grid.
+    pub grid: UseGrid,
+    /// Annual energy-efficiency improvement factor (paper: 1.21).
+    pub annual_efficiency_gain: f64,
+    /// Service horizon considered, years (total time the user needs a
+    /// working device; replacements tile this horizon).
+    pub horizon_years: f64,
+}
+
+impl Default for ReplacementScenario {
+    fn default() -> Self {
+        ReplacementScenario {
+            embodied_g: 0.0,
+            active_power_w: 0.0,
+            hours_per_day: 1.0,
+            grid: UseGrid::WorldAverage,
+            annual_efficiency_gain: 1.21,
+            horizon_years: 10.0,
+        }
+    }
+}
+
+/// Total life-cycle carbon (gCO₂e) over the horizon when replacing the
+/// device every `lifetime_years`.
+pub fn total_carbon_g(s: &ReplacementScenario, lifetime_years: f64) -> f64 {
+    assert!(lifetime_years > 0.0, "lifetime must be positive");
+    assert!(s.annual_efficiency_gain >= 1.0, "efficiency gain must be >= 1");
+    let generations = (s.horizon_years / lifetime_years).ceil().max(1.0) as usize;
+    let seconds_per_year = 3600.0 * 365.25 * s.hours_per_day;
+    let mut total = 0.0;
+    for g in 0..generations {
+        let gen_start = g as f64 * lifetime_years;
+        let gen_end = (gen_start + lifetime_years).min(s.horizon_years);
+        if gen_end <= gen_start {
+            break;
+        }
+        total += s.embodied_g;
+        // Power of hardware bought at `gen_start`: baseline / gain^years.
+        let power = s.active_power_w / s.annual_efficiency_gain.powf(gen_start);
+        let energy_j = power * seconds_per_year * (gen_end - gen_start);
+        total += s.grid.g_per_joule() * energy_j;
+    }
+    total
+}
+
+/// Sweep candidate lifetimes and return `(lifetime, total_carbon)` pairs.
+pub fn sweep_lifetimes(s: &ReplacementScenario, lifetimes_years: &[f64]) -> Vec<(f64, f64)> {
+    lifetimes_years.iter().map(|&lt| (lt, total_carbon_g(s, lt))).collect()
+}
+
+/// The carbon-optimal lifetime among the candidates.
+pub fn optimal_lifetime(s: &ReplacementScenario, lifetimes_years: &[f64]) -> f64 {
+    sweep_lifetimes(s, lifetimes_years)
+        .into_iter()
+        .min_by(|a, b| a.1.total_cmp(&b.1))
+        .map(|(lt, _)| lt)
+        .expect("at least one candidate lifetime")
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn quest_like(hours: f64) -> ReplacementScenario {
+        ReplacementScenario {
+            embodied_g: 6000.0, // VR SoC-class embodied carbon (Table 5 scaled to die)
+            active_power_w: 5.8, // ~70% of the 8.3 W TDP (Fig 4)
+            hours_per_day: hours,
+            grid: UseGrid::WorldAverage,
+            annual_efficiency_gain: 1.21,
+            horizon_years: 10.0,
+        }
+    }
+
+    const CANDIDATES: [f64; 5] = [1.0, 2.0, 3.0, 4.0, 5.0];
+
+    #[test]
+    fn light_use_favors_long_lifetime() {
+        // 1 h/day: embodied dominates -> 5-year optimum (paper Fig 14 left).
+        assert_eq!(optimal_lifetime(&quest_like(1.0), &CANDIDATES), 5.0);
+    }
+
+    #[test]
+    fn heavy_use_favors_short_lifetime() {
+        // 12 h/day: operational dominates; frequent replacement reaps the
+        // 1.21x/yr efficiency gains (paper Fig 14 right: short optimum).
+        let opt = optimal_lifetime(&quest_like(12.0), &CANDIDATES);
+        assert!(opt < 5.0, "expected short optimum, got {opt}");
+        // And the optimum shrinks monotonically as daily usage grows.
+        let o1 = optimal_lifetime(&quest_like(1.0), &CANDIDATES);
+        let o3 = optimal_lifetime(&quest_like(3.0), &CANDIDATES);
+        assert!(o1 >= o3 && o3 >= opt, "o1={o1} o3={o3} o12={opt}");
+    }
+
+    #[test]
+    fn no_efficiency_gain_always_favors_longest() {
+        let mut s = quest_like(12.0);
+        s.annual_efficiency_gain = 1.0;
+        assert_eq!(optimal_lifetime(&s, &CANDIDATES), 5.0);
+    }
+
+    #[test]
+    fn total_carbon_decomposes() {
+        // One generation exactly covering the horizon.
+        let mut s = quest_like(1.0);
+        s.horizon_years = 3.0;
+        let c = total_carbon_g(&s, 3.0);
+        let energy_j = 5.8 * 3600.0 * 365.25 * 1.0 * 3.0;
+        let expect = 6000.0 + UseGrid::WorldAverage.g_per_joule() * energy_j;
+        assert!((c - expect).abs() < 1e-6);
+    }
+
+    #[test]
+    fn partial_last_generation_is_prorated() {
+        let mut s = quest_like(1.0);
+        s.horizon_years = 5.0;
+        // Replacing every 2 years: 3 generations, last one only 1 year long.
+        let c = total_carbon_g(&s, 2.0);
+        assert!(c > 3.0 * s.embodied_g); // 3 embodied payments present.
+        let full3gen = {
+            let mut s6 = s;
+            s6.horizon_years = 6.0;
+            total_carbon_g(&s6, 2.0)
+        };
+        assert!(c < full3gen); // but less operational than a full 6 years.
+    }
+
+    #[test]
+    #[should_panic(expected = "positive")]
+    fn zero_lifetime_rejected() {
+        total_carbon_g(&quest_like(1.0), 0.0);
+    }
+}

@@ -1,0 +1,131 @@
+//! Die-yield and gross-die-per-wafer models (paper §4.2: "incorporated more
+//! die placement and yield models [15, 35]").
+//!
+//! * Murphy's model \[Murphy '64\]: `Y = ((1 − e^{−AD}) / (AD))²`
+//! * Negative binomial (clustered defects): `Y = (1 + AD/α)^{−α}`
+//! * Fixed yield (the paper's 80 % CPU / 85 % VR SoC assumptions)
+//! * de Vries \[TSM '05\] gross-die-per-wafer placement formula.
+
+/// Die-yield model.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub enum YieldModel {
+    /// Constant yield irrespective of area (the paper's retrospective
+    /// analysis uses fixed 80 % for monolithic CPUs and 85 % for the VR
+    /// SoC).
+    Fixed(f64),
+    /// Murphy's 1964 model with defect density `d0` (defects/cm²).
+    Murphy { d0: f64 },
+    /// Negative-binomial model with defect density `d0` and clustering
+    /// parameter `alpha` (α→∞ recovers Poisson).
+    NegBinomial { d0: f64, alpha: f64 },
+}
+
+impl YieldModel {
+    /// Yield fraction in (0, 1] for a die of `area_cm2`.
+    pub fn yield_for(self, area_cm2: f64) -> f64 {
+        assert!(area_cm2 >= 0.0, "area must be non-negative");
+        match self {
+            YieldModel::Fixed(y) => {
+                assert!(y > 0.0 && y <= 1.0, "fixed yield must be in (0,1]");
+                y
+            }
+            YieldModel::Murphy { d0 } => {
+                let ad = area_cm2 * d0;
+                if ad < 1e-12 {
+                    return 1.0;
+                }
+                let t = (1.0 - (-ad).exp()) / ad;
+                t * t
+            }
+            YieldModel::NegBinomial { d0, alpha } => {
+                assert!(alpha > 0.0, "alpha must be positive");
+                (1.0 + area_cm2 * d0 / alpha).powf(-alpha)
+            }
+        }
+    }
+}
+
+/// Gross die per wafer (de Vries, IEEE TSM 2005): first-order placement
+/// count for square-ish dies on a circular wafer.
+///
+/// `d_wafer_mm` is the wafer diameter (300 mm standard), `die_area_mm2`
+/// the die area. Uses the well-known correction
+/// `N = π(d/2)²/A − πd/√(2A)`.
+pub fn gross_die_per_wafer(d_wafer_mm: f64, die_area_mm2: f64) -> f64 {
+    assert!(die_area_mm2 > 0.0, "die area must be positive");
+    let r = d_wafer_mm / 2.0;
+    let full = std::f64::consts::PI * r * r / die_area_mm2;
+    let edge = std::f64::consts::PI * d_wafer_mm / (2.0 * die_area_mm2).sqrt();
+    (full - edge).max(0.0)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn fixed_yield_ignores_area() {
+        let y = YieldModel::Fixed(0.8);
+        assert_eq!(y.yield_for(0.1), 0.8);
+        assert_eq!(y.yield_for(5.0), 0.8);
+    }
+
+    #[test]
+    fn murphy_decreases_with_area() {
+        let m = YieldModel::Murphy { d0: 0.18 };
+        let small = m.yield_for(0.5);
+        let big = m.yield_for(6.0);
+        assert!(small > big);
+        assert!(small <= 1.0 && big > 0.0);
+    }
+
+    #[test]
+    fn murphy_tiny_die_is_near_one() {
+        let m = YieldModel::Murphy { d0: 0.18 };
+        assert!((m.yield_for(1e-6) - 1.0).abs() < 1e-4);
+        assert_eq!(m.yield_for(0.0), 1.0);
+    }
+
+    #[test]
+    fn negbinomial_approaches_poisson_for_large_alpha() {
+        let area = 1.0;
+        let d0 = 0.2;
+        let nb = YieldModel::NegBinomial { d0, alpha: 1e6 }.yield_for(area);
+        let poisson = (-area * d0).exp();
+        assert!((nb - poisson).abs() < 1e-4, "nb={nb} poisson={poisson}");
+    }
+
+    #[test]
+    fn clustering_raises_yield() {
+        // More clustered defects (small alpha) waste fewer dies.
+        let area = 2.0;
+        let d0 = 0.3;
+        let clustered = YieldModel::NegBinomial { d0, alpha: 1.0 }.yield_for(area);
+        let spread = YieldModel::NegBinomial { d0, alpha: 100.0 }.yield_for(area);
+        assert!(clustered > spread);
+    }
+
+    #[test]
+    fn chiplets_beat_monolithic_on_murphy() {
+        // The Fig-2 chiplet argument: 4 dies of area A/4 yield better than
+        // one die of area A, so good-silicon carbon per cm² is lower.
+        let m = YieldModel::Murphy { d0: 0.15 };
+        let mono = m.yield_for(8.0);
+        let chiplet = m.yield_for(2.0);
+        assert!(chiplet > mono * 1.3);
+    }
+
+    #[test]
+    fn gross_die_per_wafer_sane() {
+        // ~100 mm² die on a 300 mm wafer: ~600 gross dies (textbook value).
+        let n = gross_die_per_wafer(300.0, 100.0);
+        assert!((550.0..680.0).contains(&n), "n={n}");
+        // Bigger dies -> fewer.
+        assert!(gross_die_per_wafer(300.0, 400.0) < n / 3.0);
+    }
+
+    #[test]
+    fn gross_die_never_negative() {
+        assert_eq!(gross_die_per_wafer(300.0, 1e6), 0.0);
+    }
+}

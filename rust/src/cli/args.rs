@@ -1,0 +1,151 @@
+//! Tiny argv parser: subcommand + `--key value` / `--flag` options.
+
+use std::collections::BTreeMap;
+
+/// Parse error.
+#[derive(Debug, Clone, PartialEq, thiserror::Error)]
+pub enum CliError {
+    /// An option that expects a value was last on the line.
+    #[error("option --{0} expects a value")]
+    MissingValue(String),
+    /// A value failed to parse as the requested type.
+    #[error("option --{0}: cannot parse '{1}' as {2}")]
+    BadValue(String, String, &'static str),
+}
+
+/// Parsed arguments.
+#[derive(Debug, Clone, Default)]
+pub struct Args {
+    /// First non-option token (the subcommand), if any.
+    pub command: Option<String>,
+    /// `--key value` options.
+    pub options: BTreeMap<String, String>,
+    /// `--flag` booleans (no value).
+    pub flags: Vec<String>,
+    /// Remaining positional tokens after the subcommand.
+    pub positional: Vec<String>,
+}
+
+/// Option names that take a value (everything else after `--` is a flag).
+const VALUED: &[&str] = &[
+    "cluster", "metric", "out", "artifacts", "engine", "seed", "beta", "ratio",
+    "lifetime", "hours", "devices", "days", "workload", "cores", "csv-dir",
+];
+
+impl Args {
+    /// Parse from an iterator of tokens (excluding argv[0]).
+    pub fn parse<I: IntoIterator<Item = String>>(tokens: I) -> Result<Args, CliError> {
+        let mut out = Args::default();
+        let mut it = tokens.into_iter().peekable();
+        while let Some(tok) = it.next() {
+            if let Some(name) = tok.strip_prefix("--") {
+                if VALUED.contains(&name) {
+                    match it.next() {
+                        Some(v) => {
+                            out.options.insert(name.to_string(), v);
+                        }
+                        None => return Err(CliError::MissingValue(name.to_string())),
+                    }
+                } else {
+                    out.flags.push(name.to_string());
+                }
+            } else if out.command.is_none() {
+                out.command = Some(tok);
+            } else {
+                out.positional.push(tok);
+            }
+        }
+        Ok(out)
+    }
+
+    /// Parse the process arguments.
+    pub fn from_env() -> Result<Args, CliError> {
+        Args::parse(std::env::args().skip(1))
+    }
+
+    /// String option with default.
+    pub fn get<'a>(&'a self, key: &str, default: &'a str) -> &'a str {
+        self.options.get(key).map(String::as_str).unwrap_or(default)
+    }
+
+    /// f64 option with default.
+    pub fn get_f64(&self, key: &str, default: f64) -> Result<f64, CliError> {
+        match self.options.get(key) {
+            None => Ok(default),
+            Some(v) => v
+                .parse()
+                .map_err(|_| CliError::BadValue(key.to_string(), v.clone(), "f64")),
+        }
+    }
+
+    /// usize option with default.
+    pub fn get_usize(&self, key: &str, default: usize) -> Result<usize, CliError> {
+        match self.options.get(key) {
+            None => Ok(default),
+            Some(v) => v
+                .parse()
+                .map_err(|_| CliError::BadValue(key.to_string(), v.clone(), "usize")),
+        }
+    }
+
+    /// u64 option with default.
+    pub fn get_u64(&self, key: &str, default: u64) -> Result<u64, CliError> {
+        match self.options.get(key) {
+            None => Ok(default),
+            Some(v) => v
+                .parse()
+                .map_err(|_| CliError::BadValue(key.to_string(), v.clone(), "u64")),
+        }
+    }
+
+    /// Flag presence.
+    pub fn has_flag(&self, name: &str) -> bool {
+        self.flags.iter().any(|f| f == name)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn parse(s: &str) -> Args {
+        Args::parse(s.split_whitespace().map(String::from)).unwrap()
+    }
+
+    #[test]
+    fn subcommand_and_options() {
+        let a = parse("fig7 --cluster 5ai --ratio 0.98 --csv");
+        assert_eq!(a.command.as_deref(), Some("fig7"));
+        assert_eq!(a.get("cluster", "all"), "5ai");
+        assert_eq!(a.get_f64("ratio", 0.0).unwrap(), 0.98);
+        assert!(a.has_flag("csv"));
+        assert!(!a.has_flag("verbose"));
+    }
+
+    #[test]
+    fn defaults_apply() {
+        let a = parse("fig7");
+        assert_eq!(a.get("cluster", "all"), "all");
+        assert_eq!(a.get_usize("devices", 400).unwrap(), 400);
+    }
+
+    #[test]
+    fn positionals_collected() {
+        let a = parse("bench one two --fast three");
+        assert_eq!(a.command.as_deref(), Some("bench"));
+        assert_eq!(a.positional, vec!["one", "two", "three"]);
+        assert!(a.has_flag("fast"));
+    }
+
+    #[test]
+    fn missing_value_is_error() {
+        let e = Args::parse(vec!["x".into(), "--cluster".into()]).unwrap_err();
+        assert_eq!(e, CliError::MissingValue("cluster".into()));
+    }
+
+    #[test]
+    fn bad_value_is_error() {
+        let a = parse("x --ratio notanumber");
+        assert!(matches!(a.get_f64("ratio", 1.0), Err(CliError::BadValue(..))));
+    }
+}

@@ -1,0 +1,8 @@
+//! Minimal command-line parsing (offline substitute for `clap`).
+//!
+//! Supports `binary <subcommand> [--flag] [--key value] [positional…]`
+//! with typed accessors, defaults, and a generated usage string.
+
+mod args;
+
+pub use args::{Args, CliError};

@@ -1,0 +1,11 @@
+//! Minimal JSON support (offline substitute for `serde_json`).
+//!
+//! Used for the artifact manifest (`artifacts/manifest.json`), experiment
+//! configuration files and machine-readable result dumps. Implements the
+//! full JSON grammar (objects, arrays, strings with escapes, numbers,
+//! bools, null) with precise error positions; no serde-style derive —
+//! callers navigate the [`Json`] tree with the typed accessors.
+
+mod json;
+
+pub use json::{parse, Json, JsonError};

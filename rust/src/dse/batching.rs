@@ -1,0 +1,129 @@
+//! Splitting oversized requests across artifact batch variants and
+//! merging the results back in order.
+
+use crate::matrixform::{EvalRequest, EvalResult, NUM_METRICS};
+use crate::runtime::{evaluate, Engine};
+
+/// Largest single-batch size any artifact variant supports.
+pub const MAX_BATCH: usize = 1024;
+/// Small artifact variant, used as the chunk size for mid-sized requests.
+pub const SMALL_BATCH: usize = 128;
+
+/// Padding-aware chunk size: mid-sized requests run as several
+/// small-variant batches instead of one mostly-padding large batch
+/// (measured: 200 configs = 0.36 ms chunked vs 0.90 ms padded to 1024;
+/// ≥~700 configs the large variant wins back — see EXPERIMENTS.md §Perf).
+fn chunk_size(n: usize) -> usize {
+    if n <= SMALL_BATCH || n > MAX_BATCH {
+        // Single small batch, or big sweeps: fill the large variant.
+        if n <= SMALL_BATCH {
+            SMALL_BATCH
+        } else {
+            MAX_BATCH
+        }
+    } else if n <= 4 * SMALL_BATCH {
+        SMALL_BATCH
+    } else {
+        MAX_BATCH
+    }
+}
+
+/// Evaluate a request of any size, chunking across engine calls when the
+/// config count exceeds (or poorly fits) the artifact variants.
+pub fn evaluate_chunked(engine: &mut dyn Engine, req: &EvalRequest) -> crate::Result<EvalResult> {
+    let max_batch = chunk_size(req.configs.len());
+    if req.configs.len() <= max_batch {
+        return evaluate(engine, req);
+    }
+    let mut merged: Option<EvalResult> = None;
+    for chunk in req.configs.chunks(max_batch) {
+        let sub = EvalRequest { configs: chunk.to_vec(), tasks: req.tasks.clone(), ..shallow(req) };
+        let res = evaluate(engine, &sub)?;
+        merged = Some(match merged {
+            None => res,
+            Some(acc) => merge(acc, res),
+        });
+    }
+    Ok(merged.expect("nonempty request"))
+}
+
+fn shallow(req: &EvalRequest) -> EvalRequest {
+    EvalRequest {
+        tasks: req.tasks.clone(),
+        configs: Vec::new(),
+        online: req.online.clone(),
+        qos: req.qos.clone(),
+        ci_use_g_per_j: req.ci_use_g_per_j,
+        lifetime_s: req.lifetime_s,
+        beta: req.beta,
+        p_max_w: req.p_max_w,
+    }
+}
+
+fn merge(a: EvalResult, b: EvalResult) -> EvalResult {
+    assert_eq!(a.t, b.t, "task-count mismatch in merge");
+    let c = a.c + b.c;
+    let mut metrics = vec![0.0f64; NUM_METRICS * c];
+    for row in 0..NUM_METRICS {
+        metrics[row * c..row * c + a.c].copy_from_slice(&a.metrics[row * a.c..(row + 1) * a.c]);
+        metrics[row * c + a.c..(row + 1) * c]
+            .copy_from_slice(&b.metrics[row * b.c..(row + 1) * b.c]);
+    }
+    let mut d_task = a.d_task.clone();
+    d_task.extend_from_slice(&b.d_task);
+    let mut names = a.names.clone();
+    names.extend(b.names.iter().cloned());
+    EvalResult { names, metrics, d_task, c, t: a.t }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::matrixform::{ConfigRow, MetricRow, TaskMatrix};
+    use crate::runtime::HostEngine;
+
+    fn request(c: usize) -> EvalRequest {
+        let tm = TaskMatrix::single_task("t", vec!["k".into()], &[2.0]);
+        EvalRequest {
+            tasks: tm,
+            configs: (0..c)
+                .map(|i| ConfigRow {
+                    name: format!("cfg{i}"),
+                    f_clk: 1e9,
+                    d_k: vec![(i + 1) as f64 * 1e-3],
+                    e_dyn: vec![0.01],
+                    leak_w: 0.0,
+                    c_comp: vec![100.0],
+                })
+                .collect(),
+            online: vec![1.0],
+            qos: vec![f64::INFINITY],
+            ci_use_g_per_j: 1e-4,
+            lifetime_s: 1e6,
+            beta: 1.0,
+            p_max_w: f64::INFINITY,
+        }
+    }
+
+    #[test]
+    fn chunked_matches_unchunked_ordering() {
+        // 2500 configs -> 3 chunks; delays must stay in request order.
+        let req = request(2500);
+        let res = evaluate_chunked(&mut HostEngine::new(), &req).unwrap();
+        assert_eq!(res.c, 2500);
+        for i in [0usize, 1023, 1024, 2047, 2048, 2499] {
+            let d = res.metric(MetricRow::Delay, i);
+            let expect = 2.0 * (i + 1) as f64 * 1e-3;
+            assert!((d - expect).abs() < expect * 1e-5, "i={i} d={d} expect={expect}");
+            assert_eq!(res.names[i], format!("cfg{i}"));
+        }
+    }
+
+    #[test]
+    fn small_requests_take_single_batch() {
+        let req = request(7);
+        let res = evaluate_chunked(&mut HostEngine::new(), &req).unwrap();
+        assert_eq!(res.c, 7);
+        assert_eq!(res.names.len(), 7);
+    }
+}

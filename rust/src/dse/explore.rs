@@ -1,0 +1,159 @@
+//! End-to-end exploration: evaluate a request, apply constraints, extract
+//! optima per figure-of-merit and distribution statistics (the bars, dots
+//! and error bars of Fig 7).
+
+use std::collections::HashMap;
+
+use crate::carbon::MetricKind;
+use crate::matrixform::{EvalRequest, EvalResult, MetricRow};
+use crate::runtime::Engine;
+
+use super::batching::evaluate_chunked;
+
+/// Distribution statistics of the tCDP across feasible designs.
+#[derive(Debug, Clone, Copy)]
+pub struct ExploreStats {
+    /// Lowest (best) tCDP.
+    pub best: f64,
+    /// Mean tCDP.
+    pub mean: f64,
+    /// 5th percentile.
+    pub p5: f64,
+    /// 95th percentile.
+    pub p95: f64,
+    /// Number of feasible designs.
+    pub feasible: usize,
+}
+
+/// Outcome of one exploration run.
+#[derive(Debug, Clone)]
+pub struct ExploreOutcome {
+    /// Raw per-config results.
+    pub result: EvalResult,
+    /// Feasible argmin per figure-of-merit.
+    pub optimal: HashMap<&'static str, usize>,
+    /// tCDP distribution statistics.
+    pub stats: ExploreStats,
+}
+
+/// Map a [`MetricKind`] onto its runtime metrics row.
+pub fn metric_row(kind: MetricKind) -> MetricRow {
+    match kind {
+        MetricKind::Edp => MetricRow::Edp,
+        MetricKind::Cdp => MetricRow::Cdp,
+        MetricKind::Cep => MetricRow::Cep,
+        MetricKind::Ce2p => MetricRow::Ce2p,
+        MetricKind::C2ep => MetricRow::C2ep,
+        MetricKind::Tcdp => MetricRow::Tcdp,
+    }
+}
+
+fn percentile(sorted: &[f64], q: f64) -> f64 {
+    if sorted.is_empty() {
+        return f64::NAN;
+    }
+    let idx = ((sorted.len() - 1) as f64 * q).round() as usize;
+    sorted[idx]
+}
+
+/// Run the exploration.
+pub fn explore(engine: &mut dyn Engine, req: &EvalRequest) -> crate::Result<ExploreOutcome> {
+    let result = evaluate_chunked(engine, req)?;
+
+    let mut optimal = HashMap::new();
+    for kind in MetricKind::ALL {
+        if let Some(idx) = result.argmin_feasible(metric_row(kind)) {
+            optimal.insert(kind.label(), idx);
+        }
+    }
+
+    let feas = result.row(MetricRow::Feasible).to_vec();
+    let tcdp = result.row(MetricRow::Tcdp);
+    let mut feasible_tcdp: Vec<f64> = tcdp
+        .iter()
+        .zip(&feas)
+        .filter(|(_, &f)| f > 0.5)
+        .map(|(&v, _)| v)
+        .collect();
+    feasible_tcdp.sort_by(|a, b| a.total_cmp(b));
+
+    let stats = ExploreStats {
+        best: feasible_tcdp.first().copied().unwrap_or(f64::NAN),
+        mean: if feasible_tcdp.is_empty() {
+            f64::NAN
+        } else {
+            feasible_tcdp.iter().sum::<f64>() / feasible_tcdp.len() as f64
+        },
+        p5: percentile(&feasible_tcdp, 0.05),
+        p95: percentile(&feasible_tcdp, 0.95),
+        feasible: feasible_tcdp.len(),
+    };
+
+    Ok(ExploreOutcome { result, optimal, stats })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::matrixform::{ConfigRow, TaskMatrix};
+    use crate::runtime::HostEngine;
+
+    fn request() -> EvalRequest {
+        let tm = TaskMatrix::single_task("t", vec!["k".into()], &[10.0]);
+        // Three designs: cheap-slow, balanced, fast-expensive.
+        let mk = |name: &str, d: f64, e: f64, emb: f64| ConfigRow {
+            name: name.into(),
+            f_clk: 1e9,
+            d_k: vec![d],
+            e_dyn: vec![e],
+            leak_w: 0.0,
+            c_comp: vec![emb],
+        };
+        EvalRequest {
+            tasks: tm,
+            configs: vec![
+                mk("cheap", 8e-3, 0.02, 20.0),
+                mk("balanced", 3e-3, 0.03, 400.0),
+                mk("fast", 1e-3, 0.06, 1600.0),
+            ],
+            online: vec![1.0],
+            qos: vec![f64::INFINITY],
+            ci_use_g_per_j: 1e-2,
+            lifetime_s: 10.0,
+            beta: 1.0,
+            p_max_w: f64::INFINITY,
+        }
+    }
+
+    #[test]
+    fn optima_and_stats_populated() {
+        let out = explore(&mut HostEngine::new(), &request()).unwrap();
+        assert_eq!(out.stats.feasible, 3);
+        assert!(out.stats.best <= out.stats.mean);
+        assert!(out.stats.p5 <= out.stats.p95);
+        for kind in MetricKind::ALL {
+            assert!(out.optimal.contains_key(kind.label()), "{} missing", kind.label());
+        }
+    }
+
+    #[test]
+    fn edp_and_tcdp_optima_can_differ() {
+        // The Fig 1 phenomenon: fastest design wins EDP; carbon-aware
+        // metrics prefer the cheaper silicon.
+        let out = explore(&mut HostEngine::new(), &request()).unwrap();
+        let edp_idx = out.optimal["EDP"];
+        assert_eq!(out.result.names[edp_idx], "fast");
+        let cdp_idx = out.optimal["CDP"];
+        assert_ne!(out.result.names[cdp_idx], "fast");
+    }
+
+    #[test]
+    fn infeasible_configs_excluded_from_stats() {
+        let mut req = request();
+        req.qos = vec![0.05]; // cheap (0.08) fails QoS
+        let out = explore(&mut HostEngine::new(), &req).unwrap();
+        assert_eq!(out.stats.feasible, 2);
+        let best_idx = out.optimal["tCDP"];
+        assert_ne!(out.result.names[best_idx], "cheap");
+    }
+}

@@ -1,0 +1,32 @@
+//! The design-space-exploration coordinator (paper §3, §5.1–§5.3).
+//!
+//! This is the system's Layer-3 contribution: it enumerates the hardware
+//! design space, profiles every candidate on the target workloads with the
+//! accelerator simulator, assembles §3.3 matrix batches, streams them
+//! through the XLA runtime (splitting across artifact variants when the
+//! space exceeds one batch), applies the §3.2 constraints, and extracts
+//! optimal designs, distribution statistics and Pareto fronts.
+//!
+//! * [`space`]    — the 11×11 MAC×SRAM grid (121 configs) and named points;
+//! * [`profile`]  — accelerator-simulator profiling → [`ConfigRow`]s
+//!   (parallelized with scoped threads; the simulator is the expensive
+//!   part of batch assembly);
+//! * [`explore`]  — end-to-end exploration for a workload cluster and
+//!   carbon scenario; summary statistics (best/mean/p5/p95);
+//! * [`batching`] — request splitting/merging across batch variants;
+//! * [`pareto`]   — β sweeps and Pareto-front extraction (Table 1);
+//! * [`scenario`] — embodied-ratio ↔ operational-lifetime calibration
+//!   (the 98 %/65 %/25 % scenarios of Fig 7).
+
+pub mod batching;
+pub mod explore;
+pub mod pareto;
+pub mod profile;
+pub mod scenario;
+pub mod space;
+
+pub use explore::{explore, ExploreOutcome, ExploreStats};
+pub use pareto::{beta_sweep, pareto_front, BetaPoint};
+pub use profile::{profile_configs, profiles_to_rows};
+pub use scenario::{lifetime_for_ratio, Scenario};
+pub use space::{design_grid, DesignPoint};

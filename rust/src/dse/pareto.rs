@@ -1,0 +1,167 @@
+//! β sweeps and Pareto-front extraction (paper §3.2, Table 1).
+//!
+//! When the relative scaling between embodied and operational carbon is
+//! uncertain, the paper sweeps β over `(C_op + β·C_emb)·D` and reads the
+//! carbon-efficient optimum off the Pareto front of
+//! `F₁ = C_op·D` versus `F₂ = C_emb·D`.
+
+use crate::matrixform::{EvalRequest, MetricRow};
+use crate::runtime::Engine;
+
+use super::batching::evaluate_chunked;
+
+/// One β sample of the sweep.
+#[derive(Debug, Clone)]
+pub struct BetaPoint {
+    /// The β value.
+    pub beta: f64,
+    /// Index of the scalarized-optimal feasible design.
+    pub best_idx: usize,
+    /// Name of that design.
+    pub best_name: String,
+    /// F₁ = C_op·D of the chosen design.
+    pub f1: f64,
+    /// F₂ = C_emb·D of the chosen design.
+    pub f2: f64,
+}
+
+/// Sweep β and record the scalarized optimum at each point.
+pub fn beta_sweep(
+    engine: &mut dyn Engine,
+    base: &EvalRequest,
+    betas: &[f64],
+) -> crate::Result<Vec<BetaPoint>> {
+    let mut out = Vec::with_capacity(betas.len());
+    for &beta in betas {
+        let mut req = base.clone();
+        req.beta = beta;
+        let res = evaluate_chunked(engine, &req)?;
+        let idx = res
+            .argmin_feasible(MetricRow::Tcdp)
+            .ok_or_else(|| anyhow::anyhow!("no feasible design at beta={beta}"))?;
+        let c_op = res.metric(MetricRow::COp, idx);
+        let c_emb = res.metric(MetricRow::CEmb, idx);
+        let d = res.metric(MetricRow::Delay, idx);
+        out.push(BetaPoint {
+            beta,
+            best_idx: idx,
+            best_name: res.names[idx].clone(),
+            f1: c_op * d,
+            f2: c_emb * d,
+        });
+    }
+    Ok(out)
+}
+
+/// Indices of the non-dominated points of a `(f1, f2)` set
+/// (minimization in both objectives; ties kept once).
+pub fn pareto_front(points: &[(f64, f64)]) -> Vec<usize> {
+    let mut idx: Vec<usize> = (0..points.len()).collect();
+    // Sort by f1 asc, then f2 asc; scan keeping strictly improving f2.
+    idx.sort_by(|&a, &b| {
+        points[a]
+            .0
+            .total_cmp(&points[b].0)
+            .then(points[a].1.total_cmp(&points[b].1))
+    });
+    let mut front = Vec::new();
+    let mut best_f2 = f64::INFINITY;
+    for &i in &idx {
+        if points[i].1 < best_f2 {
+            front.push(i);
+            best_f2 = points[i].1;
+        }
+    }
+    front
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::matrixform::{ConfigRow, TaskMatrix};
+    use crate::runtime::HostEngine;
+    use crate::testkit::{forall, Rng};
+
+    #[test]
+    fn pareto_front_basic() {
+        let pts = [(1.0, 5.0), (2.0, 2.0), (3.0, 3.0), (5.0, 1.0), (1.5, 4.0)];
+        let front = pareto_front(&pts);
+        // (3,3) dominated by (2,2); others on the front.
+        assert_eq!(front, vec![0, 4, 1, 3]);
+    }
+
+    #[test]
+    fn prop_front_has_no_dominated_point() {
+        forall(
+            |r: &mut Rng| {
+                (0..r.below(20) + 2)
+                    .map(|_| (r.range(0.0, 10.0), r.range(0.0, 10.0)))
+                    .collect::<Vec<_>>()
+            },
+            |pts| {
+                let front = pareto_front(pts);
+                front.iter().all(|&i| {
+                    !pts.iter().enumerate().any(|(jdx, p)| {
+                        jdx != i
+                            && p.0 <= pts[i].0
+                            && p.1 <= pts[i].1
+                            && (p.0 < pts[i].0 || p.1 < pts[i].1)
+                    })
+                })
+            },
+        );
+    }
+
+    #[test]
+    fn prop_every_non_front_point_is_dominated() {
+        forall(
+            |r: &mut Rng| {
+                (0..r.below(15) + 2)
+                    .map(|_| (r.range(0.0, 4.0).round(), r.range(0.0, 4.0).round()))
+                    .collect::<Vec<_>>()
+            },
+            |pts| {
+                let front = pareto_front(pts);
+                (0..pts.len()).all(|i| {
+                    front.contains(&i)
+                        || pts.iter().any(|p| {
+                            p.0 <= pts[i].0 && p.1 <= pts[i].1 && (p.0 < pts[i].0 || p.1 < pts[i].1)
+                        })
+                        // Duplicate of a front point also counts as covered.
+                        || front.iter().any(|&f| pts[f] == pts[i])
+                })
+            },
+        );
+    }
+
+    #[test]
+    fn beta_sweep_walks_from_operational_to_embodied_optimum() {
+        // Design "eff" has low operational carbon, "lean" low embodied:
+        // β→0 must pick "eff", large β must pick "lean" (Table 1 limits).
+        let tm = TaskMatrix::single_task("t", vec!["k".into()], &[1.0]);
+        let mk = |name: &str, e: f64, emb: f64| ConfigRow {
+            name: name.into(),
+            f_clk: 1e9,
+            d_k: vec![1e-3],
+            e_dyn: vec![e],
+            leak_w: 0.0,
+            c_comp: vec![emb],
+        };
+        let base = EvalRequest {
+            tasks: tm,
+            configs: vec![mk("eff", 0.01, 1000.0), mk("lean", 0.10, 50.0)],
+            online: vec![1.0],
+            qos: vec![f64::INFINITY],
+            ci_use_g_per_j: 1.0,
+            lifetime_s: 1.0,
+            beta: 1.0,
+            p_max_w: f64::INFINITY,
+        };
+        let sweep =
+            beta_sweep(&mut HostEngine::new(), &base, &[0.0, 0.01, 1.0, 100.0]).unwrap();
+        assert_eq!(sweep[0].best_name, "eff");
+        assert_eq!(sweep.last().unwrap().best_name, "lean");
+        // F2 (embodied side) decreases as beta grows.
+        assert!(sweep[0].f2 >= sweep.last().unwrap().f2);
+    }
+}

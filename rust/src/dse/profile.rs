@@ -1,0 +1,128 @@
+//! Profiling candidate configurations on workload kernels and converting
+//! simulator output into §3.3 matrix rows.
+//!
+//! This is the expensive half of batch assembly (the Fig 6 simulator runs
+//! once per config × kernel), so it fans out across scoped threads.
+
+use crate::accel::{network, simulate, AcceleratorConfig, KernelProfile, Workload};
+use crate::carbon::FabGrid;
+use crate::matrixform::ConfigRow;
+
+/// Profile every `(config, workload)` pair. Returns `profiles[config][kernel]`.
+pub fn profile_configs(
+    configs: &[AcceleratorConfig],
+    workloads: &[Workload],
+) -> Vec<Vec<KernelProfile>> {
+    // Build each network once (they are immutable inputs to all configs).
+    let graphs: Vec<_> = workloads.iter().map(|&w| network(w)).collect();
+
+    let n_threads = std::thread::available_parallelism().map(|n| n.get()).unwrap_or(4);
+    let chunk = configs.len().div_ceil(n_threads).max(1);
+
+    let mut out: Vec<Vec<KernelProfile>> = Vec::with_capacity(configs.len());
+    std::thread::scope(|s| {
+        let mut handles = Vec::new();
+        for chunk_cfgs in configs.chunks(chunk) {
+            let graphs = &graphs;
+            handles.push(s.spawn(move || {
+                chunk_cfgs
+                    .iter()
+                    .map(|cfg| graphs.iter().map(|g| simulate(cfg, g)).collect::<Vec<_>>())
+                    .collect::<Vec<_>>()
+            }));
+        }
+        for h in handles {
+            out.extend(h.join().expect("profiling thread panicked"));
+        }
+    });
+    out
+}
+
+/// Convert profiles into [`ConfigRow`]s.
+///
+/// Component vector layout (J = 3): `[logic die, SRAM, base/IO]` — the
+/// provisioning knob for accelerators distinguishes compute silicon from
+/// memory silicon (Fig 15's K/M axes).
+pub fn profiles_to_rows(
+    configs: &[AcceleratorConfig],
+    profiles: &[Vec<KernelProfile>],
+    fab: FabGrid,
+) -> Vec<ConfigRow> {
+    assert_eq!(configs.len(), profiles.len());
+    configs
+        .iter()
+        .zip(profiles)
+        .map(|(cfg, profs)| {
+            let total = cfg.embodied_g(fab);
+            // Split by area share.
+            let logic_mm2 = cfg.num_macs as f64 * crate::accel::config::MAC_AREA_MM2_7NM;
+            let sram_mm2 = cfg.sram_area_mm2();
+            let base_mm2 = crate::accel::config::BASE_AREA_MM2;
+            let sum = logic_mm2 + sram_mm2 + base_mm2;
+            let c_comp = vec![
+                total * logic_mm2 / sum,
+                total * sram_mm2 / sum,
+                total * base_mm2 / sum,
+            ];
+            ConfigRow {
+                name: cfg.name.clone(),
+                f_clk: cfg.freq_hz,
+                d_k: profs.iter().map(|p| p.delay_s).collect(),
+                e_dyn: profs.iter().map(|p| p.dynamic_j).collect(),
+                leak_w: cfg.leakage_w(),
+                c_comp,
+            }
+        })
+        .collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::accel::production_accelerators;
+
+    #[test]
+    fn profiles_cover_grid() {
+        let configs = production_accelerators().to_vec();
+        let wls = [Workload::Rn18, Workload::Sr256];
+        let profs = profile_configs(&configs, &wls);
+        assert_eq!(profs.len(), 4);
+        assert_eq!(profs[0].len(), 2);
+        for row in &profs {
+            for p in row {
+                assert!(p.delay_s > 0.0 && p.energy_j() > 0.0);
+            }
+        }
+    }
+
+    #[test]
+    fn parallel_profiling_matches_serial() {
+        let configs = production_accelerators().to_vec();
+        let wls = [Workload::Rn50];
+        let par = profile_configs(&configs, &wls);
+        for (cfg, row) in configs.iter().zip(&par) {
+            let serial = simulate(cfg, &network(Workload::Rn50));
+            assert_eq!(row[0], serial, "{} parallel != serial", cfg.name);
+        }
+    }
+
+    #[test]
+    fn rows_preserve_embodied_total() {
+        let configs = production_accelerators().to_vec();
+        let wls = [Workload::Rn18];
+        let profs = profile_configs(&configs, &wls);
+        let rows = profiles_to_rows(&configs, &profs, FabGrid::Coal);
+        for (cfg, row) in configs.iter().zip(&rows) {
+            let total: f64 = row.c_comp.iter().sum();
+            assert!(
+                (total - cfg.embodied_g(FabGrid::Coal)).abs() < 1e-6,
+                "{}: {} vs {}",
+                cfg.name,
+                total,
+                cfg.embodied_g(FabGrid::Coal)
+            );
+            assert_eq!(row.d_k.len(), 1);
+            assert!(row.leak_w > 0.0);
+        }
+    }
+}

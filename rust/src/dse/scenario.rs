@@ -1,0 +1,164 @@
+//! Carbon scenarios: the 98 % / 65 % / 25 % embodied-to-total ratios of
+//! Fig 7, realized as operational-lifetime calibrations.
+//!
+//! The paper holds "same hardware lifetime and utilization" within each
+//! sub-figure and varies the embodied share across sub-figures. Given the
+//! profiled rows, [`lifetime_for_ratio`] solves for the operational
+//! lifetime that produces a target embodied share for the *average*
+//! design, so a whole exploration runs under a consistent scenario.
+
+use crate::matrixform::{ConfigRow, TaskMatrix};
+
+/// One carbon scenario for an exploration run.
+#[derive(Debug, Clone)]
+pub struct Scenario {
+    /// Display name ("98% embodied").
+    pub name: String,
+    /// Use-phase carbon intensity, g/J.
+    pub ci_use_g_per_j: f64,
+    /// Operational lifetime (LT − D_idle), s.
+    pub lifetime_s: f64,
+    /// β for the scalarized objective.
+    pub beta: f64,
+}
+
+/// Per-config task totals under a task matrix: `(energy_j, delay_s)`.
+pub fn config_totals(row: &ConfigRow, tasks: &TaskMatrix) -> (f64, f64) {
+    let k = tasks.num_kernels();
+    assert_eq!(row.d_k.len(), k);
+    let mut energy = 0.0;
+    let mut delay = 0.0;
+    for t in 0..tasks.num_tasks() {
+        for ki in 0..k {
+            let n = tasks.get(t, ki);
+            if n == 0.0 {
+                continue;
+            }
+            delay += n * row.d_k[ki];
+            energy += n * (row.leak_w * row.d_k[ki] + row.e_dyn[ki]);
+        }
+    }
+    (energy, delay)
+}
+
+/// Solve for the operational lifetime (s) that makes embodied carbon a
+/// `ratio` share of total life-cycle carbon for the average config:
+///
+/// `C_emb/(C_emb+C_op) = r  ⇒  LT = Σemb·D·(1−r) / (r·CI·E)` (averaged).
+pub fn lifetime_for_ratio(
+    rows: &[ConfigRow],
+    tasks: &TaskMatrix,
+    ratio: f64,
+    ci_use_g_per_j: f64,
+) -> f64 {
+    assert!((0.0..1.0).contains(&ratio) && ratio > 0.0, "ratio must be in (0,1)");
+    assert!(!rows.is_empty());
+    let mut acc = 0.0;
+    for row in rows {
+        let (energy, delay) = config_totals(row, tasks);
+        let emb: f64 = row.c_comp.iter().sum();
+        if energy > 0.0 {
+            acc += emb * delay / (ci_use_g_per_j * energy);
+        }
+    }
+    let avg = acc / rows.len() as f64;
+    avg * (1.0 - ratio) / ratio
+}
+
+/// The three Fig 7 scenarios for a profiled design space.
+pub fn fig7_scenarios(rows: &[ConfigRow], tasks: &TaskMatrix, ci_use_g_per_j: f64) -> Vec<Scenario> {
+    [0.98, 0.65, 0.25]
+        .into_iter()
+        .map(|r| Scenario {
+            name: format!("{:.0}% embodied", r * 100.0),
+            ci_use_g_per_j,
+            lifetime_s: lifetime_for_ratio(rows, tasks, r, ci_use_g_per_j),
+            beta: 1.0,
+        })
+        .collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn rows() -> (Vec<ConfigRow>, TaskMatrix) {
+        let tasks = TaskMatrix::single_task("t", vec!["k".into()], &[100.0]);
+        let rows = vec![
+            ConfigRow {
+                name: "a".into(),
+                f_clk: 1e9,
+                d_k: vec![1e-3],
+                e_dyn: vec![0.05],
+                leak_w: 0.01,
+                c_comp: vec![400.0],
+            },
+            ConfigRow {
+                name: "b".into(),
+                f_clk: 1e9,
+                d_k: vec![5e-4],
+                e_dyn: vec![0.08],
+                leak_w: 0.02,
+                c_comp: vec![900.0],
+            },
+        ];
+        (rows, tasks)
+    }
+
+    #[test]
+    fn totals_hand_check() {
+        let (rows, tasks) = rows();
+        let (e, d) = config_totals(&rows[0], &tasks);
+        assert!((d - 0.1).abs() < 1e-12);
+        let expect_e = 100.0 * (0.01 * 1e-3 + 0.05);
+        assert!((e - expect_e).abs() < 1e-12);
+    }
+
+    #[test]
+    fn ratio_calibration_is_self_consistent() {
+        let (rows, tasks) = rows();
+        let ci = 1.2e-4;
+        for target in [0.98, 0.65, 0.25] {
+            let lt = lifetime_for_ratio(&rows, &tasks, target, ci);
+            // Recompute the achieved average ratio at that lifetime.
+            let mut acc = 0.0;
+            for row in &rows {
+                let (e, d) = config_totals(row, &tasks);
+                let emb: f64 = row.c_comp.iter().sum();
+                let c_emb = emb * d / lt;
+                let c_op = ci * e;
+                acc += c_emb / (c_emb + c_op);
+            }
+            let achieved = acc / rows.len() as f64;
+            // Averaging across configs skews slightly; stay within a few %.
+            assert!(
+                (achieved - target).abs() < 0.12,
+                "target {target} achieved {achieved} (lt={lt})"
+            );
+        }
+    }
+
+    #[test]
+    fn longer_lifetime_means_lower_embodied_share() {
+        let (rows, tasks) = rows();
+        let lt98 = lifetime_for_ratio(&rows, &tasks, 0.98, 1e-4);
+        let lt25 = lifetime_for_ratio(&rows, &tasks, 0.25, 1e-4);
+        assert!(lt98 < lt25, "98% embodied needs shorter op lifetime");
+    }
+
+    #[test]
+    fn fig7_scenarios_are_ordered() {
+        let (rows, tasks) = rows();
+        let sc = fig7_scenarios(&rows, &tasks, 1e-4);
+        assert_eq!(sc.len(), 3);
+        assert!(sc[0].lifetime_s < sc[1].lifetime_s);
+        assert!(sc[1].lifetime_s < sc[2].lifetime_s);
+    }
+
+    #[test]
+    #[should_panic(expected = "ratio")]
+    fn bad_ratio_rejected() {
+        let (rows, tasks) = rows();
+        lifetime_for_ratio(&rows, &tasks, 1.5, 1e-4);
+    }
+}

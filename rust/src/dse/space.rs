@@ -1,0 +1,99 @@
+//! Design-space enumeration: the paper's 121-point MAC×SRAM grid.
+
+use crate::accel::AcceleratorConfig;
+
+/// One grid point.
+#[derive(Debug, Clone)]
+pub struct DesignPoint {
+    /// Grid label ("K0512_M2.0").
+    pub label: String,
+    /// MAC count.
+    pub num_macs: u32,
+    /// SRAM bytes.
+    pub sram_bytes: u64,
+    /// The full configuration.
+    pub config: AcceleratorConfig,
+}
+
+/// Half-octave MAC axis: 128 … 4096, 11 points.
+pub fn mac_axis() -> Vec<u32> {
+    let mut v = Vec::with_capacity(11);
+    let mut x = 128.0f64;
+    for _ in 0..11 {
+        v.push(x.round() as u32);
+        x *= std::f64::consts::SQRT_2;
+    }
+    v
+}
+
+/// Half-octave SRAM axis: 0.5 MB … 16 MB, 11 points.
+pub fn sram_axis() -> Vec<u64> {
+    let mut v = Vec::with_capacity(11);
+    let mut x = 0.5f64;
+    for _ in 0..11 {
+        v.push((x * 1024.0 * 1024.0).round() as u64);
+        x *= std::f64::consts::SQRT_2;
+    }
+    v
+}
+
+/// The full 11×11 grid (121 candidate accelerators), MAC-major order.
+pub fn design_grid() -> Vec<DesignPoint> {
+    let mut out = Vec::with_capacity(121);
+    for &m in &mac_axis() {
+        for &s in &sram_axis() {
+            let mb = s as f64 / (1024.0 * 1024.0);
+            let label = format!("K{m:04}_M{mb:.1}");
+            out.push(DesignPoint {
+                label: label.clone(),
+                num_macs: m,
+                sram_bytes: s,
+                config: AcceleratorConfig::new_2d(&label, m, s),
+            });
+        }
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn grid_has_121_points() {
+        assert_eq!(design_grid().len(), 121);
+        assert_eq!(mac_axis().len(), 11);
+        assert_eq!(sram_axis().len(), 11);
+    }
+
+    #[test]
+    fn axes_span_paper_ranges() {
+        let m = mac_axis();
+        assert_eq!(m[0], 128);
+        assert!((4000..4200).contains(&m[10]), "mac max = {}", m[10]);
+        let s = sram_axis();
+        assert_eq!(s[0], 512 * 1024);
+        assert!((s[10] as f64 / (1024.0 * 1024.0) - 16.0).abs() < 0.5);
+    }
+
+    #[test]
+    fn labels_are_unique() {
+        let grid = design_grid();
+        let mut labels: Vec<&str> = grid.iter().map(|p| p.label.as_str()).collect();
+        labels.sort_unstable();
+        labels.dedup();
+        assert_eq!(labels.len(), 121);
+    }
+
+    #[test]
+    fn grid_is_monotone_in_embodied() {
+        // More silicon -> more embodied carbon along both axes.
+        use crate::carbon::FabGrid;
+        let grid = design_grid();
+        let e = |i: usize| grid[i].config.embodied_g(FabGrid::Coal);
+        // Same MACs, growing SRAM: indices 0..11.
+        assert!(e(10) > e(0));
+        // Same SRAM, growing MACs: stride 11.
+        assert!(e(110) > e(0));
+    }
+}

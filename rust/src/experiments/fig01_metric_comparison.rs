@@ -1,0 +1,78 @@
+//! Fig 1: the metric-choice problem — EDP/CDP vs CEP/CE²P/C²EP pick
+//! different accelerators among the four production designs.
+
+use crate::accel::{production_accelerators, Workload};
+use crate::carbon::MetricKind;
+use crate::dse::explore;
+use crate::report::Table;
+
+use super::common::{whole_life_request, Ctx};
+
+/// Fig 1 data: per metric, the optimal accelerator and the normalized
+/// per-accelerator values.
+pub struct Fig01 {
+    /// Accelerator names (A-1..A-4).
+    pub names: Vec<String>,
+    /// `(metric label, normalized values, optimal index)`.
+    pub metrics: Vec<(&'static str, Vec<f64>, usize)>,
+    /// Rendered table.
+    pub table: Table,
+}
+
+/// Run Fig 1 over the full Table 3 kernel suite at a one-million-inference
+/// operational life.
+pub fn run(ctx: &mut Ctx) -> crate::Result<Fig01> {
+    let configs = production_accelerators().to_vec();
+    let req = whole_life_request(&configs, &Workload::ALL, 1e6);
+    let out = explore(ctx.engine.as_mut(), &req)?;
+
+    let names: Vec<String> = out.result.names.clone();
+    let mut table = Table::new(
+        "Fig 1 — accelerator ranking per figure-of-merit (normalized to best; * = optimal)",
+        &["metric", &names[0], &names[1], &names[2], &names[3]],
+    );
+    let mut metrics = Vec::new();
+    for kind in MetricKind::ALL {
+        let row = out.result.row(crate::dse::explore::metric_row(kind)).to_vec();
+        let best_idx = out.optimal[kind.label()];
+        let best = row[best_idx];
+        let norm: Vec<f64> = row.iter().map(|v| v / best).collect();
+        let mut cells = vec![kind.label().to_string()];
+        for (i, v) in norm.iter().enumerate() {
+            let star = if i == best_idx { "*" } else { "" };
+            cells.push(format!("{v:.2}{star}"));
+        }
+        table.row(&cells);
+        metrics.push((kind.label(), norm, best_idx));
+    }
+    Ok(Fig01 { names, metrics, table })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn optimal_name(f: &Fig01, metric: &str) -> String {
+        let (_, _, idx) = f.metrics.iter().find(|(m, _, _)| *m == metric).unwrap();
+        f.names[*idx].clone()
+    }
+
+    #[test]
+    fn fig1_optima_match_paper() {
+        // Paper: "Accelerator A-2 is EDP and CDP optimal; A-1 is CEP,
+        // CE2P, and C2EP optimal."
+        let f = run(&mut Ctx::host()).unwrap();
+        assert_eq!(optimal_name(&f, "EDP"), "A-2");
+        assert_eq!(optimal_name(&f, "CDP"), "A-2");
+        assert_eq!(optimal_name(&f, "CEP"), "A-1");
+        assert_eq!(optimal_name(&f, "CE2P"), "A-1");
+        assert_eq!(optimal_name(&f, "C2EP"), "A-1");
+    }
+
+    #[test]
+    fn table_has_six_metric_rows() {
+        let f = run(&mut Ctx::host()).unwrap();
+        assert_eq!(f.metrics.len(), 6);
+        assert_eq!(f.table.len(), 6);
+    }
+}

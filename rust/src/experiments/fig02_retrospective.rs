@@ -1,0 +1,103 @@
+//! Fig 2: retrospective CPU/SoC carbon analysis with EDP, CDP, CEP
+//! (normalized to E5-2670 / Snapdragon-835, stars at metric optima).
+
+use crate::carbon::metrics::argmin;
+use crate::carbon::MetricKind;
+use crate::report::Table;
+use crate::soc::{mobile_socs, server_cpus};
+
+/// One Fig 2 panel.
+pub struct Fig02Panel {
+    /// Part names.
+    pub names: Vec<String>,
+    /// `(metric, normalized values, optimal index)`.
+    pub metrics: Vec<(&'static str, Vec<f64>, usize)>,
+    /// Rendered table.
+    pub table: Table,
+}
+
+const PANEL_METRICS: [MetricKind; 3] = [MetricKind::Edp, MetricKind::Cdp, MetricKind::Cep];
+
+fn panel(
+    title: &str,
+    names: Vec<String>,
+    inputs: Vec<crate::carbon::MetricInputs>,
+    normalize_to: &str,
+) -> Fig02Panel {
+    let ref_idx = names.iter().position(|n| n == normalize_to).expect("norm reference");
+    let mut headers: Vec<&str> = vec!["metric"];
+    let name_strs: Vec<String> = names.clone();
+    for n in &name_strs {
+        headers.push(n);
+    }
+    let mut table = Table::new(title, &headers);
+    let mut metrics = Vec::new();
+    for kind in PANEL_METRICS {
+        let vals: Vec<f64> = inputs.iter().map(|i| kind.value(&i.metrics())).collect();
+        let best = argmin(&vals).unwrap();
+        let norm: Vec<f64> = vals.iter().map(|v| v / vals[ref_idx]).collect();
+        let mut cells = vec![kind.label().to_string()];
+        for (i, v) in norm.iter().enumerate() {
+            cells.push(format!("{v:.3}{}", if i == best { "*" } else { "" }));
+        }
+        table.row(&cells);
+        metrics.push((kind.label(), norm, best));
+    }
+    Fig02Panel { names, metrics, table }
+}
+
+/// Fig 2(a): server CPUs 2012–2021.
+pub fn run_cpus() -> Fig02Panel {
+    let cpus = server_cpus();
+    let names: Vec<String> = cpus.iter().map(|c| c.name.to_string()).collect();
+    let inputs: Vec<_> = cpus.iter().map(|c| c.metric_inputs(1.0)).collect();
+    panel("Fig 2a — server CPUs (normalized to E5-2670)", names, inputs, "E5-2670")
+}
+
+/// Fig 2(b): Snapdragon SoCs 2016–2020.
+pub fn run_socs() -> Fig02Panel {
+    let socs = mobile_socs();
+    let names: Vec<String> = socs.iter().map(|s| s.name.to_string()).collect();
+    let inputs: Vec<_> = socs.iter().map(|s| s.metric_inputs(1.0)).collect();
+    panel(
+        "Fig 2b — Snapdragon SoCs (normalized to Snapdragon-835)",
+        names,
+        inputs,
+        "Snapdragon-835",
+    )
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn star(p: &Fig02Panel, metric: &str) -> String {
+        let (_, _, idx) = p.metrics.iter().find(|(m, _, _)| *m == metric).unwrap();
+        p.names[*idx].clone()
+    }
+
+    #[test]
+    fn cpu_stars_match_paper() {
+        let p = run_cpus();
+        assert_eq!(star(&p, "EDP"), "EPYC-7702");
+        assert_eq!(star(&p, "CDP"), "E5-2680");
+        assert_eq!(star(&p, "CEP"), "E-2234");
+    }
+
+    #[test]
+    fn soc_stars_match_paper() {
+        let p = run_socs();
+        assert_eq!(star(&p, "EDP"), "Snapdragon-865");
+        assert_eq!(star(&p, "CDP"), "Snapdragon-835");
+        assert_eq!(star(&p, "CEP"), "Snapdragon-855");
+    }
+
+    #[test]
+    fn normalization_reference_is_one() {
+        let p = run_cpus();
+        let ref_idx = p.names.iter().position(|n| n == "E5-2670").unwrap();
+        for (_, norm, _) in &p.metrics {
+            assert!((norm[ref_idx] - 1.0).abs() < 1e-12);
+        }
+    }
+}

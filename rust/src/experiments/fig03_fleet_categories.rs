@@ -1,0 +1,50 @@
+//! Fig 3: top-100 VR app categorization and top-10 compute-cycle share,
+//! from the synthetic fleet trace (DESIGN.md §4 substitution).
+
+use crate::report::Table;
+use crate::workloads::{generate_fleet, FleetConfig, FleetSummary};
+
+/// Fig 3 output.
+pub struct Fig03 {
+    /// The aggregated fleet.
+    pub summary: FleetSummary,
+    /// Rendered table.
+    pub table: Table,
+}
+
+/// Run the fleet aggregation.
+pub fn run(cfg: &FleetConfig) -> Fig03 {
+    let summary = generate_fleet(cfg);
+    let mut table = Table::new(
+        "Fig 3 — app category share of fleet compute cycles",
+        &["category", "cycle share"],
+    );
+    for (label, share) in ["G", "SG", "B", "M"].iter().zip(summary.category_share.iter()) {
+        table.row(&[label.to_string(), format!("{:.1}%", share * 100.0)]);
+    }
+    table.row(&["top-10 apps".into(), format!("{:.1}%", summary.top10_cycle_share * 100.0)]);
+    Fig03 { summary, table }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn top10_share_exceeds_85pct() {
+        let f = run(&FleetConfig::default());
+        assert!(
+            f.summary.top10_cycle_share > 0.82,
+            "top-10 share = {}",
+            f.summary.top10_cycle_share
+        );
+    }
+
+    #[test]
+    fn gaming_then_social() {
+        let f = run(&FleetConfig::default());
+        let [g, sg, ..] = f.summary.category_share;
+        assert!(g > sg);
+        assert_eq!(f.table.len(), 5);
+    }
+}

@@ -1,0 +1,108 @@
+//! Fig 4: per-app power vs TDP (p5/p95 bars) and the utilized/unused
+//! embodied-carbon split driven by hardware utilization.
+
+use crate::report::Table;
+use crate::soc::VrSoc;
+use crate::workloads::{generate_fleet, FleetConfig};
+
+/// Per-app Fig 4 row.
+pub struct Fig04Row {
+    /// App name.
+    pub name: String,
+    /// Power as fraction of TDP: (p5, mean, p95).
+    pub power_frac: (f64, f64, f64),
+    /// CPU+GPU embodied carbon attributed as used, g.
+    pub utilized_g: f64,
+    /// Embodied carbon idle/over-provisioned, g.
+    pub unused_g: f64,
+}
+
+/// Fig 4 output.
+pub struct Fig04 {
+    /// Top-10 rows.
+    pub rows: Vec<Fig04Row>,
+    /// Mean unused share across the top 10.
+    pub mean_unused_share: f64,
+    /// Rendered table.
+    pub table: Table,
+}
+
+/// Run Fig 4 from the fleet trace and the Table 5 SoC.
+pub fn run(cfg: &FleetConfig, soc: &VrSoc) -> Fig04 {
+    let fleet = generate_fleet(cfg);
+    let cpu_g = soc.gold_cluster_g() + soc.silver_cluster_g();
+    let gpu_g = soc.gpu_g();
+
+    let mut rows = Vec::new();
+    let mut table = Table::new(
+        "Fig 4 — top-10 app power (fraction of TDP) and embodied split",
+        &["app", "p5", "mean", "p95", "utilized g", "unused g", "unused %"],
+    );
+    let mut unused_acc = 0.0;
+    for a in fleet.apps.iter().take(10) {
+        // Utilization: CPU busy-core share; GPU busy fraction (Fig 4's
+        // "active time of the hardware over the total application runtime").
+        let cpu_util = a.tlp.mean_busy_cores() / 8.0;
+        let utilized = cpu_g * cpu_util + gpu_g * a.gpu_util;
+        let total = cpu_g + gpu_g;
+        let unused = total - utilized;
+        unused_acc += unused / total;
+        table.row(&[
+            a.name.clone(),
+            format!("{:.2}", a.power_frac.0),
+            format!("{:.2}", a.power_frac.1),
+            format!("{:.2}", a.power_frac.2),
+            format!("{utilized:.0}"),
+            format!("{unused:.0}"),
+            format!("{:.0}%", unused / total * 100.0),
+        ]);
+        rows.push(Fig04Row {
+            name: a.name.clone(),
+            power_frac: a.power_frac,
+            utilized_g: utilized,
+            unused_g: unused,
+        });
+    }
+    let mean_unused_share = unused_acc / rows.len() as f64;
+    Fig04 { rows, mean_unused_share, table }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn fig4() -> Fig04 {
+        run(&FleetConfig { devices: 150, days: 10, ..Default::default() }, &VrSoc::default())
+    }
+
+    #[test]
+    fn unused_embodied_exceeds_half() {
+        // Paper §1/§2.2: "over 60%" unused embodied carbon.
+        let f = fig4();
+        assert!(
+            f.mean_unused_share > 0.5,
+            "mean unused share = {}",
+            f.mean_unused_share
+        );
+    }
+
+    #[test]
+    fn power_near_70pct_tdp() {
+        let f = fig4();
+        let mean: f64 = f.rows.iter().map(|r| r.power_frac.1).sum::<f64>() / f.rows.len() as f64;
+        assert!((0.6..0.8).contains(&mean), "mean power frac = {mean}");
+        for r in &f.rows {
+            assert!(r.power_frac.0 <= r.power_frac.1 && r.power_frac.1 <= r.power_frac.2);
+        }
+    }
+
+    #[test]
+    fn split_sums_to_cpu_plus_gpu() {
+        let f = fig4();
+        let soc = VrSoc::default();
+        let total = soc.gold_cluster_g() + soc.silver_cluster_g() + soc.gpu_g();
+        for r in &f.rows {
+            assert!((r.utilized_g + r.unused_g - total).abs() < 1e-6);
+        }
+    }
+}

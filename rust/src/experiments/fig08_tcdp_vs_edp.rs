@@ -1,0 +1,99 @@
+//! Fig 8: carbon-efficiency benefit of designing with tCDP versus the
+//! carbon-oblivious EDP — per cluster, the tCDP of the EDP-chosen design
+//! divided by the tCDP of the tCDP-chosen design (paper: 1.2–6.9×).
+
+use crate::carbon::FabGrid;
+use crate::dse::{design_grid, explore, lifetime_for_ratio, profile_configs, profiles_to_rows};
+use crate::matrixform::MetricRow;
+use crate::report::Table;
+use crate::runtime::Engine;
+use crate::workloads::{cluster_workloads, Cluster};
+
+use super::common::{default_use_grid, rows_request, suite_task};
+
+/// One cluster's Fig 8 bar.
+#[derive(Debug, Clone)]
+pub struct Fig08Row {
+    /// Cluster.
+    pub cluster: Cluster,
+    /// tCDP(EDP-optimal design) / tCDP(tCDP-optimal design).
+    pub gain: f64,
+    /// The two design labels.
+    pub edp_design: String,
+    /// tCDP-chosen design.
+    pub tcdp_design: String,
+}
+
+/// Fig 8 output.
+pub struct Fig08 {
+    /// Per-cluster gains.
+    pub rows: Vec<Fig08Row>,
+    /// Rendered table.
+    pub table: Table,
+}
+
+/// Run at the embodied-dominant scenario (98 % embodied), where the
+/// metric choice matters most.
+pub fn run(engine: &mut dyn Engine) -> crate::Result<Fig08> {
+    let grid = design_grid();
+    let configs: Vec<_> = grid.iter().map(|p| p.config.clone()).collect();
+    let ci = default_use_grid().g_per_joule();
+
+    let all_workloads = cluster_workloads(Cluster::All);
+    let all_profiles = profile_configs(&configs, &all_workloads);
+    let all_rows = profiles_to_rows(&configs, &all_profiles, FabGrid::Coal);
+    let lifetime_s = lifetime_for_ratio(&all_rows, &suite_task(&all_workloads), 0.98, ci);
+
+    let mut rows = Vec::new();
+    let mut table = Table::new(
+        "Fig 8 — tCDP-designed vs EDP-designed carbon efficiency (98% embodied)",
+        &["cluster", "EDP-design", "tCDP-design", "gain x"],
+    );
+    for cluster in Cluster::ALL {
+        let workloads = cluster_workloads(cluster);
+        let crows = if cluster == Cluster::All {
+            all_rows.clone()
+        } else {
+            let profiles = profile_configs(&configs, &workloads);
+            profiles_to_rows(&configs, &profiles, FabGrid::Coal)
+        };
+        let req = rows_request(crows, &workloads, lifetime_s, 1.0);
+        let out = explore(engine, &req)?;
+        let edp_idx = out.optimal["EDP"];
+        let tcdp_idx = out.optimal["tCDP"];
+        let gain = out.result.metric(MetricRow::Tcdp, edp_idx)
+            / out.result.metric(MetricRow::Tcdp, tcdp_idx);
+        table.row(&[
+            cluster.label().to_string(),
+            out.result.names[edp_idx].clone(),
+            out.result.names[tcdp_idx].clone(),
+            format!("{gain:.2}"),
+        ]);
+        rows.push(Fig08Row {
+            cluster,
+            gain,
+            edp_design: out.result.names[edp_idx].clone(),
+            tcdp_design: out.result.names[tcdp_idx].clone(),
+        });
+    }
+    Ok(Fig08 { rows, table })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::experiments::common::Ctx;
+
+    #[test]
+    fn tcdp_designs_beat_edp_designs() {
+        let mut ctx = Ctx::host();
+        let f = run(ctx.engine.as_mut()).unwrap();
+        assert_eq!(f.rows.len(), 5);
+        for r in &f.rows {
+            assert!(r.gain >= 1.0, "{}: gain {} < 1", r.cluster.label(), r.gain);
+        }
+        // Paper range 1.2–6.9x: at least one cluster shows a clear win.
+        let max = f.rows.iter().map(|r| r.gain).fold(0.0f64, f64::max);
+        assert!(max > 1.3, "max gain = {max}");
+    }
+}

@@ -1,0 +1,104 @@
+//! Fig 9: total task delay (all Table 3 kernels) and embodied carbon of
+//! the four production accelerators A-1..A-4.
+
+use crate::accel::{network, production_accelerators, simulate, Workload};
+use crate::carbon::FabGrid;
+use crate::report::Table;
+
+/// One accelerator's Fig 9 row.
+#[derive(Debug, Clone)]
+pub struct Fig09Row {
+    /// Name (A-1..A-4).
+    pub name: String,
+    /// Total delay over the full kernel suite, s.
+    pub total_delay_s: f64,
+    /// Total suite energy, J.
+    pub total_energy_j: f64,
+    /// Embodied carbon, g.
+    pub embodied_g: f64,
+}
+
+/// Fig 9 output.
+pub struct Fig09 {
+    /// A-1..A-4 rows.
+    pub rows: Vec<Fig09Row>,
+    /// Rendered table.
+    pub table: Table,
+}
+
+/// Run Fig 9.
+pub fn run() -> Fig09 {
+    let mut rows = Vec::new();
+    let mut table = Table::new(
+        "Fig 9 — production accelerators: suite delay and embodied carbon",
+        &["accelerator", "delay (s)", "energy (J)", "embodied (g)"],
+    );
+    for cfg in production_accelerators() {
+        let mut delay = 0.0;
+        let mut energy = 0.0;
+        for w in Workload::ALL {
+            let p = simulate(&cfg, &network(w));
+            delay += p.delay_s;
+            energy += p.energy_j();
+        }
+        let embodied = cfg.embodied_g(FabGrid::Coal);
+        table.row(&[
+            cfg.name.clone(),
+            format!("{delay:.4}"),
+            format!("{energy:.3}"),
+            format!("{embodied:.0}"),
+        ]);
+        rows.push(Fig09Row {
+            name: cfg.name.clone(),
+            total_delay_s: delay,
+            total_energy_j: energy,
+            embodied_g: embodied,
+        });
+    }
+    Fig09 { rows, table }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn row<'a>(f: &'a Fig09, name: &str) -> &'a Fig09Row {
+        f.rows.iter().find(|r| r.name == name).unwrap()
+    }
+
+    #[test]
+    fn fig9a_delay_ratios() {
+        // Paper: A-2 ≈ 4x faster than A-3/A-4, ≈ 5.5x faster than A-1.
+        let f = run();
+        let d = |n: &str| row(&f, n).total_delay_s;
+        let r12 = d("A-1") / d("A-2");
+        let r32 = d("A-3") / d("A-2");
+        let r42 = d("A-4") / d("A-2");
+        assert!((3.0..9.0).contains(&r12), "A-1/A-2 = {r12}");
+        assert!((2.0..6.5).contains(&r32), "A-3/A-2 = {r32}");
+        assert!((2.0..6.5).contains(&r42), "A-4/A-2 = {r42}");
+    }
+
+    #[test]
+    fn fig9b_embodied_ordering() {
+        // Paper: A-2 highest embodied; A-1 ≈ 4x lower than A-2 and ≈ 3x
+        // lower than A-3.
+        let f = run();
+        let e = |n: &str| row(&f, n).embodied_g;
+        assert!(e("A-2") > e("A-3") && e("A-3") > e("A-4") && e("A-4") > e("A-1"));
+        assert!((2.5..6.5).contains(&(e("A-2") / e("A-1"))));
+        assert!((1.5..4.5).contains(&(e("A-3") / e("A-1"))));
+    }
+
+    #[test]
+    fn a3_a4_performance_parity() {
+        // Paper: A-3 and A-4 "exhibit similar task performance (within 1%
+        // difference)" — our simulator lands within a looser band.
+        let f = run();
+        let d3 = row(&f, "A-3").total_delay_s;
+        let d4 = row(&f, "A-4").total_delay_s;
+        assert!((d3 - d4).abs() / d4 < 0.35, "A-3 vs A-4 delta = {}", (d3 - d4).abs() / d4);
+        // And A-3 is the more energy-efficient of the pair.
+        assert!(row(&f, "A-3").total_energy_j < row(&f, "A-4").total_energy_j);
+    }
+}

@@ -1,0 +1,134 @@
+//! Fig 11: embodied and total life-cycle carbon savings from provisioning
+//! the VR CPU's core count per application (paper: ≤ 50 % embodied
+//! savings, ≈ 33 % average; ≈ 12.5 % average total, ≤ 21 %).
+
+use crate::matrixform::MetricRow;
+use crate::report::Table;
+use crate::runtime::Engine;
+use crate::soc::VrSoc;
+use crate::workloads::apps::top10_apps;
+
+use super::common::provisioning_request;
+use super::fig13_core_configs::vr_operational_lifetime_s;
+
+/// One Fig 11 bar pair.
+#[derive(Debug, Clone)]
+pub struct Fig11Row {
+    /// App name.
+    pub app: String,
+    /// Optimal core count (QoS-preserving).
+    pub cores: usize,
+    /// CPU embodied-carbon saving vs the 8-core configuration (0..1).
+    pub embodied_saving: f64,
+    /// Total life-cycle carbon saving vs 8-core (0..1).
+    pub total_saving: f64,
+}
+
+/// Fig 11 output.
+pub struct Fig11 {
+    /// Per-app rows.
+    pub rows: Vec<Fig11Row>,
+    /// Mean embodied saving.
+    pub mean_embodied_saving: f64,
+    /// Mean total saving.
+    pub mean_total_saving: f64,
+    /// Rendered table.
+    pub table: Table,
+}
+
+/// Run Fig 11 over the top-10 apps.
+pub fn run(engine: &mut dyn Engine) -> crate::Result<Fig11> {
+    let soc = VrSoc::default();
+    let lifetime_s = vr_operational_lifetime_s();
+    let full_cpu = soc.provisioned_cpu_g(4, 4);
+
+    let mut rows = Vec::new();
+    for app in top10_apps() {
+        let apps = vec![app.clone()];
+        let req = provisioning_request(&apps, &soc, lifetime_s, true);
+        let res = crate::runtime::evaluate(engine, &req)?;
+        let idx = res
+            .argmin_feasible(MetricRow::Tcdp)
+            .ok_or_else(|| anyhow::anyhow!("{}: infeasible", app.name))?;
+        let cores = idx + 2;
+        let (gold, silver) = VrSoc::split_cores(cores);
+        let provisioned_cpu = soc.provisioned_cpu_g(gold, silver);
+        let embodied_saving = 1.0 - provisioned_cpu / full_cpu;
+        // Total life-cycle carbon: compare the whole-device carbon of the
+        // provisioned optimum vs the 8-core config for this app's window.
+        let total_opt = res.metric(MetricRow::CTotal, idx);
+        let total_full = res.metric(MetricRow::CTotal, res.c - 1); // 8-core row
+        let total_saving = 1.0 - total_opt / total_full;
+        rows.push(Fig11Row { app: app.name.to_string(), cores, embodied_saving, total_saving });
+    }
+
+    let mean_embodied_saving =
+        rows.iter().map(|r| r.embodied_saving).sum::<f64>() / rows.len() as f64;
+    let mean_total_saving = rows.iter().map(|r| r.total_saving).sum::<f64>() / rows.len() as f64;
+
+    let mut table = Table::new(
+        "Fig 11 — carbon savings from CPU core provisioning (vs 8-core)",
+        &["app", "cores", "embodied saving", "total saving"],
+    );
+    for r in &rows {
+        table.row(&[
+            r.app.clone(),
+            r.cores.to_string(),
+            format!("{:.0}%", r.embodied_saving * 100.0),
+            format!("{:.1}%", r.total_saving * 100.0),
+        ]);
+    }
+    table.row(&[
+        "average".into(),
+        "-".into(),
+        format!("{:.0}%", mean_embodied_saving * 100.0),
+        format!("{:.1}%", mean_total_saving * 100.0),
+    ]);
+
+    Ok(Fig11 { rows, mean_embodied_saving, mean_total_saving, table })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::experiments::common::Ctx;
+
+    fn fig11() -> Fig11 {
+        run(Ctx::host().engine.as_mut()).unwrap()
+    }
+
+    #[test]
+    fn embodied_savings_match_paper_band() {
+        // Paper: up to 50% embodied savings, average ≈ 33%.
+        let f = fig11();
+        let max = f.rows.iter().map(|r| r.embodied_saving).fold(0.0f64, f64::max);
+        assert!((0.4..0.75).contains(&max), "max embodied saving = {max}");
+        assert!(
+            (0.2..0.5).contains(&f.mean_embodied_saving),
+            "mean embodied saving = {}",
+            f.mean_embodied_saving
+        );
+    }
+
+    #[test]
+    fn total_savings_match_paper_band() {
+        // Paper: average ≈ 12.5% total life-cycle improvement, ≤ 21%.
+        let f = fig11();
+        assert!(
+            (0.03..0.25).contains(&f.mean_total_saving),
+            "mean total saving = {}",
+            f.mean_total_saving
+        );
+        let max = f.rows.iter().map(|r| r.total_saving).fold(0.0f64, f64::max);
+        assert!(max < 0.35, "max total saving = {max}");
+    }
+
+    #[test]
+    fn savings_never_negative() {
+        let f = fig11();
+        for r in &f.rows {
+            assert!(r.embodied_saving >= 0.0, "{}: {}", r.app, r.embodied_saving);
+            assert!(r.total_saving >= -1e-9, "{}: {}", r.app, r.total_saving);
+        }
+    }
+}

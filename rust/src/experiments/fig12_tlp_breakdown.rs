@@ -1,0 +1,91 @@
+//! Fig 12: thread-level-parallelism time breakdown for the four profiled
+//! VR applications on the octa-core CPU.
+
+use crate::report::Table;
+use crate::workloads::apps::fig12_apps;
+use crate::workloads::{generate_fleet, FleetConfig};
+
+/// Fig 12 output.
+pub struct Fig12 {
+    /// `(app, model TLP, fleet-observed TLP, busy-core time fractions)`.
+    pub rows: Vec<(String, f64, f64, [f64; 9])>,
+    /// Average TLP across the four apps.
+    pub avg_tlp: f64,
+    /// Rendered table.
+    pub table: Table,
+}
+
+/// Run Fig 12: per-app model distributions cross-checked against the
+/// synthetic fleet's observed TLP.
+pub fn run(cfg: &FleetConfig) -> Fig12 {
+    let fleet = generate_fleet(cfg);
+    let mut rows = Vec::new();
+    let mut table = Table::new(
+        "Fig 12 — TLP time breakdown (octa-core; fractions of wall time)",
+        &["app", "TLP", "fleet TLP", "0", "1-2", "3-4", "5-6", "7-8"],
+    );
+    let mut tlp_sum = 0.0;
+    for app in fig12_apps() {
+        let observed = fleet
+            .apps
+            .iter()
+            .find(|a| a.name == app.name)
+            .map(|a| a.tlp.average())
+            .unwrap_or(f64::NAN);
+        let f = app.tlp.frac;
+        let buckets = [f[0], f[1] + f[2], f[3] + f[4], f[5] + f[6], f[7] + f[8]];
+        table.row(&[
+            app.name.to_string(),
+            format!("{:.2}", app.tlp.average()),
+            format!("{observed:.2}"),
+            format!("{:.2}", buckets[0]),
+            format!("{:.2}", buckets[1]),
+            format!("{:.2}", buckets[2]),
+            format!("{:.2}", buckets[3]),
+            format!("{:.2}", buckets[4]),
+        ]);
+        tlp_sum += app.tlp.average();
+        rows.push((app.name.to_string(), app.tlp.average(), observed, f));
+    }
+    let avg_tlp = tlp_sum / rows.len() as f64;
+    Fig12 { rows, avg_tlp, table }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn fig12() -> Fig12 {
+        run(&FleetConfig { devices: 150, days: 10, ..Default::default() })
+    }
+
+    #[test]
+    fn tlp_range_matches_paper() {
+        // Paper: "TLP ranges from 3.52 to 4.15 ... 3.9 average TLP."
+        let f = fig12();
+        for (name, tlp, _, _) in &f.rows {
+            assert!((3.4..4.3).contains(tlp), "{name}: TLP = {tlp}");
+        }
+        assert!((3.7..4.1).contains(&f.avg_tlp), "avg = {}", f.avg_tlp);
+    }
+
+    #[test]
+    fn fleet_observation_tracks_model() {
+        let f = fig12();
+        for (name, model, observed, _) in &f.rows {
+            assert!(
+                (model - observed).abs() < 0.4,
+                "{name}: model {model} vs fleet {observed}"
+            );
+        }
+    }
+
+    #[test]
+    fn fractions_sum_to_one() {
+        let f = fig12();
+        for (name, _, _, frac) in &f.rows {
+            let s: f64 = frac.iter().sum();
+            assert!((s - 1.0).abs() < 1e-9, "{name}: fractions sum {s}");
+        }
+    }
+}

@@ -1,0 +1,118 @@
+//! Fig 14: the carbon-optimal hardware replacement period versus daily
+//! usage (1 h / 3 h / 12 h), with the 1.21×/year energy-efficiency
+//! improvement of newer hardware.
+
+use crate::carbon::replacement::{sweep_lifetimes, ReplacementScenario};
+use crate::carbon::UseGrid;
+use crate::report::Table;
+use crate::soc::VrSoc;
+
+/// One usage panel.
+#[derive(Debug, Clone)]
+pub struct Fig14Panel {
+    /// Daily usage, hours.
+    pub hours_per_day: f64,
+    /// `(lifetime years, total carbon g)` per candidate.
+    pub sweep: Vec<(f64, f64)>,
+    /// Optimal lifetime, years.
+    pub optimal_years: f64,
+    /// Savings of the optimum vs the worst candidate (0..1).
+    pub savings_vs_worst: f64,
+}
+
+/// Fig 14 output.
+pub struct Fig14 {
+    /// Panels for 1 h / 3 h / 12 h daily use.
+    pub panels: Vec<Fig14Panel>,
+    /// Rendered table.
+    pub table: Table,
+}
+
+/// The VR headset scenario: Table 5 CPU-block embodied carbon (the
+/// paper's own calibration scope) and the Snapdragon TDP while active.
+pub fn headset_scenario(hours: f64) -> ReplacementScenario {
+    let soc = VrSoc::default();
+    ReplacementScenario {
+        embodied_g: soc.gold_cluster_g() + soc.silver_cluster_g(),
+        active_power_w: soc.tdp_w,
+        hours_per_day: hours,
+        grid: UseGrid::WorldAverage,
+        annual_efficiency_gain: 1.21,
+        horizon_years: 10.0,
+    }
+}
+
+/// Candidate lifetimes (years).
+pub const CANDIDATES: [f64; 5] = [1.0, 2.0, 3.0, 4.0, 5.0];
+
+/// Run the three usage panels.
+pub fn run() -> Fig14 {
+    let mut panels = Vec::new();
+    let mut table = Table::new(
+        "Fig 14 — total carbon over a 10-year horizon by replacement period (g, * = optimal)",
+        &["use h/day", "1y", "2y", "3y", "4y", "5y", "optimal"],
+    );
+    for hours in [1.0, 3.0, 12.0] {
+        let s = headset_scenario(hours);
+        let sweep = sweep_lifetimes(&s, &CANDIDATES);
+        let (opt_years, opt_c) = sweep
+            .iter()
+            .cloned()
+            .min_by(|a, b| a.1.total_cmp(&b.1))
+            .unwrap();
+        let worst = sweep.iter().map(|&(_, c)| c).fold(0.0f64, f64::max);
+        let mut cells = vec![format!("{hours:.0}")];
+        for &(lt, c) in &sweep {
+            cells.push(format!("{c:.0}{}", if lt == opt_years { "*" } else { "" }));
+        }
+        cells.push(format!("{opt_years:.0}y"));
+        table.row(&cells);
+        panels.push(Fig14Panel {
+            hours_per_day: hours,
+            sweep,
+            optimal_years: opt_years,
+            savings_vs_worst: 1.0 - opt_c / worst,
+        });
+    }
+    Fig14 { panels, table }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn optimal_lifetime_shrinks_with_usage() {
+        // Paper: 1h -> 5 years, 3h -> 3 years, 12h -> 2 years.
+        let f = run();
+        let opts: Vec<f64> = f.panels.iter().map(|p| p.optimal_years).collect();
+        assert_eq!(opts[0], 5.0, "1h/day optimum");
+        assert!((2.0..=4.0).contains(&opts[1]), "3h/day optimum = {}", opts[1]);
+        assert!(opts[2] <= 3.0, "12h/day optimum = {}", opts[2]);
+        assert!(opts[0] >= opts[1] && opts[1] >= opts[2]);
+    }
+
+    #[test]
+    fn savings_are_substantial() {
+        // Paper reports 20–50% savings between optimal and worst periods.
+        let f = run();
+        for p in &f.panels {
+            assert!(
+                p.savings_vs_worst > 0.05,
+                "{}h: savings {}",
+                p.hours_per_day,
+                p.savings_vs_worst
+            );
+        }
+        // Light use shows the largest spread (embodied-dominated).
+        assert!(f.panels[0].savings_vs_worst > 0.3, "1h savings = {}", f.panels[0].savings_vs_worst);
+    }
+
+    #[test]
+    fn sweep_covers_all_candidates() {
+        let f = run();
+        for p in &f.panels {
+            assert_eq!(p.sweep.len(), CANDIDATES.len());
+        }
+    }
+}

@@ -1,0 +1,122 @@
+//! Fig 15: carbon efficiency of 3-D stacked accelerator configurations
+//! versus the 2-D baseline for SR(512×512), under embodied-dominant
+//! (80 %) and operational-dominant (6 %) scenarios.
+
+use crate::accel::stacking::{baseline_2d, stacked_configs};
+use crate::accel::Workload;
+use crate::carbon::FabGrid;
+use crate::dse::{lifetime_for_ratio, profile_configs, profiles_to_rows};
+use crate::matrixform::MetricRow;
+use crate::report::Table;
+use crate::runtime::Engine;
+
+use super::common::{default_use_grid, rows_request, suite_task};
+
+/// One scenario's gains.
+#[derive(Debug, Clone)]
+pub struct Fig15Panel {
+    /// Embodied-to-total ratio of the scenario.
+    pub ratio: f64,
+    /// `(config label, carbon-efficiency gain over 2D)` — gain =
+    /// tCDP(2D)/tCDP(config).
+    pub gains: Vec<(String, f64)>,
+}
+
+/// Fig 15 output.
+pub struct Fig15 {
+    /// Config labels (2D baseline first).
+    pub labels: Vec<String>,
+    /// The 80 % and 6 % panels.
+    pub panels: Vec<Fig15Panel>,
+    /// Rendered table.
+    pub table: Table,
+}
+
+/// The paper's two Fig 15(b) scenarios.
+pub const RATIOS: [f64; 2] = [0.80, 0.06];
+
+/// Run Fig 15 on a single workload (SR-512 in the paper).
+pub fn run(engine: &mut dyn Engine, workload: Workload) -> crate::Result<Fig15> {
+    let mut configs = vec![baseline_2d()];
+    configs.extend(stacked_configs().into_iter().map(|d| d.config));
+    let labels: Vec<String> = configs.iter().map(|c| c.name.clone()).collect();
+
+    let workloads = [workload];
+    let profiles = profile_configs(&configs, &workloads);
+    let rows = profiles_to_rows(&configs, &profiles, FabGrid::Coal);
+    let ci = default_use_grid().g_per_joule();
+    let tasks = suite_task(&workloads);
+
+    let mut panels = Vec::new();
+    let mut table = Table::new(
+        &format!(
+            "Fig 15 — 3D stacking carbon-efficiency gain over 2D baseline ({})",
+            workload.label()
+        ),
+        &["config", "gain @80% emb", "gain @6% emb"],
+    );
+    for &ratio in &RATIOS {
+        // Calibrate the scenario on the 2-D baseline row.
+        let lifetime = lifetime_for_ratio(&rows[..1], &tasks, ratio, ci);
+        let req = rows_request(rows.clone(), &workloads, lifetime, 1.0);
+        let res = crate::dse::batching::evaluate_chunked(engine, &req)?;
+        let base_tcdp = res.metric(MetricRow::Tcdp, 0);
+        let gains: Vec<(String, f64)> = (0..res.c)
+            .map(|i| (res.names[i].clone(), base_tcdp / res.metric(MetricRow::Tcdp, i)))
+            .collect();
+        panels.push(Fig15Panel { ratio, gains });
+    }
+    for (i, label) in labels.iter().enumerate() {
+        table.row(&[
+            label.clone(),
+            format!("{:.2}x", panels[0].gains[i].1),
+            format!("{:.2}x", panels[1].gains[i].1),
+        ]);
+    }
+    Ok(Fig15 { labels, panels, table })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::experiments::common::Ctx;
+
+    fn fig15() -> Fig15 {
+        run(Ctx::host().engine.as_mut(), Workload::Sr512).unwrap()
+    }
+
+    #[test]
+    fn operational_dominance_favors_3d_strongly() {
+        // Paper: up to 6.9x for SR-512 in the 6% embodied case.
+        let f = fig15();
+        let op_panel = &f.panels[1];
+        let best = op_panel.gains.iter().map(|(_, g)| *g).fold(0.0f64, f64::max);
+        assert!(best > 1.8, "best 3D gain @6% = {best}x");
+        // The best design is a stacked one.
+        let (name, _) = op_panel
+            .gains
+            .iter()
+            .max_by(|a, b| a.1.total_cmp(&b.1))
+            .unwrap();
+        assert!(name.starts_with("3D_"), "best design = {name}");
+    }
+
+    #[test]
+    fn embodied_dominance_tempers_the_gains() {
+        // Paper: 1.08–1.8x in the 80% embodied case — much smaller than
+        // the operational-dominant gains.
+        let f = fig15();
+        let emb_best = f.panels[0].gains.iter().map(|(_, g)| *g).fold(0.0f64, f64::max);
+        let op_best = f.panels[1].gains.iter().map(|(_, g)| *g).fold(0.0f64, f64::max);
+        assert!(op_best > emb_best, "op {op_best} !> emb {emb_best}");
+    }
+
+    #[test]
+    fn baseline_gain_is_one() {
+        let f = fig15();
+        for p in &f.panels {
+            assert!((p.gains[0].1 - 1.0).abs() < 1e-9);
+        }
+        assert_eq!(f.labels.len(), 7);
+    }
+}

@@ -1,0 +1,24 @@
+//! Experiment regenerators — one module per paper figure/table.
+//!
+//! Each module exposes a `run(...)` returning the figure's data (typed
+//! rows usable by tests) plus a rendered [`crate::report::Table`]. The
+//! CLI (`xrcarbon figN`) and the per-figure benches call the same entry
+//! points; `rust/tests/experiments_e2e.rs` locks the paper's qualitative
+//! claims.
+
+pub mod common;
+pub mod fig01_metric_comparison;
+pub mod fig02_retrospective;
+pub mod fig03_fleet_categories;
+pub mod fig04_power_embodied;
+pub mod fig07_dse_clusters;
+pub mod fig08_tcdp_vs_edp;
+pub mod fig09_accelerators;
+pub mod fig10_lifetime_crossover;
+pub mod fig11_provisioning_savings;
+pub mod fig12_tlp_breakdown;
+pub mod fig13_core_configs;
+pub mod fig14_replacement;
+pub mod fig15_stacking;
+pub mod fig16_stacking_kernels;
+pub mod table5_vr_soc;

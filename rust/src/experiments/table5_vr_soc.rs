@@ -1,0 +1,41 @@
+//! Table 5: area and embodied-carbon estimates for the production VR SoC
+//! CPU clusters (the 7 nm calibration anchor of the whole carbon model).
+
+use crate::report::Table;
+use crate::soc::VrSoc;
+
+/// Table 5 output.
+pub struct Table5 {
+    /// Gold-cluster embodied carbon, g (paper: 895.89).
+    pub gold_g: f64,
+    /// Silver-cluster embodied carbon, g (paper: 447.94).
+    pub silver_g: f64,
+    /// Rendered table.
+    pub table: Table,
+}
+
+/// Regenerate Table 5.
+pub fn run() -> Table5 {
+    let soc = VrSoc::default();
+    let mut table = Table::new("Table 5 — VR SoC area and embodied carbon", &["parameter", "value"]);
+    table.row(&["Total die area (cm2)".into(), format!("{:.2}", soc.die_cm2)]);
+    table.row(&["CPU (cm2)".into(), format!("{:.2}", soc.cpu_cm2)]);
+    table.row(&["CPU gold (cm2)".into(), format!("{:.2}", soc.cpu_cm2 * 2.0 / 3.0)]);
+    table.row(&["CPU silver (cm2)".into(), format!("{:.2}", soc.cpu_cm2 / 3.0)]);
+    table.row(&["CPU gold embodied (gCO2e)".into(), format!("{:.2}", soc.gold_cluster_g())]);
+    table.row(&["CPU silver embodied (gCO2e)".into(), format!("{:.2}", soc.silver_cluster_g())]);
+    Table5 { gold_g: soc.gold_cluster_g(), silver_g: soc.silver_cluster_g(), table }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn matches_paper_values() {
+        let t = run();
+        assert!((t.gold_g - 895.89).abs() < 0.5, "gold = {}", t.gold_g);
+        assert!((t.silver_g - 447.94).abs() < 0.3, "silver = {}", t.silver_g);
+        assert_eq!(t.table.len(), 6);
+    }
+}

@@ -1,0 +1,46 @@
+//! # xrcarbon — carbon-efficient design space exploration for XR systems
+//!
+//! Reproduction of *"Design Space Exploration and Optimization for
+//! Carbon-Efficient Extended Reality Systems"* (CS.AR 2023): a holistic
+//! framework that co-optimizes **embodied** and **operational** carbon with
+//! performance/power/area, built around the paper's figure-of-merit
+//! **tCDP = C_total × task-execution-delay**.
+//!
+//! The crate is the Layer-3 coordinator of a three-layer stack:
+//!
+//! * **L3 (this crate)** — design-space enumeration, constraint filtering,
+//!   β-scalarization / Pareto sweeps, plus every substrate the paper's
+//!   evaluation needs (ACT carbon model, accelerator simulator, CPU/SoC
+//!   retrospective databases, VR fleet telemetry generator, 3D stacking).
+//! * **L2 (JAX, build time)** — the §3.3 matrix formalization as a batched
+//!   computation graph, AOT-lowered to HLO text in `artifacts/`.
+//! * **L1 (Pallas, build time)** — the blocked metric-evaluation kernel the
+//!   L2 graph calls.
+//!
+//! At run time the [`runtime::PjrtEngine`] loads the HLO artifacts through
+//! the PJRT CPU client (`xla` crate) and the coordinator streams batches of
+//! candidate hardware configurations through it; [`runtime::HostEngine`] is
+//! a pure-Rust mirror used for cross-checking and as a fallback.
+//!
+//! See `DESIGN.md` for the per-experiment index and `EXPERIMENTS.md` for
+//! paper-vs-measured results.
+
+pub mod accel;
+pub mod bench;
+pub mod carbon;
+pub mod cli;
+pub mod configfmt;
+pub mod dse;
+pub mod experiments;
+pub mod matrixform;
+pub mod report;
+pub mod runtime;
+pub mod soc;
+pub mod testkit;
+pub mod workloads;
+
+/// Crate-wide result alias.
+pub type Result<T> = anyhow::Result<T>;
+
+/// Version string reported by the CLI.
+pub const VERSION: &str = env!("CARGO_PKG_VERSION");

@@ -1,0 +1,152 @@
+//! `xrcarbon` CLI — regenerate any paper figure/table from the command
+//! line. The leader process loads the AOT artifacts once (PJRT CPU) and
+//! runs the requested experiment; `--engine host` forces the pure-Rust
+//! mirror.
+
+use xrcarbon::cli::Args;
+use xrcarbon::experiments::{
+    common::Ctx, fig01_metric_comparison, fig02_retrospective, fig03_fleet_categories,
+    fig04_power_embodied, fig07_dse_clusters, fig08_tcdp_vs_edp, fig09_accelerators,
+    fig10_lifetime_crossover, fig11_provisioning_savings, fig12_tlp_breakdown,
+    fig13_core_configs, fig14_replacement, fig15_stacking, fig16_stacking_kernels,
+    table5_vr_soc,
+};
+use xrcarbon::report::write_csv;
+use xrcarbon::workloads::FleetConfig;
+
+const USAGE: &str = "\
+xrcarbon — carbon-efficient XR design space exploration (tCDP)
+
+USAGE: xrcarbon <command> [--engine pjrt|host] [--csv-dir DIR] [options]
+
+COMMANDS
+  fig1        metric-choice comparison on A-1..A-4
+  fig2        retrospective CPU/SoC analysis (use --cpus / --socs to limit)
+  fig3        VR fleet app categorization          [--devices N --days N --seed N]
+  fig4        per-app power + embodied split       [--devices N --days N]
+  fig7        the 121-config DSE across clusters and carbon scenarios
+  fig8        tCDP-designed vs EDP-designed accelerators
+  fig9        A-1..A-4 delay and embodied carbon
+  fig10       carbon efficiency vs operational lifetime (crossovers)
+  fig11       CPU core-provisioning carbon savings
+  fig12       TLP time breakdown
+  fig13       carbon-optimal core configurations
+  fig14       replacement-period study (1h/3h/12h daily use)
+  fig15       3D stacking vs 2D baseline           [--workload SR-512]
+  fig16       3D stacking per XR kernel
+  table5      VR SoC embodied-carbon calibration
+  all         run everything above in order
+";
+
+fn fleet_cfg(args: &Args) -> anyhow::Result<FleetConfig> {
+    Ok(FleetConfig {
+        devices: args.get_usize("devices", 400)?,
+        days: args.get_usize("days", 30)?,
+        seed: args.get_u64("seed", 0x5EED)?,
+        ..Default::default()
+    })
+}
+
+fn ctx_for(args: &Args) -> Ctx {
+    match args.get("engine", "auto") {
+        "host" => Ctx::host(),
+        _ => Ctx::auto(),
+    }
+}
+
+fn emit(args: &Args, name: &str, table: &xrcarbon::report::Table) -> anyhow::Result<()> {
+    print!("{}", table.render());
+    if let Some(dir) = args.options.get("csv-dir") {
+        let path = format!("{dir}/{name}.csv");
+        write_csv(table, &path)?;
+        println!("[csv] wrote {path}");
+    }
+    println!();
+    Ok(())
+}
+
+fn run_one(cmd: &str, args: &Args) -> anyhow::Result<()> {
+    match cmd {
+        "fig1" => {
+            let mut ctx = ctx_for(args);
+            println!("[engine: {}]", ctx.backend);
+            let f = fig01_metric_comparison::run(&mut ctx)?;
+            emit(args, "fig1", &f.table)?;
+        }
+        "fig2" => {
+            if !args.has_flag("socs") {
+                emit(args, "fig2a", &fig02_retrospective::run_cpus().table)?;
+            }
+            if !args.has_flag("cpus") {
+                emit(args, "fig2b", &fig02_retrospective::run_socs().table)?;
+            }
+        }
+        "fig3" => emit(args, "fig3", &fig03_fleet_categories::run(&fleet_cfg(args)?).table)?,
+        "fig4" => emit(
+            args,
+            "fig4",
+            &fig04_power_embodied::run(&fleet_cfg(args)?, &xrcarbon::soc::VrSoc::default()).table,
+        )?,
+        "fig7" => {
+            let mut ctx = ctx_for(args);
+            println!("[engine: {}]", ctx.backend);
+            emit(args, "fig7", &fig07_dse_clusters::run(ctx.engine.as_mut())?.table)?;
+        }
+        "fig8" => {
+            let mut ctx = ctx_for(args);
+            emit(args, "fig8", &fig08_tcdp_vs_edp::run(ctx.engine.as_mut())?.table)?;
+        }
+        "fig9" => emit(args, "fig9", &fig09_accelerators::run().table)?,
+        "fig10" => {
+            let mut ctx = ctx_for(args);
+            let axis = fig10_lifetime_crossover::default_axis();
+            emit(args, "fig10", &fig10_lifetime_crossover::run(ctx.engine.as_mut(), &axis)?.table)?;
+        }
+        "fig11" => {
+            let mut ctx = ctx_for(args);
+            emit(args, "fig11", &fig11_provisioning_savings::run(ctx.engine.as_mut())?.table)?;
+        }
+        "fig12" => emit(args, "fig12", &fig12_tlp_breakdown::run(&fleet_cfg(args)?).table)?,
+        "fig13" => {
+            let mut ctx = ctx_for(args);
+            emit(args, "fig13", &fig13_core_configs::run(ctx.engine.as_mut())?.table)?;
+        }
+        "fig14" => emit(args, "fig14", &fig14_replacement::run().table)?,
+        "fig15" => {
+            let mut ctx = ctx_for(args);
+            let w = xrcarbon::accel::Workload::parse(args.get("workload", "SR-512"))
+                .ok_or_else(|| anyhow::anyhow!("unknown workload"))?;
+            emit(args, "fig15", &fig15_stacking::run(ctx.engine.as_mut(), w)?.table)?;
+        }
+        "fig16" => {
+            let mut ctx = ctx_for(args);
+            emit(args, "fig16", &fig16_stacking_kernels::run(ctx.engine.as_mut())?.table)?;
+        }
+        "table5" => emit(args, "table5", &table5_vr_soc::run().table)?,
+        other => anyhow::bail!("unknown command '{other}'\n\n{USAGE}"),
+    }
+    Ok(())
+}
+
+fn main() -> anyhow::Result<()> {
+    let args = Args::from_env()?;
+    let Some(cmd) = args.command.clone() else {
+        println!("{USAGE}");
+        return Ok(());
+    };
+    if args.has_flag("help") {
+        println!("{USAGE}");
+        return Ok(());
+    }
+    if cmd == "all" {
+        for c in [
+            "table5", "fig1", "fig2", "fig3", "fig4", "fig9", "fig12", "fig14", "fig13",
+            "fig11", "fig10", "fig15", "fig16", "fig8", "fig7",
+        ] {
+            println!("===== {c} =====");
+            run_one(c, &args)?;
+        }
+        return Ok(());
+    }
+    run_one(&cmd, &args)
+}

@@ -1,0 +1,13 @@
+//! The §3.3 matrix formalization as typed data (Table 2).
+//!
+//! The coordinator assembles evaluation batches here: a task matrix `N`
+//! (kernel calls per task), per-config rows (kernel delays, power terms,
+//! component embodied carbon), constraint vectors and the four scalars —
+//! then packs everything, zero-padded, into the fixed shapes the AOT
+//! artifacts expect (`T=8, K=32, J=16, C ∈ {128, 1024}`).
+
+mod pack;
+mod types;
+
+pub use pack::{PackedProblem, C_VARIANTS, J_PAD, K_PAD, NUM_METRICS, T_PAD};
+pub use types::{ConfigRow, EvalRequest, EvalResult, MetricRow, TaskMatrix};

@@ -1,0 +1,235 @@
+//! Packing an [`EvalRequest`] into the fixed AOT artifact shapes.
+//!
+//! Padding rules (the runtime contract, mirrored in
+//! `python/compile/model.py`):
+//! * `N`, `d_k`, `p_leak`, `p_dyn`, `c_comp` pad with zeros (inert rows);
+//! * `f_clk` pads with 1.0 (avoids 0/0 in the energy division);
+//! * `qos` pads with +∞ (never constrains phantom tasks);
+//! * config rows beyond the logical batch are zeros → zero metrics.
+
+use super::types::{EvalRequest, EvalResult};
+
+/// Padded task dimension (must match `model.T_PAD`).
+pub const T_PAD: usize = 8;
+/// Padded kernel dimension (must match `model.K_PAD`).
+pub const K_PAD: usize = 32;
+/// Padded component dimension (must match `model.J_PAD`).
+pub const J_PAD: usize = 16;
+/// Metric row count.
+pub const NUM_METRICS: usize = 12;
+/// Config-batch variants compiled into artifacts.
+pub const C_VARIANTS: [usize; 2] = [128, 1024];
+
+/// A padded, f32, artifact-shaped problem.
+#[derive(Debug, Clone)]
+pub struct PackedProblem {
+    /// `[T_PAD × K_PAD]`.
+    pub n: Vec<f32>,
+    /// `[c_pad × K_PAD]`.
+    pub p_leak: Vec<f32>,
+    /// `[c_pad × K_PAD]`.
+    pub p_dyn: Vec<f32>,
+    /// `[c_pad × 1]`.
+    pub f_clk: Vec<f32>,
+    /// `[c_pad × K_PAD]`.
+    pub d_k: Vec<f32>,
+    /// `[c_pad × J_PAD]`.
+    pub c_comp: Vec<f32>,
+    /// `[J_PAD]`.
+    pub online: Vec<f32>,
+    /// `[T_PAD]`.
+    pub qos: Vec<f32>,
+    /// `[ci_use, lifetime_s, beta, p_max]`.
+    pub scalars: [f32; 4],
+    /// Padded batch size (one of `C_VARIANTS`).
+    pub c_pad: usize,
+    /// Logical batch size.
+    pub c: usize,
+    /// Logical task count.
+    pub t: usize,
+    /// Logical kernel count.
+    pub k: usize,
+    /// Config names (logical batch order).
+    pub names: Vec<String>,
+}
+
+/// Smallest artifact variant that fits `c` configs.
+pub fn variant_for(c: usize) -> Option<usize> {
+    C_VARIANTS.iter().copied().find(|&v| v >= c)
+}
+
+impl PackedProblem {
+    /// Pack a validated request. Requests larger than the largest variant
+    /// must be split by the coordinator (`dse::batching`).
+    pub fn from_request(req: &EvalRequest) -> Self {
+        req.validate();
+        let t = req.tasks.num_tasks();
+        let k = req.tasks.num_kernels();
+        let c = req.configs.len();
+        assert!(t <= T_PAD, "too many tasks ({t} > {T_PAD})");
+        assert!(k <= K_PAD, "too many kernels ({k} > {K_PAD})");
+        let j = req.online.len();
+        assert!(j <= J_PAD, "too many components ({j} > {J_PAD})");
+        let c_pad = variant_for(c)
+            .unwrap_or_else(|| panic!("batch of {c} exceeds largest variant; split it"));
+
+        let mut n = vec![0.0f32; T_PAD * K_PAD];
+        for ti in 0..t {
+            for ki in 0..k {
+                n[ti * K_PAD + ki] = req.tasks.get(ti, ki) as f32;
+            }
+        }
+
+        let mut p_leak = vec![0.0f32; c_pad * K_PAD];
+        let mut p_dyn = vec![0.0f32; c_pad * K_PAD];
+        let mut d_k = vec![0.0f32; c_pad * K_PAD];
+        let mut f_clk = vec![1.0f32; c_pad];
+        let mut c_comp = vec![0.0f32; c_pad * J_PAD];
+        let mut names = Vec::with_capacity(c);
+        for (ci, cfg) in req.configs.iter().enumerate() {
+            let pl = cfg.p_leak();
+            let pd = cfg.p_dyn();
+            for ki in 0..k {
+                p_leak[ci * K_PAD + ki] = pl[ki] as f32;
+                p_dyn[ci * K_PAD + ki] = pd[ki] as f32;
+                d_k[ci * K_PAD + ki] = cfg.d_k[ki] as f32;
+            }
+            f_clk[ci] = cfg.f_clk as f32;
+            for ji in 0..j {
+                c_comp[ci * J_PAD + ji] = cfg.c_comp[ji] as f32;
+            }
+            names.push(cfg.name.clone());
+        }
+
+        let mut online = vec![0.0f32; J_PAD];
+        for ji in 0..j {
+            online[ji] = req.online[ji] as f32;
+        }
+        let mut qos = vec![f32::INFINITY; T_PAD];
+        for ti in 0..t {
+            qos[ti] = req.qos[ti] as f32;
+        }
+
+        PackedProblem {
+            n,
+            p_leak,
+            p_dyn,
+            f_clk,
+            d_k,
+            c_comp,
+            online,
+            qos,
+            scalars: [
+                req.ci_use_g_per_j as f32,
+                req.lifetime_s as f32,
+                req.beta as f32,
+                req.p_max_w as f32,
+            ],
+            c_pad,
+            c,
+            t,
+            k,
+            names,
+        }
+    }
+
+    /// Unpack raw engine output (`metrics [12 × c_pad]`, `d_task
+    /// [c_pad × T_PAD]`) into a logical-size [`EvalResult`].
+    pub fn unpack(&self, metrics_pad: &[f32], d_task_pad: &[f32]) -> EvalResult {
+        assert_eq!(metrics_pad.len(), NUM_METRICS * self.c_pad, "bad metrics buffer");
+        assert_eq!(d_task_pad.len(), self.c_pad * T_PAD, "bad d_task buffer");
+        let mut metrics = vec![0.0f64; NUM_METRICS * self.c];
+        for row in 0..NUM_METRICS {
+            for ci in 0..self.c {
+                metrics[row * self.c + ci] = metrics_pad[row * self.c_pad + ci] as f64;
+            }
+        }
+        let mut d_task = vec![0.0f64; self.c * self.t];
+        for ci in 0..self.c {
+            for ti in 0..self.t {
+                d_task[ci * self.t + ti] = d_task_pad[ci * T_PAD + ti] as f64;
+            }
+        }
+        EvalResult { names: self.names.clone(), metrics, d_task, c: self.c, t: self.t }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::matrixform::types::{ConfigRow, TaskMatrix};
+
+    fn request(c: usize) -> EvalRequest {
+        let tm = TaskMatrix::single_task("t", vec!["k0".into(), "k1".into()], &[3.0, 1.0]);
+        EvalRequest {
+            tasks: tm,
+            configs: (0..c)
+                .map(|i| ConfigRow {
+                    name: format!("cfg{i}"),
+                    f_clk: 1e9,
+                    d_k: vec![1e-3, 2e-3],
+                    e_dyn: vec![0.01, 0.02],
+                    leak_w: 0.1,
+                    c_comp: vec![10.0, 20.0],
+                })
+                .collect(),
+            online: vec![1.0, 1.0],
+            qos: vec![f64::INFINITY],
+            ci_use_g_per_j: 1e-4,
+            lifetime_s: 1e6,
+            beta: 1.0,
+            p_max_w: f64::INFINITY,
+        }
+    }
+
+    #[test]
+    fn pads_to_smallest_variant() {
+        assert_eq!(PackedProblem::from_request(&request(5)).c_pad, 128);
+        assert_eq!(PackedProblem::from_request(&request(128)).c_pad, 128);
+        assert_eq!(PackedProblem::from_request(&request(129)).c_pad, 1024);
+    }
+
+    #[test]
+    #[should_panic(expected = "exceeds largest variant")]
+    fn oversized_batch_panics() {
+        PackedProblem::from_request(&request(1025));
+    }
+
+    #[test]
+    fn padding_values_follow_contract() {
+        let p = PackedProblem::from_request(&request(3));
+        // f_clk pad = 1.0.
+        assert_eq!(p.f_clk[3], 1.0);
+        assert_eq!(p.f_clk[127], 1.0);
+        // d_k pad = 0.
+        assert_eq!(p.d_k[3 * K_PAD], 0.0);
+        // qos pad = inf.
+        assert_eq!(p.qos[1], f32::INFINITY);
+        // N pad rows = 0.
+        assert_eq!(p.n[1 * K_PAD], 0.0);
+        // Logical entries present.
+        assert_eq!(p.n[0], 3.0);
+        assert_eq!(p.d_k[0], 1e-3);
+        assert_eq!(p.c_comp[1], 20.0);
+        assert_eq!(p.online[1], 1.0);
+        assert_eq!(p.online[2], 0.0);
+    }
+
+    #[test]
+    fn unpack_strips_padding() {
+        let p = PackedProblem::from_request(&request(3));
+        let mut metrics = vec![0.0f32; NUM_METRICS * 128];
+        for row in 0..NUM_METRICS {
+            for ci in 0..128 {
+                metrics[row * 128 + ci] = (row * 1000 + ci) as f32;
+            }
+        }
+        let d_task = vec![7.0f32; 128 * T_PAD];
+        let res = p.unpack(&metrics, &d_task);
+        assert_eq!(res.c, 3);
+        assert_eq!(res.metrics.len(), NUM_METRICS * 3);
+        assert_eq!(res.metric(crate::matrixform::MetricRow::Delay, 2), 1002.0);
+        assert_eq!(res.d_task.len(), 3);
+        assert_eq!(res.task_delay(1, 0), 7.0);
+    }
+}

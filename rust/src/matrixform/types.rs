@@ -1,0 +1,325 @@
+//! Evaluation-request types: the paper's N / D / E / C matrices.
+
+/// The task matrix `N` — kernel calls per task (§3.3, Table 2). A zero
+/// entry means the kernel is not part of that task.
+#[derive(Debug, Clone)]
+pub struct TaskMatrix {
+    /// Task names (rows).
+    pub tasks: Vec<String>,
+    /// Kernel names (columns).
+    pub kernels: Vec<String>,
+    /// Row-major `[tasks × kernels]` call counts.
+    pub n: Vec<f64>,
+}
+
+impl TaskMatrix {
+    /// All-zero matrix.
+    pub fn new(tasks: Vec<String>, kernels: Vec<String>) -> Self {
+        let n = vec![0.0; tasks.len() * kernels.len()];
+        TaskMatrix { tasks, kernels, n }
+    }
+
+    /// Single-task helper: one task invoking each kernel `calls` times.
+    pub fn single_task(name: &str, kernels: Vec<String>, calls: &[f64]) -> Self {
+        assert_eq!(kernels.len(), calls.len());
+        TaskMatrix { tasks: vec![name.to_string()], kernels, n: calls.to_vec() }
+    }
+
+    /// Set `N[task, kernel] = calls`.
+    pub fn set(&mut self, task: usize, kernel: usize, calls: f64) {
+        assert!(task < self.tasks.len() && kernel < self.kernels.len());
+        assert!(calls >= 0.0, "negative call count");
+        let k = self.kernels.len();
+        self.n[task * k + kernel] = calls;
+    }
+
+    /// Read `N[task, kernel]`.
+    pub fn get(&self, task: usize, kernel: usize) -> f64 {
+        self.n[task * self.kernels.len() + kernel]
+    }
+
+    /// Number of tasks (rows).
+    pub fn num_tasks(&self) -> usize {
+        self.tasks.len()
+    }
+
+    /// Number of kernels (columns).
+    pub fn num_kernels(&self) -> usize {
+        self.kernels.len()
+    }
+}
+
+/// One candidate hardware configuration's row data.
+///
+/// The paper's per-kernel "power over clock" formulation is encoded
+/// physically: `p_leak[k] = leak_w · d_k[k] · f_clk` and
+/// `p_dyn[k] = e_dyn[k] · f_clk`, so that
+/// `(P_leak + P_dyn) / f_clk = leak_w·d + e_dyn` — leakage energy plus
+/// dynamic energy per kernel call, in joules.
+#[derive(Debug, Clone)]
+pub struct ConfigRow {
+    /// Config name.
+    pub name: String,
+    /// Clock, Hz.
+    pub f_clk: f64,
+    /// Per-kernel delay, s (one entry per kernel column).
+    pub d_k: Vec<f64>,
+    /// Per-kernel dynamic energy per call, J.
+    pub e_dyn: Vec<f64>,
+    /// Constant leakage power, W.
+    pub leak_w: f64,
+    /// Per-component embodied carbon, g (provisioning vector, §3.3.3).
+    pub c_comp: Vec<f64>,
+}
+
+impl ConfigRow {
+    /// The paper-form `P_leak` vector (see type docs).
+    pub fn p_leak(&self) -> Vec<f64> {
+        self.d_k.iter().map(|d| self.leak_w * d * self.f_clk).collect()
+    }
+
+    /// The paper-form `P_dyn` vector.
+    pub fn p_dyn(&self) -> Vec<f64> {
+        self.e_dyn.iter().map(|e| e * self.f_clk).collect()
+    }
+
+    /// Total embodied carbon with all components online, g.
+    pub fn embodied_total_g(&self) -> f64 {
+        self.c_comp.iter().sum()
+    }
+}
+
+/// A full evaluation request over a batch of configurations.
+#[derive(Debug, Clone)]
+pub struct EvalRequest {
+    /// Task matrix `N`.
+    pub tasks: TaskMatrix,
+    /// Candidate configurations (each with `d_k`/`e_dyn` matching the
+    /// kernel columns of `tasks` and `c_comp` of a common length `J`).
+    pub configs: Vec<ConfigRow>,
+    /// Component online mask (length = `c_comp` length).
+    pub online: Vec<f64>,
+    /// Per-task delay bounds, s (`f64::INFINITY` = unconstrained).
+    pub qos: Vec<f64>,
+    /// Use-phase carbon intensity, g/J.
+    pub ci_use_g_per_j: f64,
+    /// Operational lifetime (LT − D_idle), s.
+    pub lifetime_s: f64,
+    /// β of the scalarized objective (1 = exact tCDP).
+    pub beta: f64,
+    /// Average-power cap, W (`f64::INFINITY` = unconstrained).
+    pub p_max_w: f64,
+}
+
+impl EvalRequest {
+    /// Validate dimension coherence; panics with a precise message.
+    pub fn validate(&self) {
+        let k = self.tasks.num_kernels();
+        let t = self.tasks.num_tasks();
+        assert!(!self.configs.is_empty(), "no configs in request");
+        let j = self.configs[0].c_comp.len();
+        for c in &self.configs {
+            assert_eq!(c.d_k.len(), k, "{}: d_k len != kernels", c.name);
+            assert_eq!(c.e_dyn.len(), k, "{}: e_dyn len != kernels", c.name);
+            assert_eq!(c.c_comp.len(), j, "{}: c_comp len mismatch", c.name);
+            assert!(c.f_clk > 0.0, "{}: non-positive clock", c.name);
+        }
+        assert_eq!(self.online.len(), j, "online mask len != components");
+        assert_eq!(self.qos.len(), t, "qos len != tasks");
+        assert!(self.lifetime_s > 0.0, "non-positive lifetime");
+        assert!(self.beta >= 0.0, "negative beta");
+    }
+}
+
+/// Row indices of the metrics matrix produced by the runtime (must match
+/// `python/compile/kernels/ref.py::METRIC_ROWS`).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum MetricRow {
+    /// ||E||₁, J.
+    Energy = 0,
+    /// ||D||₁, s.
+    Delay = 1,
+    /// Operational carbon, g.
+    COp = 2,
+    /// Amortized embodied carbon, g.
+    CEmb = 3,
+    /// Total carbon, g.
+    CTotal = 4,
+    /// (C_op + β·C_emb)·D.
+    Tcdp = 5,
+    /// E·D.
+    Edp = 6,
+    /// C_emb·D.
+    Cdp = 7,
+    /// C_emb·E.
+    Cep = 8,
+    /// C_emb·E².
+    Ce2p = 9,
+    /// C_emb²·E.
+    C2ep = 10,
+    /// Constraint mask.
+    Feasible = 11,
+}
+
+/// Unpacked evaluation result for the logical (unpadded) batch.
+#[derive(Debug, Clone)]
+pub struct EvalResult {
+    /// Config names, batch order.
+    pub names: Vec<String>,
+    /// `[12 × C]` metric rows (row-major, logical C).
+    pub metrics: Vec<f64>,
+    /// `[C × T]` per-task delays.
+    pub d_task: Vec<f64>,
+    /// Logical batch size.
+    pub c: usize,
+    /// Logical task count.
+    pub t: usize,
+}
+
+impl EvalResult {
+    /// Metric value for one config.
+    pub fn metric(&self, row: MetricRow, config: usize) -> f64 {
+        assert!(config < self.c);
+        self.metrics[row as usize * self.c + config]
+    }
+
+    /// All values of one metric row.
+    pub fn row(&self, row: MetricRow) -> &[f64] {
+        &self.metrics[row as usize * self.c..(row as usize + 1) * self.c]
+    }
+
+    /// Per-task delay for one config.
+    pub fn task_delay(&self, config: usize, task: usize) -> f64 {
+        assert!(config < self.c && task < self.t);
+        self.d_task[config * self.t + task]
+    }
+
+    /// Index of the feasible config minimizing a metric row.
+    pub fn argmin_feasible(&self, row: MetricRow) -> Option<usize> {
+        let vals = self.row(row);
+        let feas = self.row(MetricRow::Feasible);
+        // Manual scan: argmin over configs with feasible == 1.
+        let mut best: Option<(usize, f64)> = None;
+        for i in 0..self.c {
+            if feas[i] < 0.5 || !vals[i].is_finite() {
+                continue;
+            }
+            match best {
+                Some((_, bv)) if bv <= vals[i] => {}
+                _ => best = Some((i, vals[i])),
+            }
+        }
+        best.map(|(i, _)| i)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn tiny_request() -> EvalRequest {
+        let mut tm = TaskMatrix::new(
+            vec!["t0".into(), "t1".into()],
+            vec!["k0".into(), "k1".into(), "k2".into()],
+        );
+        tm.set(0, 0, 5.0);
+        tm.set(1, 2, 2.0);
+        EvalRequest {
+            tasks: tm,
+            configs: vec![ConfigRow {
+                name: "c0".into(),
+                f_clk: 1e9,
+                d_k: vec![1e-3, 2e-3, 3e-3],
+                e_dyn: vec![1e-2, 2e-2, 3e-2],
+                leak_w: 0.05,
+                c_comp: vec![100.0, 50.0],
+            }],
+            online: vec![1.0, 1.0],
+            qos: vec![f64::INFINITY, f64::INFINITY],
+            ci_use_g_per_j: 1e-4,
+            lifetime_s: 1e6,
+            beta: 1.0,
+            p_max_w: f64::INFINITY,
+        }
+    }
+
+    #[test]
+    fn task_matrix_set_get() {
+        let r = tiny_request();
+        assert_eq!(r.tasks.get(0, 0), 5.0);
+        assert_eq!(r.tasks.get(0, 1), 0.0);
+        assert_eq!(r.tasks.get(1, 2), 2.0);
+    }
+
+    #[test]
+    fn paper_form_power_encoding_roundtrips() {
+        // (p_leak + p_dyn) / f_clk must equal leak_w*d + e_dyn.
+        let r = tiny_request();
+        let c = &r.configs[0];
+        let pl = c.p_leak();
+        let pd = c.p_dyn();
+        for k in 0..3 {
+            let energy = (pl[k] + pd[k]) / c.f_clk;
+            let expect = c.leak_w * c.d_k[k] + c.e_dyn[k];
+            assert!((energy - expect).abs() < 1e-12);
+        }
+    }
+
+    #[test]
+    fn validate_accepts_coherent_request() {
+        tiny_request().validate();
+    }
+
+    #[test]
+    #[should_panic(expected = "qos len")]
+    fn validate_rejects_bad_qos() {
+        let mut r = tiny_request();
+        r.qos = vec![1.0];
+        r.validate();
+    }
+
+    #[test]
+    #[should_panic(expected = "d_k len")]
+    fn validate_rejects_bad_kernel_dim() {
+        let mut r = tiny_request();
+        r.configs[0].d_k.pop();
+        r.validate();
+    }
+
+    #[test]
+    fn eval_result_accessors() {
+        let res = EvalResult {
+            names: vec!["a".into(), "b".into()],
+            metrics: {
+                let mut m = vec![0.0; 24];
+                m[MetricRow::Tcdp as usize * 2] = 3.0; // a
+                m[MetricRow::Tcdp as usize * 2 + 1] = 1.0; // b
+                m[MetricRow::Feasible as usize * 2] = 1.0;
+                m[MetricRow::Feasible as usize * 2 + 1] = 1.0;
+                m
+            },
+            d_task: vec![0.5, 0.6],
+            c: 2,
+            t: 1,
+        };
+        assert_eq!(res.metric(MetricRow::Tcdp, 0), 3.0);
+        assert_eq!(res.argmin_feasible(MetricRow::Tcdp), Some(1));
+        assert_eq!(res.task_delay(1, 0), 0.6);
+    }
+
+    #[test]
+    fn argmin_skips_infeasible() {
+        let mut metrics = vec![0.0; 24];
+        metrics[MetricRow::Tcdp as usize * 2] = 5.0;
+        metrics[MetricRow::Tcdp as usize * 2 + 1] = 1.0;
+        metrics[MetricRow::Feasible as usize * 2] = 1.0; // only config 0 feasible
+        let res = EvalResult {
+            names: vec!["a".into(), "b".into()],
+            metrics,
+            d_task: vec![0.0, 0.0],
+            c: 2,
+            t: 1,
+        };
+        assert_eq!(res.argmin_feasible(MetricRow::Tcdp), Some(0));
+    }
+}

@@ -1,0 +1,10 @@
+//! Reporting: aligned tables, CSV, normalization and ASCII charts.
+//!
+//! Every experiment regenerates its paper figure as (a) an aligned text
+//! table with the paper's rows/series, (b) an optional CSV dump, and (c)
+//! an ASCII bar/line rendering for quick visual shape checks in the
+//! terminal.
+
+mod table;
+
+pub use table::{ascii_bars, ascii_series, normalize_to, write_csv, Table};

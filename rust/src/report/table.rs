@@ -1,0 +1,202 @@
+//! Table/CSV/ASCII-chart primitives.
+
+use std::fmt::Write as _;
+
+/// A simple column-aligned table.
+#[derive(Debug, Clone)]
+pub struct Table {
+    /// Title printed above the table.
+    pub title: String,
+    headers: Vec<String>,
+    rows: Vec<Vec<String>>,
+}
+
+impl Table {
+    /// New table with headers.
+    pub fn new(title: &str, headers: &[&str]) -> Self {
+        Table {
+            title: title.to_string(),
+            headers: headers.iter().map(|s| s.to_string()).collect(),
+            rows: Vec::new(),
+        }
+    }
+
+    /// Append a row (must match header count).
+    pub fn row(&mut self, cells: &[String]) {
+        assert_eq!(cells.len(), self.headers.len(), "row width mismatch");
+        self.rows.push(cells.to_vec());
+    }
+
+    /// Convenience: row from display values.
+    pub fn rowf(&mut self, cells: &[&dyn std::fmt::Display]) {
+        let cells: Vec<String> = cells.iter().map(|c| c.to_string()).collect();
+        self.row(&cells);
+    }
+
+    /// Number of data rows.
+    pub fn len(&self) -> usize {
+        self.rows.len()
+    }
+
+    /// True if no data rows.
+    pub fn is_empty(&self) -> bool {
+        self.rows.is_empty()
+    }
+
+    /// Render with aligned columns.
+    pub fn render(&self) -> String {
+        let mut widths: Vec<usize> = self.headers.iter().map(|h| h.len()).collect();
+        for row in &self.rows {
+            for (i, c) in row.iter().enumerate() {
+                widths[i] = widths[i].max(c.len());
+            }
+        }
+        let mut out = String::new();
+        if !self.title.is_empty() {
+            let _ = writeln!(out, "== {} ==", self.title);
+        }
+        let line = |cells: &[String], widths: &[usize]| -> String {
+            let mut s = String::new();
+            for (i, c) in cells.iter().enumerate() {
+                if i > 0 {
+                    s.push_str("  ");
+                }
+                let _ = write!(s, "{:>width$}", c, width = widths[i]);
+            }
+            s
+        };
+        let _ = writeln!(out, "{}", line(&self.headers, &widths));
+        let _ = writeln!(out, "{}", "-".repeat(widths.iter().sum::<usize>() + 2 * (widths.len() - 1)));
+        for row in &self.rows {
+            let _ = writeln!(out, "{}", line(row, &widths));
+        }
+        out
+    }
+
+    /// CSV rendering (RFC-4180-ish quoting).
+    pub fn to_csv(&self) -> String {
+        let esc = |s: &str| -> String {
+            if s.contains([',', '"', '\n']) {
+                format!("\"{}\"", s.replace('"', "\"\""))
+            } else {
+                s.to_string()
+            }
+        };
+        let mut out = String::new();
+        let _ = writeln!(out, "{}", self.headers.iter().map(|h| esc(h)).collect::<Vec<_>>().join(","));
+        for row in &self.rows {
+            let _ = writeln!(out, "{}", row.iter().map(|c| esc(c)).collect::<Vec<_>>().join(","));
+        }
+        out
+    }
+}
+
+/// Write a table as CSV to a path, creating parent directories.
+pub fn write_csv(table: &Table, path: &str) -> crate::Result<()> {
+    if let Some(parent) = std::path::Path::new(path).parent() {
+        std::fs::create_dir_all(parent)?;
+    }
+    std::fs::write(path, table.to_csv())?;
+    Ok(())
+}
+
+/// Normalize values to a reference entry (the paper's "normalized to X").
+pub fn normalize_to(values: &[f64], reference: f64) -> Vec<f64> {
+    assert!(reference != 0.0 && reference.is_finite(), "bad normalization reference");
+    values.iter().map(|v| v / reference).collect()
+}
+
+/// Horizontal ASCII bar chart (one bar per labeled value).
+pub fn ascii_bars(labels: &[String], values: &[f64], width: usize) -> String {
+    assert_eq!(labels.len(), values.len());
+    let max = values.iter().cloned().fold(0.0f64, f64::max).max(1e-300);
+    let lw = labels.iter().map(|l| l.len()).max().unwrap_or(0);
+    let mut out = String::new();
+    for (l, &v) in labels.iter().zip(values) {
+        let n = ((v / max) * width as f64).round().max(0.0) as usize;
+        let _ = writeln!(out, "{:>lw$} | {} {:.4}", l, "#".repeat(n), v, lw = lw);
+    }
+    out
+}
+
+/// ASCII line chart for a (x, series...) set, log-x friendly: renders each
+/// series as a row of scaled glyphs. Minimal but enough for shape checks.
+pub fn ascii_series(x_labels: &[String], series: &[(&str, Vec<f64>)], width: usize) -> String {
+    let mut out = String::new();
+    let max = series
+        .iter()
+        .flat_map(|(_, ys)| ys.iter().cloned())
+        .fold(0.0f64, f64::max)
+        .max(1e-300);
+    for (name, ys) in series {
+        assert_eq!(ys.len(), x_labels.len());
+        let _ = write!(out, "{name:>10} |");
+        for &y in ys {
+            let n = ((y / max) * 9.0).round() as usize;
+            let _ = write!(out, "{}", n.min(9));
+        }
+        let _ = writeln!(out);
+    }
+    let _ = write!(out, "{:>10} |", "x");
+    let _ = writeln!(out, "{}", x_labels.iter().map(|l| l.chars().next().unwrap_or(' ')).collect::<String>());
+    let _ = writeln!(out, "(digits = value scaled 0-9 of max; width hint {width})");
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn table_renders_aligned() {
+        let mut t = Table::new("demo", &["name", "v"]);
+        t.row(&["a".into(), "1.5".into()]);
+        t.row(&["longer".into(), "22".into()]);
+        let s = t.render();
+        assert!(s.contains("== demo =="));
+        assert!(s.contains("longer"));
+        let lines: Vec<&str> = s.lines().collect();
+        assert_eq!(lines.len(), 5);
+    }
+
+    #[test]
+    #[should_panic(expected = "row width")]
+    fn row_width_checked() {
+        let mut t = Table::new("x", &["a", "b"]);
+        t.row(&["only-one".into()]);
+    }
+
+    #[test]
+    fn csv_quotes_specials() {
+        let mut t = Table::new("x", &["a", "b"]);
+        t.row(&["has,comma".into(), "has\"quote".into()]);
+        let csv = t.to_csv();
+        assert!(csv.contains("\"has,comma\""));
+        assert!(csv.contains("\"has\"\"quote\""));
+    }
+
+    #[test]
+    fn normalization() {
+        let n = normalize_to(&[2.0, 4.0, 1.0], 2.0);
+        assert_eq!(n, vec![1.0, 2.0, 0.5]);
+    }
+
+    #[test]
+    fn bars_scale_to_max() {
+        let s = ascii_bars(&["a".into(), "b".into()], &[1.0, 2.0], 10);
+        let lines: Vec<&str> = s.lines().collect();
+        assert!(lines[1].matches('#').count() == 10);
+        assert!(lines[0].matches('#').count() == 5);
+    }
+
+    #[test]
+    fn series_renders_rows() {
+        let s = ascii_series(
+            &["1".into(), "2".into(), "3".into()],
+            &[("a", vec![1.0, 2.0, 3.0]), ("b", vec![3.0, 2.0, 1.0])],
+            30,
+        );
+        assert!(s.contains('a'));
+        assert!(s.lines().count() >= 4);
+    }
+}

@@ -1,0 +1,25 @@
+//! The engine abstraction the coordinator schedules batches onto.
+
+use crate::matrixform::PackedProblem;
+
+/// Raw (still padded) engine output buffers.
+#[derive(Debug, Clone)]
+pub struct RawOutput {
+    /// `[12 × c_pad]` metric rows.
+    pub metrics: Vec<f32>,
+    /// `[c_pad × T_PAD]` per-task delays.
+    pub d_task: Vec<f32>,
+}
+
+/// A batched metric evaluator.
+///
+/// Not `Send`: the PJRT client is `Rc`-based, so engines stay on the
+/// coordinating thread; the coordinator parallelizes batch *assembly*
+/// (accelerator simulation) instead.
+pub trait Engine {
+    /// Execute one packed batch.
+    fn execute(&mut self, p: &PackedProblem) -> crate::Result<RawOutput>;
+
+    /// Engine label for logs/reports ("pjrt", "host").
+    fn name(&self) -> &'static str;
+}

@@ -1,0 +1,199 @@
+//! Pure-Rust mirror of the Layer-2 evaluation graph.
+//!
+//! Arithmetic is done in f32 in the same order as the JAX reference
+//! (`python/compile/kernels/ref.py`) so PJRT-vs-host differences stay at
+//! rounding level; the integration tests assert ≤ 1e-5 relative error.
+
+use super::engine::{Engine, RawOutput};
+use crate::matrixform::{PackedProblem, J_PAD, K_PAD, NUM_METRICS, T_PAD};
+
+/// Host (no-XLA) engine.
+#[derive(Debug, Default)]
+pub struct HostEngine {
+    _private: (),
+}
+
+impl HostEngine {
+    /// Create a host engine.
+    pub fn new() -> Self {
+        HostEngine { _private: () }
+    }
+}
+
+impl Engine for HostEngine {
+    fn execute(&mut self, p: &PackedProblem) -> crate::Result<RawOutput> {
+        let c_pad = p.c_pad;
+        let (ci_use, lifetime, beta, p_max) = (
+            p.scalars[0],
+            p.scalars[1],
+            p.scalars[2],
+            p.scalars[3],
+        );
+
+        let mut metrics = vec![0.0f32; NUM_METRICS * c_pad];
+        let mut d_task_out = vec![0.0f32; c_pad * T_PAD];
+
+        for ci in 0..c_pad {
+            let f_clk = p.f_clk[ci];
+            // Per-task contractions (K accumulation in f32, matching XLA's
+            // row-major dot).
+            let mut e_task = [0.0f32; T_PAD];
+            let mut d_task = [0.0f32; T_PAD];
+            for ti in 0..T_PAD {
+                let mut e_acc = 0.0f32;
+                let mut d_acc = 0.0f32;
+                for ki in 0..K_PAD {
+                    let n = p.n[ti * K_PAD + ki];
+                    let e_k = (p.p_leak[ci * K_PAD + ki] + p.p_dyn[ci * K_PAD + ki]) / f_clk;
+                    e_acc += e_k * n;
+                    d_acc += p.d_k[ci * K_PAD + ki] * n;
+                }
+                e_task[ti] = e_acc;
+                d_task[ti] = d_acc;
+            }
+            let energy: f32 = e_task.iter().sum();
+            let delay: f32 = d_task.iter().sum();
+
+            let c_op = ci_use * energy;
+            let mut c_emb_overall = 0.0f32;
+            for ji in 0..J_PAD {
+                c_emb_overall += p.c_comp[ci * J_PAD + ji] * p.online[ji];
+            }
+            let c_emb = c_emb_overall * delay / lifetime;
+
+            let c_total = c_op + c_emb;
+            let tcdp = (c_op + beta * c_emb) * delay;
+            let edp = energy * delay;
+            let cdp = c_emb * delay;
+            let cep = c_emb * energy;
+            let ce2p = cep * energy;
+            let c2ep = c_emb * cep;
+
+            let mut qos_ok = true;
+            for ti in 0..T_PAD {
+                if !(d_task[ti] <= p.qos[ti]) {
+                    qos_ok = false;
+                }
+            }
+            let avg_power = energy / delay.max(1e-30);
+            let feasible = if qos_ok && avg_power <= p_max { 1.0 } else { 0.0 };
+
+            let rows = [
+                energy, delay, c_op, c_emb, c_total, tcdp, edp, cdp, cep, ce2p, c2ep, feasible,
+            ];
+            for (row, v) in rows.iter().enumerate() {
+                metrics[row * c_pad + ci] = *v;
+            }
+            d_task_out[ci * T_PAD..(ci + 1) * T_PAD].copy_from_slice(&d_task);
+        }
+
+        Ok(RawOutput { metrics, d_task: d_task_out })
+    }
+
+    fn name(&self) -> &'static str {
+        "host"
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::matrixform::{ConfigRow, EvalRequest, MetricRow, TaskMatrix};
+    use crate::runtime::evaluate;
+
+    fn request() -> EvalRequest {
+        let tm = TaskMatrix::single_task("t", vec!["k0".into(), "k1".into()], &[10.0, 5.0]);
+        EvalRequest {
+            tasks: tm,
+            configs: vec![
+                ConfigRow {
+                    name: "fast".into(),
+                    f_clk: 1e9,
+                    d_k: vec![1e-3, 2e-3],
+                    e_dyn: vec![0.05, 0.10],
+                    leak_w: 0.02,
+                    c_comp: vec![500.0, 100.0],
+                },
+                ConfigRow {
+                    name: "slow".into(),
+                    f_clk: 5e8,
+                    d_k: vec![4e-3, 8e-3],
+                    e_dyn: vec![0.02, 0.04],
+                    leak_w: 0.01,
+                    c_comp: vec![120.0, 30.0],
+                },
+            ],
+            online: vec![1.0, 1.0],
+            qos: vec![f64::INFINITY],
+            ci_use_g_per_j: 1.2e-4,
+            lifetime_s: 3.0e6,
+            beta: 1.0,
+            p_max_w: f64::INFINITY,
+        }
+    }
+
+    #[test]
+    fn matches_hand_calculation() {
+        let req = request();
+        let mut eng = HostEngine::new();
+        let res = evaluate(&mut eng, &req).unwrap();
+        // Config "fast": delay = 10*1e-3 + 5*2e-3 = 0.02 s.
+        let d = res.metric(MetricRow::Delay, 0);
+        assert!((d - 0.02).abs() < 1e-8, "delay={d}");
+        // Energy: e_k = leak*d + e_dyn: k0: .02*1e-3+.05, k1: .02*2e-3+.10.
+        let e_expect = 10.0 * (0.02 * 1e-3 + 0.05) + 5.0 * (0.02 * 2e-3 + 0.10);
+        let e = res.metric(MetricRow::Energy, 0);
+        assert!((e - e_expect).abs() / e_expect < 1e-6, "energy={e} expect={e_expect}");
+        // Carbon terms.
+        let c_op = res.metric(MetricRow::COp, 0);
+        assert!((c_op - 1.2e-4 * e_expect).abs() < 1e-9);
+        let c_emb = res.metric(MetricRow::CEmb, 0);
+        assert!((c_emb - 600.0 * 0.02 / 3.0e6).abs() < 1e-9);
+        let tcdp = res.metric(MetricRow::Tcdp, 0);
+        assert!((tcdp - (c_op + c_emb) * 0.02).abs() < 1e-10);
+    }
+
+    #[test]
+    fn qos_marks_infeasible() {
+        let mut req = request();
+        req.qos = vec![0.03]; // fast (0.02) passes, slow (0.08) fails
+        let res = evaluate(&mut HostEngine::new(), &req).unwrap();
+        assert_eq!(res.metric(MetricRow::Feasible, 0), 1.0);
+        assert_eq!(res.metric(MetricRow::Feasible, 1), 0.0);
+        assert_eq!(res.argmin_feasible(MetricRow::Tcdp), Some(0));
+    }
+
+    #[test]
+    fn power_cap_marks_infeasible() {
+        let mut req = request();
+        // fast: E/D ≈ 0.55/0.02*?... compute: avg power = e/d.
+        let res0 = evaluate(&mut HostEngine::new(), &req).unwrap();
+        let p_fast = res0.metric(MetricRow::Energy, 0) / res0.metric(MetricRow::Delay, 0);
+        let p_slow = res0.metric(MetricRow::Energy, 1) / res0.metric(MetricRow::Delay, 1);
+        let cap = (p_fast.min(p_slow) + p_fast.max(p_slow)) / 2.0;
+        req.p_max_w = cap;
+        let res = evaluate(&mut HostEngine::new(), &req).unwrap();
+        let feas: Vec<f64> = (0..2).map(|i| res.metric(MetricRow::Feasible, i)).collect();
+        assert_eq!(feas.iter().filter(|&&f| f == 1.0).count(), 1);
+    }
+
+    #[test]
+    fn provisioning_mask_respected() {
+        let mut req = request();
+        req.online = vec![1.0, 0.0];
+        let res = evaluate(&mut HostEngine::new(), &req).unwrap();
+        let c_emb = res.metric(MetricRow::CEmb, 0);
+        assert!((c_emb - 500.0 * 0.02 / 3.0e6).abs() < 1e-9);
+    }
+
+    #[test]
+    fn beta_scales_tcdp_only() {
+        let mut req = request();
+        req.beta = 0.0;
+        let r0 = evaluate(&mut HostEngine::new(), &req).unwrap();
+        req.beta = 2.0;
+        let r2 = evaluate(&mut HostEngine::new(), &req).unwrap();
+        assert!(r2.metric(MetricRow::Tcdp, 0) > r0.metric(MetricRow::Tcdp, 0));
+        assert_eq!(r2.metric(MetricRow::Cdp, 0), r0.metric(MetricRow::Cdp, 0));
+    }
+}

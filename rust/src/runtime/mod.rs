@@ -1,0 +1,39 @@
+//! Execution engines for the batched metric evaluation.
+//!
+//! Two interchangeable [`Engine`] implementations:
+//!
+//! * [`PjrtEngine`] — the production path: loads the AOT HLO-text
+//!   artifacts (`artifacts/dse_metrics_c*.hlo.txt`) through the `xla`
+//!   crate's PJRT CPU client, compiles each variant **once**, caches the
+//!   executables and streams packed batches through them. Python is never
+//!   on this path.
+//! * [`HostEngine`] — a pure-Rust f32 mirror of the Layer-2 graph, used to
+//!   cross-check PJRT numerics in integration tests and as a fallback when
+//!   artifacts are absent.
+
+mod engine;
+mod host;
+mod pjrt;
+
+pub use engine::{Engine, RawOutput};
+pub use host::HostEngine;
+pub use pjrt::PjrtEngine;
+
+use crate::matrixform::{EvalRequest, EvalResult, PackedProblem};
+
+/// Evaluate a request on any engine (pack → execute → unpack).
+pub fn evaluate(engine: &mut dyn Engine, req: &EvalRequest) -> crate::Result<EvalResult> {
+    let packed = PackedProblem::from_request(req);
+    let raw = engine.execute(&packed)?;
+    Ok(packed.unpack(&raw.metrics, &raw.d_task))
+}
+
+/// Build the best available engine: PJRT if the artifacts directory
+/// exists and loads, host fallback otherwise. Returns the engine and a
+/// label naming which path was taken.
+pub fn auto_engine(artifacts_dir: &str) -> (Box<dyn Engine>, &'static str) {
+    match PjrtEngine::load(artifacts_dir) {
+        Ok(e) => (Box::new(e), "pjrt"),
+        Err(_) => (Box::new(HostEngine::new()), "host"),
+    }
+}

@@ -1,0 +1,141 @@
+//! PJRT engine: loads the AOT HLO-text artifacts and executes them on the
+//! XLA CPU client (`xla` crate). Python never runs on this path.
+//!
+//! One executable is compiled per config-batch variant (C = 128 / 1024)
+//! at engine construction and cached for the process lifetime; each
+//! `execute` call only builds input literals and runs.
+
+use std::collections::HashMap;
+use std::path::Path;
+
+use anyhow::{bail, Context};
+
+use super::engine::{Engine, RawOutput};
+use crate::configfmt::{parse, Json};
+use crate::matrixform::{PackedProblem, J_PAD, K_PAD, NUM_METRICS, T_PAD};
+
+/// PJRT-backed engine with per-variant executable cache.
+pub struct PjrtEngine {
+    client: xla::PjRtClient,
+    executables: HashMap<usize, xla::PjRtLoadedExecutable>,
+}
+
+impl PjrtEngine {
+    /// Load every variant listed in `artifacts/manifest.json`, compile and
+    /// cache. Fails if the manifest is missing/stale or any artifact does
+    /// not parse.
+    pub fn load(artifacts_dir: &str) -> crate::Result<Self> {
+        let dir = Path::new(artifacts_dir);
+        let manifest_path = dir.join("manifest.json");
+        let text = std::fs::read_to_string(&manifest_path)
+            .with_context(|| format!("reading {}", manifest_path.display()))?;
+        let manifest = parse(&text).context("parsing artifact manifest")?;
+
+        // Contract checks: shape constants must match this build.
+        let want = [("t", T_PAD), ("k", K_PAD), ("j", J_PAD), ("num_metrics", NUM_METRICS)];
+        for (key, expect) in want {
+            let got = manifest.get(key).and_then(Json::as_i64).unwrap_or(-1);
+            if got != expect as i64 {
+                bail!("artifact manifest {key}={got}, runtime expects {expect}; re-run `make artifacts`");
+            }
+        }
+
+        let client = xla::PjRtClient::cpu().context("creating PJRT CPU client")?;
+        let mut executables = HashMap::new();
+        let variants = manifest
+            .get("variants")
+            .and_then(Json::as_obj)
+            .context("manifest missing variants")?;
+        for (c_str, entry) in variants {
+            let c: usize = c_str.parse().context("bad variant key")?;
+            let file = entry
+                .get("file")
+                .and_then(Json::as_str)
+                .context("variant missing file")?;
+            let path = dir.join(file);
+            let proto = xla::HloModuleProto::from_text_file(
+                path.to_str().context("non-UTF8 artifact path")?,
+            )
+            .with_context(|| format!("parsing HLO text {}", path.display()))?;
+            let comp = xla::XlaComputation::from_proto(&proto);
+            let exe = client
+                .compile(&comp)
+                .with_context(|| format!("compiling variant C={c}"))?;
+            executables.insert(c, exe);
+        }
+        if executables.is_empty() {
+            bail!("no artifact variants found in {artifacts_dir}");
+        }
+        Ok(PjrtEngine { client, executables })
+    }
+
+    /// Variants available (sorted).
+    pub fn variants(&self) -> Vec<usize> {
+        let mut v: Vec<usize> = self.executables.keys().copied().collect();
+        v.sort_unstable();
+        v
+    }
+
+    /// PJRT platform name (diagnostics).
+    pub fn platform(&self) -> String {
+        self.client.platform_name()
+    }
+
+    fn literal_2d(data: &[f32], rows: usize, cols: usize) -> crate::Result<xla::Literal> {
+        assert_eq!(data.len(), rows * cols);
+        // Single-copy construction (perf: `vec1(..).reshape(..)` costs a
+        // second literal allocation + copy on the hot path — see
+        // EXPERIMENTS.md §Perf).
+        let bytes = unsafe {
+            std::slice::from_raw_parts(data.as_ptr() as *const u8, std::mem::size_of_val(data))
+        };
+        Ok(xla::Literal::create_from_shape_and_untyped_data(
+            xla::ElementType::F32,
+            &[rows, cols],
+            bytes,
+        )?)
+    }
+}
+
+impl Engine for PjrtEngine {
+    fn execute(&mut self, p: &PackedProblem) -> crate::Result<RawOutput> {
+        let exe = self
+            .executables
+            .get(&p.c_pad)
+            .with_context(|| format!("no artifact variant for C={}", p.c_pad))?;
+
+        let inputs = [
+            Self::literal_2d(&p.n, T_PAD, K_PAD)?,
+            Self::literal_2d(&p.p_leak, p.c_pad, K_PAD)?,
+            Self::literal_2d(&p.p_dyn, p.c_pad, K_PAD)?,
+            Self::literal_2d(&p.f_clk, p.c_pad, 1)?,
+            Self::literal_2d(&p.d_k, p.c_pad, K_PAD)?,
+            Self::literal_2d(&p.c_comp, p.c_pad, J_PAD)?,
+            xla::Literal::vec1(&p.online),
+            xla::Literal::vec1(&p.qos),
+            xla::Literal::vec1(&p.scalars),
+        ];
+
+        let result = exe.execute::<xla::Literal>(&inputs)?;
+        let out = result[0][0].to_literal_sync()?;
+        let (metrics_lit, d_task_lit) = out.to_tuple2()?;
+        let metrics = metrics_lit.to_vec::<f32>()?;
+        let d_task = d_task_lit.to_vec::<f32>()?;
+        if metrics.len() != NUM_METRICS * p.c_pad || d_task.len() != p.c_pad * T_PAD {
+            bail!(
+                "artifact output shape mismatch: metrics={} d_task={} for C={}",
+                metrics.len(),
+                d_task.len(),
+                p.c_pad
+            );
+        }
+        Ok(RawOutput { metrics, d_task })
+    }
+
+    fn name(&self) -> &'static str {
+        "pjrt"
+    }
+}
+
+// PJRT tests live in `rust/tests/pjrt_vs_host.rs` (integration) because
+// they need the artifacts built by `make artifacts`.

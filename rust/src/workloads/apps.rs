@@ -1,0 +1,230 @@
+//! The top-10 deployed VR applications (Figs 3, 4, 12, 13).
+//!
+//! Names follow the paper's anonymized scheme — `G-n` general gaming,
+//! `SG-n` social gaming, `B-n & S-n` browser/virtual desktop (+ system
+//! services), `M-n` streaming & media. Per-app power fractions and TLP
+//! distributions are calibrated to the published aggregates: mean power
+//! ≈ 70 % of the 8.3 W TDP, busy-time TLP between ≈ 3.5 and ≈ 4.15
+//! (Fig 12), and the Fig 13 optimal core counts.
+
+use super::tlp::TlpDistribution;
+
+/// Application category (Fig 3).
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum AppCategory {
+    /// General gaming.
+    Gaming,
+    /// Social gaming.
+    SocialGaming,
+    /// Browser & virtual desktop (bundled with system services).
+    Browser,
+    /// Streaming & media.
+    Media,
+}
+
+impl AppCategory {
+    /// Short label used in figures ("G", "SG", "B", "M").
+    pub fn label(self) -> &'static str {
+        match self {
+            AppCategory::Gaming => "G",
+            AppCategory::SocialGaming => "SG",
+            AppCategory::Browser => "B",
+            AppCategory::Media => "M",
+        }
+    }
+}
+
+/// One deployed VR application.
+#[derive(Debug, Clone)]
+pub struct VrApp {
+    /// Anonymized name ("G-2", "B-1 & S-1", ...).
+    pub name: &'static str,
+    /// Category.
+    pub category: AppCategory,
+    /// Mean power as a fraction of headset TDP (Fig 4 top).
+    pub power_frac_mean: f64,
+    /// Std-dev of the power fraction (drives the p5/p95 bars).
+    pub power_frac_std: f64,
+    /// Frame rate achieved with all 8 cores enabled.
+    pub fps_all_cores: f64,
+    /// GPU busy fraction (for the Fig 4 utilized/unused embodied split).
+    pub gpu_util: f64,
+    /// Concurrently-busy-core distribution (Fig 12).
+    pub tlp: TlpDistribution,
+}
+
+/// QoS floor for the headset (Quest-class 72 Hz refresh).
+pub const QOS_FPS: f64 = 72.0;
+
+/// The top-10 application set, popularity order.
+pub fn top10_apps() -> Vec<VrApp> {
+    vec![
+        VrApp {
+            name: "G-1",
+            category: AppCategory::Gaming,
+            power_frac_mean: 0.74,
+            power_frac_std: 0.06,
+            fps_all_cores: 88.0,
+            gpu_util: 0.68,
+            tlp: TlpDistribution::new([0.08, 0.0, 0.10, 0.20, 0.30, 0.18, 0.10, 0.04, 0.0]),
+        },
+        VrApp {
+            name: "G-2",
+            category: AppCategory::Gaming,
+            power_frac_mean: 0.72,
+            power_frac_std: 0.05,
+            fps_all_cores: 90.0,
+            gpu_util: 0.66,
+            tlp: TlpDistribution::new([0.08, 0.0, 0.08, 0.14, 0.64, 0.04, 0.02, 0.0, 0.0]),
+        },
+        VrApp {
+            name: "SG-1",
+            category: AppCategory::SocialGaming,
+            power_frac_mean: 0.71,
+            power_frac_std: 0.07,
+            fps_all_cores: 75.0,
+            gpu_util: 0.60,
+            tlp: TlpDistribution::new([0.10, 0.04, 0.10, 0.19, 0.26, 0.13, 0.10, 0.05, 0.03]),
+        },
+        VrApp {
+            name: "G-3",
+            category: AppCategory::Gaming,
+            power_frac_mean: 0.70,
+            power_frac_std: 0.05,
+            fps_all_cores: 92.0,
+            gpu_util: 0.64,
+            tlp: TlpDistribution::new([0.10, 0.0, 0.12, 0.24, 0.28, 0.16, 0.10, 0.0, 0.0]),
+        },
+        VrApp {
+            name: "B-1 & S-1",
+            category: AppCategory::Browser,
+            power_frac_mean: 0.64,
+            power_frac_std: 0.08,
+            fps_all_cores: 74.0,
+            gpu_util: 0.30,
+            tlp: TlpDistribution::new([0.08, 0.06, 0.14, 0.16, 0.21, 0.10, 0.07, 0.14, 0.04]),
+        },
+        VrApp {
+            name: "M-1",
+            category: AppCategory::Media,
+            power_frac_mean: 0.60,
+            power_frac_std: 0.05,
+            fps_all_cores: 85.0,
+            gpu_util: 0.35,
+            tlp: TlpDistribution::new([0.12, 0.10, 0.0, 0.32, 0.30, 0.10, 0.06, 0.0, 0.0]),
+        },
+        VrApp {
+            name: "G-4",
+            category: AppCategory::Gaming,
+            power_frac_mean: 0.68,
+            power_frac_std: 0.06,
+            fps_all_cores: 86.0,
+            gpu_util: 0.62,
+            tlp: TlpDistribution::new([0.09, 0.0, 0.12, 0.22, 0.30, 0.17, 0.10, 0.0, 0.0]),
+        },
+        VrApp {
+            name: "SG-2",
+            category: AppCategory::SocialGaming,
+            power_frac_mean: 0.69,
+            power_frac_std: 0.07,
+            fps_all_cores: 78.0,
+            gpu_util: 0.55,
+            tlp: TlpDistribution::new([0.10, 0.05, 0.10, 0.22, 0.26, 0.13, 0.09, 0.04, 0.01]),
+        },
+        VrApp {
+            name: "M-2",
+            category: AppCategory::Media,
+            power_frac_mean: 0.58,
+            power_frac_std: 0.05,
+            fps_all_cores: 87.0,
+            gpu_util: 0.33,
+            tlp: TlpDistribution::new([0.14, 0.10, 0.0, 0.34, 0.28, 0.09, 0.05, 0.0, 0.0]),
+        },
+        VrApp {
+            name: "G-5",
+            category: AppCategory::Gaming,
+            power_frac_mean: 0.73,
+            power_frac_std: 0.06,
+            fps_all_cores: 84.0,
+            gpu_util: 0.65,
+            tlp: TlpDistribution::new([0.08, 0.0, 0.11, 0.21, 0.30, 0.18, 0.12, 0.0, 0.0]),
+        },
+    ]
+}
+
+/// The four applications the paper profiles in depth (Figs 12/13).
+pub fn fig12_apps() -> Vec<VrApp> {
+    top10_apps()
+        .into_iter()
+        .filter(|a| matches!(a.name, "G-2" | "M-1" | "B-1 & S-1" | "SG-1"))
+        .collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn ten_apps_and_categories() {
+        let apps = top10_apps();
+        assert_eq!(apps.len(), 10);
+        let gaming = apps.iter().filter(|a| a.category == AppCategory::Gaming).count();
+        let social = apps.iter().filter(|a| a.category == AppCategory::SocialGaming).count();
+        // Fig 3: gaming dominates, then social gaming.
+        assert!(gaming > social);
+        assert!(social >= 2);
+    }
+
+    #[test]
+    fn mean_power_near_70pct_of_tdp() {
+        // Fig 4: "Most applications utilize approximately 70% of the
+        // device's TDP budget".
+        let apps = top10_apps();
+        let mean: f64 = apps.iter().map(|a| a.power_frac_mean).sum::<f64>() / apps.len() as f64;
+        assert!((0.62..0.75).contains(&mean), "mean power fraction = {mean}");
+    }
+
+    #[test]
+    fn fig12_tlp_range() {
+        // Paper: "TLP ranges from 3.52 to 4.15 ... with 3.9 average TLP."
+        let apps = fig12_apps();
+        assert_eq!(apps.len(), 4);
+        let tlps: Vec<f64> = apps.iter().map(|a| a.tlp.average()).collect();
+        for (a, t) in apps.iter().zip(&tlps) {
+            assert!((3.4..4.3).contains(t), "{} TLP = {t}", a.name);
+        }
+        let avg = tlps.iter().sum::<f64>() / 4.0;
+        assert!((3.7..4.1).contains(&avg), "average TLP = {avg}");
+    }
+
+    #[test]
+    fn fig13_optimal_core_counts() {
+        // Paper Fig 13 stars: 4-core for G-2 and M-1, 7-core for B-1 & S-1,
+        // 6-core for SG-1 (QoS-preserving minimum).
+        let apps = top10_apps();
+        let min_cores = |name: &str| {
+            let a = apps.iter().find(|a| a.name == name).unwrap();
+            a.tlp.min_cores_for_qos(a.fps_all_cores, QOS_FPS)
+        };
+        assert_eq!(min_cores("G-2"), 4);
+        assert_eq!(min_cores("M-1"), 4);
+        assert_eq!(min_cores("B-1 & S-1"), 7);
+        assert_eq!(min_cores("SG-1"), 6);
+    }
+
+    #[test]
+    fn at_least_three_cores_idle_on_average() {
+        // Fig 12 discussion: "There are at least three unused cores at any
+        // point in time" — mean busy cores ≤ 5 for every profiled app.
+        for a in fig12_apps() {
+            assert!(a.tlp.mean_busy_cores() <= 5.0, "{} busy={}", a.name, a.tlp.mean_busy_cores());
+        }
+    }
+
+    #[test]
+    fn all_apps_meet_qos_at_full_core_count() {
+        for a in top10_apps() {
+            assert!(a.fps_all_cores >= QOS_FPS, "{} below QoS at 8 cores", a.name);
+        }
+    }
+}

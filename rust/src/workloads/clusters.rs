@@ -1,0 +1,114 @@
+//! The Table 4 design-space-exploration kernel clusters.
+
+use crate::accel::Workload;
+
+/// A DSE workload cluster (Table 4).
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum Cluster {
+    /// Every kernel in Table 3 (the "All" normalization baseline of Fig 7).
+    All,
+    /// 10 XR-dominant kernels.
+    XrDominant10,
+    /// 10 AI-dominant kernels.
+    AiDominant10,
+    /// 5 XR kernels.
+    Xr5,
+    /// 5 AI kernels.
+    Ai5,
+}
+
+impl Cluster {
+    /// Figure 7 x-axis order.
+    pub const ALL: [Cluster; 5] = [
+        Cluster::All,
+        Cluster::XrDominant10,
+        Cluster::AiDominant10,
+        Cluster::Xr5,
+        Cluster::Ai5,
+    ];
+
+    /// Display label.
+    pub fn label(self) -> &'static str {
+        match self {
+            Cluster::All => "All",
+            Cluster::XrDominant10 => "10 XR-dominant",
+            Cluster::AiDominant10 => "10 AI-dominant",
+            Cluster::Xr5 => "5 XR",
+            Cluster::Ai5 => "5 AI",
+        }
+    }
+
+    /// Parse a CLI name ("all", "10xr", "10ai", "5xr", "5ai").
+    pub fn parse(s: &str) -> Option<Cluster> {
+        match s.to_ascii_lowercase().as_str() {
+            "all" => Some(Cluster::All),
+            "10xr" | "xr10" => Some(Cluster::XrDominant10),
+            "10ai" | "ai10" => Some(Cluster::AiDominant10),
+            "5xr" | "xr5" => Some(Cluster::Xr5),
+            "5ai" | "ai5" => Some(Cluster::Ai5),
+            _ => None,
+        }
+    }
+}
+
+/// The kernels in a cluster, exactly as listed in Table 4.
+pub fn cluster_workloads(c: Cluster) -> Vec<Workload> {
+    use Workload::*;
+    match c {
+        Cluster::All => Workload::ALL.to_vec(),
+        Cluster::XrDominant10 => {
+            vec![Agg3d, Et, Jlp, Hrn, Unet, EFan, Dn, Sr256, Sr512, Sr1024]
+        }
+        Cluster::AiDominant10 => {
+            vec![Rn18, Rn50, Rn152, Gn, Mn2, Agg3d, Et, Unet, Jlp, Hrn]
+        }
+        Cluster::Xr5 => vec![Agg3d, Hrn, Dn, Sr512, Sr1024],
+        Cluster::Ai5 => vec![Rn18, Rn50, Rn152, Gn, Mn2],
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn cluster_sizes_match_table4() {
+        assert_eq!(cluster_workloads(Cluster::All).len(), 15);
+        assert_eq!(cluster_workloads(Cluster::XrDominant10).len(), 10);
+        assert_eq!(cluster_workloads(Cluster::AiDominant10).len(), 10);
+        assert_eq!(cluster_workloads(Cluster::Xr5).len(), 5);
+        assert_eq!(cluster_workloads(Cluster::Ai5).len(), 5);
+    }
+
+    #[test]
+    fn ai5_is_pure_ai() {
+        assert!(cluster_workloads(Cluster::Ai5).iter().all(|w| !w.is_xr()));
+    }
+
+    #[test]
+    fn xr5_is_pure_xr() {
+        assert!(cluster_workloads(Cluster::Xr5).iter().all(|w| w.is_xr()));
+    }
+
+    #[test]
+    fn ai_dominant_is_half_ai() {
+        let ws = cluster_workloads(Cluster::AiDominant10);
+        let ai = ws.iter().filter(|w| !w.is_xr()).count();
+        assert_eq!(ai, 5);
+    }
+
+    #[test]
+    fn parse_roundtrip() {
+        for c in Cluster::ALL {
+            let s = match c {
+                Cluster::All => "all",
+                Cluster::XrDominant10 => "10xr",
+                Cluster::AiDominant10 => "10ai",
+                Cluster::Xr5 => "5xr",
+                Cluster::Ai5 => "5ai",
+            };
+            assert_eq!(Cluster::parse(s), Some(c));
+        }
+        assert_eq!(Cluster::parse("bogus"), None);
+    }
+}

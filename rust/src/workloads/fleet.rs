@@ -1,0 +1,293 @@
+//! Synthetic deployed-fleet telemetry (substitute for the paper's
+//! adb/Simpleperf/Perfetto measurements on in-the-wild Quest devices).
+//!
+//! A seeded generator produces per-device sessions: app selection follows
+//! a Zipf popularity law over a 100-app catalog (the top 10 are the named
+//! apps of [`super::apps`], the tail is synthesized per category), session
+//! lengths and power draws are truncated normals, and per-second TLP
+//! states are sampled from each app's busy-core distribution. The
+//! aggregation pipeline then computes exactly what the paper reports:
+//! compute-cycle shares (Fig 3), per-app power percentiles (Fig 4) and
+//! TLP time breakdowns (Fig 12).
+
+use super::apps::{top10_apps, AppCategory, VrApp};
+use super::tlp::TlpDistribution;
+use crate::testkit::Rng;
+
+/// Fleet-generation parameters.
+#[derive(Debug, Clone, Copy)]
+pub struct FleetConfig {
+    /// Number of simulated devices.
+    pub devices: usize,
+    /// Observation window, days.
+    pub days: usize,
+    /// Mean sessions per device-day.
+    pub sessions_per_day: f64,
+    /// Mean session length, minutes.
+    pub session_minutes: f64,
+    /// Zipf exponent for app popularity (calibrated so the top-10 share
+    /// lands at the paper's ≥ 85 %).
+    pub zipf_s: f64,
+    /// Headset TDP, W.
+    pub tdp_w: f64,
+    /// PRNG seed.
+    pub seed: u64,
+}
+
+impl Default for FleetConfig {
+    fn default() -> Self {
+        FleetConfig {
+            devices: 400,
+            days: 30,
+            sessions_per_day: 1.2,
+            session_minutes: 38.0,
+            zipf_s: 1.6,
+            tdp_w: 8.3,
+            seed: 0x5EED,
+        }
+    }
+}
+
+/// Aggregated per-app statistics.
+#[derive(Debug, Clone)]
+pub struct AppStats {
+    /// App name.
+    pub name: String,
+    /// Category.
+    pub category: AppCategory,
+    /// Share of fleet compute cycles (0..1).
+    pub cycle_share: f64,
+    /// Power stats as fractions of TDP: (p5, mean, p95).
+    pub power_frac: (f64, f64, f64),
+    /// Observed busy-core distribution.
+    pub tlp: TlpDistribution,
+    /// Observed GPU busy fraction.
+    pub gpu_util: f64,
+}
+
+/// Fleet aggregation output.
+#[derive(Debug, Clone)]
+pub struct FleetSummary {
+    /// Per-app stats, catalog order (index 0..9 = named top-10 apps, then
+    /// the synthesized tail).
+    pub apps: Vec<AppStats>,
+    /// Total observed session seconds.
+    pub total_seconds: f64,
+    /// Share of compute cycles covered by the top 10 apps.
+    pub top10_cycle_share: f64,
+    /// Category share of the full catalog, by cycles: (G, SG, B, M).
+    pub category_share: [f64; 4],
+}
+
+/// Full 100-app catalog: the named top-10 plus a synthesized tail whose
+/// category mix follows Fig 3 (gaming-heavy).
+pub fn catalog(rng: &mut Rng) -> Vec<VrApp> {
+    let mut apps = top10_apps();
+    let categories = [
+        (AppCategory::Gaming, 0.48),
+        (AppCategory::SocialGaming, 0.22),
+        (AppCategory::Browser, 0.12),
+        (AppCategory::Media, 0.18),
+    ];
+    let weights: Vec<f64> = categories.iter().map(|&(_, w)| w).collect();
+    for i in 10..100 {
+        let (cat, _) = categories[rng.categorical(&weights)];
+        let power = rng.truncated_normal(0.66, 0.08, 0.35, 0.95);
+        // Tail apps reuse a representative TLP shape per category, jittered.
+        let base = match cat {
+            AppCategory::Gaming => [0.09, 0.0, 0.11, 0.22, 0.30, 0.17, 0.11, 0.0, 0.0],
+            AppCategory::SocialGaming => [0.10, 0.05, 0.10, 0.21, 0.26, 0.13, 0.09, 0.04, 0.02],
+            AppCategory::Browser => [0.08, 0.06, 0.14, 0.18, 0.21, 0.10, 0.07, 0.12, 0.04],
+            AppCategory::Media => [0.13, 0.10, 0.0, 0.33, 0.29, 0.09, 0.06, 0.0, 0.0],
+        };
+        let mut f = base;
+        // Small deterministic jitter, renormalized.
+        for x in f.iter_mut() {
+            *x = (*x + rng.range(-0.01, 0.01)).max(0.0);
+        }
+        let sum: f64 = f.iter().sum();
+        for x in f.iter_mut() {
+            *x /= sum;
+        }
+        let name: &'static str = Box::leak(format!("{}-tail{}", cat.label(), i).into_boxed_str());
+        apps.push(VrApp {
+            name,
+            category: cat,
+            power_frac_mean: power,
+            power_frac_std: 0.06,
+            fps_all_cores: rng.range(72.0, 95.0),
+            gpu_util: match cat {
+                AppCategory::Gaming => rng.range(0.5, 0.75),
+                AppCategory::SocialGaming => rng.range(0.4, 0.65),
+                AppCategory::Browser => rng.range(0.2, 0.4),
+                AppCategory::Media => rng.range(0.25, 0.45),
+            },
+            tlp: TlpDistribution::new(f),
+        });
+    }
+    apps
+}
+
+/// Generate a fleet trace and aggregate it.
+pub fn generate_fleet(cfg: &FleetConfig) -> FleetSummary {
+    let mut rng = Rng::new(cfg.seed);
+    let apps = catalog(&mut rng);
+    let n_apps = apps.len();
+
+    // Accumulators.
+    let mut seconds = vec![0.0f64; n_apps];
+    let mut cycles = vec![0.0f64; n_apps]; // busy-core-seconds (compute cycles proxy)
+    let mut power_samples: Vec<Vec<f64>> = vec![Vec::new(); n_apps];
+    let mut tlp_time = vec![[0.0f64; 9]; n_apps];
+    let mut gpu_busy = vec![0.0f64; n_apps];
+
+    for d in 0..cfg.devices {
+        let mut dev_rng = rng.fork(d as u64);
+        let n_sessions =
+            (cfg.days as f64 * cfg.sessions_per_day * dev_rng.range(0.6, 1.4)).round() as usize;
+        for _ in 0..n_sessions {
+            let app_idx = dev_rng.zipf(n_apps, cfg.zipf_s);
+            let app = &apps[app_idx];
+            let dur_s = dev_rng.truncated_normal(
+                cfg.session_minutes * 60.0,
+                cfg.session_minutes * 25.0,
+                300.0,
+                4.0 * 3600.0,
+            );
+            seconds[app_idx] += dur_s;
+            // One power observation per session (session-mean power).
+            let p = dev_rng.truncated_normal(app.power_frac_mean, app.power_frac_std, 0.2, 1.0);
+            power_samples[app_idx].push(p);
+            // TLP states: sample the busy-core distribution in coarse slots
+            // (one per simulated minute) instead of per second — the
+            // aggregate converges identically and 60x cheaper.
+            let slots = (dur_s / 60.0).ceil() as usize;
+            for _ in 0..slots {
+                let busy = dev_rng.categorical(&app.tlp.frac);
+                tlp_time[app_idx][busy] += dur_s / slots as f64;
+                cycles[app_idx] += busy as f64 * dur_s / slots as f64;
+            }
+            gpu_busy[app_idx] += app.gpu_util * dur_s;
+        }
+    }
+
+    let total_seconds: f64 = seconds.iter().sum();
+    let total_cycles: f64 = cycles.iter().sum();
+
+    let mut stats = Vec::with_capacity(n_apps);
+    for i in 0..n_apps {
+        let mut ps = power_samples[i].clone();
+        ps.sort_by(|a, b| a.total_cmp(b));
+        let pct = |q: f64| -> f64 {
+            if ps.is_empty() {
+                return 0.0;
+            }
+            let idx = ((ps.len() - 1) as f64 * q).round() as usize;
+            ps[idx]
+        };
+        let mean = if ps.is_empty() { 0.0 } else { ps.iter().sum::<f64>() / ps.len() as f64 };
+        let t: f64 = tlp_time[i].iter().sum();
+        let frac = if t > 0.0 {
+            let mut f = [0.0; 9];
+            for (j, &v) in tlp_time[i].iter().enumerate() {
+                f[j] = v / t;
+            }
+            f
+        } else {
+            let mut f = [0.0; 9];
+            f[0] = 1.0;
+            f
+        };
+        stats.push(AppStats {
+            name: apps[i].name.to_string(),
+            category: apps[i].category,
+            cycle_share: if total_cycles > 0.0 { cycles[i] / total_cycles } else { 0.0 },
+            power_frac: (pct(0.05), mean, pct(0.95)),
+            tlp: TlpDistribution::new(frac),
+            gpu_util: if seconds[i] > 0.0 { gpu_busy[i] / seconds[i] } else { 0.0 },
+        });
+    }
+
+    let top10_cycle_share = stats.iter().take(10).map(|s| s.cycle_share).sum();
+    let mut category_share = [0.0; 4];
+    for s in &stats {
+        let k = match s.category {
+            AppCategory::Gaming => 0,
+            AppCategory::SocialGaming => 1,
+            AppCategory::Browser => 2,
+            AppCategory::Media => 3,
+        };
+        category_share[k] += s.cycle_share;
+    }
+
+    FleetSummary { apps: stats, total_seconds, top10_cycle_share, category_share }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn small_fleet() -> FleetSummary {
+        generate_fleet(&FleetConfig { devices: 120, days: 10, ..Default::default() })
+    }
+
+    #[test]
+    fn top10_covers_85pct_of_cycles() {
+        // Fig 3: "Top 10 applications cover >85% of the total compute
+        // cycles".
+        let s = small_fleet();
+        assert!(s.top10_cycle_share > 0.80, "top-10 share = {}", s.top10_cycle_share);
+    }
+
+    #[test]
+    fn gaming_is_dominant_category() {
+        // Fig 3: gaming most dominant, then social gaming.
+        let s = small_fleet();
+        let [g, sg, b, m] = s.category_share;
+        assert!(g > sg && g > b && g > m, "shares = {:?}", s.category_share);
+        assert!(sg > b, "social {sg} !> browser {b}");
+    }
+
+    #[test]
+    fn power_percentiles_bracket_mean() {
+        let s = small_fleet();
+        for a in s.apps.iter().take(10) {
+            let (p5, mean, p95) = a.power_frac;
+            assert!(p5 <= mean && mean <= p95, "{}: {:?}", a.name, a.power_frac);
+            assert!((0.3..0.95).contains(&mean), "{} mean={}", a.name, mean);
+        }
+    }
+
+    #[test]
+    fn observed_tlp_matches_app_model() {
+        // The aggregated busy-core distribution converges to the per-app
+        // generator distribution.
+        let s = small_fleet();
+        let model = top10_apps();
+        for (obs, m) in s.apps.iter().take(4).zip(model.iter().take(4)) {
+            let d = (obs.tlp.average() - m.tlp.average()).abs();
+            assert!(d < 0.35, "{}: observed {} vs model {}", m.name, obs.tlp.average(), m.tlp.average());
+        }
+    }
+
+    #[test]
+    fn deterministic_for_seed() {
+        let a = generate_fleet(&FleetConfig { devices: 40, days: 5, ..Default::default() });
+        let b = generate_fleet(&FleetConfig { devices: 40, days: 5, ..Default::default() });
+        assert_eq!(a.top10_cycle_share, b.top10_cycle_share);
+        assert_eq!(a.total_seconds, b.total_seconds);
+    }
+
+    #[test]
+    fn different_seed_changes_trace() {
+        let a = generate_fleet(&FleetConfig { devices: 40, days: 5, ..Default::default() });
+        let b = generate_fleet(&FleetConfig { devices: 40, days: 5, seed: 99, ..Default::default() });
+        assert_ne!(a.total_seconds, b.total_seconds);
+    }
+
+    #[test]
+    fn catalog_has_100_apps() {
+        let mut rng = Rng::new(1);
+        assert_eq!(catalog(&mut rng).len(), 100);
+    }
+}

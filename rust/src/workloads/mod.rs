@@ -1,0 +1,27 @@
+//! VR application workloads and fleet telemetry (paper §2.2, §4.1, §4.3).
+//!
+//! The paper characterizes the top-100 applications running on deployed
+//! Meta Quest / Quest 2 headsets via adb + Simpleperf + Perfetto. That
+//! telemetry is proprietary, so this module implements the substitution
+//! documented in `DESIGN.md` §4: a **seeded synthetic fleet generator**
+//! ([`fleet`]) whose per-app distributions are calibrated to the
+//! aggregates the paper publishes (top-10 apps ≥ 85 % of compute cycles,
+//! mean power ≈ 70 % of TDP, per-app TLP between 3.5 and 4.2), plus the
+//! same aggregation pipeline the paper ran on the real data.
+//!
+//! * [`apps`] — the top-10 named applications (categories G/SG/B/M) with
+//!   power and thread-level-parallelism distributions;
+//! * [`tlp`] — TLP math: average TLP (the paper's footnote-5 formula),
+//!   core-count slowdown and FPS models;
+//! * [`fleet`] — synthetic deployed-fleet trace generation + aggregation;
+//! * [`clusters`] — the Table 4 DSE kernel clusters.
+
+pub mod apps;
+pub mod clusters;
+pub mod fleet;
+pub mod tlp;
+
+pub use apps::{top10_apps, AppCategory, VrApp};
+pub use clusters::{Cluster, cluster_workloads};
+pub use fleet::{generate_fleet, FleetConfig, FleetSummary};
+pub use tlp::TlpDistribution;

@@ -1,0 +1,148 @@
+//! Thread-level parallelism math (paper Fig 12, footnote 5).
+//!
+//! The paper quantifies TLP as `TLP = Σᵢ cᵢ·i / (1 − c₀)` where `cᵢ` is
+//! the fraction of time exactly `i` cores are concurrently busy. The same
+//! distribution drives the core-count provisioning study (Fig 13): with
+//! fewer cores than runnable threads, runnable work serializes and the
+//! frame rate drops.
+
+/// Distribution of concurrently-busy core counts (index = #busy cores,
+/// 0..=8 for the octa-core VR SoC).
+#[derive(Debug, Clone, PartialEq)]
+pub struct TlpDistribution {
+    /// `frac[i]` = fraction of wall time with exactly `i` cores busy.
+    /// Must sum to 1.
+    pub frac: [f64; 9],
+}
+
+impl TlpDistribution {
+    /// Construct and validate (sums to 1 within tolerance).
+    pub fn new(frac: [f64; 9]) -> Self {
+        let sum: f64 = frac.iter().sum();
+        assert!((sum - 1.0).abs() < 1e-6, "TLP distribution sums to {sum}, not 1");
+        assert!(frac.iter().all(|&f| f >= 0.0), "negative TLP fraction");
+        TlpDistribution { frac }
+    }
+
+    /// The paper's average TLP: `Σᵢ cᵢ·i / (1 − c₀)` (busy-time average).
+    pub fn average(&self) -> f64 {
+        let busy: f64 = self.frac.iter().enumerate().map(|(i, &f)| i as f64 * f).sum();
+        let denom = 1.0 - self.frac[0];
+        if denom <= 0.0 {
+            0.0
+        } else {
+            busy / denom
+        }
+    }
+
+    /// Execution-time stretch when only `cores` are enabled: intervals
+    /// with `i > cores` busy threads serialize by `i / cores`
+    /// (work-conserving scheduler, perfectly divisible work).
+    pub fn slowdown(&self, cores: usize) -> f64 {
+        assert!(cores >= 1, "need at least one core");
+        self.frac
+            .iter()
+            .enumerate()
+            .map(|(i, &f)| if i <= cores { f } else { f * i as f64 / cores as f64 })
+            .sum()
+    }
+
+    /// Frame rate with `cores` enabled, given the rate on all 8 cores.
+    pub fn fps(&self, fps_all_cores: f64, cores: usize) -> f64 {
+        fps_all_cores / self.slowdown(cores)
+    }
+
+    /// Smallest core count whose frame rate still meets `qos_fps`.
+    /// Returns 8 if even the full configuration misses QoS.
+    pub fn min_cores_for_qos(&self, fps_all_cores: f64, qos_fps: f64) -> usize {
+        for c in 1..=8 {
+            if self.fps(fps_all_cores, c) >= qos_fps {
+                return c;
+            }
+        }
+        8
+    }
+
+    /// Average number of busy cores (including idle time) — the CPU-side
+    /// hardware utilization used for the Fig 4 embodied split.
+    pub fn mean_busy_cores(&self) -> f64 {
+        self.frac.iter().enumerate().map(|(i, &f)| i as f64 * f).sum()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn uniform_busy(i: usize) -> TlpDistribution {
+        let mut f = [0.0; 9];
+        f[i] = 1.0;
+        TlpDistribution::new(f)
+    }
+
+    #[test]
+    fn average_matches_footnote_formula() {
+        // 50% idle, 50% at 4 cores: TLP = (4*0.5)/(1-0.5) = 4.
+        let mut f = [0.0; 9];
+        f[0] = 0.5;
+        f[4] = 0.5;
+        let d = TlpDistribution::new(f);
+        assert!((d.average() - 4.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn slowdown_is_one_with_enough_cores() {
+        let d = uniform_busy(4);
+        assert!((d.slowdown(4) - 1.0).abs() < 1e-12);
+        assert!((d.slowdown(8) - 1.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn slowdown_serializes_excess_threads() {
+        let d = uniform_busy(8);
+        assert!((d.slowdown(4) - 2.0).abs() < 1e-12);
+        assert!((d.slowdown(2) - 4.0).abs() < 1e-12);
+        assert!((d.slowdown(1) - 8.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn slowdown_monotone_decreasing_in_cores() {
+        let mut f = [0.0; 9];
+        f[0] = 0.1;
+        f[2] = 0.3;
+        f[5] = 0.4;
+        f[8] = 0.2;
+        let d = TlpDistribution::new(f);
+        let mut last = f64::INFINITY;
+        for c in 1..=8 {
+            let s = d.slowdown(c);
+            assert!(s <= last + 1e-12);
+            last = s;
+        }
+        assert!((d.slowdown(8) - 1.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn qos_core_search() {
+        let mut f = [0.0; 9];
+        f[4] = 0.8;
+        f[8] = 0.2;
+        let d = TlpDistribution::new(f);
+        // fps_8 = 80, QoS 72: slowdown(c) must be <= 80/72 = 1.111.
+        // slowdown(4) = 0.8 + 0.2*2 = 1.2 (miss); slowdown(5) = 0.8+0.2*1.6
+        // = 1.12 (miss); slowdown(6) = 0.8+0.2*8/6 = 1.0667 (hit).
+        assert_eq!(d.min_cores_for_qos(80.0, 72.0), 6);
+    }
+
+    #[test]
+    fn qos_unreachable_returns_eight() {
+        let d = uniform_busy(8);
+        assert_eq!(d.min_cores_for_qos(60.0, 72.0), 8);
+    }
+
+    #[test]
+    #[should_panic(expected = "sums to")]
+    fn bad_distribution_rejected() {
+        TlpDistribution::new([0.5; 9]);
+    }
+}

@@ -1,0 +1,183 @@
+//! Property tests on coordinator invariants (routing/batching/state):
+//! packing round-trips, batch-order preservation, β monotonicity,
+//! constraint semantics and engine equivalence — over randomized requests.
+
+use xrcarbon::dse::batching::evaluate_chunked;
+use xrcarbon::matrixform::{ConfigRow, EvalRequest, MetricRow, PackedProblem, TaskMatrix};
+use xrcarbon::runtime::{evaluate, HostEngine};
+use xrcarbon::testkit::{forall_cfg, PropConfig, Rng};
+
+fn gen_request(r: &mut Rng) -> EvalRequest {
+    let t = r.below(4) + 1;
+    let k = r.below(12) + 1;
+    let c = r.below(60) + 1;
+    let j = r.below(6) + 1;
+    let mut tasks = TaskMatrix::new(
+        (0..t).map(|i| format!("t{i}")).collect(),
+        (0..k).map(|i| format!("k{i}")).collect(),
+    );
+    for ti in 0..t {
+        for ki in 0..k {
+            if r.chance(0.6) {
+                tasks.set(ti, ki, r.below(30) as f64);
+            }
+        }
+    }
+    EvalRequest {
+        tasks,
+        configs: (0..c)
+            .map(|i| ConfigRow {
+                name: format!("cfg{i}"),
+                f_clk: r.range(1e8, 2e9),
+                d_k: (0..k).map(|_| r.range(1e-5, 1e-1)).collect(),
+                e_dyn: (0..k).map(|_| r.range(1e-4, 1.0)).collect(),
+                leak_w: r.range(0.0, 0.2),
+                c_comp: (0..j).map(|_| r.range(0.0, 1000.0)).collect(),
+            })
+            .collect(),
+        online: (0..j).map(|_| if r.chance(0.8) { 1.0 } else { 0.0 }).collect(),
+        qos: (0..t)
+            .map(|_| if r.chance(0.3) { r.range(0.1, 100.0) } else { f64::INFINITY })
+            .collect(),
+        ci_use_g_per_j: r.range(1e-5, 1e-3),
+        lifetime_s: r.range(1e4, 1e8),
+        beta: r.range(0.0, 4.0),
+        p_max_w: if r.chance(0.4) { r.range(0.5, 100.0) } else { f64::INFINITY },
+    }
+}
+
+#[test]
+fn prop_pack_preserves_names_and_sizes() {
+    forall_cfg(
+        PropConfig { cases: 64, seed: 11 },
+        gen_request,
+        |req| {
+            let p = PackedProblem::from_request(req);
+            p.c == req.configs.len()
+                && p.names.len() == p.c
+                && p.names.iter().zip(&req.configs).all(|(n, c)| *n == c.name)
+                && p.c_pad >= p.c
+        },
+    );
+}
+
+#[test]
+fn prop_metrics_are_nonnegative_and_consistent() {
+    forall_cfg(
+        PropConfig { cases: 48, seed: 12 },
+        gen_request,
+        |req| {
+            let res = evaluate(&mut HostEngine::new(), req).unwrap();
+            (0..res.c).all(|i| {
+                let e = res.metric(MetricRow::Energy, i);
+                let d = res.metric(MetricRow::Delay, i);
+                let c_op = res.metric(MetricRow::COp, i);
+                let c_emb = res.metric(MetricRow::CEmb, i);
+                let c_total = res.metric(MetricRow::CTotal, i);
+                let feas = res.metric(MetricRow::Feasible, i);
+                e >= 0.0
+                    && d >= 0.0
+                    && c_op >= 0.0
+                    && c_emb >= 0.0
+                    && (c_total - (c_op + c_emb)).abs() <= 1e-5 * c_total.max(1e-12)
+                    && (feas == 0.0 || feas == 1.0)
+            })
+        },
+    );
+}
+
+#[test]
+fn prop_delay_row_sums_task_delays() {
+    forall_cfg(
+        PropConfig { cases: 48, seed: 13 },
+        gen_request,
+        |req| {
+            let res = evaluate(&mut HostEngine::new(), req).unwrap();
+            (0..res.c).all(|i| {
+                let sum: f64 = (0..res.t).map(|ti| res.task_delay(i, ti)).sum();
+                let d = res.metric(MetricRow::Delay, i);
+                (sum - d).abs() <= 1e-4 * d.max(1e-12)
+            })
+        },
+    );
+}
+
+#[test]
+fn prop_beta_monotone_in_tcdp() {
+    forall_cfg(
+        PropConfig { cases: 32, seed: 14 },
+        |r| (gen_request(r), r.range(0.0, 2.0), r.range(0.0, 2.0)),
+        |(req, b1, b2)| {
+            let (lo, hi) = if b1 <= b2 { (*b1, *b2) } else { (*b2, *b1) };
+            let mut rlo = req.clone();
+            rlo.beta = lo;
+            let mut rhi = req.clone();
+            rhi.beta = hi;
+            let mut host = HostEngine::new();
+            let a = evaluate(&mut host, &rlo).unwrap();
+            let b = evaluate(&mut host, &rhi).unwrap();
+            (0..a.c).all(|i| {
+                a.metric(MetricRow::Tcdp, i) <= b.metric(MetricRow::Tcdp, i) * (1.0 + 1e-5) + 1e-12
+            })
+        },
+    );
+}
+
+#[test]
+fn prop_provisioning_mask_shrinks_embodied() {
+    forall_cfg(
+        PropConfig { cases: 32, seed: 15 },
+        gen_request,
+        |req| {
+            let mut full = req.clone();
+            for v in full.online.iter_mut() {
+                *v = 1.0;
+            }
+            let mut masked = full.clone();
+            masked.online[0] = 0.0;
+            let mut host = HostEngine::new();
+            let a = evaluate(&mut host, &full).unwrap();
+            let b = evaluate(&mut host, &masked).unwrap();
+            (0..a.c)
+                .all(|i| b.metric(MetricRow::CEmb, i) <= a.metric(MetricRow::CEmb, i) * (1.0 + 1e-6))
+        },
+    );
+}
+
+#[test]
+fn prop_chunked_evaluation_order_stable() {
+    // Chunk boundaries must never permute or alter results: compare a
+    // direct big-batch evaluation against per-config singleton requests.
+    forall_cfg(
+        PropConfig { cases: 12, seed: 16 },
+        gen_request,
+        |req| {
+            let mut host = HostEngine::new();
+            let whole = evaluate_chunked(&mut host, req).unwrap();
+            (0..req.configs.len()).step_by(7.max(req.configs.len() / 3)).all(|i| {
+                let single = EvalRequest { configs: vec![req.configs[i].clone()], ..req.clone() };
+                let one = evaluate(&mut host, &single).unwrap();
+                let (a, b) = (
+                    whole.metric(MetricRow::Tcdp, i),
+                    one.metric(MetricRow::Tcdp, 0),
+                );
+                (a - b).abs() <= 1e-6 * a.abs().max(b.abs()).max(1e-12)
+            })
+        },
+    );
+}
+
+#[test]
+fn prop_infeasible_never_selected() {
+    forall_cfg(
+        PropConfig { cases: 32, seed: 17 },
+        gen_request,
+        |req| {
+            let res = evaluate(&mut HostEngine::new(), req).unwrap();
+            match res.argmin_feasible(MetricRow::Tcdp) {
+                None => res.row(MetricRow::Feasible).iter().all(|&f| f < 0.5),
+                Some(i) => res.metric(MetricRow::Feasible, i) > 0.5,
+            }
+        },
+    );
+}

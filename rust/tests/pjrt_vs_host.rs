@@ -1,0 +1,145 @@
+//! Integration: the PJRT engine (AOT HLO artifacts through the XLA CPU
+//! client) must agree with the pure-Rust host mirror to rounding level.
+//!
+//! Requires `make artifacts` to have run; tests are skipped (with a loud
+//! message) when the artifacts directory is absent so `cargo test` works
+//! in a fresh checkout.
+
+use xrcarbon::dse::batching::evaluate_chunked;
+use xrcarbon::matrixform::{ConfigRow, EvalRequest, MetricRow, TaskMatrix, NUM_METRICS};
+use xrcarbon::runtime::{evaluate, Engine, HostEngine, PjrtEngine};
+use xrcarbon::testkit::Rng;
+
+fn artifacts_dir() -> Option<String> {
+    let dir = format!("{}/artifacts", env!("CARGO_MANIFEST_DIR"));
+    if std::path::Path::new(&dir).join("manifest.json").exists() {
+        Some(dir)
+    } else {
+        eprintln!("SKIP: artifacts not built (run `make artifacts`)");
+        None
+    }
+}
+
+fn random_request(rng: &mut Rng, c: usize, t: usize, k: usize, j: usize) -> EvalRequest {
+    let mut tasks = TaskMatrix::new(
+        (0..t).map(|i| format!("t{i}")).collect(),
+        (0..k).map(|i| format!("k{i}")).collect(),
+    );
+    for ti in 0..t {
+        for ki in 0..k {
+            if rng.chance(0.7) {
+                tasks.set(ti, ki, rng.below(40) as f64);
+            }
+        }
+    }
+    let configs = (0..c)
+        .map(|i| ConfigRow {
+            name: format!("cfg{i}"),
+            f_clk: rng.range(0.5e9, 2.0e9),
+            d_k: (0..k).map(|_| rng.range(1e-4, 5e-2)).collect(),
+            e_dyn: (0..k).map(|_| rng.range(1e-3, 0.5)).collect(),
+            leak_w: rng.range(0.001, 0.1),
+            c_comp: (0..j).map(|_| rng.range(5.0, 800.0)).collect(),
+        })
+        .collect();
+    EvalRequest {
+        tasks,
+        configs,
+        online: (0..j).map(|_| if rng.chance(0.8) { 1.0 } else { 0.0 }).collect(),
+        qos: (0..t)
+            .map(|_| if rng.chance(0.3) { rng.range(0.5, 50.0) } else { f64::INFINITY })
+            .collect(),
+        ci_use_g_per_j: 1.2e-4,
+        lifetime_s: rng.range(1e5, 1e8),
+        beta: rng.range(0.0, 3.0),
+        p_max_w: if rng.chance(0.5) { rng.range(1.0, 50.0) } else { f64::INFINITY },
+    }
+}
+
+fn assert_results_close(
+    a: &xrcarbon::matrixform::EvalResult,
+    b: &xrcarbon::matrixform::EvalResult,
+    tag: &str,
+) {
+    assert_eq!(a.c, b.c);
+    for row in 0..NUM_METRICS {
+        for ci in 0..a.c {
+            let (x, y) = (a.metrics[row * a.c + ci], b.metrics[row * b.c + ci]);
+            let denom = x.abs().max(y.abs()).max(1e-12);
+            assert!(
+                (x - y).abs() / denom < 2e-4,
+                "{tag}: metric row {row} config {ci}: pjrt={x} host={y}"
+            );
+        }
+    }
+    for (i, (x, y)) in a.d_task.iter().zip(&b.d_task).enumerate() {
+        let denom = x.abs().max(y.abs()).max(1e-12);
+        assert!((x - y).abs() / denom < 2e-4, "{tag}: d_task[{i}]: {x} vs {y}");
+    }
+}
+
+#[test]
+fn pjrt_loads_all_variants() {
+    let Some(dir) = artifacts_dir() else { return };
+    let engine = PjrtEngine::load(&dir).expect("PJRT engine load");
+    assert_eq!(engine.variants(), vec![128, 1024]);
+    assert_eq!(engine.platform(), "cpu");
+}
+
+#[test]
+fn pjrt_matches_host_on_random_batches() {
+    let Some(dir) = artifacts_dir() else { return };
+    let mut pjrt = PjrtEngine::load(&dir).expect("PJRT engine load");
+    let mut host = HostEngine::new();
+    let mut rng = Rng::new(0xA11CE);
+    for trial in 0..8 {
+        let c = [1, 3, 17, 121, 128, 129, 700, 1024][trial];
+        let req = random_request(&mut rng, c, 4, 12, 6);
+        let rp = evaluate(&mut pjrt, &req).expect("pjrt eval");
+        let rh = evaluate(&mut host, &req).expect("host eval");
+        assert_results_close(&rp, &rh, &format!("trial {trial} (c={c})"));
+    }
+}
+
+#[test]
+fn pjrt_chunked_large_space() {
+    let Some(dir) = artifacts_dir() else { return };
+    let mut pjrt = PjrtEngine::load(&dir).expect("PJRT engine load");
+    let mut host = HostEngine::new();
+    let mut rng = Rng::new(7);
+    let req = random_request(&mut rng, 2100, 2, 8, 4);
+    let rp = evaluate_chunked(&mut pjrt, &req).expect("pjrt chunked");
+    let rh = evaluate_chunked(&mut host, &req).expect("host chunked");
+    assert_results_close(&rp, &rh, "chunked-2100");
+}
+
+#[test]
+fn pjrt_feasibility_matches_host_exactly() {
+    // Feasibility is a 0/1 decision — it must agree exactly, not just
+    // within tolerance, across a constraint-heavy batch.
+    let Some(dir) = artifacts_dir() else { return };
+    let mut pjrt = PjrtEngine::load(&dir).expect("PJRT engine load");
+    let mut host = HostEngine::new();
+    let mut rng = Rng::new(99);
+    let mut req = random_request(&mut rng, 128, 3, 6, 4);
+    req.qos = vec![5.0, 2.0, f64::INFINITY];
+    req.p_max_w = 10.0;
+    let rp = evaluate(&mut pjrt, &req).unwrap();
+    let rh = evaluate(&mut host, &req).unwrap();
+    let fp = rp.row(MetricRow::Feasible);
+    let fh = rh.row(MetricRow::Feasible);
+    // Values right at a constraint boundary could legitimately differ by
+    // one ulp of rounding; with random data that's measure-zero. Require
+    // exact agreement.
+    assert_eq!(fp, fh);
+    assert!(fp.iter().any(|&f| f == 0.0), "constraint never binds — weak test");
+    assert!(fp.iter().any(|&f| f == 1.0), "no feasible configs — weak test");
+}
+
+#[test]
+fn engine_reports_names() {
+    let Some(dir) = artifacts_dir() else { return };
+    let pjrt = PjrtEngine::load(&dir).expect("load");
+    assert_eq!(Engine::name(&pjrt), "pjrt");
+    assert_eq!(Engine::name(&HostEngine::new()), "host");
+}
