@@ -4,7 +4,9 @@
 use xrcarbon::accel::{network, production_accelerators, simulate, Workload};
 use xrcarbon::bench::Bencher;
 use xrcarbon::matrixform::{ConfigRow, EvalRequest, PackedProblem, TaskMatrix};
-use xrcarbon::runtime::{evaluate, Engine, HostEngine, PjrtEngine};
+#[cfg(feature = "pjrt")]
+use xrcarbon::runtime::PjrtEngine;
+use xrcarbon::runtime::{evaluate, HostEngine};
 use xrcarbon::testkit::Rng;
 use xrcarbon::workloads::{generate_fleet, FleetConfig};
 
@@ -40,6 +42,7 @@ fn request(c: usize) -> EvalRequest {
 fn main() {
     for &c in &[121usize, 1024] {
         let req = request(c);
+        #[cfg(feature = "pjrt")]
         if let Ok(mut pjrt) = PjrtEngine::load("artifacts") {
             let r = Bencher::new(&format!("runtime/pjrt_eval_c{c}"))
                 .throughput(c as u64)

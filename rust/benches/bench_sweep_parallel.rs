@@ -1,0 +1,63 @@
+//! Bench: parallel scenario-sweep scaling, 1 → N worker threads on the
+//! Fig 7-preset grid (acceptance: ≥2× wall-clock speedup at 4 threads).
+//!
+//! The design space is the 121-point grid replicated ×8 (968 configs, one
+//! full 1024-variant chunk per scenario) and the scenario grid is the
+//! Fig 7 embodied-share preset crossed with a 3-point β axis — 9
+//! scenarios, 9 work items — so each thread count has real work to
+//! schedule. Profiling (the simulator) runs once, outside the timed
+//! region; the sweep coordinator is the unit under test.
+
+use xrcarbon::bench::Bencher;
+use xrcarbon::dse::grid::ScenarioGrid;
+use xrcarbon::dse::sweep::{sweep, SweepConfig};
+use xrcarbon::experiments::sweep_fig7::profile_cluster;
+use xrcarbon::runtime::HostEngineFactory;
+use xrcarbon::workloads::Cluster;
+
+fn main() {
+    let space = profile_cluster(Cluster::Ai5);
+
+    // Replicate the space ×8 so each (scenario × chunk) item fills the
+    // large artifact variant.
+    let mut big = Vec::with_capacity(space.rows.len() * 8);
+    for rep in 0..8 {
+        for row in &space.rows {
+            let mut r = row.clone();
+            r.name = format!("{}#{rep}", r.name);
+            big.push(r);
+        }
+    }
+    let mut base = space.base.clone();
+    base.configs = big;
+
+    let grid = ScenarioGrid::fig7(&space.rows, &space.tasks, space.ci_use_g_per_j)
+        .with_beta("b=0.5", 0.5)
+        .with_beta("b=1", 1.0)
+        .with_beta("b=2", 2.0);
+    println!(
+        "[space: {} configs x {} scenarios]",
+        base.configs.len(),
+        grid.cardinality()
+    );
+
+    let hw = std::thread::available_parallelism().map(|n| n.get()).unwrap_or(4);
+    let mut means = Vec::new();
+    for threads in [1usize, 2, 4, hw.min(8)] {
+        if means.iter().any(|&(t, _)| t == threads) {
+            continue;
+        }
+        let r = Bencher::new(&format!("sweep/fig7x3beta_threads={threads}"))
+            .throughput((base.configs.len() * grid.cardinality()) as u64)
+            .run(|| sweep(&HostEngineFactory, &base, &grid, &SweepConfig { threads }).unwrap());
+        println!("{}", r.report());
+        means.push((threads, r.mean.as_secs_f64()));
+    }
+
+    let t1 = means[0].1;
+    for &(threads, mean) in &means[1..] {
+        let speedup = t1 / mean;
+        let target = if threads >= 4 { " (target >= 2.0)" } else { "" };
+        println!("speedup @ {threads} threads: {speedup:.2}x{target}");
+    }
+}

@@ -30,6 +30,7 @@ pub struct Args {
 const VALUED: &[&str] = &[
     "cluster", "metric", "out", "artifacts", "engine", "seed", "beta", "ratio",
     "lifetime", "hours", "devices", "days", "workload", "cores", "csv-dir",
+    "threads", "preset",
 ];
 
 impl Args {

@@ -13,7 +13,7 @@ pub const SMALL_BATCH: usize = 128;
 /// small-variant batches instead of one mostly-padding large batch
 /// (measured: 200 configs = 0.36 ms chunked vs 0.90 ms padded to 1024;
 /// ≥~700 configs the large variant wins back — see EXPERIMENTS.md §Perf).
-fn chunk_size(n: usize) -> usize {
+pub(crate) fn chunk_size(n: usize) -> usize {
     if n <= SMALL_BATCH || n > MAX_BATCH {
         // Single small batch, or big sweeps: fill the large variant.
         if n <= SMALL_BATCH {
@@ -37,7 +37,7 @@ pub fn evaluate_chunked(engine: &mut dyn Engine, req: &EvalRequest) -> crate::Re
     }
     let mut merged: Option<EvalResult> = None;
     for chunk in req.configs.chunks(max_batch) {
-        let sub = EvalRequest { configs: chunk.to_vec(), tasks: req.tasks.clone(), ..shallow(req) };
+        let sub = EvalRequest { configs: chunk.to_vec(), ..shallow(req) };
         let res = evaluate(engine, &sub)?;
         merged = Some(match merged {
             None => res,
@@ -47,7 +47,8 @@ pub fn evaluate_chunked(engine: &mut dyn Engine, req: &EvalRequest) -> crate::Re
     Ok(merged.expect("nonempty request"))
 }
 
-fn shallow(req: &EvalRequest) -> EvalRequest {
+/// Clone everything but the config rows (chunk builders fill those in).
+pub(crate) fn shallow(req: &EvalRequest) -> EvalRequest {
     EvalRequest {
         tasks: req.tasks.clone(),
         configs: Vec::new(),
@@ -60,7 +61,8 @@ fn shallow(req: &EvalRequest) -> EvalRequest {
     }
 }
 
-fn merge(a: EvalResult, b: EvalResult) -> EvalResult {
+/// Concatenate two results in order (row-major metric rows re-packed).
+pub(crate) fn merge(a: EvalResult, b: EvalResult) -> EvalResult {
     assert_eq!(a.t, b.t, "task-count mismatch in merge");
     let c = a.c + b.c;
     let mut metrics = vec![0.0f64; NUM_METRICS * c];

@@ -59,7 +59,15 @@ fn percentile(sorted: &[f64], q: f64) -> f64 {
 /// Run the exploration.
 pub fn explore(engine: &mut dyn Engine, req: &EvalRequest) -> crate::Result<ExploreOutcome> {
     let result = evaluate_chunked(engine, req)?;
+    Ok(summarize(result))
+}
 
+/// Constraint-aware summary of an evaluated space: feasible argmin per
+/// figure-of-merit plus tCDP distribution statistics. Shared by the
+/// sequential [`explore`] path and the parallel sweep coordinator
+/// ([`super::sweep`]), so both produce identical outcomes for identical
+/// evaluation results.
+pub fn summarize(result: EvalResult) -> ExploreOutcome {
     let mut optimal = HashMap::new();
     for kind in MetricKind::ALL {
         if let Some(idx) = result.argmin_feasible(metric_row(kind)) {
@@ -89,7 +97,7 @@ pub fn explore(engine: &mut dyn Engine, req: &EvalRequest) -> crate::Result<Expl
         feasible: feasible_tcdp.len(),
     };
 
-    Ok(ExploreOutcome { result, optimal, stats })
+    ExploreOutcome { result, optimal, stats }
 }
 
 #[cfg(test)]

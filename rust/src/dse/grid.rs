@@ -1,0 +1,378 @@
+//! Scenario grids: labeled cross-products of sweep axes.
+//!
+//! The paper's headline results come from re-running the same design
+//! space under many *scenarios* — carbon-intensity grids, lifetimes, QoS
+//! targets, β weights, power caps. A [`ScenarioGrid`] declares one axis
+//! per knob; its cross-product enumerates every [`SweepScenario`], each
+//! of which rewrites a base [`EvalRequest`] without touching the design
+//! space itself. Empty axes inherit the base request's value and
+//! contribute nothing to the scenario label, so a default grid has
+//! exactly one scenario: the base request.
+//!
+//! Named presets reproduce the paper's sweeps: [`ScenarioGrid::fig7`]
+//! (embodied-share scenarios as lifetime calibrations),
+//! [`ScenarioGrid::lifetime_decades`] (the Fig 10 operational-lifetime
+//! axis) and [`ScenarioGrid::fig11`] (provisioning lifetimes × QoS
+//! on/off), plus [`ScenarioGrid::use_grids`] for CI diversity.
+
+use crate::carbon::UseGrid;
+use crate::matrixform::{ConfigRow, EvalRequest, TaskMatrix};
+
+use super::scenario::lifetime_for_ratio;
+
+/// Seconds in a calendar year (provisioning-study lifetimes).
+pub const YEAR_S: f64 = 365.0 * 24.0 * 3600.0;
+
+/// One labeled point on a sweep axis.
+#[derive(Debug, Clone)]
+pub struct AxisPoint {
+    /// Short label, unique within its axis ("98% embodied", "LT=1e6s").
+    pub label: String,
+    /// The axis value (unit depends on the axis).
+    pub value: f64,
+}
+
+impl AxisPoint {
+    /// New labeled point.
+    pub fn new(label: &str, value: f64) -> Self {
+        AxisPoint { label: label.to_string(), value }
+    }
+}
+
+/// One scenario of a sweep: the per-axis overrides to apply to a base
+/// request. `None` means "inherit the base request's value".
+#[derive(Debug, Clone)]
+pub struct SweepScenario {
+    /// Display label — the non-inherited axis labels joined with " | "
+    /// ("base" when every axis is inherited).
+    pub label: String,
+    /// Use-phase carbon intensity override, g/J.
+    pub ci_use_g_per_j: Option<f64>,
+    /// Operational-lifetime override, s.
+    pub lifetime_s: Option<f64>,
+    /// Multiplier on every per-task QoS bound (∞ disables finite bounds).
+    pub qos_scale: Option<f64>,
+    /// β override for the scalarized objective.
+    pub beta: Option<f64>,
+    /// Average-power-cap override, W.
+    pub p_max_w: Option<f64>,
+}
+
+impl SweepScenario {
+    /// Rewrite a base request under this scenario. The design space
+    /// (tasks, configs, online mask) is untouched.
+    pub fn apply(&self, base: &EvalRequest) -> EvalRequest {
+        let mut req = base.clone();
+        if let Some(v) = self.ci_use_g_per_j {
+            req.ci_use_g_per_j = v;
+        }
+        if let Some(v) = self.lifetime_s {
+            req.lifetime_s = v;
+        }
+        if let Some(s) = self.qos_scale {
+            for q in req.qos.iter_mut() {
+                *q *= s;
+            }
+        }
+        if let Some(v) = self.beta {
+            req.beta = v;
+        }
+        if let Some(v) = self.p_max_w {
+            req.p_max_w = v;
+        }
+        req
+    }
+}
+
+/// A cross-product grid of sweep axes (see module docs).
+#[derive(Debug, Clone, Default)]
+pub struct ScenarioGrid {
+    /// Use-phase carbon-intensity axis, g/J.
+    pub ci: Vec<AxisPoint>,
+    /// Operational-lifetime axis, s.
+    pub lifetime: Vec<AxisPoint>,
+    /// QoS-scale axis (multiplier on the base request's bounds).
+    pub qos_scale: Vec<AxisPoint>,
+    /// β axis.
+    pub beta: Vec<AxisPoint>,
+    /// Average-power-cap axis, W.
+    pub p_max: Vec<AxisPoint>,
+}
+
+/// Expand an axis into its iteration points (a single inherited point
+/// when the axis is empty).
+fn points(axis: &[AxisPoint]) -> Vec<Option<&AxisPoint>> {
+    if axis.is_empty() {
+        vec![None]
+    } else {
+        axis.iter().map(Some).collect()
+    }
+}
+
+impl ScenarioGrid {
+    /// Empty grid: one scenario that inherits the base request verbatim.
+    pub fn new() -> Self {
+        ScenarioGrid::default()
+    }
+
+    /// Append a carbon-intensity point (g/J).
+    pub fn with_ci(mut self, label: &str, g_per_j: f64) -> Self {
+        self.ci.push(AxisPoint::new(label, g_per_j));
+        self
+    }
+
+    /// Append an operational-lifetime point (s).
+    pub fn with_lifetime(mut self, label: &str, lifetime_s: f64) -> Self {
+        self.lifetime.push(AxisPoint::new(label, lifetime_s));
+        self
+    }
+
+    /// Append a QoS-scale point (multiplier on the base bounds).
+    pub fn with_qos_scale(mut self, label: &str, scale: f64) -> Self {
+        self.qos_scale.push(AxisPoint::new(label, scale));
+        self
+    }
+
+    /// Append a β point.
+    pub fn with_beta(mut self, label: &str, beta: f64) -> Self {
+        self.beta.push(AxisPoint::new(label, beta));
+        self
+    }
+
+    /// Append an average-power-cap point (W).
+    pub fn with_p_max(mut self, label: &str, p_max_w: f64) -> Self {
+        self.p_max.push(AxisPoint::new(label, p_max_w));
+        self
+    }
+
+    /// Concatenate another grid's axes onto this one (axis-wise union —
+    /// the cross-product cardinalities multiply for disjoint axes).
+    pub fn cross(mut self, other: ScenarioGrid) -> Self {
+        self.ci.extend(other.ci);
+        self.lifetime.extend(other.lifetime);
+        self.qos_scale.extend(other.qos_scale);
+        self.beta.extend(other.beta);
+        self.p_max.extend(other.p_max);
+        self
+    }
+
+    /// Number of scenarios the cross-product enumerates (empty axes count
+    /// as one inherited point).
+    pub fn cardinality(&self) -> usize {
+        [&self.ci, &self.lifetime, &self.qos_scale, &self.beta, &self.p_max]
+            .iter()
+            .map(|axis| axis.len().max(1))
+            .product()
+    }
+
+    /// Enumerate every scenario, axis-major in declaration order (ci ▸
+    /// lifetime ▸ qos ▸ β ▸ p_max), matching [`Self::cardinality`].
+    pub fn scenarios(&self) -> Vec<SweepScenario> {
+        let mut out = Vec::with_capacity(self.cardinality());
+        for ci in points(&self.ci) {
+            for lt in points(&self.lifetime) {
+                for qs in points(&self.qos_scale) {
+                    for beta in points(&self.beta) {
+                        for pm in points(&self.p_max) {
+                            let parts: Vec<&str> = [ci, lt, qs, beta, pm]
+                                .iter()
+                                .filter_map(|p| p.map(|a| a.label.as_str()))
+                                .collect();
+                            let label = if parts.is_empty() {
+                                "base".to_string()
+                            } else {
+                                parts.join(" | ")
+                            };
+                            out.push(SweepScenario {
+                                label,
+                                ci_use_g_per_j: ci.map(|a| a.value),
+                                lifetime_s: lt.map(|a| a.value),
+                                qos_scale: qs.map(|a| a.value),
+                                beta: beta.map(|a| a.value),
+                                p_max_w: pm.map(|a| a.value),
+                            });
+                        }
+                    }
+                }
+            }
+        }
+        out
+    }
+
+    /// Fig 7 preset: the 98 % / 65 % / 25 % embodied-share scenarios,
+    /// realized as operational-lifetime calibrations over the profiled
+    /// design space (see [`super::scenario`]).
+    pub fn fig7(rows: &[ConfigRow], tasks: &TaskMatrix, ci_use_g_per_j: f64) -> Self {
+        let mut g = ScenarioGrid::new();
+        for r in [0.98, 0.65, 0.25] {
+            g = g.with_lifetime(
+                &format!("{:.0}% embodied", r * 100.0),
+                lifetime_for_ratio(rows, tasks, r, ci_use_g_per_j),
+            );
+        }
+        g
+    }
+
+    /// Fig 10 preset: operational lifetime swept over whole decades,
+    /// `10^lo .. 10^hi` seconds inclusive.
+    pub fn lifetime_decades(lo: i32, hi: i32) -> Self {
+        assert!(lo <= hi, "empty lifetime axis");
+        let mut g = ScenarioGrid::new();
+        for e in lo..=hi {
+            g = g.with_lifetime(&format!("LT=1e{e}s"), 10f64.powi(e));
+        }
+        g
+    }
+
+    /// Fig 11 preset: provisioning-study scenarios — device lifetime 1–3
+    /// years crossed with the 72 FPS QoS bound enforced or lifted.
+    pub fn fig11() -> Self {
+        let mut g = ScenarioGrid::new();
+        for years in 1..=3 {
+            g = g.with_lifetime(&format!("{years}y"), years as f64 * YEAR_S);
+        }
+        g.with_qos_scale("qos=on", 1.0).with_qos_scale("qos=off", f64::INFINITY)
+    }
+
+    /// CI-diversity preset: the named use-phase grids.
+    pub fn use_grids() -> Self {
+        let mut g = ScenarioGrid::new();
+        for (label, ug) in [
+            ("ci=world", UseGrid::WorldAverage),
+            ("ci=us", UseGrid::UnitedStates),
+            ("ci=coal", UseGrid::Coal),
+            ("ci=renewable", UseGrid::Renewable),
+        ] {
+            g = g.with_ci(label, ug.g_per_joule());
+        }
+        g
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::matrixform::{ConfigRow, TaskMatrix};
+
+    fn base_request() -> EvalRequest {
+        let tasks = TaskMatrix::single_task("t", vec!["k".into()], &[4.0]);
+        EvalRequest {
+            tasks,
+            configs: vec![ConfigRow {
+                name: "c".into(),
+                f_clk: 1e9,
+                d_k: vec![1e-3],
+                e_dyn: vec![0.02],
+                leak_w: 0.0,
+                c_comp: vec![100.0],
+            }],
+            online: vec![1.0],
+            qos: vec![0.01],
+            ci_use_g_per_j: 1e-4,
+            lifetime_s: 1e6,
+            beta: 1.0,
+            p_max_w: 25.0,
+        }
+    }
+
+    #[test]
+    fn empty_grid_is_the_base_scenario() {
+        let g = ScenarioGrid::new();
+        assert_eq!(g.cardinality(), 1);
+        let sc = g.scenarios();
+        assert_eq!(sc.len(), 1);
+        assert_eq!(sc[0].label, "base");
+        let base = base_request();
+        let applied = sc[0].apply(&base);
+        assert_eq!(applied.lifetime_s, base.lifetime_s);
+        assert_eq!(applied.ci_use_g_per_j, base.ci_use_g_per_j);
+        assert_eq!(applied.beta, base.beta);
+        assert_eq!(applied.qos, base.qos);
+        assert_eq!(applied.p_max_w, base.p_max_w);
+    }
+
+    #[test]
+    fn cross_product_cardinality_and_unique_labels() {
+        // Mirrors space.rs::labels_are_unique for the scenario dimension.
+        let g = ScenarioGrid::new()
+            .with_ci("ci=world", 1.2e-4)
+            .with_ci("ci=coal", 2.3e-4)
+            .with_lifetime("1y", YEAR_S)
+            .with_lifetime("3y", 3.0 * YEAR_S)
+            .with_lifetime("5y", 5.0 * YEAR_S)
+            .with_beta("b=1", 1.0)
+            .with_beta("b=2", 2.0);
+        assert_eq!(g.cardinality(), 12);
+        let sc = g.scenarios();
+        assert_eq!(sc.len(), 12);
+        let mut labels: Vec<&str> = sc.iter().map(|s| s.label.as_str()).collect();
+        labels.sort_unstable();
+        labels.dedup();
+        assert_eq!(labels.len(), 12, "scenario labels must be unique");
+    }
+
+    #[test]
+    fn apply_overrides_only_named_axes() {
+        let g = ScenarioGrid::new().with_lifetime("short", 5.0).with_beta("b0", 0.0);
+        let sc = g.scenarios();
+        assert_eq!(sc.len(), 1);
+        let base = base_request();
+        let req = sc[0].apply(&base);
+        assert_eq!(req.lifetime_s, 5.0);
+        assert_eq!(req.beta, 0.0);
+        // Untouched knobs inherit.
+        assert_eq!(req.ci_use_g_per_j, base.ci_use_g_per_j);
+        assert_eq!(req.p_max_w, base.p_max_w);
+        assert_eq!(req.configs.len(), base.configs.len());
+    }
+
+    #[test]
+    fn qos_scale_scales_and_disables() {
+        let g = ScenarioGrid::new()
+            .with_qos_scale("x2", 2.0)
+            .with_qos_scale("off", f64::INFINITY);
+        let sc = g.scenarios();
+        let base = base_request();
+        let scaled = sc[0].apply(&base);
+        assert!((scaled.qos[0] - 0.02).abs() < 1e-15);
+        let off = sc[1].apply(&base);
+        assert_eq!(off.qos[0], f64::INFINITY);
+    }
+
+    #[test]
+    fn fig7_preset_orders_lifetimes() {
+        let tasks = TaskMatrix::single_task("t", vec!["k".into()], &[100.0]);
+        let rows = vec![ConfigRow {
+            name: "a".into(),
+            f_clk: 1e9,
+            d_k: vec![1e-3],
+            e_dyn: vec![0.05],
+            leak_w: 0.01,
+            c_comp: vec![400.0],
+        }];
+        let g = ScenarioGrid::fig7(&rows, &tasks, 1.2e-4);
+        assert_eq!(g.cardinality(), 3);
+        // Higher embodied share ⇒ shorter operational lifetime.
+        assert!(g.lifetime[0].value < g.lifetime[1].value);
+        assert!(g.lifetime[1].value < g.lifetime[2].value);
+        assert!(g.lifetime.iter().all(|p| p.value > 0.0));
+    }
+
+    #[test]
+    fn preset_cross_products_compose() {
+        let tasks = TaskMatrix::single_task("t", vec!["k".into()], &[10.0]);
+        let rows = vec![ConfigRow {
+            name: "a".into(),
+            f_clk: 1e9,
+            d_k: vec![1e-3],
+            e_dyn: vec![0.05],
+            leak_w: 0.0,
+            c_comp: vec![50.0],
+        }];
+        let g = ScenarioGrid::fig7(&rows, &tasks, 1.2e-4).cross(ScenarioGrid::use_grids());
+        assert_eq!(g.cardinality(), 12);
+        assert_eq!(g.scenarios().len(), 12);
+        assert_eq!(ScenarioGrid::fig11().cardinality(), 6);
+        assert_eq!(ScenarioGrid::lifetime_decades(3, 8).cardinality(), 6);
+    }
+}

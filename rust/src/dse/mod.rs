@@ -16,17 +16,26 @@
 //! * [`batching`] — request splitting/merging across batch variants;
 //! * [`pareto`]   — β sweeps and Pareto-front extraction (Table 1);
 //! * [`scenario`] — embodied-ratio ↔ operational-lifetime calibration
-//!   (the 98 %/65 %/25 % scenarios of Fig 7).
+//!   (the 98 %/65 %/25 % scenarios of Fig 7);
+//! * [`grid`]     — labeled scenario cross-products (CI × lifetime × QoS
+//!   × β × power cap) with presets for the Fig 7/10/11 sweeps;
+//! * [`sweep`]    — the parallel multi-scenario coordinator: fans
+//!   (scenario × config-chunk) items across per-thread engines and merges
+//!   deterministically (bit-identical to the sequential path).
 
 pub mod batching;
 pub mod explore;
+pub mod grid;
 pub mod pareto;
 pub mod profile;
 pub mod scenario;
 pub mod space;
+pub mod sweep;
 
-pub use explore::{explore, ExploreOutcome, ExploreStats};
+pub use explore::{explore, summarize, ExploreOutcome, ExploreStats};
+pub use grid::{AxisPoint, ScenarioGrid, SweepScenario};
 pub use pareto::{beta_sweep, pareto_front, BetaPoint};
 pub use profile::{profile_configs, profiles_to_rows};
 pub use scenario::{lifetime_for_ratio, Scenario};
 pub use space::{design_grid, DesignPoint};
+pub use sweep::{sweep, sweep_sequential, ScenarioResult, SweepConfig, SweepOutcome};

@@ -1,0 +1,312 @@
+//! Parallel multi-scenario sweep coordinator.
+//!
+//! Evaluates one design space under every scenario of a
+//! [`ScenarioGrid`] by fanning (scenario × config-chunk) work items out
+//! across a pool of worker threads. Engines are `!Send`, so each worker
+//! builds its own through an [`EngineFactory`]. Work items are pre-split
+//! with [`super::batching`]'s chunk sizing — exactly the engine-call
+//! boundaries `evaluate_chunked` uses sequentially — and each worker runs
+//! one [`evaluate`] call per item, so after the deterministic
+//! (scenario-major, chunk-ascending) merge the parallel output is
+//! bit-identical to the sequential path ([`sweep_sequential`]) — locked by
+//! `rust/tests/coordinator_props.rs::prop_parallel_sweep_bit_identical_to_sequential`.
+
+use std::sync::atomic::{AtomicUsize, Ordering};
+
+use crate::matrixform::{EvalRequest, EvalResult, MetricRow};
+use crate::runtime::{evaluate, Engine, EngineFactory};
+
+use super::batching::{chunk_size, merge, shallow};
+use super::explore::{explore, summarize, ExploreOutcome};
+use super::grid::ScenarioGrid;
+
+/// Sweep execution knobs.
+#[derive(Debug, Clone, Copy, Default)]
+pub struct SweepConfig {
+    /// Worker threads; 0 (the default) = one per available CPU, capped by
+    /// the number of work items.
+    pub threads: usize,
+}
+
+/// One scenario's evaluated outcome.
+#[derive(Debug, Clone)]
+pub struct ScenarioResult {
+    /// Scenario label from the grid.
+    pub label: String,
+    /// Full exploration outcome (per-config results, optima, stats).
+    pub outcome: ExploreOutcome,
+}
+
+/// Aggregated sweep result, scenario order = grid enumeration order.
+#[derive(Debug, Clone)]
+pub struct SweepOutcome {
+    /// Per-scenario results.
+    pub scenarios: Vec<ScenarioResult>,
+    /// Engine label ("host", "pjrt").
+    pub engine: &'static str,
+    /// Worker threads actually used.
+    pub threads: usize,
+    /// Work items the sweep fanned out.
+    pub items: usize,
+}
+
+impl SweepOutcome {
+    /// Cross-scenario argmin: `(scenario index, config index, tCDP)` of
+    /// the feasible design minimizing tCDP over the whole sweep.
+    pub fn best(&self) -> Option<(usize, usize, f64)> {
+        let mut best: Option<(usize, usize, f64)> = None;
+        for (si, s) in self.scenarios.iter().enumerate() {
+            if let Some(ci) = s.outcome.result.argmin_feasible(MetricRow::Tcdp) {
+                let v = s.outcome.result.metric(MetricRow::Tcdp, ci);
+                match best {
+                    Some((_, _, bv)) if bv <= v => {}
+                    _ => best = Some((si, ci, v)),
+                }
+            }
+        }
+        best
+    }
+}
+
+/// One fanned-out unit of work: a config chunk under one scenario.
+struct SweepItem {
+    scenario: usize,
+    req: EvalRequest,
+}
+
+/// Build the (scenario × config-chunk) item list. Chunk boundaries are
+/// exactly the ones `evaluate_chunked` would use sequentially — one
+/// `evaluate` call per item — so merging item results in order reproduces
+/// the sequential result bit-for-bit (a remainder chunk must run as one
+/// padded batch here, not be re-chunked, or the PJRT path would route it
+/// through a different artifact variant than the sequential run).
+fn build_items(
+    base: &EvalRequest,
+    grid: &ScenarioGrid,
+) -> (Vec<SweepItem>, Vec<super::grid::SweepScenario>) {
+    let scenarios = grid.scenarios();
+    let mut items = Vec::new();
+    for (si, sc) in scenarios.iter().enumerate() {
+        let req = sc.apply(base);
+        let cs = chunk_size(req.configs.len());
+        if req.configs.len() <= cs {
+            items.push(SweepItem { scenario: si, req });
+        } else {
+            for chunk in req.configs.chunks(cs) {
+                items.push(SweepItem {
+                    scenario: si,
+                    req: EvalRequest { configs: chunk.to_vec(), ..shallow(&req) },
+                });
+            }
+        }
+    }
+    (items, scenarios)
+}
+
+/// Run the sweep in parallel: one engine per worker, shared atomic work
+/// queue, deterministic order-preserving merge.
+pub fn sweep(
+    factory: &dyn EngineFactory,
+    base: &EvalRequest,
+    grid: &ScenarioGrid,
+    cfg: &SweepConfig,
+) -> crate::Result<SweepOutcome> {
+    let (items, scenarios) = build_items(base, grid);
+    let n_scenarios = scenarios.len();
+    let n_items = items.len();
+    let hw = std::thread::available_parallelism().map(|n| n.get()).unwrap_or(4);
+    let threads = if cfg.threads == 0 { hw } else { cfg.threads };
+    let n_workers = threads.min(n_items).max(1);
+
+    let mut slots: Vec<Option<EvalResult>> = (0..n_items).map(|_| None).collect();
+    if n_workers == 1 {
+        // Single-worker path: same items, same merge, no thread overhead.
+        let mut engine = factory.build()?;
+        for (slot, item) in slots.iter_mut().zip(&items) {
+            *slot = Some(evaluate(engine.as_mut(), &item.req)?);
+        }
+    } else {
+        let next = AtomicUsize::new(0);
+        std::thread::scope(|s| -> crate::Result<()> {
+            let mut handles = Vec::with_capacity(n_workers);
+            for _ in 0..n_workers {
+                let items = &items;
+                let next = &next;
+                handles.push(s.spawn(move || -> crate::Result<Vec<(usize, EvalResult)>> {
+                    let mut engine = factory.build()?;
+                    let mut done = Vec::new();
+                    loop {
+                        let i = next.fetch_add(1, Ordering::Relaxed);
+                        if i >= items.len() {
+                            break;
+                        }
+                        done.push((i, evaluate(engine.as_mut(), &items[i].req)?));
+                    }
+                    Ok(done)
+                }));
+            }
+            for h in handles {
+                for (i, res) in h.join().expect("sweep worker panicked")? {
+                    slots[i] = Some(res);
+                }
+            }
+            Ok(())
+        })?;
+    }
+
+    // Order-preserving merge: items were emitted scenario-major in chunk
+    // order, so folding each scenario's slots left-to-right reproduces the
+    // sequential `evaluate_chunked` merge exactly.
+    let mut merged: Vec<Option<EvalResult>> = (0..n_scenarios).map(|_| None).collect();
+    for (item, res) in items.iter().zip(slots) {
+        let res = res.expect("work item left unevaluated");
+        let slot = &mut merged[item.scenario];
+        *slot = Some(match slot.take() {
+            None => res,
+            Some(acc) => merge(acc, res),
+        });
+    }
+
+    let scenarios = scenarios
+        .into_iter()
+        .zip(merged)
+        .map(|(sc, res)| ScenarioResult {
+            label: sc.label,
+            outcome: summarize(res.expect("scenario produced no chunks")),
+        })
+        .collect();
+
+    Ok(SweepOutcome { scenarios, engine: factory.label(), threads: n_workers, items: n_items })
+}
+
+/// Sequential reference path: one engine, scenarios in grid order. The
+/// parallel [`sweep`] must match this bit-for-bit.
+pub fn sweep_sequential(
+    engine: &mut dyn Engine,
+    base: &EvalRequest,
+    grid: &ScenarioGrid,
+) -> crate::Result<SweepOutcome> {
+    let scenarios = grid.scenarios();
+    let n = scenarios.len();
+    let mut out = Vec::with_capacity(n);
+    for sc in scenarios {
+        let req = sc.apply(base);
+        out.push(ScenarioResult { label: sc.label, outcome: explore(engine, &req)? });
+    }
+    Ok(SweepOutcome { scenarios: out, engine: engine.name(), threads: 1, items: n })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::matrixform::{ConfigRow, TaskMatrix};
+    use crate::runtime::{HostEngine, HostEngineFactory};
+
+    fn request(c: usize) -> EvalRequest {
+        let tm = TaskMatrix::single_task("t", vec!["k".into()], &[3.0]);
+        EvalRequest {
+            tasks: tm,
+            configs: (0..c)
+                .map(|i| ConfigRow {
+                    name: format!("cfg{i}"),
+                    f_clk: 1e9,
+                    d_k: vec![(i + 1) as f64 * 1e-3],
+                    e_dyn: vec![0.01 + i as f64 * 1e-4],
+                    leak_w: 0.01,
+                    c_comp: vec![100.0 + i as f64],
+                })
+                .collect(),
+            online: vec![1.0],
+            qos: vec![f64::INFINITY],
+            ci_use_g_per_j: 1.2e-4,
+            lifetime_s: 1e6,
+            beta: 1.0,
+            p_max_w: f64::INFINITY,
+        }
+    }
+
+    fn grid() -> ScenarioGrid {
+        ScenarioGrid::new()
+            .with_lifetime("short", 1e5)
+            .with_lifetime("long", 1e7)
+            .with_beta("b=0.5", 0.5)
+            .with_beta("b=2", 2.0)
+    }
+
+    fn assert_outcomes_identical(a: &SweepOutcome, b: &SweepOutcome) {
+        assert_eq!(a.scenarios.len(), b.scenarios.len());
+        for (x, y) in a.scenarios.iter().zip(&b.scenarios) {
+            assert_eq!(x.label, y.label);
+            assert_eq!(x.outcome.result.names, y.outcome.result.names);
+            // Bit-identical, not approximately equal.
+            assert_eq!(x.outcome.result.metrics, y.outcome.result.metrics);
+            assert_eq!(x.outcome.result.d_task, y.outcome.result.d_task);
+            assert_eq!(x.outcome.optimal, y.outcome.optimal);
+            assert_eq!(x.outcome.stats.best.to_bits(), y.outcome.stats.best.to_bits());
+            assert_eq!(x.outcome.stats.mean.to_bits(), y.outcome.stats.mean.to_bits());
+            assert_eq!(x.outcome.stats.feasible, y.outcome.stats.feasible);
+        }
+    }
+
+    #[test]
+    fn parallel_matches_sequential_small_space() {
+        let req = request(9);
+        let par = sweep(&HostEngineFactory, &req, &grid(), &SweepConfig { threads: 4 }).unwrap();
+        let seq = sweep_sequential(&mut HostEngine::new(), &req, &grid()).unwrap();
+        assert_eq!(par.scenarios.len(), 4);
+        assert_outcomes_identical(&par, &seq);
+    }
+
+    #[test]
+    fn parallel_matches_sequential_chunked_space() {
+        // 2500 configs -> 3 chunks per scenario -> 12 items.
+        let req = request(2500);
+        let par = sweep(&HostEngineFactory, &req, &grid(), &SweepConfig { threads: 4 }).unwrap();
+        assert_eq!(par.items, 12);
+        let seq = sweep_sequential(&mut HostEngine::new(), &req, &grid()).unwrap();
+        assert_outcomes_identical(&par, &seq);
+    }
+
+    #[test]
+    fn single_thread_config_uses_one_worker() {
+        let req = request(5);
+        let out = sweep(&HostEngineFactory, &req, &grid(), &SweepConfig { threads: 1 }).unwrap();
+        assert_eq!(out.threads, 1);
+        assert_eq!(out.engine, "host");
+        assert_eq!(out.scenarios.len(), 4);
+    }
+
+    #[test]
+    fn scenario_order_matches_grid_enumeration() {
+        let req = request(3);
+        let out = sweep(&HostEngineFactory, &req, &grid(), &SweepConfig::default()).unwrap();
+        let labels: Vec<&str> = out.scenarios.iter().map(|s| s.label.as_str()).collect();
+        let expect: Vec<String> = grid().scenarios().into_iter().map(|s| s.label).collect();
+        assert_eq!(labels, expect.iter().map(String::as_str).collect::<Vec<_>>());
+    }
+
+    #[test]
+    fn best_is_global_argmin_across_scenarios() {
+        let req = request(7);
+        let out = sweep(&HostEngineFactory, &req, &grid(), &SweepConfig::default()).unwrap();
+        let (si, ci, v) = out.best().expect("feasible design exists");
+        for s in &out.scenarios {
+            for i in 0..s.outcome.result.c {
+                if s.outcome.result.metric(MetricRow::Feasible, i) > 0.5 {
+                    assert!(s.outcome.result.metric(MetricRow::Tcdp, i) >= v);
+                }
+            }
+        }
+        assert!(out.scenarios[si].outcome.result.metric(MetricRow::Tcdp, ci) == v);
+    }
+
+    #[test]
+    fn longer_lifetime_lowers_amortized_embodied() {
+        // Scenario semantics flow through the sweep: the long-lifetime
+        // scenario must report lower tCDP than the short one (same space).
+        let req = request(4);
+        let g = ScenarioGrid::new().with_lifetime("short", 1e5).with_lifetime("long", 1e7);
+        let out = sweep(&HostEngineFactory, &req, &g, &SweepConfig::default()).unwrap();
+        assert!(out.scenarios[0].outcome.stats.best > out.scenarios[1].outcome.stats.best);
+    }
+}

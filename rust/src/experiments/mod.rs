@@ -21,4 +21,5 @@ pub mod fig13_core_configs;
 pub mod fig14_replacement;
 pub mod fig15_stacking;
 pub mod fig16_stacking_kernels;
+pub mod sweep_fig7;
 pub mod table5_vr_soc;

@@ -1,0 +1,106 @@
+//! Fig 7 as a single [`ScenarioGrid`] run: the three embodied-share
+//! scenarios over the 121-point MAC×SRAM grid for one workload cluster,
+//! evaluated by the parallel sweep coordinator ([`crate::dse::sweep`])
+//! with one engine per worker thread.
+//!
+//! `fig07_dse_clusters` remains the faithful per-panel reproduction; this
+//! entry is the scaling substrate — the same numbers for one cluster,
+//! produced by the (scenario × config-chunk) fan-out path.
+
+use crate::carbon::FabGrid;
+use crate::dse::grid::ScenarioGrid;
+use crate::dse::sweep::{sweep, SweepConfig, SweepOutcome};
+use crate::dse::{design_grid, profile_configs, profiles_to_rows};
+use crate::matrixform::{ConfigRow, EvalRequest, TaskMatrix};
+use crate::report::{sweep_table, Table};
+use crate::runtime::EngineFactory;
+use crate::workloads::{cluster_workloads, Cluster};
+
+use super::common::{default_use_grid, rows_request, suite_task};
+
+/// A profiled cluster design space ready for scenario sweeps.
+pub struct ClusterSpace {
+    /// Profiled §3.3 rows for the 121-point grid.
+    pub rows: Vec<ConfigRow>,
+    /// The cluster's suite task matrix.
+    pub tasks: TaskMatrix,
+    /// Base request (lifetime placeholder — scenarios override it).
+    pub base: EvalRequest,
+    /// Use-phase carbon intensity, g/J.
+    pub ci_use_g_per_j: f64,
+}
+
+/// Profile the 121-point grid on a cluster's kernels and assemble the
+/// base request scenario sweeps rewrite.
+pub fn profile_cluster(cluster: Cluster) -> ClusterSpace {
+    let grid = design_grid();
+    let configs: Vec<_> = grid.iter().map(|p| p.config.clone()).collect();
+    let workloads = cluster_workloads(cluster);
+    let profiles = profile_configs(&configs, &workloads);
+    let rows = profiles_to_rows(&configs, &profiles, FabGrid::Coal);
+    let tasks = suite_task(&workloads);
+    let ci = default_use_grid().g_per_joule();
+    // Lifetime 1.0 is a placeholder: every preset scenario overrides it.
+    let base = rows_request(rows.clone(), &workloads, 1.0, 1.0);
+    ClusterSpace { rows, tasks, base, ci_use_g_per_j: ci }
+}
+
+/// Full sweep output.
+pub struct SweepFig7 {
+    /// Cluster the space was profiled on.
+    pub cluster: Cluster,
+    /// The aggregated sweep outcome (scenarios in 98 %→25 % order).
+    pub outcome: SweepOutcome,
+    /// Rendered per-scenario table.
+    pub table: Table,
+}
+
+/// Run the Fig 7 sweep for one cluster on `threads` workers (0 = auto).
+pub fn run(
+    factory: &dyn EngineFactory,
+    cluster: Cluster,
+    threads: usize,
+) -> crate::Result<SweepFig7> {
+    let space = profile_cluster(cluster);
+    let grid = ScenarioGrid::fig7(&space.rows, &space.tasks, space.ci_use_g_per_j);
+    let outcome = sweep(factory, &space.base, &grid, &SweepConfig { threads })?;
+    let mut table = sweep_table(&outcome);
+    table.title = format!("Fig 7 sweep [{}] — {}", cluster.label(), table.title);
+    Ok(SweepFig7 { cluster, outcome, table })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::dse::sweep_sequential;
+    use crate::runtime::{HostEngine, HostEngineFactory};
+
+    #[test]
+    fn sweep_reproduces_fig7_scenarios_for_one_cluster() {
+        let f = run(&HostEngineFactory, Cluster::Ai5, 4).unwrap();
+        assert_eq!(f.outcome.scenarios.len(), 3);
+        for s in &f.outcome.scenarios {
+            // Unconstrained space: all 121 designs feasible everywhere.
+            assert_eq!(s.outcome.stats.feasible, 121);
+            assert!(s.outcome.stats.best > 0.0 && s.outcome.stats.best.is_finite());
+        }
+        // 98% embodied (shortest lifetime) is the costliest scenario.
+        let best: Vec<f64> = f.outcome.scenarios.iter().map(|s| s.outcome.stats.best).collect();
+        assert!(best[0] > best[1] && best[1] > best[2], "best tCDP not ordered: {best:?}");
+        assert_eq!(f.table.len(), 3);
+    }
+
+    #[test]
+    fn parallel_fig7_sweep_matches_sequential() {
+        let space = profile_cluster(Cluster::Xr5);
+        let grid = ScenarioGrid::fig7(&space.rows, &space.tasks, space.ci_use_g_per_j);
+        let par =
+            sweep(&HostEngineFactory, &space.base, &grid, &SweepConfig { threads: 4 }).unwrap();
+        let seq = sweep_sequential(&mut HostEngine::new(), &space.base, &grid).unwrap();
+        for (a, b) in par.scenarios.iter().zip(&seq.scenarios) {
+            assert_eq!(a.label, b.label);
+            assert_eq!(a.outcome.result.metrics, b.outcome.result.metrics);
+            assert_eq!(a.outcome.optimal, b.outcome.optimal);
+        }
+    }
+}

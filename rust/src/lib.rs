@@ -17,10 +17,14 @@
 //! * **L1 (Pallas, build time)** — the blocked metric-evaluation kernel the
 //!   L2 graph calls.
 //!
-//! At run time the [`runtime::PjrtEngine`] loads the HLO artifacts through
-//! the PJRT CPU client (`xla` crate) and the coordinator streams batches of
-//! candidate hardware configurations through it; [`runtime::HostEngine`] is
-//! a pure-Rust mirror used for cross-checking and as a fallback.
+//! At run time `runtime::PjrtEngine` (behind the `pjrt` cargo feature)
+//! loads the HLO artifacts through the PJRT CPU client (`xla` crate) and
+//! the coordinator streams batches of candidate hardware configurations
+//! through it; [`runtime::HostEngine`] is a pure-Rust mirror used for
+//! cross-checking and as a fallback. Multi-scenario studies run through
+//! [`dse::sweep`], which fans (scenario × config-chunk) items across
+//! worker threads, each owning a private engine built by a
+//! [`runtime::EngineFactory`].
 //!
 //! See `DESIGN.md` for the per-experiment index and `EXPERIMENTS.md` for
 //! paper-vs-measured results.

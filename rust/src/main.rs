@@ -4,15 +4,18 @@
 //! mirror.
 
 use xrcarbon::cli::Args;
+use xrcarbon::dse::sweep::{sweep, SweepConfig};
+use xrcarbon::dse::ScenarioGrid;
 use xrcarbon::experiments::{
     common::Ctx, fig01_metric_comparison, fig02_retrospective, fig03_fleet_categories,
     fig04_power_embodied, fig07_dse_clusters, fig08_tcdp_vs_edp, fig09_accelerators,
     fig10_lifetime_crossover, fig11_provisioning_savings, fig12_tlp_breakdown,
-    fig13_core_configs, fig14_replacement, fig15_stacking, fig16_stacking_kernels,
+    fig13_core_configs, fig14_replacement, fig15_stacking, fig16_stacking_kernels, sweep_fig7,
     table5_vr_soc,
 };
-use xrcarbon::report::write_csv;
-use xrcarbon::workloads::FleetConfig;
+use xrcarbon::report::{sweep_best_table, sweep_table, write_csv};
+use xrcarbon::runtime::{auto_factory, EngineFactory, HostEngineFactory};
+use xrcarbon::workloads::{Cluster, FleetConfig};
 
 const USAGE: &str = "\
 xrcarbon — carbon-efficient XR design space exploration (tCDP)
@@ -35,6 +38,9 @@ COMMANDS
   fig15       3D stacking vs 2D baseline           [--workload SR-512]
   fig16       3D stacking per XR kernel
   table5      VR SoC embodied-carbon calibration
+  sweep       parallel multi-scenario sweep        [--preset fig7|lifetime|fig11
+                                                    --cluster all|10xr|10ai|5xr|5ai
+                                                    --threads N (0 = auto)]
   all         run everything above in order
 ";
 
@@ -52,6 +58,56 @@ fn ctx_for(args: &Args) -> Ctx {
         "host" => Ctx::host(),
         _ => Ctx::auto(),
     }
+}
+
+fn factory_for(args: &Args) -> Box<dyn EngineFactory> {
+    match args.get("engine", "auto") {
+        "host" => Box::new(HostEngineFactory),
+        _ => auto_factory(xrcarbon::experiments::common::ARTIFACTS_DIR),
+    }
+}
+
+fn cluster_for(args: &Args) -> anyhow::Result<Cluster> {
+    let name = args.get("cluster", "5ai");
+    Cluster::parse(name).ok_or_else(|| anyhow::anyhow!("unknown cluster '{name}'"))
+}
+
+fn run_sweep(args: &Args) -> anyhow::Result<()> {
+    let factory = factory_for(args);
+    println!("[engine: {}]", factory.label());
+    let threads = args.get_usize("threads", 0)?;
+    let preset = args.get("preset", "fig7");
+    match preset {
+        "fig7" => {
+            let f = sweep_fig7::run(factory.as_ref(), cluster_for(args)?, threads)?;
+            emit(args, "sweep_fig7", &f.table)?;
+            print!("{}", sweep_best_table(&f.outcome).render());
+        }
+        "lifetime" => {
+            let space = sweep_fig7::profile_cluster(cluster_for(args)?);
+            let grid = ScenarioGrid::lifetime_decades(3, 8);
+            let out = sweep(factory.as_ref(), &space.base, &grid, &SweepConfig { threads })?;
+            emit(args, "sweep_lifetime", &sweep_table(&out))?;
+            print!("{}", sweep_best_table(&out).render());
+        }
+        "fig11" => {
+            // One task per app and T_PAD = 8: sweep the top-4 apps jointly
+            // (Fig 11 proper iterates apps one at a time — see fig11).
+            let apps = xrcarbon::workloads::top10_apps();
+            let base = xrcarbon::experiments::common::provisioning_request(
+                &apps[..4],
+                &xrcarbon::soc::VrSoc::default(),
+                2.0 * xrcarbon::dse::grid::YEAR_S,
+                true,
+            );
+            let grid = ScenarioGrid::fig11();
+            let out = sweep(factory.as_ref(), &base, &grid, &SweepConfig { threads })?;
+            emit(args, "sweep_fig11", &sweep_table(&out))?;
+            print!("{}", sweep_best_table(&out).render());
+        }
+        other => anyhow::bail!("unknown sweep preset '{other}' (fig7|lifetime|fig11)"),
+    }
+    Ok(())
 }
 
 fn emit(args: &Args, name: &str, table: &xrcarbon::report::Table) -> anyhow::Result<()> {
@@ -123,6 +179,7 @@ fn run_one(cmd: &str, args: &Args) -> anyhow::Result<()> {
             emit(args, "fig16", &fig16_stacking_kernels::run(ctx.engine.as_mut())?.table)?;
         }
         "table5" => emit(args, "table5", &table5_vr_soc::run().table)?,
+        "sweep" => run_sweep(args)?,
         other => anyhow::bail!("unknown command '{other}'\n\n{USAGE}"),
     }
     Ok(())
@@ -141,7 +198,7 @@ fn main() -> anyhow::Result<()> {
     if cmd == "all" {
         for c in [
             "table5", "fig1", "fig2", "fig3", "fig4", "fig9", "fig12", "fig14", "fig13",
-            "fig11", "fig10", "fig15", "fig16", "fig8", "fig7",
+            "fig11", "fig10", "fig15", "fig16", "fig8", "fig7", "sweep",
         ] {
             println!("===== {c} =====");
             run_one(c, &args)?;

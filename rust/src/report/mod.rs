@@ -5,6 +5,8 @@
 //! an ASCII bar/line rendering for quick visual shape checks in the
 //! terminal.
 
+mod sweep;
 mod table;
 
+pub use sweep::{sweep_best_table, sweep_table};
 pub use table::{ascii_bars, ascii_series, normalize_to, write_csv, Table};

@@ -1,0 +1,116 @@
+//! Rendering [`SweepOutcome`]s: the per-scenario statistics table and the
+//! cross-scenario best/argmin table the CLI `sweep` subcommand prints.
+
+use crate::dse::sweep::SweepOutcome;
+use crate::matrixform::MetricRow;
+
+use super::Table;
+
+/// Per-scenario `ExploreStats` table, one row per scenario in grid order.
+pub fn sweep_table(out: &SweepOutcome) -> Table {
+    let mut t = Table::new(
+        &format!(
+            "Scenario sweep — {} scenarios, {} work items, {} engine, {} thread(s)",
+            out.scenarios.len(),
+            out.items,
+            out.engine,
+            out.threads
+        ),
+        &["scenario", "feasible", "best tCDP", "mean", "p5", "p95", "optimal design"],
+    );
+    for s in &out.scenarios {
+        let st = &s.outcome.stats;
+        let best_design = s
+            .outcome
+            .optimal
+            .get("tCDP")
+            .map(|&i| s.outcome.result.names[i].clone())
+            .unwrap_or_else(|| "-".to_string());
+        t.row(&[
+            s.label.clone(),
+            st.feasible.to_string(),
+            format!("{:.3e}", st.best),
+            format!("{:.3e}", st.mean),
+            format!("{:.3e}", st.p5),
+            format!("{:.3e}", st.p95),
+            best_design,
+        ]);
+    }
+    t
+}
+
+/// Cross-scenario argmin table: the single feasible (scenario, design)
+/// pair minimizing tCDP over the whole sweep, with its carbon split.
+pub fn sweep_best_table(out: &SweepOutcome) -> Table {
+    let mut t = Table::new(
+        "Cross-scenario optimum (feasible argmin of tCDP)",
+        &["scenario", "design", "tCDP [g*s]", "C_op [g]", "C_emb [g]", "delay [s]"],
+    );
+    if let Some((si, ci, v)) = out.best() {
+        let s = &out.scenarios[si];
+        let r = &s.outcome.result;
+        t.row(&[
+            s.label.clone(),
+            r.names[ci].clone(),
+            format!("{v:.3e}"),
+            format!("{:.3e}", r.metric(MetricRow::COp, ci)),
+            format!("{:.3e}", r.metric(MetricRow::CEmb, ci)),
+            format!("{:.3e}", r.metric(MetricRow::Delay, ci)),
+        ]);
+    }
+    t
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::dse::grid::ScenarioGrid;
+    use crate::dse::sweep::{sweep, SweepConfig};
+    use crate::matrixform::{ConfigRow, EvalRequest, TaskMatrix};
+    use crate::runtime::HostEngineFactory;
+
+    fn outcome() -> SweepOutcome {
+        let tasks = TaskMatrix::single_task("t", vec!["k".into()], &[5.0]);
+        let req = EvalRequest {
+            tasks,
+            configs: (0..3)
+                .map(|i| ConfigRow {
+                    name: format!("c{i}"),
+                    f_clk: 1e9,
+                    d_k: vec![(i + 1) as f64 * 1e-3],
+                    e_dyn: vec![0.02],
+                    leak_w: 0.0,
+                    c_comp: vec![50.0 * (i + 1) as f64],
+                })
+                .collect(),
+            online: vec![1.0],
+            qos: vec![f64::INFINITY],
+            ci_use_g_per_j: 1e-4,
+            lifetime_s: 1e6,
+            beta: 1.0,
+            p_max_w: f64::INFINITY,
+        };
+        let grid = ScenarioGrid::new().with_lifetime("a", 1e5).with_lifetime("b", 1e7);
+        sweep(&HostEngineFactory, &req, &grid, &SweepConfig::default()).unwrap()
+    }
+
+    #[test]
+    fn sweep_table_has_one_row_per_scenario() {
+        let out = outcome();
+        let t = sweep_table(&out);
+        assert_eq!(t.len(), 2);
+        let rendered = t.render();
+        assert!(rendered.contains("a"));
+        assert!(rendered.contains("host"));
+    }
+
+    #[test]
+    fn best_table_names_the_global_optimum() {
+        let out = outcome();
+        let (si, ci, _) = out.best().unwrap();
+        let t = sweep_best_table(&out);
+        assert_eq!(t.len(), 1);
+        let rendered = t.render();
+        assert!(rendered.contains(&out.scenarios[si].outcome.result.names[ci]));
+    }
+}

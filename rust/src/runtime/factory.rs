@@ -1,0 +1,113 @@
+//! Per-worker engine construction for parallel sweeps.
+//!
+//! [`Engine`]s are intentionally `!Send` (the PJRT client is `Rc`-based),
+//! so a multi-threaded sweep cannot share one engine across workers. An
+//! [`EngineFactory`] is the `Send + Sync` recipe each worker thread
+//! invokes once to obtain its own private engine; the factory crosses the
+//! thread boundary, the engines never do.
+
+use super::engine::Engine;
+use super::host::HostEngine;
+
+/// Thread-safe recipe for building per-worker engines.
+pub trait EngineFactory: Send + Sync {
+    /// Construct a fresh engine owned by the calling thread.
+    fn build(&self) -> crate::Result<Box<dyn Engine>>;
+
+    /// Label naming the engines this factory produces ("host", "pjrt").
+    fn label(&self) -> &'static str;
+}
+
+/// Factory for the pure-Rust [`HostEngine`]; always available and free to
+/// construct, so parallel sweeps default to it when artifacts are absent.
+#[derive(Debug, Clone, Copy, Default)]
+pub struct HostEngineFactory;
+
+impl EngineFactory for HostEngineFactory {
+    fn build(&self) -> crate::Result<Box<dyn Engine>> {
+        Ok(Box::new(HostEngine::new()))
+    }
+
+    fn label(&self) -> &'static str {
+        "host"
+    }
+}
+
+/// Factory constructing one PJRT engine — and therefore one PJRT CPU
+/// client and executable cache — per worker thread, all loading the same
+/// artifacts directory.
+#[cfg(feature = "pjrt")]
+pub struct PjrtEngineFactory {
+    artifacts_dir: String,
+}
+
+#[cfg(feature = "pjrt")]
+impl PjrtEngineFactory {
+    /// Probe-load the artifacts once up front so a sweep fails fast on a
+    /// bad directory instead of inside every worker.
+    pub fn new(artifacts_dir: &str) -> crate::Result<Self> {
+        super::PjrtEngine::load(artifacts_dir)?;
+        Ok(PjrtEngineFactory { artifacts_dir: artifacts_dir.to_string() })
+    }
+}
+
+#[cfg(feature = "pjrt")]
+impl EngineFactory for PjrtEngineFactory {
+    fn build(&self) -> crate::Result<Box<dyn Engine>> {
+        Ok(Box::new(super::PjrtEngine::load(&self.artifacts_dir)?))
+    }
+
+    fn label(&self) -> &'static str {
+        "pjrt"
+    }
+}
+
+/// Best available factory: PJRT when the `pjrt` feature is enabled and
+/// the artifacts load, host fallback otherwise.
+pub fn auto_factory(artifacts_dir: &str) -> Box<dyn EngineFactory> {
+    #[cfg(feature = "pjrt")]
+    {
+        if let Ok(f) = PjrtEngineFactory::new(artifacts_dir) {
+            return Box::new(f);
+        }
+    }
+    let _ = artifacts_dir;
+    Box::new(HostEngineFactory)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn host_factory_builds_host_engines() {
+        let f = HostEngineFactory;
+        assert_eq!(f.label(), "host");
+        let engine = f.build().unwrap();
+        assert_eq!(engine.name(), "host");
+    }
+
+    #[test]
+    fn factories_cross_threads_engines_do_not_need_to() {
+        // The whole point: a factory is shared across workers, each of
+        // which builds and uses an engine locally.
+        let f = HostEngineFactory;
+        std::thread::scope(|s| {
+            let handles: Vec<_> = (0..4)
+                .map(|_| {
+                    let f = &f;
+                    s.spawn(move || f.build().map(|e| e.name()).unwrap())
+                })
+                .collect();
+            for h in handles {
+                assert_eq!(h.join().unwrap(), "host");
+            }
+        });
+    }
+
+    #[test]
+    fn auto_factory_falls_back_to_host() {
+        let f = auto_factory("definitely/not/an/artifacts/dir");
+        assert_eq!(f.label(), "host");
+    }
+}

@@ -2,21 +2,30 @@
 //!
 //! Two interchangeable [`Engine`] implementations:
 //!
-//! * [`PjrtEngine`] — the production path: loads the AOT HLO-text
-//!   artifacts (`artifacts/dse_metrics_c*.hlo.txt`) through the `xla`
-//!   crate's PJRT CPU client, compiles each variant **once**, caches the
-//!   executables and streams packed batches through them. Python is never
-//!   on this path.
+//! * `PjrtEngine` (behind the `pjrt` feature) — the production path: loads
+//!   the AOT HLO-text artifacts (`artifacts/dse_metrics_c*.hlo.txt`)
+//!   through the `xla` crate's PJRT CPU client, compiles each variant
+//!   **once**, caches the executables and streams packed batches through
+//!   them. Python is never on this path.
 //! * [`HostEngine`] — a pure-Rust f32 mirror of the Layer-2 graph, used to
 //!   cross-check PJRT numerics in integration tests and as a fallback when
-//!   artifacts are absent.
+//!   artifacts are absent (or the `pjrt` feature is off).
+//!
+//! Engines are `!Send` by design; parallel sweeps construct one engine per
+//! worker thread through an [`EngineFactory`] instead of sharing one.
 
 mod engine;
+mod factory;
 mod host;
+#[cfg(feature = "pjrt")]
 mod pjrt;
 
 pub use engine::{Engine, RawOutput};
+pub use factory::{auto_factory, EngineFactory, HostEngineFactory};
+#[cfg(feature = "pjrt")]
+pub use factory::PjrtEngineFactory;
 pub use host::HostEngine;
+#[cfg(feature = "pjrt")]
 pub use pjrt::PjrtEngine;
 
 use crate::matrixform::{EvalRequest, EvalResult, PackedProblem};
@@ -28,12 +37,16 @@ pub fn evaluate(engine: &mut dyn Engine, req: &EvalRequest) -> crate::Result<Eva
     Ok(packed.unpack(&raw.metrics, &raw.d_task))
 }
 
-/// Build the best available engine: PJRT if the artifacts directory
-/// exists and loads, host fallback otherwise. Returns the engine and a
-/// label naming which path was taken.
+/// Build the best available engine: PJRT if the feature is enabled and the
+/// artifacts directory exists and loads, host fallback otherwise. Returns
+/// the engine and a label naming which path was taken.
 pub fn auto_engine(artifacts_dir: &str) -> (Box<dyn Engine>, &'static str) {
-    match PjrtEngine::load(artifacts_dir) {
-        Ok(e) => (Box::new(e), "pjrt"),
-        Err(_) => (Box::new(HostEngine::new()), "host"),
+    #[cfg(feature = "pjrt")]
+    {
+        if let Ok(e) = PjrtEngine::load(artifacts_dir) {
+            return (Box::new(e), "pjrt");
+        }
     }
+    let _ = artifacts_dir;
+    (Box::new(HostEngine::new()), "host")
 }

@@ -1,10 +1,13 @@
 //! Property tests on coordinator invariants (routing/batching/state):
 //! packing round-trips, batch-order preservation, β monotonicity,
-//! constraint semantics and engine equivalence — over randomized requests.
+//! constraint semantics, engine equivalence and parallel-sweep
+//! determinism — over randomized requests.
 
 use xrcarbon::dse::batching::evaluate_chunked;
+use xrcarbon::dse::sweep::{sweep, sweep_sequential, SweepConfig, SweepOutcome};
+use xrcarbon::dse::ScenarioGrid;
 use xrcarbon::matrixform::{ConfigRow, EvalRequest, MetricRow, PackedProblem, TaskMatrix};
-use xrcarbon::runtime::{evaluate, HostEngine};
+use xrcarbon::runtime::{evaluate, HostEngine, HostEngineFactory};
 use xrcarbon::testkit::{forall_cfg, PropConfig, Rng};
 
 fn gen_request(r: &mut Rng) -> EvalRequest {
@@ -165,6 +168,83 @@ fn prop_chunked_evaluation_order_stable() {
             })
         },
     );
+}
+
+/// Bitwise equality of two sweep outcomes (not approximate closeness:
+/// the parallel coordinator must not change a single ULP).
+fn sweeps_bit_identical(a: &SweepOutcome, b: &SweepOutcome) -> bool {
+    a.scenarios.len() == b.scenarios.len()
+        && a.scenarios.iter().zip(&b.scenarios).all(|(x, y)| {
+            let (rx, ry) = (&x.outcome.result, &y.outcome.result);
+            x.label == y.label
+                && rx.names == ry.names
+                && rx.metrics.len() == ry.metrics.len()
+                && rx
+                    .metrics
+                    .iter()
+                    .zip(&ry.metrics)
+                    .all(|(m, n)| m.to_bits() == n.to_bits())
+                && rx
+                    .d_task
+                    .iter()
+                    .zip(&ry.d_task)
+                    .all(|(m, n)| m.to_bits() == n.to_bits())
+                && x.outcome.optimal == y.outcome.optimal
+                && x.outcome.stats.feasible == y.outcome.stats.feasible
+                && x.outcome.stats.best.to_bits() == y.outcome.stats.best.to_bits()
+                && x.outcome.stats.mean.to_bits() == y.outcome.stats.mean.to_bits()
+                && x.outcome.stats.p5.to_bits() == y.outcome.stats.p5.to_bits()
+                && x.outcome.stats.p95.to_bits() == y.outcome.stats.p95.to_bits()
+        })
+}
+
+#[test]
+fn prop_parallel_sweep_bit_identical_to_sequential() {
+    // The tentpole determinism invariant: a parallel sweep over randomized
+    // requests equals the sequential single-thread run bit-for-bit.
+    forall_cfg(
+        PropConfig { cases: 10, seed: 18 },
+        gen_request,
+        |req| {
+            let grid = ScenarioGrid::new()
+                .with_lifetime("lt=1e5s", 1e5)
+                .with_lifetime("lt=1e7s", 1e7)
+                .with_beta("b=0.5", 0.5)
+                .with_beta("b=2", 2.0)
+                .with_qos_scale("qos=x1", 1.0);
+            let par = sweep(&HostEngineFactory, req, &grid, &SweepConfig { threads: 4 }).unwrap();
+            let seq = sweep_sequential(&mut HostEngine::new(), req, &grid).unwrap();
+            sweeps_bit_identical(&par, &seq)
+        },
+    );
+}
+
+#[test]
+fn parallel_sweep_bit_identical_across_chunk_boundaries() {
+    // A space large enough that every scenario splits into several
+    // chunks: 2500 configs -> 3 chunks x 4 scenarios = 12 work items.
+    let mut rng = Rng::new(0xBEEF);
+    let mut req = gen_request(&mut rng);
+    let template = req.configs[0].clone();
+    req.configs = (0..2500)
+        .map(|i| {
+            let mut c = template.clone();
+            c.name = format!("cfg{i}");
+            for d in c.d_k.iter_mut() {
+                *d *= 1.0 + (i % 97) as f64 * 1e-3;
+            }
+            c
+        })
+        .collect();
+    let grid = ScenarioGrid::new()
+        .with_lifetime("lt=1e5s", 1e5)
+        .with_lifetime("lt=1e7s", 1e7)
+        .with_ci("ci=lo", 5e-5)
+        .with_ci("ci=hi", 5e-4);
+    let par = sweep(&HostEngineFactory, &req, &grid, &SweepConfig { threads: 4 }).unwrap();
+    assert_eq!(par.items, 12, "2500 configs should split into 3 chunks per scenario");
+    let seq = sweep_sequential(&mut HostEngine::new(), &req, &grid).unwrap();
+    assert!(sweeps_bit_identical(&par, &seq));
 }
 
 #[test]

@@ -3,7 +3,11 @@
 //!
 //! Requires `make artifacts` to have run; tests are skipped (with a loud
 //! message) when the artifacts directory is absent so `cargo test` works
-//! in a fresh checkout.
+//! in a fresh checkout. The whole file is additionally gated on the
+//! `pjrt` cargo feature: the default host-only build has no XLA client,
+//! so these tests compile to nothing there.
+
+#![cfg(feature = "pjrt")]
 
 use xrcarbon::dse::batching::evaluate_chunked;
 use xrcarbon::matrixform::{ConfigRow, EvalRequest, MetricRow, TaskMatrix, NUM_METRICS};
