@@ -1,16 +1,23 @@
-//! Bench: parallel scenario-sweep scaling, 1 → N worker threads on the
-//! Fig 7-preset grid (acceptance: ≥2× wall-clock speedup at 4 threads).
+//! Bench: the multi-scenario sweep coordinator — (a) thread scaling of
+//! the two-phase path and (b) the headline fused-vs-two-phase comparison
+//! (PR 1 per-scenario engine fan-out vs profile-once + scenario
+//! overlays). Acceptance: ≥ 2× engine-work speedup on a grid of ≥ 6
+//! scenarios (this one has 9).
 //!
-//! The design space is the 121-point grid replicated ×8 (968 configs, one
-//! full 1024-variant chunk per scenario) and the scenario grid is the
-//! Fig 7 embodied-share preset crossed with a 3-point β axis — 9
-//! scenarios, 9 work items — so each thread count has real work to
-//! schedule. Profiling (the simulator) runs once, outside the timed
-//! region; the sweep coordinator is the unit under test.
+//! The design space is the 121-point grid replicated ×32 (3872 configs —
+//! four 1024-variant chunks, so phase A has real work to fan out) and the
+//! scenario grid is the Fig 7 embodied-share preset crossed with a
+//! 3-point β axis — 9 scenarios (36 engine items for the fused
+//! per-scenario sweep vs 4 engine items total for the two-phase sweep).
+//! Profiling (the simulator) runs once, outside the timed region; the
+//! sweep coordinator is the unit under test.
+//!
+//! Emits `BENCH_sweep.json` (see `bench::write_json`); set
+//! `XRCARBON_BENCH_QUICK=1` for the short sampling mode CI uses.
 
-use xrcarbon::bench::Bencher;
+use xrcarbon::bench::{write_json, BenchResult, Bencher};
 use xrcarbon::dse::grid::ScenarioGrid;
-use xrcarbon::dse::sweep::{sweep, SweepConfig};
+use xrcarbon::dse::sweep::{sweep, sweep_fused, SweepConfig};
 use xrcarbon::experiments::sweep_fig7::profile_cluster;
 use xrcarbon::runtime::HostEngineFactory;
 use xrcarbon::workloads::Cluster;
@@ -18,10 +25,11 @@ use xrcarbon::workloads::Cluster;
 fn main() {
     let space = profile_cluster(Cluster::Ai5);
 
-    // Replicate the space ×8 so each (scenario × chunk) item fills the
-    // large artifact variant.
-    let mut big = Vec::with_capacity(space.rows.len() * 8);
-    for rep in 0..8 {
+    // Replicate the space ×32: four large-variant chunks, so the
+    // two-phase profile pass parallelizes and fused items fill the
+    // artifact batches.
+    let mut big = Vec::with_capacity(space.rows.len() * 32);
+    for rep in 0..32 {
         for row in &space.rows {
             let mut r = row.clone();
             r.name = format!("{}#{rep}", r.name);
@@ -41,23 +49,54 @@ fn main() {
         grid.cardinality()
     );
 
+    let mut results: Vec<BenchResult> = Vec::new();
+    let items = (base.configs.len() * grid.cardinality()) as u64;
+
+    // (a) Thread scaling of the two-phase path.
     let hw = std::thread::available_parallelism().map(|n| n.get()).unwrap_or(4);
     let mut means = Vec::new();
     for threads in [1usize, 2, 4, hw.min(8)] {
         if means.iter().any(|&(t, _)| t == threads) {
             continue;
         }
-        let r = Bencher::new(&format!("sweep/fig7x3beta_threads={threads}"))
-            .throughput((base.configs.len() * grid.cardinality()) as u64)
+        let r = Bencher::new(&format!("sweep/two_phase_threads={threads}"))
+            .quick_if_env()
+            .throughput(items)
             .run(|| sweep(&HostEngineFactory, &base, &grid, &SweepConfig { threads }).unwrap());
         println!("{}", r.report());
         means.push((threads, r.mean.as_secs_f64()));
+        results.push(r);
     }
-
     let t1 = means[0].1;
     for &(threads, mean) in &means[1..] {
         let speedup = t1 / mean;
-        let target = if threads >= 4 { " (target >= 2.0)" } else { "" };
-        println!("speedup @ {threads} threads: {speedup:.2}x{target}");
+        println!("two-phase speedup @ {threads} threads: {speedup:.2}x");
     }
+
+    // (b) Fused (PR 1 per-scenario engine fan-out) vs two-phase
+    // (profile once + overlays), same thread budget. The engine-work
+    // ratio is ~N_scenarios:1, so wall clock must show ≥ 2×.
+    for threads in [1usize, 4] {
+        let fused = Bencher::new(&format!("sweep/fused_per_scenario_threads={threads}"))
+            .quick_if_env()
+            .throughput(items)
+            .run(|| {
+                sweep_fused(&HostEngineFactory, &base, &grid, &SweepConfig { threads }).unwrap()
+            });
+        println!("{}", fused.report());
+        let two = means
+            .iter()
+            .find(|&&(t, _)| t == threads)
+            .map(|&(_, m)| m)
+            .unwrap_or(t1);
+        let speedup = fused.mean.as_secs_f64() / two;
+        println!(
+            "fused/two-phase speedup @ {threads} threads: {speedup:.2}x (target >= 2.0, grid = {} scenarios)",
+            grid.cardinality()
+        );
+        results.push(fused);
+    }
+
+    write_json(&results, "BENCH_sweep.json").expect("writing BENCH_sweep.json");
+    println!("[json] wrote BENCH_sweep.json ({} benchmarks)", results.len());
 }

@@ -31,6 +31,31 @@ impl BenchResult {
             self.name, self.mean, self.p50, self.p95, self.samples, tp
         )
     }
+
+    /// Machine-readable JSON object: `{name, samples, mean_ns, p50_ns,
+    /// p95_ns, throughput}` (throughput in items/s, `null` when unset).
+    pub fn to_json(&self) -> String {
+        let tp = self
+            .throughput
+            .map(|t| format!("{t:.3}"))
+            .unwrap_or_else(|| "null".to_string());
+        format!(
+            "{{\"name\":\"{}\",\"samples\":{},\"mean_ns\":{},\"p50_ns\":{},\"p95_ns\":{},\"throughput\":{}}}",
+            self.name.replace('\\', "\\\\").replace('"', "\\\""),
+            self.samples,
+            self.mean.as_nanos(),
+            self.p50.as_nanos(),
+            self.p95.as_nanos(),
+            tp
+        )
+    }
+}
+
+/// Write a bench suite as a JSON array — the CI artifact format
+/// (`BENCH_*.json`), one object per benchmark in run order.
+pub fn write_json(results: &[BenchResult], path: &str) -> std::io::Result<()> {
+    let rows: Vec<String> = results.iter().map(BenchResult::to_json).collect();
+    std::fs::write(path, format!("[\n  {}\n]\n", rows.join(",\n  ")))
 }
 
 /// Builder-style bench runner.
@@ -65,6 +90,16 @@ impl Bencher {
         self.warmup = Duration::from_millis(50);
         self.measure = Duration::from_millis(400);
         self
+    }
+
+    /// Apply [`Self::quick`] when `XRCARBON_BENCH_QUICK` is set in the
+    /// environment — the short sampling mode CI runs benches under.
+    pub fn quick_if_env(self) -> Self {
+        if std::env::var_os("XRCARBON_BENCH_QUICK").is_some() {
+            self.quick()
+        } else {
+            self
+        }
     }
 
     /// Run the closure repeatedly and report stats. The closure's return
@@ -127,5 +162,33 @@ mod tests {
     fn report_contains_name() {
         let r = Bencher::new("my-bench").quick().run(|| ());
         assert!(r.report().contains("my-bench"));
+    }
+
+    #[test]
+    fn json_is_parseable_and_complete() {
+        let r = Bencher::new("json\"bench").quick().throughput(10).run(|| 1 + 1);
+        let v = crate::configfmt::parse(&r.to_json()).expect("valid JSON");
+        assert_eq!(
+            v.get("name").and_then(crate::configfmt::Json::as_str),
+            Some("json\"bench")
+        );
+        assert!(v.get("mean_ns").and_then(crate::configfmt::Json::as_i64).unwrap() > 0);
+        assert!(v.get("p95_ns").is_some());
+        assert!(v.get("throughput").is_some());
+    }
+
+    #[test]
+    fn write_json_emits_an_array() {
+        let a = Bencher::new("a").quick().run(|| ());
+        let b = Bencher::new("b").quick().run(|| ());
+        let dir = std::env::temp_dir().join("xrcarbon_bench_json_test");
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("out.json");
+        write_json(&[a, b], path.to_str().unwrap()).unwrap();
+        let text = std::fs::read_to_string(&path).unwrap();
+        let v = crate::configfmt::parse(&text).expect("valid JSON");
+        let arr = v.as_arr().expect("array");
+        assert_eq!(arr.len(), 2);
+        assert_eq!(arr[1].get("name").and_then(crate::configfmt::Json::as_str), Some("b"));
     }
 }

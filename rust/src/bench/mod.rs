@@ -2,9 +2,11 @@
 //!
 //! `rust/benches/*.rs` are `harness = false` binaries built on this:
 //! warmup, timed sampling, robust statistics (mean/p50/p95), optional
-//! throughput, and a one-line-per-benchmark report compatible with
-//! `cargo bench` output expectations.
+//! throughput, a one-line-per-benchmark report compatible with
+//! `cargo bench` output expectations, and a machine-readable JSON dump
+//! ([`write_json`], the `BENCH_*.json` CI artifacts). Set
+//! `XRCARBON_BENCH_QUICK=1` for the short sampling mode.
 
 mod harness;
 
-pub use harness::{run, BenchResult, Bencher};
+pub use harness::{run, write_json, BenchResult, Bencher};

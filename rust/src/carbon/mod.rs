@@ -20,6 +20,9 @@
 //! * [`operational`] — use-phase carbon and lifetime amortization;
 //! * [`metrics`] — EDP and the carbon metric suite (CDP, CEP, CE²P, C²EP,
 //!   tCDP) with the β-scalarized objective of §3.2 (Table 1);
+//! * [`overlay`] — phase B of the two-phase evaluation pipeline: applies
+//!   the scenario knobs `(ci_use, lifetime, β, qos, p_max, online)` to a
+//!   scenario-invariant design profile, bit-identical to the fused path;
 //! * [`replacement`] — the hardware-replacement-frequency model behind
 //!   Fig 14.
 
@@ -27,6 +30,7 @@ pub mod embodied;
 pub mod intensity;
 pub mod metrics;
 pub mod operational;
+pub mod overlay;
 pub mod process;
 pub mod replacement;
 pub mod yield_model;
@@ -35,5 +39,6 @@ pub use embodied::{embodied_carbon, ChipDesign, Die};
 pub use intensity::{FabGrid, UseGrid};
 pub use metrics::{beta_regime, BetaRegime, MetricInputs, MetricKind, MetricSet};
 pub use operational::{amortized_embodied, operational_carbon};
+pub use overlay::ScenarioOverlay;
 pub use process::{ProcessNode, ProcessParams};
 pub use yield_model::{gross_die_per_wafer, YieldModel};

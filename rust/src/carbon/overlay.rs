@@ -1,0 +1,229 @@
+//! Phase B of the two-phase evaluation pipeline: scenario overlays.
+//!
+//! A [`ScenarioOverlay`] holds exactly the scenario-dependent half of an
+//! evaluation request — `(ci_use, lifetime, β, qos, p_max, online)` — and
+//! applies it to a scenario-invariant [`DesignProfile`] (phase A output)
+//! to produce the full metric row set plus feasibility. The arithmetic is
+//! f32 in the *same order* as the fused engine graph
+//! (`runtime/host.rs::Engine::execute`, mirroring
+//! `python/compile/kernels/ref.py`), so on the host engine
+//! overlay-composed results are **bit-identical** to the fused path —
+//! locked by
+//! `rust/tests/coordinator_props.rs::prop_profile_overlay_reuse_bit_identical_to_fused`.
+//! (On PJRT the compiled HLO may fuse/reassociate the carbon rows, so the
+//! composition is only guaranteed inside the existing ≤ 1e-5 pjrt-vs-host
+//! envelope; see `runtime/pjrt.rs`.)
+//!
+//! Cost: O(C·J) per overlay application versus the engine's O(C·T·K)
+//! contraction, which is what lets multi-scenario sweeps profile once and
+//! fan only overlays across the scenario grid.
+
+use crate::matrixform::{
+    DesignProfile, EvalRequest, EvalResult, PackedProblem, J_PAD, NUM_METRICS, T_PAD,
+};
+
+/// The scenario-dependent half of an evaluation request, padded f32.
+#[derive(Debug, Clone)]
+pub struct ScenarioOverlay {
+    /// Use-phase carbon intensity, g/J.
+    pub ci_use: f32,
+    /// Operational lifetime (LT − D_idle), s.
+    pub lifetime: f32,
+    /// β of the scalarized objective.
+    pub beta: f32,
+    /// Average-power cap, W.
+    pub p_max: f32,
+    /// Component online mask (zero-padded to `J_PAD`).
+    pub online: [f32; J_PAD],
+    /// Per-task delay bounds, s (∞-padded to `T_PAD`).
+    pub qos: [f32; T_PAD],
+}
+
+impl ScenarioOverlay {
+    /// Extract the scenario half of a request, with the same f64→f32
+    /// casts and padding values `PackedProblem::from_request` applies.
+    pub fn from_request(req: &EvalRequest) -> Self {
+        assert!(req.online.len() <= J_PAD, "too many components");
+        assert!(req.qos.len() <= T_PAD, "too many tasks");
+        let mut online = [0.0f32; J_PAD];
+        for (ji, v) in req.online.iter().enumerate() {
+            online[ji] = *v as f32;
+        }
+        let mut qos = [f32::INFINITY; T_PAD];
+        for (ti, q) in req.qos.iter().enumerate() {
+            qos[ti] = *q as f32;
+        }
+        ScenarioOverlay {
+            ci_use: req.ci_use_g_per_j as f32,
+            lifetime: req.lifetime_s as f32,
+            beta: req.beta as f32,
+            p_max: req.p_max_w as f32,
+            online,
+            qos,
+        }
+    }
+
+    /// Extract the scenario half of an already-packed batch (the f32
+    /// casts happened at packing time).
+    pub fn from_packed(p: &PackedProblem) -> Self {
+        let mut online = [0.0f32; J_PAD];
+        online.copy_from_slice(&p.online);
+        let mut qos = [f32::INFINITY; T_PAD];
+        qos.copy_from_slice(&p.qos);
+        ScenarioOverlay {
+            ci_use: p.scalars[0],
+            lifetime: p.scalars[1],
+            beta: p.scalars[2],
+            p_max: p.scalars[3],
+            online,
+            qos,
+        }
+    }
+
+    /// Apply this scenario to a profile: the fused engine's carbon and
+    /// feasibility arithmetic, operation for operation (keep in lockstep
+    /// with `runtime/host.rs::Engine::execute` — the bit-identity tests
+    /// fail loudly otherwise).
+    pub fn apply(&self, prof: &DesignProfile) -> EvalResult {
+        let c_pad = prof.c_pad;
+        let mut metrics = vec![0.0f32; NUM_METRICS * c_pad];
+        for ci in 0..c_pad {
+            let energy = prof.energy[ci];
+            let delay = prof.delay[ci];
+
+            let c_op = self.ci_use * energy;
+            let mut c_emb_overall = 0.0f32;
+            for ji in 0..J_PAD {
+                c_emb_overall += prof.c_comp[ci * J_PAD + ji] * self.online[ji];
+            }
+            let c_emb = c_emb_overall * delay / self.lifetime;
+
+            let c_total = c_op + c_emb;
+            let tcdp = (c_op + self.beta * c_emb) * delay;
+            let edp = energy * delay;
+            let cdp = c_emb * delay;
+            let cep = c_emb * energy;
+            let ce2p = cep * energy;
+            let c2ep = c_emb * cep;
+
+            let mut qos_ok = true;
+            for ti in 0..T_PAD {
+                if !(prof.d_task[ci * T_PAD + ti] <= self.qos[ti]) {
+                    qos_ok = false;
+                }
+            }
+            let avg_power = energy / delay.max(1e-30);
+            let feasible = if qos_ok && avg_power <= self.p_max { 1.0 } else { 0.0 };
+
+            let rows = [
+                energy, delay, c_op, c_emb, c_total, tcdp, edp, cdp, cep, ce2p, c2ep, feasible,
+            ];
+            for (row, v) in rows.iter().enumerate() {
+                metrics[row * c_pad + ci] = *v;
+            }
+        }
+        prof.unpack(&metrics)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::matrixform::{ConfigRow, MetricRow, ProfileRequest, TaskMatrix};
+    use crate::runtime::{evaluate_fused, profile_request, HostEngine};
+
+    fn request() -> EvalRequest {
+        let tm = TaskMatrix::single_task("t", vec!["k0".into(), "k1".into()], &[10.0, 5.0]);
+        EvalRequest {
+            tasks: tm,
+            configs: vec![
+                ConfigRow {
+                    name: "fast".into(),
+                    f_clk: 1e9,
+                    d_k: vec![1e-3, 2e-3],
+                    e_dyn: vec![0.05, 0.10],
+                    leak_w: 0.02,
+                    c_comp: vec![500.0, 100.0],
+                },
+                ConfigRow {
+                    name: "slow".into(),
+                    f_clk: 5e8,
+                    d_k: vec![4e-3, 8e-3],
+                    e_dyn: vec![0.02, 0.04],
+                    leak_w: 0.01,
+                    c_comp: vec![120.0, 30.0],
+                },
+            ],
+            online: vec![1.0, 1.0],
+            qos: vec![0.03],
+            ci_use_g_per_j: 1.2e-4,
+            lifetime_s: 3.0e6,
+            beta: 1.0,
+            p_max_w: 40.0,
+        }
+    }
+
+    #[test]
+    fn from_request_pads_like_packing() {
+        let req = request();
+        let ov = ScenarioOverlay::from_request(&req);
+        let packed = PackedProblem::from_request(&req);
+        let from_packed = ScenarioOverlay::from_packed(&packed);
+        assert_eq!(ov.ci_use.to_bits(), from_packed.ci_use.to_bits());
+        assert_eq!(ov.lifetime.to_bits(), from_packed.lifetime.to_bits());
+        assert_eq!(ov.beta.to_bits(), from_packed.beta.to_bits());
+        assert_eq!(ov.p_max.to_bits(), from_packed.p_max.to_bits());
+        assert_eq!(ov.online, from_packed.online);
+        assert_eq!(ov.qos[0], 0.03f64 as f32);
+        assert_eq!(ov.qos[1], f32::INFINITY);
+        assert_eq!(ov.online[2], 0.0);
+    }
+
+    #[test]
+    fn overlay_on_profile_matches_fused_engine_bitwise() {
+        let req = request();
+        let mut host = HostEngine::new();
+        let prof = profile_request(&mut host, &ProfileRequest::from_eval(&req).to_eval()).unwrap();
+        let two = ScenarioOverlay::from_request(&req).apply(&prof);
+        let fused = evaluate_fused(&mut host, &req).unwrap();
+        assert_eq!(two.names, fused.names);
+        for (a, b) in two.metrics.iter().zip(&fused.metrics) {
+            assert_eq!(a.to_bits(), b.to_bits());
+        }
+        for (a, b) in two.d_task.iter().zip(&fused.d_task) {
+            assert_eq!(a.to_bits(), b.to_bits());
+        }
+    }
+
+    #[test]
+    fn one_profile_many_scenarios() {
+        // The point of the split: scenario knobs change the carbon rows
+        // without re-running the engine contraction.
+        let req = request();
+        let mut host = HostEngine::new();
+        let prof = profile_request(&mut host, &ProfileRequest::from_eval(&req).to_eval()).unwrap();
+
+        let mut long_life = req.clone();
+        long_life.lifetime_s = 3.0e8;
+        let a = ScenarioOverlay::from_request(&req).apply(&prof);
+        let b = ScenarioOverlay::from_request(&long_life).apply(&prof);
+        // Invariant rows are untouched…
+        assert_eq!(a.metric(MetricRow::Energy, 0), b.metric(MetricRow::Energy, 0));
+        assert_eq!(a.metric(MetricRow::Delay, 0), b.metric(MetricRow::Delay, 0));
+        // …while the amortized embodied carbon shrinks with lifetime.
+        assert!(b.metric(MetricRow::CEmb, 0) < a.metric(MetricRow::CEmb, 0));
+    }
+
+    #[test]
+    fn online_mask_lives_in_the_overlay() {
+        let req = request();
+        let mut host = HostEngine::new();
+        let prof = profile_request(&mut host, &ProfileRequest::from_eval(&req).to_eval()).unwrap();
+        let mut masked = req.clone();
+        masked.online = vec![1.0, 0.0];
+        let res = ScenarioOverlay::from_request(&masked).apply(&prof);
+        // Only the logic component (500 g) remains online for "fast".
+        let c_emb = res.metric(MetricRow::CEmb, 0);
+        assert!((c_emb - 500.0 * 0.02 / 3.0e6).abs() < 1e-9, "c_emb={c_emb}");
+    }
+}

@@ -11,6 +11,17 @@ pub enum CliError {
     /// A value failed to parse as the requested type.
     #[error("option --{0}: cannot parse '{1}' as {2}")]
     BadValue(String, String, &'static str),
+    /// An option name not in the valued or flag lists. Rejected loudly: a
+    /// mistyped valued option would otherwise become a flag and its value
+    /// a stray positional.
+    #[error("unknown option --{0}; valued options: {1}; flags: {2}")]
+    UnknownOption(String, String, String),
+}
+
+impl CliError {
+    fn unknown(name: &str) -> CliError {
+        CliError::UnknownOption(name.to_string(), VALUED.join(", "), FLAGS.join(", "))
+    }
 }
 
 /// Parsed arguments.
@@ -26,12 +37,16 @@ pub struct Args {
     pub positional: Vec<String>,
 }
 
-/// Option names that take a value (everything else after `--` is a flag).
+/// Option names that take a value.
 const VALUED: &[&str] = &[
     "cluster", "metric", "out", "artifacts", "engine", "seed", "beta", "ratio",
     "lifetime", "hours", "devices", "days", "workload", "cores", "csv-dir",
     "threads", "preset",
 ];
+
+/// Flag names (no value). Anything after `--` that is in neither list is
+/// rejected with [`CliError::UnknownOption`].
+const FLAGS: &[&str] = &["cpus", "csv", "help", "socs"];
 
 impl Args {
     /// Parse from an iterator of tokens (excluding argv[0]).
@@ -47,8 +62,10 @@ impl Args {
                         }
                         None => return Err(CliError::MissingValue(name.to_string())),
                     }
-                } else {
+                } else if FLAGS.contains(&name) {
                     out.flags.push(name.to_string());
+                } else {
+                    return Err(CliError::unknown(name));
                 }
             } else if out.command.is_none() {
                 out.command = Some(tok);
@@ -132,16 +149,34 @@ mod tests {
 
     #[test]
     fn positionals_collected() {
-        let a = parse("bench one two --fast three");
+        let a = parse("bench one two --csv three");
         assert_eq!(a.command.as_deref(), Some("bench"));
         assert_eq!(a.positional, vec!["one", "two", "three"]);
-        assert!(a.has_flag("fast"));
+        assert!(a.has_flag("csv"));
     }
 
     #[test]
     fn missing_value_is_error() {
         let e = Args::parse(vec!["x".into(), "--cluster".into()]).unwrap_err();
         assert_eq!(e, CliError::MissingValue("cluster".into()));
+    }
+
+    #[test]
+    fn unknown_option_rejected_with_known_lists() {
+        let e = Args::parse(vec!["fig7".into(), "--verbose".into()]).unwrap_err();
+        assert!(matches!(e, CliError::UnknownOption(ref n, _, _) if n == "verbose"));
+        let msg = e.to_string();
+        assert!(msg.contains("--verbose"), "{msg}");
+        assert!(msg.contains("cluster"), "{msg}");
+        assert!(msg.contains("csv"), "{msg}");
+    }
+
+    #[test]
+    fn mistyped_valued_option_does_not_swallow_value() {
+        // Before: "--cluser" became a flag and "5ai" a stray positional.
+        let tokens = vec!["fig7".into(), "--cluser".into(), "5ai".into()];
+        let e = Args::parse(tokens).unwrap_err();
+        assert!(matches!(e, CliError::UnknownOption(ref n, _, _) if n == "cluser"));
     }
 
     #[test]

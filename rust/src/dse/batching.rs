@@ -1,8 +1,12 @@
 //! Splitting oversized requests across artifact batch variants and
-//! merging the results back in order.
+//! merging the results back in order — for both the fused evaluation
+//! path ([`evaluate_chunked`]) and phase A of the two-phase pipeline
+//! ([`profile_chunked`], [`profile_chunk_requests`]).
 
-use crate::matrixform::{EvalRequest, EvalResult, NUM_METRICS};
-use crate::runtime::{evaluate, Engine};
+use crate::matrixform::{
+    ConfigRow, DesignProfile, EvalRequest, EvalResult, ProfileRequest, TaskMatrix, NUM_METRICS,
+};
+use crate::runtime::{evaluate, profile_request, Engine};
 
 /// Largest single-batch size any artifact variant supports.
 pub const MAX_BATCH: usize = 1024;
@@ -45,6 +49,50 @@ pub fn evaluate_chunked(engine: &mut dyn Engine, req: &EvalRequest) -> crate::Re
         });
     }
     Ok(merged.expect("nonempty request"))
+}
+
+/// Number of engine-call chunks a space of `n` configs splits into.
+pub(crate) fn num_chunks(n: usize) -> usize {
+    let cs = chunk_size(n);
+    if n <= cs {
+        1
+    } else {
+        n.div_ceil(cs)
+    }
+}
+
+/// Phase A chunk list: the scenario-invariant space split at exactly the
+/// engine-call boundaries [`evaluate_chunked`] uses, each as a neutral
+/// packed-ready request (scenario knobs inert — profiling only reads the
+/// design-space tensors). Keeping the boundaries identical is what makes
+/// per-chunk overlay merges bit-identical to the fused chunked path.
+pub fn profile_chunk_requests(req: &ProfileRequest) -> Vec<EvalRequest> {
+    chunk_neutral(&req.tasks, &req.configs)
+}
+
+/// Shared phase-A chunker over a borrowed space — exactly one config
+/// clone per chunk (the sweep coordinator feeds `base` in directly
+/// without materializing an owned [`ProfileRequest`] first).
+pub(crate) fn chunk_neutral(tasks: &TaskMatrix, configs: &[ConfigRow]) -> Vec<EvalRequest> {
+    let shell = ProfileRequest { tasks: tasks.clone(), configs: Vec::new() };
+    let cs = chunk_size(configs.len());
+    if configs.len() <= cs {
+        return vec![shell.chunk_eval(configs.to_vec())];
+    }
+    configs.chunks(cs).map(|chunk| shell.chunk_eval(chunk.to_vec())).collect()
+}
+
+/// Profile an arbitrary-size space on one engine: one scenario-invariant
+/// [`DesignProfile`] per chunk, in request order. Scenario overlays apply
+/// per chunk and merge left-to-right (see `dse::sweep`).
+pub fn profile_chunked(
+    engine: &mut dyn Engine,
+    req: &ProfileRequest,
+) -> crate::Result<Vec<DesignProfile>> {
+    profile_chunk_requests(req)
+        .iter()
+        .map(|r| profile_request(engine, r))
+        .collect()
 }
 
 /// Clone everything but the config rows (chunk builders fill those in).
@@ -127,5 +175,29 @@ mod tests {
         let res = evaluate_chunked(&mut HostEngine::new(), &req).unwrap();
         assert_eq!(res.c, 7);
         assert_eq!(res.names.len(), 7);
+    }
+
+    #[test]
+    fn profile_chunks_share_fused_boundaries() {
+        // 2500 configs -> 3 chunks of 1024/1024/452, names in order.
+        let req = request(2500);
+        let preq = ProfileRequest::from_eval(&req);
+        let chunks = profile_chunk_requests(&preq);
+        assert_eq!(chunks.len(), 3);
+        assert_eq!(num_chunks(2500), 3);
+        assert_eq!(chunks[0].configs.len(), 1024);
+        assert_eq!(chunks[2].configs.len(), 452);
+        assert_eq!(chunks[1].configs[0].name, "cfg1024");
+        assert_eq!(num_chunks(7), 1);
+
+        let profiles = profile_chunked(&mut HostEngine::new(), &preq).unwrap();
+        assert_eq!(profiles.len(), 3);
+        assert_eq!(profiles[0].c, 1024);
+        assert_eq!(profiles[2].c, 452);
+        assert_eq!(profiles[2].names[0], "cfg2048");
+        // Per-config delay survives the profile path: d = 2 * (i+1) ms.
+        let d = profiles[0].delay[3] as f64;
+        let expect = 2.0 * 4.0 * 1e-3;
+        assert!((d - expect).abs() < expect * 1e-5, "d={d}");
     }
 }

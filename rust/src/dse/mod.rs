@@ -19,9 +19,10 @@
 //!   (the 98 %/65 %/25 % scenarios of Fig 7);
 //! * [`grid`]     — labeled scenario cross-products (CI × lifetime × QoS
 //!   × β × power cap) with presets for the Fig 7/10/11 sweeps;
-//! * [`sweep`]    — the parallel multi-scenario coordinator: fans
-//!   (scenario × config-chunk) items across per-thread engines and merges
-//!   deterministically (bit-identical to the sequential path).
+//! * [`sweep`]    — the two-phase parallel multi-scenario coordinator:
+//!   profiles config chunks once across per-thread engines (phase A),
+//!   then fans cheap scenario overlays over the cached profiles (phase
+//!   B), bit-identical to the sequential and fused per-scenario paths.
 
 pub mod batching;
 pub mod explore;
@@ -32,10 +33,11 @@ pub mod scenario;
 pub mod space;
 pub mod sweep;
 
+pub use batching::{evaluate_chunked, profile_chunk_requests, profile_chunked};
 pub use explore::{explore, summarize, ExploreOutcome, ExploreStats};
 pub use grid::{AxisPoint, ScenarioGrid, SweepScenario};
 pub use pareto::{beta_sweep, pareto_front, BetaPoint};
 pub use profile::{profile_configs, profiles_to_rows};
 pub use scenario::{lifetime_for_ratio, Scenario};
 pub use space::{design_grid, DesignPoint};
-pub use sweep::{sweep, sweep_sequential, ScenarioResult, SweepConfig, SweepOutcome};
+pub use sweep::{sweep, sweep_fused, sweep_sequential, ScenarioResult, SweepConfig, SweepOutcome};

@@ -1,22 +1,33 @@
-//! Parallel multi-scenario sweep coordinator.
+//! Parallel multi-scenario sweep coordinator — two-phase since PR 2.
 //!
-//! Evaluates one design space under every scenario of a
-//! [`ScenarioGrid`] by fanning (scenario × config-chunk) work items out
-//! across a pool of worker threads. Engines are `!Send`, so each worker
-//! builds its own through an [`EngineFactory`]. Work items are pre-split
-//! with [`super::batching`]'s chunk sizing — exactly the engine-call
-//! boundaries `evaluate_chunked` uses sequentially — and each worker runs
-//! one [`evaluate`] call per item, so after the deterministic
-//! (scenario-major, chunk-ascending) merge the parallel output is
-//! bit-identical to the sequential path ([`sweep_sequential`]) — locked by
-//! `rust/tests/coordinator_props.rs::prop_parallel_sweep_bit_identical_to_sequential`.
+//! Evaluates one design space under every scenario of a [`ScenarioGrid`].
+//! The scenario axes (`ci_use`, `lifetime`, `β`, `qos`, `p_max`) never
+//! touch the O(C×T×K) engine contraction, so [`sweep`] splits the work:
+//!
+//! * **Phase A** — profile each config chunk **once** into a
+//!   scenario-invariant [`DesignProfile`], fanning chunks across worker
+//!   threads (engines are `!Send`, so each worker builds its own through
+//!   an [`EngineFactory`]). Chunk boundaries are exactly the engine-call
+//!   boundaries `evaluate_chunked` uses sequentially.
+//! * **Phase B** — apply a cheap pure-Rust [`ScenarioOverlay`] per
+//!   (scenario × chunk), merging chunk results scenario-major in chunk
+//!   order.
+//!
+//! Engine work drops from O(N_scenarios × C × T × K) to
+//! O(C × T × K + N_scenarios × C), yet on the host engine the output
+//! stays **bit-identical** to both the sequential path
+//! ([`sweep_sequential`]) and the PR 1 per-scenario fused fan-out (kept
+//! as [`sweep_fused`] for benchmarking) — locked by
+//! `rust/tests/coordinator_props.rs`. (PJRT composes within the existing
+//! ≤ 1e-5 pjrt-vs-host envelope; see `runtime/pjrt.rs`.)
 
 use std::sync::atomic::{AtomicUsize, Ordering};
 
-use crate::matrixform::{EvalRequest, EvalResult, MetricRow};
-use crate::runtime::{evaluate, Engine, EngineFactory};
+use crate::carbon::ScenarioOverlay;
+use crate::matrixform::{DesignProfile, EvalRequest, EvalResult, MetricRow};
+use crate::runtime::{evaluate_fused, profile_request, Engine, EngineFactory};
 
-use super::batching::{chunk_size, merge, shallow};
+use super::batching::{chunk_neutral, chunk_size, merge, num_chunks, shallow};
 use super::explore::{explore, summarize, ExploreOutcome};
 use super::grid::ScenarioGrid;
 
@@ -24,7 +35,10 @@ use super::grid::ScenarioGrid;
 #[derive(Debug, Clone, Copy, Default)]
 pub struct SweepConfig {
     /// Worker threads; 0 (the default) = one per available CPU, capped by
-    /// the number of work items.
+    /// the number of engine work items. For the two-phase [`sweep`] the
+    /// knob applies to phase A (profile chunks) — a space that fits one
+    /// engine batch profiles on a single worker regardless, and phase B
+    /// overlays are cheap enough to stay sequential.
     pub threads: usize,
 }
 
@@ -44,10 +58,13 @@ pub struct SweepOutcome {
     pub scenarios: Vec<ScenarioResult>,
     /// Engine label ("host", "pjrt").
     pub engine: &'static str,
-    /// Worker threads actually used.
+    /// Worker threads actually used (phase A for the two-phase path).
     pub threads: usize,
-    /// Work items the sweep fanned out.
+    /// (scenario × config-chunk) overlay applications the sweep merged.
     pub items: usize,
+    /// Config chunks the engine contracted (once for [`sweep`], once per
+    /// scenario for [`sweep_fused`]).
+    pub profile_chunks: usize,
 }
 
 impl SweepOutcome {
@@ -68,18 +85,128 @@ impl SweepOutcome {
     }
 }
 
-/// One fanned-out unit of work: a config chunk under one scenario.
+/// Fan `items` across up to `threads` worker threads, one engine per
+/// worker, shared atomic work queue; results return in item order.
+fn fan_out<T, R, F>(
+    factory: &dyn EngineFactory,
+    items: &[T],
+    threads: usize,
+    f: F,
+) -> crate::Result<(Vec<R>, usize)>
+where
+    T: Sync,
+    R: Send,
+    F: Fn(&mut dyn Engine, &T) -> crate::Result<R> + Sync,
+{
+    let n_items = items.len();
+    let hw = std::thread::available_parallelism().map(|n| n.get()).unwrap_or(4);
+    let threads = if threads == 0 { hw } else { threads };
+    let n_workers = threads.min(n_items).max(1);
+
+    if n_workers == 1 {
+        // Single-worker path: same items, same order, no thread overhead.
+        let mut engine = factory.build()?;
+        let mut out = Vec::with_capacity(n_items);
+        for item in items {
+            out.push(f(engine.as_mut(), item)?);
+        }
+        return Ok((out, 1));
+    }
+
+    let mut slots: Vec<Option<R>> = (0..n_items).map(|_| None).collect();
+    let next = AtomicUsize::new(0);
+    std::thread::scope(|s| -> crate::Result<()> {
+        let mut handles = Vec::with_capacity(n_workers);
+        for _ in 0..n_workers {
+            let next = &next;
+            let f = &f;
+            handles.push(s.spawn(move || -> crate::Result<Vec<(usize, R)>> {
+                let mut engine = factory.build()?;
+                let mut done = Vec::new();
+                loop {
+                    let i = next.fetch_add(1, Ordering::Relaxed);
+                    if i >= items.len() {
+                        break;
+                    }
+                    done.push((i, f(engine.as_mut(), &items[i])?));
+                }
+                Ok(done)
+            }));
+        }
+        for h in handles {
+            for (i, res) in h.join().expect("sweep worker panicked")? {
+                slots[i] = Some(res);
+            }
+        }
+        Ok(())
+    })?;
+    let out = slots.into_iter().map(|s| s.expect("work item left unevaluated")).collect();
+    Ok((out, n_workers))
+}
+
+/// Run the two-phase sweep: profile config chunks once in parallel
+/// (phase A), then fold a cheap scenario overlay over the cached profiles
+/// for every grid scenario (phase B), merging deterministically.
+pub fn sweep(
+    factory: &dyn EngineFactory,
+    base: &EvalRequest,
+    grid: &ScenarioGrid,
+    cfg: &SweepConfig,
+) -> crate::Result<SweepOutcome> {
+    let scenarios = grid.scenarios();
+    let n_scenarios = scenarios.len();
+
+    // Phase A — the only part that touches the engine hot loop (one
+    // config clone per chunk, same as the fused item builder).
+    let chunk_reqs = chunk_neutral(&base.tasks, &base.configs);
+    let (profiles, threads_used): (Vec<DesignProfile>, usize) =
+        fan_out(factory, &chunk_reqs, cfg.threads, profile_request)?;
+
+    // Phase B — (scenario × chunk) overlays in the same scenario-major,
+    // chunk-ascending order the fused paths merge, so results are
+    // bit-identical to them.
+    let shell = shallow(base);
+    let results: Vec<ScenarioResult> = scenarios
+        .into_iter()
+        .map(|sc| {
+            let overlay = ScenarioOverlay::from_request(&sc.apply(&shell));
+            let mut merged: Option<EvalResult> = None;
+            for prof in &profiles {
+                let res = overlay.apply(prof);
+                merged = Some(match merged {
+                    None => res,
+                    Some(acc) => merge(acc, res),
+                });
+            }
+            ScenarioResult {
+                label: sc.label,
+                outcome: summarize(merged.expect("scenario produced no chunks")),
+            }
+        })
+        .collect();
+
+    Ok(SweepOutcome {
+        scenarios: results,
+        engine: factory.label(),
+        threads: threads_used,
+        items: profiles.len() * n_scenarios,
+        profile_chunks: profiles.len(),
+    })
+}
+
+/// One fanned-out unit of fused work: a config chunk under one scenario.
 struct SweepItem {
     scenario: usize,
     req: EvalRequest,
 }
 
-/// Build the (scenario × config-chunk) item list. Chunk boundaries are
-/// exactly the ones `evaluate_chunked` would use sequentially — one
-/// `evaluate` call per item — so merging item results in order reproduces
-/// the sequential result bit-for-bit (a remainder chunk must run as one
-/// padded batch here, not be re-chunked, or the PJRT path would route it
-/// through a different artifact variant than the sequential run).
+/// Build the (scenario × config-chunk) item list for the fused path.
+/// Chunk boundaries are exactly the ones `evaluate_chunked` would use
+/// sequentially — one engine call per item — so merging item results in
+/// order reproduces the sequential result bit-for-bit (a remainder chunk
+/// must run as one padded batch here, not be re-chunked, or the PJRT path
+/// would route it through a different artifact variant than the
+/// sequential run).
 fn build_items(
     base: &EvalRequest,
     grid: &ScenarioGrid,
@@ -103,9 +230,13 @@ fn build_items(
     (items, scenarios)
 }
 
-/// Run the sweep in parallel: one engine per worker, shared atomic work
-/// queue, deterministic order-preserving merge.
-pub fn sweep(
+/// The PR 1 per-scenario fused fan-out: every (scenario × config-chunk)
+/// item re-runs the engine with the scenario folded into the graph.
+/// Engine work is O(N_scenarios × C × T × K); kept as the baseline the
+/// two-phase [`sweep`] is benchmarked against
+/// (`benches/bench_sweep_parallel.rs`) and as a second bit-identity
+/// oracle in the property tests.
+pub fn sweep_fused(
     factory: &dyn EngineFactory,
     base: &EvalRequest,
     grid: &ScenarioGrid,
@@ -114,52 +245,15 @@ pub fn sweep(
     let (items, scenarios) = build_items(base, grid);
     let n_scenarios = scenarios.len();
     let n_items = items.len();
-    let hw = std::thread::available_parallelism().map(|n| n.get()).unwrap_or(4);
-    let threads = if cfg.threads == 0 { hw } else { cfg.threads };
-    let n_workers = threads.min(n_items).max(1);
-
-    let mut slots: Vec<Option<EvalResult>> = (0..n_items).map(|_| None).collect();
-    if n_workers == 1 {
-        // Single-worker path: same items, same merge, no thread overhead.
-        let mut engine = factory.build()?;
-        for (slot, item) in slots.iter_mut().zip(&items) {
-            *slot = Some(evaluate(engine.as_mut(), &item.req)?);
-        }
-    } else {
-        let next = AtomicUsize::new(0);
-        std::thread::scope(|s| -> crate::Result<()> {
-            let mut handles = Vec::with_capacity(n_workers);
-            for _ in 0..n_workers {
-                let items = &items;
-                let next = &next;
-                handles.push(s.spawn(move || -> crate::Result<Vec<(usize, EvalResult)>> {
-                    let mut engine = factory.build()?;
-                    let mut done = Vec::new();
-                    loop {
-                        let i = next.fetch_add(1, Ordering::Relaxed);
-                        if i >= items.len() {
-                            break;
-                        }
-                        done.push((i, evaluate(engine.as_mut(), &items[i].req)?));
-                    }
-                    Ok(done)
-                }));
-            }
-            for h in handles {
-                for (i, res) in h.join().expect("sweep worker panicked")? {
-                    slots[i] = Some(res);
-                }
-            }
-            Ok(())
-        })?;
-    }
+    let (slots, threads_used) = fan_out(factory, &items, cfg.threads, |engine, item| {
+        evaluate_fused(engine, &item.req)
+    })?;
 
     // Order-preserving merge: items were emitted scenario-major in chunk
     // order, so folding each scenario's slots left-to-right reproduces the
     // sequential `evaluate_chunked` merge exactly.
     let mut merged: Vec<Option<EvalResult>> = (0..n_scenarios).map(|_| None).collect();
     for (item, res) in items.iter().zip(slots) {
-        let res = res.expect("work item left unevaluated");
         let slot = &mut merged[item.scenario];
         *slot = Some(match slot.take() {
             None => res,
@@ -176,11 +270,17 @@ pub fn sweep(
         })
         .collect();
 
-    Ok(SweepOutcome { scenarios, engine: factory.label(), threads: n_workers, items: n_items })
+    Ok(SweepOutcome {
+        scenarios,
+        engine: factory.label(),
+        threads: threads_used,
+        items: n_items,
+        profile_chunks: num_chunks(base.configs.len()),
+    })
 }
 
 /// Sequential reference path: one engine, scenarios in grid order. The
-/// parallel [`sweep`] must match this bit-for-bit.
+/// parallel [`sweep`] and [`sweep_fused`] must match this bit-for-bit.
 pub fn sweep_sequential(
     engine: &mut dyn Engine,
     base: &EvalRequest,
@@ -193,7 +293,13 @@ pub fn sweep_sequential(
         let req = sc.apply(base);
         out.push(ScenarioResult { label: sc.label, outcome: explore(engine, &req)? });
     }
-    Ok(SweepOutcome { scenarios: out, engine: engine.name(), threads: 1, items: n })
+    Ok(SweepOutcome {
+        scenarios: out,
+        engine: engine.name(),
+        threads: 1,
+        items: n,
+        profile_chunks: num_chunks(base.configs.len()),
+    })
 }
 
 #[cfg(test)]
@@ -254,17 +360,36 @@ mod tests {
         let par = sweep(&HostEngineFactory, &req, &grid(), &SweepConfig { threads: 4 }).unwrap();
         let seq = sweep_sequential(&mut HostEngine::new(), &req, &grid()).unwrap();
         assert_eq!(par.scenarios.len(), 4);
+        assert_eq!(par.profile_chunks, 1);
         assert_outcomes_identical(&par, &seq);
     }
 
     #[test]
     fn parallel_matches_sequential_chunked_space() {
-        // 2500 configs -> 3 chunks per scenario -> 12 items.
+        // 2500 configs -> 3 profile chunks, 4 scenarios -> 12 overlay
+        // applications (but only 3 engine calls on the two-phase path).
         let req = request(2500);
         let par = sweep(&HostEngineFactory, &req, &grid(), &SweepConfig { threads: 4 }).unwrap();
         assert_eq!(par.items, 12);
+        assert_eq!(par.profile_chunks, 3);
         let seq = sweep_sequential(&mut HostEngine::new(), &req, &grid()).unwrap();
         assert_outcomes_identical(&par, &seq);
+    }
+
+    #[test]
+    fn two_phase_matches_fused_fan_out() {
+        // The tentpole invariant at the coordinator level: caching the
+        // profile and overlaying scenarios equals re-running the engine
+        // per scenario, bit-for-bit.
+        for c in [9usize, 400] {
+            let req = request(c);
+            let two = sweep(&HostEngineFactory, &req, &grid(), &SweepConfig { threads: 4 }).unwrap();
+            let fused =
+                sweep_fused(&HostEngineFactory, &req, &grid(), &SweepConfig { threads: 4 })
+                    .unwrap();
+            assert_eq!(two.items, fused.items, "c={c}");
+            assert_outcomes_identical(&two, &fused);
+        }
     }
 
     #[test]

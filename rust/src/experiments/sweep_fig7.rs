@@ -9,7 +9,7 @@
 
 use crate::carbon::FabGrid;
 use crate::dse::grid::ScenarioGrid;
-use crate::dse::sweep::{sweep, SweepConfig, SweepOutcome};
+use crate::dse::sweep::{sweep, sweep_fused, SweepConfig, SweepOutcome};
 use crate::dse::{design_grid, profile_configs, profiles_to_rows};
 use crate::matrixform::{ConfigRow, EvalRequest, TaskMatrix};
 use crate::report::{sweep_table, Table};
@@ -56,6 +56,8 @@ pub struct SweepFig7 {
 }
 
 /// Run the Fig 7 sweep for one cluster on `threads` workers (0 = auto).
+/// Two-phase: the 121-config space is profiled once, the three
+/// embodied-share scenarios are cheap overlays over the cached profile.
 pub fn run(
     factory: &dyn EngineFactory,
     cluster: Cluster,
@@ -66,6 +68,22 @@ pub fn run(
     let outcome = sweep(factory, &space.base, &grid, &SweepConfig { threads })?;
     let mut table = sweep_table(&outcome);
     table.title = format!("Fig 7 sweep [{}] — {}", cluster.label(), table.title);
+    Ok(SweepFig7 { cluster, outcome, table })
+}
+
+/// PR 1-style fused reference run: the engine re-contracts the space once
+/// per scenario. Same numbers as [`run`] bit-for-bit; kept for the
+/// fused-vs-two-phase benchmark and as an equality oracle in tests.
+pub fn run_fused(
+    factory: &dyn EngineFactory,
+    cluster: Cluster,
+    threads: usize,
+) -> crate::Result<SweepFig7> {
+    let space = profile_cluster(cluster);
+    let grid = ScenarioGrid::fig7(&space.rows, &space.tasks, space.ci_use_g_per_j);
+    let outcome = sweep_fused(factory, &space.base, &grid, &SweepConfig { threads })?;
+    let mut table = sweep_table(&outcome);
+    table.title = format!("Fig 7 sweep (fused) [{}] — {}", cluster.label(), table.title);
     Ok(SweepFig7 { cluster, outcome, table })
 }
 
@@ -88,6 +106,24 @@ mod tests {
         let best: Vec<f64> = f.outcome.scenarios.iter().map(|s| s.outcome.stats.best).collect();
         assert!(best[0] > best[1] && best[1] > best[2], "best tCDP not ordered: {best:?}");
         assert_eq!(f.table.len(), 3);
+    }
+
+    #[test]
+    fn two_phase_fig7_matches_fused_reference() {
+        // Profile-once + overlays equals the per-scenario fused fan-out
+        // bit-for-bit on the real profiled design space.
+        let two = run(&HostEngineFactory, Cluster::Ai5, 2).unwrap();
+        let fused = run_fused(&HostEngineFactory, Cluster::Ai5, 2).unwrap();
+        assert_eq!(two.outcome.scenarios.len(), fused.outcome.scenarios.len());
+        for (a, b) in two.outcome.scenarios.iter().zip(&fused.outcome.scenarios) {
+            assert_eq!(a.label, b.label);
+            assert_eq!(a.outcome.result.metrics, b.outcome.result.metrics);
+            assert_eq!(a.outcome.result.d_task, b.outcome.result.d_task);
+            assert_eq!(a.outcome.optimal, b.outcome.optimal);
+        }
+        // The whole point: one engine pass instead of one per scenario.
+        assert_eq!(two.outcome.profile_chunks, 1);
+        assert_eq!(fused.outcome.items, 3);
     }
 
     #[test]

@@ -21,10 +21,14 @@
 //! loads the HLO artifacts through the PJRT CPU client (`xla` crate) and
 //! the coordinator streams batches of candidate hardware configurations
 //! through it; [`runtime::HostEngine`] is a pure-Rust mirror used for
-//! cross-checking and as a fallback. Multi-scenario studies run through
-//! [`dse::sweep`], which fans (scenario × config-chunk) items across
-//! worker threads, each owning a private engine built by a
-//! [`runtime::EngineFactory`].
+//! cross-checking and as a fallback. Evaluation is two-phase: the engine
+//! contracts each config chunk into a scenario-invariant
+//! [`matrixform::DesignProfile`] (phase A) and a
+//! [`carbon::ScenarioOverlay`] folds the scenario knobs in (phase B),
+//! bit-identical to the fused graph. Multi-scenario studies run through
+//! [`dse::sweep`], which profiles chunks once across worker threads
+//! (each owning a private engine built by a [`runtime::EngineFactory`])
+//! and fans only cheap overlays across the scenario grid.
 //!
 //! See `DESIGN.md` for the per-experiment index and `EXPERIMENTS.md` for
 //! paper-vs-measured results.

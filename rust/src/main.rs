@@ -38,9 +38,17 @@ COMMANDS
   fig15       3D stacking vs 2D baseline           [--workload SR-512]
   fig16       3D stacking per XR kernel
   table5      VR SoC embodied-carbon calibration
-  sweep       parallel multi-scenario sweep        [--preset fig7|lifetime|fig11
+  sweep       parallel two-phase multi-scenario sweep (profile once, overlay
+              each scenario)                       [--preset NAME
                                                     --cluster all|10xr|10ai|5xr|5ai
-                                                    --threads N (0 = auto)]
+                                                    --threads N (0 = auto; applies
+                                                      to the profile phase, so it
+                                                      only helps spaces spanning
+                                                      several engine chunks)]
+              presets: fig7     98%/65%/25% embodied-share scenarios
+                       fig10    operational lifetime 1e3..1e8 s (alias: lifetime)
+                       fig11    provisioning lifetimes 1-3y x QoS on/off
+                       ci       CI diversity (world|us|coal|renewable grids)
   all         run everything above in order
 ";
 
@@ -83,11 +91,22 @@ fn run_sweep(args: &Args) -> anyhow::Result<()> {
             emit(args, "sweep_fig7", &f.table)?;
             print!("{}", sweep_best_table(&f.outcome).render());
         }
-        "lifetime" => {
+        "fig10" | "lifetime" => {
             let space = sweep_fig7::profile_cluster(cluster_for(args)?);
             let grid = ScenarioGrid::lifetime_decades(3, 8);
             let out = sweep(factory.as_ref(), &space.base, &grid, &SweepConfig { threads })?;
-            emit(args, "sweep_lifetime", &sweep_table(&out))?;
+            emit(args, "sweep_fig10", &sweep_table(&out))?;
+            print!("{}", sweep_best_table(&out).render());
+        }
+        "ci" => {
+            let space = sweep_fig7::profile_cluster(cluster_for(args)?);
+            // The CI axis does not override lifetime, so replace the
+            // preset placeholder with a concrete 2-year operational life.
+            let mut base = space.base.clone();
+            base.lifetime_s = 2.0 * xrcarbon::dse::grid::YEAR_S;
+            let grid = ScenarioGrid::use_grids();
+            let out = sweep(factory.as_ref(), &base, &grid, &SweepConfig { threads })?;
+            emit(args, "sweep_ci", &sweep_table(&out))?;
             print!("{}", sweep_best_table(&out).render());
         }
         "fig11" => {
@@ -105,7 +124,7 @@ fn run_sweep(args: &Args) -> anyhow::Result<()> {
             emit(args, "sweep_fig11", &sweep_table(&out))?;
             print!("{}", sweep_best_table(&out).render());
         }
-        other => anyhow::bail!("unknown sweep preset '{other}' (fig7|lifetime|fig11)"),
+        other => anyhow::bail!("unknown sweep preset '{other}' (fig7|fig10|lifetime|fig11|ci)"),
     }
     Ok(())
 }

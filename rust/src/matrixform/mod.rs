@@ -7,7 +7,9 @@
 //! artifacts expect (`T=8, K=32, J=16, C ∈ {128, 1024}`).
 
 mod pack;
+mod profile;
 mod types;
 
 pub use pack::{PackedProblem, C_VARIANTS, J_PAD, K_PAD, NUM_METRICS, T_PAD};
+pub use profile::{DesignProfile, ProfileRequest};
 pub use types::{ConfigRow, EvalRequest, EvalResult, MetricRow, TaskMatrix};

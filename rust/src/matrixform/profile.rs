@@ -1,0 +1,227 @@
+//! Scenario-invariant design profiles — phase A of the two-phase
+//! evaluation pipeline.
+//!
+//! An [`super::EvalRequest`] mixes two very different kinds of input: the
+//! *design space* (task matrix `N`, per-config kernel delays/energies and
+//! component embodied-carbon rows — the expensive O(C×T×K) contraction)
+//! and the *scenario* (`ci_use`, `lifetime`, `β`, `qos`, `p_max`,
+//! `online` — a handful of scalars folded in with O(C) arithmetic).
+//! Multi-scenario sweeps re-run the same design space under many
+//! scenarios, so the pipeline splits here:
+//!
+//! * [`ProfileRequest`] — the scenario-invariant half of a request;
+//! * [`DesignProfile`] — the engine's contraction of one packed batch
+//!   into per-config totals (energy, delay), per-task delays and the
+//!   per-provisioning-group `c_comp` row, all still padded f32 so that a
+//!   [`crate::carbon::ScenarioOverlay`] (phase B) reproduces the fused
+//!   engine's arithmetic bit-for-bit.
+
+use super::pack::{PackedProblem, J_PAD, NUM_METRICS, T_PAD};
+use super::types::{ConfigRow, EvalRequest, EvalResult, TaskMatrix};
+
+/// The scenario-invariant half of an [`EvalRequest`]: the design space
+/// and its task matrix, without any scenario knobs.
+#[derive(Debug, Clone)]
+pub struct ProfileRequest {
+    /// Task matrix `N`.
+    pub tasks: TaskMatrix,
+    /// Candidate configurations.
+    pub configs: Vec<ConfigRow>,
+}
+
+impl ProfileRequest {
+    /// Strip the scenario half off a full request.
+    pub fn from_eval(req: &EvalRequest) -> Self {
+        ProfileRequest { tasks: req.tasks.clone(), configs: req.configs.clone() }
+    }
+
+    /// Neutral [`EvalRequest`] used for packing: the scenario knobs are
+    /// inert placeholders (profiling reads only the design-space tensors,
+    /// which pack identically under every scenario).
+    pub fn to_eval(&self) -> EvalRequest {
+        self.chunk_eval(self.configs.clone())
+    }
+
+    /// Neutral request over one chunk of this space's configs — same
+    /// inert scenario knobs as [`Self::to_eval`] without cloning the
+    /// whole config list (chunk builders hand ownership in directly).
+    pub fn chunk_eval(&self, configs: Vec<ConfigRow>) -> EvalRequest {
+        let j = configs.first().map(|c| c.c_comp.len()).unwrap_or(0);
+        EvalRequest {
+            tasks: self.tasks.clone(),
+            configs,
+            online: vec![1.0; j],
+            qos: vec![f64::INFINITY; self.tasks.num_tasks()],
+            ci_use_g_per_j: 0.0,
+            lifetime_s: 1.0,
+            beta: 1.0,
+            p_max_w: f64::INFINITY,
+        }
+    }
+}
+
+/// One packed batch contracted into scenario-invariant per-config data
+/// (phase A output). Holds everything a scenario overlay needs — the f32
+/// values are exactly the ones the fused engine computes internally, so
+/// overlay composition is bit-identical to the fused path.
+#[derive(Debug, Clone)]
+pub struct DesignProfile {
+    /// `[c_pad]` total energy per config, J (||E||₁ in f32).
+    pub energy: Vec<f32>,
+    /// `[c_pad]` total delay per config, s (||D||₁ in f32).
+    pub delay: Vec<f32>,
+    /// `[c_pad × T_PAD]` per-task delays, s.
+    pub d_task: Vec<f32>,
+    /// `[c_pad × J_PAD]` per-provisioning-group embodied carbon, g
+    /// (copied from the packed batch; the overlay's `online` mask
+    /// contracts it per scenario).
+    pub c_comp: Vec<f32>,
+    /// Padded batch size.
+    pub c_pad: usize,
+    /// Logical batch size.
+    pub c: usize,
+    /// Logical task count.
+    pub t: usize,
+    /// Config names (logical batch order).
+    pub names: Vec<String>,
+}
+
+impl DesignProfile {
+    /// Assemble a profile from a packed batch and the engine's raw
+    /// scenario-invariant buffers.
+    pub fn from_parts(
+        packed: &PackedProblem,
+        energy: Vec<f32>,
+        delay: Vec<f32>,
+        d_task: Vec<f32>,
+    ) -> Self {
+        assert_eq!(energy.len(), packed.c_pad, "bad energy buffer");
+        assert_eq!(delay.len(), packed.c_pad, "bad delay buffer");
+        assert_eq!(d_task.len(), packed.c_pad * T_PAD, "bad d_task buffer");
+        DesignProfile {
+            energy,
+            delay,
+            d_task,
+            c_comp: packed.c_comp.clone(),
+            c_pad: packed.c_pad,
+            c: packed.c,
+            t: packed.t,
+            names: packed.names.clone(),
+        }
+    }
+
+    /// Unpack overlay-produced padded metric rows (plus this profile's
+    /// per-task delays) into a logical-size [`EvalResult`] — the same
+    /// stripping `PackedProblem::unpack` applies to fused output.
+    pub fn unpack(&self, metrics_pad: &[f32]) -> EvalResult {
+        assert_eq!(metrics_pad.len(), NUM_METRICS * self.c_pad, "bad metrics buffer");
+        let mut metrics = vec![0.0f64; NUM_METRICS * self.c];
+        for row in 0..NUM_METRICS {
+            for ci in 0..self.c {
+                metrics[row * self.c + ci] = metrics_pad[row * self.c_pad + ci] as f64;
+            }
+        }
+        let mut d_task = vec![0.0f64; self.c * self.t];
+        for ci in 0..self.c {
+            for ti in 0..self.t {
+                d_task[ci * self.t + ti] = self.d_task[ci * T_PAD + ti] as f64;
+            }
+        }
+        EvalResult { names: self.names.clone(), metrics, d_task, c: self.c, t: self.t }
+    }
+
+    /// Total embodied carbon of one config with all components online, g
+    /// (f32 row sum in component order).
+    pub fn embodied_total(&self, config: usize) -> f32 {
+        assert!(config < self.c);
+        self.c_comp[config * J_PAD..(config + 1) * J_PAD].iter().sum()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn request(c: usize) -> EvalRequest {
+        let tm = TaskMatrix::single_task("t", vec!["k0".into(), "k1".into()], &[3.0, 1.0]);
+        EvalRequest {
+            tasks: tm,
+            configs: (0..c)
+                .map(|i| ConfigRow {
+                    name: format!("cfg{i}"),
+                    f_clk: 1e9,
+                    d_k: vec![1e-3, 2e-3],
+                    e_dyn: vec![0.01, 0.02],
+                    leak_w: 0.1,
+                    c_comp: vec![10.0, 20.0],
+                })
+                .collect(),
+            online: vec![1.0, 0.0],
+            qos: vec![0.5],
+            ci_use_g_per_j: 1e-4,
+            lifetime_s: 1e6,
+            beta: 2.0,
+            p_max_w: 30.0,
+        }
+    }
+
+    #[test]
+    fn profile_request_strips_scenario_half() {
+        let req = request(3);
+        let p = ProfileRequest::from_eval(&req);
+        assert_eq!(p.configs.len(), 3);
+        let neutral = p.to_eval();
+        neutral.validate();
+        // Scenario knobs are inert, the design space is untouched.
+        assert_eq!(neutral.qos, vec![f64::INFINITY]);
+        assert_eq!(neutral.online, vec![1.0, 1.0]);
+        assert_eq!(neutral.configs.len(), 3);
+        assert_eq!(neutral.tasks.get(0, 0), 3.0);
+    }
+
+    #[test]
+    fn from_parts_copies_packing_metadata() {
+        let packed = PackedProblem::from_request(&request(5));
+        let c_pad = packed.c_pad;
+        let prof = DesignProfile::from_parts(
+            &packed,
+            vec![1.0; c_pad],
+            vec![2.0; c_pad],
+            vec![0.5; c_pad * T_PAD],
+        );
+        assert_eq!(prof.c, 5);
+        assert_eq!(prof.c_pad, c_pad);
+        assert_eq!(prof.names[4], "cfg4");
+        assert_eq!(prof.c_comp.len(), c_pad * J_PAD);
+        assert!((prof.embodied_total(0) - 30.0).abs() < 1e-6);
+    }
+
+    #[test]
+    #[should_panic(expected = "bad energy buffer")]
+    fn from_parts_rejects_bad_buffers() {
+        let packed = PackedProblem::from_request(&request(2));
+        DesignProfile::from_parts(&packed, vec![1.0; 3], vec![], vec![]);
+    }
+
+    #[test]
+    fn unpack_strips_padding_like_packed_problem() {
+        let packed = PackedProblem::from_request(&request(3));
+        let c_pad = packed.c_pad;
+        let mut d_task = vec![0.0f32; c_pad * T_PAD];
+        for ci in 0..c_pad {
+            d_task[ci * T_PAD] = 7.0 + ci as f32;
+        }
+        let prof =
+            DesignProfile::from_parts(&packed, vec![1.0; c_pad], vec![2.0; c_pad], d_task);
+        let mut metrics = vec![0.0f32; NUM_METRICS * c_pad];
+        for row in 0..NUM_METRICS {
+            for ci in 0..c_pad {
+                metrics[row * c_pad + ci] = (row * 1000 + ci) as f32;
+            }
+        }
+        let res = prof.unpack(&metrics);
+        assert_eq!(res.c, 3);
+        assert_eq!(res.metric(crate::matrixform::MetricRow::Delay, 2), 1002.0);
+        assert_eq!(res.task_delay(1, 0), 8.0);
+    }
+}

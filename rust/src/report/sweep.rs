@@ -10,8 +10,9 @@ use super::Table;
 pub fn sweep_table(out: &SweepOutcome) -> Table {
     let mut t = Table::new(
         &format!(
-            "Scenario sweep — {} scenarios, {} work items, {} engine, {} thread(s)",
+            "Scenario sweep — {} scenarios, {} profile chunk(s), {} work items, {} engine, {} thread(s)",
             out.scenarios.len(),
+            out.profile_chunks,
             out.items,
             out.engine,
             out.threads

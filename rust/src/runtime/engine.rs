@@ -11,14 +11,43 @@ pub struct RawOutput {
     pub d_task: Vec<f32>,
 }
 
+/// Raw (still padded) scenario-invariant profile buffers — phase A of the
+/// two-phase pipeline. These are exactly the fused graph's invariant
+/// rows: total energy, total delay and the per-task delays; everything
+/// scenario-dependent is left to the overlay.
+#[derive(Debug, Clone)]
+pub struct RawProfile {
+    /// `[c_pad]` total energy per config, J.
+    pub energy: Vec<f32>,
+    /// `[c_pad]` total delay per config, s.
+    pub delay: Vec<f32>,
+    /// `[c_pad × T_PAD]` per-task delays, s.
+    pub d_task: Vec<f32>,
+}
+
 /// A batched metric evaluator.
 ///
 /// Not `Send`: the PJRT client is `Rc`-based, so engines stay on the
 /// coordinating thread; the coordinator parallelizes batch *assembly*
 /// (accelerator simulation) instead.
 pub trait Engine {
-    /// Execute one packed batch.
+    /// Execute one packed batch through the fused (single-phase) graph.
     fn execute(&mut self, p: &PackedProblem) -> crate::Result<RawOutput>;
+
+    /// Phase A: contract one packed batch into its scenario-invariant
+    /// profile. The default runs the fused graph and keeps the invariant
+    /// rows (the energy/delay/d_task outputs do not depend on the packed
+    /// scenario scalars); engines with a cheaper direct contraction
+    /// override it.
+    fn profile(&mut self, p: &PackedProblem) -> crate::Result<RawProfile> {
+        let raw = self.execute(p)?;
+        let c = p.c_pad;
+        Ok(RawProfile {
+            energy: raw.metrics[..c].to_vec(),     // MetricRow::Energy
+            delay: raw.metrics[c..2 * c].to_vec(), // MetricRow::Delay
+            d_task: raw.d_task,
+        })
+    }
 
     /// Engine label for logs/reports ("pjrt", "host").
     fn name(&self) -> &'static str;

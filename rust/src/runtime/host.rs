@@ -4,7 +4,7 @@
 //! (`python/compile/kernels/ref.py`) so PJRT-vs-host differences stay at
 //! rounding level; the integration tests assert ≤ 1e-5 relative error.
 
-use super::engine::{Engine, RawOutput};
+use super::engine::{Engine, RawOutput, RawProfile};
 use crate::matrixform::{PackedProblem, J_PAD, K_PAD, NUM_METRICS, T_PAD};
 
 /// Host (no-XLA) engine.
@@ -20,7 +20,34 @@ impl HostEngine {
     }
 }
 
+/// The Layer-1 hot loop for one config row: per-task energy/delay
+/// contraction (K accumulation in f32, matching XLA's row-major dot).
+/// Shared by the fused `execute` and the phase-A `profile` so the two
+/// paths stay bit-identical by construction.
+#[inline]
+fn contract_tasks(p: &PackedProblem, ci: usize) -> ([f32; T_PAD], [f32; T_PAD]) {
+    let f_clk = p.f_clk[ci];
+    let mut e_task = [0.0f32; T_PAD];
+    let mut d_task = [0.0f32; T_PAD];
+    for ti in 0..T_PAD {
+        let mut e_acc = 0.0f32;
+        let mut d_acc = 0.0f32;
+        for ki in 0..K_PAD {
+            let n = p.n[ti * K_PAD + ki];
+            let e_k = (p.p_leak[ci * K_PAD + ki] + p.p_dyn[ci * K_PAD + ki]) / f_clk;
+            e_acc += e_k * n;
+            d_acc += p.d_k[ci * K_PAD + ki] * n;
+        }
+        e_task[ti] = e_acc;
+        d_task[ti] = d_acc;
+    }
+    (e_task, d_task)
+}
+
 impl Engine for HostEngine {
+    // The carbon/feasibility arithmetic below is mirrored in
+    // `carbon/overlay.rs::ScenarioOverlay::apply` (phase B); keep the two
+    // in lockstep — the bit-identity property tests fail otherwise.
     fn execute(&mut self, p: &PackedProblem) -> crate::Result<RawOutput> {
         let c_pad = p.c_pad;
         let (ci_use, lifetime, beta, p_max) = (
@@ -34,23 +61,7 @@ impl Engine for HostEngine {
         let mut d_task_out = vec![0.0f32; c_pad * T_PAD];
 
         for ci in 0..c_pad {
-            let f_clk = p.f_clk[ci];
-            // Per-task contractions (K accumulation in f32, matching XLA's
-            // row-major dot).
-            let mut e_task = [0.0f32; T_PAD];
-            let mut d_task = [0.0f32; T_PAD];
-            for ti in 0..T_PAD {
-                let mut e_acc = 0.0f32;
-                let mut d_acc = 0.0f32;
-                for ki in 0..K_PAD {
-                    let n = p.n[ti * K_PAD + ki];
-                    let e_k = (p.p_leak[ci * K_PAD + ki] + p.p_dyn[ci * K_PAD + ki]) / f_clk;
-                    e_acc += e_k * n;
-                    d_acc += p.d_k[ci * K_PAD + ki] * n;
-                }
-                e_task[ti] = e_acc;
-                d_task[ti] = d_acc;
-            }
+            let (e_task, d_task) = contract_tasks(p, ci);
             let energy: f32 = e_task.iter().sum();
             let delay: f32 = d_task.iter().sum();
 
@@ -88,6 +99,22 @@ impl Engine for HostEngine {
         }
 
         Ok(RawOutput { metrics, d_task: d_task_out })
+    }
+
+    /// Phase A only: the O(C×T×K) contraction without the carbon math —
+    /// multi-scenario sweeps run this once and apply cheap overlays.
+    fn profile(&mut self, p: &PackedProblem) -> crate::Result<RawProfile> {
+        let c_pad = p.c_pad;
+        let mut energy = vec![0.0f32; c_pad];
+        let mut delay = vec![0.0f32; c_pad];
+        let mut d_task_out = vec![0.0f32; c_pad * T_PAD];
+        for ci in 0..c_pad {
+            let (e_task, d_task) = contract_tasks(p, ci);
+            energy[ci] = e_task.iter().sum();
+            delay[ci] = d_task.iter().sum();
+            d_task_out[ci * T_PAD..(ci + 1) * T_PAD].copy_from_slice(&d_task);
+        }
+        Ok(RawProfile { energy, delay, d_task: d_task_out })
     }
 
     fn name(&self) -> &'static str {
@@ -184,6 +211,27 @@ mod tests {
         let res = evaluate(&mut HostEngine::new(), &req).unwrap();
         let c_emb = res.metric(MetricRow::CEmb, 0);
         assert!((c_emb - 500.0 * 0.02 / 3.0e6).abs() < 1e-9);
+    }
+
+    #[test]
+    fn profile_rows_match_fused_invariant_rows() {
+        // Phase A must reproduce the fused graph's energy/delay/d_task
+        // bit-for-bit (shared contraction), padding rows included.
+        let packed = PackedProblem::from_request(&request());
+        let mut eng = HostEngine::new();
+        let fused = eng.execute(&packed).unwrap();
+        let prof = eng.profile(&packed).unwrap();
+        for ci in 0..packed.c_pad {
+            assert_eq!(prof.energy[ci].to_bits(), fused.metrics[ci].to_bits());
+            assert_eq!(
+                prof.delay[ci].to_bits(),
+                fused.metrics[packed.c_pad + ci].to_bits()
+            );
+        }
+        assert_eq!(prof.d_task.len(), fused.d_task.len());
+        for (a, b) in prof.d_task.iter().zip(&fused.d_task) {
+            assert_eq!(a.to_bits(), b.to_bits());
+        }
     }
 
     #[test]

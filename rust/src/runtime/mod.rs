@@ -13,6 +13,14 @@
 //!
 //! Engines are `!Send` by design; parallel sweeps construct one engine per
 //! worker thread through an [`EngineFactory`] instead of sharing one.
+//!
+//! Evaluation is two-phase: [`Engine::profile`] contracts a packed batch
+//! into its scenario-invariant [`DesignProfile`] (phase A — the only part
+//! that touches the Layer-1/Layer-2 hot loop) and a
+//! [`crate::carbon::ScenarioOverlay`] folds the scenario knobs in (phase
+//! B, pure Rust, bit-identical to the fused graph). [`evaluate`] is the
+//! profile+overlay composition; [`evaluate_fused`] keeps the single-phase
+//! path as the reference oracle.
 
 mod engine;
 mod factory;
@@ -20,7 +28,7 @@ mod host;
 #[cfg(feature = "pjrt")]
 mod pjrt;
 
-pub use engine::{Engine, RawOutput};
+pub use engine::{Engine, RawOutput, RawProfile};
 pub use factory::{auto_factory, EngineFactory, HostEngineFactory};
 #[cfg(feature = "pjrt")]
 pub use factory::PjrtEngineFactory;
@@ -28,13 +36,43 @@ pub use host::HostEngine;
 #[cfg(feature = "pjrt")]
 pub use pjrt::PjrtEngine;
 
-use crate::matrixform::{EvalRequest, EvalResult, PackedProblem};
+use crate::carbon::ScenarioOverlay;
+use crate::matrixform::{DesignProfile, EvalRequest, EvalResult, PackedProblem};
 
-/// Evaluate a request on any engine (pack → execute → unpack).
+/// Evaluate a request on any engine as the two-phase composition:
+/// pack → profile (phase A, the engine hot loop) → scenario overlay
+/// (phase B, pure Rust) → unpack. On the host engine this is
+/// bit-identical to the fused [`evaluate_fused`] path — locked by
+/// `coordinator_props.rs::prop_two_phase_evaluate_bit_identical_to_fused`;
+/// on PJRT the overlay recomputes the carbon rows in Rust and stays
+/// within the existing ≤ 1e-5 pjrt-vs-host envelope.
 pub fn evaluate(engine: &mut dyn Engine, req: &EvalRequest) -> crate::Result<EvalResult> {
+    let packed = PackedProblem::from_request(req);
+    let raw = engine.profile(&packed)?;
+    let profile = DesignProfile::from_parts(&packed, raw.energy, raw.delay, raw.d_task);
+    Ok(ScenarioOverlay::from_packed(&packed).apply(&profile))
+}
+
+/// Fused single-phase reference path (pack → execute → unpack): the
+/// engine folds the scenario into the graph itself. Kept as the
+/// bit-identity oracle for the two-phase pipeline and as the per-scenario
+/// baseline `dse::sweep::sweep_fused` benches against.
+pub fn evaluate_fused(engine: &mut dyn Engine, req: &EvalRequest) -> crate::Result<EvalResult> {
     let packed = PackedProblem::from_request(req);
     let raw = engine.execute(&packed)?;
     Ok(packed.unpack(&raw.metrics, &raw.d_task))
+}
+
+/// Phase A entry point: pack a request and contract it into a
+/// scenario-invariant [`DesignProfile`] (the scenario half of `req` is
+/// ignored — profiles depend only on tasks and configs).
+pub fn profile_request(
+    engine: &mut dyn Engine,
+    req: &EvalRequest,
+) -> crate::Result<DesignProfile> {
+    let packed = PackedProblem::from_request(req);
+    let raw = engine.profile(&packed)?;
+    Ok(DesignProfile::from_parts(&packed, raw.energy, raw.delay, raw.d_task))
 }
 
 /// Build the best available engine: PJRT if the feature is enabled and the

@@ -132,6 +132,18 @@ impl Engine for PjrtEngine {
         Ok(RawOutput { metrics, d_task })
     }
 
+    // Phase A (`Engine::profile`) uses the trait default: there is no
+    // separate profile artifact, so the default runs the fused executable
+    // and keeps its scenario-invariant rows (energy, delay, per-task
+    // delays — none depend on the packed scenario scalars). The
+    // scenario-dependent rows are discarded; the Rust overlay recomputes
+    // them per scenario, so multi-scenario sweeps pay the XLA dispatch
+    // only once per config chunk. Note the overlay's Rust f32 arithmetic
+    // may differ from the compiled HLO's carbon rows by ULPs (XLA is free
+    // to fuse/reassociate); the strict bit-identity contract is proven on
+    // the host engine, and PJRT stays inside the existing ≤1e-5
+    // pjrt-vs-host envelope.
+
     fn name(&self) -> &'static str {
         "pjrt"
     }

@@ -1,13 +1,17 @@
 //! Property tests on coordinator invariants (routing/batching/state):
 //! packing round-trips, batch-order preservation, β monotonicity,
-//! constraint semantics, engine equivalence and parallel-sweep
-//! determinism — over randomized requests.
+//! constraint semantics, engine equivalence, parallel-sweep determinism
+//! and two-phase (profile + overlay) vs fused bit-identity — over
+//! randomized requests.
 
+use xrcarbon::carbon::ScenarioOverlay;
 use xrcarbon::dse::batching::evaluate_chunked;
-use xrcarbon::dse::sweep::{sweep, sweep_sequential, SweepConfig, SweepOutcome};
+use xrcarbon::dse::sweep::{sweep, sweep_fused, sweep_sequential, SweepConfig, SweepOutcome};
 use xrcarbon::dse::ScenarioGrid;
-use xrcarbon::matrixform::{ConfigRow, EvalRequest, MetricRow, PackedProblem, TaskMatrix};
-use xrcarbon::runtime::{evaluate, HostEngine, HostEngineFactory};
+use xrcarbon::matrixform::{
+    ConfigRow, EvalRequest, EvalResult, MetricRow, PackedProblem, ProfileRequest, TaskMatrix,
+};
+use xrcarbon::runtime::{evaluate, evaluate_fused, profile_request, HostEngine, HostEngineFactory};
 use xrcarbon::testkit::{forall_cfg, PropConfig, Rng};
 
 fn gen_request(r: &mut Rng) -> EvalRequest {
@@ -170,6 +174,64 @@ fn prop_chunked_evaluation_order_stable() {
     );
 }
 
+/// Bitwise equality of two evaluation results (not approximate
+/// closeness: the two-phase pipeline must not change a single ULP).
+fn results_bit_identical(a: &EvalResult, b: &EvalResult) -> bool {
+    a.names == b.names
+        && a.metrics.len() == b.metrics.len()
+        && a.metrics.iter().zip(&b.metrics).all(|(m, n)| m.to_bits() == n.to_bits())
+        && a.d_task.iter().zip(&b.d_task).all(|(m, n)| m.to_bits() == n.to_bits())
+}
+
+#[test]
+fn prop_two_phase_evaluate_bit_identical_to_fused() {
+    // The tentpole invariant at the evaluate level: pack → profile →
+    // overlay equals pack → fused execute → unpack, bit for bit.
+    forall_cfg(
+        PropConfig { cases: 48, seed: 21 },
+        gen_request,
+        |req| {
+            let mut host = HostEngine::new();
+            let two = evaluate(&mut host, req).unwrap();
+            let fused = evaluate_fused(&mut host, req).unwrap();
+            results_bit_identical(&two, &fused)
+        },
+    );
+}
+
+#[test]
+fn prop_profile_overlay_reuse_bit_identical_to_fused() {
+    // One profile, many scenario overlays: each overlay-composed result
+    // must equal the fused engine run of the scenario-applied request.
+    forall_cfg(
+        PropConfig { cases: 24, seed: 22 },
+        |r| (gen_request(r), r.range(0.1, 10.0), r.range(1e4, 1e8), r.range(1e-5, 1e-3)),
+        |(req, qos_scale, lifetime, ci)| {
+            let mut host = HostEngine::new();
+            let neutral = ProfileRequest::from_eval(req).to_eval();
+            let prof = profile_request(&mut host, &neutral).unwrap();
+
+            let mut lifetime_sc = req.clone();
+            lifetime_sc.lifetime_s = *lifetime;
+            let mut mixed_sc = req.clone();
+            mixed_sc.ci_use_g_per_j = *ci;
+            mixed_sc.beta = 2.0 * mixed_sc.beta;
+            for q in mixed_sc.qos.iter_mut() {
+                *q *= qos_scale;
+            }
+            if !mixed_sc.online.is_empty() {
+                mixed_sc.online[0] = 0.0;
+            }
+
+            [req.clone(), lifetime_sc, mixed_sc].iter().all(|sreq| {
+                let two = ScenarioOverlay::from_request(sreq).apply(&prof);
+                let fused = evaluate_fused(&mut host, sreq).unwrap();
+                results_bit_identical(&two, &fused)
+            })
+        },
+    );
+}
+
 /// Bitwise equality of two sweep outcomes (not approximate closeness:
 /// the parallel coordinator must not change a single ULP).
 fn sweeps_bit_identical(a: &SweepOutcome, b: &SweepOutcome) -> bool {
@@ -215,6 +277,28 @@ fn prop_parallel_sweep_bit_identical_to_sequential() {
             let par = sweep(&HostEngineFactory, req, &grid, &SweepConfig { threads: 4 }).unwrap();
             let seq = sweep_sequential(&mut HostEngine::new(), req, &grid).unwrap();
             sweeps_bit_identical(&par, &seq)
+        },
+    );
+}
+
+#[test]
+fn prop_two_phase_sweep_bit_identical_to_fused_sweep() {
+    // Coordinator-level: profile-once + overlays equals the PR 1
+    // per-scenario fused fan-out over randomized requests.
+    forall_cfg(
+        PropConfig { cases: 10, seed: 23 },
+        gen_request,
+        |req| {
+            let grid = ScenarioGrid::new()
+                .with_lifetime("lt=1e5s", 1e5)
+                .with_lifetime("lt=1e7s", 1e7)
+                .with_beta("b=0.5", 0.5)
+                .with_beta("b=2", 2.0)
+                .with_ci("ci=hi", 5e-4);
+            let two = sweep(&HostEngineFactory, req, &grid, &SweepConfig { threads: 4 }).unwrap();
+            let fused =
+                sweep_fused(&HostEngineFactory, req, &grid, &SweepConfig { threads: 4 }).unwrap();
+            two.items == fused.items && sweeps_bit_identical(&two, &fused)
         },
     );
 }
