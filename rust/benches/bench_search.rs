@@ -1,0 +1,110 @@
+//! Bench: adaptive search vs exhaustive enumeration — (a) the 121-point
+//! Fig 7 anchor (profile-everything + sweep versus profile-on-demand
+//! search, wall clock and evaluations) and (b) the ~10k-point expanded
+//! 2-D/3-D space, where only the search is affordable and the metric is
+//! coverage (candidates evaluated vs space size).
+//!
+//! Emits `BENCH_search.json` with two pseudo-entries the CI smoke gate
+//! (`tools/check_bench_gate.py`) consumes:
+//!
+//! * `search/evaluations_vs_exhaustive` — `samples` = candidates the
+//!   anchor search evaluated, `throughput` = 121 / evaluations
+//!   (evaluations-saved ratio; the gate requires ≥ 121/72 ≈ 1.67×, the
+//!   ≤ 60 % anchor budget);
+//! * `search/expanded_coverage` — `samples` = candidates evaluated on
+//!   the expanded space, `throughput` = space / evaluations (gate: ≥ 5×).
+//!
+//! Set `XRCARBON_BENCH_QUICK=1` for the short sampling mode CI uses.
+
+use std::time::Duration;
+
+use xrcarbon::bench::{write_json, BenchResult, Bencher};
+use xrcarbon::carbon::FabGrid;
+use xrcarbon::dse::search::{search, SearchConfig, SimulatorEvaluator};
+use xrcarbon::dse::sweep::{sweep, SweepConfig};
+use xrcarbon::dse::SearchSpace;
+use xrcarbon::experiments::search_fig7::{expanded_grid, run_expanded};
+use xrcarbon::experiments::sweep_fig7::profile_cluster;
+use xrcarbon::runtime::HostEngineFactory;
+use xrcarbon::workloads::{cluster_workloads, Cluster};
+
+/// Counter pseudo-entry: `samples` carries a count, `throughput` a
+/// ratio; timings are zero (this row is data, not a measurement).
+fn counter(name: &str, samples: usize, ratio: f64) -> BenchResult {
+    BenchResult {
+        name: name.to_string(),
+        samples,
+        mean: Duration::ZERO,
+        p50: Duration::ZERO,
+        p95: Duration::ZERO,
+        throughput: Some(ratio),
+    }
+}
+
+fn main() {
+    let mut results: Vec<BenchResult> = Vec::new();
+    let cluster = Cluster::Ai5;
+
+    // Shared scenario calibration (an input to both paths, not part of
+    // the unit under test).
+    let space = profile_cluster(cluster);
+    let grid = xrcarbon::dse::ScenarioGrid::fig7(&space.rows, &space.tasks, space.ci_use_g_per_j);
+
+    // (a) Exhaustive: profile all 121 candidates, then sweep.
+    let ex = Bencher::new("search/exhaustive_grid121").quick_if_env().run(|| {
+        let s = profile_cluster(cluster);
+        sweep(&HostEngineFactory, &s.base, &grid, &SweepConfig::default()).unwrap()
+    });
+    println!("{}", ex.report());
+
+    // Adaptive: profile only what the search visits.
+    let evaluator =
+        SimulatorEvaluator { workloads: cluster_workloads(cluster), fab: FabGrid::Coal };
+    let mut evals = 0usize;
+    let ad = Bencher::new("search/adaptive_grid121").quick_if_env().run(|| {
+        let out = search(
+            &HostEngineFactory,
+            &SearchSpace::fig7_grid(),
+            &evaluator,
+            &space.base,
+            &grid,
+            &SearchConfig::default(),
+        )
+        .unwrap();
+        evals = out.evaluations;
+        out
+    });
+    println!("{}", ad.report());
+    let saved = 121.0 / evals.max(1) as f64;
+    let wall = ex.mean.as_secs_f64() / ad.mean.as_secs_f64();
+    println!(
+        "anchor: {evals}/121 candidates evaluated ({saved:.2}x evaluations saved, {wall:.2}x wall clock)"
+    );
+    results.push(ex);
+    results.push(ad);
+    results.push(counter("search/evaluations_vs_exhaustive", evals, saved));
+
+    // (b) Expanded 2-D/3-D space: search is the only affordable path —
+    // report coverage and wall clock, capturing the outcome of the last
+    // benched run (deterministic: every run is identical for the seed).
+    let mut expanded = None;
+    let exp = Bencher::new("search/adaptive_expanded10k").quick_if_env().run(|| {
+        let f = run_expanded(&HostEngineFactory, Cluster::Xr5, &SearchConfig::default()).unwrap();
+        expanded = Some(f.outcome);
+    });
+    println!("{}", exp.report());
+    let out = expanded.expect("bench ran at least once");
+    let coverage = out.space_size as f64 / out.evaluations.max(1) as f64;
+    println!(
+        "expanded: {}/{} candidates evaluated ({coverage:.1}x saved), converged={}, grid scenarios={}",
+        out.evaluations,
+        out.space_size,
+        out.converged,
+        expanded_grid().cardinality(),
+    );
+    results.push(exp);
+    results.push(counter("search/expanded_coverage", out.evaluations, coverage));
+
+    write_json(&results, "BENCH_search.json").expect("writing BENCH_search.json");
+    println!("[json] wrote BENCH_search.json ({} benchmarks)", results.len());
+}

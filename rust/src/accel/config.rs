@@ -106,6 +106,18 @@ impl AcceleratorConfig {
         }
     }
 
+    /// A 3-D design: SRAM on stacked dies behind the F2F hybrid-bond
+    /// interface (§5.6), nominal voltage, 1 GHz, 7 nm. The stacked-die
+    /// partitioning (and its Murphy-yield advantage) comes from
+    /// [`Self::chip_design`].
+    pub fn new_3d(name: &str, num_macs: u32, sram_bytes: u64) -> Self {
+        AcceleratorConfig {
+            stacked_sram: true,
+            mem: MemoryInterface::f2f(),
+            ..AcceleratorConfig::new_2d(name, num_macs, sram_bytes)
+        }
+    }
+
     /// Logic-area (MAC array + base) in mm² at this config's node.
     pub fn logic_area_mm2(&self) -> f64 {
         let density = self.node.params().density_vs_7nm;

@@ -5,7 +5,7 @@
 //! stack SRAM dies on the logic die with face-to-face hybrid bonding:
 //! `K ∈ {1K, 2K}` MAC arrays × `M ∈ {4, 8, 16}` MB stacked SRAM.
 
-use super::config::{AcceleratorConfig, MemoryInterface};
+use super::config::AcceleratorConfig;
 
 /// A named 3-D design point.
 #[derive(Debug, Clone)]
@@ -29,10 +29,8 @@ pub fn stacked_configs() -> Vec<StackedDesign> {
     for &k in &[1024u32, 2048] {
         for &mb in &[4u64, 8, 16] {
             let label = format!("3D_{}K_{}M", k / 1024, mb);
-            let mut cfg = AcceleratorConfig::new_2d(&label, k, mb * 1024 * 1024);
+            let mut cfg = AcceleratorConfig::new_3d(&label, k, mb * 1024 * 1024);
             cfg.freq_hz = 1.2e9;
-            cfg.stacked_sram = true;
-            cfg.mem = MemoryInterface::f2f();
             cfg.arrays = k / 1024; // Fig 15a: K counts 1024-MAC arrays
             out.push(StackedDesign { label, config: cfg });
         }

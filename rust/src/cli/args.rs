@@ -41,12 +41,12 @@ pub struct Args {
 const VALUED: &[&str] = &[
     "cluster", "metric", "out", "artifacts", "engine", "seed", "beta", "ratio",
     "lifetime", "hours", "devices", "days", "workload", "cores", "csv-dir",
-    "threads", "preset",
+    "threads", "preset", "space", "max-evals",
 ];
 
 /// Flag names (no value). Anything after `--` that is in neither list is
 /// rejected with [`CliError::UnknownOption`].
-const FLAGS: &[&str] = &["cpus", "csv", "help", "socs"];
+const FLAGS: &[&str] = &["cpus", "csv", "help", "search", "socs"];
 
 impl Args {
     /// Parse from an iterator of tokens (excluding argv[0]).
@@ -177,6 +177,16 @@ mod tests {
         let tokens = vec!["fig7".into(), "--cluser".into(), "5ai".into()];
         let e = Args::parse(tokens).unwrap_err();
         assert!(matches!(e, CliError::UnknownOption(ref n, _, _) if n == "cluser"));
+    }
+
+    #[test]
+    fn search_options_are_registered() {
+        // The sweep --search surface: the flag plus its valued knobs.
+        let a = parse("sweep --search --space expanded --seed 7 --max-evals 500");
+        assert!(a.has_flag("search"));
+        assert_eq!(a.get("space", "fig7"), "expanded");
+        assert_eq!(a.get_u64("seed", 0).unwrap(), 7);
+        assert_eq!(a.get_usize("max-evals", 0).unwrap(), 500);
     }
 
     #[test]

@@ -7,7 +7,9 @@
 //! space exceeds one batch), applies the §3.2 constraints, and extracts
 //! optimal designs, distribution statistics and Pareto fronts.
 //!
-//! * [`space`]    — the 11×11 MAC×SRAM grid (121 configs) and named points;
+//! * [`space`]    — the 11×11 MAC×SRAM grid (121 configs) and the
+//!   parametric [`SearchSpace`] (MAC × SRAM × 2-D/3-D × clock) the
+//!   adaptive search explores;
 //! * [`profile`]  — accelerator-simulator profiling → [`ConfigRow`]s
 //!   (parallelized with scoped threads; the simulator is the expensive
 //!   part of batch assembly);
@@ -22,7 +24,12 @@
 //! * [`sweep`]    — the two-phase parallel multi-scenario coordinator:
 //!   profiles config chunks once across per-thread engines (phase A),
 //!   then fans cheap scenario overlays over the cached profiles (phase
-//!   B), bit-identical to the sequential and fused per-scenario paths.
+//!   B), bit-identical to the sequential and fused per-scenario paths;
+//! * [`search`]   — adaptive Pareto-guided search over a
+//!   [`SearchSpace`]: seeded lattice sampling, successive-halving
+//!   refinement around the pooled Pareto archive, generations batched
+//!   through the two-phase coordinator — the scaling replacement for
+//!   exhaustive enumeration on large 2-D/3-D spaces.
 
 pub mod batching;
 pub mod explore;
@@ -30,6 +37,7 @@ pub mod grid;
 pub mod pareto;
 pub mod profile;
 pub mod scenario;
+pub mod search;
 pub mod space;
 pub mod sweep;
 
@@ -39,5 +47,9 @@ pub use grid::{AxisPoint, ScenarioGrid, SweepScenario};
 pub use pareto::{beta_sweep, pareto_front, BetaPoint};
 pub use profile::{profile_configs, profiles_to_rows};
 pub use scenario::{lifetime_for_ratio, Scenario};
-pub use space::{design_grid, DesignPoint};
+pub use search::{
+    exhaustive_front, pooled_objectives, search, ArchivePoint, ReplayEvaluator, SearchBest,
+    SearchConfig, SearchOutcome, SimulatorEvaluator, SpaceEvaluator,
+};
+pub use space::{design_grid, DesignPoint, SearchSpace, SpaceIndex};
 pub use sweep::{sweep, sweep_fused, sweep_sequential, ScenarioResult, SweepConfig, SweepOutcome};

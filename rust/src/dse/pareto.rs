@@ -55,9 +55,23 @@ pub fn beta_sweep(
 
 /// Indices of the non-dominated points of a `(f1, f2)` set
 /// (minimization in both objectives; ties kept once).
+///
+/// Tie semantics, locked by `ties_collapse_to_one_representative` and
+/// `prop_front_matches_naive_oracle`:
+///
+/// * a point that ties a front point on **one** coordinate and is worse
+///   on the other is strictly dominated and excluded;
+/// * exact duplicates of a front point keep exactly **one**
+///   representative — the earliest original index (the sort below is
+///   stable, so among equal `(f1, f2)` keys the smallest index comes
+///   first and is the one pushed).
+///
+/// Returned indices are in ascending-`f1` scan order.
 pub fn pareto_front(points: &[(f64, f64)]) -> Vec<usize> {
     let mut idx: Vec<usize> = (0..points.len()).collect();
     // Sort by f1 asc, then f2 asc; scan keeping strictly improving f2.
+    // A duplicate of the previous front point arrives with f2 ==
+    // best_f2 and is skipped — that is the "ties kept once" collapse.
     idx.sort_by(|&a, &b| {
         points[a]
             .0
@@ -88,6 +102,65 @@ mod tests {
         let front = pareto_front(&pts);
         // (3,3) dominated by (2,2); others on the front.
         assert_eq!(front, vec![0, 4, 1, 3]);
+    }
+
+    #[test]
+    fn ties_collapse_to_one_representative() {
+        // Regression lock for the documented "ties kept once" rule:
+        // duplicates of a front point must keep exactly one
+        // representative — the earliest original index — not zero and
+        // not all of them.
+        let pts = [(2.0, 2.0), (1.0, 5.0), (2.0, 2.0), (5.0, 1.0), (2.0, 2.0)];
+        let front = pareto_front(&pts);
+        let dup_reps: Vec<usize> =
+            front.iter().copied().filter(|&i| pts[i] == (2.0, 2.0)).collect();
+        assert_eq!(dup_reps, vec![0], "exactly the earliest duplicate survives");
+        assert_eq!(front, vec![1, 0, 3]);
+
+        // A whole set of identical points keeps a single representative.
+        let same = [(3.0, 3.0); 4];
+        assert_eq!(pareto_front(&same), vec![0]);
+
+        // One-coordinate ties are strict dominance, not duplicates.
+        let partial = [(1.0, 4.0), (1.0, 5.0), (2.0, 4.0)];
+        assert_eq!(pareto_front(&partial), vec![0]);
+    }
+
+    /// O(n²) reference: strictly-dominated points out, exact duplicates
+    /// collapsed to their earliest index.
+    fn naive_front(pts: &[(f64, f64)]) -> Vec<usize> {
+        let mut out = Vec::new();
+        for (i, p) in pts.iter().enumerate() {
+            let dominated = pts
+                .iter()
+                .any(|q| q.0 <= p.0 && q.1 <= p.1 && (q.0 < p.0 || q.1 < p.1));
+            let dup_of_earlier = pts[..i].iter().any(|q| q == p);
+            if !dominated && !dup_of_earlier {
+                out.push(i);
+            }
+        }
+        out
+    }
+
+    #[test]
+    fn prop_front_matches_naive_oracle() {
+        // Small integer lattices force heavy coordinate ties and exact
+        // duplicates — the cases the sort-scan's tie handling must get
+        // right.
+        forall(
+            |r: &mut Rng| {
+                (0..r.below(12) + 1)
+                    .map(|_| (r.below(4) as f64, r.below(4) as f64))
+                    .collect::<Vec<_>>()
+            },
+            |pts| {
+                let mut got = pareto_front(pts);
+                let mut want = naive_front(pts);
+                got.sort_unstable();
+                want.sort_unstable();
+                got == want
+            },
+        );
     }
 
     #[test]

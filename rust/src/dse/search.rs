@@ -1,0 +1,785 @@
+//! Adaptive Pareto-guided design-space search (the scaling answer to the
+//! exhaustive Fig 7 sweep).
+//!
+//! The exhaustive path profiles every candidate of a fixed grid; this
+//! module searches a parametric [`SearchSpace`] (MAC × SRAM × 2-D/3-D ×
+//! clock) by **adaptive lattice refinement**:
+//!
+//! 1. **Seed** — evaluate a coarse sub-lattice (stride chosen so each
+//!    axis contributes ~[`SearchConfig::init_points_per_axis`] points,
+//!    endpoints always included) plus
+//!    [`SearchConfig::random_samples`] seeded draws from
+//!    [`crate::testkit::Rng`].
+//! 2. **Guide** — pool every feasible `(scenario, candidate)` objective
+//!    pair `(F₁ = C_op·D, F₂ = C_emb·D)` across the whole
+//!    [`ScenarioGrid`], keep the pooled [`pareto_front`] as the archive,
+//!    and take the archive members plus each scenario's
+//!    [`SearchConfig::guide_top_k`] tCDP leaders (plus the incumbent
+//!    best) as the guide set.
+//! 3. **Refine** — evaluate the unevaluated lattice neighbours of every
+//!    guide at the current stride (axis steps on all four axes, diagonal
+//!    steps on the MAC×SRAM plane). When no neighbour is left the stride
+//!    halves (successive halving); at stride 1 an empty neighbour set
+//!    means the frontier converged.
+//!
+//! Each generation is evaluated as one batch through the two-phase sweep
+//! coordinator ([`sweep`]): candidate rows are profiled once per
+//! generation (simulator in parallel threads, engine chunks fanned over
+//! workers) and every grid scenario is a cheap overlay — so a search
+//! over S scenarios costs `evaluations·(T·K + S)` engine work, not
+//! `S·evaluations·T·K`, and inherits the coordinator's bit-identical
+//! determinism: for a fixed seed the outcome is the same across runs
+//! *and thread counts* (per-candidate metrics are position-independent
+//! in the batch, the control loop is single-threaded, and all state is
+//! kept in deterministically ordered containers).
+//!
+//! On the 121-point Fig 7 grid the search reproduces the exhaustive
+//! feasible-tCDP optimum exactly while evaluating ≲ 55 % of the grid
+//! (locked at ≤ 60 % by `rust/tests/experiments_e2e.rs`); on the
+//! ~10k-point [`SearchSpace::expanded_2d3d`] space it converges after
+//! evaluating a few percent of the candidates (`bench_search` reports
+//! the evaluations-saved ratio in `BENCH_search.json`).
+
+use std::collections::{BTreeMap, BTreeSet};
+
+use crate::accel::Workload;
+use crate::carbon::FabGrid;
+use crate::matrixform::{ConfigRow, EvalRequest, MetricRow};
+use crate::runtime::EngineFactory;
+use crate::testkit::Rng;
+
+use super::batching::shallow;
+use super::grid::ScenarioGrid;
+use super::pareto::pareto_front;
+use super::profile::{profile_configs, profiles_to_rows};
+use super::space::{DesignPoint, SearchSpace, SpaceIndex};
+use super::sweep::{sweep, SweepConfig, SweepOutcome};
+
+/// Builds §3.3 rows for a generation of candidates. The search calls
+/// this once per generation with every fresh candidate, so
+/// implementations can batch the expensive part (the accelerator
+/// simulator fans out across threads in [`SimulatorEvaluator`]).
+pub trait SpaceEvaluator {
+    /// Rows for `points`, in order; `rows[i].name` must equal
+    /// `points[i].label`.
+    fn rows(&self, points: &[DesignPoint]) -> Vec<ConfigRow>;
+}
+
+/// The production evaluator: profile candidates on a workload set with
+/// the Fig 6 simulator and split embodied carbon into the §3.3
+/// component vector.
+pub struct SimulatorEvaluator {
+    /// Kernels to profile on (one [`ConfigRow::d_k`] entry per kernel).
+    pub workloads: Vec<Workload>,
+    /// Fab grid for the embodied model.
+    pub fab: FabGrid,
+}
+
+impl SpaceEvaluator for SimulatorEvaluator {
+    fn rows(&self, points: &[DesignPoint]) -> Vec<ConfigRow> {
+        let configs: Vec<_> = points.iter().map(|p| p.config.clone()).collect();
+        let profiles = profile_configs(&configs, &self.workloads);
+        profiles_to_rows(&configs, &profiles, self.fab)
+    }
+}
+
+/// Replays already-profiled rows by candidate label — for callers that
+/// hold the profiled space (the Fig 7 anchor, which profiles the full
+/// grid for its exhaustive reference anyway) and for oracle tests that
+/// must feed the search bit-identical rows without re-running the
+/// simulator. Panics on a label the row set does not cover.
+pub struct ReplayEvaluator {
+    by_name: BTreeMap<String, ConfigRow>,
+}
+
+impl ReplayEvaluator {
+    /// Index `rows` by name.
+    pub fn new(rows: &[ConfigRow]) -> Self {
+        ReplayEvaluator {
+            by_name: rows.iter().map(|r| (r.name.clone(), r.clone())).collect(),
+        }
+    }
+}
+
+impl SpaceEvaluator for ReplayEvaluator {
+    fn rows(&self, points: &[DesignPoint]) -> Vec<ConfigRow> {
+        points
+            .iter()
+            .map(|p| {
+                self.by_name
+                    .get(&p.label)
+                    .unwrap_or_else(|| panic!("no profiled row for candidate '{}'", p.label))
+                    .clone()
+            })
+            .collect()
+    }
+}
+
+/// Closure evaluators for tests and synthetic landscapes: any
+/// `Fn(&DesignPoint) -> ConfigRow` is a per-point [`SpaceEvaluator`].
+impl<F> SpaceEvaluator for F
+where
+    F: Fn(&DesignPoint) -> ConfigRow,
+{
+    fn rows(&self, points: &[DesignPoint]) -> Vec<ConfigRow> {
+        points.iter().map(self).collect()
+    }
+}
+
+/// Search knobs. The defaults are the validated operating point: on the
+/// 121-grid they hold evaluations under 60 % while finding the
+/// exhaustive optimum exactly.
+#[derive(Debug, Clone, Copy)]
+pub struct SearchConfig {
+    /// Seed for the random-sample half of the initial generation.
+    pub seed: u64,
+    /// Target lattice points per axis in the seed generation (sets the
+    /// initial stride: the largest power of two ≤
+    /// `(max_axis-1)/(init_points_per_axis-1)`).
+    pub init_points_per_axis: usize,
+    /// Seeded uniform samples added to the seed generation.
+    pub random_samples: usize,
+    /// Per-scenario tCDP leaders added to the guide set each round.
+    pub guide_top_k: usize,
+    /// Refine around every archive member (not just the tCDP leaders) —
+    /// this is what converges the whole Pareto frontier.
+    pub frontier: bool,
+    /// Hard cap on evaluated candidates (0 = unbounded). Hitting the cap
+    /// stops the search with `converged = false`.
+    pub max_evals: usize,
+    /// Worker threads for the per-generation sweep (0 = auto).
+    pub threads: usize,
+}
+
+impl Default for SearchConfig {
+    fn default() -> Self {
+        SearchConfig {
+            seed: 0xC0FFEE,
+            init_points_per_axis: 6,
+            random_samples: 8,
+            guide_top_k: 2,
+            frontier: true,
+            max_evals: 0,
+            threads: 0,
+        }
+    }
+}
+
+/// One feasible `(scenario, candidate)` pair on the pooled Pareto
+/// archive.
+#[derive(Debug, Clone, PartialEq)]
+pub struct ArchivePoint {
+    /// Scenario position in grid enumeration order.
+    pub scenario: usize,
+    /// Scenario label from the grid.
+    pub scenario_label: String,
+    /// Candidate index tuple.
+    pub index: SpaceIndex,
+    /// Candidate label.
+    pub name: String,
+    /// `F₁ = C_op·D`.
+    pub f1: f64,
+    /// `F₂ = C_emb·D`.
+    pub f2: f64,
+    /// Scalarized `tCDP`.
+    pub tcdp: f64,
+}
+
+/// The feasible-tCDP incumbent.
+#[derive(Debug, Clone, PartialEq)]
+pub struct SearchBest {
+    /// Scenario position in grid enumeration order.
+    pub scenario: usize,
+    /// Scenario label.
+    pub scenario_label: String,
+    /// Candidate index tuple.
+    pub index: SpaceIndex,
+    /// Candidate label.
+    pub name: String,
+    /// Its tCDP (bit-comparable against the exhaustive sweep — per-config
+    /// arithmetic is batch-position-independent).
+    pub tcdp: f64,
+}
+
+/// Search result.
+#[derive(Debug, Clone)]
+pub struct SearchOutcome {
+    /// Feasible-tCDP optimum over every evaluated `(scenario, candidate)`
+    /// pair; `None` when nothing feasible was found.
+    pub best: Option<SearchBest>,
+    /// Pooled Pareto archive (non-dominated `(F₁, F₂)` pairs), sorted by
+    /// ascending `F₁`.
+    pub archive: Vec<ArchivePoint>,
+    /// Candidates actually evaluated (profiled + engine-batched).
+    pub evaluations: usize,
+    /// Cross-product cardinality of the space.
+    pub space_size: usize,
+    /// Evaluation batches run.
+    pub generations: usize,
+    /// True when the frontier converged (stride-1 neighbourhood of every
+    /// guide exhausted); false when `max_evals` (or the generation guard)
+    /// stopped the search first.
+    pub converged: bool,
+    /// Engine label from the sweep coordinator.
+    pub engine: &'static str,
+    /// Worker threads the per-generation sweeps used.
+    pub threads: usize,
+}
+
+/// Per-(candidate, scenario) record.
+#[derive(Debug, Clone, Copy)]
+struct PointEval {
+    f1: f64,
+    f2: f64,
+    tcdp: f64,
+    feasible: bool,
+}
+
+/// Runaway guard: no realistic space needs more refinement batches.
+const MAX_GENERATIONS: usize = 1024;
+
+/// One pooled feasible objective point: `(f1, f2, tcdp, scenario, index)`.
+type Pooled = (f64, f64, f64, usize, SpaceIndex);
+
+/// Feasible objective points of the evaluated set, in deterministic
+/// (index, scenario) order — the pool the archive, guides and incumbent
+/// are derived from. Non-finite tCDP values are excluded to mirror
+/// `EvalResult::argmin_feasible`, so the incumbent can never name a
+/// candidate the exhaustive path would reject.
+fn feasible_pool(evaluated: &BTreeMap<SpaceIndex, Vec<PointEval>>) -> Vec<Pooled> {
+    let mut pool = Vec::new();
+    for (&idx, evs) in evaluated {
+        for (si, ev) in evs.iter().enumerate() {
+            if ev.feasible && ev.tcdp.is_finite() {
+                pool.push((ev.f1, ev.f2, ev.tcdp, si, idx));
+            }
+        }
+    }
+    pool
+}
+
+/// Feasible-tCDP incumbent: ties break to the earliest scenario, then
+/// the smallest index tuple — the same order [`SweepOutcome::best`] and
+/// `argmin_feasible` resolve ties in, so search and exhaustive agree.
+fn incumbent(pool: &[Pooled]) -> Option<&Pooled> {
+    pool.iter().min_by(|a, b| a.2.total_cmp(&b.2).then(a.3.cmp(&b.3)).then(a.4.cmp(&b.4)))
+}
+
+/// Largest power of two ≤ `(max_dim − 1) / (points_per_axis − 1)`.
+fn init_stride(dims: [usize; 4], points_per_axis: usize) -> usize {
+    let max_dim = dims.iter().copied().max().unwrap_or(1);
+    let target = ((max_dim.saturating_sub(1)) / points_per_axis.saturating_sub(1).max(1)).max(1);
+    let mut stride = 1;
+    while stride * 2 <= target {
+        stride *= 2;
+    }
+    stride
+}
+
+/// Per-axis lattice positions at `stride`, endpoints always included.
+fn lattice_axis(len: usize, stride: usize) -> Vec<usize> {
+    let mut ax: Vec<usize> = (0..len).step_by(stride).collect();
+    if *ax.last().expect("non-empty axis") != len - 1 {
+        ax.push(len - 1);
+    }
+    ax
+}
+
+/// The seed lattice, axis-major in `[mac ▸ sram ▸ stacking ▸ clock]`
+/// order.
+fn lattice(dims: [usize; 4], stride: usize) -> Vec<SpaceIndex> {
+    let axes: Vec<Vec<usize>> = dims.iter().map(|&d| lattice_axis(d, stride)).collect();
+    let mut out = Vec::new();
+    for &a in &axes[0] {
+        for &b in &axes[1] {
+            for &c in &axes[2] {
+                for &d in &axes[3] {
+                    out.push([a, b, c, d]);
+                }
+            }
+        }
+    }
+    out
+}
+
+/// Lattice neighbours of `pt` at `stride`: ± one step on each axis, plus
+/// the diagonal steps on the MAC×SRAM plane (axes 0 and 1) — the two
+/// axes with enough resolution for a basin to sit between axis lines.
+fn neighbors(pt: SpaceIndex, dims: [usize; 4], stride: usize) -> Vec<SpaceIndex> {
+    let mut out = Vec::with_capacity(12);
+    let step = stride as isize;
+    for ax in 0..4 {
+        for delta in [-step, step] {
+            let v = pt[ax] as isize + delta;
+            if v >= 0 && (v as usize) < dims[ax] {
+                let mut q = pt;
+                q[ax] = v as usize;
+                out.push(q);
+            }
+        }
+    }
+    for da in [-step, step] {
+        for db in [-step, step] {
+            let a = pt[0] as isize + da;
+            let b = pt[1] as isize + db;
+            if a >= 0 && (a as usize) < dims[0] && b >= 0 && (b as usize) < dims[1] {
+                let mut q = pt;
+                q[0] = a as usize;
+                q[1] = b as usize;
+                out.push(q);
+            }
+        }
+    }
+    out
+}
+
+/// Pooled feasible objective points of an exhaustively-swept outcome, in
+/// `(scenario, config)` scan order: the exhaustive counterpart of the
+/// search archive. Used by the oracle tests and the Fig 7 anchor to
+/// check `archive ⊆ exhaustive front`.
+pub fn pooled_objectives(outcome: &SweepOutcome) -> Vec<(usize, String, f64, f64)> {
+    let mut pool = Vec::new();
+    for (si, sc) in outcome.scenarios.iter().enumerate() {
+        let res = &sc.outcome.result;
+        for i in 0..res.c {
+            if res.metric(MetricRow::Feasible, i) > 0.5 {
+                let d = res.metric(MetricRow::Delay, i);
+                pool.push((
+                    si,
+                    res.names[i].clone(),
+                    res.metric(MetricRow::COp, i) * d,
+                    res.metric(MetricRow::CEmb, i) * d,
+                ));
+            }
+        }
+    }
+    pool
+}
+
+/// `(scenario, name)` pairs of the pooled Pareto front of an exhaustive
+/// sweep.
+pub fn exhaustive_front(outcome: &SweepOutcome) -> BTreeSet<(usize, String)> {
+    let pool = pooled_objectives(outcome);
+    let pts: Vec<(f64, f64)> = pool.iter().map(|p| (p.2, p.3)).collect();
+    pareto_front(&pts).into_iter().map(|i| (pool[i].0, pool[i].1.clone())).collect()
+}
+
+/// Run the adaptive search. `base` supplies everything but the configs
+/// (task matrix matching the evaluator's kernel set, QoS bounds, online
+/// mask, scenario defaults); `grid` is the scenario cross-product every
+/// candidate is scored under.
+pub fn search(
+    factory: &dyn EngineFactory,
+    space: &SearchSpace,
+    evaluator: &dyn SpaceEvaluator,
+    base: &EvalRequest,
+    grid: &ScenarioGrid,
+    cfg: &SearchConfig,
+) -> crate::Result<SearchOutcome> {
+    assert!(!space.is_empty(), "search space has an empty axis");
+    let dims = space.dims();
+    let scenario_labels: Vec<String> =
+        grid.scenarios().into_iter().map(|s| s.label).collect();
+    let n_scenarios = scenario_labels.len();
+
+    let mut rng = Rng::new(cfg.seed);
+    let mut stride = init_stride(dims, cfg.init_points_per_axis);
+    let mut evaluated: BTreeMap<SpaceIndex, Vec<PointEval>> = BTreeMap::new();
+    let mut names: BTreeMap<SpaceIndex, String> = BTreeMap::new();
+    let mut generations = 0usize;
+    let mut converged = false;
+    let mut engine: &'static str = factory.label();
+    let mut threads_used = 1usize;
+
+    // Seed generation: coarse lattice + seeded uniform samples.
+    let mut pending = lattice(dims, stride);
+    for _ in 0..cfg.random_samples {
+        pending.push(space.sample(&mut rng));
+    }
+
+    loop {
+        // Fresh candidates in first-seen order.
+        let mut fresh: Vec<SpaceIndex> = Vec::new();
+        let mut seen: BTreeSet<SpaceIndex> = BTreeSet::new();
+        for &p in &pending {
+            if !evaluated.contains_key(&p) && seen.insert(p) {
+                fresh.push(p);
+            }
+        }
+        if cfg.max_evals > 0 {
+            let budget = cfg.max_evals.saturating_sub(evaluated.len());
+            fresh.truncate(budget);
+        }
+
+        if !fresh.is_empty() {
+            generations += 1;
+            let points: Vec<DesignPoint> = fresh.iter().map(|&i| space.point(i)).collect();
+            let rows = evaluator.rows(&points);
+            assert_eq!(rows.len(), points.len(), "evaluator returned wrong row count");
+            let req = EvalRequest { configs: rows, ..shallow(base) };
+            let out = sweep(factory, &req, grid, &SweepConfig { threads: cfg.threads })?;
+            engine = out.engine;
+            threads_used = threads_used.max(out.threads);
+            for (si, sc) in out.scenarios.iter().enumerate() {
+                let res = &sc.outcome.result;
+                for (ci, &idx) in fresh.iter().enumerate() {
+                    let d = res.metric(MetricRow::Delay, ci);
+                    let ev = PointEval {
+                        f1: res.metric(MetricRow::COp, ci) * d,
+                        f2: res.metric(MetricRow::CEmb, ci) * d,
+                        tcdp: res.metric(MetricRow::Tcdp, ci),
+                        feasible: res.metric(MetricRow::Feasible, ci) > 0.5,
+                    };
+                    evaluated
+                        .entry(idx)
+                        .or_insert_with(|| Vec::with_capacity(n_scenarios))
+                        .push(ev);
+                    if si == 0 {
+                        names.insert(idx, res.names[ci].clone());
+                    }
+                }
+            }
+        }
+
+        let pool = feasible_pool(&evaluated);
+        let front_pts: Vec<(f64, f64)> = pool.iter().map(|p| (p.0, p.1)).collect();
+        let front_idx = pareto_front(&front_pts);
+
+        // Guide set: archive members (frontier mode), per-scenario tCDP
+        // leaders, and the incumbent best.
+        let mut guides: BTreeSet<SpaceIndex> = BTreeSet::new();
+        if cfg.frontier {
+            for &i in &front_idx {
+                guides.insert(pool[i].4);
+            }
+        }
+        for si in 0..n_scenarios {
+            let mut sc: Vec<&Pooled> = pool.iter().filter(|p| p.3 == si).collect();
+            sc.sort_by(|a, b| a.2.total_cmp(&b.2).then(a.4.cmp(&b.4)));
+            for p in sc.into_iter().take(cfg.guide_top_k) {
+                guides.insert(p.4);
+            }
+        }
+        if let Some(best) = incumbent(&pool) {
+            guides.insert(best.4);
+        }
+
+        // Next round: unevaluated lattice neighbours of the guides.
+        pending = Vec::new();
+        for &g in &guides {
+            for nb in neighbors(g, dims, stride) {
+                if !evaluated.contains_key(&nb) {
+                    pending.push(nb);
+                }
+            }
+        }
+
+        if pending.is_empty() {
+            if stride > 1 {
+                stride /= 2;
+                continue;
+            }
+            converged = true;
+            break;
+        }
+        if cfg.max_evals > 0 && evaluated.len() >= cfg.max_evals {
+            break;
+        }
+        if generations >= MAX_GENERATIONS {
+            break;
+        }
+    }
+
+    // Final archive + incumbent from the full evaluated set.
+    let pool = feasible_pool(&evaluated);
+    let front_pts: Vec<(f64, f64)> = pool.iter().map(|p| (p.0, p.1)).collect();
+    let mut front_idx = pareto_front(&front_pts);
+    front_idx.sort_by(|&a, &b| pool[a].0.total_cmp(&pool[b].0).then(pool[a].4.cmp(&pool[b].4)));
+    let archive: Vec<ArchivePoint> = front_idx
+        .into_iter()
+        .map(|i| {
+            let p = &pool[i];
+            ArchivePoint {
+                scenario: p.3,
+                scenario_label: scenario_labels[p.3].clone(),
+                index: p.4,
+                name: names[&p.4].clone(),
+                f1: p.0,
+                f2: p.1,
+                tcdp: p.2,
+            }
+        })
+        .collect();
+    let best = incumbent(&pool).map(|p| SearchBest {
+        scenario: p.3,
+        scenario_label: scenario_labels[p.3].clone(),
+        index: p.4,
+        name: names[&p.4].clone(),
+        tcdp: p.2,
+    });
+
+    Ok(SearchOutcome {
+        best,
+        archive,
+        evaluations: evaluated.len(),
+        space_size: space.len(),
+        generations,
+        converged,
+        engine,
+        threads: threads_used,
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::matrixform::TaskMatrix;
+    use crate::runtime::HostEngineFactory;
+
+    /// Synthetic smooth landscape: delay falls with MACs/SRAM/clock,
+    /// energy grows with MACs and clock (3-D cheaper), embodied grows
+    /// with silicon (3-D cheaper via yield) — the qualitative shape of
+    /// the real simulator surface, in closed form.
+    fn synth_row(p: &DesignPoint) -> ConfigRow {
+        let m = p.num_macs as f64;
+        let s = p.sram_bytes as f64 / (1024.0 * 1024.0);
+        let f = p.config.freq_hz;
+        let stacked = p.config.stacked_sram;
+        let d = 40.0 / (m.powf(0.7) * s.powf(0.15)) * (1.0e9 / f);
+        let e = 2e-4 * m.powf(0.3) * (f / 1.0e9).powi(2) * if stacked { 0.6 } else { 1.0 }
+            + 1e-3 / s.powf(0.1);
+        let emb_scale = if stacked { 0.82 } else { 1.0 };
+        ConfigRow {
+            name: p.label.clone(),
+            f_clk: f,
+            d_k: vec![d],
+            e_dyn: vec![e],
+            leak_w: 1e-6 * m + 1e-4 * s,
+            c_comp: vec![0.4 * m * emb_scale, 55.0 * s * emb_scale, 90.0],
+        }
+    }
+
+    fn synth_space() -> SearchSpace {
+        SearchSpace {
+            mac: vec![128, 256, 512, 1024, 2048, 3072, 4096],
+            sram: [0.5f64, 1.0, 2.0, 4.0, 8.0, 12.0, 16.0]
+                .iter()
+                .map(|&mb| (mb * 1024.0 * 1024.0) as u64)
+                .collect(),
+            stacking: vec![false, true],
+            clock: vec![0.8e9, 1.0e9, 1.2e9],
+        }
+    }
+
+    fn synth_base() -> EvalRequest {
+        EvalRequest {
+            tasks: TaskMatrix::single_task("t", vec!["k".into()], &[1.0]),
+            configs: Vec::new(),
+            online: vec![1.0, 1.0, 1.0],
+            qos: vec![f64::INFINITY],
+            ci_use_g_per_j: 1.2e-4,
+            lifetime_s: 1e6,
+            beta: 1.0,
+            p_max_w: f64::INFINITY,
+        }
+    }
+
+    fn synth_grid() -> ScenarioGrid {
+        ScenarioGrid::new()
+            .with_lifetime("lt=2e5s", 2e5)
+            .with_lifetime("lt=2e7s", 2e7)
+            .with_beta("b=1", 1.0)
+    }
+
+    fn synth_cfg() -> SearchConfig {
+        // 7-point axes: 4 points/axis gives stride 2 (stride 1 would be
+        // the exhaustive lattice).
+        SearchConfig { init_points_per_axis: 4, ..SearchConfig::default() }
+    }
+
+    /// Exhaustive reference over the same space/grid.
+    fn exhaustive(space: &SearchSpace) -> SweepOutcome {
+        let rows: Vec<ConfigRow> = space.enumerate().iter().map(synth_row).collect();
+        let req = EvalRequest { configs: rows, ..synth_base() };
+        crate::dse::sweep::sweep(&HostEngineFactory, &req, &synth_grid(), &SweepConfig::default())
+            .unwrap()
+    }
+
+    #[test]
+    fn finds_exhaustive_optimum_with_partial_coverage() {
+        let space = synth_space();
+        let ex = exhaustive(&space);
+        let (esi, eci, etcdp) = ex.best().expect("feasible optimum");
+        let ex_name = ex.scenarios[esi].outcome.result.names[eci].clone();
+
+        let out = search(
+            &HostEngineFactory,
+            &space,
+            &synth_row,
+            &synth_base(),
+            &synth_grid(),
+            &synth_cfg(),
+        )
+        .unwrap();
+        assert!(out.converged);
+        let best = out.best.expect("search found a feasible best");
+        assert_eq!(best.name, ex_name);
+        assert_eq!(best.scenario, esi);
+        assert_eq!(best.tcdp.to_bits(), etcdp.to_bits(), "search tCDP must be bit-exact");
+        assert!(
+            out.evaluations * 10 < out.space_size * 6,
+            "evaluated {}/{} (>60%)",
+            out.evaluations,
+            out.space_size
+        );
+        assert!(out.generations >= 1);
+    }
+
+    #[test]
+    fn archive_is_subset_of_exhaustive_front() {
+        let space = synth_space();
+        let ex = exhaustive(&space);
+        let front = exhaustive_front(&ex);
+        let out = search(
+            &HostEngineFactory,
+            &space,
+            &synth_row,
+            &synth_base(),
+            &synth_grid(),
+            &synth_cfg(),
+        )
+        .unwrap();
+        assert!(!out.archive.is_empty());
+        for a in &out.archive {
+            assert!(
+                front.contains(&(a.scenario, a.name.clone())),
+                "archive point ({}, {}) not on the exhaustive front",
+                a.scenario_label,
+                a.name
+            );
+        }
+        // Archive is sorted by ascending F1 and mutually non-dominated.
+        for w in out.archive.windows(2) {
+            assert!(w[0].f1 <= w[1].f1);
+            assert!(w[0].f2 >= w[1].f2, "archive not a front: {w:?}");
+        }
+    }
+
+    #[test]
+    fn deterministic_across_runs_and_thread_counts() {
+        let space = synth_space();
+        let run = |threads: usize| {
+            search(
+                &HostEngineFactory,
+                &space,
+                &synth_row,
+                &synth_base(),
+                &synth_grid(),
+                &SearchConfig { threads, ..synth_cfg() },
+            )
+            .unwrap()
+        };
+        let a = run(1);
+        let b = run(1);
+        let c = run(4);
+        for other in [&b, &c] {
+            assert_eq!(a.evaluations, other.evaluations);
+            assert_eq!(a.generations, other.generations);
+            assert_eq!(a.best, other.best);
+            assert_eq!(a.archive, other.archive);
+            assert_eq!(a.converged, other.converged);
+        }
+    }
+
+    #[test]
+    fn seed_changes_trajectory_not_correctness() {
+        let space = synth_space();
+        let ex = exhaustive(&space);
+        let (_, eci, _) = ex.best().unwrap();
+        let ex_name = ex.scenarios[ex.best().unwrap().0].outcome.result.names[eci].clone();
+        for seed in [1u64, 7, 42] {
+            let out = search(
+                &HostEngineFactory,
+                &space,
+                &synth_row,
+                &synth_base(),
+                &synth_grid(),
+                &SearchConfig { seed, ..synth_cfg() },
+            )
+            .unwrap();
+            assert_eq!(out.best.unwrap().name, ex_name, "seed {seed}");
+        }
+    }
+
+    #[test]
+    fn max_evals_caps_the_search() {
+        let space = synth_space();
+        let out = search(
+            &HostEngineFactory,
+            &space,
+            &synth_row,
+            &synth_base(),
+            &synth_grid(),
+            &SearchConfig { max_evals: 20, ..synth_cfg() },
+        )
+        .unwrap();
+        assert!(out.evaluations <= 20, "evaluated {}", out.evaluations);
+        assert!(!out.converged);
+        assert!(out.best.is_some(), "partial search still reports an incumbent");
+    }
+
+    #[test]
+    fn infeasible_space_yields_no_best() {
+        let space = synth_space();
+        let mut base = synth_base();
+        base.qos = vec![0.0]; // nothing can meet a zero delay bound
+        let out = search(
+            &HostEngineFactory,
+            &space,
+            &synth_row,
+            &base,
+            &synth_grid(),
+            &synth_cfg(),
+        )
+        .unwrap();
+        assert!(out.best.is_none());
+        assert!(out.archive.is_empty());
+        assert!(out.converged, "infeasible search still terminates");
+    }
+
+    #[test]
+    fn init_stride_matches_axis_resolution() {
+        assert_eq!(init_stride([11, 11, 1, 1], 6), 2);
+        assert_eq!(init_stride([41, 21, 2, 6], 6), 8);
+        assert_eq!(init_stride([7, 7, 2, 3], 4), 2);
+        assert_eq!(init_stride([2, 2, 1, 1], 6), 1);
+    }
+
+    #[test]
+    fn lattice_includes_endpoints() {
+        assert_eq!(lattice_axis(11, 2), vec![0, 2, 4, 6, 8, 10]);
+        assert_eq!(lattice_axis(11, 4), vec![0, 4, 8, 10]);
+        assert_eq!(lattice_axis(1, 2), vec![0]);
+        let l = lattice([11, 11, 1, 1], 4);
+        assert_eq!(l.len(), 16);
+        assert!(l.contains(&[10, 10, 0, 0]));
+    }
+
+    #[test]
+    fn neighbors_respect_bounds_and_stride() {
+        let nb = neighbors([0, 0, 0, 0], [11, 11, 2, 3], 2);
+        assert!(nb.contains(&[2, 0, 0, 0]));
+        assert!(nb.contains(&[0, 2, 0, 0]));
+        assert!(nb.contains(&[2, 2, 0, 0])); // diagonal on mac×sram
+        assert!(nb.iter().all(|q| q.iter().zip([11, 11, 2, 3]).all(|(&v, d)| v < d)));
+        // stacking axis has no stride-2 neighbour from 0 in a 2-long axis
+        assert!(!nb.iter().any(|q| q[2] != 0));
+        let nb1 = neighbors([5, 5, 0, 1], [11, 11, 2, 3], 1);
+        assert!(nb1.contains(&[5, 5, 1, 1]));
+        assert!(nb1.contains(&[5, 5, 0, 0]));
+        assert!(nb1.contains(&[4, 4, 0, 1]));
+        // 2 (mac) + 2 (sram) + 1 (stacking, lower edge) + 2 (clock) axis
+        // moves plus 4 mac×sram diagonals.
+        assert_eq!(nb1.len(), 11);
+    }
+}

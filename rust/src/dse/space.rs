@@ -1,11 +1,22 @@
-//! Design-space enumeration: the paper's 121-point MAC×SRAM grid.
+//! Design-space enumeration and parametric search spaces.
+//!
+//! The paper's Fig 7 sweep is a fixed 11×11 MAC×SRAM grid (121 points).
+//! [`SearchSpace`] generalizes it into a parametric axis product —
+//! MAC count × SRAM size × (2-D | stacked-SRAM 3-D) × clock — that
+//! [`super::search`] explores adaptively instead of exhaustively:
+//! [`SearchSpace::fig7_grid`] reproduces the legacy grid exactly
+//! (same labels, same [`AcceleratorConfig`]s, so results are
+//! bit-comparable against the exhaustive sweep), while
+//! [`SearchSpace::expanded_2d3d`] opens the ~10k-point 2-D/3-D space of
+//! §5.6 that exhaustive enumeration can no longer afford.
 
 use crate::accel::AcceleratorConfig;
+use crate::testkit::Rng;
 
 /// One grid point.
 #[derive(Debug, Clone)]
 pub struct DesignPoint {
-    /// Grid label ("K0512_M2.0").
+    /// Grid label ("K0512_M2.0", "3D_K2048_M8.0_F1.2").
     pub label: String,
     /// MAC count.
     pub num_macs: u32,
@@ -15,44 +26,152 @@ pub struct DesignPoint {
     pub config: AcceleratorConfig,
 }
 
-/// Half-octave MAC axis: 128 … 4096, 11 points.
-pub fn mac_axis() -> Vec<u32> {
-    let mut v = Vec::with_capacity(11);
-    let mut x = 128.0f64;
-    for _ in 0..11 {
-        v.push(x.round() as u32);
-        x *= std::f64::consts::SQRT_2;
+/// Index tuple into a [`SearchSpace`]: `[mac, sram, stacking, clock]`
+/// positions along the four axes.
+pub type SpaceIndex = [usize; 4];
+
+/// Geometric axis: `count` points from `start`, each `2^(1/per_octave)`
+/// apart (the paper's half-octave grid uses `per_octave = 2`).
+fn octave_axis(start: f64, count: usize, per_octave: u32) -> Vec<f64> {
+    let step = 2f64.powf(1.0 / per_octave as f64);
+    let mut v = Vec::with_capacity(count);
+    let mut x = start;
+    for _ in 0..count {
+        v.push(x);
+        x *= step;
     }
     v
+}
+
+/// Half-octave MAC axis: 128 … 4096, 11 points.
+pub fn mac_axis() -> Vec<u32> {
+    octave_axis(128.0, 11, 2).into_iter().map(|x| x.round() as u32).collect()
 }
 
 /// Half-octave SRAM axis: 0.5 MB … 16 MB, 11 points.
 pub fn sram_axis() -> Vec<u64> {
-    let mut v = Vec::with_capacity(11);
-    let mut x = 0.5f64;
-    for _ in 0..11 {
-        v.push((x * 1024.0 * 1024.0).round() as u64);
-        x *= std::f64::consts::SQRT_2;
-    }
-    v
+    octave_axis(0.5, 11, 2).into_iter().map(|x| (x * 1024.0 * 1024.0).round() as u64).collect()
 }
 
-/// The full 11×11 grid (121 candidate accelerators), MAC-major order.
-pub fn design_grid() -> Vec<DesignPoint> {
-    let mut out = Vec::with_capacity(121);
-    for &m in &mac_axis() {
-        for &s in &sram_axis() {
-            let mb = s as f64 / (1024.0 * 1024.0);
-            let label = format!("K{m:04}_M{mb:.1}");
-            out.push(DesignPoint {
-                label: label.clone(),
-                num_macs: m,
-                sram_bytes: s,
-                config: AcceleratorConfig::new_2d(&label, m, s),
-            });
+/// Eighth-octave MAC axis: 128 … 4096, 41 points (expanded space).
+pub fn mac_axis_fine() -> Vec<u32> {
+    octave_axis(128.0, 41, 8).into_iter().map(|x| x.round() as u32).collect()
+}
+
+/// Quarter-octave SRAM axis: 0.5 MB … 16 MB, 21 points (expanded space).
+pub fn sram_axis_fine() -> Vec<u64> {
+    octave_axis(0.5, 21, 4).into_iter().map(|x| (x * 1024.0 * 1024.0).round() as u64).collect()
+}
+
+/// A parametric accelerator design space: the cross-product of a MAC
+/// axis, an SRAM axis, a stacking axis (2-D baseline and/or stacked-SRAM
+/// 3-D with the F2F interface) and a clock axis. Candidates are addressed
+/// by [`SpaceIndex`] and materialized lazily through [`Self::point`] —
+/// the adaptive search never builds the full cross-product.
+#[derive(Debug, Clone)]
+pub struct SearchSpace {
+    /// MAC-count axis.
+    pub mac: Vec<u32>,
+    /// SRAM-bytes axis.
+    pub sram: Vec<u64>,
+    /// Stacking axis (`false` = 2-D LPDDR, `true` = 3-D stacked SRAM).
+    pub stacking: Vec<bool>,
+    /// Clock axis, Hz.
+    pub clock: Vec<f64>,
+}
+
+impl SearchSpace {
+    /// The paper's Fig 7 grid as a search space: 11×11 MAC×SRAM, 2-D,
+    /// 1 GHz. [`Self::enumerate`] reproduces [`design_grid`] exactly.
+    pub fn fig7_grid() -> Self {
+        SearchSpace {
+            mac: mac_axis(),
+            sram: sram_axis(),
+            stacking: vec![false],
+            clock: vec![1.0e9],
         }
     }
-    out
+
+    /// The expanded 2-D/3-D space: 41 MAC × 21 SRAM × {2-D, 3-D} ×
+    /// 6 clocks = 10 332 candidates — large enough that profiling every
+    /// point is off the table, which is what [`super::search`] is for.
+    pub fn expanded_2d3d() -> Self {
+        SearchSpace {
+            mac: mac_axis_fine(),
+            sram: sram_axis_fine(),
+            stacking: vec![false, true],
+            clock: vec![0.6e9, 0.8e9, 1.0e9, 1.2e9, 1.4e9, 1.6e9],
+        }
+    }
+
+    /// Axis lengths `[mac, sram, stacking, clock]`.
+    pub fn dims(&self) -> [usize; 4] {
+        [self.mac.len(), self.sram.len(), self.stacking.len(), self.clock.len()]
+    }
+
+    /// Total number of candidates in the cross-product.
+    pub fn len(&self) -> usize {
+        self.dims().iter().product()
+    }
+
+    /// True when any axis is empty.
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    /// Materialize the candidate at an index tuple. 2-D points at the
+    /// default 1 GHz clock keep the legacy grid label ("K0512_M2.0");
+    /// non-default axes append their markers ("3D_" prefix, "_F1.2"
+    /// clock suffix) so labels stay unique across the whole space.
+    pub fn point(&self, idx: SpaceIndex) -> DesignPoint {
+        let m = self.mac[idx[0]];
+        let s = self.sram[idx[1]];
+        let stacked = self.stacking[idx[2]];
+        let f = self.clock[idx[3]];
+        let mb = s as f64 / (1024.0 * 1024.0);
+        let mut label = format!("K{m:04}_M{mb:.1}");
+        if (f - 1.0e9).abs() > 1.0 {
+            label = format!("{label}_F{:.1}", f / 1e9);
+        }
+        if stacked {
+            label = format!("3D_{label}");
+        }
+        let mut config = if stacked {
+            AcceleratorConfig::new_3d(&label, m, s)
+        } else {
+            AcceleratorConfig::new_2d(&label, m, s)
+        };
+        config.freq_hz = f;
+        DesignPoint { label, num_macs: m, sram_bytes: s, config }
+    }
+
+    /// Draw a uniform index tuple (seeded sampling for search restarts).
+    pub fn sample(&self, rng: &mut Rng) -> SpaceIndex {
+        let d = self.dims();
+        [rng.below(d[0]), rng.below(d[1]), rng.below(d[2]), rng.below(d[3])]
+    }
+
+    /// Enumerate every candidate, axis-major in `[mac ▸ sram ▸ stacking ▸
+    /// clock]` order (the legacy MAC-major grid order).
+    pub fn enumerate(&self) -> Vec<DesignPoint> {
+        let mut out = Vec::with_capacity(self.len());
+        for mi in 0..self.mac.len() {
+            for si in 0..self.sram.len() {
+                for bi in 0..self.stacking.len() {
+                    for fi in 0..self.clock.len() {
+                        out.push(self.point([mi, si, bi, fi]));
+                    }
+                }
+            }
+        }
+        out
+    }
+}
+
+/// The full 11×11 grid (121 candidate accelerators), MAC-major order —
+/// the exhaustive Fig 7 space, now a [`SearchSpace::fig7_grid`] view.
+pub fn design_grid() -> Vec<DesignPoint> {
+    SearchSpace::fig7_grid().enumerate()
 }
 
 #[cfg(test)]
@@ -95,5 +214,79 @@ mod tests {
         assert!(e(10) > e(0));
         // Same SRAM, growing MACs: stride 11.
         assert!(e(110) > e(0));
+    }
+
+    #[test]
+    fn fig7_space_matches_legacy_grid() {
+        // The SearchSpace view must reproduce the exhaustive grid
+        // bit-for-bit: same labels, same configuration knobs.
+        let space = SearchSpace::fig7_grid();
+        assert_eq!(space.len(), 121);
+        assert_eq!(space.dims(), [11, 11, 1, 1]);
+        for (mi, &m) in space.mac.iter().enumerate() {
+            for (si, &s) in space.sram.iter().enumerate() {
+                let p = space.point([mi, si, 0, 0]);
+                let mb = s as f64 / (1024.0 * 1024.0);
+                assert_eq!(p.label, format!("K{m:04}_M{mb:.1}"));
+                assert_eq!(p.config.num_macs, m);
+                assert_eq!(p.config.sram_bytes, s);
+                assert_eq!(p.config.freq_hz, 1.0e9);
+                assert!(!p.config.stacked_sram);
+            }
+        }
+    }
+
+    #[test]
+    fn expanded_space_shape_and_labels() {
+        let space = SearchSpace::expanded_2d3d();
+        assert_eq!(space.dims(), [41, 21, 2, 6]);
+        assert_eq!(space.len(), 10_332);
+        assert_eq!(space.mac[0], 128);
+        assert_eq!(space.mac[40], 4096);
+        assert_eq!(space.sram[20], 16 * 1024 * 1024);
+        // Labels stay unique across the whole cross-product.
+        let mut labels: Vec<String> = space.enumerate().into_iter().map(|p| p.label).collect();
+        let n = labels.len();
+        labels.sort_unstable();
+        labels.dedup();
+        assert_eq!(labels.len(), n);
+    }
+
+    #[test]
+    fn stacked_points_use_f2f_interface() {
+        let space = SearchSpace::expanded_2d3d();
+        let flat = space.point([10, 10, 0, 2]);
+        let stacked = space.point([10, 10, 1, 2]);
+        assert!(!flat.config.stacked_sram);
+        assert!(stacked.config.stacked_sram);
+        assert!(stacked.label.starts_with("3D_"), "{}", stacked.label);
+        assert!(stacked.config.mem.bandwidth() > flat.config.mem.bandwidth());
+        assert_eq!(flat.num_macs, stacked.num_macs);
+    }
+
+    #[test]
+    fn clock_axis_shows_in_label_and_config() {
+        let space = SearchSpace::expanded_2d3d();
+        let slow = space.point([0, 0, 0, 0]);
+        assert_eq!(slow.config.freq_hz, 0.6e9);
+        assert!(slow.label.ends_with("_F0.6"), "{}", slow.label);
+        // 1 GHz keeps the legacy label (no suffix).
+        let nominal = space.point([0, 0, 0, 2]);
+        assert_eq!(nominal.config.freq_hz, 1.0e9);
+        assert_eq!(nominal.label, "K0128_M0.5");
+    }
+
+    #[test]
+    fn sampling_is_seeded_and_in_range() {
+        let space = SearchSpace::expanded_2d3d();
+        let mut a = Rng::new(9);
+        let mut b = Rng::new(9);
+        for _ in 0..64 {
+            let ia = space.sample(&mut a);
+            assert_eq!(ia, space.sample(&mut b));
+            for (x, d) in ia.iter().zip(space.dims()) {
+                assert!(*x < d);
+            }
+        }
     }
 }

@@ -21,5 +21,6 @@ pub mod fig13_core_configs;
 pub mod fig14_replacement;
 pub mod fig15_stacking;
 pub mod fig16_stacking_kernels;
+pub mod search_fig7;
 pub mod sweep_fig7;
 pub mod table5_vr_soc;

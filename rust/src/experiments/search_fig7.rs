@@ -1,0 +1,183 @@
+//! Adaptive search anchored on Fig 7, plus the expanded 2-D/3-D space.
+//!
+//! Two entries:
+//!
+//! * [`run`] — the correctness anchor: the same 121-point grid and
+//!   embodied-share scenarios as [`super::sweep_fig7`], explored by
+//!   [`crate::dse::search`] instead of exhaustively. The search must
+//!   reproduce the exhaustive feasible-tCDP optimum **exactly** (per-
+//!   config arithmetic is batch-position-independent, so the tCDP values
+//!   are bit-comparable) while evaluating well under the full grid —
+//!   locked at ≤ 60 % by `rust/tests/experiments_e2e.rs`.
+//! * [`run_expanded`] — the scaling payoff: the ~10k-point
+//!   [`SearchSpace::expanded_2d3d`] space (MAC × SRAM × 2-D/3-D × clock)
+//!   that exhaustive profiling cannot afford. On XR workloads the §5.6
+//!   stacking win emerges from search: the optimum is a 3-D stacked
+//!   design, found after evaluating a few percent of the space.
+
+use crate::carbon::FabGrid;
+use crate::dse::grid::{ScenarioGrid, YEAR_S};
+use crate::dse::search::{
+    search, ReplayEvaluator, SearchConfig, SearchOutcome, SimulatorEvaluator,
+};
+use crate::dse::space::SearchSpace;
+use crate::dse::sweep::{sweep, SweepConfig, SweepOutcome};
+use crate::matrixform::EvalRequest;
+use crate::report::{search_archive_table, search_table, Table};
+use crate::runtime::EngineFactory;
+use crate::workloads::{cluster_workloads, Cluster};
+
+use super::common::rows_request;
+use super::sweep_fig7::profile_cluster;
+
+/// Anchor output: exhaustive reference + search outcome on one cluster.
+pub struct SearchFig7 {
+    /// Cluster the spaces were profiled on.
+    pub cluster: Cluster,
+    /// Exhaustive 121-point sweep (the reference the search must hit).
+    pub exhaustive: SweepOutcome,
+    /// Adaptive search over the same space and scenarios.
+    pub outcome: SearchOutcome,
+    /// Comparison table (exhaustive vs search optimum, evaluations).
+    pub table: Table,
+}
+
+/// Run the Fig 7 anchor: exhaustive sweep and adaptive search over the
+/// identical 121-point space and embodied-share scenario grid. `cfg`
+/// carries the search knobs (seed, budget, threads); its `threads` also
+/// drive the exhaustive reference sweep.
+pub fn run(
+    factory: &dyn EngineFactory,
+    cluster: Cluster,
+    cfg: &SearchConfig,
+) -> crate::Result<SearchFig7> {
+    let space = profile_cluster(cluster);
+    let grid = ScenarioGrid::fig7(&space.rows, &space.tasks, space.ci_use_g_per_j);
+    let exhaustive = sweep(factory, &space.base, &grid, &SweepConfig { threads: cfg.threads })?;
+
+    // The exhaustive reference already profiled the whole grid; the
+    // search replays those rows instead of re-running the simulator
+    // (bit-identical — rows are keyed by the shared grid labels).
+    let sspace = SearchSpace::fig7_grid();
+    let evaluator = ReplayEvaluator::new(&space.rows);
+    let outcome = search(factory, &sspace, &evaluator, &space.base, &grid, cfg)?;
+
+    let mut table = Table::new(
+        &format!(
+            "Fig 7 search anchor [{}] — {} of {} grid points evaluated",
+            cluster.label(),
+            outcome.evaluations,
+            outcome.space_size
+        ),
+        &["path", "scenario", "optimal design", "tCDP [g*s]", "evaluations"],
+    );
+    if let Some((si, ci, v)) = exhaustive.best() {
+        table.row(&[
+            "exhaustive".into(),
+            exhaustive.scenarios[si].label.clone(),
+            exhaustive.scenarios[si].outcome.result.names[ci].clone(),
+            format!("{v:.3e}"),
+            outcome.space_size.to_string(),
+        ]);
+    }
+    if let Some(b) = &outcome.best {
+        table.row(&[
+            "search".into(),
+            b.scenario_label.clone(),
+            b.name.clone(),
+            format!("{:.3e}", b.tcdp),
+            outcome.evaluations.to_string(),
+        ]);
+    }
+    Ok(SearchFig7 { cluster, exhaustive, outcome, table })
+}
+
+/// Expanded-space output.
+pub struct SearchExpanded {
+    /// Cluster the candidates are profiled on.
+    pub cluster: Cluster,
+    /// The search outcome over [`SearchSpace::expanded_2d3d`].
+    pub outcome: SearchOutcome,
+    /// Summary table.
+    pub table: Table,
+    /// Archive table (pooled Pareto front).
+    pub archive_table: Table,
+}
+
+/// The expanded-space scenario grid: a heavy-use year of operational
+/// life against a hundredth of it (operational- vs embodied-leaning),
+/// fixed lifetimes — no calibration pass over the space is needed (or
+/// affordable) at this scale.
+pub fn expanded_grid() -> ScenarioGrid {
+    ScenarioGrid::new()
+        .with_lifetime("LT=1y", YEAR_S)
+        .with_lifetime("LT=1y/100", YEAR_S / 100.0)
+}
+
+/// Search the expanded 2-D/3-D space on a cluster's kernels.
+pub fn run_expanded(
+    factory: &dyn EngineFactory,
+    cluster: Cluster,
+    cfg: &SearchConfig,
+) -> crate::Result<SearchExpanded> {
+    let sspace = SearchSpace::expanded_2d3d();
+    let workloads = cluster_workloads(cluster);
+    let evaluator = SimulatorEvaluator { workloads: workloads.clone(), fab: FabGrid::Coal };
+    // Shell request: the search fills configs per generation.
+    let base: EvalRequest = rows_request(Vec::new(), &workloads, YEAR_S, 1.0);
+    let outcome = search(factory, &sspace, &evaluator, &base, &expanded_grid(), cfg)?;
+    let mut table = search_table(&outcome);
+    table.title = format!("Expanded 2-D/3-D space [{}] — {}", cluster.label(), table.title);
+    let archive_table = search_archive_table(&outcome);
+    Ok(SearchExpanded { cluster, outcome, table, archive_table })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::dse::search::exhaustive_front;
+    use crate::runtime::HostEngineFactory;
+
+    fn two_threads() -> SearchConfig {
+        SearchConfig { threads: 2, ..SearchConfig::default() }
+    }
+
+    #[test]
+    fn anchor_search_matches_exhaustive_optimum_exactly() {
+        let f = run(&HostEngineFactory, Cluster::Ai5, &two_threads()).unwrap();
+        let (esi, eci, etcdp) = f.exhaustive.best().expect("exhaustive optimum");
+        let best = f.outcome.best.as_ref().expect("search optimum");
+        assert_eq!(best.name, f.exhaustive.scenarios[esi].outcome.result.names[eci]);
+        assert_eq!(best.scenario_label, f.exhaustive.scenarios[esi].label);
+        assert_eq!(best.tcdp.to_bits(), etcdp.to_bits());
+        assert!(f.outcome.converged);
+        assert_eq!(f.outcome.space_size, 121);
+        assert_eq!(f.table.len(), 2);
+    }
+
+    #[test]
+    fn anchor_search_stays_under_60_percent_of_grid() {
+        let f = run(&HostEngineFactory, Cluster::Ai5, &two_threads()).unwrap();
+        assert!(
+            f.outcome.evaluations * 10 <= f.outcome.space_size * 6,
+            "evaluated {}/{}",
+            f.outcome.evaluations,
+            f.outcome.space_size
+        );
+    }
+
+    #[test]
+    fn anchor_archive_is_subset_of_exhaustive_front() {
+        let f = run(&HostEngineFactory, Cluster::Ai5, &two_threads()).unwrap();
+        let front = exhaustive_front(&f.exhaustive);
+        assert!(!f.outcome.archive.is_empty());
+        for a in &f.outcome.archive {
+            assert!(
+                front.contains(&(a.scenario, a.name.clone())),
+                "({}, {}) not on exhaustive front",
+                a.scenario_label,
+                a.name
+            );
+        }
+    }
+}

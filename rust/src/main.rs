@@ -4,16 +4,17 @@
 //! mirror.
 
 use xrcarbon::cli::Args;
+use xrcarbon::dse::search::SearchConfig;
 use xrcarbon::dse::sweep::{sweep, SweepConfig};
 use xrcarbon::dse::ScenarioGrid;
 use xrcarbon::experiments::{
     common::Ctx, fig01_metric_comparison, fig02_retrospective, fig03_fleet_categories,
     fig04_power_embodied, fig07_dse_clusters, fig08_tcdp_vs_edp, fig09_accelerators,
     fig10_lifetime_crossover, fig11_provisioning_savings, fig12_tlp_breakdown,
-    fig13_core_configs, fig14_replacement, fig15_stacking, fig16_stacking_kernels, sweep_fig7,
-    table5_vr_soc,
+    fig13_core_configs, fig14_replacement, fig15_stacking, fig16_stacking_kernels, search_fig7,
+    sweep_fig7, table5_vr_soc,
 };
-use xrcarbon::report::{sweep_best_table, sweep_table, write_csv};
+use xrcarbon::report::{search_archive_table, sweep_best_table, sweep_table, write_csv};
 use xrcarbon::runtime::{auto_factory, EngineFactory, HostEngineFactory};
 use xrcarbon::workloads::{Cluster, FleetConfig};
 
@@ -49,6 +50,12 @@ COMMANDS
                        fig10    operational lifetime 1e3..1e8 s (alias: lifetime)
                        fig11    provisioning lifetimes 1-3y x QoS on/off
                        ci       CI diversity (world|us|coal|renewable grids)
+              --search  adaptive Pareto-guided search instead of exhaustive
+                        enumeration                [--space fig7|expanded
+                                                    --seed N  --max-evals N]
+                        fig7:     121-point anchor, prints exhaustive-vs-search
+                        expanded: ~10k-point 2-D/3-D space (MAC x SRAM x
+                                  stacking x clock), search only
   all         run everything above in order
 ";
 
@@ -80,7 +87,41 @@ fn cluster_for(args: &Args) -> anyhow::Result<Cluster> {
     Cluster::parse(name).ok_or_else(|| anyhow::anyhow!("unknown cluster '{name}'"))
 }
 
+fn run_search(args: &Args) -> anyhow::Result<()> {
+    // Scenario grids are fixed per search space; a silently ignored
+    // --preset would hand back results for the wrong grid.
+    if args.options.contains_key("preset") {
+        anyhow::bail!("--preset is incompatible with --search (choose --space fig7|expanded)");
+    }
+    let factory = factory_for(args);
+    println!("[engine: {}]", factory.label());
+    let cfg = SearchConfig {
+        threads: args.get_usize("threads", 0)?,
+        seed: args.get_u64("seed", 0xC0FFEE)?,
+        max_evals: args.get_usize("max-evals", 0)?,
+        ..SearchConfig::default()
+    };
+    match args.get("space", "fig7") {
+        "fig7" => {
+            // Anchor mode: exhaustive reference + search on the 121 grid.
+            let f = search_fig7::run(factory.as_ref(), cluster_for(args)?, &cfg)?;
+            emit(args, "search_fig7", &f.table)?;
+            print!("{}", search_archive_table(&f.outcome).render());
+        }
+        "expanded" => {
+            let f = search_fig7::run_expanded(factory.as_ref(), cluster_for(args)?, &cfg)?;
+            emit(args, "search_expanded", &f.table)?;
+            print!("{}", f.archive_table.render());
+        }
+        other => anyhow::bail!("unknown search space '{other}' (fig7|expanded)"),
+    }
+    Ok(())
+}
+
 fn run_sweep(args: &Args) -> anyhow::Result<()> {
+    if args.has_flag("search") {
+        return run_search(args);
+    }
     let factory = factory_for(args);
     println!("[engine: {}]", factory.label());
     let threads = args.get_usize("threads", 0)?;

@@ -1,0 +1,125 @@
+//! Rendering [`SearchOutcome`]s: the run-summary table (coverage,
+//! convergence, incumbent) and the pooled Pareto-archive table the CLI
+//! `sweep --search` subcommand prints.
+
+use crate::dse::search::SearchOutcome;
+
+use super::Table;
+
+/// Search run summary: one row for the incumbent optimum plus the
+/// coverage/convergence counters in the title.
+pub fn search_table(out: &SearchOutcome) -> Table {
+    let coverage = if out.space_size == 0 {
+        0.0
+    } else {
+        100.0 * out.evaluations as f64 / out.space_size as f64
+    };
+    let mut t = Table::new(
+        &format!(
+            "Adaptive search — {} of {} candidates evaluated ({:.1}%), {} generation(s), {}, {} engine, {} thread(s)",
+            out.evaluations,
+            out.space_size,
+            coverage,
+            out.generations,
+            if out.converged { "converged" } else { "budget-stopped" },
+            out.engine,
+            out.threads
+        ),
+        &["scenario", "optimal design", "tCDP [g*s]"],
+    );
+    match &out.best {
+        Some(b) => t.row(&[b.scenario_label.clone(), b.name.clone(), format!("{:.3e}", b.tcdp)]),
+        None => t.row(&["-".into(), "no feasible design".into(), "-".into()]),
+    }
+    t
+}
+
+/// Pooled Pareto archive: one row per non-dominated `(scenario, design)`
+/// objective pair, ascending `F₁`.
+pub fn search_archive_table(out: &SearchOutcome) -> Table {
+    let mut t = Table::new(
+        "Search archive — pooled Pareto front of (F1 = C_op*D, F2 = C_emb*D)",
+        &["scenario", "design", "F1 [g*s]", "F2 [g*s]", "tCDP [g*s]"],
+    );
+    for a in &out.archive {
+        t.row(&[
+            a.scenario_label.clone(),
+            a.name.clone(),
+            format!("{:.3e}", a.f1),
+            format!("{:.3e}", a.f2),
+            format!("{:.3e}", a.tcdp),
+        ]);
+    }
+    t
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::dse::search::{search, SearchConfig};
+    use crate::dse::space::{DesignPoint, SearchSpace};
+    use crate::dse::ScenarioGrid;
+    use crate::matrixform::{ConfigRow, EvalRequest, TaskMatrix};
+    use crate::runtime::HostEngineFactory;
+
+    fn outcome() -> SearchOutcome {
+        let space = SearchSpace {
+            mac: vec![128, 512, 2048, 4096],
+            sram: vec![1 << 20, 4 << 20, 16 << 20],
+            stacking: vec![false],
+            clock: vec![1.0e9],
+        };
+        let row = |p: &DesignPoint| {
+            let m = p.num_macs as f64;
+            ConfigRow {
+                name: p.label.clone(),
+                f_clk: 1e9,
+                d_k: vec![10.0 / m],
+                e_dyn: vec![1e-3 * m.sqrt()],
+                leak_w: 0.0,
+                c_comp: vec![0.4 * m, 0.0, 50.0],
+            }
+        };
+        let base = EvalRequest {
+            tasks: TaskMatrix::single_task("t", vec!["k".into()], &[1.0]),
+            configs: Vec::new(),
+            online: vec![1.0, 1.0, 1.0],
+            qos: vec![f64::INFINITY],
+            ci_use_g_per_j: 1.2e-4,
+            lifetime_s: 1e6,
+            beta: 1.0,
+            p_max_w: f64::INFINITY,
+        };
+        let grid = ScenarioGrid::new().with_lifetime("a", 1e5).with_lifetime("b", 1e7);
+        search(
+            &HostEngineFactory,
+            &space,
+            &row,
+            &base,
+            &grid,
+            &SearchConfig { init_points_per_axis: 3, ..SearchConfig::default() },
+        )
+        .unwrap()
+    }
+
+    #[test]
+    fn summary_table_reports_coverage_and_best() {
+        let out = outcome();
+        let t = search_table(&out);
+        assert_eq!(t.len(), 1);
+        let rendered = t.render();
+        assert!(rendered.contains("candidates evaluated"));
+        assert!(rendered.contains("host"));
+        assert!(rendered.contains(&out.best.as_ref().unwrap().name));
+    }
+
+    #[test]
+    fn archive_table_has_one_row_per_front_point() {
+        let out = outcome();
+        let t = search_archive_table(&out);
+        assert_eq!(t.len(), out.archive.len());
+        assert!(!out.archive.is_empty());
+        let rendered = t.render();
+        assert!(rendered.contains(&out.archive[0].name));
+    }
+}

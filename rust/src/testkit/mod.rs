@@ -7,10 +7,12 @@
 //! runner ([`forall`], [`forall_cfg`]) with deterministic case generation
 //! and first-failure reporting. All fleet-telemetry synthesis in
 //! [`crate::workloads`] is seeded through this module so every experiment
-//! is exactly reproducible.
+//! is exactly reproducible. Property-test seeds can be overridden with
+//! the `XRCARBON_TEST_SEED` environment variable ([`SEED_ENV`]) to replay
+//! a reported failure.
 
 mod prng;
 mod prop;
 
 pub use prng::Rng;
-pub use prop::{forall, forall_cfg, PropConfig};
+pub use prop::{forall, forall_cfg, parse_seed, PropConfig, SEED_ENV};

@@ -6,21 +6,75 @@
 //! run for `cases` iterations and the first failing case (with its
 //! iteration index and debug rendering) is reported. No shrinking — cases
 //! are kept small by construction instead.
+//!
+//! ## Replaying failures
+//!
+//! Every failure report names the seed that produced it, and the
+//! `XRCARBON_TEST_SEED` environment variable overrides the seed of every
+//! `forall`/`forall_cfg` run (both the default and explicitly configured
+//! seeds), so any `prop_*` failure replays with
+//!
+//! ```text
+//! XRCARBON_TEST_SEED=0x… cargo test -q prop_name
+//! ```
+//!
+//! The hint is printed on *any* panic inside the generator or property —
+//! `assert!` failures inside a property included, not just `false`
+//! returns — via a panic-aware drop guard.
 
 use super::Rng;
+
+/// Environment variable that overrides every property-test seed.
+pub const SEED_ENV: &str = "XRCARBON_TEST_SEED";
 
 /// Configuration for [`forall_cfg`].
 #[derive(Debug, Clone, Copy)]
 pub struct PropConfig {
     /// Number of generated cases.
     pub cases: usize,
-    /// Base seed; each case uses a fork of this stream.
+    /// Base seed; each case uses a fork of this stream. Overridden by
+    /// [`SEED_ENV`] when set.
     pub seed: u64,
 }
 
 impl Default for PropConfig {
     fn default() -> Self {
         PropConfig { cases: 256, seed: 0xC0FFEE }
+    }
+}
+
+/// Parse a seed value: decimal ("48879") or hex with prefix ("0xBEEF").
+pub fn parse_seed(s: &str) -> Option<u64> {
+    let s = s.trim();
+    if let Some(hex) = s.strip_prefix("0x").or_else(|| s.strip_prefix("0X")) {
+        u64::from_str_radix(hex, 16).ok()
+    } else {
+        s.parse().ok()
+    }
+}
+
+/// The seed a run will actually use: the [`SEED_ENV`] override when set
+/// (and parseable), the configured seed otherwise.
+fn effective_seed(configured: u64) -> u64 {
+    std::env::var(SEED_ENV).ok().and_then(|v| parse_seed(&v)).unwrap_or(configured)
+}
+
+/// Prints the replay recipe if dropped while panicking — this is what
+/// makes `assert!`-style failures inside a property replayable, not just
+/// `false` returns.
+struct ReplayHint {
+    seed: u64,
+    case: usize,
+}
+
+impl Drop for ReplayHint {
+    fn drop(&mut self) {
+        if std::thread::panicking() {
+            eprintln!(
+                "property failed at case {} (seed {:#x}) — replay with {}={:#x}",
+                self.case, self.seed, SEED_ENV, self.seed
+            );
+        }
     }
 }
 
@@ -43,14 +97,20 @@ where
     G: Fn(&mut Rng) -> T,
     P: Fn(&T) -> bool,
 {
-    let mut root = Rng::new(cfg.seed);
+    let seed = effective_seed(cfg.seed);
+    let mut root = Rng::new(seed);
     for i in 0..cfg.cases {
+        let hint = ReplayHint { seed, case: i };
         let mut case_rng = root.fork(i as u64);
         let case = gen(&mut case_rng);
-        if !prop(&case) {
+        let ok = prop(&case);
+        // Disarm before the explicit panic below — the guard is for
+        // panics *inside* gen/prop, where no report exists yet.
+        std::mem::forget(hint);
+        if !ok {
             panic!(
-                "property failed at case {}/{} (seed {:#x}):\n{:#?}",
-                i, cfg.cases, cfg.seed, case
+                "property failed at case {}/{} (seed {:#x}; replay with {}={:#x}):\n{:#?}",
+                i, cfg.cases, seed, SEED_ENV, seed, case
             );
         }
     }
@@ -81,6 +141,12 @@ mod tests {
     }
 
     #[test]
+    #[should_panic(expected = "XRCARBON_TEST_SEED")]
+    fn failure_message_names_the_replay_env_var() {
+        forall_cfg(PropConfig { cases: 8, seed: 99 }, |r| r.below(10), |_| false);
+    }
+
+    #[test]
     fn deterministic_given_seed() {
         let collect = |seed: u64| {
             let out = std::cell::RefCell::new(Vec::new());
@@ -96,5 +162,27 @@ mod tests {
         };
         assert_eq!(collect(42), collect(42));
         assert_ne!(collect(42), collect(43));
+    }
+
+    #[test]
+    fn parse_seed_accepts_decimal_and_hex() {
+        assert_eq!(parse_seed("48879"), Some(48879));
+        assert_eq!(parse_seed("0xBEEF"), Some(0xBEEF));
+        assert_eq!(parse_seed("0XbeEf"), Some(0xBEEF));
+        assert_eq!(parse_seed(" 7 "), Some(7));
+        assert_eq!(parse_seed("0x"), None);
+        assert_eq!(parse_seed("nope"), None);
+        assert_eq!(parse_seed(""), None);
+    }
+
+    #[test]
+    fn env_override_only_applies_when_parseable() {
+        // Pure-logic check (no env mutation — tests run in parallel):
+        // effective_seed falls back to the configured value when the
+        // variable is unset, which is the only state we can rely on here;
+        // the parse path is covered by parse_seed_accepts_decimal_and_hex.
+        if std::env::var(SEED_ENV).is_err() {
+            assert_eq!(super::effective_seed(1234), 1234);
+        }
     }
 }

@@ -1,27 +1,52 @@
-//! Integration: every experiment regenerates through the PJRT engine
-//! (when artifacts are present) and the paper's headline quantitative
-//! claims hold on the real AOT path, not just the host mirror.
+//! Integration: every experiment regenerates end-to-end and the paper's
+//! headline quantitative claims hold. When the PJRT AOT artifacts are
+//! present the engine-backed experiments run on the real AOT path; when
+//! they are absent the host engine mirror is used as a fallback instead
+//! of skipping the test outright (the claims hold on either engine —
+//! pjrt-vs-host stays within a 1e-5 envelope by construction).
+//!
+//! The engine-free figures (fig2/3/4/9/12/14/table5) intentionally
+//! re-assert the same paper-claim thresholds their module unit tests
+//! lock: this file is the single place that walks *every* experiment's
+//! public entry the way the CLI does, so a threshold retune must touch
+//! the module test and the claim here together, by design.
 
 use xrcarbon::accel::Workload;
+use xrcarbon::dse::search::exhaustive_front;
 use xrcarbon::experiments::common::Ctx;
 use xrcarbon::experiments::{
-    fig01_metric_comparison, fig07_dse_clusters, fig08_tcdp_vs_edp, fig10_lifetime_crossover,
-    fig11_provisioning_savings, fig13_core_configs, fig15_stacking, fig16_stacking_kernels,
+    fig01_metric_comparison, fig02_retrospective, fig03_fleet_categories, fig04_power_embodied,
+    fig07_dse_clusters, fig08_tcdp_vs_edp, fig09_accelerators, fig10_lifetime_crossover,
+    fig11_provisioning_savings, fig12_tlp_breakdown, fig13_core_configs, fig14_replacement,
+    fig15_stacking, fig16_stacking_kernels, search_fig7, table5_vr_soc,
 };
-use xrcarbon::workloads::Cluster;
+use xrcarbon::runtime::{auto_factory, EngineFactory};
+use xrcarbon::soc::VrSoc;
+use xrcarbon::workloads::{Cluster, FleetConfig};
 
-fn pjrt_ctx() -> Option<Ctx> {
+/// PJRT when artifacts are built, host fallback otherwise — the
+/// experiment runs either way.
+fn engine_ctx() -> Ctx {
     let ctx = Ctx::auto();
     if ctx.backend != "pjrt" {
-        eprintln!("SKIP: artifacts not built (run `make artifacts`)");
-        return None;
+        eprintln!("note: PJRT artifacts absent — running on the host-engine fallback");
     }
-    Some(ctx)
+    ctx
+}
+
+/// Factory counterpart of [`engine_ctx`] for the sweep/search paths.
+fn engine_factory() -> Box<dyn EngineFactory> {
+    auto_factory(xrcarbon::experiments::common::ARTIFACTS_DIR)
+}
+
+/// Small fleet config so the trace-driven figures stay fast in CI.
+fn fleet_cfg() -> FleetConfig {
+    FleetConfig { devices: 150, days: 10, ..Default::default() }
 }
 
 #[test]
-fn fig7_headline_claims_on_pjrt() {
-    let Some(mut ctx) = pjrt_ctx() else { return };
+fn fig7_headline_claims() {
+    let mut ctx = engine_ctx();
     let f = fig07_dse_clusters::run(ctx.engine.as_mut()).unwrap();
     assert_eq!(f.panels.len(), 3);
 
@@ -55,8 +80,8 @@ fn fig7_headline_claims_on_pjrt() {
 }
 
 #[test]
-fn fig8_and_fig1_on_pjrt() {
-    let Some(mut ctx) = pjrt_ctx() else { return };
+fn fig8_and_fig1_claims() {
+    let mut ctx = engine_ctx();
     let f8 = fig08_tcdp_vs_edp::run(ctx.engine.as_mut()).unwrap();
     assert!(f8.rows.iter().all(|r| r.gain >= 1.0));
     assert!(f8.rows.iter().any(|r| r.gain > 1.3));
@@ -72,8 +97,115 @@ fn fig8_and_fig1_on_pjrt() {
 }
 
 #[test]
-fn fig10_crossovers_on_pjrt() {
-    let Some(mut ctx) = pjrt_ctx() else { return };
+fn fig2_retrospective_claims() {
+    // Paper Fig 2: the EDP winner is the newest part on both panels,
+    // while the carbon-aware metrics move the star to older/leaner parts.
+    let cpus = fig02_retrospective::run_cpus();
+    let star = |p: &fig02_retrospective::Fig02Panel, metric: &str| {
+        let (_, _, idx) = p.metrics.iter().find(|(m, _, _)| *m == metric).unwrap();
+        p.names[*idx].clone()
+    };
+    assert_eq!(star(&cpus, "EDP"), "EPYC-7702");
+    assert_eq!(star(&cpus, "CDP"), "E5-2680");
+    assert_eq!(star(&cpus, "CEP"), "E-2234");
+
+    let socs = fig02_retrospective::run_socs();
+    assert_eq!(star(&socs, "EDP"), "Snapdragon-865");
+    assert_eq!(star(&socs, "CDP"), "Snapdragon-835");
+    assert_eq!(star(&socs, "CEP"), "Snapdragon-855");
+    assert_eq!(socs.table.len(), 3);
+}
+
+#[test]
+fn fig3_fleet_categorization_claims() {
+    // Paper §2.1: the top-10 apps dominate fleet compute cycles and
+    // gaming leads the category split.
+    let f = fig03_fleet_categories::run(&fleet_cfg());
+    assert!(
+        f.summary.top10_cycle_share > 0.82,
+        "top-10 share = {}",
+        f.summary.top10_cycle_share
+    );
+    let [g, sg, ..] = f.summary.category_share;
+    assert!(g > sg, "gaming {g} must lead social {sg}");
+    assert_eq!(f.table.len(), 5);
+}
+
+#[test]
+fn fig4_unused_embodied_claims() {
+    // Paper §1/§2.2: "over 60%" of CPU+GPU embodied carbon sits unused;
+    // per-app power stays well under TDP.
+    let f = fig04_power_embodied::run(&fleet_cfg(), &VrSoc::default());
+    assert_eq!(f.rows.len(), 10);
+    assert!(f.mean_unused_share > 0.5, "mean unused share = {}", f.mean_unused_share);
+    for r in &f.rows {
+        let (p5, mean, p95) = r.power_frac;
+        assert!(p5 <= mean && mean <= p95);
+        assert!(p95 <= 1.0, "{}: p95 power above TDP", r.name);
+        assert!(r.utilized_g > 0.0 && r.unused_g > 0.0);
+    }
+}
+
+#[test]
+fn fig9_accelerator_claims() {
+    // Paper Fig 9: A-2 is the fastest by ~4-5.5x; A-1 carries the least
+    // embodied carbon, A-2 the most.
+    let f = fig09_accelerators::run();
+    let row = |name: &str| f.rows.iter().find(|r| r.name == name).unwrap();
+    let (a1, a2, a3, a4) = (row("A-1"), row("A-2"), row("A-3"), row("A-4"));
+    assert!(a2.total_delay_s < a1.total_delay_s.min(a3.total_delay_s).min(a4.total_delay_s));
+    let r12 = a1.total_delay_s / a2.total_delay_s;
+    assert!((3.0..9.0).contains(&r12), "A-1/A-2 delay ratio = {r12}");
+    assert!(a2.embodied_g > a3.embodied_g && a3.embodied_g > a4.embodied_g);
+    assert!(a4.embodied_g > a1.embodied_g);
+    let e21 = a2.embodied_g / a1.embodied_g;
+    assert!((2.5..6.5).contains(&e21), "A-2/A-1 embodied ratio = {e21}");
+}
+
+#[test]
+fn fig12_tlp_claims() {
+    // Paper §5.4: per-app TLP between 3.52 and 4.15, averaging ~3.9,
+    // and the synthetic fleet observation tracks the model.
+    let f = fig12_tlp_breakdown::run(&fleet_cfg());
+    assert_eq!(f.rows.len(), 4);
+    assert!((3.7..4.1).contains(&f.avg_tlp), "avg TLP = {}", f.avg_tlp);
+    for (name, tlp, observed, frac) in &f.rows {
+        assert!((3.4..4.3).contains(tlp), "{name}: TLP = {tlp}");
+        assert!((tlp - observed).abs() < 0.4, "{name}: model {tlp} vs fleet {observed}");
+        let total: f64 = frac.iter().sum();
+        assert!((total - 1.0).abs() < 1e-5, "{name}: fractions sum to {total}");
+    }
+}
+
+#[test]
+fn fig14_replacement_claims() {
+    // Paper Fig 14: heavier daily use shortens the carbon-optimal
+    // replacement period (1h -> 5y, 12h -> <=3y), with substantial
+    // savings between the optimal and worst periods.
+    let f = fig14_replacement::run();
+    let opts: Vec<f64> = f.panels.iter().map(|p| p.optimal_years).collect();
+    assert_eq!(opts[0], 5.0, "1h/day optimum");
+    assert!(opts[2] <= 3.0, "12h/day optimum = {}", opts[2]);
+    assert!(opts[0] >= opts[1] && opts[1] >= opts[2]);
+    assert!(f.panels[0].savings_vs_worst > 0.3);
+    for p in &f.panels {
+        assert_eq!(p.sweep.len(), fig14_replacement::CANDIDATES.len());
+    }
+}
+
+#[test]
+fn table5_calibration_claims() {
+    // Paper Table 5: the embodied model reproduces the published VR SoC
+    // component carbon (gold cores 895.89 g, silver 447.94 g).
+    let t = table5_vr_soc::run();
+    assert!((t.gold_g - 895.89).abs() < 0.5, "gold = {}", t.gold_g);
+    assert!((t.silver_g - 447.94).abs() < 0.3, "silver = {}", t.silver_g);
+    assert_eq!(t.table.len(), 6);
+}
+
+#[test]
+fn fig10_crossover_claims() {
+    let mut ctx = engine_ctx();
     let f = fig10_lifetime_crossover::run(
         ctx.engine.as_mut(),
         &fig10_lifetime_crossover::default_axis(),
@@ -87,8 +219,8 @@ fn fig10_crossovers_on_pjrt() {
 }
 
 #[test]
-fn provisioning_figures_on_pjrt() {
-    let Some(mut ctx) = pjrt_ctx() else { return };
+fn provisioning_figures_claims() {
+    let mut ctx = engine_ctx();
     let f13 = fig13_core_configs::run(ctx.engine.as_mut()).unwrap();
     let optimal =
         |name: &str| f13.rows.iter().find(|r| r.workload == name).unwrap().optimal_cores;
@@ -103,8 +235,8 @@ fn provisioning_figures_on_pjrt() {
 }
 
 #[test]
-fn stacking_figures_on_pjrt() {
-    let Some(mut ctx) = pjrt_ctx() else { return };
+fn stacking_figures_claims() {
+    let mut ctx = engine_ctx();
     let f15 = fig15_stacking::run(ctx.engine.as_mut(), Workload::Sr512).unwrap();
     let best_op = f15.panels[1].gains.iter().map(|(_, g)| *g).fold(0.0f64, f64::max);
     assert!(best_op > 1.8, "SR-512 @6% best gain = {best_op:.2}x");
@@ -120,4 +252,85 @@ fn stacking_figures_on_pjrt() {
         .iter()
         .filter(|c| c.ratio == 0.98)
         .any(|c| c.optimal.starts_with("2D")));
+}
+
+#[test]
+fn search_anchor_finds_fig7_optimum_within_budget() {
+    // Acceptance: on the 121-point Fig 7 space the adaptive search finds
+    // the exhaustive feasible-tCDP optimum exactly (bit-equal tCDP, same
+    // design, same scenario) while evaluating <= 60% of the grid.
+    use xrcarbon::dse::search::SearchConfig;
+    let factory = engine_factory();
+    let f = search_fig7::run(factory.as_ref(), Cluster::Ai5, &SearchConfig::default()).unwrap();
+    let (esi, eci, etcdp) = f.exhaustive.best().expect("exhaustive optimum");
+    let best = f.outcome.best.as_ref().expect("search optimum");
+    assert_eq!(best.name, f.exhaustive.scenarios[esi].outcome.result.names[eci]);
+    assert_eq!(best.scenario_label, f.exhaustive.scenarios[esi].label);
+    if f.outcome.engine == "host" {
+        // Host per-config arithmetic is batch-position-independent.
+        assert_eq!(best.tcdp.to_bits(), etcdp.to_bits(), "search tCDP must be bit-exact");
+    } else {
+        // PJRT may fuse differently across batch compositions; stay
+        // within the established pjrt-vs-host envelope.
+        assert!((best.tcdp - etcdp).abs() <= 1e-5 * etcdp.abs());
+    }
+    assert!(f.outcome.converged);
+    assert!(
+        f.outcome.evaluations * 10 <= f.outcome.space_size * 6,
+        "evaluated {}/{} (> 60%)",
+        f.outcome.evaluations,
+        f.outcome.space_size
+    );
+    // The archive never claims a point off the exhaustive Pareto front
+    // (exact set comparison needs the host engine's bit-stable batches).
+    if f.outcome.engine == "host" {
+        let front = exhaustive_front(&f.exhaustive);
+        for a in &f.outcome.archive {
+            assert!(front.contains(&(a.scenario, a.name.clone())), "({}, {})", a.scenario, a.name);
+        }
+    }
+}
+
+#[test]
+fn search_expanded_space_converges_deterministically() {
+    // Acceptance: on the ~10k-point 2-D/3-D space the search converges
+    // to a Pareto archive deterministically for a fixed seed —
+    // bit-identical across runs and thread counts — evaluating only a
+    // small fraction of the space, and the §5.6 stacking win emerges:
+    // the optimum is a 3-D stacked design.
+    use xrcarbon::dse::search::SearchConfig;
+    let factory = engine_factory();
+    let run = |threads: usize| {
+        search_fig7::run_expanded(
+            factory.as_ref(),
+            Cluster::Xr5,
+            &SearchConfig { threads, ..SearchConfig::default() },
+        )
+        .unwrap()
+    };
+    let a = run(1);
+    assert!(a.outcome.converged);
+    assert_eq!(a.outcome.space_size, 10_332);
+    assert!(
+        a.outcome.evaluations * 100 <= a.outcome.space_size * 15,
+        "evaluated {}/{} (> 15%)",
+        a.outcome.evaluations,
+        a.outcome.space_size
+    );
+    let best = a.outcome.best.as_ref().expect("feasible optimum");
+    assert!(best.name.starts_with("3D_"), "stacking win missing: optimum = {}", best.name);
+    assert!(!a.outcome.archive.is_empty());
+
+    // Bit-identical across a repeat run and a different thread count.
+    let b = run(1);
+    let c = run(4);
+    for other in [&b, &c] {
+        assert_eq!(a.outcome.evaluations, other.outcome.evaluations);
+        assert_eq!(a.outcome.generations, other.outcome.generations);
+        assert_eq!(a.outcome.archive, other.outcome.archive);
+        let (x, y) = (a.outcome.best.as_ref().unwrap(), other.outcome.best.as_ref().unwrap());
+        assert_eq!(x.name, y.name);
+        assert_eq!(x.scenario, y.scenario);
+        assert_eq!(x.tcdp.to_bits(), y.tcdp.to_bits());
+    }
 }

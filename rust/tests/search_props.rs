@@ -1,0 +1,175 @@
+//! Oracle property tests for `dse::search`: on the 121-point Fig 7 grid
+//! (profiled once on the real simulator, then reused), the adaptive
+//! search must converge to the same feasible tCDP argmin as the
+//! exhaustive `dse::sweep` path under randomized scenario grids, its
+//! archive must be a subset of the exhaustive pooled Pareto front, and
+//! the outcome must be bit-identical across runs and thread counts.
+
+use std::sync::OnceLock;
+
+use xrcarbon::carbon::{FabGrid, UseGrid};
+use xrcarbon::dse::search::{exhaustive_front, search, ReplayEvaluator, SearchConfig};
+use xrcarbon::dse::sweep::{sweep, SweepConfig};
+use xrcarbon::dse::{
+    design_grid, lifetime_for_ratio, profile_configs, profiles_to_rows, ScenarioGrid, SearchSpace,
+};
+use xrcarbon::matrixform::{ConfigRow, EvalRequest, TaskMatrix};
+use xrcarbon::runtime::HostEngineFactory;
+use xrcarbon::testkit::{forall_cfg, PropConfig, Rng};
+use xrcarbon::workloads::{cluster_workloads, Cluster};
+
+/// The 121-point grid profiled once on the 5-AI cluster.
+fn grid_rows() -> &'static (Vec<ConfigRow>, TaskMatrix) {
+    static ROWS: OnceLock<(Vec<ConfigRow>, TaskMatrix)> = OnceLock::new();
+    ROWS.get_or_init(|| {
+        let grid = design_grid();
+        let configs: Vec<_> = grid.iter().map(|p| p.config.clone()).collect();
+        let workloads = cluster_workloads(Cluster::Ai5);
+        let profiles = profile_configs(&configs, &workloads);
+        let rows = profiles_to_rows(&configs, &profiles, FabGrid::Coal);
+        let kernels: Vec<String> = workloads.iter().map(|w| w.label().to_string()).collect();
+        let calls = vec![1.0; kernels.len()];
+        let tasks = TaskMatrix::single_task("suite", kernels, &calls);
+        (rows, tasks)
+    })
+}
+
+fn base_request(tasks: &TaskMatrix) -> EvalRequest {
+    EvalRequest {
+        tasks: tasks.clone(),
+        configs: Vec::new(),
+        online: vec![1.0, 1.0, 1.0],
+        qos: vec![f64::INFINITY],
+        ci_use_g_per_j: UseGrid::WorldAverage.g_per_joule(),
+        lifetime_s: 1.0,
+        beta: 1.0,
+        p_max_w: f64::INFINITY,
+    }
+}
+
+/// Randomized scenario grid: 1–3 ratio-calibrated lifetimes, optionally
+/// crossed with CI and β axes (up to 12 scenarios).
+fn gen_grid(r: &mut Rng, rows: &[ConfigRow], tasks: &TaskMatrix) -> ScenarioGrid {
+    let ci_world = UseGrid::WorldAverage.g_per_joule();
+    let mut g = ScenarioGrid::new();
+    for i in 0..r.below(3) + 1 {
+        let ratio = r.range(0.05, 0.95);
+        g = g.with_lifetime(
+            &format!("lt{i}"),
+            lifetime_for_ratio(rows, tasks, ratio, ci_world),
+        );
+    }
+    if r.chance(0.5) {
+        for i in 0..r.below(2) + 1 {
+            g = g.with_ci(&format!("ci{i}"), ci_world * r.range(0.2, 3.2));
+        }
+    }
+    if r.chance(0.5) {
+        for i in 0..r.below(2) + 1 {
+            g = g.with_beta(&format!("b{i}"), r.range(0.25, 4.0));
+        }
+    }
+    g
+}
+
+#[test]
+fn prop_search_argmin_matches_exhaustive_sweep() {
+    let (rows, tasks) = grid_rows();
+    let evaluator = ReplayEvaluator::new(rows);
+    let base = base_request(tasks);
+    let space = SearchSpace::fig7_grid();
+    forall_cfg(
+        PropConfig { cases: 12, seed: 31 },
+        |r| (gen_grid(r, rows, tasks), r.below(1 << 30) as u64),
+        |(grid, seed)| {
+            let full = EvalRequest { configs: rows.clone(), ..base.clone() };
+            let ex = sweep(&HostEngineFactory, &full, grid, &SweepConfig::default()).unwrap();
+            let (esi, eci, etcdp) = ex.best().expect("feasible exhaustive optimum");
+
+            let cfg = SearchConfig { seed: *seed, ..SearchConfig::default() };
+            let out =
+                search(&HostEngineFactory, &space, &evaluator, &base, grid, &cfg).unwrap();
+            let best = out.best.expect("feasible search optimum");
+            out.converged
+                && best.name == ex.scenarios[esi].outcome.result.names[eci]
+                && best.scenario == esi
+                && best.tcdp.to_bits() == etcdp.to_bits()
+        },
+    );
+}
+
+#[test]
+fn prop_search_archive_subset_of_exhaustive_front() {
+    let (rows, tasks) = grid_rows();
+    let evaluator = ReplayEvaluator::new(rows);
+    let base = base_request(tasks);
+    let space = SearchSpace::fig7_grid();
+    forall_cfg(
+        PropConfig { cases: 10, seed: 32 },
+        |r| (gen_grid(r, rows, tasks), r.below(1 << 30) as u64),
+        |(grid, seed)| {
+            let full = EvalRequest { configs: rows.clone(), ..base.clone() };
+            let ex = sweep(&HostEngineFactory, &full, grid, &SweepConfig::default()).unwrap();
+            let front = exhaustive_front(&ex);
+
+            let cfg = SearchConfig { seed: *seed, ..SearchConfig::default() };
+            let out =
+                search(&HostEngineFactory, &space, &evaluator, &base, grid, &cfg).unwrap();
+            !out.archive.is_empty()
+                && out
+                    .archive
+                    .iter()
+                    .all(|a| front.contains(&(a.scenario, a.name.clone())))
+        },
+    );
+}
+
+#[test]
+fn prop_search_bit_identical_across_thread_counts() {
+    let (rows, tasks) = grid_rows();
+    let evaluator = ReplayEvaluator::new(rows);
+    let base = base_request(tasks);
+    let space = SearchSpace::fig7_grid();
+    forall_cfg(
+        PropConfig { cases: 8, seed: 33 },
+        |r| (gen_grid(r, rows, tasks), r.below(1 << 30) as u64),
+        |(grid, seed)| {
+            let run = |threads: usize| {
+                let cfg = SearchConfig { seed: *seed, threads, ..SearchConfig::default() };
+                search(&HostEngineFactory, &space, &evaluator, &base, grid, &cfg).unwrap()
+            };
+            let a = run(1);
+            let b = run(4);
+            let best_bits = |o: &xrcarbon::dse::search::SearchOutcome| {
+                o.best.as_ref().map(|x| (x.scenario, x.name.clone(), x.tcdp.to_bits()))
+            };
+            a.evaluations == b.evaluations
+                && a.generations == b.generations
+                && a.converged == b.converged
+                && best_bits(&a) == best_bits(&b)
+                && a.archive == b.archive
+        },
+    );
+}
+
+#[test]
+fn search_never_exceeds_60_percent_on_fig7_scenarios() {
+    // The acceptance bound, on the real calibrated Fig 7 grid.
+    let (rows, tasks) = grid_rows();
+    let evaluator = ReplayEvaluator::new(rows);
+    let base = base_request(tasks);
+    let space = SearchSpace::fig7_grid();
+    let ci = UseGrid::WorldAverage.g_per_joule();
+    let grid = ScenarioGrid::fig7(rows, tasks, ci);
+    for seed in [1u64, 7, 42, 1234, 0xC0FFEE] {
+        let cfg = SearchConfig { seed, ..SearchConfig::default() };
+        let out = search(&HostEngineFactory, &space, &evaluator, &base, &grid, &cfg).unwrap();
+        assert!(out.converged, "seed {seed}");
+        assert!(
+            out.evaluations * 10 <= out.space_size * 6,
+            "seed {seed}: evaluated {}/{}",
+            out.evaluations,
+            out.space_size
+        );
+    }
+}

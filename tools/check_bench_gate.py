@@ -1,0 +1,101 @@
+#!/usr/bin/env python3
+"""Smoke regression gate over the bench JSON artifacts.
+
+Parses BENCH_sweep.json and BENCH_search.json (written by
+`cargo bench --bench bench_sweep_parallel` / `--bench bench_search`,
+quick mode in CI) and fails the job when an optimized path loses its
+advantage:
+
+* sweep — a wall-clock sanity check: the two-phase (profile-once +
+  overlay) sweep must not be slower than the fused per-scenario fan-out
+  at the same thread count. The structural engine-work ratio is
+  N_scenarios : 1 (9:1 on this grid), so the gate allows a generous
+  noise margin for the few-sample quick mode and only fails below
+  0.8x — a genuine regression collapses the ratio to ~1/N, far past
+  the margin; runner jitter does not.
+* search — evaluation-count checks (deterministic, no timing noise):
+  `search/evaluations_vs_exhaustive` must be >= 121/72 ~ 1.67x (the
+  <= 60% anchor budget locked by the e2e tests; a search that degrades
+  toward exhaustive enumeration fails here first), and
+  `search/expanded_coverage` must be >= 5x (the expanded-space search
+  must converge well under 20% coverage; observed ~2%).
+
+Usage: check_bench_gate.py BENCH_sweep.json BENCH_search.json
+"""
+import json
+import sys
+
+# Wall-clock margin for the sweep comparison (quick-mode noise shield).
+SWEEP_MIN_RATIO = 0.8
+# The e2e-locked <= 60% anchor budget, as an evaluations-saved ratio.
+SEARCH_ANCHOR_MIN = 1.0 / 0.6
+# Expanded space must stay under 20% coverage (observed ~2%).
+SEARCH_EXPANDED_MIN = 5.0
+
+
+def fail(msg):
+    print(f"BENCH GATE FAIL: {msg}", file=sys.stderr)
+    sys.exit(1)
+
+
+def load(path):
+    try:
+        with open(path) as f:
+            rows = json.load(f)
+    except (OSError, json.JSONDecodeError) as e:
+        fail(f"cannot read {path}: {e}")
+    return {r["name"]: r for r in rows}
+
+
+def check_sweep(path):
+    rows = load(path)
+    checked = 0
+    for name, row in sorted(rows.items()):
+        if not name.startswith("sweep/fused_per_scenario_threads="):
+            continue
+        threads = name.rsplit("=", 1)[1]
+        two = rows.get(f"sweep/two_phase_threads={threads}")
+        if two is None:
+            continue
+        ratio = row["mean_ns"] / max(two["mean_ns"], 1)
+        print(f"sweep gate: fused/two-phase @ {threads} thread(s) = {ratio:.2f}x")
+        if ratio < SWEEP_MIN_RATIO:
+            fail(
+                f"two-phase sweep slower than fused at {threads} thread(s) "
+                f"({ratio:.2f}x < {SWEEP_MIN_RATIO}x)"
+            )
+        checked += 1
+    if checked == 0:
+        fail(f"{path}: no fused/two-phase pair found")
+
+
+def check_search(path):
+    rows = load(path)
+    for name, minimum in (
+        ("search/evaluations_vs_exhaustive", SEARCH_ANCHOR_MIN),
+        ("search/expanded_coverage", SEARCH_EXPANDED_MIN),
+    ):
+        row = rows.get(name)
+        if row is None:
+            fail(f"{path}: missing entry {name}")
+        ratio = row.get("throughput")
+        if ratio is None:
+            fail(f"{path}: {name} has no ratio")
+        print(
+            f"search gate: {name} = {ratio:.2f}x "
+            f"(min {minimum:.2f}x, {row['samples']} evaluations)"
+        )
+        if ratio < minimum:
+            fail(f"{name} reports {ratio:.2f}x < {minimum:.2f}x evaluations-saved")
+
+
+def main():
+    if len(sys.argv) != 3:
+        fail("usage: check_bench_gate.py BENCH_sweep.json BENCH_search.json")
+    check_sweep(sys.argv[1])
+    check_search(sys.argv[2])
+    print("bench gate: OK")
+
+
+if __name__ == "__main__":
+    main()
