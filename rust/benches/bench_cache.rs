@@ -1,0 +1,151 @@
+//! Bench: the persistent profile cache and search checkpoints — (a) a
+//! cold sweep (empty cache: every chunk contracted and written back)
+//! versus a warm sweep (every chunk served from disk, zero engine
+//! contractions), and (b) a cold adaptive search versus one resumed from
+//! a mid-run checkpoint (the resumed run only evaluates the remaining
+//! generations).
+//!
+//! Emits `BENCH_cache.json`. The CI smoke gate
+//! (`tools/check_bench_gate.py`) consumes one pseudo-entry:
+//!
+//! * `cache/warm_contractions_avoided` — `samples` = cache hits of the
+//!   warm sweep, `throughput` = hits / profile chunks. The floor is
+//!   1.0×: a warm sweep over a cached space must avoid **every** phase-A
+//!   contraction (the stats are deterministic counters, not timings).
+//!
+//! `cache/resume_evaluations_carried` is informational: how many
+//! evaluations the resumed search inherited from the checkpoint instead
+//! of recomputing.
+//!
+//! Set `XRCARBON_BENCH_QUICK=1` for the short sampling mode CI uses.
+
+use std::time::Duration;
+
+use xrcarbon::bench::{write_json, BenchResult, Bencher};
+use xrcarbon::carbon::FabGrid;
+use xrcarbon::dse::cache::ProfileCache;
+use xrcarbon::dse::search::{search, SearchConfig, SearchDriver, SimulatorEvaluator};
+use xrcarbon::dse::sweep::{sweep_with_cache, SweepConfig};
+use xrcarbon::dse::{ScenarioGrid, SearchSpace};
+use xrcarbon::experiments::sweep_fig7::profile_cluster;
+use xrcarbon::runtime::HostEngineFactory;
+use xrcarbon::workloads::{cluster_workloads, Cluster};
+
+/// Counter pseudo-entry: `samples` carries a count, `throughput` a
+/// ratio; timings are zero (this row is data, not a measurement).
+fn counter(name: &str, samples: usize, ratio: f64) -> BenchResult {
+    BenchResult {
+        name: name.to_string(),
+        samples,
+        mean: Duration::ZERO,
+        p50: Duration::ZERO,
+        p95: Duration::ZERO,
+        throughput: Some(ratio),
+    }
+}
+
+fn main() {
+    let mut results: Vec<BenchResult> = Vec::new();
+    let cluster = Cluster::Ai5;
+    let space = profile_cluster(cluster);
+    let grid = ScenarioGrid::fig7(&space.rows, &space.tasks, space.ci_use_g_per_j);
+    let dir = xrcarbon::testkit::test_dir("bench_cache");
+
+    // (a) Cold sweep: every iteration starts from an empty cache, pays
+    // the full phase-A contraction and the write-back.
+    let cold = Bencher::new("cache/cold_sweep_grid121").quick_if_env().run(|| {
+        std::fs::remove_dir_all(&dir).ok();
+        let cache = ProfileCache::open(&dir).unwrap();
+        let cfg = SweepConfig::default();
+        sweep_with_cache(&HostEngineFactory, &space.base, &grid, &cfg, Some(&cache)).unwrap()
+    });
+    println!("{}", cold.report());
+
+    // Warm sweep: populate once, then every iteration is served from
+    // disk — zero engine contractions (asserted via the stats delta).
+    std::fs::remove_dir_all(&dir).ok();
+    let cache = ProfileCache::open(&dir).unwrap();
+    sweep_with_cache(&HostEngineFactory, &space.base, &grid, &SweepConfig::default(), Some(&cache))
+        .unwrap();
+    let mut last = None;
+    let warm = Bencher::new("cache/warm_sweep_grid121").quick_if_env().run(|| {
+        let out = sweep_with_cache(
+            &HostEngineFactory,
+            &space.base,
+            &grid,
+            &SweepConfig::default(),
+            Some(&cache),
+        )
+        .unwrap();
+        last = Some(out);
+    });
+    println!("{}", warm.report());
+    let out = last.expect("warm bench ran at least once");
+    let stats = out.cache.expect("cached sweep reports stats");
+    let avoided_ratio = stats.hits as f64 / out.profile_chunks.max(1) as f64;
+    let speedup = cold.mean.as_secs_f64() / warm.mean.as_secs_f64();
+    println!(
+        "warm sweep: {} of {} chunk contraction(s) avoided ({avoided_ratio:.2}x floor metric), \
+         {} miss(es), {speedup:.2}x wall clock vs cold",
+        stats.hits, out.profile_chunks, stats.misses
+    );
+    results.push(cold);
+    results.push(warm);
+    results.push(counter("cache/warm_contractions_avoided", stats.hits, avoided_ratio));
+
+    // (b) Cold search vs search resumed from a mid-run checkpoint. The
+    // resumed run re-pays only the generations after the interrupt.
+    let sspace = SearchSpace::fig7_grid();
+    let evaluator =
+        SimulatorEvaluator { workloads: cluster_workloads(cluster), fab: FabGrid::Coal };
+    let scfg = SearchConfig::default();
+    let cold_search = Bencher::new("cache/search_cold_grid121").quick_if_env().run(|| {
+        search(&HostEngineFactory, &sspace, &evaluator, &space.base, &grid, &scfg).unwrap()
+    });
+    println!("{}", cold_search.report());
+
+    // Count the full run's loop iterations, then checkpoint halfway.
+    let mut probe = SearchDriver::new(&sspace, &scfg);
+    let mut steps = 0usize;
+    while !probe
+        .step(&HostEngineFactory, &sspace, &evaluator, &space.base, &grid, None)
+        .unwrap()
+    {
+        steps += 1;
+    }
+    let mut half = SearchDriver::new(&sspace, &scfg);
+    for _ in 0..steps / 2 {
+        if half
+            .step(&HostEngineFactory, &sspace, &evaluator, &space.base, &grid, None)
+            .unwrap()
+        {
+            break;
+        }
+    }
+    let ck = half.checkpoint();
+    let carried = ck.evaluated.len();
+    let resumed = Bencher::new("cache/search_resumed_grid121").quick_if_env().run(|| {
+        SearchDriver::resume(&sspace, &scfg, &ck)
+            .unwrap()
+            .run(&HostEngineFactory, &sspace, &evaluator, &space.base, &grid)
+            .unwrap()
+    });
+    println!("{}", resumed.report());
+    let total = probe.evaluations().max(1);
+    let resume_speedup = cold_search.mean.as_secs_f64() / resumed.mean.as_secs_f64();
+    println!(
+        "resumed search: {carried}/{total} evaluation(s) carried by the checkpoint \
+         ({resume_speedup:.2}x wall clock vs cold)"
+    );
+    results.push(cold_search);
+    results.push(resumed);
+    results.push(counter(
+        "cache/resume_evaluations_carried",
+        carried,
+        carried as f64 / total as f64,
+    ));
+
+    std::fs::remove_dir_all(&dir).ok();
+    write_json(&results, "BENCH_cache.json").expect("writing BENCH_cache.json");
+    println!("[json] wrote BENCH_cache.json ({} benchmarks)", results.len());
+}

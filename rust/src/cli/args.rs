@@ -5,7 +5,9 @@ use std::collections::BTreeMap;
 /// Parse error.
 #[derive(Debug, Clone, PartialEq, thiserror::Error)]
 pub enum CliError {
-    /// An option that expects a value was last on the line.
+    /// An option that expects a value was last on the line, or was
+    /// directly followed by another `--option` token (which would
+    /// otherwise be silently swallowed as its value).
     #[error("option --{0} expects a value")]
     MissingValue(String),
     /// A value failed to parse as the requested type.
@@ -41,7 +43,7 @@ pub struct Args {
 const VALUED: &[&str] = &[
     "cluster", "metric", "out", "artifacts", "engine", "seed", "beta", "ratio",
     "lifetime", "hours", "devices", "days", "workload", "cores", "csv-dir",
-    "threads", "preset", "space", "max-evals",
+    "threads", "preset", "space", "max-evals", "cache-dir", "resume",
 ];
 
 /// Flag names (no value). Anything after `--` that is in neither list is
@@ -57,10 +59,15 @@ impl Args {
             if let Some(name) = tok.strip_prefix("--") {
                 if VALUED.contains(&name) {
                     match it.next() {
-                        Some(v) => {
+                        // A following `--option` token is another option,
+                        // not this option's value: `sweep --preset --search`
+                        // must not set preset="--search" and drop the flag.
+                        // (Single-dash values — negative numbers — stay
+                        // accepted.)
+                        Some(v) if !v.starts_with("--") => {
                             out.options.insert(name.to_string(), v);
                         }
-                        None => return Err(CliError::MissingValue(name.to_string())),
+                        _ => return Err(CliError::MissingValue(name.to_string())),
                     }
                 } else if FLAGS.contains(&name) {
                     out.flags.push(name.to_string());
@@ -177,6 +184,31 @@ mod tests {
         let tokens = vec!["fig7".into(), "--cluser".into(), "5ai".into()];
         let e = Args::parse(tokens).unwrap_err();
         assert!(matches!(e, CliError::UnknownOption(ref n, _, _) if n == "cluser"));
+    }
+
+    #[test]
+    fn valued_option_does_not_swallow_a_following_option() {
+        // Before: "--preset" swallowed "--search" as its value, silently
+        // setting preset="--search" and dropping the flag.
+        let e = Args::parse(
+            vec!["sweep".into(), "--preset".into(), "--search".into()],
+        )
+        .unwrap_err();
+        assert_eq!(e, CliError::MissingValue("preset".into()));
+        // A flag followed by a valued option is unaffected…
+        let a = parse("sweep --search --preset fig10");
+        assert!(a.has_flag("search"));
+        assert_eq!(a.get("preset", "fig7"), "fig10");
+        // …and single-dash values (negative numbers) still parse.
+        let a = Args::parse(vec!["x".into(), "--beta".into(), "-1.5".into()]).unwrap();
+        assert_eq!(a.get_f64("beta", 0.0).unwrap(), -1.5);
+    }
+
+    #[test]
+    fn cache_options_are_registered() {
+        let a = parse("sweep --cache-dir .cache/profiles --resume ckpt.json");
+        assert_eq!(a.get("cache-dir", ""), ".cache/profiles");
+        assert_eq!(a.get("resume", ""), "ckpt.json");
     }
 
     #[test]

@@ -39,9 +39,28 @@ impl Json {
         }
     }
 
-    /// Integer view of a number (rounded).
+    /// Integer view of a number. `None` unless the value is an exact
+    /// integer representable as `i64` — non-integral numbers (`2.7`),
+    /// NaN/∞ and out-of-range magnitudes are rejected rather than
+    /// rounded or saturated, so counters round-tripped through cache
+    /// envelopes and checkpoints can never silently drift.
     pub fn as_i64(&self) -> Option<i64> {
-        self.as_f64().map(|f| f.round() as i64)
+        match self.as_f64() {
+            // 2^63 is exactly representable as f64; i64 covers
+            // [-2^63, 2^63) so the upper bound is strict. fract() is NaN
+            // for NaN/∞, which fails the == 0.0 test.
+            Some(f) if f.fract() == 0.0 && f >= -(2f64.powi(63)) && f < 2f64.powi(63) => {
+                Some(f as i64)
+            }
+            _ => None,
+        }
+    }
+
+    /// Narrowing integer view: `Some` only for exact integers (per
+    /// [`Self::as_i64`]) that also fit `usize` — the shared accessor for
+    /// counters in cache envelopes and checkpoints.
+    pub fn as_usize(&self) -> Option<usize> {
+        self.as_i64().and_then(|i| usize::try_from(i).ok())
     }
 
     /// String view.
@@ -380,6 +399,33 @@ mod tests {
         assert_eq!(v.get("version").unwrap().as_i64(), Some(1));
         let f = v.get("variants").unwrap().get("128").unwrap().get("file").unwrap();
         assert_eq!(f.as_str(), Some("dse_metrics_c128.hlo.txt"));
+    }
+
+    #[test]
+    fn as_i64_is_strict() {
+        // Exact integers pass.
+        assert_eq!(Json::Num(0.0).as_i64(), Some(0));
+        assert_eq!(Json::Num(-7.0).as_i64(), Some(-7));
+        assert_eq!(Json::Num(2f64.powi(32)).as_i64(), Some(1i64 << 32));
+        assert_eq!(Json::Num(-(2f64.powi(63))).as_i64(), Some(i64::MIN));
+        // Non-integral numbers are rejected, not rounded.
+        assert_eq!(Json::Num(2.7).as_i64(), None);
+        assert_eq!(Json::Num(-0.5).as_i64(), None);
+        // Out-of-i64-range magnitudes are rejected, not saturated.
+        assert_eq!(Json::Num(2f64.powi(63)).as_i64(), None);
+        assert_eq!(Json::Num(1e300).as_i64(), None);
+        assert_eq!(Json::Num(-1e300).as_i64(), None);
+        // Non-finite and non-numeric values are rejected.
+        assert_eq!(Json::Num(f64::NAN).as_i64(), None);
+        assert_eq!(Json::Num(f64::INFINITY).as_i64(), None);
+        assert_eq!(Json::Str("3".into()).as_i64(), None);
+        // Parsed documents behave the same.
+        assert_eq!(parse("3.0001").unwrap().as_i64(), None);
+        assert_eq!(parse("42").unwrap().as_i64(), Some(42));
+        // The usize view additionally rejects negatives.
+        assert_eq!(Json::Num(42.0).as_usize(), Some(42));
+        assert_eq!(Json::Num(-1.0).as_usize(), None);
+        assert_eq!(Json::Num(2.5).as_usize(), None);
     }
 
     #[test]

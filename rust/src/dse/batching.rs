@@ -17,6 +17,8 @@ pub const SMALL_BATCH: usize = 128;
 /// small-variant batches instead of one mostly-padding large batch
 /// (measured: 200 configs = 0.36 ms chunked vs 0.90 ms padded to 1024;
 /// ≥~700 configs the large variant wins back — see EXPERIMENTS.md §Perf).
+/// Well-defined for `n = 0` (returns [`SMALL_BATCH`]; the chunkers emit
+/// zero chunks for an empty space, so the value is never dereferenced).
 pub(crate) fn chunk_size(n: usize) -> usize {
     if n <= SMALL_BATCH || n > MAX_BATCH {
         // Single small batch, or big sweeps: fill the large variant.
@@ -35,6 +37,17 @@ pub(crate) fn chunk_size(n: usize) -> usize {
 /// Evaluate a request of any size, chunking across engine calls when the
 /// config count exceeds (or poorly fits) the artifact variants.
 pub fn evaluate_chunked(engine: &mut dyn Engine, req: &EvalRequest) -> crate::Result<EvalResult> {
+    if req.configs.is_empty() {
+        // Zero configs means zero engine calls and an empty result — not
+        // a panic inside request validation/packing. The config-free half
+        // of `EvalRequest::validate` still applies (the component
+        // dimension J is defined by the config rows, so the online mask
+        // cannot be checked here).
+        assert_eq!(req.qos.len(), req.tasks.num_tasks(), "qos len != tasks");
+        assert!(req.lifetime_s > 0.0, "non-positive lifetime");
+        assert!(req.beta >= 0.0, "negative beta");
+        return Ok(EvalResult::empty(req.tasks.num_tasks()));
+    }
     let max_batch = chunk_size(req.configs.len());
     if req.configs.len() <= max_batch {
         return evaluate(engine, req);
@@ -51,8 +64,12 @@ pub fn evaluate_chunked(engine: &mut dyn Engine, req: &EvalRequest) -> crate::Re
     Ok(merged.expect("nonempty request"))
 }
 
-/// Number of engine-call chunks a space of `n` configs splits into.
+/// Number of engine-call chunks a space of `n` configs splits into
+/// (zero for an empty space).
 pub(crate) fn num_chunks(n: usize) -> usize {
+    if n == 0 {
+        return 0;
+    }
     let cs = chunk_size(n);
     if n <= cs {
         1
@@ -74,6 +91,12 @@ pub fn profile_chunk_requests(req: &ProfileRequest) -> Vec<EvalRequest> {
 /// clone per chunk (the sweep coordinator feeds `base` in directly
 /// without materializing an owned [`ProfileRequest`] first).
 pub(crate) fn chunk_neutral(tasks: &TaskMatrix, configs: &[ConfigRow]) -> Vec<EvalRequest> {
+    if configs.is_empty() {
+        // An empty space profiles into zero chunks (mirrors
+        // `num_chunks(0) == 0`); callers fold nothing instead of
+        // panicking on a zero-config engine batch.
+        return Vec::new();
+    }
     let shell = ProfileRequest { tasks: tasks.clone(), configs: Vec::new() };
     let cs = chunk_size(configs.len());
     if configs.len() <= cs {
@@ -167,6 +190,41 @@ mod tests {
             assert!((d - expect).abs() < expect * 1e-5, "i={i} d={d} expect={expect}");
             assert_eq!(res.names[i], format!("cfg{i}"));
         }
+    }
+
+    #[test]
+    fn empty_request_yields_empty_result_without_engine_calls() {
+        // Regression: this used to panic inside request validation.
+        let mut req = request(0);
+        assert!(req.configs.is_empty());
+        let res = evaluate_chunked(&mut HostEngine::new(), &req).unwrap();
+        assert_eq!(res.c, 0);
+        assert_eq!(res.t, 1);
+        assert!(res.names.is_empty() && res.metrics.is_empty() && res.d_task.is_empty());
+        assert_eq!(res.argmin_feasible(MetricRow::Tcdp), None);
+
+        let preq = ProfileRequest::from_eval(&req);
+        assert!(profile_chunk_requests(&preq).is_empty());
+        let profiles = profile_chunked(&mut HostEngine::new(), &preq).unwrap();
+        assert!(profiles.is_empty());
+
+        // The summary layer composes with the empty result.
+        let out = crate::dse::explore::summarize(res);
+        assert_eq!(out.stats.feasible, 0);
+        assert!(out.optimal.is_empty());
+
+        // Shared-shell variant exercised through chunk_neutral directly.
+        req.configs.clear();
+        assert!(chunk_neutral(&req.tasks, &req.configs).is_empty());
+    }
+
+    #[test]
+    fn zero_size_chunk_helpers_are_well_defined() {
+        assert_eq!(num_chunks(0), 0);
+        assert_eq!(chunk_size(0), SMALL_BATCH);
+        assert_eq!(num_chunks(1), 1);
+        assert_eq!(num_chunks(SMALL_BATCH), 1);
+        assert_eq!(num_chunks(MAX_BATCH + 1), 2);
     }
 
     #[test]

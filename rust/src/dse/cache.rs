@@ -1,0 +1,553 @@
+//! Persistent, content-addressed profile cache — the warm-start layer
+//! under the two-phase sweep coordinator.
+//!
+//! Phase A of the pipeline (the O(C×T×K) engine contraction of a config
+//! chunk into a scenario-invariant [`DesignProfile`]) never depends on
+//! the scenario, yet every process restart used to re-pay it from
+//! scratch. A [`ProfileCache`] keys each *packed chunk* by a stable
+//! content hash of
+//!
+//! * the packed design-space tensors (`N`, `p_leak`, `p_dyn`, `f_clk`,
+//!   `d_k`, `c_comp`, config names — exactly the inputs the contraction
+//!   reads; scenario knobs are excluded by construction),
+//! * the artifact-manifest shape constants ([`T_PAD`], [`K_PAD`],
+//!   [`J_PAD`], [`NUM_METRICS`], the batch variants) and the packed
+//!   dims,
+//! * the engine label (host and PJRT numerics differ), and
+//! * the envelope schema version ([`PROFILE_SCHEMA`]).
+//!
+//! Profiles are serialized through [`crate::configfmt`] as a versioned
+//! JSON envelope. Every `f32` buffer travels as raw `u32` bit patterns
+//! (exactly representable as JSON integers), so a cache round-trip is
+//! **bit-exact** and a warm-start sweep is bit-identical to the cold run
+//! on the host engine — locked by `rust/tests/cache_props.rs`.
+//!
+//! The trust model is asymmetric: a stored profile is only ever used
+//! when its envelope passes every check (schema version, key echo,
+//! engine label, shape constants, buffer lengths, integral bit values).
+//! Anything else — truncated file, stale schema, foreign key, wrong
+//! shape — is *rejected and recomputed*, never trusted; rejections are
+//! counted on the [`CacheStats`] surface. Writes go through a
+//! temp-file + rename so a crashed writer can at worst leave a stray
+//! temp file, not a half-written envelope under a valid key.
+
+use std::path::{Path, PathBuf};
+
+use crate::configfmt::{parse, Json};
+use crate::matrixform::{
+    DesignProfile, EvalRequest, PackedProblem, C_VARIANTS, J_PAD, K_PAD, NUM_METRICS, T_PAD,
+};
+use crate::runtime::{CacheCounters, CacheStats};
+
+/// Envelope schema version. Bump on any change to the envelope layout
+/// *or* to the profile semantics (what the engine contraction computes);
+/// older entries are then rejected and recomputed.
+pub const PROFILE_SCHEMA: u32 = 1;
+
+/// 128-bit content key of one packed profile chunk.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, PartialOrd, Ord, Hash)]
+pub struct CacheKey {
+    hi: u64,
+    lo: u64,
+}
+
+impl CacheKey {
+    /// Fixed-width lowercase hex rendering (32 chars) — the on-disk
+    /// file stem and the envelope's `key` echo.
+    pub fn hex(&self) -> String {
+        format!("{:016x}{:016x}", self.hi, self.lo)
+    }
+}
+
+impl std::fmt::Display for CacheKey {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.write_str(&self.hex())
+    }
+}
+
+/// Two independently-seeded FNV-1a streams fed the same bytes — a cheap
+/// dependency-free 128-bit content hash (collision odds are negligible
+/// at cache scale, and a colliding entry would still have to pass the
+/// shape checks). Shared with the search checkpoints (`dse::search`)
+/// for grid and envelope digests — one hash core, not three.
+pub(crate) struct KeyHasher {
+    a: u64,
+    b: u64,
+}
+
+const FNV_PRIME: u64 = 0x0000_0100_0000_01B3;
+
+impl KeyHasher {
+    pub(crate) fn new() -> Self {
+        // Offset bases: the standard FNV-1a basis and a second stream
+        // seeded from it (any fixed distinct constant works).
+        KeyHasher { a: 0xCBF2_9CE4_8422_2325, b: 0x9AE1_6A3B_2F90_404F }
+    }
+
+    pub(crate) fn write(&mut self, bytes: &[u8]) {
+        for &byte in bytes {
+            self.a = (self.a ^ byte as u64).wrapping_mul(FNV_PRIME);
+            self.b = (self.b ^ byte as u64).wrapping_mul(FNV_PRIME).rotate_left(1);
+        }
+    }
+
+    pub(crate) fn write_u64(&mut self, v: u64) {
+        self.write(&v.to_le_bytes());
+    }
+
+    pub(crate) fn write_f32s(&mut self, xs: &[f32]) {
+        self.write_u64(xs.len() as u64);
+        for x in xs {
+            self.write(&x.to_bits().to_le_bytes());
+        }
+    }
+
+    pub(crate) fn write_str(&mut self, s: &str) {
+        self.write_u64(s.len() as u64);
+        self.write(s.as_bytes());
+    }
+
+    pub(crate) fn finish(self) -> CacheKey {
+        CacheKey { hi: self.a, lo: self.b }
+    }
+}
+
+/// On-disk, content-addressed store of [`DesignProfile`]s with a
+/// thread-safe stats surface. One JSON envelope per key under `dir`.
+#[derive(Debug)]
+pub struct ProfileCache {
+    dir: PathBuf,
+    counters: CacheCounters,
+}
+
+impl ProfileCache {
+    /// Open (creating if needed) a cache directory.
+    pub fn open(dir: impl AsRef<Path>) -> crate::Result<ProfileCache> {
+        let dir = dir.as_ref().to_path_buf();
+        std::fs::create_dir_all(&dir)?;
+        Ok(ProfileCache { dir, counters: CacheCounters::new() })
+    }
+
+    /// The backing directory.
+    pub fn dir(&self) -> &Path {
+        &self.dir
+    }
+
+    /// Snapshot of this cache's hit/miss/write counters (process
+    /// lifetime; use [`CacheStats::since`] for per-run deltas).
+    pub fn stats(&self) -> CacheStats {
+        self.counters.snapshot()
+    }
+
+    /// Content key of one packed chunk for one engine. Hashes exactly
+    /// the scenario-invariant inputs of the phase-A contraction plus the
+    /// shape constants and schema version — the scenario knobs
+    /// (`online`, `qos`, scalars) are deliberately excluded, which is
+    /// what makes one cached profile serve every scenario overlay.
+    pub fn key_for_packed(packed: &PackedProblem, engine: &str) -> CacheKey {
+        let mut h = KeyHasher::new();
+        h.write(b"xrcarbon-profile");
+        h.write_u64(PROFILE_SCHEMA as u64);
+        // Artifact-manifest shape constants: a rebuilt artifact set with
+        // different padding must never alias old entries.
+        for dim in [T_PAD, K_PAD, J_PAD, NUM_METRICS] {
+            h.write_u64(dim as u64);
+        }
+        for v in C_VARIANTS {
+            h.write_u64(v as u64);
+        }
+        h.write_str(engine);
+        for dim in [packed.c_pad, packed.c, packed.t, packed.k] {
+            h.write_u64(dim as u64);
+        }
+        h.write_f32s(&packed.n);
+        h.write_f32s(&packed.p_leak);
+        h.write_f32s(&packed.p_dyn);
+        h.write_f32s(&packed.f_clk);
+        h.write_f32s(&packed.d_k);
+        h.write_f32s(&packed.c_comp);
+        h.write_u64(packed.names.len() as u64);
+        for name in &packed.names {
+            h.write_str(name);
+        }
+        h.finish()
+    }
+
+    /// Convenience: pack a (non-empty) chunk request and key it.
+    pub fn key_for_request(req: &EvalRequest, engine: &str) -> CacheKey {
+        Self::key_for_packed(&PackedProblem::from_request(req), engine)
+    }
+
+    fn path_for(&self, key: &CacheKey) -> PathBuf {
+        self.dir.join(format!("{}.profile.json", key.hex()))
+    }
+
+    /// Look a profile up. `Some` only for an envelope that passes every
+    /// validation check; absent entries and read errors are plain misses,
+    /// while corrupted/stale *content* is additionally counted as
+    /// rejected (`rejected` means "an envelope was validated and
+    /// refused", not "I/O failed") — either way the caller recomputes.
+    pub fn load(&self, key: &CacheKey, engine: &str) -> Option<DesignProfile> {
+        let path = self.path_for(key);
+        let text = match std::fs::read_to_string(&path) {
+            Ok(t) => t,
+            Err(_) => {
+                // NotFound, permissions, transient I/O — nothing was
+                // validated, so this is a miss, not a rejection.
+                self.counters.record_miss();
+                return None;
+            }
+        };
+        match decode_envelope(&text, key, engine) {
+            Some(profile) => {
+                self.counters.record_hit();
+                Some(profile)
+            }
+            None => {
+                self.counters.record_rejected();
+                None
+            }
+        }
+    }
+
+    /// Write a profile back under its key (temp file + rename, so
+    /// concurrent readers never observe a partial envelope). Failures
+    /// are counted on the stats surface either way, so callers for whom
+    /// the cache is an optimization (the sweep) can ignore the error and
+    /// degrade to uncached behavior.
+    pub fn store(
+        &self,
+        key: &CacheKey,
+        profile: &DesignProfile,
+        engine: &str,
+    ) -> crate::Result<()> {
+        match atomic_write(&self.path_for(key), &encode_envelope(key, profile, engine)) {
+            Ok(()) => {
+                self.counters.record_write();
+                Ok(())
+            }
+            Err(e) => {
+                self.counters.record_write_error();
+                Err(e)
+            }
+        }
+    }
+}
+
+/// Crash-safe file write shared by the cache and the search
+/// checkpoints: write to a uniquely-named sibling temp file (pid + a
+/// process-wide counter, so concurrent writers of the same path never
+/// share one), then rename into place — readers can never observe a
+/// partial document.
+pub(crate) fn atomic_write(path: &Path, text: &str) -> crate::Result<()> {
+    static SEQ: std::sync::atomic::AtomicU64 = std::sync::atomic::AtomicU64::new(0);
+    let seq = SEQ.fetch_add(1, std::sync::atomic::Ordering::Relaxed);
+    let mut tmp = path.as_os_str().to_owned();
+    tmp.push(format!(".tmp.{}.{seq}", std::process::id()));
+    let tmp = PathBuf::from(tmp);
+    std::fs::write(&tmp, text)?;
+    std::fs::rename(&tmp, path)?;
+    Ok(())
+}
+
+/// `f32` buffer → JSON array of `u32` bit patterns (exact integers).
+fn bits_arr(xs: &[f32]) -> Json {
+    Json::Arr(xs.iter().map(|x| Json::Num(x.to_bits() as f64)).collect())
+}
+
+/// JSON array of `u32` bit patterns → `f32` buffer of an exact length.
+/// `None` on length mismatch, non-integral entries or out-of-`u32`-range
+/// values (the strict [`Json::as_i64`] is what makes this safe).
+fn parse_bits(v: Option<&Json>, expect_len: usize) -> Option<Vec<f32>> {
+    let arr = v?.as_arr()?;
+    if arr.len() != expect_len {
+        return None;
+    }
+    arr.iter()
+        .map(|j| j.as_i64().and_then(|i| u32::try_from(i).ok()).map(f32::from_bits))
+        .collect()
+}
+
+fn get_usize(obj: &Json, key: &str) -> Option<usize> {
+    obj.get(key)?.as_usize()
+}
+
+/// Content digest over the envelope's *payload* (buffers, names, dims):
+/// the `key` echo only proves which request the entry claims to serve,
+/// while this proves the stored numbers themselves are the ones that
+/// were written — a flipped digit in a bit value is structurally valid
+/// JSON and would otherwise be trusted.
+fn payload_digest(profile: &DesignProfile) -> String {
+    let mut h = KeyHasher::new();
+    for dim in [profile.c, profile.c_pad, profile.t] {
+        h.write_u64(dim as u64);
+    }
+    h.write_f32s(&profile.energy);
+    h.write_f32s(&profile.delay);
+    h.write_f32s(&profile.d_task);
+    h.write_f32s(&profile.c_comp);
+    h.write_u64(profile.names.len() as u64);
+    for name in &profile.names {
+        h.write_str(name);
+    }
+    h.finish().hex()
+}
+
+/// Render the versioned envelope for one profile.
+fn encode_envelope(key: &CacheKey, profile: &DesignProfile, engine: &str) -> String {
+    let names = Json::Arr(profile.names.iter().map(|n| Json::Str(n.clone())).collect());
+    let doc = Json::obj(vec![
+        ("schema", Json::Num(PROFILE_SCHEMA as f64)),
+        ("key", Json::Str(key.hex())),
+        ("engine", Json::Str(engine.to_string())),
+        ("payload", Json::Str(payload_digest(profile))),
+        (
+            "shape",
+            Json::obj(vec![
+                ("t_pad", Json::Num(T_PAD as f64)),
+                ("j_pad", Json::Num(J_PAD as f64)),
+            ]),
+        ),
+        (
+            "profile",
+            Json::obj(vec![
+                ("c", Json::Num(profile.c as f64)),
+                ("c_pad", Json::Num(profile.c_pad as f64)),
+                ("t", Json::Num(profile.t as f64)),
+                ("names", names),
+                ("energy", bits_arr(&profile.energy)),
+                ("delay", bits_arr(&profile.delay)),
+                ("d_task", bits_arr(&profile.d_task)),
+                ("c_comp", bits_arr(&profile.c_comp)),
+            ]),
+        ),
+    ]);
+    doc.to_string()
+}
+
+/// Parse and fully validate an envelope; `None` means "reject and
+/// recompute" (never a panic — cache contents are untrusted input).
+fn decode_envelope(text: &str, key: &CacheKey, engine: &str) -> Option<DesignProfile> {
+    let doc = parse(text).ok()?;
+    if doc.get("schema")?.as_i64()? != PROFILE_SCHEMA as i64 {
+        return None;
+    }
+    if doc.get("key")?.as_str()? != key.hex() {
+        return None;
+    }
+    if doc.get("engine")?.as_str()? != engine {
+        return None;
+    }
+    let shape = doc.get("shape")?;
+    if get_usize(shape, "t_pad")? != T_PAD || get_usize(shape, "j_pad")? != J_PAD {
+        return None;
+    }
+
+    let prof = doc.get("profile")?;
+    let c = get_usize(prof, "c")?;
+    let c_pad = get_usize(prof, "c_pad")?;
+    let t = get_usize(prof, "t")?;
+    if c > c_pad || t > T_PAD || !C_VARIANTS.contains(&c_pad) {
+        return None;
+    }
+    let names_json = prof.get("names")?.as_arr()?;
+    if names_json.len() != c {
+        return None;
+    }
+    let names: Option<Vec<String>> =
+        names_json.iter().map(|j| j.as_str().map(str::to_string)).collect();
+    let profile = DesignProfile {
+        energy: parse_bits(prof.get("energy"), c_pad)?,
+        delay: parse_bits(prof.get("delay"), c_pad)?,
+        d_task: parse_bits(prof.get("d_task"), c_pad * T_PAD)?,
+        c_comp: parse_bits(prof.get("c_comp"), c_pad * J_PAD)?,
+        c_pad,
+        c,
+        t,
+        names: names?,
+    };
+    // Integrity: the stored payload digest must match a recomputation
+    // over what we just parsed — structurally-valid value corruption
+    // (a flipped bit digit, an edited name) is rejected here.
+    if doc.get("payload")?.as_str()? != payload_digest(&profile) {
+        return None;
+    }
+    Some(profile)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::matrixform::{ConfigRow, ProfileRequest, TaskMatrix};
+    use crate::runtime::profile_request;
+    use crate::runtime::HostEngine;
+    use crate::testkit::test_dir;
+
+    fn request(c: usize) -> EvalRequest {
+        let tm = TaskMatrix::single_task("t", vec!["k0".into(), "k1".into()], &[3.0, 1.0]);
+        EvalRequest {
+            tasks: tm,
+            configs: (0..c)
+                .map(|i| ConfigRow {
+                    name: format!("cfg{i}"),
+                    f_clk: 1e9,
+                    d_k: vec![1e-3, (i + 1) as f64 * 2e-3],
+                    e_dyn: vec![0.01, 0.02],
+                    leak_w: 0.1,
+                    c_comp: vec![10.0, 20.0 + i as f64],
+                })
+                .collect(),
+            online: vec![1.0, 1.0],
+            qos: vec![f64::INFINITY],
+            ci_use_g_per_j: 1e-4,
+            lifetime_s: 1e6,
+            beta: 1.0,
+            p_max_w: f64::INFINITY,
+        }
+    }
+
+    fn profile_of(req: &EvalRequest) -> DesignProfile {
+        let neutral = ProfileRequest::from_eval(req).to_eval();
+        profile_request(&mut HostEngine::new(), &neutral).unwrap()
+    }
+
+    #[test]
+    fn key_is_stable_and_content_sensitive() {
+        let req = request(5);
+        let k1 = ProfileCache::key_for_request(&req, "host");
+        let k2 = ProfileCache::key_for_request(&req.clone(), "host");
+        assert_eq!(k1, k2);
+        assert_eq!(k1.hex().len(), 32);
+
+        // Any design-space change moves the key…
+        let mut other = request(5);
+        other.configs[3].d_k[1] *= 1.0 + 1e-3;
+        assert_ne!(k1, ProfileCache::key_for_request(&other, "host"));
+        let mut renamed = request(5);
+        renamed.configs[0].name = "renamed".into();
+        assert_ne!(k1, ProfileCache::key_for_request(&renamed, "host"));
+        // …as does the engine label…
+        assert_ne!(k1, ProfileCache::key_for_request(&req, "pjrt"));
+        // …while scenario knobs do NOT (profiles are scenario-invariant).
+        let mut scenario = request(5);
+        scenario.lifetime_s = 42.0;
+        scenario.beta = 3.0;
+        scenario.ci_use_g_per_j = 9e-9;
+        scenario.qos = vec![0.25];
+        scenario.online = vec![1.0, 0.0];
+        assert_eq!(k1, ProfileCache::key_for_request(&scenario, "host"));
+    }
+
+    #[test]
+    fn store_load_roundtrip_is_bit_exact() {
+        let dir = test_dir("cache_unit");
+        let cache = ProfileCache::open(&dir).unwrap();
+        let req = request(7);
+        let mut prof = profile_of(&req);
+        // Exercise the full f32 domain, including values plain decimal
+        // JSON could not round-trip reliably.
+        prof.energy[0] = f32::NAN;
+        prof.energy[1] = f32::INFINITY;
+        prof.delay[2] = -0.0;
+        prof.d_task[3] = f32::MIN_POSITIVE / 2.0; // subnormal
+
+        let key = ProfileCache::key_for_request(&req, "host");
+        cache.store(&key, &prof, "host").unwrap();
+        let back = cache.load(&key, "host").expect("stored profile loads");
+        let bits = |xs: &[f32]| xs.iter().map(|x| x.to_bits()).collect::<Vec<_>>();
+        assert_eq!(bits(&back.energy), bits(&prof.energy));
+        assert_eq!(bits(&back.delay), bits(&prof.delay));
+        assert_eq!(bits(&back.d_task), bits(&prof.d_task));
+        assert_eq!(bits(&back.c_comp), bits(&prof.c_comp));
+        assert_eq!(back.names, prof.names);
+        assert_eq!((back.c, back.c_pad, back.t), (prof.c, prof.c_pad, prof.t));
+
+        let s = cache.stats();
+        assert_eq!((s.hits, s.misses, s.writes, s.rejected), (1, 0, 1, 0));
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn absent_entry_is_a_miss() {
+        let dir = test_dir("cache_unit");
+        let cache = ProfileCache::open(&dir).unwrap();
+        let key = ProfileCache::key_for_request(&request(2), "host");
+        assert!(cache.load(&key, "host").is_none());
+        let s = cache.stats();
+        assert_eq!((s.hits, s.misses, s.rejected), (0, 1, 0));
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn stale_schema_and_corruption_are_rejected_never_trusted() {
+        let dir = test_dir("cache_unit");
+        let cache = ProfileCache::open(&dir).unwrap();
+        let req = request(3);
+        let prof = profile_of(&req);
+        let key = ProfileCache::key_for_request(&req, "host");
+        let path = dir.join(format!("{}.profile.json", key.hex()));
+        cache.store(&key, &prof, "host").unwrap();
+
+        // (a) stale schema version.
+        let mut doc = parse(&std::fs::read_to_string(&path).unwrap()).unwrap();
+        if let Json::Obj(o) = &mut doc {
+            o.insert("schema".into(), Json::Num(999.0));
+        }
+        std::fs::write(&path, doc.to_string()).unwrap();
+        assert!(cache.load(&key, "host").is_none());
+
+        // (b) truncated file (invalid JSON).
+        let text = encode_envelope(&key, &prof, "host");
+        std::fs::write(&path, &text[..text.len() / 2]).unwrap();
+        assert!(cache.load(&key, "host").is_none());
+
+        // (c) buffer-length mismatch.
+        let mut doc = parse(&text).unwrap();
+        if let Json::Obj(o) = &mut doc {
+            if let Some(Json::Obj(p)) = o.get_mut("profile") {
+                p.insert("energy".into(), Json::Arr(vec![Json::Num(0.0)]));
+            }
+        }
+        std::fs::write(&path, doc.to_string()).unwrap();
+        assert!(cache.load(&key, "host").is_none());
+
+        // (d) non-integral bit value (would have been rounded by the old
+        // lenient as_i64 — now rejected).
+        let mut doc = parse(&text).unwrap();
+        if let Json::Obj(o) = &mut doc {
+            if let Some(Json::Obj(p)) = o.get_mut("profile") {
+                if let Some(Json::Arr(xs)) = p.get_mut("energy") {
+                    xs[0] = Json::Num(2.7);
+                }
+            }
+        }
+        std::fs::write(&path, doc.to_string()).unwrap();
+        assert!(cache.load(&key, "host").is_none());
+
+        // (e) structurally-valid *value* corruption: one energy bit
+        // pattern swapped for a different valid integer — only the
+        // payload digest catches this.
+        let mut doc = parse(&text).unwrap();
+        if let Json::Obj(o) = &mut doc {
+            if let Some(Json::Obj(p)) = o.get_mut("profile") {
+                if let Some(Json::Arr(xs)) = p.get_mut("energy") {
+                    xs[0] = Json::Num(123456.0);
+                }
+            }
+        }
+        std::fs::write(&path, doc.to_string()).unwrap();
+        assert!(cache.load(&key, "host").is_none());
+
+        // (f) engine mismatch on an otherwise-valid envelope.
+        std::fs::write(&path, &text).unwrap();
+        assert!(cache.load(&key, "pjrt").is_none());
+        // …and the intact envelope still loads for the right engine.
+        assert!(cache.load(&key, "host").is_some());
+
+        let s = cache.stats();
+        assert_eq!(s.hits, 1);
+        assert_eq!(s.rejected, 6);
+        assert_eq!(s.misses, 6); // every rejection is also a miss
+        std::fs::remove_dir_all(&dir).ok();
+    }
+}

@@ -29,9 +29,18 @@
 //!   [`SearchSpace`]: seeded lattice sampling, successive-halving
 //!   refinement around the pooled Pareto archive, generations batched
 //!   through the two-phase coordinator — the scaling replacement for
-//!   exhaustive enumeration on large 2-D/3-D spaces.
+//!   exhaustive enumeration on large 2-D/3-D spaces. The loop is an
+//!   explicit state machine (`SearchDriver`) with
+//!   `checkpoint()`/`resume()` so interrupted or budget-extended runs
+//!   continue bit-identically;
+//! * [`cache`]    — the persistent, content-addressed profile cache
+//!   (`ProfileCache`): phase-A [`crate::matrixform::DesignProfile`]s
+//!   keyed by a stable hash of the packed design-space tensors, shape
+//!   constants and schema version, serialized as versioned bit-exact
+//!   JSON envelopes — warm-start sweeps skip every cached contraction.
 
 pub mod batching;
+pub mod cache;
 pub mod explore;
 pub mod grid;
 pub mod pareto;
@@ -42,14 +51,20 @@ pub mod space;
 pub mod sweep;
 
 pub use batching::{evaluate_chunked, profile_chunk_requests, profile_chunked};
+pub use cache::{CacheKey, ProfileCache, PROFILE_SCHEMA};
 pub use explore::{explore, summarize, ExploreOutcome, ExploreStats};
 pub use grid::{AxisPoint, ScenarioGrid, SweepScenario};
 pub use pareto::{beta_sweep, pareto_front, BetaPoint};
 pub use profile::{profile_configs, profiles_to_rows};
 pub use scenario::{lifetime_for_ratio, Scenario};
 pub use search::{
-    exhaustive_front, pooled_objectives, search, ArchivePoint, ReplayEvaluator, SearchBest,
-    SearchConfig, SearchOutcome, SimulatorEvaluator, SpaceEvaluator,
+    exhaustive_front, grid_digest, pooled_objectives, read_checkpoint, search, search_resumable,
+    write_checkpoint, ArchivePoint, PointEval, ReplayEvaluator, SearchBest, SearchCheckpoint,
+    SearchConfig, SearchDriver, SearchOutcome, SimulatorEvaluator, SpaceEvaluator,
+    CHECKPOINT_SCHEMA,
 };
 pub use space::{design_grid, DesignPoint, SearchSpace, SpaceIndex};
-pub use sweep::{sweep, sweep_fused, sweep_sequential, ScenarioResult, SweepConfig, SweepOutcome};
+pub use sweep::{
+    sweep, sweep_fused, sweep_sequential, sweep_with_cache, ScenarioResult, SweepConfig,
+    SweepOutcome,
+};

@@ -41,19 +41,22 @@
 //! the evaluations-saved ratio in `BENCH_search.json`).
 
 use std::collections::{BTreeMap, BTreeSet};
+use std::path::Path;
 
 use crate::accel::Workload;
 use crate::carbon::FabGrid;
+use crate::configfmt::{parse, Json};
 use crate::matrixform::{ConfigRow, EvalRequest, MetricRow};
 use crate::runtime::EngineFactory;
-use crate::testkit::Rng;
+use crate::testkit::{parse_seed, Rng, RngState};
 
 use super::batching::shallow;
+use super::cache::{KeyHasher, ProfileCache};
 use super::grid::ScenarioGrid;
 use super::pareto::pareto_front;
 use super::profile::{profile_configs, profiles_to_rows};
 use super::space::{DesignPoint, SearchSpace, SpaceIndex};
-use super::sweep::{sweep, SweepConfig, SweepOutcome};
+use super::sweep::{sweep_with_cache, SweepConfig, SweepOutcome};
 
 /// Builds §3.3 rows for a generation of candidates. The search calls
 /// this once per generation with every fresh candidate, so
@@ -226,13 +229,18 @@ pub struct SearchOutcome {
     pub threads: usize,
 }
 
-/// Per-(candidate, scenario) record.
-#[derive(Debug, Clone, Copy)]
-struct PointEval {
-    f1: f64,
-    f2: f64,
-    tcdp: f64,
-    feasible: bool,
+/// Per-(candidate, scenario) record (public because it round-trips
+/// through [`SearchCheckpoint`]s).
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct PointEval {
+    /// `F₁ = C_op·D`.
+    pub f1: f64,
+    /// `F₂ = C_emb·D`.
+    pub f2: f64,
+    /// Scalarized `tCDP`.
+    pub tcdp: f64,
+    /// Constraint mask outcome.
+    pub feasible: bool,
 }
 
 /// Runaway guard: no realistic space needs more refinement batches.
@@ -364,6 +372,718 @@ pub fn exhaustive_front(outcome: &SweepOutcome) -> BTreeSet<(usize, String)> {
     pareto_front(&pts).into_iter().map(|i| (pool[i].0, pool[i].1.clone())).collect()
 }
 
+/// Checkpoint envelope schema version — bump on any layout *or*
+/// search-semantics change so stale checkpoints are rejected instead of
+/// silently resumed into a different trajectory.
+pub const CHECKPOINT_SCHEMA: u32 = 1;
+
+/// A serializable snapshot of the search loop at a generation boundary:
+/// everything [`SearchDriver::step`] reads — the evaluated set, candidate
+/// names, pending frontier, stride, generation counter, RNG state and
+/// termination flags. A search resumed from a checkpoint continues
+/// **bit-identically** to the uninterrupted run (locked by
+/// `rust/tests/cache_props.rs`); all `f64`/`u64` payloads travel as raw
+/// bits (hex strings) through [`crate::configfmt`].
+#[derive(Debug, Clone, PartialEq)]
+pub struct SearchCheckpoint {
+    /// Envelope schema ([`CHECKPOINT_SCHEMA`]).
+    pub schema: u32,
+    /// Seed echo — resuming under a different seed is an error, not a
+    /// silent trajectory change.
+    pub seed: u64,
+    /// Budget echo (`SearchConfig::max_evals` at checkpoint time, 0 =
+    /// unbounded). Resume itself allows a *different* budget — that is
+    /// the budget-extension path — but callers that default the knob
+    /// (the CLI) inherit this instead of silently uncapping.
+    pub max_evals: usize,
+    /// Space dims echo (resume validates them against the space).
+    pub dims: [usize; 4],
+    /// Current lattice stride.
+    pub stride: usize,
+    /// Evaluation batches run so far.
+    pub generations: usize,
+    /// Whether the frontier already converged.
+    pub converged: bool,
+    /// Whether the search already terminated.
+    pub done: bool,
+    /// Content digest of the scenario grid the evaluations were
+    /// recorded under (`None` until the first step ran). Stepping a
+    /// resumed search under a grid with different labels *or values* is
+    /// an error — the per-candidate eval vectors are indexed by scenario
+    /// position and their numbers embed the scenario knobs.
+    pub grid_digest: Option<String>,
+    /// Engine label the evaluations were recorded under (`None` until
+    /// the first step). Host and PJRT numerics differ, so resuming on a
+    /// different engine is an error, not a silent blend.
+    pub engine: Option<String>,
+    /// PRNG state (bit-exact).
+    pub rng: RngState,
+    /// Candidates queued for the next generation, in first-seen order.
+    pub pending: Vec<SpaceIndex>,
+    /// Evaluated candidates → per-scenario objective records.
+    pub evaluated: BTreeMap<SpaceIndex, Vec<PointEval>>,
+    /// Evaluated candidates → labels.
+    pub names: BTreeMap<SpaceIndex, String>,
+}
+
+fn hex_u64(v: u64) -> Json {
+    Json::Str(format!("{v:#018x}"))
+}
+
+fn hex_f64(v: f64) -> Json {
+    hex_u64(v.to_bits())
+}
+
+fn idx_json(idx: &SpaceIndex) -> Json {
+    Json::Arr(idx.iter().map(|&v| Json::Num(v as f64)).collect())
+}
+
+fn bad(field: &str) -> anyhow::Error {
+    anyhow::anyhow!("checkpoint: missing or invalid field `{field}`")
+}
+
+/// Order-sensitive content digest of a scenario grid: every scenario's
+/// label plus the raw bits of each override value. Two grids with the
+/// same shape but different calibrations (e.g. `ScenarioGrid::fig7` for
+/// two different clusters) digest differently, which is what lets a
+/// checkpoint refuse to resume under the wrong grid.
+pub fn grid_digest(grid: &ScenarioGrid) -> String {
+    let mut h = KeyHasher::new();
+    for sc in grid.scenarios() {
+        h.write_str(&sc.label);
+        for v in [sc.ci_use_g_per_j, sc.lifetime_s, sc.qos_scale, sc.beta, sc.p_max_w] {
+            match v {
+                Some(x) => {
+                    h.write(&[1]);
+                    h.write_u64(x.to_bits());
+                }
+                None => h.write(&[0]),
+            }
+        }
+    }
+    h.finish().hex()
+}
+
+/// Integrity digest of a rendered checkpoint document (everything but
+/// the `digest` member itself). Because `Json` objects are `BTreeMap`s
+/// with a deterministic writer and `parse(render(x)) == render`-stable,
+/// re-rendering a parsed envelope minus its digest reproduces the bytes
+/// that were hashed at write time — so any post-write edit to the
+/// payload (a flipped bit-hex digit, an altered index) is rejected.
+fn envelope_digest(doc_without_digest: &Json) -> String {
+    let mut h = KeyHasher::new();
+    h.write_str(&doc_without_digest.to_string());
+    h.finish().hex()
+}
+
+fn take_u64(v: Option<&Json>, field: &str) -> crate::Result<u64> {
+    v.and_then(Json::as_str).and_then(parse_seed).ok_or_else(|| bad(field))
+}
+
+fn take_usize(v: Option<&Json>, field: &str) -> crate::Result<usize> {
+    v.and_then(Json::as_usize).ok_or_else(|| bad(field))
+}
+
+fn take_f64_bits(v: Option<&Json>, field: &str) -> crate::Result<f64> {
+    take_u64(v, field).map(f64::from_bits)
+}
+
+fn take_idx(v: &Json, field: &str) -> crate::Result<SpaceIndex> {
+    let arr = v.as_arr().ok_or_else(|| bad(field))?;
+    if arr.len() != 4 {
+        return Err(bad(field));
+    }
+    let mut idx = [0usize; 4];
+    for (slot, j) in idx.iter_mut().zip(arr) {
+        *slot = j.as_usize().ok_or_else(|| bad(field))?;
+    }
+    Ok(idx)
+}
+
+impl SearchCheckpoint {
+    /// Serialize into the versioned JSON envelope.
+    pub fn to_json(&self) -> Json {
+        let evaluated = Json::Arr(
+            self.evaluated
+                .iter()
+                .map(|(idx, evs)| {
+                    Json::obj(vec![
+                        ("idx", idx_json(idx)),
+                        (
+                            "name",
+                            Json::Str(self.names.get(idx).cloned().unwrap_or_default()),
+                        ),
+                        (
+                            "evals",
+                            Json::Arr(
+                                evs.iter()
+                                    .map(|ev| {
+                                        Json::obj(vec![
+                                            ("f1", hex_f64(ev.f1)),
+                                            ("f2", hex_f64(ev.f2)),
+                                            ("tcdp", hex_f64(ev.tcdp)),
+                                            ("feasible", Json::Bool(ev.feasible)),
+                                        ])
+                                    })
+                                    .collect(),
+                            ),
+                        ),
+                    ])
+                })
+                .collect(),
+        );
+        let rng_s = Json::Arr(self.rng.s.iter().map(|&w| hex_u64(w)).collect());
+        let rng = Json::obj(vec![
+            ("s", rng_s),
+            (
+                "gauss_spare",
+                self.rng.gauss_spare_bits.map(hex_u64).unwrap_or(Json::Null),
+            ),
+        ]);
+        let mut doc = Json::obj(vec![
+            ("schema", Json::Num(self.schema as f64)),
+            ("seed", hex_u64(self.seed)),
+            ("max_evals", Json::Num(self.max_evals as f64)),
+            ("dims", Json::Arr(self.dims.iter().map(|&d| Json::Num(d as f64)).collect())),
+            ("stride", Json::Num(self.stride as f64)),
+            ("generations", Json::Num(self.generations as f64)),
+            ("converged", Json::Bool(self.converged)),
+            ("done", Json::Bool(self.done)),
+            (
+                "grid_digest",
+                self.grid_digest.as_ref().map(|d| Json::Str(d.clone())).unwrap_or(Json::Null),
+            ),
+            (
+                "engine",
+                self.engine.as_ref().map(|e| Json::Str(e.clone())).unwrap_or(Json::Null),
+            ),
+            ("rng", rng),
+            ("pending", Json::Arr(self.pending.iter().map(idx_json).collect())),
+            ("evaluated", evaluated),
+        ]);
+        // Integrity member last: digest of everything above, so any
+        // post-write edit to the payload is detectable on read.
+        let digest = envelope_digest(&doc);
+        if let Json::Obj(o) = &mut doc {
+            o.insert("digest".to_string(), Json::Str(digest));
+        }
+        doc
+    }
+
+    /// Render the envelope as a JSON document string.
+    pub fn to_json_string(&self) -> String {
+        self.to_json().to_string()
+    }
+
+    /// Parse and validate an envelope. Any structural defect — stale
+    /// schema, missing field, non-integral counter, malformed bits — is
+    /// a typed error, never a partial checkpoint.
+    pub fn from_json_str(text: &str) -> crate::Result<SearchCheckpoint> {
+        let mut doc = parse(text).map_err(|e| anyhow::anyhow!("checkpoint: {e}"))?;
+        // Integrity first: the stored digest must match a recomputation
+        // over the re-rendered remainder of the document (deterministic
+        // writer + sorted keys make the round-trip byte-stable), so a
+        // structurally-valid edit anywhere in the payload is rejected.
+        let stored_digest = match &mut doc {
+            Json::Obj(o) => o.remove("digest"),
+            _ => None,
+        }
+        .and_then(|d| d.as_str().map(str::to_string))
+        .ok_or_else(|| bad("digest"))?;
+        if stored_digest != envelope_digest(&doc) {
+            anyhow::bail!(
+                "checkpoint: integrity digest mismatch — the file was edited or corrupted; \
+                 re-run the search from scratch"
+            );
+        }
+        // Full-range check before narrowing: 2^32 + 1 must not alias 1.
+        let schema = u32::try_from(take_usize(doc.get("schema"), "schema")?)
+            .map_err(|_| bad("schema"))?;
+        if schema != CHECKPOINT_SCHEMA {
+            anyhow::bail!(
+                "checkpoint: schema {schema} != supported {CHECKPOINT_SCHEMA} — \
+                 re-run the search from scratch"
+            );
+        }
+        let seed = take_u64(doc.get("seed"), "seed")?;
+        let max_evals = take_usize(doc.get("max_evals"), "max_evals")?;
+        let dims_arr = doc.get("dims").ok_or_else(|| bad("dims"))?;
+        let dims4 = take_idx(dims_arr, "dims")?;
+        let stride = take_usize(doc.get("stride"), "stride")?;
+        if stride == 0 {
+            return Err(bad("stride"));
+        }
+        let generations = take_usize(doc.get("generations"), "generations")?;
+        let converged =
+            doc.get("converged").and_then(Json::as_bool).ok_or_else(|| bad("converged"))?;
+        let done = doc.get("done").and_then(Json::as_bool).ok_or_else(|| bad("done"))?;
+        let grid_digest = match doc.get("grid_digest") {
+            None | Some(Json::Null) => None,
+            some => Some(
+                some.and_then(Json::as_str).ok_or_else(|| bad("grid_digest"))?.to_string(),
+            ),
+        };
+        let engine = match doc.get("engine") {
+            None | Some(Json::Null) => None,
+            some => Some(
+                some.and_then(Json::as_str).ok_or_else(|| bad("engine"))?.to_string(),
+            ),
+        };
+
+        let rng_obj = doc.get("rng").ok_or_else(|| bad("rng"))?;
+        let s_arr = rng_obj.get("s").and_then(Json::as_arr).ok_or_else(|| bad("rng.s"))?;
+        if s_arr.len() != 4 {
+            return Err(bad("rng.s"));
+        }
+        let mut s = [0u64; 4];
+        for (slot, j) in s.iter_mut().zip(s_arr) {
+            *slot = take_u64(Some(j), "rng.s")?;
+        }
+        let gauss_spare_bits = match rng_obj.get("gauss_spare") {
+            None | Some(Json::Null) => None,
+            some => Some(take_u64(some, "rng.gauss_spare")?),
+        };
+
+        let pending_arr =
+            doc.get("pending").and_then(Json::as_arr).ok_or_else(|| bad("pending"))?;
+        let mut pending = Vec::with_capacity(pending_arr.len());
+        for j in pending_arr {
+            pending.push(take_idx(j, "pending")?);
+        }
+
+        let eval_arr =
+            doc.get("evaluated").and_then(Json::as_arr).ok_or_else(|| bad("evaluated"))?;
+        let mut evaluated = BTreeMap::new();
+        let mut names = BTreeMap::new();
+        for entry in eval_arr {
+            let idx_val = entry.get("idx").ok_or_else(|| bad("evaluated.idx"))?;
+            let idx = take_idx(idx_val, "evaluated.idx")?;
+            let name = entry
+                .get("name")
+                .and_then(Json::as_str)
+                .ok_or_else(|| bad("evaluated.name"))?
+                .to_string();
+            let evs_arr = entry
+                .get("evals")
+                .and_then(Json::as_arr)
+                .ok_or_else(|| bad("evaluated.evals"))?;
+            let mut evs = Vec::with_capacity(evs_arr.len());
+            for ev in evs_arr {
+                evs.push(PointEval {
+                    f1: take_f64_bits(ev.get("f1"), "evals.f1")?,
+                    f2: take_f64_bits(ev.get("f2"), "evals.f2")?,
+                    tcdp: take_f64_bits(ev.get("tcdp"), "evals.tcdp")?,
+                    feasible: ev
+                        .get("feasible")
+                        .and_then(Json::as_bool)
+                        .ok_or_else(|| bad("evals.feasible"))?,
+                });
+            }
+            if evaluated.insert(idx, evs).is_some() {
+                return Err(bad("evaluated (duplicate idx)"));
+            }
+            names.insert(idx, name);
+        }
+
+        Ok(SearchCheckpoint {
+            schema,
+            seed,
+            max_evals,
+            dims: dims4,
+            stride,
+            generations,
+            converged,
+            done,
+            grid_digest,
+            engine,
+            rng: RngState { s, gauss_spare_bits },
+            pending,
+            evaluated,
+            names,
+        })
+    }
+}
+
+/// Write a checkpoint to disk (temp file + rename: a crash mid-write
+/// can never leave a half-written envelope under the final name).
+pub fn write_checkpoint(path: impl AsRef<Path>, ck: &SearchCheckpoint) -> crate::Result<()> {
+    super::cache::atomic_write(path.as_ref(), &ck.to_json_string())
+}
+
+/// Read a checkpoint back from disk.
+pub fn read_checkpoint(path: impl AsRef<Path>) -> crate::Result<SearchCheckpoint> {
+    let text = std::fs::read_to_string(path.as_ref())?;
+    SearchCheckpoint::from_json_str(&text)
+}
+
+/// The search loop as an explicit state machine: construct with
+/// [`SearchDriver::new`] (or [`SearchDriver::resume`]), advance one
+/// generation at a time with [`SearchDriver::step`], snapshot anywhere
+/// between steps with [`SearchDriver::checkpoint`], and extract the
+/// [`SearchOutcome`] with [`SearchDriver::outcome`] once done. The
+/// one-shot [`search`] entry point drives it to completion.
+#[derive(Debug)]
+pub struct SearchDriver {
+    cfg: SearchConfig,
+    dims: [usize; 4],
+    rng: Rng,
+    stride: usize,
+    evaluated: BTreeMap<SpaceIndex, Vec<PointEval>>,
+    names: BTreeMap<SpaceIndex, String>,
+    pending: Vec<SpaceIndex>,
+    generations: usize,
+    converged: bool,
+    done: bool,
+    grid_digest: Option<String>,
+    bound_engine: Option<String>,
+    engine: &'static str,
+    threads_used: usize,
+}
+
+impl SearchDriver {
+    /// Fresh driver: seed-generation candidates (coarse lattice plus
+    /// seeded uniform samples) are queued, nothing evaluated yet.
+    pub fn new(space: &SearchSpace, cfg: &SearchConfig) -> Self {
+        assert!(!space.is_empty(), "search space has an empty axis");
+        let dims = space.dims();
+        let mut rng = Rng::new(cfg.seed);
+        let stride = init_stride(dims, cfg.init_points_per_axis);
+        let mut pending = lattice(dims, stride);
+        for _ in 0..cfg.random_samples {
+            pending.push(space.sample(&mut rng));
+        }
+        SearchDriver {
+            cfg: *cfg,
+            dims,
+            rng,
+            stride,
+            evaluated: BTreeMap::new(),
+            names: BTreeMap::new(),
+            pending,
+            generations: 0,
+            converged: false,
+            done: false,
+            grid_digest: None,
+            bound_engine: None,
+            engine: "unknown",
+            threads_used: 1,
+        }
+    }
+
+    /// Rebuild a driver from a checkpoint. The checkpoint must match
+    /// this space's dims and the config's seed — a mismatch is an error
+    /// (a silently different trajectory would defeat the determinism
+    /// contract).
+    pub fn resume(
+        space: &SearchSpace,
+        cfg: &SearchConfig,
+        ck: &SearchCheckpoint,
+    ) -> crate::Result<Self> {
+        assert!(!space.is_empty(), "search space has an empty axis");
+        if ck.schema != CHECKPOINT_SCHEMA {
+            anyhow::bail!("checkpoint schema {} != supported {}", ck.schema, CHECKPOINT_SCHEMA);
+        }
+        if ck.dims != space.dims() {
+            anyhow::bail!(
+                "checkpoint dims {:?} do not match search space dims {:?}",
+                ck.dims,
+                space.dims()
+            );
+        }
+        if ck.seed != cfg.seed {
+            anyhow::bail!(
+                "checkpoint seed {:#x} != configured seed {:#x} (pass the original seed)",
+                ck.seed,
+                cfg.seed
+            );
+        }
+        for idx in ck.pending.iter().chain(ck.evaluated.keys()) {
+            if idx.iter().zip(space.dims()).any(|(&v, d)| v >= d) {
+                anyhow::bail!("checkpoint index {idx:?} out of bounds for the space");
+            }
+        }
+        // A budget- or generation-capped stop (done without convergence)
+        // reopens when the resuming config grants headroom — that is the
+        // budget-extended-resume contract. A converged search stays done
+        // regardless of budget.
+        let mut done = ck.done;
+        if done
+            && !ck.converged
+            && !ck.pending.is_empty()
+            && (cfg.max_evals == 0 || ck.evaluated.len() < cfg.max_evals)
+            && ck.generations < MAX_GENERATIONS
+        {
+            done = false;
+        }
+        Ok(SearchDriver {
+            cfg: *cfg,
+            dims: ck.dims,
+            rng: Rng::from_state(ck.rng),
+            stride: ck.stride,
+            evaluated: ck.evaluated.clone(),
+            names: ck.names.clone(),
+            pending: ck.pending.clone(),
+            generations: ck.generations,
+            converged: ck.converged,
+            done,
+            grid_digest: ck.grid_digest.clone(),
+            bound_engine: ck.engine.clone(),
+            engine: "unknown",
+            threads_used: 1,
+        })
+    }
+
+    /// Snapshot the loop state (valid between any two [`Self::step`]
+    /// calls, including after termination).
+    pub fn checkpoint(&self) -> SearchCheckpoint {
+        SearchCheckpoint {
+            schema: CHECKPOINT_SCHEMA,
+            seed: self.cfg.seed,
+            max_evals: self.cfg.max_evals,
+            dims: self.dims,
+            stride: self.stride,
+            generations: self.generations,
+            converged: self.converged,
+            done: self.done,
+            grid_digest: self.grid_digest.clone(),
+            engine: self.bound_engine.clone(),
+            rng: self.rng.state(),
+            pending: self.pending.clone(),
+            evaluated: self.evaluated.clone(),
+            names: self.names.clone(),
+        }
+    }
+
+    /// True once the search terminated (converged or budget-stopped).
+    pub fn is_done(&self) -> bool {
+        self.done
+    }
+
+    /// Candidates evaluated so far.
+    pub fn evaluations(&self) -> usize {
+        self.evaluated.len()
+    }
+
+    /// Advance the loop by one iteration: evaluate the pending
+    /// generation (if any fresh candidates survive dedup/budget),
+    /// recompute the guide set, queue the next generation and apply the
+    /// termination rules. Returns `true` when the search is done.
+    /// `cache` fronts the per-generation profile phase — an exact re-run
+    /// (same seed/space/evaluator) serves every generation from disk.
+    pub fn step(
+        &mut self,
+        factory: &dyn EngineFactory,
+        space: &SearchSpace,
+        evaluator: &dyn SpaceEvaluator,
+        base: &EvalRequest,
+        grid: &ScenarioGrid,
+        cache: Option<&ProfileCache>,
+    ) -> crate::Result<bool> {
+        // Label first so even a no-op step on a resumed-finished driver
+        // reports the real engine in its outcome.
+        self.engine = factory.label();
+        // Recorded evaluations embed the scenario knobs and the engine's
+        // numerics, so neither may change across steps/resumes — a
+        // mismatch is an error, never a silent blend of two problems.
+        let digest = grid_digest(grid);
+        if let Some(expect) = &self.grid_digest {
+            if *expect != digest {
+                anyhow::bail!(
+                    "scenario grid (labels/values) does not match the one this \
+                     search's evaluations were recorded under"
+                );
+            }
+        } else {
+            self.grid_digest = Some(digest);
+        }
+        if let Some(recorded) = self.bound_engine.as_deref() {
+            if recorded != factory.label() {
+                anyhow::bail!(
+                    "engine '{}' does not match the '{recorded}' this search's \
+                     evaluations were recorded under (force it with --engine)",
+                    factory.label()
+                );
+            }
+        } else {
+            self.bound_engine = Some(factory.label().to_string());
+        }
+        if self.done {
+            return Ok(true);
+        }
+        assert_eq!(space.dims(), self.dims, "space changed under the driver");
+        let n_scenarios = grid.cardinality();
+
+        // Fresh candidates in first-seen order.
+        let mut fresh: Vec<SpaceIndex> = Vec::new();
+        let mut seen: BTreeSet<SpaceIndex> = BTreeSet::new();
+        for &p in &self.pending {
+            if !self.evaluated.contains_key(&p) && seen.insert(p) {
+                fresh.push(p);
+            }
+        }
+        if self.cfg.max_evals > 0 {
+            let budget = self.cfg.max_evals.saturating_sub(self.evaluated.len());
+            fresh.truncate(budget);
+        }
+
+        if !fresh.is_empty() {
+            self.generations += 1;
+            let points: Vec<DesignPoint> = fresh.iter().map(|&i| space.point(i)).collect();
+            let rows = evaluator.rows(&points);
+            assert_eq!(rows.len(), points.len(), "evaluator returned wrong row count");
+            let req = EvalRequest { configs: rows, ..shallow(base) };
+            let out = sweep_with_cache(
+                factory,
+                &req,
+                grid,
+                &SweepConfig { threads: self.cfg.threads },
+                cache,
+            )?;
+            self.engine = out.engine;
+            self.threads_used = self.threads_used.max(out.threads);
+            for (si, sc) in out.scenarios.iter().enumerate() {
+                let res = &sc.outcome.result;
+                for (ci, &idx) in fresh.iter().enumerate() {
+                    let d = res.metric(MetricRow::Delay, ci);
+                    let ev = PointEval {
+                        f1: res.metric(MetricRow::COp, ci) * d,
+                        f2: res.metric(MetricRow::CEmb, ci) * d,
+                        tcdp: res.metric(MetricRow::Tcdp, ci),
+                        feasible: res.metric(MetricRow::Feasible, ci) > 0.5,
+                    };
+                    self.evaluated
+                        .entry(idx)
+                        .or_insert_with(|| Vec::with_capacity(n_scenarios))
+                        .push(ev);
+                    if si == 0 {
+                        self.names.insert(idx, res.names[ci].clone());
+                    }
+                }
+            }
+        }
+
+        let pool = feasible_pool(&self.evaluated);
+        let front_pts: Vec<(f64, f64)> = pool.iter().map(|p| (p.0, p.1)).collect();
+        let front_idx = pareto_front(&front_pts);
+
+        // Guide set: archive members (frontier mode), per-scenario tCDP
+        // leaders, and the incumbent best.
+        let mut guides: BTreeSet<SpaceIndex> = BTreeSet::new();
+        if self.cfg.frontier {
+            for &i in &front_idx {
+                guides.insert(pool[i].4);
+            }
+        }
+        for si in 0..n_scenarios {
+            let mut sc: Vec<&Pooled> = pool.iter().filter(|p| p.3 == si).collect();
+            sc.sort_by(|a, b| a.2.total_cmp(&b.2).then(a.4.cmp(&b.4)));
+            for p in sc.into_iter().take(self.cfg.guide_top_k) {
+                guides.insert(p.4);
+            }
+        }
+        if let Some(best) = incumbent(&pool) {
+            guides.insert(best.4);
+        }
+
+        // Next round: unevaluated lattice neighbours of the guides.
+        self.pending = Vec::new();
+        for &g in &guides {
+            for nb in neighbors(g, self.dims, self.stride) {
+                if !self.evaluated.contains_key(&nb) {
+                    self.pending.push(nb);
+                }
+            }
+        }
+
+        if self.pending.is_empty() {
+            if self.stride > 1 {
+                self.stride /= 2;
+                return Ok(false);
+            }
+            self.converged = true;
+            self.done = true;
+            return Ok(true);
+        }
+        if self.cfg.max_evals > 0 && self.evaluated.len() >= self.cfg.max_evals {
+            self.done = true;
+            return Ok(true);
+        }
+        if self.generations >= MAX_GENERATIONS {
+            self.done = true;
+            return Ok(true);
+        }
+        Ok(false)
+    }
+
+    /// Final (or in-flight) archive + incumbent from the evaluated set.
+    /// Panics if `grid` differs from the one the evaluations were
+    /// recorded under (scenario indices/labels would dangle).
+    pub fn outcome(&self, space: &SearchSpace, grid: &ScenarioGrid) -> SearchOutcome {
+        if let Some(expect) = &self.grid_digest {
+            assert_eq!(
+                &grid_digest(grid),
+                expect,
+                "scenario grid changed between evaluation and outcome"
+            );
+        }
+        let scenario_labels: Vec<String> =
+            grid.scenarios().into_iter().map(|s| s.label).collect();
+        let pool = feasible_pool(&self.evaluated);
+        let front_pts: Vec<(f64, f64)> = pool.iter().map(|p| (p.0, p.1)).collect();
+        let mut front_idx = pareto_front(&front_pts);
+        front_idx
+            .sort_by(|&a, &b| pool[a].0.total_cmp(&pool[b].0).then(pool[a].4.cmp(&pool[b].4)));
+        let archive: Vec<ArchivePoint> = front_idx
+            .into_iter()
+            .map(|i| {
+                let p = &pool[i];
+                ArchivePoint {
+                    scenario: p.3,
+                    scenario_label: scenario_labels[p.3].clone(),
+                    index: p.4,
+                    name: self.names[&p.4].clone(),
+                    f1: p.0,
+                    f2: p.1,
+                    tcdp: p.2,
+                }
+            })
+            .collect();
+        let best = incumbent(&pool).map(|p| SearchBest {
+            scenario: p.3,
+            scenario_label: scenario_labels[p.3].clone(),
+            index: p.4,
+            name: self.names[&p.4].clone(),
+            tcdp: p.2,
+        });
+
+        SearchOutcome {
+            best,
+            archive,
+            evaluations: self.evaluated.len(),
+            space_size: space.len(),
+            generations: self.generations,
+            converged: self.converged,
+            engine: self.engine,
+            threads: self.threads_used,
+        }
+    }
+
+    /// Drive to completion and build the outcome (uncached profiling;
+    /// [`search_resumable`] threads a [`ProfileCache`] through when one
+    /// is in play).
+    pub fn run(
+        mut self,
+        factory: &dyn EngineFactory,
+        space: &SearchSpace,
+        evaluator: &dyn SpaceEvaluator,
+        base: &EvalRequest,
+        grid: &ScenarioGrid,
+    ) -> crate::Result<SearchOutcome> {
+        while !self.step(factory, space, evaluator, base, grid, None)? {}
+        Ok(self.outcome(space, grid))
+    }
+}
+
 /// Run the adaptive search. `base` supplies everything but the configs
 /// (task matrix matching the evaluator's kernel set, QoS bounds, online
 /// mask, scenario defaults); `grid` is the scenario cross-product every
@@ -376,158 +1096,59 @@ pub fn search(
     grid: &ScenarioGrid,
     cfg: &SearchConfig,
 ) -> crate::Result<SearchOutcome> {
-    assert!(!space.is_empty(), "search space has an empty axis");
-    let dims = space.dims();
-    let scenario_labels: Vec<String> =
-        grid.scenarios().into_iter().map(|s| s.label).collect();
-    let n_scenarios = scenario_labels.len();
+    SearchDriver::new(space, cfg).run(factory, space, evaluator, base, grid)
+}
 
-    let mut rng = Rng::new(cfg.seed);
-    let mut stride = init_stride(dims, cfg.init_points_per_axis);
-    let mut evaluated: BTreeMap<SpaceIndex, Vec<PointEval>> = BTreeMap::new();
-    let mut names: BTreeMap<SpaceIndex, String> = BTreeMap::new();
-    let mut generations = 0usize;
-    let mut converged = false;
-    let mut engine: &'static str = factory.label();
-    let mut threads_used = 1usize;
-
-    // Seed generation: coarse lattice + seeded uniform samples.
-    let mut pending = lattice(dims, stride);
-    for _ in 0..cfg.random_samples {
-        pending.push(space.sample(&mut rng));
-    }
-
+/// [`search`] with resume/checkpoint/cache plumbing: start from
+/// `resume_from` when given (validated against the space and seed),
+/// persist a checkpoint after *every* generation when `save_to` is
+/// given — so an interrupted or budget-extended run can continue
+/// bit-identically — and front the per-generation profile phase with
+/// `cache` when one is given.
+#[allow(clippy::too_many_arguments)]
+pub fn search_resumable(
+    factory: &dyn EngineFactory,
+    space: &SearchSpace,
+    evaluator: &dyn SpaceEvaluator,
+    base: &EvalRequest,
+    grid: &ScenarioGrid,
+    cfg: &SearchConfig,
+    resume_from: Option<&SearchCheckpoint>,
+    save_to: Option<&Path>,
+    cache: Option<&ProfileCache>,
+) -> crate::Result<SearchOutcome> {
+    let mut driver = match resume_from {
+        Some(ck) => SearchDriver::resume(space, cfg, ck)?,
+        None => SearchDriver::new(space, cfg),
+    };
+    let mut sink = save_to;
     loop {
-        // Fresh candidates in first-seen order.
-        let mut fresh: Vec<SpaceIndex> = Vec::new();
-        let mut seen: BTreeSet<SpaceIndex> = BTreeSet::new();
-        for &p in &pending {
-            if !evaluated.contains_key(&p) && seen.insert(p) {
-                fresh.push(p);
-            }
-        }
-        if cfg.max_evals > 0 {
-            let budget = cfg.max_evals.saturating_sub(evaluated.len());
-            fresh.truncate(budget);
-        }
-
-        if !fresh.is_empty() {
-            generations += 1;
-            let points: Vec<DesignPoint> = fresh.iter().map(|&i| space.point(i)).collect();
-            let rows = evaluator.rows(&points);
-            assert_eq!(rows.len(), points.len(), "evaluator returned wrong row count");
-            let req = EvalRequest { configs: rows, ..shallow(base) };
-            let out = sweep(factory, &req, grid, &SweepConfig { threads: cfg.threads })?;
-            engine = out.engine;
-            threads_used = threads_used.max(out.threads);
-            for (si, sc) in out.scenarios.iter().enumerate() {
-                let res = &sc.outcome.result;
-                for (ci, &idx) in fresh.iter().enumerate() {
-                    let d = res.metric(MetricRow::Delay, ci);
-                    let ev = PointEval {
-                        f1: res.metric(MetricRow::COp, ci) * d,
-                        f2: res.metric(MetricRow::CEmb, ci) * d,
-                        tcdp: res.metric(MetricRow::Tcdp, ci),
-                        feasible: res.metric(MetricRow::Feasible, ci) > 0.5,
-                    };
-                    evaluated
-                        .entry(idx)
-                        .or_insert_with(|| Vec::with_capacity(n_scenarios))
-                        .push(ev);
-                    if si == 0 {
-                        names.insert(idx, res.names[ci].clone());
-                    }
+        let evals_before = driver.evaluations();
+        let done = driver.step(factory, space, evaluator, base, grid, cache)?;
+        // Persist after every generation that evaluated something, and
+        // always at termination. Stride-halving/no-op steps change no
+        // evaluated state worth the full-serialization cost — resuming
+        // from the previous checkpoint replays them deterministically.
+        // A failed write must not discard the in-memory search (the
+        // engine work already happened; the previous checkpoint is still
+        // valid) — warn once and keep going uncheckpointed, mirroring
+        // the cache layer's degrade-on-write-failure policy.
+        if let Some(path) = sink {
+            if done || driver.evaluations() > evals_before {
+                if let Err(e) = write_checkpoint(path, &driver.checkpoint()) {
+                    eprintln!(
+                        "[checkpoint] write to {} failed ({e}); continuing without checkpoints",
+                        path.display()
+                    );
+                    sink = None;
                 }
             }
         }
-
-        let pool = feasible_pool(&evaluated);
-        let front_pts: Vec<(f64, f64)> = pool.iter().map(|p| (p.0, p.1)).collect();
-        let front_idx = pareto_front(&front_pts);
-
-        // Guide set: archive members (frontier mode), per-scenario tCDP
-        // leaders, and the incumbent best.
-        let mut guides: BTreeSet<SpaceIndex> = BTreeSet::new();
-        if cfg.frontier {
-            for &i in &front_idx {
-                guides.insert(pool[i].4);
-            }
-        }
-        for si in 0..n_scenarios {
-            let mut sc: Vec<&Pooled> = pool.iter().filter(|p| p.3 == si).collect();
-            sc.sort_by(|a, b| a.2.total_cmp(&b.2).then(a.4.cmp(&b.4)));
-            for p in sc.into_iter().take(cfg.guide_top_k) {
-                guides.insert(p.4);
-            }
-        }
-        if let Some(best) = incumbent(&pool) {
-            guides.insert(best.4);
-        }
-
-        // Next round: unevaluated lattice neighbours of the guides.
-        pending = Vec::new();
-        for &g in &guides {
-            for nb in neighbors(g, dims, stride) {
-                if !evaluated.contains_key(&nb) {
-                    pending.push(nb);
-                }
-            }
-        }
-
-        if pending.is_empty() {
-            if stride > 1 {
-                stride /= 2;
-                continue;
-            }
-            converged = true;
-            break;
-        }
-        if cfg.max_evals > 0 && evaluated.len() >= cfg.max_evals {
-            break;
-        }
-        if generations >= MAX_GENERATIONS {
+        if done {
             break;
         }
     }
-
-    // Final archive + incumbent from the full evaluated set.
-    let pool = feasible_pool(&evaluated);
-    let front_pts: Vec<(f64, f64)> = pool.iter().map(|p| (p.0, p.1)).collect();
-    let mut front_idx = pareto_front(&front_pts);
-    front_idx.sort_by(|&a, &b| pool[a].0.total_cmp(&pool[b].0).then(pool[a].4.cmp(&pool[b].4)));
-    let archive: Vec<ArchivePoint> = front_idx
-        .into_iter()
-        .map(|i| {
-            let p = &pool[i];
-            ArchivePoint {
-                scenario: p.3,
-                scenario_label: scenario_labels[p.3].clone(),
-                index: p.4,
-                name: names[&p.4].clone(),
-                f1: p.0,
-                f2: p.1,
-                tcdp: p.2,
-            }
-        })
-        .collect();
-    let best = incumbent(&pool).map(|p| SearchBest {
-        scenario: p.3,
-        scenario_label: scenario_labels[p.3].clone(),
-        index: p.4,
-        name: names[&p.4].clone(),
-        tcdp: p.2,
-    });
-
-    Ok(SearchOutcome {
-        best,
-        archive,
-        evaluations: evaluated.len(),
-        space_size: space.len(),
-        generations,
-        converged,
-        engine,
-        threads: threads_used,
-    })
+    Ok(driver.outcome(space, grid))
 }
 
 #[cfg(test)]
@@ -745,6 +1366,230 @@ mod tests {
         assert!(out.best.is_none());
         assert!(out.archive.is_empty());
         assert!(out.converged, "infeasible search still terminates");
+    }
+
+    /// Outcomes bit-identical up to run-environment fields (threads).
+    fn outcomes_identical(a: &SearchOutcome, b: &SearchOutcome) {
+        assert_eq!(a.evaluations, b.evaluations);
+        assert_eq!(a.generations, b.generations);
+        assert_eq!(a.converged, b.converged);
+        assert_eq!(a.best, b.best);
+        assert_eq!(a.archive, b.archive);
+        assert_eq!(a.space_size, b.space_size);
+    }
+
+    #[test]
+    fn driver_run_equals_one_shot_search() {
+        let space = synth_space();
+        let one_shot = search(
+            &HostEngineFactory,
+            &space,
+            &synth_row,
+            &synth_base(),
+            &synth_grid(),
+            &synth_cfg(),
+        )
+        .unwrap();
+        let driver = SearchDriver::new(&space, &synth_cfg());
+        let stepped = driver
+            .run(&HostEngineFactory, &space, &synth_row, &synth_base(), &synth_grid())
+            .unwrap();
+        outcomes_identical(&one_shot, &stepped);
+    }
+
+    #[test]
+    fn interrupted_resumed_search_is_bit_identical() {
+        let space = synth_space();
+        let cfg = synth_cfg();
+        let full = search(
+            &HostEngineFactory,
+            &space,
+            &synth_row,
+            &synth_base(),
+            &synth_grid(),
+            &cfg,
+        )
+        .unwrap();
+
+        for interrupt_after in [0usize, 1, 2, 5] {
+            // Phase 1: run `interrupt_after` steps, then "crash".
+            let mut d = SearchDriver::new(&space, &cfg);
+            let mut finished_early = false;
+            let (base, grid) = (synth_base(), synth_grid());
+            for _ in 0..interrupt_after {
+                if d.step(&HostEngineFactory, &space, &synth_row, &base, &grid, None).unwrap() {
+                    finished_early = true;
+                    break;
+                }
+            }
+            // Serialize through the JSON envelope (the real resume path).
+            let ck = SearchCheckpoint::from_json_str(&d.checkpoint().to_json_string()).unwrap();
+            assert_eq!(ck, d.checkpoint());
+
+            // Phase 2: a fresh process resumes and finishes.
+            let resumed = SearchDriver::resume(&space, &cfg, &ck)
+                .unwrap()
+                .run(&HostEngineFactory, &space, &synth_row, &synth_base(), &synth_grid())
+                .unwrap();
+            outcomes_identical(&full, &resumed);
+            let _ = finished_early;
+        }
+    }
+
+    #[test]
+    fn budget_extended_resume_continues_where_same_budget_resume_stops() {
+        let space = synth_space();
+        let capped = SearchConfig { max_evals: 20, ..synth_cfg() };
+        let stopped = {
+            let mut d = SearchDriver::new(&space, &capped);
+            let (base, grid) = (synth_base(), synth_grid());
+            while !d.step(&HostEngineFactory, &space, &synth_row, &base, &grid, None).unwrap() {}
+            d
+        };
+        let ck = stopped.checkpoint();
+        assert!(ck.done && !ck.converged && !ck.pending.is_empty());
+
+        // Same budget: the resume reproduces the truncated outcome and
+        // evaluates nothing new.
+        let same = SearchDriver::resume(&space, &capped, &ck)
+            .unwrap()
+            .run(&HostEngineFactory, &space, &synth_row, &synth_base(), &synth_grid())
+            .unwrap();
+        assert_eq!(same.evaluations, ck.evaluated.len());
+        assert!(!same.converged);
+
+        // Raised budget: the search reopens, continues the checkpointed
+        // trajectory and converges past the old cap.
+        let extended_cfg = SearchConfig { max_evals: 0, ..capped };
+        let extended = SearchDriver::resume(&space, &extended_cfg, &ck)
+            .unwrap()
+            .run(&HostEngineFactory, &space, &synth_row, &synth_base(), &synth_grid())
+            .unwrap();
+        assert!(extended.evaluations > ck.evaluated.len());
+        assert!(extended.converged);
+    }
+
+    #[test]
+    fn resume_rejects_mismatched_checkpoints() {
+        let space = synth_space();
+        let cfg = synth_cfg();
+        let mut d = SearchDriver::new(&space, &cfg);
+        let (base, grid) = (synth_base(), synth_grid());
+        d.step(&HostEngineFactory, &space, &synth_row, &base, &grid, None).unwrap();
+        let ck = d.checkpoint();
+
+        // Wrong seed.
+        let other_seed = SearchConfig { seed: ck.seed ^ 1, ..cfg };
+        assert!(SearchDriver::resume(&space, &other_seed, &ck).is_err());
+        // Wrong space shape.
+        let mut small = synth_space();
+        small.mac.pop();
+        assert!(SearchDriver::resume(&small, &cfg, &ck).is_err());
+        // Stale schema.
+        let mut stale = ck.clone();
+        stale.schema = CHECKPOINT_SCHEMA + 1;
+        assert!(SearchDriver::resume(&space, &cfg, &stale).is_err());
+        let mut doc = stale.to_json_string();
+        assert!(SearchCheckpoint::from_json_str(&doc).is_err());
+        // Corrupted document.
+        doc.truncate(doc.len() / 2);
+        assert!(SearchCheckpoint::from_json_str(&doc).is_err());
+        // Structurally-valid tampering (edited stride, stale digest) is
+        // caught by the integrity digest.
+        let mut tampered = parse(&ck.to_json_string()).unwrap();
+        if let Json::Obj(o) = &mut tampered {
+            o.insert("stride".to_string(), Json::Num(64.0));
+        }
+        assert!(SearchCheckpoint::from_json_str(&tampered.to_string()).is_err());
+        // A digest-less document is refused outright.
+        let mut stripped = parse(&ck.to_json_string()).unwrap();
+        if let Json::Obj(o) = &mut stripped {
+            o.remove("digest");
+        }
+        assert!(SearchCheckpoint::from_json_str(&stripped.to_string()).is_err());
+        // The intact checkpoint still resumes…
+        let mut resumed = SearchDriver::resume(&space, &cfg, &ck).unwrap();
+        // …but stepping it under a different grid is an error (the
+        // recorded eval vectors embed the scenario knobs) — whether the
+        // cardinality changes…
+        let bigger = synth_grid().with_beta("b=2", 2.0);
+        assert!(resumed
+            .step(&HostEngineFactory, &space, &synth_row, &base, &bigger, None)
+            .is_err());
+        // …or only a value does (same labels/shape, one lifetime moved).
+        let recalibrated = ScenarioGrid::new()
+            .with_lifetime("lt=2e5s", 3e5)
+            .with_lifetime("lt=2e7s", 2e7)
+            .with_beta("b=1", 1.0);
+        assert!(resumed
+            .step(&HostEngineFactory, &space, &synth_row, &base, &recalibrated, None)
+            .is_err());
+        // A different engine label is also refused.
+        struct RelabeledHost;
+        impl crate::runtime::EngineFactory for RelabeledHost {
+            fn build(&self) -> crate::Result<Box<dyn crate::runtime::Engine>> {
+                Ok(Box::new(crate::runtime::HostEngine::new()))
+            }
+            fn label(&self) -> &'static str {
+                "host-v2"
+            }
+        }
+        assert!(resumed.step(&RelabeledHost, &space, &synth_row, &base, &grid, None).is_err());
+        // The matching grid + engine still step fine.
+        assert!(resumed.step(&HostEngineFactory, &space, &synth_row, &base, &grid, None).is_ok());
+    }
+
+    #[test]
+    fn checkpoint_file_roundtrip_and_resumable_entry() {
+        let dir = crate::testkit::test_dir("search_ckpt");
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("search.ckpt.json");
+        let space = synth_space();
+        let cfg = synth_cfg();
+
+        // A run with a checkpoint sink terminates with a `done` file.
+        let direct = search(
+            &HostEngineFactory,
+            &space,
+            &synth_row,
+            &synth_base(),
+            &synth_grid(),
+            &cfg,
+        )
+        .unwrap();
+        let saved = search_resumable(
+            &HostEngineFactory,
+            &space,
+            &synth_row,
+            &synth_base(),
+            &synth_grid(),
+            &cfg,
+            None,
+            Some(path.as_path()),
+            None,
+        )
+        .unwrap();
+        outcomes_identical(&direct, &saved);
+        let ck = read_checkpoint(&path).unwrap();
+        assert!(ck.done);
+        assert_eq!(ck.generations, direct.generations);
+
+        // Resuming a finished checkpoint reproduces the outcome without
+        // re-evaluating anything.
+        let resumed = search_resumable(
+            &HostEngineFactory,
+            &space,
+            &synth_row,
+            &synth_base(),
+            &synth_grid(),
+            &cfg,
+            Some(&ck),
+            None,
+            None,
+        )
+        .unwrap();
+        outcomes_identical(&direct, &resumed);
+        std::fs::remove_dir_all(&dir).ok();
     }
 
     #[test]

@@ -24,10 +24,11 @@
 use std::sync::atomic::{AtomicUsize, Ordering};
 
 use crate::carbon::ScenarioOverlay;
-use crate::matrixform::{DesignProfile, EvalRequest, EvalResult, MetricRow};
-use crate::runtime::{evaluate_fused, profile_request, Engine, EngineFactory};
+use crate::matrixform::{DesignProfile, EvalRequest, EvalResult, MetricRow, PackedProblem};
+use crate::runtime::{evaluate_fused, profile_request, CacheStats, Engine, EngineFactory};
 
 use super::batching::{chunk_neutral, chunk_size, merge, num_chunks, shallow};
+use super::cache::{CacheKey, ProfileCache};
 use super::explore::{explore, summarize, ExploreOutcome};
 use super::grid::ScenarioGrid;
 
@@ -65,6 +66,10 @@ pub struct SweepOutcome {
     /// Config chunks the engine contracted (once for [`sweep`], once per
     /// scenario for [`sweep_fused`]).
     pub profile_chunks: usize,
+    /// Per-run profile-cache delta when the sweep ran against a
+    /// [`ProfileCache`] (`hits` = phase-A engine contractions avoided);
+    /// `None` on uncached paths.
+    pub cache: Option<CacheStats>,
 }
 
 impl SweepOutcome {
@@ -153,14 +158,87 @@ pub fn sweep(
     grid: &ScenarioGrid,
     cfg: &SweepConfig,
 ) -> crate::Result<SweepOutcome> {
+    sweep_with_cache(factory, base, grid, cfg, None)
+}
+
+/// One phase-A work unit that missed the cache: the chunk's slot in the
+/// profile list, its packed batch and its content key.
+struct MissItem {
+    slot: usize,
+    packed: PackedProblem,
+    key: CacheKey,
+}
+
+/// [`sweep`] with an optional persistent [`ProfileCache`] in front of
+/// phase A: each chunk is looked up by content key first; only misses
+/// reach the engine (fanned across workers exactly like the uncached
+/// path) and are written back. Cached profiles are bit-exact copies of
+/// what the engine would produce, so with or without the cache — and
+/// cold or warm — the outcome is bit-identical on the host engine
+/// (locked by `rust/tests/cache_props.rs`). The outcome's `cache` field
+/// carries this run's hit/miss delta.
+pub fn sweep_with_cache(
+    factory: &dyn EngineFactory,
+    base: &EvalRequest,
+    grid: &ScenarioGrid,
+    cfg: &SweepConfig,
+    cache: Option<&ProfileCache>,
+) -> crate::Result<SweepOutcome> {
     let scenarios = grid.scenarios();
     let n_scenarios = scenarios.len();
 
     // Phase A — the only part that touches the engine hot loop (one
     // config clone per chunk, same as the fused item builder).
     let chunk_reqs = chunk_neutral(&base.tasks, &base.configs);
-    let (profiles, threads_used): (Vec<DesignProfile>, usize) =
-        fan_out(factory, &chunk_reqs, cfg.threads, profile_request)?;
+    let (profiles, threads_used, cache_delta): (Vec<DesignProfile>, usize, Option<CacheStats>) =
+        match cache {
+            None => {
+                let (profiles, threads) =
+                    fan_out(factory, &chunk_reqs, cfg.threads, profile_request)?;
+                (profiles, threads, None)
+            }
+            Some(cache) => {
+                let engine_label = factory.label();
+                let before = cache.stats();
+                let mut slots: Vec<Option<DesignProfile>> =
+                    (0..chunk_reqs.len()).map(|_| None).collect();
+                let mut misses: Vec<MissItem> = Vec::new();
+                for (slot, req) in chunk_reqs.iter().enumerate() {
+                    let packed = PackedProblem::from_request(req);
+                    let key = ProfileCache::key_for_packed(&packed, engine_label);
+                    match cache.load(&key, engine_label) {
+                        Some(profile) => slots[slot] = Some(profile),
+                        None => misses.push(MissItem { slot, packed, key }),
+                    }
+                }
+                // Only the misses touch the engine; a fully warm cache
+                // performs zero phase-A contractions.
+                let (computed, threads) = if misses.is_empty() {
+                    (Vec::new(), 1)
+                } else {
+                    fan_out(factory, &misses, cfg.threads, |engine, item: &MissItem| {
+                        let raw = engine.profile(&item.packed)?;
+                        Ok(DesignProfile::from_parts(
+                            &item.packed,
+                            raw.energy,
+                            raw.delay,
+                            raw.d_task,
+                        ))
+                    })?
+                };
+                for (item, profile) in misses.iter().zip(computed) {
+                    // A failed write-back (disk full, permissions) must
+                    // not abort a sweep whose engine work succeeded —
+                    // the profile is used anyway and the failure shows
+                    // up as `write_errors` on the stats surface.
+                    let _ = cache.store(&item.key, &profile, engine_label);
+                    slots[item.slot] = Some(profile);
+                }
+                let profiles =
+                    slots.into_iter().map(|s| s.expect("chunk left unprofiled")).collect();
+                (profiles, threads, Some(cache.stats().since(&before)))
+            }
+        };
 
     // Phase B — (scenario × chunk) overlays in the same scenario-major,
     // chunk-ascending order the fused paths merge, so results are
@@ -180,7 +258,11 @@ pub fn sweep(
             }
             ScenarioResult {
                 label: sc.label,
-                outcome: summarize(merged.expect("scenario produced no chunks")),
+                // An empty design space profiles into zero chunks; each
+                // scenario then reports the empty outcome.
+                outcome: summarize(
+                    merged.unwrap_or_else(|| EvalResult::empty(base.tasks.num_tasks())),
+                ),
             }
         })
         .collect();
@@ -191,6 +273,7 @@ pub fn sweep(
         threads: threads_used,
         items: profiles.len() * n_scenarios,
         profile_chunks: profiles.len(),
+        cache: cache_delta,
     })
 }
 
@@ -215,6 +298,11 @@ fn build_items(
     let mut items = Vec::new();
     for (si, sc) in scenarios.iter().enumerate() {
         let req = sc.apply(base);
+        if req.configs.is_empty() {
+            // No configs, no engine items; the merge below falls back to
+            // the empty result for every scenario.
+            continue;
+        }
         let cs = chunk_size(req.configs.len());
         if req.configs.len() <= cs {
             items.push(SweepItem { scenario: si, req });
@@ -266,7 +354,9 @@ pub fn sweep_fused(
         .zip(merged)
         .map(|(sc, res)| ScenarioResult {
             label: sc.label,
-            outcome: summarize(res.expect("scenario produced no chunks")),
+            outcome: summarize(
+                res.unwrap_or_else(|| EvalResult::empty(base.tasks.num_tasks())),
+            ),
         })
         .collect();
 
@@ -276,6 +366,7 @@ pub fn sweep_fused(
         threads: threads_used,
         items: n_items,
         profile_chunks: num_chunks(base.configs.len()),
+        cache: None,
     })
 }
 
@@ -299,6 +390,7 @@ pub fn sweep_sequential(
         threads: 1,
         items: n,
         profile_chunks: num_chunks(base.configs.len()),
+        cache: None,
     })
 }
 
@@ -390,6 +482,50 @@ mod tests {
             assert_eq!(two.items, fused.items, "c={c}");
             assert_outcomes_identical(&two, &fused);
         }
+    }
+
+    #[test]
+    fn warm_cached_sweep_is_bit_identical_with_zero_contractions() {
+        let dir = crate::testkit::test_dir("sweep_cache_warm");
+        std::fs::remove_dir_all(&dir).ok();
+        let cache = crate::dse::cache::ProfileCache::open(&dir).unwrap();
+        let req = request(2500); // 3 profile chunks
+        let cfg = SweepConfig { threads: 2 };
+
+        let plain = sweep(&HostEngineFactory, &req, &grid(), &cfg).unwrap();
+        let cold = sweep_with_cache(&HostEngineFactory, &req, &grid(), &cfg, Some(&cache)).unwrap();
+        let warm = sweep_with_cache(&HostEngineFactory, &req, &grid(), &cfg, Some(&cache)).unwrap();
+        assert_outcomes_identical(&plain, &cold);
+        assert_outcomes_identical(&cold, &warm);
+
+        let cs = cold.cache.expect("cold run reports cache stats");
+        assert_eq!((cs.hits, cs.misses, cs.writes), (0, 3, 3));
+        let ws = warm.cache.expect("warm run reports cache stats");
+        assert_eq!((ws.hits, ws.misses, ws.writes), (3, 0, 0));
+        assert_eq!(ws.contractions_avoided(), warm.profile_chunks);
+        assert!(plain.cache.is_none());
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn empty_design_space_sweeps_to_empty_scenarios() {
+        // Regression: zero configs used to panic inside packing; now
+        // every path reports empty per-scenario outcomes.
+        let req = request(0);
+        let par = sweep(&HostEngineFactory, &req, &grid(), &SweepConfig::default()).unwrap();
+        assert_eq!(par.scenarios.len(), 4);
+        assert_eq!(par.profile_chunks, 0);
+        assert_eq!(par.items, 0);
+        assert!(par.best().is_none());
+        for s in &par.scenarios {
+            assert_eq!(s.outcome.result.c, 0);
+            assert_eq!(s.outcome.stats.feasible, 0);
+        }
+        let fused =
+            sweep_fused(&HostEngineFactory, &req, &grid(), &SweepConfig::default()).unwrap();
+        let seq = sweep_sequential(&mut HostEngine::new(), &req, &grid()).unwrap();
+        assert_outcomes_identical(&par, &fused);
+        assert_outcomes_identical(&par, &seq);
     }
 
     #[test]

@@ -15,13 +15,17 @@
 //!   stacking win emerges from search: the optimum is a 3-D stacked
 //!   design, found after evaluating a few percent of the space.
 
+use std::path::Path;
+
 use crate::carbon::FabGrid;
+use crate::dse::cache::ProfileCache;
 use crate::dse::grid::{ScenarioGrid, YEAR_S};
 use crate::dse::search::{
-    search, ReplayEvaluator, SearchConfig, SearchOutcome, SimulatorEvaluator,
+    search_resumable, ReplayEvaluator, SearchCheckpoint, SearchConfig, SearchOutcome,
+    SimulatorEvaluator,
 };
 use crate::dse::space::SearchSpace;
-use crate::dse::sweep::{sweep, SweepConfig, SweepOutcome};
+use crate::dse::sweep::{sweep_with_cache, SweepConfig, SweepOutcome};
 use crate::matrixform::EvalRequest;
 use crate::report::{search_archive_table, search_table, Table};
 use crate::runtime::EngineFactory;
@@ -51,16 +55,51 @@ pub fn run(
     cluster: Cluster,
     cfg: &SearchConfig,
 ) -> crate::Result<SearchFig7> {
+    run_resumable(factory, cluster, cfg, None, None, None)
+}
+
+/// [`run`] with checkpoint/cache plumbing: resume the search phase from
+/// a [`SearchCheckpoint`], persist one after every generation
+/// (`save_to`), and front every profile phase — the exhaustive
+/// reference's and the search generations' — with a [`ProfileCache`].
+/// The exhaustive reference is recomputed either way (it is the
+/// correctness anchor, not part of the resumable state; on a warm cache
+/// it costs zero engine contractions); the search outcome is
+/// bit-identical to an uninterrupted run.
+pub fn run_resumable(
+    factory: &dyn EngineFactory,
+    cluster: Cluster,
+    cfg: &SearchConfig,
+    resume_from: Option<&SearchCheckpoint>,
+    save_to: Option<&Path>,
+    cache: Option<&ProfileCache>,
+) -> crate::Result<SearchFig7> {
     let space = profile_cluster(cluster);
     let grid = ScenarioGrid::fig7(&space.rows, &space.tasks, space.ci_use_g_per_j);
-    let exhaustive = sweep(factory, &space.base, &grid, &SweepConfig { threads: cfg.threads })?;
+    let exhaustive = sweep_with_cache(
+        factory,
+        &space.base,
+        &grid,
+        &SweepConfig { threads: cfg.threads },
+        cache,
+    )?;
 
     // The exhaustive reference already profiled the whole grid; the
     // search replays those rows instead of re-running the simulator
     // (bit-identical — rows are keyed by the shared grid labels).
     let sspace = SearchSpace::fig7_grid();
     let evaluator = ReplayEvaluator::new(&space.rows);
-    let outcome = search(factory, &sspace, &evaluator, &space.base, &grid, cfg)?;
+    let outcome = search_resumable(
+        factory,
+        &sspace,
+        &evaluator,
+        &space.base,
+        &grid,
+        cfg,
+        resume_from,
+        save_to,
+        cache,
+    )?;
 
     let mut table = Table::new(
         &format!(
@@ -120,12 +159,37 @@ pub fn run_expanded(
     cluster: Cluster,
     cfg: &SearchConfig,
 ) -> crate::Result<SearchExpanded> {
+    run_expanded_resumable(factory, cluster, cfg, None, None, None)
+}
+
+/// [`run_expanded`] with checkpoint/cache plumbing — on the ~10k-point
+/// space the per-generation simulator work is the expensive part, which
+/// is exactly what resuming from a checkpoint skips; a profile cache
+/// additionally serves exact re-runs from disk.
+pub fn run_expanded_resumable(
+    factory: &dyn EngineFactory,
+    cluster: Cluster,
+    cfg: &SearchConfig,
+    resume_from: Option<&SearchCheckpoint>,
+    save_to: Option<&Path>,
+    cache: Option<&ProfileCache>,
+) -> crate::Result<SearchExpanded> {
     let sspace = SearchSpace::expanded_2d3d();
     let workloads = cluster_workloads(cluster);
     let evaluator = SimulatorEvaluator { workloads: workloads.clone(), fab: FabGrid::Coal };
     // Shell request: the search fills configs per generation.
     let base: EvalRequest = rows_request(Vec::new(), &workloads, YEAR_S, 1.0);
-    let outcome = search(factory, &sspace, &evaluator, &base, &expanded_grid(), cfg)?;
+    let outcome = search_resumable(
+        factory,
+        &sspace,
+        &evaluator,
+        &base,
+        &expanded_grid(),
+        cfg,
+        resume_from,
+        save_to,
+        cache,
+    )?;
     let mut table = search_table(&outcome);
     table.title = format!("Expanded 2-D/3-D space [{}] — {}", cluster.label(), table.title);
     let archive_table = search_archive_table(&outcome);
@@ -164,6 +228,46 @@ mod tests {
             f.outcome.evaluations,
             f.outcome.space_size
         );
+    }
+
+    #[test]
+    fn checkpointed_anchor_run_matches_plain_run() {
+        let dir = crate::testkit::test_dir("fig7_ckpt");
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("fig7.ckpt.json");
+
+        let plain = run(&HostEngineFactory, Cluster::Ai5, &two_threads()).unwrap();
+        let saved = run_resumable(
+            &HostEngineFactory,
+            Cluster::Ai5,
+            &two_threads(),
+            None,
+            Some(path.as_path()),
+            None,
+        )
+        .unwrap();
+        assert_eq!(plain.outcome.best, saved.outcome.best);
+        assert_eq!(plain.outcome.archive, saved.outcome.archive);
+        assert_eq!(plain.outcome.evaluations, saved.outcome.evaluations);
+        assert_eq!(plain.outcome.generations, saved.outcome.generations);
+
+        // The sink left a finished checkpoint; resuming from it
+        // reproduces the outcome without re-evaluating a single point.
+        let ck = crate::dse::search::read_checkpoint(&path).unwrap();
+        assert!(ck.done);
+        assert_eq!(ck.evaluated.len(), plain.outcome.evaluations);
+        let resumed = run_resumable(
+            &HostEngineFactory,
+            Cluster::Ai5,
+            &two_threads(),
+            Some(&ck),
+            None,
+            None,
+        )
+        .unwrap();
+        assert_eq!(plain.outcome.best, resumed.outcome.best);
+        assert_eq!(plain.outcome.archive, resumed.outcome.archive);
+        std::fs::remove_dir_all(&dir).ok();
     }
 
     #[test]

@@ -8,8 +8,9 @@
 //! produced by the (scenario × config-chunk) fan-out path.
 
 use crate::carbon::FabGrid;
+use crate::dse::cache::ProfileCache;
 use crate::dse::grid::ScenarioGrid;
-use crate::dse::sweep::{sweep, sweep_fused, SweepConfig, SweepOutcome};
+use crate::dse::sweep::{sweep_fused, sweep_with_cache, SweepConfig, SweepOutcome};
 use crate::dse::{design_grid, profile_configs, profiles_to_rows};
 use crate::matrixform::{ConfigRow, EvalRequest, TaskMatrix};
 use crate::report::{sweep_table, Table};
@@ -63,9 +64,23 @@ pub fn run(
     cluster: Cluster,
     threads: usize,
 ) -> crate::Result<SweepFig7> {
+    run_cached(factory, cluster, threads, None)
+}
+
+/// Warm-start variant of [`run`]: phase A consults a persistent
+/// [`ProfileCache`] before touching the engine. On a warm cache the
+/// sweep performs **zero** engine contractions and is bit-identical to
+/// the cold run; the outcome's `cache` field (and the rendered table
+/// title) carry the hit/miss proof.
+pub fn run_cached(
+    factory: &dyn EngineFactory,
+    cluster: Cluster,
+    threads: usize,
+    cache: Option<&ProfileCache>,
+) -> crate::Result<SweepFig7> {
     let space = profile_cluster(cluster);
     let grid = ScenarioGrid::fig7(&space.rows, &space.tasks, space.ci_use_g_per_j);
-    let outcome = sweep(factory, &space.base, &grid, &SweepConfig { threads })?;
+    let outcome = sweep_with_cache(factory, &space.base, &grid, &SweepConfig { threads }, cache)?;
     let mut table = sweep_table(&outcome);
     table.title = format!("Fig 7 sweep [{}] — {}", cluster.label(), table.title);
     Ok(SweepFig7 { cluster, outcome, table })
@@ -90,6 +105,7 @@ pub fn run_fused(
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::dse::sweep::sweep;
     use crate::dse::sweep_sequential;
     use crate::runtime::{HostEngine, HostEngineFactory};
 
@@ -106,6 +122,33 @@ mod tests {
         let best: Vec<f64> = f.outcome.scenarios.iter().map(|s| s.outcome.stats.best).collect();
         assert!(best[0] > best[1] && best[1] > best[2], "best tCDP not ordered: {best:?}");
         assert_eq!(f.table.len(), 3);
+    }
+
+    #[test]
+    fn warm_cached_fig7_sweep_is_bit_identical_with_zero_contractions() {
+        let dir = crate::testkit::test_dir("fig7_cache");
+        std::fs::remove_dir_all(&dir).ok();
+        let cache = ProfileCache::open(&dir).unwrap();
+
+        let plain = run(&HostEngineFactory, Cluster::Ai5, 2).unwrap();
+        let cold = run_cached(&HostEngineFactory, Cluster::Ai5, 2, Some(&cache)).unwrap();
+        let warm = run_cached(&HostEngineFactory, Cluster::Ai5, 2, Some(&cache)).unwrap();
+        for (a, b) in [(&plain, &cold), (&cold, &warm)] {
+            for (x, y) in a.outcome.scenarios.iter().zip(&b.outcome.scenarios) {
+                assert_eq!(x.label, y.label);
+                assert_eq!(x.outcome.result.metrics, y.outcome.result.metrics);
+                assert_eq!(x.outcome.optimal, y.outcome.optimal);
+            }
+        }
+        // 121 configs = one chunk: cold misses it once, warm avoids the
+        // contraction entirely.
+        let cs = cold.outcome.cache.unwrap();
+        assert_eq!((cs.hits, cs.misses, cs.writes), (0, 1, 1));
+        let ws = warm.outcome.cache.unwrap();
+        assert_eq!((ws.hits, ws.misses), (1, 0));
+        assert_eq!(ws.contractions_avoided(), warm.outcome.profile_chunks);
+        assert!(warm.table.title.contains("1 contraction(s) avoided"), "{}", warm.table.title);
+        std::fs::remove_dir_all(&dir).ok();
     }
 
     #[test]

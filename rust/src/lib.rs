@@ -28,7 +28,11 @@
 //! bit-identical to the fused graph. Multi-scenario studies run through
 //! [`dse::sweep`], which profiles chunks once across worker threads
 //! (each owning a private engine built by a [`runtime::EngineFactory`])
-//! and fans only cheap overlays across the scenario grid.
+//! and fans only cheap overlays across the scenario grid. Profiles
+//! persist across processes through the content-addressed
+//! [`dse::cache::ProfileCache`] (warm-start sweeps perform zero engine
+//! contractions, bit-identically), and [`dse::search`] checkpoints its
+//! generation loop so interrupted searches resume bit-identically.
 //!
 //! See `DESIGN.md` for the per-experiment index and `EXPERIMENTS.md` for
 //! paper-vs-measured results.

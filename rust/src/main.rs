@@ -3,9 +3,12 @@
 //! runs the requested experiment; `--engine host` forces the pure-Rust
 //! mirror.
 
+use std::path::{Path, PathBuf};
+
 use xrcarbon::cli::Args;
-use xrcarbon::dse::search::SearchConfig;
-use xrcarbon::dse::sweep::{sweep, SweepConfig};
+use xrcarbon::dse::cache::ProfileCache;
+use xrcarbon::dse::search::{read_checkpoint, SearchConfig};
+use xrcarbon::dse::sweep::{sweep_with_cache, SweepConfig};
 use xrcarbon::dse::ScenarioGrid;
 use xrcarbon::experiments::{
     common::Ctx, fig01_metric_comparison, fig02_retrospective, fig03_fleet_categories,
@@ -50,12 +53,25 @@ COMMANDS
                        fig10    operational lifetime 1e3..1e8 s (alias: lifetime)
                        fig11    provisioning lifetimes 1-3y x QoS on/off
                        ci       CI diversity (world|us|coal|renewable grids)
+              --cache-dir DIR  persistent profile cache: phase-A design
+                        profiles are content-addressed on disk, so repeat
+                        sweeps over a cached space perform zero engine
+                        contractions (the table title shows hits/misses);
+                        with --search, also writes a checkpoint to
+                        DIR/search_<space>.ckpt.json after every generation
               --search  adaptive Pareto-guided search instead of exhaustive
                         enumeration                [--space fig7|expanded
-                                                    --seed N  --max-evals N]
+                                                    --seed N  --max-evals N
+                                                    --resume CKPT.json]
                         fig7:     121-point anchor, prints exhaustive-vs-search
                         expanded: ~10k-point 2-D/3-D space (MAC x SRAM x
                                   stacking x clock), search only
+                        --resume continues an interrupted search from its
+                        checkpoint, bit-identical to an uninterrupted run
+                        (--seed and --max-evals default to the checkpoint's
+                        values; a conflicting seed/space/engine/grid is an
+                        error; pass a larger --max-evals to extend a
+                        budget-capped search)
   all         run everything above in order
 ";
 
@@ -95,25 +111,85 @@ fn run_search(args: &Args) -> anyhow::Result<()> {
     }
     let factory = factory_for(args);
     println!("[engine: {}]", factory.label());
+    let space_name = args.get("space", "fig7").to_string();
+
+    // --resume continues an interrupted run from its checkpoint;
+    // --cache-dir makes this run interruptible by persisting one after
+    // every generation.
+    let resume = match args.options.get("resume") {
+        Some(path) => {
+            let ck = read_checkpoint(path)?;
+            println!(
+                "[resume] {path}: {} evaluation(s), generation {}",
+                ck.evaluated.len(),
+                ck.generations
+            );
+            Some(ck)
+        }
+        None => None,
+    };
+    // Without explicit flags, a resumed run inherits the checkpoint's
+    // seed and budget: forgetting --seed must not fail the resume (the
+    // checkpoint already stores it — a *wrong* explicit seed still
+    // errors), and forgetting --max-evals must not silently uncap a
+    // capped search (passing a larger value is the budget-extension
+    // path).
+    let default_seed = resume.as_ref().map(|ck| ck.seed).unwrap_or(0xC0FFEE);
+    let default_max_evals = resume.as_ref().map(|ck| ck.max_evals).unwrap_or(0);
     let cfg = SearchConfig {
         threads: args.get_usize("threads", 0)?,
-        seed: args.get_u64("seed", 0xC0FFEE)?,
-        max_evals: args.get_usize("max-evals", 0)?,
+        seed: args.get_u64("seed", default_seed)?,
+        max_evals: args.get_usize("max-evals", default_max_evals)?,
         ..SearchConfig::default()
     };
-    match args.get("space", "fig7") {
+    // --cache-dir does double duty under --search: profile cache for
+    // every profile phase AND the checkpoint sink.
+    let (save_to, cache): (Option<PathBuf>, Option<ProfileCache>) =
+        match args.options.get("cache-dir") {
+            Some(dir) => {
+                // open() creates the directory, so the checkpoint path's
+                // parent exists before the first write.
+                let cache = ProfileCache::open(dir)?;
+                let ckpt = Path::new(dir).join(format!("search_{space_name}.ckpt.json"));
+                (Some(ckpt), Some(cache))
+            }
+            // A resumed run without --cache-dir keeps checkpointing to
+            // the file it resumed from — a second interrupt must not
+            // lose the progress made since the first one.
+            None => (args.options.get("resume").map(PathBuf::from), None),
+        };
+    let cache = cache.as_ref();
+
+    match space_name.as_str() {
         "fig7" => {
             // Anchor mode: exhaustive reference + search on the 121 grid.
-            let f = search_fig7::run(factory.as_ref(), cluster_for(args)?, &cfg)?;
+            let f = search_fig7::run_resumable(
+                factory.as_ref(),
+                cluster_for(args)?,
+                &cfg,
+                resume.as_ref(),
+                save_to.as_deref(),
+                cache,
+            )?;
             emit(args, "search_fig7", &f.table)?;
             print!("{}", search_archive_table(&f.outcome).render());
         }
         "expanded" => {
-            let f = search_fig7::run_expanded(factory.as_ref(), cluster_for(args)?, &cfg)?;
+            let f = search_fig7::run_expanded_resumable(
+                factory.as_ref(),
+                cluster_for(args)?,
+                &cfg,
+                resume.as_ref(),
+                save_to.as_deref(),
+                cache,
+            )?;
             emit(args, "search_expanded", &f.table)?;
             print!("{}", f.archive_table.render());
         }
         other => anyhow::bail!("unknown search space '{other}' (fig7|expanded)"),
+    }
+    if let Some(path) = &save_to {
+        println!("[checkpoint] wrote {}", path.display());
     }
     Ok(())
 }
@@ -122,20 +198,42 @@ fn run_sweep(args: &Args) -> anyhow::Result<()> {
     if args.has_flag("search") {
         return run_search(args);
     }
+    // Search-only options must not be silently ignored on the exhaustive
+    // path: plain sweeps are deterministic without a seed and not
+    // resumable (checkpoints cover the search loop only — see ROADMAP),
+    // so a dropped --resume would quietly re-run everything from scratch.
+    for opt in ["resume", "space", "max-evals", "seed"] {
+        if args.options.contains_key(opt) {
+            anyhow::bail!("--{opt} requires --search (within the sweep subcommand)");
+        }
+    }
     let factory = factory_for(args);
     println!("[engine: {}]", factory.label());
     let threads = args.get_usize("threads", 0)?;
+    // Persistent profile cache: repeat sweeps over the same design space
+    // skip every phase-A engine contraction (the table title proves it).
+    let cache = match args.options.get("cache-dir") {
+        Some(dir) => Some(ProfileCache::open(dir)?),
+        None => None,
+    };
+    let cache = cache.as_ref();
     let preset = args.get("preset", "fig7");
     match preset {
         "fig7" => {
-            let f = sweep_fig7::run(factory.as_ref(), cluster_for(args)?, threads)?;
+            let f = sweep_fig7::run_cached(factory.as_ref(), cluster_for(args)?, threads, cache)?;
             emit(args, "sweep_fig7", &f.table)?;
             print!("{}", sweep_best_table(&f.outcome).render());
         }
         "fig10" | "lifetime" => {
             let space = sweep_fig7::profile_cluster(cluster_for(args)?);
             let grid = ScenarioGrid::lifetime_decades(3, 8);
-            let out = sweep(factory.as_ref(), &space.base, &grid, &SweepConfig { threads })?;
+            let out = sweep_with_cache(
+                factory.as_ref(),
+                &space.base,
+                &grid,
+                &SweepConfig { threads },
+                cache,
+            )?;
             emit(args, "sweep_fig10", &sweep_table(&out))?;
             print!("{}", sweep_best_table(&out).render());
         }
@@ -146,7 +244,8 @@ fn run_sweep(args: &Args) -> anyhow::Result<()> {
             let mut base = space.base.clone();
             base.lifetime_s = 2.0 * xrcarbon::dse::grid::YEAR_S;
             let grid = ScenarioGrid::use_grids();
-            let out = sweep(factory.as_ref(), &base, &grid, &SweepConfig { threads })?;
+            let out =
+                sweep_with_cache(factory.as_ref(), &base, &grid, &SweepConfig { threads }, cache)?;
             emit(args, "sweep_ci", &sweep_table(&out))?;
             print!("{}", sweep_best_table(&out).render());
         }
@@ -161,7 +260,8 @@ fn run_sweep(args: &Args) -> anyhow::Result<()> {
                 true,
             );
             let grid = ScenarioGrid::fig11();
-            let out = sweep(factory.as_ref(), &base, &grid, &SweepConfig { threads })?;
+            let out =
+                sweep_with_cache(factory.as_ref(), &base, &grid, &SweepConfig { threads }, cache)?;
             emit(args, "sweep_fig11", &sweep_table(&out))?;
             print!("{}", sweep_best_table(&out).render());
         }

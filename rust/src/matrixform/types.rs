@@ -177,6 +177,14 @@ pub struct EvalResult {
 }
 
 impl EvalResult {
+    /// Result of evaluating zero configs: every buffer empty, metric
+    /// rows zero-length. `merge`/`summarize` compose with it naturally
+    /// (no feasible designs, no optima) — the well-defined outcome of an
+    /// empty request instead of a panic in the pack layer.
+    pub fn empty(t: usize) -> EvalResult {
+        EvalResult { names: Vec::new(), metrics: Vec::new(), d_task: Vec::new(), c: 0, t }
+    }
+
     /// Metric value for one config.
     pub fn metric(&self, row: MetricRow, config: usize) -> f64 {
         assert!(config < self.c);

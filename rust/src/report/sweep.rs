@@ -7,15 +7,28 @@ use crate::matrixform::MetricRow;
 use super::Table;
 
 /// Per-scenario `ExploreStats` table, one row per scenario in grid order.
+/// When the sweep ran against a profile cache the title carries this
+/// run's hit/miss delta and the contractions avoided.
 pub fn sweep_table(out: &SweepOutcome) -> Table {
+    let cache = match &out.cache {
+        Some(cs) => format!(
+            ", cache: {} hit(s) / {} miss(es) ({} rejected), {} contraction(s) avoided",
+            cs.hits,
+            cs.misses,
+            cs.rejected,
+            cs.contractions_avoided()
+        ),
+        None => String::new(),
+    };
     let mut t = Table::new(
         &format!(
-            "Scenario sweep — {} scenarios, {} profile chunk(s), {} work items, {} engine, {} thread(s)",
+            "Scenario sweep — {} scenarios, {} profile chunk(s), {} work items, {} engine, {} thread(s){}",
             out.scenarios.len(),
             out.profile_chunks,
             out.items,
             out.engine,
-            out.threads
+            out.threads,
+            cache
         ),
         &["scenario", "feasible", "best tCDP", "mean", "p5", "p95", "optimal design"],
     );
@@ -103,6 +116,23 @@ mod tests {
         let rendered = t.render();
         assert!(rendered.contains("a"));
         assert!(rendered.contains("host"));
+    }
+
+    #[test]
+    fn sweep_table_reports_cache_stats_when_present() {
+        let mut out = outcome();
+        assert!(out.cache.is_none());
+        assert!(!sweep_table(&out).title.contains("cache:"));
+        out.cache = Some(crate::runtime::CacheStats {
+            hits: 3,
+            misses: 1,
+            rejected: 1,
+            writes: 1,
+            write_errors: 0,
+        });
+        let title = sweep_table(&out).title;
+        assert!(title.contains("cache: 3 hit(s) / 1 miss(es) (1 rejected)"), "{title}");
+        assert!(title.contains("3 contraction(s) avoided"), "{title}");
     }
 
     #[test]

@@ -27,12 +27,14 @@ mod factory;
 mod host;
 #[cfg(feature = "pjrt")]
 mod pjrt;
+mod stats;
 
 pub use engine::{Engine, RawOutput, RawProfile};
 pub use factory::{auto_factory, EngineFactory, HostEngineFactory};
 #[cfg(feature = "pjrt")]
 pub use factory::PjrtEngineFactory;
 pub use host::HostEngine;
+pub use stats::{CacheCounters, CacheStats};
 #[cfg(feature = "pjrt")]
 pub use pjrt::PjrtEngine;
 

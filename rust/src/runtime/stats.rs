@@ -1,0 +1,169 @@
+//! Cache-stats surface: how much engine work the persistent profile
+//! cache saved.
+//!
+//! The expensive unit of runtime work is one phase-A engine contraction
+//! of a config chunk (O(C×T×K)). The [`crate::dse::cache::ProfileCache`]
+//! counts its outcomes through a [`CacheCounters`] (atomic, shared across
+//! sweep worker threads) and surfaces immutable [`CacheStats`] snapshots;
+//! `dse::sweep` attaches the per-run delta to its outcome so reports and
+//! benches can prove "zero contractions on a warm cache" rather than
+//! assert it.
+
+use std::sync::atomic::{AtomicUsize, Ordering};
+
+/// Immutable cache statistics (a [`CacheCounters`] snapshot or delta).
+#[derive(Debug, Clone, Copy, Default, PartialEq, Eq)]
+pub struct CacheStats {
+    /// Profile chunks served from the cache (each one phase-A engine
+    /// contraction avoided).
+    pub hits: usize,
+    /// Lookups that fell through to the engine (absent entries, read
+    /// errors, plus rejected ones).
+    pub misses: usize,
+    /// Subset of `misses` that found an entry but rejected it
+    /// (corrupted, stale schema, key/shape/payload mismatch) — rejected
+    /// entries are recomputed, never trusted.
+    pub rejected: usize,
+    /// Profiles written back after a miss.
+    pub writes: usize,
+    /// Write-backs that failed (disk full, permissions). The sweep
+    /// degrades to uncached behavior instead of failing — the computed
+    /// profile is still used, it just is not persisted.
+    pub write_errors: usize,
+}
+
+impl CacheStats {
+    /// Engine contractions the cache avoided (one per hit).
+    pub fn contractions_avoided(&self) -> usize {
+        self.hits
+    }
+
+    /// Total lookups.
+    pub fn lookups(&self) -> usize {
+        self.hits + self.misses
+    }
+
+    /// Counter-wise difference `self − earlier` (for per-run deltas over
+    /// a long-lived cache). Saturates at zero per field.
+    pub fn since(&self, earlier: &CacheStats) -> CacheStats {
+        CacheStats {
+            hits: self.hits.saturating_sub(earlier.hits),
+            misses: self.misses.saturating_sub(earlier.misses),
+            rejected: self.rejected.saturating_sub(earlier.rejected),
+            writes: self.writes.saturating_sub(earlier.writes),
+            write_errors: self.write_errors.saturating_sub(earlier.write_errors),
+        }
+    }
+}
+
+/// Thread-safe hit/miss/write counters backing a profile cache.
+#[derive(Debug, Default)]
+pub struct CacheCounters {
+    hits: AtomicUsize,
+    misses: AtomicUsize,
+    rejected: AtomicUsize,
+    writes: AtomicUsize,
+    write_errors: AtomicUsize,
+}
+
+impl CacheCounters {
+    /// Fresh zeroed counters.
+    pub fn new() -> Self {
+        CacheCounters::default()
+    }
+
+    /// Record a cache hit (one contraction avoided).
+    pub fn record_hit(&self) {
+        self.hits.fetch_add(1, Ordering::Relaxed);
+    }
+
+    /// Record a miss on an absent entry.
+    pub fn record_miss(&self) {
+        self.misses.fetch_add(1, Ordering::Relaxed);
+    }
+
+    /// Record a miss on a present-but-rejected entry (counts as a miss
+    /// *and* a rejection).
+    pub fn record_rejected(&self) {
+        self.misses.fetch_add(1, Ordering::Relaxed);
+        self.rejected.fetch_add(1, Ordering::Relaxed);
+    }
+
+    /// Record a write-back.
+    pub fn record_write(&self) {
+        self.writes.fetch_add(1, Ordering::Relaxed);
+    }
+
+    /// Record a failed write-back.
+    pub fn record_write_error(&self) {
+        self.write_errors.fetch_add(1, Ordering::Relaxed);
+    }
+
+    /// Immutable snapshot of the current counts.
+    pub fn snapshot(&self) -> CacheStats {
+        CacheStats {
+            hits: self.hits.load(Ordering::Relaxed),
+            misses: self.misses.load(Ordering::Relaxed),
+            rejected: self.rejected.load(Ordering::Relaxed),
+            writes: self.writes.load(Ordering::Relaxed),
+            write_errors: self.write_errors.load(Ordering::Relaxed),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn counters_accumulate_and_snapshot() {
+        let c = CacheCounters::new();
+        c.record_hit();
+        c.record_hit();
+        c.record_miss();
+        c.record_rejected();
+        c.record_write();
+        c.record_write_error();
+        let s = c.snapshot();
+        assert_eq!(s.hits, 2);
+        assert_eq!(s.misses, 2); // absent + rejected
+        assert_eq!(s.rejected, 1);
+        assert_eq!(s.writes, 1);
+        assert_eq!(s.write_errors, 1);
+        assert_eq!(s.contractions_avoided(), 2);
+        assert_eq!(s.lookups(), 4);
+    }
+
+    #[test]
+    fn since_computes_per_run_deltas() {
+        let c = CacheCounters::new();
+        c.record_miss();
+        c.record_write();
+        let before = c.snapshot();
+        c.record_hit();
+        c.record_hit();
+        let delta = c.snapshot().since(&before);
+        assert_eq!(
+            delta,
+            CacheStats { hits: 2, misses: 0, rejected: 0, writes: 0, write_errors: 0 }
+        );
+        // Saturating: an impossible negative delta clamps to zero.
+        assert_eq!(before.since(&c.snapshot()).hits, 0);
+    }
+
+    #[test]
+    fn counters_are_shareable_across_threads() {
+        let c = CacheCounters::new();
+        std::thread::scope(|s| {
+            for _ in 0..4 {
+                let c = &c;
+                s.spawn(move || {
+                    for _ in 0..100 {
+                        c.record_hit();
+                    }
+                });
+            }
+        });
+        assert_eq!(c.snapshot().hits, 400);
+    }
+}

@@ -14,5 +14,17 @@
 mod prng;
 mod prop;
 
-pub use prng::Rng;
+pub use prng::{Rng, RngState};
 pub use prop::{forall, forall_cfg, parse_seed, PropConfig, SEED_ENV};
+
+/// Unique scratch directory for tests: `$TMPDIR/xrcarbon_<tag>_<pid>_<n>`
+/// with a process-wide counter — collision-free across parallel tests in
+/// one binary and across binaries, with no wall clock or RNG involved
+/// (both are banned from deterministic test paths). The caller creates
+/// and removes it.
+pub fn test_dir(tag: &str) -> std::path::PathBuf {
+    use std::sync::atomic::{AtomicUsize, Ordering};
+    static NEXT: AtomicUsize = AtomicUsize::new(0);
+    let n = NEXT.fetch_add(1, Ordering::Relaxed);
+    std::env::temp_dir().join(format!("xrcarbon_{tag}_{}_{n}", std::process::id()))
+}

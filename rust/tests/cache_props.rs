@@ -1,0 +1,349 @@
+//! Property tests for the persistent profile cache and the resumable
+//! search — the determinism contract of the warm-start layer:
+//!
+//! * a warm-start sweep over a cached space is **bit-identical** to the
+//!   cold run on the host engine and performs **zero** phase-A engine
+//!   contractions (the cache-stats delta proves it);
+//! * corrupted or stale-version cache entries are rejected and
+//!   recomputed — results never change, the entries are never trusted;
+//! * a search interrupted at *any* generation and resumed from its
+//!   (JSON round-tripped) checkpoint produces a bit-identical final
+//!   outcome.
+
+use xrcarbon::configfmt::{parse, Json};
+use xrcarbon::dse::cache::{ProfileCache, PROFILE_SCHEMA};
+use xrcarbon::dse::search::{SearchCheckpoint, SearchConfig, SearchDriver, SearchOutcome};
+use xrcarbon::dse::sweep::{sweep, sweep_with_cache, SweepConfig, SweepOutcome};
+use xrcarbon::dse::{DesignPoint, ScenarioGrid, SearchSpace};
+use xrcarbon::matrixform::{ConfigRow, EvalRequest, TaskMatrix};
+use xrcarbon::runtime::HostEngineFactory;
+use xrcarbon::testkit::{forall_cfg, test_dir, PropConfig, Rng};
+
+/// Randomized request: 1–3 tasks, up to 12 kernels, occasionally enough
+/// configs to span several profile chunks.
+fn gen_request(r: &mut Rng) -> EvalRequest {
+    let t = r.below(3) + 1;
+    let k = r.below(12) + 1;
+    let c = if r.chance(0.15) { 1024 + r.below(600) + 1 } else { r.below(200) + 1 };
+    let j = r.below(6) + 1;
+    let mut tasks = TaskMatrix::new(
+        (0..t).map(|i| format!("t{i}")).collect(),
+        (0..k).map(|i| format!("k{i}")).collect(),
+    );
+    for ti in 0..t {
+        for ki in 0..k {
+            if r.chance(0.6) {
+                tasks.set(ti, ki, r.below(30) as f64);
+            }
+        }
+    }
+    EvalRequest {
+        tasks,
+        configs: (0..c)
+            .map(|i| ConfigRow {
+                name: format!("cfg{i}"),
+                f_clk: r.range(1e8, 2e9),
+                d_k: (0..k).map(|_| r.range(1e-5, 1e-1)).collect(),
+                e_dyn: (0..k).map(|_| r.range(1e-4, 1.0)).collect(),
+                leak_w: r.range(0.0, 0.2),
+                c_comp: (0..j).map(|_| r.range(0.0, 1000.0)).collect(),
+            })
+            .collect(),
+        online: (0..j).map(|_| if r.chance(0.8) { 1.0 } else { 0.0 }).collect(),
+        qos: (0..t)
+            .map(|_| if r.chance(0.3) { r.range(0.1, 100.0) } else { f64::INFINITY })
+            .collect(),
+        ci_use_g_per_j: r.range(1e-5, 1e-3),
+        lifetime_s: r.range(1e4, 1e8),
+        beta: r.range(0.0, 4.0),
+        p_max_w: if r.chance(0.4) { r.range(0.5, 100.0) } else { f64::INFINITY },
+    }
+}
+
+/// Randomized scenario grid (1–4 scenarios across two axes).
+fn gen_grid(r: &mut Rng) -> ScenarioGrid {
+    let mut g = ScenarioGrid::new();
+    for i in 0..r.below(2) + 1 {
+        g = g.with_lifetime(&format!("lt{i}"), r.range(1e4, 1e8));
+    }
+    if r.chance(0.5) {
+        for i in 0..r.below(2) + 1 {
+            g = g.with_beta(&format!("b{i}"), r.range(0.25, 4.0));
+        }
+    }
+    g
+}
+
+/// Bit-level equality of two sweep outcomes (metric payloads compared by
+/// f64 bits, so NaN-safe and rounding-proof).
+fn sweeps_bit_identical(a: &SweepOutcome, b: &SweepOutcome) -> bool {
+    let bits = |xs: &[f64]| xs.iter().map(|x| x.to_bits()).collect::<Vec<_>>();
+    a.scenarios.len() == b.scenarios.len()
+        && a.scenarios.iter().zip(&b.scenarios).all(|(x, y)| {
+            x.label == y.label
+                && x.outcome.result.names == y.outcome.result.names
+                && bits(&x.outcome.result.metrics) == bits(&y.outcome.result.metrics)
+                && bits(&x.outcome.result.d_task) == bits(&y.outcome.result.d_task)
+                && x.outcome.optimal == y.outcome.optimal
+                && x.outcome.stats.best.to_bits() == y.outcome.stats.best.to_bits()
+                && x.outcome.stats.feasible == y.outcome.stats.feasible
+        })
+}
+
+#[test]
+fn prop_warm_sweep_bit_identical_to_cold_with_zero_contractions() {
+    forall_cfg(
+        PropConfig { cases: 24, seed: 41 },
+        |r| (gen_request(r), gen_grid(r)),
+        |(req, grid)| {
+            let dir = test_dir("cache_props_warm");
+            let cache = ProfileCache::open(&dir).unwrap();
+            let cfg = SweepConfig::default();
+
+            let nocache = sweep(&HostEngineFactory, req, grid, &cfg).unwrap();
+            let cold =
+                sweep_with_cache(&HostEngineFactory, req, grid, &cfg, Some(&cache)).unwrap();
+            let warm =
+                sweep_with_cache(&HostEngineFactory, req, grid, &cfg, Some(&cache)).unwrap();
+
+            let chunks = cold.profile_chunks;
+            let cs = cold.cache.unwrap();
+            let ws = warm.cache.unwrap();
+            let ok = sweeps_bit_identical(&nocache, &cold)
+                && sweeps_bit_identical(&cold, &warm)
+                // Cold: every chunk missed and was written back.
+                && (cs.hits, cs.misses, cs.writes, cs.rejected) == (0, chunks, chunks, 0)
+                // Warm: zero engine contractions — everything a hit.
+                && (ws.hits, ws.misses, ws.writes) == (chunks, 0, 0)
+                && ws.contractions_avoided() == chunks
+                && chunks >= 1;
+            std::fs::remove_dir_all(&dir).ok();
+            ok
+        },
+    );
+}
+
+/// Corrupt one on-disk envelope in `kind`-dependent ways.
+fn corrupt(path: &std::path::Path, kind: usize) {
+    let text = std::fs::read_to_string(path).unwrap();
+    match kind % 5 {
+        0 => {
+            // Stale schema version.
+            let mut doc = parse(&text).unwrap();
+            if let Json::Obj(o) = &mut doc {
+                o.insert("schema".into(), Json::Num((PROFILE_SCHEMA + 7) as f64));
+            }
+            std::fs::write(path, doc.to_string()).unwrap();
+        }
+        1 => {
+            // Truncation (invalid JSON).
+            std::fs::write(path, &text[..text.len() / 3]).unwrap();
+        }
+        2 => {
+            // Arbitrary garbage.
+            std::fs::write(path, b"{\"not\": \"an envelope\"}").unwrap();
+        }
+        3 => {
+            // Non-integral bit value inside a buffer.
+            let mut doc = parse(&text).unwrap();
+            if let Json::Obj(o) = &mut doc {
+                if let Some(Json::Obj(p)) = o.get_mut("profile") {
+                    if let Some(Json::Arr(xs)) = p.get_mut("energy") {
+                        xs[0] = Json::Num(0.5);
+                    }
+                }
+            }
+            std::fs::write(path, doc.to_string()).unwrap();
+        }
+        _ => {
+            // Structurally-valid value corruption: a different (valid)
+            // integer bit pattern — only the payload digest catches it.
+            let mut doc = parse(&text).unwrap();
+            if let Json::Obj(o) = &mut doc {
+                if let Some(Json::Obj(p)) = o.get_mut("profile") {
+                    if let Some(Json::Arr(xs)) = p.get_mut("delay") {
+                        xs[0] = Json::Num(987654.0);
+                    }
+                }
+            }
+            std::fs::write(path, doc.to_string()).unwrap();
+        }
+    }
+}
+
+#[test]
+fn prop_corrupted_or_stale_entries_are_recomputed_never_trusted() {
+    forall_cfg(
+        PropConfig { cases: 16, seed: 42 },
+        |r| (gen_request(r), gen_grid(r), r.below(5)),
+        |(req, grid, kind)| {
+            let dir = test_dir("cache_props_corrupt");
+            let cache = ProfileCache::open(&dir).unwrap();
+            let cfg = SweepConfig::default();
+            let cold =
+                sweep_with_cache(&HostEngineFactory, req, grid, &cfg, Some(&cache)).unwrap();
+
+            // Vandalize every stored envelope.
+            let mut corrupted = 0usize;
+            for entry in std::fs::read_dir(&dir).unwrap() {
+                let path = entry.unwrap().path();
+                if path.extension().is_some_and(|e| e == "json") {
+                    corrupt(&path, *kind);
+                    corrupted += 1;
+                }
+            }
+
+            // The sweep falls back to recomputation: identical results,
+            // every entry rejected, every chunk re-written.
+            let recomputed =
+                sweep_with_cache(&HostEngineFactory, req, grid, &cfg, Some(&cache)).unwrap();
+            let rs = recomputed.cache.unwrap();
+            let chunks = cold.profile_chunks;
+
+            // And the re-written cache serves hits again.
+            let healed =
+                sweep_with_cache(&HostEngineFactory, req, grid, &cfg, Some(&cache)).unwrap();
+            let hs = healed.cache.unwrap();
+
+            let ok = corrupted == chunks
+                && sweeps_bit_identical(&cold, &recomputed)
+                && sweeps_bit_identical(&cold, &healed)
+                && (rs.hits, rs.rejected, rs.writes) == (0, chunks, chunks)
+                && (hs.hits, hs.misses) == (chunks, 0);
+            std::fs::remove_dir_all(&dir).ok();
+            ok
+        },
+    );
+}
+
+/// Synthetic smooth landscape (same shape as the search unit tests):
+/// enough structure for the guide loop to do real work, in closed form.
+fn synth_row(p: &DesignPoint) -> ConfigRow {
+    let m = p.num_macs as f64;
+    let s = p.sram_bytes as f64 / (1024.0 * 1024.0);
+    let f = p.config.freq_hz;
+    let stacked = p.config.stacked_sram;
+    let d = 40.0 / (m.powf(0.7) * s.powf(0.15)) * (1.0e9 / f);
+    let e = 2e-4 * m.powf(0.3) * (f / 1.0e9).powi(2) * if stacked { 0.6 } else { 1.0 }
+        + 1e-3 / s.powf(0.1);
+    let emb_scale = if stacked { 0.82 } else { 1.0 };
+    ConfigRow {
+        name: p.label.clone(),
+        f_clk: f,
+        d_k: vec![d],
+        e_dyn: vec![e],
+        leak_w: 1e-6 * m + 1e-4 * s,
+        c_comp: vec![0.4 * m * emb_scale, 55.0 * s * emb_scale, 90.0],
+    }
+}
+
+fn synth_space() -> SearchSpace {
+    SearchSpace {
+        mac: vec![128, 256, 512, 1024, 2048, 4096],
+        sram: [0.5f64, 1.0, 2.0, 4.0, 8.0, 16.0]
+            .iter()
+            .map(|&mb| (mb * 1024.0 * 1024.0) as u64)
+            .collect(),
+        stacking: vec![false, true],
+        clock: vec![0.8e9, 1.2e9],
+    }
+}
+
+fn synth_base() -> EvalRequest {
+    EvalRequest {
+        tasks: TaskMatrix::single_task("t", vec!["k".into()], &[1.0]),
+        configs: Vec::new(),
+        online: vec![1.0, 1.0, 1.0],
+        qos: vec![f64::INFINITY],
+        ci_use_g_per_j: 1.2e-4,
+        lifetime_s: 1e6,
+        beta: 1.0,
+        p_max_w: f64::INFINITY,
+    }
+}
+
+fn synth_grid() -> ScenarioGrid {
+    ScenarioGrid::new().with_lifetime("lt=2e5s", 2e5).with_lifetime("lt=2e7s", 2e7)
+}
+
+/// Bit-level outcome equality (environment fields — engine label,
+/// threads — excluded; they are run observables, not search state).
+fn outcomes_bit_identical(a: &SearchOutcome, b: &SearchOutcome) -> bool {
+    let best = |o: &SearchOutcome| {
+        o.best.as_ref().map(|x| (x.scenario, x.index, x.name.clone(), x.tcdp.to_bits()))
+    };
+    let archive = |o: &SearchOutcome| {
+        o.archive
+            .iter()
+            .map(|p| {
+                (
+                    p.scenario,
+                    p.index,
+                    p.name.clone(),
+                    p.f1.to_bits(),
+                    p.f2.to_bits(),
+                    p.tcdp.to_bits(),
+                )
+            })
+            .collect::<Vec<_>>()
+    };
+    a.evaluations == b.evaluations
+        && a.generations == b.generations
+        && a.converged == b.converged
+        && a.space_size == b.space_size
+        && best(a) == best(b)
+        && archive(a) == archive(b)
+}
+
+#[test]
+fn prop_search_interrupted_at_any_generation_resumes_bit_identically() {
+    let space = synth_space();
+    let base = synth_base();
+    let grid = synth_grid();
+    forall_cfg(
+        PropConfig { cases: 12, seed: 43 },
+        |r| (r.below(1 << 30) as u64, r.below(64)),
+        |&(seed, interrupt)| {
+            let cfg = SearchConfig {
+                seed,
+                init_points_per_axis: 3,
+                ..SearchConfig::default()
+            };
+
+            // Uninterrupted reference, counting loop iterations.
+            let mut full = SearchDriver::new(&space, &cfg);
+            let mut steps = 0usize;
+            while !full
+                .step(&HostEngineFactory, &space, &synth_row, &base, &grid, None)
+                .unwrap()
+            {
+                steps += 1;
+            }
+            let reference = full.outcome(&space, &grid);
+
+            // Interrupt after `g` iterations (anywhere from "before the
+            // first generation" to "already finished"), round-trip the
+            // checkpoint through its JSON envelope, resume, finish.
+            let g = interrupt % (steps + 2);
+            let mut partial = SearchDriver::new(&space, &cfg);
+            for _ in 0..g {
+                if partial
+                    .step(&HostEngineFactory, &space, &synth_row, &base, &grid, None)
+                    .unwrap()
+                {
+                    break;
+                }
+            }
+            let ck =
+                SearchCheckpoint::from_json_str(&partial.checkpoint().to_json_string()).unwrap();
+            if ck != partial.checkpoint() {
+                return false;
+            }
+            let resumed = SearchDriver::resume(&space, &cfg, &ck)
+                .unwrap()
+                .run(&HostEngineFactory, &space, &synth_row, &base, &grid)
+                .unwrap();
+            outcomes_bit_identical(&reference, &resumed)
+        },
+    );
+}

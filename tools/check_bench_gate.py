@@ -19,8 +19,13 @@ advantage:
   toward exhaustive enumeration fails here first), and
   `search/expanded_coverage` must be >= 5x (the expanded-space search
   must converge well under 20% coverage; observed ~2%).
+* cache — `cache/warm_contractions_avoided` must be >= 1.0x (hits /
+  profile chunks of a warm sweep over a fully cached space: every
+  phase-A engine contraction must be served from disk; any value below
+  1.0 means the cache failed to round-trip at least one chunk). Also a
+  deterministic counter check, immune to runner jitter.
 
-Usage: check_bench_gate.py BENCH_sweep.json BENCH_search.json
+Usage: check_bench_gate.py BENCH_sweep.json BENCH_search.json BENCH_cache.json
 """
 import json
 import sys
@@ -31,6 +36,8 @@ SWEEP_MIN_RATIO = 0.8
 SEARCH_ANCHOR_MIN = 1.0 / 0.6
 # Expanded space must stay under 20% coverage (observed ~2%).
 SEARCH_EXPANDED_MIN = 5.0
+# A warm sweep must avoid every phase-A contraction (hits == chunks).
+CACHE_WARM_MIN = 1.0
 
 
 def fail(msg):
@@ -89,11 +96,36 @@ def check_search(path):
             fail(f"{name} reports {ratio:.2f}x < {minimum:.2f}x evaluations-saved")
 
 
+def check_cache(path):
+    rows = load(path)
+    name = "cache/warm_contractions_avoided"
+    row = rows.get(name)
+    if row is None:
+        fail(f"{path}: missing entry {name}")
+    ratio = row.get("throughput")
+    if ratio is None:
+        fail(f"{path}: {name} has no ratio")
+    print(
+        f"cache gate: {name} = {ratio:.2f}x "
+        f"(min {CACHE_WARM_MIN:.2f}x, {row['samples']} contraction(s) avoided)"
+    )
+    if row["samples"] < 1:
+        fail(f"{name}: warm sweep avoided zero contractions")
+    if ratio < CACHE_WARM_MIN:
+        fail(
+            f"{name} reports {ratio:.2f}x < {CACHE_WARM_MIN:.2f}x — a warm sweep "
+            f"re-contracted at least one cached chunk"
+        )
+
+
 def main():
-    if len(sys.argv) != 3:
-        fail("usage: check_bench_gate.py BENCH_sweep.json BENCH_search.json")
+    if len(sys.argv) != 4:
+        fail(
+            "usage: check_bench_gate.py BENCH_sweep.json BENCH_search.json BENCH_cache.json"
+        )
     check_sweep(sys.argv[1])
     check_search(sys.argv[2])
+    check_cache(sys.argv[3])
     print("bench gate: OK")
 
 
