@@ -1,21 +1,28 @@
 //! Bench: the persistent profile cache and search checkpoints — (a) a
 //! cold sweep (empty cache: every chunk contracted and written back)
 //! versus a warm sweep (every chunk served from disk, zero engine
-//! contractions), and (b) a cold adaptive search versus one resumed from
-//! a mid-run checkpoint (the resumed run only evaluates the remaining
-//! generations).
+//! contractions), (b) warm reads through the binary sidecar versus the
+//! JSON-only legacy envelope, and (c) a cold adaptive search versus one
+//! resumed from a mid-run checkpoint (the resumed run only evaluates the
+//! remaining generations).
 //!
 //! Emits `BENCH_cache.json`. The CI smoke gate
-//! (`tools/check_bench_gate.py`) consumes one pseudo-entry:
+//! (`tools/check_bench_gate.py`) consumes two pseudo-entries:
 //!
 //! * `cache/warm_contractions_avoided` — `samples` = cache hits of the
 //!   warm sweep, `throughput` = hits / profile chunks. The floor is
 //!   1.0×: a warm sweep over a cached space must avoid **every** phase-A
 //!   contraction (the stats are deterministic counters, not timings).
+//! * `cache/warm_read_speedup` — `throughput` = JSON-envelope warm-read
+//!   time / binary-sidecar warm-read time for one chunk (memory layer
+//!   disabled on both sides). Gated ≥ 2.0×: the raw-bits sidecar must
+//!   keep a decisive decode advantage over the ~10-bytes-per-f32 JSON
+//!   parse.
 //!
-//! `cache/resume_evaluations_carried` is informational: how many
-//! evaluations the resumed search inherited from the checkpoint instead
-//! of recomputing.
+//! `cache/warm_read_bytes` (`samples` = sidecar bytes, `throughput` =
+//! JSON bytes / sidecar bytes) and `cache/resume_evaluations_carried`
+//! (how many evaluations the resumed search inherited from the
+//! checkpoint) are informational.
 //!
 //! Set `XRCARBON_BENCH_QUICK=1` for the short sampling mode CI uses.
 
@@ -23,7 +30,7 @@ use std::time::Duration;
 
 use xrcarbon::bench::{write_json, BenchResult, Bencher};
 use xrcarbon::carbon::FabGrid;
-use xrcarbon::dse::cache::ProfileCache;
+use xrcarbon::dse::cache::{CacheConfig, ProfileCache};
 use xrcarbon::dse::search::{search, SearchConfig, SearchDriver, SimulatorEvaluator};
 use xrcarbon::dse::sweep::{sweep_with_cache, SweepConfig};
 use xrcarbon::dse::{ScenarioGrid, SearchSpace};
@@ -93,7 +100,39 @@ fn main() {
     results.push(warm);
     results.push(counter("cache/warm_contractions_avoided", stats.hits, avoided_ratio));
 
-    // (b) Cold search vs search resumed from a mid-run checkpoint. The
+    // (b) Warm-read microbench: the same cached chunk decoded straight
+    // from disk — binary sidecar vs the JSON-only legacy mode, memory
+    // layer disabled on both sides so every iteration pays the real
+    // read + decode. The 121-config space is a single chunk.
+    let key = ProfileCache::key_for_chunk(&space.base.tasks, &space.base.configs, "host");
+    let nomem = CacheConfig { mem_entries: 0, ..CacheConfig::default() };
+    let cache_bin = ProfileCache::open_with(&dir, nomem).unwrap();
+    let cache_json =
+        ProfileCache::open_with(&dir, CacheConfig { binary_sidecars: false, ..nomem }).unwrap();
+    assert!(cache_bin.load(&key, "host").is_some(), "cached chunk present with sidecar");
+    let bin_bytes = std::fs::metadata(cache_bin.sidecar_path(&key)).map(|m| m.len()).unwrap_or(0);
+    let json_bytes =
+        std::fs::metadata(cache_bin.envelope_path(&key)).map(|m| m.len()).unwrap_or(0);
+    let warm_bin = Bencher::new("cache/warm_read_binary")
+        .quick_if_env()
+        .run(|| cache_bin.load(&key, "host").expect("sidecar read"));
+    println!("{}", warm_bin.report());
+    let warm_json = Bencher::new("cache/warm_read_json")
+        .quick_if_env()
+        .run(|| cache_json.load(&key, "host").expect("json read"));
+    println!("{}", warm_json.report());
+    let read_speedup = warm_json.mean.as_secs_f64() / warm_bin.mean.as_secs_f64().max(1e-12);
+    let bytes_ratio = json_bytes as f64 / bin_bytes.max(1) as f64;
+    println!(
+        "warm read: binary {bin_bytes} B vs JSON {json_bytes} B ({bytes_ratio:.2}x smaller), \
+         {read_speedup:.2}x faster decode"
+    );
+    results.push(warm_bin);
+    results.push(warm_json);
+    results.push(counter("cache/warm_read_speedup", 1, read_speedup));
+    results.push(counter("cache/warm_read_bytes", bin_bytes as usize, bytes_ratio));
+
+    // (c) Cold search vs search resumed from a mid-run checkpoint. The
     // resumed run re-pays only the generations after the interrupt.
     let sspace = SearchSpace::fig7_grid();
     let evaluator =

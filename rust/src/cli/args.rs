@@ -43,7 +43,7 @@ pub struct Args {
 const VALUED: &[&str] = &[
     "cluster", "metric", "out", "artifacts", "engine", "seed", "beta", "ratio",
     "lifetime", "hours", "devices", "days", "workload", "cores", "csv-dir",
-    "threads", "preset", "space", "max-evals", "cache-dir", "resume",
+    "threads", "preset", "space", "max-evals", "cache-dir", "cache-budget", "resume",
 ];
 
 /// Flag names (no value). Anything after `--` that is in neither list is
@@ -206,9 +206,10 @@ mod tests {
 
     #[test]
     fn cache_options_are_registered() {
-        let a = parse("sweep --cache-dir .cache/profiles --resume ckpt.json");
+        let a = parse("sweep --cache-dir .cache/profiles --resume ckpt.json --cache-budget 512M");
         assert_eq!(a.get("cache-dir", ""), ".cache/profiles");
         assert_eq!(a.get("resume", ""), "ckpt.json");
+        assert_eq!(a.get("cache-budget", ""), "512M");
     }
 
     #[test]

@@ -1,0 +1,210 @@
+//! Little-endian binary envelopes with a digest trailer — the fast
+//! on-disk sidecar format for bulk `f32` payloads.
+//!
+//! The JSON envelopes (`configfmt::json`) stay the readable source of
+//! truth, but they cost ~10 bytes per `f32` (bit patterns rendered as
+//! decimal integers) and a full parse on every warm read. A binary
+//! envelope stores the same bits raw: 4 bytes per value plus a small
+//! header, read back with bounds-checked cursor scans instead of a
+//! recursive-descent parse.
+//!
+//! Layout: `magic (4 bytes) · schema (u32) · body · digest (16 bytes)`
+//! where the trailing digest is [`digest128`] over *everything before
+//! it* (magic and schema included). Readers verify magic, schema and the
+//! digest before handing out a cursor; every `take_*` is bounds-checked
+//! and returns `None` past the end, so truncated or corrupted envelopes
+//! fail validation instead of panicking — the same reject-and-recompute
+//! trust model as the JSON envelopes.
+
+use super::digest::digest128;
+
+/// Append-only builder for a binary envelope.
+pub struct BinWriter {
+    buf: Vec<u8>,
+}
+
+impl BinWriter {
+    /// Start an envelope with its magic and schema version.
+    pub fn new(magic: [u8; 4], schema: u32) -> Self {
+        let mut buf = Vec::with_capacity(64);
+        buf.extend_from_slice(&magic);
+        buf.extend_from_slice(&schema.to_le_bytes());
+        BinWriter { buf }
+    }
+
+    /// Append one `u32`.
+    pub fn put_u32(&mut self, v: u32) {
+        self.buf.extend_from_slice(&v.to_le_bytes());
+    }
+
+    /// Append one `u64`.
+    pub fn put_u64(&mut self, v: u64) {
+        self.buf.extend_from_slice(&v.to_le_bytes());
+    }
+
+    /// Append a length-prefixed UTF-8 string.
+    pub fn put_str(&mut self, s: &str) {
+        self.put_u32(s.len() as u32);
+        self.buf.extend_from_slice(s.as_bytes());
+    }
+
+    /// Append a length-prefixed `f32` buffer as raw bit patterns.
+    pub fn put_f32_bits(&mut self, xs: &[f32]) {
+        self.put_u32(xs.len() as u32);
+        self.buf.reserve(xs.len() * 4);
+        for x in xs {
+            self.buf.extend_from_slice(&x.to_bits().to_le_bytes());
+        }
+    }
+
+    /// Seal the envelope: append the 128-bit digest of everything
+    /// written so far and return the bytes.
+    pub fn finish(mut self) -> Vec<u8> {
+        let (hi, lo) = digest128(&self.buf);
+        self.buf.extend_from_slice(&hi.to_le_bytes());
+        self.buf.extend_from_slice(&lo.to_le_bytes());
+        self.buf
+    }
+}
+
+/// Bounds-checked cursor over a digest-verified binary envelope.
+pub struct BinReader<'a> {
+    body: &'a [u8],
+    pos: usize,
+}
+
+impl<'a> BinReader<'a> {
+    /// Open an envelope: verify magic, schema and the digest trailer.
+    /// `None` on any mismatch — the caller treats the envelope as
+    /// corrupt and falls back / recomputes.
+    pub fn open(bytes: &'a [u8], magic: [u8; 4], schema: u32) -> Option<BinReader<'a>> {
+        // magic + schema + digest is the smallest possible envelope.
+        if bytes.len() < 4 + 4 + 16 {
+            return None;
+        }
+        let (body, trailer) = bytes.split_at(bytes.len() - 16);
+        let (hi, lo) = digest128(body);
+        if trailer[..8] != hi.to_le_bytes() || trailer[8..] != lo.to_le_bytes() {
+            return None;
+        }
+        if body[..4] != magic {
+            return None;
+        }
+        let got_schema = u32::from_le_bytes(body[4..8].try_into().ok()?);
+        if got_schema != schema {
+            return None;
+        }
+        Some(BinReader { body, pos: 8 })
+    }
+
+    fn take(&mut self, n: usize) -> Option<&'a [u8]> {
+        let end = self.pos.checked_add(n)?;
+        if end > self.body.len() {
+            return None;
+        }
+        let out = &self.body[self.pos..end];
+        self.pos = end;
+        Some(out)
+    }
+
+    /// Read one `u32`.
+    pub fn take_u32(&mut self) -> Option<u32> {
+        Some(u32::from_le_bytes(self.take(4)?.try_into().ok()?))
+    }
+
+    /// Read one `u64`.
+    pub fn take_u64(&mut self) -> Option<u64> {
+        Some(u64::from_le_bytes(self.take(8)?.try_into().ok()?))
+    }
+
+    /// Read a length-prefixed UTF-8 string.
+    pub fn take_str(&mut self) -> Option<String> {
+        let len = self.take_u32()? as usize;
+        std::str::from_utf8(self.take(len)?).ok().map(str::to_string)
+    }
+
+    /// Read a length-prefixed `f32` buffer; `None` unless its length is
+    /// exactly `expect_len` (buffer shapes are part of validation).
+    pub fn take_f32_bits(&mut self, expect_len: usize) -> Option<Vec<f32>> {
+        let len = self.take_u32()? as usize;
+        if len != expect_len {
+            return None;
+        }
+        let raw = self.take(len * 4)?;
+        Some(
+            raw.chunks_exact(4)
+                .map(|c| f32::from_bits(u32::from_le_bytes(c.try_into().unwrap())))
+                .collect(),
+        )
+    }
+
+    /// True once the cursor consumed the whole body — envelopes with
+    /// trailing garbage inside the digested region are rejected by
+    /// requiring this after the last field.
+    pub fn at_end(&self) -> bool {
+        self.pos == self.body.len()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    const MAGIC: [u8; 4] = *b"XRTB";
+
+    fn sample() -> Vec<u8> {
+        let mut w = BinWriter::new(MAGIC, 3);
+        w.put_u64(0xDEAD_BEEF);
+        w.put_str("host");
+        w.put_f32_bits(&[1.5, f32::NAN, -0.0]);
+        w.finish()
+    }
+
+    #[test]
+    fn roundtrip_is_bit_exact() {
+        let bytes = sample();
+        let mut r = BinReader::open(&bytes, MAGIC, 3).expect("valid envelope");
+        assert_eq!(r.take_u64(), Some(0xDEAD_BEEF));
+        assert_eq!(r.take_str().as_deref(), Some("host"));
+        let xs = r.take_f32_bits(3).unwrap();
+        assert_eq!(xs[0].to_bits(), 1.5f32.to_bits());
+        assert_eq!(xs[1].to_bits(), f32::NAN.to_bits());
+        assert_eq!(xs[2].to_bits(), (-0.0f32).to_bits());
+        assert!(r.at_end());
+    }
+
+    #[test]
+    fn corruption_truncation_and_mismatches_are_rejected() {
+        let bytes = sample();
+        // Truncation anywhere breaks the digest (or the minimum size).
+        for cut in [0, 7, bytes.len() / 2, bytes.len() - 1] {
+            assert!(BinReader::open(&bytes[..cut], MAGIC, 3).is_none(), "cut={cut}");
+        }
+        // Any flipped byte breaks the digest.
+        for i in [0usize, 4, 9, bytes.len() - 1] {
+            let mut bad = bytes.clone();
+            bad[i] ^= 0x40;
+            assert!(BinReader::open(&bad, MAGIC, 3).is_none(), "flip at {i}");
+        }
+        // Wrong magic / schema on an otherwise-intact envelope.
+        assert!(BinReader::open(&bytes, *b"NOPE", 3).is_none());
+        assert!(BinReader::open(&bytes, MAGIC, 4).is_none());
+    }
+
+    #[test]
+    fn cursor_is_bounds_checked_and_shape_strict() {
+        let bytes = sample();
+        let mut r = BinReader::open(&bytes, MAGIC, 3).unwrap();
+        r.take_u64().unwrap();
+        r.take_str().unwrap();
+        // Wrong expected length is a shape violation, not a read.
+        assert!(r.take_f32_bits(2).is_none());
+        // Reads past the end return None instead of panicking.
+        let mut r = BinReader::open(&bytes, MAGIC, 3).unwrap();
+        r.take_u64().unwrap();
+        r.take_str().unwrap();
+        r.take_f32_bits(3).unwrap();
+        assert!(r.at_end());
+        assert!(r.take_u32().is_none());
+    }
+}

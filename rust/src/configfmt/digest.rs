@@ -1,0 +1,135 @@
+//! Shared 128-bit content hashing for envelopes, cache keys and
+//! checkpoint digests.
+//!
+//! Two independently-seeded FNV-1a streams fed the same bytes — a cheap,
+//! dependency-free 128-bit content hash (collision odds are negligible at
+//! cache scale, and colliding entries would still have to pass the shape
+//! checks of whichever envelope consumed them). One hash core serves the
+//! profile-cache keys, the search/sweep checkpoint digests and the binary
+//! sidecar trailers — one implementation, not four.
+
+const FNV_PRIME: u64 = 0x0000_0100_0000_01B3;
+
+/// Streaming 128-bit FNV-1a content hasher.
+pub struct ContentHasher {
+    a: u64,
+    b: u64,
+}
+
+impl ContentHasher {
+    /// Fresh hasher. Offset bases: the standard FNV-1a basis and a second
+    /// stream seeded from it (any fixed distinct constant works).
+    pub fn new() -> Self {
+        ContentHasher { a: 0xCBF2_9CE4_8422_2325, b: 0x9AE1_6A3B_2F90_404F }
+    }
+
+    /// Feed raw bytes.
+    pub fn write(&mut self, bytes: &[u8]) {
+        for &byte in bytes {
+            self.a = (self.a ^ byte as u64).wrapping_mul(FNV_PRIME);
+            self.b = (self.b ^ byte as u64).wrapping_mul(FNV_PRIME).rotate_left(1);
+        }
+    }
+
+    /// Feed one `u64` (little-endian bytes).
+    pub fn write_u64(&mut self, v: u64) {
+        self.write(&v.to_le_bytes());
+    }
+
+    /// Feed an `f32` buffer as length + raw bit patterns.
+    pub fn write_f32s(&mut self, xs: &[f32]) {
+        self.write_u64(xs.len() as u64);
+        for x in xs {
+            self.write(&x.to_bits().to_le_bytes());
+        }
+    }
+
+    /// Feed an `f64` buffer as length + raw bit patterns.
+    pub fn write_f64s(&mut self, xs: &[f64]) {
+        self.write_u64(xs.len() as u64);
+        for x in xs {
+            self.write(&x.to_bits().to_le_bytes());
+        }
+    }
+
+    /// Feed a string as length + UTF-8 bytes (length prefix keeps
+    /// concatenated fields unambiguous).
+    pub fn write_str(&mut self, s: &str) {
+        self.write_u64(s.len() as u64);
+        self.write(s.as_bytes());
+    }
+
+    /// The two 64-bit stream states `(hi, lo)`.
+    pub fn finish128(self) -> (u64, u64) {
+        (self.a, self.b)
+    }
+
+    /// Fixed-width lowercase hex rendering of [`Self::finish128`]
+    /// (32 chars) — the canonical digest form in JSON envelopes.
+    pub fn finish_hex(self) -> String {
+        let (hi, lo) = self.finish128();
+        format!("{hi:016x}{lo:016x}")
+    }
+}
+
+impl Default for ContentHasher {
+    fn default() -> Self {
+        ContentHasher::new()
+    }
+}
+
+/// Digest a byte slice in one call.
+pub fn digest128(bytes: &[u8]) -> (u64, u64) {
+    let mut h = ContentHasher::new();
+    h.write(bytes);
+    h.finish128()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn digest_is_stable_and_content_sensitive() {
+        let d = |s: &str| {
+            let mut h = ContentHasher::new();
+            h.write_str(s);
+            h.finish_hex()
+        };
+        assert_eq!(d("abc"), d("abc"));
+        assert_ne!(d("abc"), d("abd"));
+        assert_eq!(d("x").len(), 32);
+        // Length prefixes keep concatenations unambiguous.
+        let mut h1 = ContentHasher::new();
+        h1.write_str("ab");
+        h1.write_str("c");
+        let mut h2 = ContentHasher::new();
+        h2.write_str("a");
+        h2.write_str("bc");
+        assert_ne!(h1.finish_hex(), h2.finish_hex());
+    }
+
+    #[test]
+    fn f32_and_f64_streams_hash_bit_patterns() {
+        let mut h1 = ContentHasher::new();
+        h1.write_f32s(&[0.0, -0.0]);
+        let mut h2 = ContentHasher::new();
+        h2.write_f32s(&[0.0, 0.0]);
+        // -0.0 and 0.0 compare equal but have different bits: the hash
+        // must see the bits (bit-exact round-trips key on bits).
+        assert_ne!(h1.finish_hex(), h2.finish_hex());
+        let mut h3 = ContentHasher::new();
+        h3.write_f64s(&[f64::NAN]);
+        let mut h4 = ContentHasher::new();
+        h4.write_f64s(&[f64::NAN]);
+        assert_eq!(h3.finish_hex(), h4.finish_hex());
+    }
+
+    #[test]
+    fn one_shot_matches_streaming() {
+        let (hi, lo) = digest128(b"hello");
+        let mut h = ContentHasher::new();
+        h.write(b"hello");
+        assert_eq!(h.finish128(), (hi, lo));
+    }
+}

@@ -1,11 +1,22 @@
-//! Minimal JSON support (offline substitute for `serde_json`).
+//! Serialization formats and content hashing (offline substitutes for
+//! `serde_json` and friends).
 //!
-//! Used for the artifact manifest (`artifacts/manifest.json`), experiment
-//! configuration files and machine-readable result dumps. Implements the
-//! full JSON grammar (objects, arrays, strings with escapes, numbers,
-//! bools, null) with precise error positions; no serde-style derive —
-//! callers navigate the [`Json`] tree with the typed accessors.
+//! * [`json`](self) — full JSON grammar (objects, arrays, strings with
+//!   escapes, numbers, bools, null) with precise error positions; no
+//!   serde-style derive — callers navigate the [`Json`] tree with the
+//!   typed accessors. Used for the artifact manifest
+//!   (`artifacts/manifest.json`), experiment configuration files,
+//!   machine-readable result dumps, and the cache/checkpoint envelopes.
+//! * binary envelopes ([`BinWriter`]/[`BinReader`]) — little-endian
+//!   payloads with a digest trailer: the fast sidecar format for bulk
+//!   `f32` buffers (the profile cache's warm-read path).
+//! * [`ContentHasher`] — the shared 128-bit FNV-1a hash core behind
+//!   cache keys, checkpoint digests and binary-envelope trailers.
 
+mod bin;
+mod digest;
 mod json;
 
+pub use bin::{BinReader, BinWriter};
+pub use digest::{digest128, ContentHasher};
 pub use json::{parse, Json, JsonError};

@@ -78,6 +78,22 @@ pub(crate) fn num_chunks(n: usize) -> usize {
     }
 }
 
+/// Engine-call chunk boundaries of a space of `n` configs, as index
+/// ranges — the same boundaries [`evaluate_chunked`] and
+/// [`chunk_neutral`] use, without materializing any request. The sweep
+/// coordinator keys chunks off these ranges so warm lookups clone no
+/// configs at all.
+pub(crate) fn chunk_ranges(n: usize) -> Vec<std::ops::Range<usize>> {
+    if n == 0 {
+        return Vec::new();
+    }
+    let cs = chunk_size(n);
+    if n <= cs {
+        return vec![0..n];
+    }
+    (0..n).step_by(cs).map(|start| start..(start + cs).min(n)).collect()
+}
+
 /// Phase A chunk list: the scenario-invariant space split at exactly the
 /// engine-call boundaries [`evaluate_chunked`] uses, each as a neutral
 /// packed-ready request (scenario knobs inert — profiling only reads the
@@ -225,6 +241,29 @@ mod tests {
         assert_eq!(num_chunks(1), 1);
         assert_eq!(num_chunks(SMALL_BATCH), 1);
         assert_eq!(num_chunks(MAX_BATCH + 1), 2);
+    }
+
+    #[test]
+    fn chunk_ranges_match_chunk_neutral_boundaries() {
+        assert!(chunk_ranges(0).is_empty());
+        for n in [1usize, 7, SMALL_BATCH, SMALL_BATCH + 1, 4 * SMALL_BATCH, 2500] {
+            let ranges = chunk_ranges(n);
+            assert_eq!(ranges.len(), num_chunks(n), "n={n}");
+            // Contiguous cover of 0..n in order.
+            assert_eq!(ranges.first().unwrap().start, 0);
+            assert_eq!(ranges.last().unwrap().end, n);
+            for w in ranges.windows(2) {
+                assert_eq!(w[0].end, w[1].start, "n={n}");
+            }
+            // Same boundaries the request chunker produces.
+            let req = request(n);
+            let chunks = chunk_neutral(&req.tasks, &req.configs);
+            assert_eq!(chunks.len(), ranges.len(), "n={n}");
+            for (r, c) in ranges.iter().zip(&chunks) {
+                assert_eq!(c.configs.len(), r.len(), "n={n}");
+                assert_eq!(c.configs[0].name, format!("cfg{}", r.start), "n={n}");
+            }
+        }
     }
 
     #[test]

@@ -4,47 +4,73 @@
 //! Phase A of the pipeline (the O(C×T×K) engine contraction of a config
 //! chunk into a scenario-invariant [`DesignProfile`]) never depends on
 //! the scenario, yet every process restart used to re-pay it from
-//! scratch. A [`ProfileCache`] keys each *packed chunk* by a stable
+//! scratch. A [`ProfileCache`] keys each *config chunk* by a stable
 //! content hash of
 //!
-//! * the packed design-space tensors (`N`, `p_leak`, `p_dyn`, `f_clk`,
-//!   `d_k`, `c_comp`, config names — exactly the inputs the contraction
-//!   reads; scenario knobs are excluded by construction),
+//! * the chunk's design-space content at [`ConfigRow`] level (task
+//!   matrix, per-config clocks/delays/energies/leakage/embodied rows and
+//!   names — exactly the inputs packing and the contraction read;
+//!   scenario knobs are excluded by construction, and no packing is
+//!   needed to compute a key, so warm lookups never touch the packer),
 //! * the artifact-manifest shape constants ([`T_PAD`], [`K_PAD`],
-//!   [`J_PAD`], [`NUM_METRICS`], the batch variants) and the packed
-//!   dims,
+//!   [`J_PAD`], [`NUM_METRICS`], the batch variants),
 //! * the engine label (host and PJRT numerics differ), and
 //! * the envelope schema version ([`PROFILE_SCHEMA`]).
 //!
-//! Profiles are serialized through [`crate::configfmt`] as a versioned
-//! JSON envelope. Every `f32` buffer travels as raw `u32` bit patterns
-//! (exactly representable as JSON integers), so a cache round-trip is
-//! **bit-exact** and a warm-start sweep is bit-identical to the cold run
-//! on the host engine — locked by `rust/tests/cache_props.rs`.
+//! Each entry is stored twice, as two files sharing the key stem:
+//!
+//! * `<key>.profile.json` — the readable, versioned JSON envelope
+//!   (source of truth; every `f32` travels as raw `u32` bit patterns, so
+//!   round-trips are **bit-exact**), and
+//! * `<key>.profile.bin` — a binary sidecar
+//!   ([`crate::configfmt::BinWriter`]) holding the same bits raw with a
+//!   digest trailer: the warm-read fast path (~4 bytes per value and a
+//!   cursor scan instead of ~10 bytes per value and a JSON parse).
+//!
+//! Reads consult an **in-memory LRU layer** first (repeated same-process
+//! sweeps skip disk entirely), then the sidecar, then the JSON envelope;
+//! a valid JSON envelope with a missing or corrupt sidecar is served
+//! *and* its sidecar is repaired in place, so legacy JSON-only caches
+//! upgrade themselves on first use.
 //!
 //! The trust model is asymmetric: a stored profile is only ever used
 //! when its envelope passes every check (schema version, key echo,
-//! engine label, shape constants, buffer lengths, integral bit values).
-//! Anything else — truncated file, stale schema, foreign key, wrong
-//! shape — is *rejected and recomputed*, never trusted; rejections are
-//! counted on the [`CacheStats`] surface. Writes go through a
-//! temp-file + rename so a crashed writer can at worst leave a stray
-//! temp file, not a half-written envelope under a valid key.
+//! engine label, shape constants, buffer lengths, digests). Anything
+//! else — truncated file, stale schema, foreign key, wrong shape — is
+//! *rejected and recomputed*, never trusted; rejections are counted on
+//! the [`CacheStats`] surface. Writes go through a temp-file + rename so
+//! a crashed writer can at worst leave a stray temp file, not a
+//! half-written envelope under a valid key.
+//!
+//! With a [`CacheConfig::budget_bytes`] set, the on-disk store is kept
+//! under the budget by an LRU/generation-stamped eviction policy:
+//! entries touched this process are ranked by access recency, entries
+//! only known from disk by their write generation (file mtime), and the
+//! oldest are removed first — never the most recently written — with
+//! every eviction counted on [`CacheStats::evictions`].
 
+use std::collections::BTreeMap;
 use std::path::{Path, PathBuf};
+use std::sync::Mutex;
 
-use crate::configfmt::{parse, Json};
+use crate::configfmt::{parse, BinReader, BinWriter, ContentHasher, Json};
 use crate::matrixform::{
-    DesignProfile, EvalRequest, PackedProblem, C_VARIANTS, J_PAD, K_PAD, NUM_METRICS, T_PAD,
+    ConfigRow, DesignProfile, EvalRequest, TaskMatrix, C_VARIANTS, J_PAD, K_PAD, NUM_METRICS,
+    T_PAD,
 };
 use crate::runtime::{CacheCounters, CacheStats};
 
-/// Envelope schema version. Bump on any change to the envelope layout
-/// *or* to the profile semantics (what the engine contraction computes);
-/// older entries are then rejected and recomputed.
-pub const PROFILE_SCHEMA: u32 = 1;
+/// Envelope schema version. Bump on any change to the envelope layout,
+/// the key derivation *or* the profile semantics (what the engine
+/// contraction computes); older entries are then rejected and recomputed.
+/// (v1: packed-tensor keys, JSON-only envelopes. v2: `ConfigRow`-level
+/// keys + binary sidecars.)
+pub const PROFILE_SCHEMA: u32 = 2;
 
-/// 128-bit content key of one packed profile chunk.
+/// Magic of the binary sidecar envelope.
+const SIDECAR_MAGIC: [u8; 4] = *b"XRCP";
+
+/// 128-bit content key of one profile chunk.
 #[derive(Debug, Clone, Copy, PartialEq, Eq, PartialOrd, Ord, Hash)]
 pub struct CacheKey {
     hi: u64,
@@ -57,6 +83,16 @@ impl CacheKey {
     pub fn hex(&self) -> String {
         format!("{:016x}{:016x}", self.hi, self.lo)
     }
+
+    /// Parse the fixed-width hex rendering back (file stems → keys).
+    pub fn from_hex(s: &str) -> Option<CacheKey> {
+        if s.len() != 32 || !s.bytes().all(|b| b.is_ascii_hexdigit()) {
+            return None;
+        }
+        let hi = u64::from_str_radix(&s[..16], 16).ok()?;
+        let lo = u64::from_str_radix(&s[16..], 16).ok()?;
+        Some(CacheKey { hi, lo })
+    }
 }
 
 impl std::fmt::Display for CacheKey {
@@ -65,72 +101,129 @@ impl std::fmt::Display for CacheKey {
     }
 }
 
-/// Two independently-seeded FNV-1a streams fed the same bytes — a cheap
-/// dependency-free 128-bit content hash (collision odds are negligible
-/// at cache scale, and a colliding entry would still have to pass the
-/// shape checks). Shared with the search checkpoints (`dse::search`)
-/// for grid and envelope digests — one hash core, not three.
-pub(crate) struct KeyHasher {
-    a: u64,
-    b: u64,
+/// Finish a [`ContentHasher`] into a [`CacheKey`].
+fn finish_key(h: ContentHasher) -> CacheKey {
+    let (hi, lo) = h.finish128();
+    CacheKey { hi, lo }
 }
 
-const FNV_PRIME: u64 = 0x0000_0100_0000_01B3;
+/// Cache behavior knobs (see [`ProfileCache::open_with`]).
+#[derive(Debug, Clone, Copy)]
+pub struct CacheConfig {
+    /// On-disk size budget in bytes over all envelope + sidecar files;
+    /// `None` (the default) disables eviction entirely. The budget is a
+    /// target, not a hard invariant: the most recently written entry is
+    /// never evicted, so a budget smaller than one entry degrades to
+    /// "keep exactly the newest".
+    pub budget_bytes: Option<u64>,
+    /// In-memory LRU capacity in entries (0 disables the memory layer).
+    /// Entries are bit-exact copies of what disk holds, so the layer is
+    /// transparent to results — it only removes the re-read + re-parse
+    /// from repeated same-process lookups.
+    pub mem_entries: usize,
+    /// Write and consult binary sidecars (default true). `false` forces
+    /// the JSON-only legacy behavior — kept for the warm-read benchmark
+    /// baseline and as an escape hatch.
+    pub binary_sidecars: bool,
+}
 
-impl KeyHasher {
-    pub(crate) fn new() -> Self {
-        // Offset bases: the standard FNV-1a basis and a second stream
-        // seeded from it (any fixed distinct constant works).
-        KeyHasher { a: 0xCBF2_9CE4_8422_2325, b: 0x9AE1_6A3B_2F90_404F }
-    }
-
-    pub(crate) fn write(&mut self, bytes: &[u8]) {
-        for &byte in bytes {
-            self.a = (self.a ^ byte as u64).wrapping_mul(FNV_PRIME);
-            self.b = (self.b ^ byte as u64).wrapping_mul(FNV_PRIME).rotate_left(1);
-        }
-    }
-
-    pub(crate) fn write_u64(&mut self, v: u64) {
-        self.write(&v.to_le_bytes());
-    }
-
-    pub(crate) fn write_f32s(&mut self, xs: &[f32]) {
-        self.write_u64(xs.len() as u64);
-        for x in xs {
-            self.write(&x.to_bits().to_le_bytes());
-        }
-    }
-
-    pub(crate) fn write_str(&mut self, s: &str) {
-        self.write_u64(s.len() as u64);
-        self.write(s.as_bytes());
-    }
-
-    pub(crate) fn finish(self) -> CacheKey {
-        CacheKey { hi: self.a, lo: self.b }
+impl Default for CacheConfig {
+    fn default() -> Self {
+        CacheConfig { budget_bytes: None, mem_entries: 256, binary_sidecars: true }
     }
 }
 
-/// On-disk, content-addressed store of [`DesignProfile`]s with a
-/// thread-safe stats surface. One JSON envelope per key under `dir`.
+/// In-memory LRU of validated profiles above the on-disk store.
+#[derive(Debug, Default)]
+struct MemLru {
+    cap: usize,
+    tick: u64,
+    map: BTreeMap<CacheKey, (u64, DesignProfile)>,
+}
+
+impl MemLru {
+    fn get(&mut self, key: &CacheKey) -> Option<DesignProfile> {
+        self.tick += 1;
+        let tick = self.tick;
+        self.map.get_mut(key).map(|slot| {
+            slot.0 = tick;
+            slot.1.clone()
+        })
+    }
+
+    fn put(&mut self, key: CacheKey, profile: DesignProfile) {
+        if self.cap == 0 {
+            return;
+        }
+        self.tick += 1;
+        self.map.insert(key, (self.tick, profile));
+        while self.map.len() > self.cap {
+            let oldest = self.map.iter().min_by_key(|(_, (t, _))| *t).map(|(k, _)| *k);
+            match oldest {
+                Some(k) => {
+                    self.map.remove(&k);
+                }
+                None => break,
+            }
+        }
+    }
+}
+
+/// On-disk accounting for the size-budget eviction policy. `approx` is
+/// an overestimate (overwrites are double-counted) that only triggers a
+/// rescan; evictions always work off a fresh directory scan.
+#[derive(Debug, Default)]
+struct DiskTracker {
+    approx_bytes: u64,
+    scanned: bool,
+    /// In-process access recency per key (hits and writes). Entries not
+    /// in this map were last touched by an earlier process; eviction
+    /// falls back to their write generation (file mtime) — the
+    /// "generation-stamped GC" half of the policy.
+    touched: BTreeMap<CacheKey, u64>,
+    tick: u64,
+}
+
+/// On-disk, content-addressed store of [`DesignProfile`]s with an
+/// in-memory LRU layer and a thread-safe stats surface. One JSON
+/// envelope (+ binary sidecar) per key under `dir`.
 #[derive(Debug)]
 pub struct ProfileCache {
     dir: PathBuf,
+    cfg: CacheConfig,
     counters: CacheCounters,
+    mem: Mutex<MemLru>,
+    disk: Mutex<DiskTracker>,
 }
 
 impl ProfileCache {
-    /// Open (creating if needed) a cache directory.
+    /// Open (creating if needed) a cache directory with default config
+    /// (no size budget, 256-entry memory layer, binary sidecars on).
     pub fn open(dir: impl AsRef<Path>) -> crate::Result<ProfileCache> {
+        Self::open_with(dir, CacheConfig::default())
+    }
+
+    /// Open (creating if needed) a cache directory with explicit knobs.
+    pub fn open_with(dir: impl AsRef<Path>, cfg: CacheConfig) -> crate::Result<ProfileCache> {
         let dir = dir.as_ref().to_path_buf();
         std::fs::create_dir_all(&dir)?;
-        Ok(ProfileCache { dir, counters: CacheCounters::new() })
+        Ok(ProfileCache {
+            dir,
+            cfg,
+            counters: CacheCounters::new(),
+            mem: Mutex::new(MemLru { cap: cfg.mem_entries, ..MemLru::default() }),
+            disk: Mutex::new(DiskTracker::default()),
+        })
     }
 
     /// The backing directory.
     pub fn dir(&self) -> &Path {
         &self.dir
+    }
+
+    /// The configuration this cache was opened with.
+    pub fn config(&self) -> CacheConfig {
+        self.cfg
     }
 
     /// Snapshot of this cache's hit/miss/write counters (process
@@ -139,13 +232,15 @@ impl ProfileCache {
         self.counters.snapshot()
     }
 
-    /// Content key of one packed chunk for one engine. Hashes exactly
-    /// the scenario-invariant inputs of the phase-A contraction plus the
-    /// shape constants and schema version — the scenario knobs
-    /// (`online`, `qos`, scalars) are deliberately excluded, which is
-    /// what makes one cached profile serve every scenario overlay.
-    pub fn key_for_packed(packed: &PackedProblem, engine: &str) -> CacheKey {
-        let mut h = KeyHasher::new();
+    /// Content key of one config chunk for one engine. Hashes exactly
+    /// the scenario-invariant inputs of the phase-A contraction (at
+    /// [`ConfigRow`] resolution — packing is deterministic in these, so
+    /// no packed tensors are needed) plus the shape constants and schema
+    /// version. The scenario knobs (`online`, `qos`, scalars) are
+    /// deliberately excluded, which is what makes one cached profile
+    /// serve every scenario overlay.
+    pub fn key_for_chunk(tasks: &TaskMatrix, configs: &[ConfigRow], engine: &str) -> CacheKey {
+        let mut h = ContentHasher::new();
         h.write(b"xrcarbon-profile");
         h.write_u64(PROFILE_SCHEMA as u64);
         // Artifact-manifest shape constants: a rebuilt artifact set with
@@ -157,63 +252,157 @@ impl ProfileCache {
             h.write_u64(v as u64);
         }
         h.write_str(engine);
-        for dim in [packed.c_pad, packed.c, packed.t, packed.k] {
-            h.write_u64(dim as u64);
+        h.write_u64(tasks.tasks.len() as u64);
+        for t in &tasks.tasks {
+            h.write_str(t);
         }
-        h.write_f32s(&packed.n);
-        h.write_f32s(&packed.p_leak);
-        h.write_f32s(&packed.p_dyn);
-        h.write_f32s(&packed.f_clk);
-        h.write_f32s(&packed.d_k);
-        h.write_f32s(&packed.c_comp);
-        h.write_u64(packed.names.len() as u64);
-        for name in &packed.names {
-            h.write_str(name);
+        h.write_u64(tasks.kernels.len() as u64);
+        for k in &tasks.kernels {
+            h.write_str(k);
         }
-        h.finish()
+        h.write_f64s(&tasks.n);
+        h.write_u64(configs.len() as u64);
+        for c in configs {
+            h.write_str(&c.name);
+            h.write_u64(c.f_clk.to_bits());
+            h.write_f64s(&c.d_k);
+            h.write_f64s(&c.e_dyn);
+            h.write_u64(c.leak_w.to_bits());
+            h.write_f64s(&c.c_comp);
+        }
+        finish_key(h)
     }
 
-    /// Convenience: pack a (non-empty) chunk request and key it.
+    /// Convenience: key a whole (single-chunk) request.
     pub fn key_for_request(req: &EvalRequest, engine: &str) -> CacheKey {
-        Self::key_for_packed(&PackedProblem::from_request(req), engine)
+        Self::key_for_chunk(&req.tasks, &req.configs, engine)
     }
 
-    fn path_for(&self, key: &CacheKey) -> PathBuf {
+    /// Path of the JSON envelope for `key`.
+    pub fn envelope_path(&self, key: &CacheKey) -> PathBuf {
         self.dir.join(format!("{}.profile.json", key.hex()))
     }
 
-    /// Look a profile up. `Some` only for an envelope that passes every
-    /// validation check; absent entries and read errors are plain misses,
-    /// while corrupted/stale *content* is additionally counted as
-    /// rejected (`rejected` means "an envelope was validated and
-    /// refused", not "I/O failed") — either way the caller recomputes.
+    /// Path of the binary sidecar for `key`.
+    pub fn sidecar_path(&self, key: &CacheKey) -> PathBuf {
+        self.dir.join(format!("{}.profile.bin", key.hex()))
+    }
+
+    fn touch(&self, key: &CacheKey) {
+        let mut disk = self.disk.lock().unwrap_or_else(std::sync::PoisonError::into_inner);
+        disk.tick += 1;
+        let tick = disk.tick;
+        disk.touched.insert(*key, tick);
+    }
+
+    /// Look a profile up: memory LRU, then binary sidecar, then JSON
+    /// envelope. `Some` only for an entry that passes every validation
+    /// check; absent entries and read errors are plain misses, while
+    /// corrupted/stale *content* is additionally counted as rejected
+    /// (`rejected` means "an envelope was validated and refused", not
+    /// "I/O failed") — either way the caller recomputes. A valid JSON
+    /// envelope behind a bad/missing sidecar is a hit (the sidecar is
+    /// repaired best-effort); a bad sidecar with no valid JSON behind it
+    /// is a rejection.
     pub fn load(&self, key: &CacheKey, engine: &str) -> Option<DesignProfile> {
-        let path = self.path_for(key);
-        let text = match std::fs::read_to_string(&path) {
-            Ok(t) => t,
+        if self.cfg.mem_entries > 0 {
+            let mut mem = self.mem.lock().unwrap_or_else(std::sync::PoisonError::into_inner);
+            if let Some(profile) = mem.get(key) {
+                drop(mem);
+                self.counters.record_mem_hit();
+                self.touch(key);
+                return Some(profile);
+            }
+        }
+
+        // Fast path: the binary sidecar. `sidecar_seen` distinguishes
+        // "no sidecar" (fall through silently) from "sidecar refused"
+        // (a rejection if the JSON fallback cannot serve either).
+        let mut sidecar_seen = false;
+        if self.cfg.binary_sidecars {
+            if let Ok(bytes) = std::fs::read(self.sidecar_path(key)) {
+                sidecar_seen = true;
+                if let Some(profile) = decode_sidecar(&bytes, key, engine) {
+                    self.remember(key, &profile);
+                    self.counters.record_hit();
+                    self.touch(key);
+                    return Some(profile);
+                }
+            }
+        }
+
+        // Readable fallback: the JSON envelope.
+        match std::fs::read_to_string(self.envelope_path(key)) {
+            Ok(text) => match decode_envelope(&text, key, engine) {
+                Some(profile) => {
+                    // Recency first: a concurrent eviction pass must
+                    // rank this entry as freshly used before any repair
+                    // bytes land on disk.
+                    self.touch(key);
+                    if self.cfg.binary_sidecars {
+                        // Repair/upgrade the sidecar in place (legacy
+                        // JSON-only entries, crashed sidecar writes).
+                        // Best-effort: a failure just leaves the slow
+                        // path in play. Repair bytes count toward the
+                        // size budget like any other write — a fully
+                        // warm run over a legacy JSON-only cache must
+                        // not grow past the budget unnoticed.
+                        if let Ok(written) = self.write_sidecar(key, &profile, engine) {
+                            self.account_write(written);
+                        }
+                    }
+                    self.remember(key, &profile);
+                    self.counters.record_hit();
+                    Some(profile)
+                }
+                None => {
+                    self.counters.record_rejected();
+                    None
+                }
+            },
             Err(_) => {
-                // NotFound, permissions, transient I/O — nothing was
-                // validated, so this is a miss, not a rejection.
-                self.counters.record_miss();
-                return None;
-            }
-        };
-        match decode_envelope(&text, key, engine) {
-            Some(profile) => {
-                self.counters.record_hit();
-                Some(profile)
-            }
-            None => {
-                self.counters.record_rejected();
+                // NotFound, permissions, transient I/O — nothing JSON
+                // was validated. If a sidecar existed and was refused,
+                // the entry as a whole was validated-and-refused.
+                if sidecar_seen {
+                    self.counters.record_rejected();
+                } else {
+                    self.counters.record_miss();
+                }
                 None
             }
         }
     }
 
-    /// Write a profile back under its key (temp file + rename, so
-    /// concurrent readers never observe a partial envelope). Failures
-    /// are counted on the stats surface either way, so callers for whom
-    /// the cache is an optimization (the sweep) can ignore the error and
+    fn remember(&self, key: &CacheKey, profile: &DesignProfile) {
+        if self.cfg.mem_entries > 0 {
+            let mut mem = self.mem.lock().unwrap_or_else(std::sync::PoisonError::into_inner);
+            mem.put(*key, profile.clone());
+        }
+    }
+
+    /// Write the binary sidecar for an entry, returning the bytes
+    /// written (budget accounting). On the repair path the JSON
+    /// envelope's engine echo was just validated against `engine` (and
+    /// the key itself binds the engine), so echoing the requested label
+    /// is sound.
+    fn write_sidecar(
+        &self,
+        key: &CacheKey,
+        profile: &DesignProfile,
+        engine: &str,
+    ) -> crate::Result<u64> {
+        let bytes = encode_sidecar(key, profile, engine);
+        atomic_write_bytes(&self.sidecar_path(key), &bytes)?;
+        Ok(bytes.len() as u64)
+    }
+
+    /// Write a profile back under its key: the JSON envelope (source of
+    /// truth; temp file + rename, so concurrent readers never observe a
+    /// partial envelope) plus the binary sidecar (best-effort — a
+    /// missing sidecar only costs speed). Failures of the JSON write are
+    /// counted on the stats surface either way, so callers for whom the
+    /// cache is an optimization (the sweep) can ignore the error and
     /// degrade to uncached behavior.
     pub fn store(
         &self,
@@ -221,32 +410,176 @@ impl ProfileCache {
         profile: &DesignProfile,
         engine: &str,
     ) -> crate::Result<()> {
-        match atomic_write(&self.path_for(key), &encode_envelope(key, profile, engine)) {
-            Ok(()) => {
-                self.counters.record_write();
-                Ok(())
-            }
+        // Recency BEFORE the files become visible on disk: a concurrent
+        // worker's eviction pass scanning the directory between our
+        // rename and a later touch would otherwise rank this entry as
+        // untouched (rank 0) and evict the freshest write first.
+        self.touch(key);
+        let text = encode_envelope(key, profile, engine);
+        let mut written = text.len() as u64;
+        match atomic_write(&self.envelope_path(key), &text) {
+            Ok(()) => self.counters.record_write(),
             Err(e) => {
                 self.counters.record_write_error();
-                Err(e)
+                return Err(e);
             }
         }
+        if self.cfg.binary_sidecars {
+            if let Ok(bytes) = self.write_sidecar(key, profile, engine) {
+                written += bytes;
+            }
+        }
+        self.remember(key, profile);
+        self.account_write(written);
+        Ok(())
+    }
+
+    /// Add `bytes` to the approximate on-disk total and run the
+    /// eviction policy when it crosses the budget.
+    fn account_write(&self, bytes: u64) {
+        let Some(budget) = self.cfg.budget_bytes else { return };
+        let mut disk = self.disk.lock().unwrap_or_else(std::sync::PoisonError::into_inner);
+        if !disk.scanned {
+            // First write of this process: fold pre-existing entries in.
+            disk.approx_bytes = scan_entries(&self.dir).iter().map(|e| e.bytes).sum();
+            disk.scanned = true;
+        }
+        disk.approx_bytes += bytes;
+        if disk.approx_bytes <= budget {
+            return;
+        }
+        // Over (possibly only approximately — overwrites double-count):
+        // rescan for the exact picture, then evict oldest-first.
+        let mut entries = scan_entries(&self.dir);
+        let mut total: u64 = entries.iter().map(|e| e.bytes).sum();
+        // Recency rank: in-process access tick when known, else 0 — so
+        // disk-only entries order among themselves by write generation
+        // (mtime) and always evict before anything touched this process.
+        entries.sort_by(|a, b| {
+            let ra = disk.touched.get(&a.key).copied().unwrap_or(0);
+            let rb = disk.touched.get(&b.key).copied().unwrap_or(0);
+            ra.cmp(&rb).then(a.mtime.cmp(&b.mtime)).then(a.key.cmp(&b.key))
+        });
+        let mut evicted = 0usize;
+        while total > budget && entries.len() - evicted > 1 {
+            let victim = &entries[evicted];
+            std::fs::remove_file(self.envelope_path(&victim.key)).ok();
+            std::fs::remove_file(self.sidecar_path(&victim.key)).ok();
+            total = total.saturating_sub(victim.bytes);
+            disk.touched.remove(&victim.key);
+            self.counters.record_eviction();
+            evicted += 1;
+        }
+        disk.approx_bytes = total;
+    }
+
+    /// Total bytes of envelope + sidecar files currently on disk
+    /// (fresh directory scan — test/report surface).
+    pub fn disk_bytes(&self) -> u64 {
+        scan_entries(&self.dir).iter().map(|e| e.bytes).sum()
+    }
+
+    /// Number of distinct entries currently on disk (fresh scan).
+    pub fn disk_entries(&self) -> usize {
+        scan_entries(&self.dir).len()
     }
 }
 
-/// Crash-safe file write shared by the cache and the search
-/// checkpoints: write to a uniquely-named sibling temp file (pid + a
-/// process-wide counter, so concurrent writers of the same path never
-/// share one), then rename into place — readers can never observe a
-/// partial document.
+/// One on-disk entry (envelope + sidecar) as seen by a directory scan.
+struct DiskEntry {
+    key: CacheKey,
+    bytes: u64,
+    /// Newest mtime across the entry's files — its write generation.
+    mtime: std::time::SystemTime,
+}
+
+fn scan_entries(dir: &Path) -> Vec<DiskEntry> {
+    let mut map: BTreeMap<CacheKey, DiskEntry> = BTreeMap::new();
+    let Ok(rd) = std::fs::read_dir(dir) else { return Vec::new() };
+    for entry in rd.flatten() {
+        let name = entry.file_name();
+        let Some(name) = name.to_str() else { continue };
+        let stem = match name.strip_suffix(".profile.json") {
+            Some(s) => s,
+            None => match name.strip_suffix(".profile.bin") {
+                Some(s) => s,
+                None => continue, // temp files, foreign files
+            },
+        };
+        let Some(key) = CacheKey::from_hex(stem) else { continue };
+        let Ok(meta) = entry.metadata() else { continue };
+        let mtime = meta.modified().unwrap_or(std::time::SystemTime::UNIX_EPOCH);
+        let e = map.entry(key).or_insert(DiskEntry {
+            key,
+            bytes: 0,
+            mtime: std::time::SystemTime::UNIX_EPOCH,
+        });
+        e.bytes += meta.len();
+        if mtime > e.mtime {
+            e.mtime = mtime;
+        }
+    }
+    map.into_values().collect()
+}
+
+/// Crash-safe file write shared by the cache, the search checkpoints and
+/// the sweep checkpoints: write to a uniquely-named sibling temp file
+/// (pid + a process-wide counter, so concurrent writers of the same path
+/// never share one), then rename into place — readers can never observe
+/// a partial document.
 pub(crate) fn atomic_write(path: &Path, text: &str) -> crate::Result<()> {
+    atomic_write_bytes(path, text.as_bytes())
+}
+
+/// Byte-level flavor of [`atomic_write`] (binary sidecars).
+pub(crate) fn atomic_write_bytes(path: &Path, bytes: &[u8]) -> crate::Result<()> {
     static SEQ: std::sync::atomic::AtomicU64 = std::sync::atomic::AtomicU64::new(0);
     let seq = SEQ.fetch_add(1, std::sync::atomic::Ordering::Relaxed);
     let mut tmp = path.as_os_str().to_owned();
     tmp.push(format!(".tmp.{}.{seq}", std::process::id()));
     let tmp = PathBuf::from(tmp);
-    std::fs::write(&tmp, text)?;
+    std::fs::write(&tmp, bytes)?;
     std::fs::rename(&tmp, path)?;
+    Ok(())
+}
+
+/// Digest of a rendered envelope body (the document *without* its
+/// `digest` member) — shared by the search and sweep checkpoints.
+pub(crate) fn body_digest(body: &str) -> String {
+    let mut h = ContentHasher::new();
+    h.write_str(body);
+    h.finish_hex()
+}
+
+/// Splice an integrity digest into an already-rendered JSON object
+/// document — the render-once counterpart of the old
+/// render-hash-rerender cycle. Parse order is irrelevant (objects are
+/// `BTreeMap`s), so the member goes right after the opening brace.
+pub(crate) fn splice_digest(body: &str) -> String {
+    debug_assert!(body.starts_with('{'), "checkpoint body must be a JSON object");
+    if body == "{}" {
+        return format!("{{\"digest\":\"{}\"}}", body_digest(body));
+    }
+    format!("{{\"digest\":\"{}\",{}", body_digest(body), &body[1..])
+}
+
+/// Remove and verify the `digest` member of a parsed envelope: the
+/// stored digest must match a recomputation over the re-rendered
+/// remainder (deterministic writer + sorted keys make the round-trip
+/// byte-stable), so any post-write edit to the payload is rejected.
+pub(crate) fn strip_and_verify_digest(doc: &mut Json, what: &str) -> crate::Result<()> {
+    let stored = match doc {
+        Json::Obj(o) => o.remove("digest"),
+        _ => None,
+    }
+    .and_then(|d| d.as_str().map(str::to_string))
+    .ok_or_else(|| anyhow::anyhow!("{what}: missing or invalid field `digest`"))?;
+    if stored != body_digest(&doc.to_string()) {
+        anyhow::bail!(
+            "{what}: integrity digest mismatch — the file was edited or corrupted; \
+             re-run from scratch"
+        );
+    }
     Ok(())
 }
 
@@ -278,7 +611,7 @@ fn get_usize(obj: &Json, key: &str) -> Option<usize> {
 /// were written — a flipped digit in a bit value is structurally valid
 /// JSON and would otherwise be trusted.
 fn payload_digest(profile: &DesignProfile) -> String {
-    let mut h = KeyHasher::new();
+    let mut h = ContentHasher::new();
     for dim in [profile.c, profile.c_pad, profile.t] {
         h.write_u64(dim as u64);
     }
@@ -290,10 +623,10 @@ fn payload_digest(profile: &DesignProfile) -> String {
     for name in &profile.names {
         h.write_str(name);
     }
-    h.finish().hex()
+    h.finish_hex()
 }
 
-/// Render the versioned envelope for one profile.
+/// Render the versioned JSON envelope for one profile.
 fn encode_envelope(key: &CacheKey, profile: &DesignProfile, engine: &str) -> String {
     let names = Json::Arr(profile.names.iter().map(|n| Json::Str(n.clone())).collect());
     let doc = Json::obj(vec![
@@ -325,7 +658,7 @@ fn encode_envelope(key: &CacheKey, profile: &DesignProfile, engine: &str) -> Str
     doc.to_string()
 }
 
-/// Parse and fully validate an envelope; `None` means "reject and
+/// Parse and fully validate a JSON envelope; `None` means "reject and
 /// recompute" (never a panic — cache contents are untrusted input).
 fn decode_envelope(text: &str, key: &CacheKey, engine: &str) -> Option<DesignProfile> {
     let doc = parse(text).ok()?;
@@ -375,6 +708,68 @@ fn decode_envelope(text: &str, key: &CacheKey, engine: &str) -> Option<DesignPro
     Some(profile)
 }
 
+/// Render the binary sidecar for one profile: raw little-endian `f32`
+/// bits with a whole-envelope digest trailer.
+fn encode_sidecar(key: &CacheKey, profile: &DesignProfile, engine: &str) -> Vec<u8> {
+    let mut w = BinWriter::new(SIDECAR_MAGIC, PROFILE_SCHEMA);
+    w.put_u64(key.hi);
+    w.put_u64(key.lo);
+    w.put_str(engine);
+    w.put_u32(T_PAD as u32);
+    w.put_u32(J_PAD as u32);
+    w.put_u32(profile.c as u32);
+    w.put_u32(profile.c_pad as u32);
+    w.put_u32(profile.t as u32);
+    w.put_f32_bits(&profile.energy);
+    w.put_f32_bits(&profile.delay);
+    w.put_f32_bits(&profile.d_task);
+    w.put_f32_bits(&profile.c_comp);
+    w.put_u32(profile.names.len() as u32);
+    for name in &profile.names {
+        w.put_str(name);
+    }
+    w.finish()
+}
+
+/// Parse and fully validate a binary sidecar; `None` means "fall back to
+/// the JSON envelope" (and reject-and-recompute if that fails too). The
+/// digest trailer already proves byte integrity; the field checks prove
+/// the envelope belongs to (key, engine) and the current shapes.
+fn decode_sidecar(bytes: &[u8], key: &CacheKey, engine: &str) -> Option<DesignProfile> {
+    let mut r = BinReader::open(bytes, SIDECAR_MAGIC, PROFILE_SCHEMA)?;
+    if r.take_u64()? != key.hi || r.take_u64()? != key.lo {
+        return None;
+    }
+    if r.take_str()? != engine {
+        return None;
+    }
+    if r.take_u32()? as usize != T_PAD || r.take_u32()? as usize != J_PAD {
+        return None;
+    }
+    let c = r.take_u32()? as usize;
+    let c_pad = r.take_u32()? as usize;
+    let t = r.take_u32()? as usize;
+    if c > c_pad || t > T_PAD || !C_VARIANTS.contains(&c_pad) {
+        return None;
+    }
+    let energy = r.take_f32_bits(c_pad)?;
+    let delay = r.take_f32_bits(c_pad)?;
+    let d_task = r.take_f32_bits(c_pad * T_PAD)?;
+    let c_comp = r.take_f32_bits(c_pad * J_PAD)?;
+    let n_names = r.take_u32()? as usize;
+    if n_names != c {
+        return None;
+    }
+    let mut names = Vec::with_capacity(c);
+    for _ in 0..c {
+        names.push(r.take_str()?);
+    }
+    if !r.at_end() {
+        return None;
+    }
+    Some(DesignProfile { energy, delay, d_task, c_comp, c_pad, c, t, names })
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -411,6 +806,22 @@ mod tests {
         profile_request(&mut HostEngine::new(), &neutral).unwrap()
     }
 
+    /// Config with the memory layer off — unit tests that target the
+    /// disk paths must not be masked by same-process memory hits.
+    fn no_mem() -> CacheConfig {
+        CacheConfig { mem_entries: 0, ..CacheConfig::default() }
+    }
+
+    fn assert_profiles_bit_equal(a: &DesignProfile, b: &DesignProfile) {
+        let bits = |xs: &[f32]| xs.iter().map(|x| x.to_bits()).collect::<Vec<_>>();
+        assert_eq!(bits(&a.energy), bits(&b.energy));
+        assert_eq!(bits(&a.delay), bits(&b.delay));
+        assert_eq!(bits(&a.d_task), bits(&b.d_task));
+        assert_eq!(bits(&a.c_comp), bits(&b.c_comp));
+        assert_eq!(a.names, b.names);
+        assert_eq!((a.c, a.c_pad, a.t), (b.c, b.c_pad, b.t));
+    }
+
     #[test]
     fn key_is_stable_and_content_sensitive() {
         let req = request(5);
@@ -418,6 +829,8 @@ mod tests {
         let k2 = ProfileCache::key_for_request(&req.clone(), "host");
         assert_eq!(k1, k2);
         assert_eq!(k1.hex().len(), 32);
+        assert_eq!(CacheKey::from_hex(&k1.hex()), Some(k1));
+        assert_eq!(CacheKey::from_hex("nothex"), None);
 
         // Any design-space change moves the key…
         let mut other = request(5);
@@ -426,6 +839,12 @@ mod tests {
         let mut renamed = request(5);
         renamed.configs[0].name = "renamed".into();
         assert_ne!(k1, ProfileCache::key_for_request(&renamed, "host"));
+        let mut energized = request(5);
+        energized.configs[2].e_dyn[0] *= 2.0;
+        assert_ne!(k1, ProfileCache::key_for_request(&energized, "host"));
+        let mut tasked = request(5);
+        tasked.tasks.set(0, 0, 4.0);
+        assert_ne!(k1, ProfileCache::key_for_request(&tasked, "host"));
         // …as does the engine label…
         assert_ne!(k1, ProfileCache::key_for_request(&req, "pjrt"));
         // …while scenario knobs do NOT (profiles are scenario-invariant).
@@ -439,7 +858,7 @@ mod tests {
     }
 
     #[test]
-    fn store_load_roundtrip_is_bit_exact() {
+    fn store_load_roundtrip_is_bit_exact_through_every_layer() {
         let dir = test_dir("cache_unit");
         let cache = ProfileCache::open(&dir).unwrap();
         let req = request(7);
@@ -453,17 +872,59 @@ mod tests {
 
         let key = ProfileCache::key_for_request(&req, "host");
         cache.store(&key, &prof, "host").unwrap();
-        let back = cache.load(&key, "host").expect("stored profile loads");
-        let bits = |xs: &[f32]| xs.iter().map(|x| x.to_bits()).collect::<Vec<_>>();
-        assert_eq!(bits(&back.energy), bits(&prof.energy));
-        assert_eq!(bits(&back.delay), bits(&prof.delay));
-        assert_eq!(bits(&back.d_task), bits(&prof.d_task));
-        assert_eq!(bits(&back.c_comp), bits(&prof.c_comp));
-        assert_eq!(back.names, prof.names);
-        assert_eq!((back.c, back.c_pad, back.t), (prof.c, prof.c_pad, prof.t));
 
+        // (1) Same-process load: served by the memory LRU.
+        let back = cache.load(&key, "host").expect("stored profile loads");
+        assert_profiles_bit_equal(&back, &prof);
         let s = cache.stats();
-        assert_eq!((s.hits, s.misses, s.writes, s.rejected), (1, 0, 1, 0));
+        assert_eq!((s.hits, s.mem_hits, s.misses, s.writes, s.rejected), (1, 1, 0, 1, 0));
+
+        // (2) Fresh instance (cold memory): served by the binary sidecar.
+        let fresh = ProfileCache::open_with(&dir, no_mem()).unwrap();
+        let back = fresh.load(&key, "host").expect("sidecar loads");
+        assert_profiles_bit_equal(&back, &prof);
+
+        // (3) Sidecar deleted: served by the JSON fallback, bit-exact,
+        // and the sidecar is repaired in place.
+        std::fs::remove_file(fresh.sidecar_path(&key)).unwrap();
+        let fresh2 = ProfileCache::open_with(&dir, no_mem()).unwrap();
+        let back = fresh2.load(&key, "host").expect("json fallback loads");
+        assert_profiles_bit_equal(&back, &prof);
+        assert!(fresh2.sidecar_path(&key).exists(), "sidecar repaired after fallback");
+        let s = fresh2.stats();
+        assert_eq!((s.hits, s.mem_hits, s.rejected), (1, 0, 0));
+        // …and each fresh instance saw exactly one (disk) hit.
+        assert_eq!((fresh.stats().hits, fresh.stats().mem_hits), (1, 0));
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn memory_layer_survives_disk_loss_and_is_bounded() {
+        let dir = test_dir("cache_unit");
+        let cache =
+            ProfileCache::open_with(&dir, CacheConfig { mem_entries: 2, ..CacheConfig::default() })
+                .unwrap();
+        let reqs: Vec<EvalRequest> = (0..3).map(|i| request(3 + i)).collect();
+        let keys: Vec<CacheKey> =
+            reqs.iter().map(|r| ProfileCache::key_for_request(r, "host")).collect();
+        let profs: Vec<DesignProfile> = reqs.iter().map(profile_of).collect();
+        for (k, p) in keys.iter().zip(&profs) {
+            cache.store(k, p, "host").unwrap();
+        }
+        // Disk wiped: the two most recently stored entries still serve
+        // from memory (bit-exact); the first was LRU-evicted from the
+        // bounded memory layer and is now a miss.
+        for k in &keys {
+            std::fs::remove_file(cache.envelope_path(k)).unwrap();
+            std::fs::remove_file(cache.sidecar_path(k)).unwrap();
+        }
+        assert!(cache.load(&keys[0], "host").is_none(), "mem layer holds only 2 entries");
+        for i in [1usize, 2] {
+            let back = cache.load(&keys[i], "host").expect("served from memory");
+            assert_profiles_bit_equal(&back, &profs[i]);
+        }
+        let s = cache.stats();
+        assert_eq!((s.hits, s.mem_hits, s.misses), (2, 2, 1));
         std::fs::remove_dir_all(&dir).ok();
     }
 
@@ -481,12 +942,19 @@ mod tests {
     #[test]
     fn stale_schema_and_corruption_are_rejected_never_trusted() {
         let dir = test_dir("cache_unit");
-        let cache = ProfileCache::open(&dir).unwrap();
+        let cache = ProfileCache::open_with(&dir, no_mem()).unwrap();
         let req = request(3);
         let prof = profile_of(&req);
         let key = ProfileCache::key_for_request(&req, "host");
-        let path = dir.join(format!("{}.profile.json", key.hex()));
+        let path = cache.envelope_path(&key);
         cache.store(&key, &prof, "host").unwrap();
+        // These cases target the JSON envelope; drop the sidecar so the
+        // fast path cannot mask the corruption (the load's repair step
+        // would resurrect it, so it is re-deleted per case).
+        let drop_sidecar = || {
+            std::fs::remove_file(cache.sidecar_path(&key)).ok();
+        };
+        drop_sidecar();
 
         // (a) stale schema version.
         let mut doc = parse(&std::fs::read_to_string(&path).unwrap()).unwrap();
@@ -541,13 +1009,117 @@ mod tests {
         // (f) engine mismatch on an otherwise-valid envelope.
         std::fs::write(&path, &text).unwrap();
         assert!(cache.load(&key, "pjrt").is_none());
-        // …and the intact envelope still loads for the right engine.
+        // …and the intact envelope still loads for the right engine
+        // (which also repairs the sidecar).
         assert!(cache.load(&key, "host").is_some());
+        assert!(cache.sidecar_path(&key).exists());
 
         let s = cache.stats();
         assert_eq!(s.hits, 1);
         assert_eq!(s.rejected, 6);
         assert_eq!(s.misses, 6); // every rejection is also a miss
         std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn corrupt_sidecar_falls_back_to_json_and_repairs() {
+        let dir = test_dir("cache_unit");
+        let cache = ProfileCache::open_with(&dir, no_mem()).unwrap();
+        let req = request(4);
+        let prof = profile_of(&req);
+        let key = ProfileCache::key_for_request(&req, "host");
+        cache.store(&key, &prof, "host").unwrap();
+        let bin = cache.sidecar_path(&key);
+
+        // Truncated, bit-flipped and garbage sidecars all fall back to
+        // the (intact) JSON envelope: still a hit, bit-exact, repaired.
+        let good = std::fs::read(&bin).unwrap();
+        for variant in 0..3 {
+            let bad = match variant {
+                0 => good[..good.len() / 2].to_vec(),
+                1 => {
+                    let mut b = good.clone();
+                    b[20] ^= 0xFF;
+                    b
+                }
+                _ => b"not a sidecar".to_vec(),
+            };
+            std::fs::write(&bin, &bad).unwrap();
+            let back = cache.load(&key, "host").expect("json fallback");
+            assert_profiles_bit_equal(&back, &prof);
+            let repaired = std::fs::read(&bin).unwrap();
+            assert_eq!(repaired, good, "sidecar repaired to canonical bytes");
+        }
+        // A bad sidecar with the JSON envelope gone is a rejection.
+        std::fs::write(&bin, b"junk").unwrap();
+        std::fs::remove_file(cache.envelope_path(&key)).unwrap();
+        assert!(cache.load(&key, "host").is_none());
+        let s = cache.stats();
+        assert_eq!((s.hits, s.rejected, s.misses), (3, 1, 1));
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn eviction_keeps_disk_under_budget_and_spares_recent_entries() {
+        let dir = test_dir("cache_unit");
+        // Probe one entry's footprint, then budget for about two.
+        let probe = ProfileCache::open_with(&dir, no_mem()).unwrap();
+        let req0 = request(1);
+        let key0 = ProfileCache::key_for_request(&req0, "host");
+        probe.store(&key0, &profile_of(&req0), "host").unwrap();
+        let per_entry = probe.disk_bytes();
+        assert!(per_entry > 0);
+        std::fs::remove_dir_all(&dir).ok();
+
+        let budget = per_entry * 5 / 2; // fits 2, not 3
+        let cache = ProfileCache::open_with(
+            &dir,
+            CacheConfig { budget_bytes: Some(budget), mem_entries: 0, ..CacheConfig::default() },
+        )
+        .unwrap();
+        // Same shape, distinct content (distinct keys, ~equal sizes).
+        let reqs: Vec<EvalRequest> = (0..5)
+            .map(|i| {
+                let mut r = request(1);
+                r.configs[0].d_k[0] = 1e-3 * (i + 1) as f64;
+                r
+            })
+            .collect();
+        let keys: Vec<CacheKey> =
+            reqs.iter().map(|r| ProfileCache::key_for_request(r, "host")).collect();
+        for (k, r) in keys.iter().zip(&reqs) {
+            cache.store(k, &profile_of(r), "host").unwrap();
+        }
+        // Budget respected (within the one-entry slack the policy
+        // guarantees), evictions counted and the newest entry survives.
+        assert!(cache.disk_bytes() <= budget, "{} > {budget}", cache.disk_bytes());
+        assert!(cache.disk_entries() < 5);
+        assert!(cache.envelope_path(&keys[4]).exists(), "newest entry never evicted");
+        let s = cache.stats();
+        assert_eq!(s.evictions, 5 - cache.disk_entries());
+        assert!(s.evictions >= 3, "expected ≥3 evictions, got {}", s.evictions);
+        // Evicted entries are plain misses; surviving ones still load.
+        assert!(cache.load(&keys[4], "host").is_some());
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn digest_splice_roundtrips_and_detects_tampering() {
+        let body = Json::obj(vec![("a", Json::Num(1.0)), ("z", Json::Str("x".into()))])
+            .to_string();
+        let doc_text = splice_digest(&body);
+        let mut doc = parse(&doc_text).unwrap();
+        strip_and_verify_digest(&mut doc, "test").expect("intact envelope verifies");
+        assert_eq!(doc.to_string(), body, "stripping the digest restores the body");
+        // Tampering with any member breaks verification.
+        let mut tampered = parse(&doc_text).unwrap();
+        if let Json::Obj(o) = &mut tampered {
+            o.insert("a".into(), Json::Num(2.0));
+        }
+        let mut reparsed = parse(&tampered.to_string()).unwrap();
+        assert!(strip_and_verify_digest(&mut reparsed, "test").is_err());
+        // A digest-less document is refused outright.
+        let mut bare = parse(&body).unwrap();
+        assert!(strip_and_verify_digest(&mut bare, "test").is_err());
     }
 }

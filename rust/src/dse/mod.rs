@@ -24,7 +24,11 @@
 //! * [`sweep`]    — the two-phase parallel multi-scenario coordinator:
 //!   profiles config chunks once across per-thread engines (phase A),
 //!   then fans cheap scenario overlays over the cached profiles (phase
-//!   B), bit-identical to the sequential and fused per-scenario paths;
+//!   B), bit-identical to the sequential and fused per-scenario paths.
+//!   Phase A is an explicit state machine (`SweepDriver`) with
+//!   fingerprinted per-chunk checkpoints (`SweepCheckpoint`), so a
+//!   sweep over a giant space interrupted at any chunk resumes
+//!   bit-identically through the profile cache;
 //! * [`search`]   — adaptive Pareto-guided search over a
 //!   [`SearchSpace`]: seeded lattice sampling, successive-halving
 //!   refinement around the pooled Pareto archive, generations batched
@@ -35,9 +39,12 @@
 //!   continue bit-identically;
 //! * [`cache`]    — the persistent, content-addressed profile cache
 //!   (`ProfileCache`): phase-A [`crate::matrixform::DesignProfile`]s
-//!   keyed by a stable hash of the packed design-space tensors, shape
-//!   constants and schema version, serialized as versioned bit-exact
-//!   JSON envelopes — warm-start sweeps skip every cached contraction.
+//!   keyed by a stable `ConfigRow`-level content hash (shape constants
+//!   and schema version included), serialized as versioned bit-exact
+//!   JSON envelopes with binary sidecars for fast warm reads, fronted
+//!   by an in-memory LRU and kept under an optional on-disk size budget
+//!   by LRU/generation-stamped eviction — warm-start sweeps skip every
+//!   cached contraction.
 
 pub mod batching;
 pub mod cache;
@@ -51,20 +58,21 @@ pub mod space;
 pub mod sweep;
 
 pub use batching::{evaluate_chunked, profile_chunk_requests, profile_chunked};
-pub use cache::{CacheKey, ProfileCache, PROFILE_SCHEMA};
+pub use cache::{CacheConfig, CacheKey, ProfileCache, PROFILE_SCHEMA};
 pub use explore::{explore, summarize, ExploreOutcome, ExploreStats};
 pub use grid::{AxisPoint, ScenarioGrid, SweepScenario};
 pub use pareto::{beta_sweep, pareto_front, BetaPoint};
 pub use profile::{profile_configs, profiles_to_rows};
 pub use scenario::{lifetime_for_ratio, Scenario};
 pub use search::{
-    exhaustive_front, grid_digest, pooled_objectives, read_checkpoint, search, search_resumable,
-    write_checkpoint, ArchivePoint, PointEval, ReplayEvaluator, SearchBest, SearchCheckpoint,
-    SearchConfig, SearchDriver, SearchOutcome, SimulatorEvaluator, SpaceEvaluator,
-    CHECKPOINT_SCHEMA,
+    evaluator_digest, exhaustive_front, grid_digest, pooled_objectives, read_checkpoint, search,
+    search_resumable, write_checkpoint, ArchivePoint, PointEval, ReplayEvaluator, SearchBest,
+    SearchCheckpoint, SearchConfig, SearchDriver, SearchOutcome, SimulatorEvaluator,
+    SpaceEvaluator, CHECKPOINT_SCHEMA,
 };
 pub use space::{design_grid, DesignPoint, SearchSpace, SpaceIndex};
 pub use sweep::{
-    sweep, sweep_fused, sweep_sequential, sweep_with_cache, ScenarioResult, SweepConfig,
-    SweepOutcome,
+    read_sweep_checkpoint, sweep, sweep_fingerprint, sweep_fused, sweep_resumable,
+    sweep_sequential, sweep_with_cache, write_sweep_checkpoint, ScenarioResult, SweepCheckpoint,
+    SweepConfig, SweepDriver, SweepOutcome, SWEEP_CHECKPOINT_SCHEMA,
 };

@@ -45,13 +45,13 @@ use std::path::Path;
 
 use crate::accel::Workload;
 use crate::carbon::FabGrid;
-use crate::configfmt::{parse, Json};
+use crate::configfmt::{parse, ContentHasher, Json};
 use crate::matrixform::{ConfigRow, EvalRequest, MetricRow};
 use crate::runtime::EngineFactory;
 use crate::testkit::{parse_seed, Rng, RngState};
 
 use super::batching::shallow;
-use super::cache::{KeyHasher, ProfileCache};
+use super::cache::{splice_digest, strip_and_verify_digest, ProfileCache};
 use super::grid::ScenarioGrid;
 use super::pareto::pareto_front;
 use super::profile::{profile_configs, profiles_to_rows};
@@ -374,8 +374,10 @@ pub fn exhaustive_front(outcome: &SweepOutcome) -> BTreeSet<(usize, String)> {
 
 /// Checkpoint envelope schema version — bump on any layout *or*
 /// search-semantics change so stale checkpoints are rejected instead of
-/// silently resumed into a different trajectory.
-pub const CHECKPOINT_SCHEMA: u32 = 1;
+/// silently resumed into a different trajectory. (v1: no evaluator
+/// fingerprint. v2: `eval_digest` member binds the checkpoint to its
+/// evaluator + base request.)
+pub const CHECKPOINT_SCHEMA: u32 = 2;
 
 /// A serializable snapshot of the search loop at a generation boundary:
 /// everything [`SearchDriver::step`] reads — the evaluated set, candidate
@@ -412,6 +414,15 @@ pub struct SearchCheckpoint {
     /// an error — the per-candidate eval vectors are indexed by scenario
     /// position and their numbers embed the scenario knobs.
     pub grid_digest: Option<String>,
+    /// Content digest of the evaluator + base request the evaluations
+    /// were recorded under (`None` until the first step): the evaluator
+    /// is probed on a small fixed set of space-corner candidates and its
+    /// rows are hashed together with the base request. Two workload
+    /// clusters sharing a coincidentally identical scenario grid digest
+    /// differently here (their profiled rows differ), so resuming a
+    /// checkpoint under the wrong cluster is an error, not a silent
+    /// blend of two problems' numerics.
+    pub eval_digest: Option<String>,
     /// Engine label the evaluations were recorded under (`None` until
     /// the first step). Host and PJRT numerics differ, so resuming on a
     /// different engine is an error, not a silent blend.
@@ -448,7 +459,7 @@ fn bad(field: &str) -> anyhow::Error {
 /// two different clusters) digest differently, which is what lets a
 /// checkpoint refuse to resume under the wrong grid.
 pub fn grid_digest(grid: &ScenarioGrid) -> String {
-    let mut h = KeyHasher::new();
+    let mut h = ContentHasher::new();
     for sc in grid.scenarios() {
         h.write_str(&sc.label);
         for v in [sc.ci_use_g_per_j, sc.lifetime_s, sc.qos_scale, sc.beta, sc.p_max_w] {
@@ -461,19 +472,67 @@ pub fn grid_digest(grid: &ScenarioGrid) -> String {
             }
         }
     }
-    h.finish().hex()
+    h.finish_hex()
 }
 
-/// Integrity digest of a rendered checkpoint document (everything but
-/// the `digest` member itself). Because `Json` objects are `BTreeMap`s
-/// with a deterministic writer and `parse(render(x)) == render`-stable,
-/// re-rendering a parsed envelope minus its digest reproduces the bytes
-/// that were hashed at write time — so any post-write edit to the
-/// payload (a flipped bit-hex digit, an altered index) is rejected.
-fn envelope_digest(doc_without_digest: &Json) -> String {
-    let mut h = KeyHasher::new();
-    h.write_str(&doc_without_digest.to_string());
-    h.finish().hex()
+/// The deterministic probe set for the evaluator fingerprint: the
+/// corners of the space (every combination of first/last position per
+/// axis, deduplicated) — at most 16 points, stable across interrupt
+/// timing because it depends on the dims alone.
+fn probe_indices(dims: [usize; 4]) -> Vec<SpaceIndex> {
+    let mut out: BTreeSet<SpaceIndex> = BTreeSet::new();
+    for mask in 0..16u32 {
+        let mut idx = [0usize; 4];
+        for (ax, slot) in idx.iter_mut().enumerate() {
+            *slot = if mask & (1 << ax) != 0 { dims[ax] - 1 } else { 0 };
+        }
+        out.insert(idx);
+    }
+    out.into_iter().collect()
+}
+
+/// Content digest of the evaluator + base request: the §3.3 rows the
+/// evaluator produces for the probe set (names, clocks, per-kernel
+/// delays/energies, leakage, embodied components — all as raw bits)
+/// plus everything of the base request the recorded evaluations embed
+/// (task matrix, online mask, QoS bounds, scenario defaults). Checked
+/// once per driver lifetime on the first [`SearchDriver::step`] — a
+/// resumed checkpoint recorded under a different workload cluster or
+/// base request fails here even when the scenario grid digests match.
+pub fn evaluator_digest(
+    space: &SearchSpace,
+    evaluator: &dyn SpaceEvaluator,
+    base: &EvalRequest,
+) -> String {
+    let points: Vec<DesignPoint> =
+        probe_indices(space.dims()).into_iter().map(|i| space.point(i)).collect();
+    let rows = evaluator.rows(&points);
+    let mut h = ContentHasher::new();
+    h.write(b"xrcarbon-evaluator");
+    h.write_u64(base.tasks.tasks.len() as u64);
+    for t in &base.tasks.tasks {
+        h.write_str(t);
+    }
+    h.write_u64(base.tasks.kernels.len() as u64);
+    for k in &base.tasks.kernels {
+        h.write_str(k);
+    }
+    h.write_f64s(&base.tasks.n);
+    h.write_f64s(&base.online);
+    h.write_f64s(&base.qos);
+    for v in [base.ci_use_g_per_j, base.lifetime_s, base.beta, base.p_max_w] {
+        h.write_u64(v.to_bits());
+    }
+    h.write_u64(rows.len() as u64);
+    for r in &rows {
+        h.write_str(&r.name);
+        h.write_u64(r.f_clk.to_bits());
+        h.write_f64s(&r.d_k);
+        h.write_f64s(&r.e_dyn);
+        h.write_u64(r.leak_w.to_bits());
+        h.write_f64s(&r.c_comp);
+    }
+    h.finish_hex()
 }
 
 fn take_u64(v: Option<&Json>, field: &str) -> crate::Result<u64> {
@@ -500,79 +559,108 @@ fn take_idx(v: &Json, field: &str) -> crate::Result<SpaceIndex> {
     Ok(idx)
 }
 
+/// Borrowed view of everything a checkpoint envelope renders — the
+/// shared body builder behind [`SearchCheckpoint::to_json_string`] and
+/// [`SearchDriver::checkpoint_string`], so the driver can serialize
+/// **without cloning the evaluated map** (the old per-generation path
+/// cloned every eval vector just to render and drop them).
+struct CheckpointView<'a> {
+    schema: u32,
+    seed: u64,
+    max_evals: usize,
+    dims: [usize; 4],
+    stride: usize,
+    generations: usize,
+    converged: bool,
+    done: bool,
+    grid_digest: Option<&'a str>,
+    eval_digest: Option<&'a str>,
+    engine: Option<&'a str>,
+    rng: RngState,
+    pending: &'a [SpaceIndex],
+    evaluated: &'a BTreeMap<SpaceIndex, Vec<PointEval>>,
+    names: &'a BTreeMap<SpaceIndex, String>,
+}
+
+/// Render a checkpoint body (no digest member). The integrity digest is
+/// spliced into the rendered string afterwards — one render total, not
+/// the render-for-digest + render-for-file double the old path paid.
+fn checkpoint_body(v: &CheckpointView) -> Json {
+    let evaluated = Json::Arr(
+        v.evaluated
+            .iter()
+            .map(|(idx, evs)| {
+                Json::obj(vec![
+                    ("idx", idx_json(idx)),
+                    ("name", Json::Str(v.names.get(idx).cloned().unwrap_or_default())),
+                    (
+                        "evals",
+                        Json::Arr(
+                            evs.iter()
+                                .map(|ev| {
+                                    Json::obj(vec![
+                                        ("f1", hex_f64(ev.f1)),
+                                        ("f2", hex_f64(ev.f2)),
+                                        ("tcdp", hex_f64(ev.tcdp)),
+                                        ("feasible", Json::Bool(ev.feasible)),
+                                    ])
+                                })
+                                .collect(),
+                        ),
+                    ),
+                ])
+            })
+            .collect(),
+    );
+    let rng_s = Json::Arr(v.rng.s.iter().map(|&w| hex_u64(w)).collect());
+    let rng = Json::obj(vec![
+        ("s", rng_s),
+        ("gauss_spare", v.rng.gauss_spare_bits.map(hex_u64).unwrap_or(Json::Null)),
+    ]);
+    let opt_str = |s: Option<&str>| s.map(|x| Json::Str(x.to_string())).unwrap_or(Json::Null);
+    Json::obj(vec![
+        ("schema", Json::Num(v.schema as f64)),
+        ("seed", hex_u64(v.seed)),
+        ("max_evals", Json::Num(v.max_evals as f64)),
+        ("dims", Json::Arr(v.dims.iter().map(|&d| Json::Num(d as f64)).collect())),
+        ("stride", Json::Num(v.stride as f64)),
+        ("generations", Json::Num(v.generations as f64)),
+        ("converged", Json::Bool(v.converged)),
+        ("done", Json::Bool(v.done)),
+        ("grid_digest", opt_str(v.grid_digest)),
+        ("eval_digest", opt_str(v.eval_digest)),
+        ("engine", opt_str(v.engine)),
+        ("rng", rng),
+        ("pending", Json::Arr(v.pending.iter().map(idx_json).collect())),
+        ("evaluated", evaluated),
+    ])
+}
+
 impl SearchCheckpoint {
-    /// Serialize into the versioned JSON envelope.
-    pub fn to_json(&self) -> Json {
-        let evaluated = Json::Arr(
-            self.evaluated
-                .iter()
-                .map(|(idx, evs)| {
-                    Json::obj(vec![
-                        ("idx", idx_json(idx)),
-                        (
-                            "name",
-                            Json::Str(self.names.get(idx).cloned().unwrap_or_default()),
-                        ),
-                        (
-                            "evals",
-                            Json::Arr(
-                                evs.iter()
-                                    .map(|ev| {
-                                        Json::obj(vec![
-                                            ("f1", hex_f64(ev.f1)),
-                                            ("f2", hex_f64(ev.f2)),
-                                            ("tcdp", hex_f64(ev.tcdp)),
-                                            ("feasible", Json::Bool(ev.feasible)),
-                                        ])
-                                    })
-                                    .collect(),
-                            ),
-                        ),
-                    ])
-                })
-                .collect(),
-        );
-        let rng_s = Json::Arr(self.rng.s.iter().map(|&w| hex_u64(w)).collect());
-        let rng = Json::obj(vec![
-            ("s", rng_s),
-            (
-                "gauss_spare",
-                self.rng.gauss_spare_bits.map(hex_u64).unwrap_or(Json::Null),
-            ),
-        ]);
-        let mut doc = Json::obj(vec![
-            ("schema", Json::Num(self.schema as f64)),
-            ("seed", hex_u64(self.seed)),
-            ("max_evals", Json::Num(self.max_evals as f64)),
-            ("dims", Json::Arr(self.dims.iter().map(|&d| Json::Num(d as f64)).collect())),
-            ("stride", Json::Num(self.stride as f64)),
-            ("generations", Json::Num(self.generations as f64)),
-            ("converged", Json::Bool(self.converged)),
-            ("done", Json::Bool(self.done)),
-            (
-                "grid_digest",
-                self.grid_digest.as_ref().map(|d| Json::Str(d.clone())).unwrap_or(Json::Null),
-            ),
-            (
-                "engine",
-                self.engine.as_ref().map(|e| Json::Str(e.clone())).unwrap_or(Json::Null),
-            ),
-            ("rng", rng),
-            ("pending", Json::Arr(self.pending.iter().map(idx_json).collect())),
-            ("evaluated", evaluated),
-        ]);
-        // Integrity member last: digest of everything above, so any
-        // post-write edit to the payload is detectable on read.
-        let digest = envelope_digest(&doc);
-        if let Json::Obj(o) = &mut doc {
-            o.insert("digest".to_string(), Json::Str(digest));
+    fn view(&self) -> CheckpointView<'_> {
+        CheckpointView {
+            schema: self.schema,
+            seed: self.seed,
+            max_evals: self.max_evals,
+            dims: self.dims,
+            stride: self.stride,
+            generations: self.generations,
+            converged: self.converged,
+            done: self.done,
+            grid_digest: self.grid_digest.as_deref(),
+            eval_digest: self.eval_digest.as_deref(),
+            engine: self.engine.as_deref(),
+            rng: self.rng,
+            pending: &self.pending,
+            evaluated: &self.evaluated,
+            names: &self.names,
         }
-        doc
     }
 
-    /// Render the envelope as a JSON document string.
+    /// Render the envelope as a JSON document string (body rendered
+    /// once, integrity digest spliced in).
     pub fn to_json_string(&self) -> String {
-        self.to_json().to_string()
+        splice_digest(&checkpoint_body(&self.view()).to_string())
     }
 
     /// Parse and validate an envelope. Any structural defect — stale
@@ -584,18 +672,7 @@ impl SearchCheckpoint {
         // over the re-rendered remainder of the document (deterministic
         // writer + sorted keys make the round-trip byte-stable), so a
         // structurally-valid edit anywhere in the payload is rejected.
-        let stored_digest = match &mut doc {
-            Json::Obj(o) => o.remove("digest"),
-            _ => None,
-        }
-        .and_then(|d| d.as_str().map(str::to_string))
-        .ok_or_else(|| bad("digest"))?;
-        if stored_digest != envelope_digest(&doc) {
-            anyhow::bail!(
-                "checkpoint: integrity digest mismatch — the file was edited or corrupted; \
-                 re-run the search from scratch"
-            );
-        }
+        strip_and_verify_digest(&mut doc, "checkpoint")?;
         // Full-range check before narrowing: 2^32 + 1 must not alias 1.
         let schema = u32::try_from(take_usize(doc.get("schema"), "schema")?)
             .map_err(|_| bad("schema"))?;
@@ -621,6 +698,12 @@ impl SearchCheckpoint {
             None | Some(Json::Null) => None,
             some => Some(
                 some.and_then(Json::as_str).ok_or_else(|| bad("grid_digest"))?.to_string(),
+            ),
+        };
+        let eval_digest = match doc.get("eval_digest") {
+            None | Some(Json::Null) => None,
+            some => Some(
+                some.and_then(Json::as_str).ok_or_else(|| bad("eval_digest"))?.to_string(),
             ),
         };
         let engine = match doc.get("engine") {
@@ -695,6 +778,7 @@ impl SearchCheckpoint {
             converged,
             done,
             grid_digest,
+            eval_digest,
             engine,
             rng: RngState { s, gauss_spare_bits },
             pending,
@@ -735,6 +819,10 @@ pub struct SearchDriver {
     converged: bool,
     done: bool,
     grid_digest: Option<String>,
+    eval_digest: Option<String>,
+    /// Whether this driver instance already probed the evaluator —
+    /// the probe runs once per process, on the first step.
+    eval_checked: bool,
     bound_engine: Option<String>,
     engine: &'static str,
     threads_used: usize,
@@ -764,6 +852,8 @@ impl SearchDriver {
             converged: false,
             done: false,
             grid_digest: None,
+            eval_digest: None,
+            eval_checked: false,
             bound_engine: None,
             engine: "unknown",
             threads_used: 1,
@@ -827,6 +917,8 @@ impl SearchDriver {
             converged: ck.converged,
             done,
             grid_digest: ck.grid_digest.clone(),
+            eval_digest: ck.eval_digest.clone(),
+            eval_checked: false,
             bound_engine: ck.engine.clone(),
             engine: "unknown",
             threads_used: 1,
@@ -834,7 +926,9 @@ impl SearchDriver {
     }
 
     /// Snapshot the loop state (valid between any two [`Self::step`]
-    /// calls, including after termination).
+    /// calls, including after termination). Clones the evaluated map —
+    /// use [`Self::checkpoint_string`] when the snapshot is only being
+    /// persisted.
     pub fn checkpoint(&self) -> SearchCheckpoint {
         SearchCheckpoint {
             schema: CHECKPOINT_SCHEMA,
@@ -846,12 +940,40 @@ impl SearchDriver {
             converged: self.converged,
             done: self.done,
             grid_digest: self.grid_digest.clone(),
+            eval_digest: self.eval_digest.clone(),
             engine: self.bound_engine.clone(),
             rng: self.rng.state(),
             pending: self.pending.clone(),
             evaluated: self.evaluated.clone(),
             names: self.names.clone(),
         }
+    }
+
+    /// Render the checkpoint envelope straight from borrowed driver
+    /// state — no clone of the evaluated map, body rendered once with
+    /// the integrity digest spliced in. Byte-identical to
+    /// `self.checkpoint().to_json_string()` (locked by a unit test).
+    pub fn checkpoint_string(&self) -> String {
+        splice_digest(
+            &checkpoint_body(&CheckpointView {
+                schema: CHECKPOINT_SCHEMA,
+                seed: self.cfg.seed,
+                max_evals: self.cfg.max_evals,
+                dims: self.dims,
+                stride: self.stride,
+                generations: self.generations,
+                converged: self.converged,
+                done: self.done,
+                grid_digest: self.grid_digest.as_deref(),
+                eval_digest: self.eval_digest.as_deref(),
+                engine: self.bound_engine.as_deref(),
+                rng: self.rng.state(),
+                pending: &self.pending,
+                evaluated: &self.evaluated,
+                names: &self.names,
+            })
+            .to_string(),
+        )
     }
 
     /// True once the search terminated (converged or budget-stopped).
@@ -911,6 +1033,27 @@ impl SearchDriver {
             return Ok(true);
         }
         assert_eq!(space.dims(), self.dims, "space changed under the driver");
+        // Evaluator + base-request fingerprint, once per driver
+        // lifetime: the recorded evaluations embed the evaluator's rows
+        // (e.g. which workload cluster they were profiled on), so a
+        // resumed checkpoint must refuse an evaluator whose probe rows
+        // differ — two clusters sharing an identical scenario grid are
+        // otherwise indistinguishable.
+        if !self.eval_checked {
+            let digest = evaluator_digest(space, evaluator, base);
+            if let Some(expect) = &self.eval_digest {
+                if *expect != digest {
+                    anyhow::bail!(
+                        "evaluator/base request does not match the one this search's \
+                         evaluations were recorded under (different workload cluster, \
+                         profiling, or base request?)"
+                    );
+                }
+            } else {
+                self.eval_digest = Some(digest);
+            }
+            self.eval_checked = true;
+        }
         let n_scenarios = grid.cardinality();
 
         // Fresh candidates in first-seen order.
@@ -1135,7 +1278,9 @@ pub fn search_resumable(
         // the cache layer's degrade-on-write-failure policy.
         if let Some(path) = sink {
             if done || driver.evaluations() > evals_before {
-                if let Err(e) = write_checkpoint(path, &driver.checkpoint()) {
+                if let Err(e) =
+                    super::cache::atomic_write(path, &driver.checkpoint_string())
+                {
                     eprintln!(
                         "[checkpoint] write to {} failed ({e}); continuing without checkpoints",
                         path.display()
@@ -1590,6 +1735,87 @@ mod tests {
         .unwrap();
         outcomes_identical(&direct, &resumed);
         std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn resume_rejects_a_different_cluster_sharing_the_grid() {
+        // The checkpoint-fingerprint regression: two workload clusters
+        // produce different profiled rows but can share a bit-identical
+        // scenario grid — the grid digest alone cannot tell them apart.
+        let space = synth_space();
+        let cfg = synth_cfg();
+        let (base, grid) = (synth_base(), synth_grid());
+
+        // "Cluster B": same labels, same grid, different delays.
+        let other_cluster = |p: &DesignPoint| {
+            let mut row = synth_row(p);
+            for d in &mut row.d_k {
+                *d *= 1.25;
+            }
+            row
+        };
+
+        let mut d = SearchDriver::new(&space, &cfg);
+        d.step(&HostEngineFactory, &space, &synth_row, &base, &grid, None).unwrap();
+        let ck = d.checkpoint();
+        assert!(ck.eval_digest.is_some());
+        assert_eq!(ck.grid_digest.as_deref(), Some(grid_digest(&grid)).as_deref());
+
+        // Resuming under cluster B constructs fine (dims/seed match)…
+        let mut resumed = SearchDriver::resume(&space, &cfg, &ck).unwrap();
+        // …but the first step refuses to blend the two problems.
+        let err = resumed
+            .step(&HostEngineFactory, &space, &other_cluster, &base, &grid, None)
+            .unwrap_err();
+        assert!(err.to_string().contains("evaluator"), "{err}");
+
+        // A changed base request (same evaluator) is refused too.
+        let mut rescoped = synth_base();
+        rescoped.qos = vec![5.0];
+        let mut resumed = SearchDriver::resume(&space, &cfg, &ck).unwrap();
+        assert!(resumed
+            .step(&HostEngineFactory, &space, &synth_row, &rescoped, &grid, None)
+            .is_err());
+
+        // The original evaluator + base still steps fine and finishes
+        // identically to an uninterrupted run.
+        let full = search(&HostEngineFactory, &space, &synth_row, &base, &grid, &cfg).unwrap();
+        let resumed_out = SearchDriver::resume(&space, &cfg, &ck)
+            .unwrap()
+            .run(&HostEngineFactory, &space, &synth_row, &base, &grid)
+            .unwrap();
+        outcomes_identical(&full, &resumed_out);
+    }
+
+    #[test]
+    fn checkpoint_string_matches_cloned_render_byte_for_byte() {
+        let space = synth_space();
+        let cfg = synth_cfg();
+        let (base, grid) = (synth_base(), synth_grid());
+        let mut d = SearchDriver::new(&space, &cfg);
+        // Before any step, after one step, and at termination.
+        loop {
+            assert_eq!(d.checkpoint_string(), d.checkpoint().to_json_string());
+            let ck = SearchCheckpoint::from_json_str(&d.checkpoint_string()).unwrap();
+            assert_eq!(ck, d.checkpoint());
+            if d.step(&HostEngineFactory, &space, &synth_row, &base, &grid, None).unwrap() {
+                break;
+            }
+        }
+        assert_eq!(d.checkpoint_string(), d.checkpoint().to_json_string());
+    }
+
+    #[test]
+    fn probe_indices_are_the_space_corners() {
+        let p = probe_indices([11, 21, 2, 6]);
+        assert_eq!(p.len(), 16);
+        assert!(p.contains(&[0, 0, 0, 0]));
+        assert!(p.contains(&[10, 20, 1, 5]));
+        // Degenerate axes deduplicate.
+        let p1 = probe_indices([1, 1, 1, 1]);
+        assert_eq!(p1, vec![[0, 0, 0, 0]]);
+        let p2 = probe_indices([2, 1, 1, 1]);
+        assert_eq!(p2.len(), 2);
     }
 
     #[test]

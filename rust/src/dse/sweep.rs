@@ -1,4 +1,5 @@
-//! Parallel multi-scenario sweep coordinator — two-phase since PR 2.
+//! Parallel multi-scenario sweep coordinator — two-phase since PR 2,
+//! chunk-resumable since PR 5.
 //!
 //! Evaluates one design space under every scenario of a [`ScenarioGrid`].
 //! The scenario axes (`ci_use`, `lifetime`, `β`, `qos`, `p_max`) never
@@ -20,17 +21,35 @@
 //! as [`sweep_fused`] for benchmarking) — locked by
 //! `rust/tests/coordinator_props.rs`. (PJRT composes within the existing
 //! ≤ 1e-5 pjrt-vs-host envelope; see `runtime/pjrt.rs`.)
+//!
+//! Phase A is an explicit state machine ([`SweepDriver`]): chunks are
+//! keyed by their [`ConfigRow`]-level content hash (no packing on the
+//! coordinator — misses pack *inside* the workers), looked up in the
+//! [`ProfileCache`] when one is in play, and processed in batched
+//! [`SweepDriver::step`]s. Between any two steps the driver snapshots
+//! into a [`SweepCheckpoint`] — per-chunk progress plus a fingerprint of
+//! the whole problem (chunk keys, scenario grid, base scenario knobs,
+//! engine) — and [`sweep_resumable`] persists one per step, so a sweep
+//! over a giant space interrupted at any chunk resumes bit-identically:
+//! completed chunks come back from the cache, only the remainder is
+//! contracted, and a checkpoint from a *different* problem (another
+//! cluster, grid or engine) is rejected, never silently blended.
 
+use std::path::Path;
 use std::sync::atomic::{AtomicUsize, Ordering};
 
 use crate::carbon::ScenarioOverlay;
-use crate::matrixform::{DesignProfile, EvalRequest, EvalResult, MetricRow, PackedProblem};
+use crate::configfmt::{parse, ContentHasher, Json};
+use crate::matrixform::{
+    ConfigRow, DesignProfile, EvalRequest, EvalResult, MetricRow, ProfileRequest, TaskMatrix,
+};
 use crate::runtime::{evaluate_fused, profile_request, CacheStats, Engine, EngineFactory};
 
-use super::batching::{chunk_neutral, chunk_size, merge, num_chunks, shallow};
-use super::cache::{CacheKey, ProfileCache};
+use super::batching::{chunk_ranges, chunk_size, merge, num_chunks, shallow};
+use super::cache::{atomic_write, splice_digest, strip_and_verify_digest, CacheKey, ProfileCache};
 use super::explore::{explore, summarize, ExploreOutcome};
 use super::grid::ScenarioGrid;
+use super::search::grid_digest;
 
 /// Sweep execution knobs.
 #[derive(Debug, Clone, Copy, Default)]
@@ -104,8 +123,7 @@ where
     F: Fn(&mut dyn Engine, &T) -> crate::Result<R> + Sync,
 {
     let n_items = items.len();
-    let hw = std::thread::available_parallelism().map(|n| n.get()).unwrap_or(4);
-    let threads = if threads == 0 { hw } else { threads };
+    let threads = resolve_threads(threads);
     let n_workers = threads.min(n_items).max(1);
 
     if n_workers == 1 {
@@ -149,6 +167,16 @@ where
     Ok((out, n_workers))
 }
 
+/// `0 = auto` thread resolution shared by the fan-out and the driver's
+/// step batching.
+fn resolve_threads(threads: usize) -> usize {
+    if threads == 0 {
+        std::thread::available_parallelism().map(|n| n.get()).unwrap_or(4)
+    } else {
+        threads
+    }
+}
+
 /// Run the two-phase sweep: profile config chunks once in parallel
 /// (phase A), then fold a cheap scenario overlay over the cached profiles
 /// for every grid scenario (phase B), merging deterministically.
@@ -161,22 +189,15 @@ pub fn sweep(
     sweep_with_cache(factory, base, grid, cfg, None)
 }
 
-/// One phase-A work unit that missed the cache: the chunk's slot in the
-/// profile list, its packed batch and its content key.
-struct MissItem {
-    slot: usize,
-    packed: PackedProblem,
-    key: CacheKey,
-}
-
 /// [`sweep`] with an optional persistent [`ProfileCache`] in front of
 /// phase A: each chunk is looked up by content key first; only misses
 /// reach the engine (fanned across workers exactly like the uncached
-/// path) and are written back. Cached profiles are bit-exact copies of
-/// what the engine would produce, so with or without the cache — and
-/// cold or warm — the outcome is bit-identical on the host engine
-/// (locked by `rust/tests/cache_props.rs`). The outcome's `cache` field
-/// carries this run's hit/miss delta.
+/// path, which is also where they are packed and written back). Cached
+/// profiles are bit-exact copies of what the engine would produce, so
+/// with or without the cache — and cold or warm — the outcome is
+/// bit-identical on the host engine (locked by
+/// `rust/tests/cache_props.rs`). The outcome's `cache` field carries
+/// this run's hit/miss delta.
 pub fn sweep_with_cache(
     factory: &dyn EngineFactory,
     base: &EvalRequest,
@@ -184,97 +205,453 @@ pub fn sweep_with_cache(
     cfg: &SweepConfig,
     cache: Option<&ProfileCache>,
 ) -> crate::Result<SweepOutcome> {
-    let scenarios = grid.scenarios();
-    let n_scenarios = scenarios.len();
+    SweepDriver::new(factory, base, grid, cfg).run(factory, cache, None)
+}
 
-    // Phase A — the only part that touches the engine hot loop (one
-    // config clone per chunk, same as the fused item builder).
-    let chunk_reqs = chunk_neutral(&base.tasks, &base.configs);
-    let (profiles, threads_used, cache_delta): (Vec<DesignProfile>, usize, Option<CacheStats>) =
+/// [`sweep_with_cache`] with checkpoint/resume plumbing for the *sweep
+/// phase itself* (the search loop has its own checkpoints): start from
+/// `resume_from` when given (validated against this problem's
+/// fingerprint), and persist a [`SweepCheckpoint`] to `save_to` after
+/// every step. Per-chunk profile payloads persist in `cache` (which is
+/// why a cache is mandatory here), so an interrupted run resumes by
+/// re-reading completed chunks from disk and contracting only the rest —
+/// bit-identical to an uninterrupted run.
+pub fn sweep_resumable(
+    factory: &dyn EngineFactory,
+    base: &EvalRequest,
+    grid: &ScenarioGrid,
+    cfg: &SweepConfig,
+    cache: &ProfileCache,
+    resume_from: Option<&SweepCheckpoint>,
+    save_to: Option<&Path>,
+) -> crate::Result<SweepOutcome> {
+    let driver = match resume_from {
+        Some(ck) => SweepDriver::resume(factory, base, grid, cfg, ck)?,
+        None => SweepDriver::new(factory, base, grid, cfg),
+    };
+    driver.run(factory, Some(cache), save_to)
+}
+
+/// Checkpoint envelope schema version — bump on any layout *or*
+/// fingerprint-semantics change so stale checkpoints are rejected
+/// instead of silently resumed into a different problem.
+pub const SWEEP_CHECKPOINT_SCHEMA: u32 = 1;
+
+/// A snapshot of phase-A progress inside one sweep: how many chunks are
+/// done plus a fingerprint binding the checkpoint to its exact problem —
+/// the per-chunk content keys (design space at `ConfigRow` resolution),
+/// the scenario grid digest, the base request's scenario knobs and the
+/// engine label. Profile *payloads* are not in the envelope; they live
+/// in the [`ProfileCache`], which is what makes the checkpoint O(1) in
+/// space size. A resumed sweep whose cache lost entries (eviction)
+/// recomputes them — still bit-identical, just slower.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct SweepCheckpoint {
+    /// Envelope schema ([`SWEEP_CHECKPOINT_SCHEMA`]).
+    pub schema: u32,
+    /// Content fingerprint of the whole problem (see
+    /// [`sweep_fingerprint`]). Resuming under any other problem —
+    /// another workload cluster with a coincidentally identical grid,
+    /// another grid, another engine — is an error.
+    pub fingerprint: String,
+    /// Engine label echo (already inside the fingerprint; kept readable
+    /// for humans and error messages).
+    pub engine: String,
+    /// Chunks completed (prefix of the chunk order).
+    pub chunks_done: usize,
+    /// Total chunks of the space.
+    pub total_chunks: usize,
+}
+
+impl SweepCheckpoint {
+    /// Render the versioned envelope (digest spliced in, rendered once).
+    pub fn to_json_string(&self) -> String {
+        let body = Json::obj(vec![
+            ("schema", Json::Num(self.schema as f64)),
+            ("fingerprint", Json::Str(self.fingerprint.clone())),
+            ("engine", Json::Str(self.engine.clone())),
+            ("chunks_done", Json::Num(self.chunks_done as f64)),
+            ("total_chunks", Json::Num(self.total_chunks as f64)),
+        ])
+        .to_string();
+        splice_digest(&body)
+    }
+
+    /// Parse and validate an envelope (integrity digest first, then
+    /// schema and fields). Any defect is a typed error, never a partial
+    /// checkpoint.
+    pub fn from_json_str(text: &str) -> crate::Result<SweepCheckpoint> {
+        let mut doc = parse(text).map_err(|e| anyhow::anyhow!("sweep checkpoint: {e}"))?;
+        strip_and_verify_digest(&mut doc, "sweep checkpoint")?;
+        let bad = |f: &str| anyhow::anyhow!("sweep checkpoint: missing or invalid field `{f}`");
+        let schema = doc
+            .get("schema")
+            .and_then(Json::as_usize)
+            .and_then(|s| u32::try_from(s).ok())
+            .ok_or_else(|| bad("schema"))?;
+        if schema != SWEEP_CHECKPOINT_SCHEMA {
+            anyhow::bail!(
+                "sweep checkpoint: schema {schema} != supported {SWEEP_CHECKPOINT_SCHEMA} — \
+                 re-run the sweep from scratch"
+            );
+        }
+        let fingerprint =
+            doc.get("fingerprint").and_then(Json::as_str).ok_or_else(|| bad("fingerprint"))?;
+        let engine = doc.get("engine").and_then(Json::as_str).ok_or_else(|| bad("engine"))?;
+        let chunks_done =
+            doc.get("chunks_done").and_then(Json::as_usize).ok_or_else(|| bad("chunks_done"))?;
+        let total_chunks =
+            doc.get("total_chunks").and_then(Json::as_usize).ok_or_else(|| bad("total_chunks"))?;
+        if chunks_done > total_chunks {
+            return Err(bad("chunks_done"));
+        }
+        Ok(SweepCheckpoint {
+            schema,
+            fingerprint: fingerprint.to_string(),
+            engine: engine.to_string(),
+            chunks_done,
+            total_chunks,
+        })
+    }
+}
+
+/// Write a sweep checkpoint (temp file + rename).
+pub fn write_sweep_checkpoint(path: impl AsRef<Path>, ck: &SweepCheckpoint) -> crate::Result<()> {
+    atomic_write(path.as_ref(), &ck.to_json_string())
+}
+
+/// Read a sweep checkpoint back from disk.
+pub fn read_sweep_checkpoint(path: impl AsRef<Path>) -> crate::Result<SweepCheckpoint> {
+    let text = std::fs::read_to_string(path.as_ref())?;
+    SweepCheckpoint::from_json_str(&text)
+}
+
+/// Content fingerprint of one sweep problem: chunk content keys (tasks +
+/// configs + engine + schema, via [`ProfileCache::key_for_chunk`]), the
+/// scenario-grid digest, and the base request's scenario knobs (which
+/// phase B folds in but the chunk keys deliberately exclude). Two
+/// workload clusters sharing a scenario grid fingerprint differently
+/// because their profiled rows differ — the checkpoint-fingerprint gap
+/// the search loop closes with its evaluator probe is closed here by
+/// construction.
+pub fn sweep_fingerprint(
+    base: &EvalRequest,
+    grid: &ScenarioGrid,
+    engine: &str,
+    keys: &[CacheKey],
+) -> String {
+    let mut h = ContentHasher::new();
+    h.write(b"xrcarbon-sweep");
+    h.write_u64(SWEEP_CHECKPOINT_SCHEMA as u64);
+    h.write_str(engine);
+    h.write_str(&grid_digest(grid));
+    for v in [base.ci_use_g_per_j, base.lifetime_s, base.beta, base.p_max_w] {
+        h.write_u64(v.to_bits());
+    }
+    h.write_f64s(&base.online);
+    h.write_f64s(&base.qos);
+    h.write_u64(keys.len() as u64);
+    for k in keys {
+        h.write_str(&k.hex());
+    }
+    h.finish_hex()
+}
+
+/// Neutral chunk request over a borrowed slice of the space (the same
+/// shape [`chunk_neutral`] builds, one chunk at a time — miss workers
+/// build theirs on demand instead of the coordinator cloning the whole
+/// space up front).
+fn neutral_chunk(tasks: &TaskMatrix, configs: &[ConfigRow]) -> EvalRequest {
+    ProfileRequest { tasks: tasks.clone(), configs: Vec::new() }.chunk_eval(configs.to_vec())
+}
+
+/// Phase A of one sweep as an explicit state machine: construct with
+/// [`SweepDriver::new`] (or [`SweepDriver::resume`]), advance one
+/// batched step at a time with [`SweepDriver::step`], snapshot between
+/// steps with [`SweepDriver::checkpoint`], and build the
+/// [`SweepOutcome`] (phase B overlays) with [`SweepDriver::outcome`]
+/// once done. The one-shot entry points ([`sweep`], [`sweep_with_cache`],
+/// [`sweep_resumable`]) drive it to completion.
+pub struct SweepDriver<'a> {
+    base: &'a EvalRequest,
+    grid: &'a ScenarioGrid,
+    cfg: SweepConfig,
+    engine: &'static str,
+    /// Chunk boundaries (index ranges into `base.configs`).
+    ranges: Vec<std::ops::Range<usize>>,
+    /// Per-chunk content keys — computed lazily (only cache lookups and
+    /// checkpoints need them; a plain uncached sweep never hashes the
+    /// design space at all). No packing either way.
+    keys: std::cell::OnceCell<Vec<CacheKey>>,
+    /// Problem fingerprint — lazy for the same reason (checkpoint /
+    /// resume only).
+    fingerprint: std::cell::OnceCell<String>,
+    profiles: Vec<Option<DesignProfile>>,
+    cursor: usize,
+    threads_used: usize,
+}
+
+impl<'a> SweepDriver<'a> {
+    /// Fresh driver over one problem. Chunk boundaries are computed
+    /// here; content keys and the fingerprint are derived on first use.
+    pub fn new(
+        factory: &dyn EngineFactory,
+        base: &'a EvalRequest,
+        grid: &'a ScenarioGrid,
+        cfg: &SweepConfig,
+    ) -> Self {
+        let ranges = chunk_ranges(base.configs.len());
+        let n = ranges.len();
+        SweepDriver {
+            base,
+            grid,
+            cfg: *cfg,
+            engine: factory.label(),
+            ranges,
+            keys: std::cell::OnceCell::new(),
+            fingerprint: std::cell::OnceCell::new(),
+            profiles: (0..n).map(|_| None).collect(),
+            cursor: 0,
+            threads_used: 1,
+        }
+    }
+
+    /// The per-chunk content keys (computed once, on first use).
+    fn chunk_keys(&self) -> &[CacheKey] {
+        self.keys.get_or_init(|| {
+            self.ranges
+                .iter()
+                .map(|r| {
+                    ProfileCache::key_for_chunk(
+                        &self.base.tasks,
+                        &self.base.configs[r.clone()],
+                        self.engine,
+                    )
+                })
+                .collect()
+        })
+    }
+
+    /// This problem's content fingerprint (computed once, on first use).
+    fn problem_fingerprint(&self) -> &str {
+        self.fingerprint
+            .get_or_init(|| sweep_fingerprint(self.base, self.grid, self.engine, self.chunk_keys()))
+    }
+
+    /// Rebuild a driver from a checkpoint. The checkpoint must carry
+    /// this exact problem's fingerprint — resuming a sweep recorded
+    /// under a different design space, scenario grid, base request or
+    /// engine is an error, not a silent blend. Progress itself comes
+    /// back from the profile cache (completed chunks are warm hits), so
+    /// the counter in the envelope is a validated expectation, not
+    /// trusted state.
+    pub fn resume(
+        factory: &dyn EngineFactory,
+        base: &'a EvalRequest,
+        grid: &'a ScenarioGrid,
+        cfg: &SweepConfig,
+        ck: &SweepCheckpoint,
+    ) -> crate::Result<Self> {
+        let driver = Self::new(factory, base, grid, cfg);
+        if ck.schema != SWEEP_CHECKPOINT_SCHEMA {
+            anyhow::bail!(
+                "sweep checkpoint schema {} != supported {}",
+                ck.schema,
+                SWEEP_CHECKPOINT_SCHEMA
+            );
+        }
+        if ck.fingerprint != driver.problem_fingerprint() {
+            anyhow::bail!(
+                "sweep checkpoint does not match this problem (engine '{}', {} chunk(s)): it \
+                 was recorded under a different design space, scenario grid, base request or \
+                 engine ('{}', {} chunk(s))",
+                driver.engine,
+                driver.total_chunks(),
+                ck.engine,
+                ck.total_chunks
+            );
+        }
+        Ok(driver)
+    }
+
+    /// True once every chunk is profiled.
+    pub fn is_done(&self) -> bool {
+        self.cursor >= self.ranges.len()
+    }
+
+    /// Chunks completed so far.
+    pub fn chunks_done(&self) -> usize {
+        self.cursor
+    }
+
+    /// Total chunks of this problem.
+    pub fn total_chunks(&self) -> usize {
+        self.ranges.len()
+    }
+
+    /// Snapshot phase-A progress (valid between any two steps).
+    pub fn checkpoint(&self) -> SweepCheckpoint {
+        SweepCheckpoint {
+            schema: SWEEP_CHECKPOINT_SCHEMA,
+            fingerprint: self.problem_fingerprint().to_string(),
+            engine: self.engine.to_string(),
+            chunks_done: self.cursor,
+            total_chunks: self.ranges.len(),
+        }
+    }
+
+    /// Profile the next batch of chunks (one per worker thread): cache
+    /// lookups first, then one fan-out over the misses — which pack,
+    /// contract and write back *inside the workers*, keeping the
+    /// coordinator thread off the miss path entirely. Returns `true`
+    /// when phase A is complete.
+    pub fn step(
+        &mut self,
+        factory: &dyn EngineFactory,
+        cache: Option<&ProfileCache>,
+    ) -> crate::Result<bool> {
+        if factory.label() != self.engine {
+            anyhow::bail!(
+                "engine '{}' does not match the '{}' this sweep was keyed under",
+                factory.label(),
+                self.engine
+            );
+        }
+        if self.is_done() {
+            return Ok(true);
+        }
+        // Materialize keys only when a cache is in play — the uncached
+        // path never hashes the design space.
+        if cache.is_some() {
+            self.chunk_keys();
+        }
+        let batch = resolve_threads(self.cfg.threads).max(1);
+        let end = (self.cursor + batch).min(self.ranges.len());
+        let mut hits: Vec<(usize, DesignProfile)> = Vec::new();
+        let mut misses: Vec<usize> = Vec::new();
         match cache {
-            None => {
-                let (profiles, threads) =
-                    fan_out(factory, &chunk_reqs, cfg.threads, profile_request)?;
-                (profiles, threads, None)
-            }
-            Some(cache) => {
-                let engine_label = factory.label();
-                let before = cache.stats();
-                let mut slots: Vec<Option<DesignProfile>> =
-                    (0..chunk_reqs.len()).map(|_| None).collect();
-                let mut misses: Vec<MissItem> = Vec::new();
-                for (slot, req) in chunk_reqs.iter().enumerate() {
-                    let packed = PackedProblem::from_request(req);
-                    let key = ProfileCache::key_for_packed(&packed, engine_label);
-                    match cache.load(&key, engine_label) {
-                        Some(profile) => slots[slot] = Some(profile),
-                        None => misses.push(MissItem { slot, packed, key }),
+            Some(c) => {
+                let keys = self.keys.get().expect("keys materialized above");
+                for i in self.cursor..end {
+                    match c.load(&keys[i], self.engine) {
+                        Some(profile) => hits.push((i, profile)),
+                        None => misses.push(i),
                     }
                 }
-                // Only the misses touch the engine; a fully warm cache
-                // performs zero phase-A contractions.
-                let (computed, threads) = if misses.is_empty() {
-                    (Vec::new(), 1)
-                } else {
-                    fan_out(factory, &misses, cfg.threads, |engine, item: &MissItem| {
-                        let raw = engine.profile(&item.packed)?;
-                        Ok(DesignProfile::from_parts(
-                            &item.packed,
-                            raw.energy,
-                            raw.delay,
-                            raw.d_task,
-                        ))
-                    })?
-                };
-                for (item, profile) in misses.iter().zip(computed) {
+            }
+            None => misses.extend(self.cursor..end),
+        }
+        for (i, profile) in hits {
+            self.profiles[i] = Some(profile);
+        }
+        if !misses.is_empty() {
+            let (base, ranges, engine) = (self.base, &self.ranges, self.engine);
+            let keys: Option<&[CacheKey]> = self.keys.get().map(Vec::as_slice);
+            let (computed, threads) =
+                fan_out(factory, &misses, self.cfg.threads, |eng, &i: &usize| {
+                    // Packing happens here, inside the worker — the
+                    // coordinator only hashed `ConfigRow`s for the key.
+                    let req = neutral_chunk(&base.tasks, &base.configs[ranges[i].clone()]);
+                    let profile = profile_request(eng, &req)?;
                     // A failed write-back (disk full, permissions) must
                     // not abort a sweep whose engine work succeeded —
                     // the profile is used anyway and the failure shows
                     // up as `write_errors` on the stats surface.
-                    let _ = cache.store(&item.key, &profile, engine_label);
-                    slots[item.slot] = Some(profile);
+                    if let (Some(c), Some(keys)) = (cache, keys) {
+                        let _ = c.store(&keys[i], &profile, engine);
+                    }
+                    Ok(profile)
+                })?;
+            self.threads_used = self.threads_used.max(threads);
+            for (&i, profile) in misses.iter().zip(computed) {
+                self.profiles[i] = Some(profile);
+            }
+        }
+        self.cursor = end;
+        Ok(self.is_done())
+    }
+
+    /// Phase B: fold the scenario overlays over the completed profiles,
+    /// merging (scenario × chunk) results in the same scenario-major,
+    /// chunk-ascending order the fused paths use — bit-identical to them.
+    /// Panics if phase A is incomplete (drive [`Self::step`] to done
+    /// first); `cache_delta` is attached verbatim as the outcome's
+    /// `cache` field.
+    pub fn outcome(&self, cache_delta: Option<CacheStats>) -> SweepOutcome {
+        assert!(self.is_done(), "sweep phase A incomplete: call step() until done");
+        let profiles: Vec<&DesignProfile> =
+            self.profiles.iter().map(|p| p.as_ref().expect("chunk left unprofiled")).collect();
+        let scenarios = self.grid.scenarios();
+        let n_scenarios = scenarios.len();
+        let shell = shallow(self.base);
+        let results: Vec<ScenarioResult> = scenarios
+            .into_iter()
+            .map(|sc| {
+                let overlay = ScenarioOverlay::from_request(&sc.apply(&shell));
+                let mut merged: Option<EvalResult> = None;
+                for &prof in &profiles {
+                    let res = overlay.apply(prof);
+                    merged = Some(match merged {
+                        None => res,
+                        Some(acc) => merge(acc, res),
+                    });
                 }
-                let profiles =
-                    slots.into_iter().map(|s| s.expect("chunk left unprofiled")).collect();
-                (profiles, threads, Some(cache.stats().since(&before)))
+                ScenarioResult {
+                    label: sc.label,
+                    // An empty design space profiles into zero chunks;
+                    // each scenario then reports the empty outcome.
+                    outcome: summarize(
+                        merged.unwrap_or_else(|| EvalResult::empty(self.base.tasks.num_tasks())),
+                    ),
+                }
+            })
+            .collect();
+        SweepOutcome {
+            scenarios: results,
+            engine: self.engine,
+            threads: self.threads_used,
+            items: profiles.len() * n_scenarios,
+            profile_chunks: profiles.len(),
+            cache: cache_delta,
+        }
+    }
+
+    /// Drive phase A to completion (persisting a checkpoint after every
+    /// step when `save_to` is given) and build the outcome. A failed
+    /// checkpoint write must not discard the in-flight sweep (the engine
+    /// work already happened; completed chunks are in the cache) — warn
+    /// once and keep going uncheckpointed, mirroring the cache layer's
+    /// degrade-on-write-failure policy.
+    pub fn run(
+        mut self,
+        factory: &dyn EngineFactory,
+        cache: Option<&ProfileCache>,
+        save_to: Option<&Path>,
+    ) -> crate::Result<SweepOutcome> {
+        let before = cache.map(|c| c.stats());
+        let mut sink = save_to;
+        loop {
+            let done = self.step(factory, cache)?;
+            if let Some(path) = sink {
+                if let Err(e) = write_sweep_checkpoint(path, &self.checkpoint()) {
+                    eprintln!(
+                        "[sweep checkpoint] write to {} failed ({e}); continuing without \
+                         checkpoints",
+                        path.display()
+                    );
+                    sink = None;
+                }
             }
+            if done {
+                break;
+            }
+        }
+        let delta = match (cache, before) {
+            (Some(c), Some(b)) => Some(c.stats().since(&b)),
+            _ => None,
         };
-
-    // Phase B — (scenario × chunk) overlays in the same scenario-major,
-    // chunk-ascending order the fused paths merge, so results are
-    // bit-identical to them.
-    let shell = shallow(base);
-    let results: Vec<ScenarioResult> = scenarios
-        .into_iter()
-        .map(|sc| {
-            let overlay = ScenarioOverlay::from_request(&sc.apply(&shell));
-            let mut merged: Option<EvalResult> = None;
-            for prof in &profiles {
-                let res = overlay.apply(prof);
-                merged = Some(match merged {
-                    None => res,
-                    Some(acc) => merge(acc, res),
-                });
-            }
-            ScenarioResult {
-                label: sc.label,
-                // An empty design space profiles into zero chunks; each
-                // scenario then reports the empty outcome.
-                outcome: summarize(
-                    merged.unwrap_or_else(|| EvalResult::empty(base.tasks.num_tasks())),
-                ),
-            }
-        })
-        .collect();
-
-    Ok(SweepOutcome {
-        scenarios: results,
-        engine: factory.label(),
-        threads: threads_used,
-        items: profiles.len() * n_scenarios,
-        profile_chunks: profiles.len(),
-        cache: cache_delta,
-    })
+        Ok(self.outcome(delta))
+    }
 }
 
 /// One fanned-out unit of fused work: a config chunk under one scenario.
@@ -502,8 +879,19 @@ mod tests {
         assert_eq!((cs.hits, cs.misses, cs.writes), (0, 3, 3));
         let ws = warm.cache.expect("warm run reports cache stats");
         assert_eq!((ws.hits, ws.misses, ws.writes), (3, 0, 0));
+        // Same-process warm run: the in-memory LRU serves every chunk.
+        assert_eq!(ws.mem_hits, 3);
         assert_eq!(ws.contractions_avoided(), warm.profile_chunks);
         assert!(plain.cache.is_none());
+
+        // A cold-memory process (fresh cache instance) still avoids all
+        // contractions via the binary sidecars.
+        let fresh = crate::dse::cache::ProfileCache::open(&dir).unwrap();
+        let disk_warm =
+            sweep_with_cache(&HostEngineFactory, &req, &grid(), &cfg, Some(&fresh)).unwrap();
+        assert_outcomes_identical(&cold, &disk_warm);
+        let ds = disk_warm.cache.unwrap();
+        assert_eq!((ds.hits, ds.mem_hits, ds.misses), (3, 0, 0));
         std::fs::remove_dir_all(&dir).ok();
     }
 
@@ -569,5 +957,149 @@ mod tests {
         let g = ScenarioGrid::new().with_lifetime("short", 1e5).with_lifetime("long", 1e7);
         let out = sweep(&HostEngineFactory, &req, &g, &SweepConfig::default()).unwrap();
         assert!(out.scenarios[0].outcome.stats.best > out.scenarios[1].outcome.stats.best);
+    }
+
+    #[test]
+    fn sweep_checkpoint_roundtrips_and_rejects_corruption() {
+        let req = request(2500);
+        let g = grid();
+        let d = SweepDriver::new(&HostEngineFactory, &req, &g, &SweepConfig { threads: 1 });
+        let ck = d.checkpoint();
+        assert_eq!(ck.total_chunks, 3);
+        assert_eq!(ck.chunks_done, 0);
+        let text = ck.to_json_string();
+        assert_eq!(SweepCheckpoint::from_json_str(&text).unwrap(), ck);
+        // Corruption: truncation, tampering, missing digest.
+        assert!(SweepCheckpoint::from_json_str(&text[..text.len() / 2]).is_err());
+        let mut doc = parse(&text).unwrap();
+        if let Json::Obj(o) = &mut doc {
+            o.insert("chunks_done".into(), Json::Num(2.0));
+        }
+        assert!(SweepCheckpoint::from_json_str(&doc.to_string()).is_err());
+        let mut doc = parse(&text).unwrap();
+        if let Json::Obj(o) = &mut doc {
+            o.remove("digest");
+        }
+        assert!(SweepCheckpoint::from_json_str(&doc.to_string()).is_err());
+        // Stale schema (re-rendered with a fresh digest so only the
+        // schema check can reject it).
+        let stale = SweepCheckpoint { schema: SWEEP_CHECKPOINT_SCHEMA + 1, ..ck.clone() };
+        assert!(SweepCheckpoint::from_json_str(&stale.to_json_string()).is_err());
+    }
+
+    #[test]
+    fn interrupted_sweep_resumes_bit_identically_from_any_chunk() {
+        let dir = crate::testkit::test_dir("sweep_resume");
+        std::fs::remove_dir_all(&dir).ok();
+        let req = request(2500); // 3 chunks
+        let g = grid();
+        let cfg = SweepConfig { threads: 1 }; // one chunk per step
+        let reference = sweep(&HostEngineFactory, &req, &g, &cfg).unwrap();
+
+        for interrupt_after in 0..=3usize {
+            let cache = crate::dse::cache::ProfileCache::open(&dir).unwrap();
+            // Phase 1: run `interrupt_after` steps, then "crash".
+            let mut d = SweepDriver::new(&HostEngineFactory, &req, &g, &cfg);
+            for _ in 0..interrupt_after {
+                if d.step(&HostEngineFactory, Some(&cache)).unwrap() {
+                    break;
+                }
+            }
+            let ck =
+                SweepCheckpoint::from_json_str(&d.checkpoint().to_json_string()).unwrap();
+            assert_eq!(ck.chunks_done, interrupt_after.min(3));
+
+            // Phase 2: a fresh process (fresh cache instance = cold
+            // memory) resumes and finishes.
+            let cache2 = crate::dse::cache::ProfileCache::open(&dir).unwrap();
+            let resumed = SweepDriver::resume(&HostEngineFactory, &req, &g, &cfg, &ck)
+                .unwrap()
+                .run(&HostEngineFactory, Some(&cache2), None)
+                .unwrap();
+            assert_outcomes_identical(&reference, &resumed);
+            // Completed chunks came back from disk, the rest was paid.
+            let stats = resumed.cache.unwrap();
+            assert_eq!(stats.hits, interrupt_after.min(3), "interrupt={interrupt_after}");
+            assert_eq!(stats.misses, 3 - interrupt_after.min(3));
+            std::fs::remove_dir_all(&dir).ok();
+        }
+    }
+
+    #[test]
+    fn sweep_resume_rejects_a_different_problem_sharing_the_grid() {
+        let req = request(100);
+        let g = grid();
+        let cfg = SweepConfig::default();
+        let d = SweepDriver::new(&HostEngineFactory, &req, &g, &cfg);
+        let ck = d.checkpoint();
+
+        // Same grid, different design space ("another workload cluster"):
+        // rejected by the fingerprint.
+        let mut other = request(100);
+        other.configs[17].d_k[0] *= 1.5;
+        assert!(SweepDriver::resume(&HostEngineFactory, &other, &g, &cfg, &ck).is_err());
+        // Same space, different base scenario knobs: rejected.
+        let mut rescoped = request(100);
+        rescoped.qos = vec![0.5];
+        assert!(SweepDriver::resume(&HostEngineFactory, &rescoped, &g, &cfg, &ck).is_err());
+        // Different grid: rejected.
+        let other_grid = ScenarioGrid::new().with_lifetime("short", 2e5);
+        assert!(SweepDriver::resume(&HostEngineFactory, &req, &other_grid, &cfg, &ck).is_err());
+        // Different engine label: rejected.
+        struct RelabeledHost;
+        impl crate::runtime::EngineFactory for RelabeledHost {
+            fn build(&self) -> crate::Result<Box<dyn crate::runtime::Engine>> {
+                Ok(Box::new(crate::runtime::HostEngine::new()))
+            }
+            fn label(&self) -> &'static str {
+                "host-v2"
+            }
+        }
+        assert!(SweepDriver::resume(&RelabeledHost, &req, &g, &cfg, &ck).is_err());
+        // The matching problem still resumes.
+        assert!(SweepDriver::resume(&HostEngineFactory, &req, &g, &cfg, &ck).is_ok());
+    }
+
+    #[test]
+    fn sweep_resumable_writes_and_honors_checkpoints() {
+        let dir = crate::testkit::test_dir("sweep_resumable");
+        std::fs::remove_dir_all(&dir).ok();
+        let cache = crate::dse::cache::ProfileCache::open(&dir).unwrap();
+        let ckpt = dir.join("sweep.ckpt.json");
+        let req = request(2500);
+        let g = grid();
+        let cfg = SweepConfig { threads: 2 };
+
+        let plain = sweep(&HostEngineFactory, &req, &g, &cfg).unwrap();
+        let saved = sweep_resumable(
+            &HostEngineFactory,
+            &req,
+            &g,
+            &cfg,
+            &cache,
+            None,
+            Some(ckpt.as_path()),
+        )
+        .unwrap();
+        assert_outcomes_identical(&plain, &saved);
+        let ck = read_sweep_checkpoint(&ckpt).unwrap();
+        assert_eq!((ck.chunks_done, ck.total_chunks), (3, 3));
+
+        // Resuming the finished checkpoint re-reads every chunk from the
+        // cache and reproduces the outcome with zero contractions.
+        let resumed = sweep_resumable(
+            &HostEngineFactory,
+            &req,
+            &g,
+            &cfg,
+            &cache,
+            Some(&ck),
+            Some(ckpt.as_path()),
+        )
+        .unwrap();
+        assert_outcomes_identical(&plain, &resumed);
+        let stats = resumed.cache.unwrap();
+        assert_eq!((stats.hits, stats.misses), (3, 0));
+        std::fs::remove_dir_all(&dir).ok();
     }
 }

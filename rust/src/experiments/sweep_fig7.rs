@@ -7,10 +7,14 @@
 //! entry is the scaling substrate — the same numbers for one cluster,
 //! produced by the (scenario × config-chunk) fan-out path.
 
+use std::path::Path;
+
 use crate::carbon::FabGrid;
 use crate::dse::cache::ProfileCache;
 use crate::dse::grid::ScenarioGrid;
-use crate::dse::sweep::{sweep_fused, sweep_with_cache, SweepConfig, SweepOutcome};
+use crate::dse::sweep::{
+    sweep_fused, sweep_resumable, sweep_with_cache, SweepCheckpoint, SweepConfig, SweepOutcome,
+};
 use crate::dse::{design_grid, profile_configs, profiles_to_rows};
 use crate::matrixform::{ConfigRow, EvalRequest, TaskMatrix};
 use crate::report::{sweep_table, Table};
@@ -78,9 +82,37 @@ pub fn run_cached(
     threads: usize,
     cache: Option<&ProfileCache>,
 ) -> crate::Result<SweepFig7> {
+    run_resumable(factory, cluster, threads, cache, None, None)
+}
+
+/// [`run_cached`] with sweep-phase checkpoint/resume plumbing: when a
+/// cache is in play, phase-A progress is checkpointed to `save_to` after
+/// every step and `resume_from` continues an interrupted run
+/// bit-identically (completed chunks come back from the cache). Without
+/// a cache the checkpoint options are rejected — per-chunk resume is
+/// meaningless if the profiles were never persisted.
+pub fn run_resumable(
+    factory: &dyn EngineFactory,
+    cluster: Cluster,
+    threads: usize,
+    cache: Option<&ProfileCache>,
+    resume_from: Option<&SweepCheckpoint>,
+    save_to: Option<&Path>,
+) -> crate::Result<SweepFig7> {
     let space = profile_cluster(cluster);
     let grid = ScenarioGrid::fig7(&space.rows, &space.tasks, space.ci_use_g_per_j);
-    let outcome = sweep_with_cache(factory, &space.base, &grid, &SweepConfig { threads }, cache)?;
+    let cfg = SweepConfig { threads };
+    let outcome = match cache {
+        Some(cache) => {
+            sweep_resumable(factory, &space.base, &grid, &cfg, cache, resume_from, save_to)?
+        }
+        None => {
+            if resume_from.is_some() || save_to.is_some() {
+                anyhow::bail!("sweep checkpoint/resume requires a profile cache (--cache-dir)");
+            }
+            sweep_with_cache(factory, &space.base, &grid, &cfg, None)?
+        }
+    };
     let mut table = sweep_table(&outcome);
     table.title = format!("Fig 7 sweep [{}] — {}", cluster.label(), table.title);
     Ok(SweepFig7 { cluster, outcome, table })
@@ -148,6 +180,47 @@ mod tests {
         assert_eq!((ws.hits, ws.misses), (1, 0));
         assert_eq!(ws.contractions_avoided(), warm.outcome.profile_chunks);
         assert!(warm.table.title.contains("1 contraction(s) avoided"), "{}", warm.table.title);
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn resumable_fig7_sweep_checkpoints_and_reproduces() {
+        let dir = crate::testkit::test_dir("fig7_resume");
+        std::fs::remove_dir_all(&dir).ok();
+        let cache = ProfileCache::open(&dir).unwrap();
+        let ckpt = dir.join("sweep_fig7.ckpt.json");
+
+        let plain = run(&HostEngineFactory, Cluster::Ai5, 2).unwrap();
+        let saved = run_resumable(
+            &HostEngineFactory,
+            Cluster::Ai5,
+            2,
+            Some(&cache),
+            None,
+            Some(ckpt.as_path()),
+        )
+        .unwrap();
+        for (a, b) in plain.outcome.scenarios.iter().zip(&saved.outcome.scenarios) {
+            assert_eq!(a.outcome.result.metrics, b.outcome.result.metrics);
+        }
+        let ck = crate::dse::read_sweep_checkpoint(&ckpt).unwrap();
+        assert_eq!((ck.chunks_done, ck.total_chunks), (1, 1));
+        let resumed = run_resumable(
+            &HostEngineFactory,
+            Cluster::Ai5,
+            2,
+            Some(&cache),
+            Some(&ck),
+            Some(ckpt.as_path()),
+        )
+        .unwrap();
+        for (a, b) in plain.outcome.scenarios.iter().zip(&resumed.outcome.scenarios) {
+            assert_eq!(a.outcome.result.metrics, b.outcome.result.metrics);
+        }
+        assert_eq!(resumed.outcome.cache.unwrap().misses, 0);
+        // Checkpoints without a cache are rejected, not silently dropped.
+        assert!(run_resumable(&HostEngineFactory, Cluster::Ai5, 2, None, Some(&ck), None)
+            .is_err());
         std::fs::remove_dir_all(&dir).ok();
     }
 

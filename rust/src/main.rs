@@ -6,10 +6,14 @@
 use std::path::{Path, PathBuf};
 
 use xrcarbon::cli::Args;
-use xrcarbon::dse::cache::ProfileCache;
+use xrcarbon::dse::cache::{CacheConfig, ProfileCache};
 use xrcarbon::dse::search::{read_checkpoint, SearchConfig};
-use xrcarbon::dse::sweep::{sweep_with_cache, SweepConfig};
+use xrcarbon::dse::sweep::{
+    read_sweep_checkpoint, sweep_resumable, sweep_with_cache, SweepCheckpoint, SweepConfig,
+    SweepOutcome,
+};
 use xrcarbon::dse::ScenarioGrid;
+use xrcarbon::matrixform::EvalRequest;
 use xrcarbon::experiments::{
     common::Ctx, fig01_metric_comparison, fig02_retrospective, fig03_fleet_categories,
     fig04_power_embodied, fig07_dse_clusters, fig08_tcdp_vs_edp, fig09_accelerators,
@@ -54,11 +58,26 @@ COMMANDS
                        fig11    provisioning lifetimes 1-3y x QoS on/off
                        ci       CI diversity (world|us|coal|renewable grids)
               --cache-dir DIR  persistent profile cache: phase-A design
-                        profiles are content-addressed on disk, so repeat
-                        sweeps over a cached space perform zero engine
-                        contractions (the table title shows hits/misses);
-                        with --search, also writes a checkpoint to
-                        DIR/search_<space>.ckpt.json after every generation
+                        profiles are content-addressed on disk (JSON
+                        envelope + binary sidecar, in-memory LRU in
+                        front), so repeat sweeps over a cached space
+                        perform zero engine contractions (the table
+                        title shows hits/misses); plain sweeps also
+                        checkpoint phase A to DIR/sweep_<preset>.ckpt.json
+                        per chunk batch, and --search writes a checkpoint
+                        to DIR/search_<space>.ckpt.json after every
+                        generation
+              --cache-budget N[K|M|G]  on-disk size budget for the cache:
+                        least-recently-used entries are evicted past it
+                        (evictions show up in the table title); requires
+                        --cache-dir
+              --resume CKPT.json  (without --search) continue an
+                        interrupted sweep from its phase-A checkpoint:
+                        completed chunks are re-read from the cache,
+                        only the remainder is contracted, bit-identical
+                        to an uninterrupted run; requires --cache-dir,
+                        and a checkpoint from a different space/grid/
+                        engine/cluster is rejected
               --search  adaptive Pareto-guided search instead of exhaustive
                         enumeration                [--space fig7|expanded
                                                     --seed N  --max-evals N
@@ -103,6 +122,59 @@ fn cluster_for(args: &Args) -> anyhow::Result<Cluster> {
     Cluster::parse(name).ok_or_else(|| anyhow::anyhow!("unknown cluster '{name}'"))
 }
 
+/// Byte size with optional K/M/G suffix (powers of two).
+fn parse_byte_size(s: &str) -> Option<u64> {
+    let s = s.trim();
+    let (num, mult) = match s.chars().last()? {
+        'k' | 'K' => (&s[..s.len() - 1], 1u64 << 10),
+        'm' | 'M' => (&s[..s.len() - 1], 1u64 << 20),
+        'g' | 'G' => (&s[..s.len() - 1], 1u64 << 30),
+        _ => (s, 1),
+    };
+    num.parse::<u64>().ok()?.checked_mul(mult)
+}
+
+/// Open the profile cache the CLI flags describe (`--cache-dir` plus the
+/// optional `--cache-budget` eviction knob).
+fn open_cache(args: &Args) -> anyhow::Result<Option<ProfileCache>> {
+    let budget = match args.options.get("cache-budget") {
+        Some(s) => Some(parse_byte_size(s).ok_or_else(|| {
+            anyhow::anyhow!("--cache-budget: cannot parse '{s}' (use e.g. 67108864, 64M, 2G)")
+        })?),
+        None => None,
+    };
+    match args.options.get("cache-dir") {
+        Some(dir) => Ok(Some(ProfileCache::open_with(
+            dir,
+            CacheConfig { budget_bytes: budget, ..CacheConfig::default() },
+        )?)),
+        None => {
+            if budget.is_some() {
+                anyhow::bail!("--cache-budget requires --cache-dir");
+            }
+            Ok(None)
+        }
+    }
+}
+
+/// One preset sweep, resumable when a cache is in play.
+#[allow(clippy::too_many_arguments)]
+fn preset_sweep(
+    factory: &dyn EngineFactory,
+    base: &EvalRequest,
+    grid: &ScenarioGrid,
+    threads: usize,
+    cache: Option<&ProfileCache>,
+    resume: Option<&SweepCheckpoint>,
+    save_to: Option<&Path>,
+) -> anyhow::Result<SweepOutcome> {
+    let cfg = SweepConfig { threads };
+    match cache {
+        Some(cache) => Ok(sweep_resumable(factory, base, grid, &cfg, cache, resume, save_to)?),
+        None => Ok(sweep_with_cache(factory, base, grid, &cfg, None)?),
+    }
+}
+
 fn run_search(args: &Args) -> anyhow::Result<()> {
     // Scenario grids are fixed per search space; a silently ignored
     // --preset would hand back results for the wrong grid.
@@ -143,21 +215,17 @@ fn run_search(args: &Args) -> anyhow::Result<()> {
         ..SearchConfig::default()
     };
     // --cache-dir does double duty under --search: profile cache for
-    // every profile phase AND the checkpoint sink.
-    let (save_to, cache): (Option<PathBuf>, Option<ProfileCache>) =
-        match args.options.get("cache-dir") {
-            Some(dir) => {
-                // open() creates the directory, so the checkpoint path's
-                // parent exists before the first write.
-                let cache = ProfileCache::open(dir)?;
-                let ckpt = Path::new(dir).join(format!("search_{space_name}.ckpt.json"));
-                (Some(ckpt), Some(cache))
-            }
-            // A resumed run without --cache-dir keeps checkpointing to
-            // the file it resumed from — a second interrupt must not
-            // lose the progress made since the first one.
-            None => (args.options.get("resume").map(PathBuf::from), None),
-        };
+    // every profile phase AND the checkpoint sink. open_cache() creates
+    // the directory, so the checkpoint path's parent exists before the
+    // first write; --cache-budget applies to the profile cache here too.
+    let cache = open_cache(args)?;
+    let save_to: Option<PathBuf> = match args.options.get("cache-dir") {
+        Some(dir) => Some(Path::new(dir).join(format!("search_{space_name}.ckpt.json"))),
+        // A resumed run without --cache-dir keeps checkpointing to
+        // the file it resumed from — a second interrupt must not
+        // lose the progress made since the first one.
+        None => args.options.get("resume").map(PathBuf::from),
+    };
     let cache = cache.as_ref();
 
     match space_name.as_str() {
@@ -199,10 +267,9 @@ fn run_sweep(args: &Args) -> anyhow::Result<()> {
         return run_search(args);
     }
     // Search-only options must not be silently ignored on the exhaustive
-    // path: plain sweeps are deterministic without a seed and not
-    // resumable (checkpoints cover the search loop only — see ROADMAP),
-    // so a dropped --resume would quietly re-run everything from scratch.
-    for opt in ["resume", "space", "max-evals", "seed"] {
+    // path (plain sweeps are deterministic without a seed); `--resume`
+    // without `--search` is the *sweep-phase* resume below.
+    for opt in ["space", "max-evals", "seed"] {
         if args.options.contains_key(opt) {
             anyhow::bail!("--{opt} requires --search (within the sweep subcommand)");
         }
@@ -212,27 +279,57 @@ fn run_sweep(args: &Args) -> anyhow::Result<()> {
     let threads = args.get_usize("threads", 0)?;
     // Persistent profile cache: repeat sweeps over the same design space
     // skip every phase-A engine contraction (the table title proves it).
-    let cache = match args.options.get("cache-dir") {
-        Some(dir) => Some(ProfileCache::open(dir)?),
+    let cache = open_cache(args)?;
+    let cache = cache.as_ref();
+    let preset = args.get("preset", "fig7").to_string();
+    // Sweep-phase checkpointing: with a cache, phase-A progress persists
+    // per chunk batch and `--resume` continues an interrupted run
+    // bit-identically (the checkpoint's fingerprint rejects a different
+    // space/grid/engine/cluster).
+    let resume = match args.options.get("resume") {
+        Some(path) => {
+            if cache.is_none() {
+                anyhow::bail!(
+                    "--resume without --search resumes the sweep phase and requires \
+                     --cache-dir (completed chunks are re-read from the profile cache)"
+                );
+            }
+            let ck = read_sweep_checkpoint(path)?;
+            println!("[resume] {path}: {}/{} chunk(s) done", ck.chunks_done, ck.total_chunks);
+            Some(ck)
+        }
         None => None,
     };
-    let cache = cache.as_ref();
-    let preset = args.get("preset", "fig7");
-    match preset {
+    let save_to: Option<PathBuf> = args
+        .options
+        .get("cache-dir")
+        .map(|dir| Path::new(dir).join(format!("sweep_{preset}.ckpt.json")));
+    let resume = resume.as_ref();
+    let save_to = save_to.as_deref();
+    match preset.as_str() {
         "fig7" => {
-            let f = sweep_fig7::run_cached(factory.as_ref(), cluster_for(args)?, threads, cache)?;
+            let f = sweep_fig7::run_resumable(
+                factory.as_ref(),
+                cluster_for(args)?,
+                threads,
+                cache,
+                resume,
+                save_to,
+            )?;
             emit(args, "sweep_fig7", &f.table)?;
             print!("{}", sweep_best_table(&f.outcome).render());
         }
         "fig10" | "lifetime" => {
             let space = sweep_fig7::profile_cluster(cluster_for(args)?);
             let grid = ScenarioGrid::lifetime_decades(3, 8);
-            let out = sweep_with_cache(
+            let out = preset_sweep(
                 factory.as_ref(),
                 &space.base,
                 &grid,
-                &SweepConfig { threads },
+                threads,
                 cache,
+                resume,
+                save_to,
             )?;
             emit(args, "sweep_fig10", &sweep_table(&out))?;
             print!("{}", sweep_best_table(&out).render());
@@ -245,7 +342,7 @@ fn run_sweep(args: &Args) -> anyhow::Result<()> {
             base.lifetime_s = 2.0 * xrcarbon::dse::grid::YEAR_S;
             let grid = ScenarioGrid::use_grids();
             let out =
-                sweep_with_cache(factory.as_ref(), &base, &grid, &SweepConfig { threads }, cache)?;
+                preset_sweep(factory.as_ref(), &base, &grid, threads, cache, resume, save_to)?;
             emit(args, "sweep_ci", &sweep_table(&out))?;
             print!("{}", sweep_best_table(&out).render());
         }
@@ -261,7 +358,7 @@ fn run_sweep(args: &Args) -> anyhow::Result<()> {
             );
             let grid = ScenarioGrid::fig11();
             let out =
-                sweep_with_cache(factory.as_ref(), &base, &grid, &SweepConfig { threads }, cache)?;
+                preset_sweep(factory.as_ref(), &base, &grid, threads, cache, resume, save_to)?;
             emit(args, "sweep_fig11", &sweep_table(&out))?;
             print!("{}", sweep_best_table(&out).render());
         }
@@ -343,6 +440,26 @@ fn run_one(cmd: &str, args: &Args) -> anyhow::Result<()> {
         other => anyhow::bail!("unknown command '{other}'\n\n{USAGE}"),
     }
     Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::parse_byte_size;
+
+    #[test]
+    fn byte_sizes_parse_with_and_without_suffix() {
+        assert_eq!(parse_byte_size("1024"), Some(1024));
+        assert_eq!(parse_byte_size("64K"), Some(64 << 10));
+        assert_eq!(parse_byte_size("64k"), Some(64 << 10));
+        assert_eq!(parse_byte_size("512M"), Some(512 << 20));
+        assert_eq!(parse_byte_size("2G"), Some(2u64 << 30));
+        assert_eq!(parse_byte_size(" 8m "), Some(8 << 20));
+        assert_eq!(parse_byte_size(""), None);
+        assert_eq!(parse_byte_size("M"), None);
+        assert_eq!(parse_byte_size("1.5G"), None);
+        assert_eq!(parse_byte_size("-3"), None);
+        assert_eq!(parse_byte_size("999999999999G"), None); // overflow
+    }
 }
 
 fn main() -> anyhow::Result<()> {

@@ -11,13 +11,22 @@ use super::Table;
 /// run's hit/miss delta and the contractions avoided.
 pub fn sweep_table(out: &SweepOutcome) -> Table {
     let cache = match &out.cache {
-        Some(cs) => format!(
-            ", cache: {} hit(s) / {} miss(es) ({} rejected), {} contraction(s) avoided",
-            cs.hits,
-            cs.misses,
-            cs.rejected,
-            cs.contractions_avoided()
-        ),
+        Some(cs) => {
+            let mut s = format!(
+                ", cache: {} hit(s) / {} miss(es) ({} rejected), {} contraction(s) avoided",
+                cs.hits,
+                cs.misses,
+                cs.rejected,
+                cs.contractions_avoided()
+            );
+            if cs.mem_hits > 0 {
+                s.push_str(&format!(" [{} from memory]", cs.mem_hits));
+            }
+            if cs.evictions > 0 {
+                s.push_str(&format!(", {} evicted", cs.evictions));
+            }
+            s
+        }
         None => String::new(),
     };
     let mut t = Table::new(
@@ -128,11 +137,23 @@ mod tests {
             misses: 1,
             rejected: 1,
             writes: 1,
-            write_errors: 0,
+            ..crate::runtime::CacheStats::default()
         });
         let title = sweep_table(&out).title;
         assert!(title.contains("cache: 3 hit(s) / 1 miss(es) (1 rejected)"), "{title}");
         assert!(title.contains("3 contraction(s) avoided"), "{title}");
+        // Memory hits and evictions appear only when nonzero.
+        assert!(!title.contains("from memory"), "{title}");
+        assert!(!title.contains("evicted"), "{title}");
+        out.cache = Some(crate::runtime::CacheStats {
+            hits: 3,
+            mem_hits: 2,
+            evictions: 4,
+            ..crate::runtime::CacheStats::default()
+        });
+        let title = sweep_table(&out).title;
+        assert!(title.contains("[2 from memory]"), "{title}");
+        assert!(title.contains("4 evicted"), "{title}");
     }
 
     #[test]

@@ -17,6 +17,9 @@ pub struct CacheStats {
     /// Profile chunks served from the cache (each one phase-A engine
     /// contraction avoided).
     pub hits: usize,
+    /// Subset of `hits` served by the in-memory LRU layer without
+    /// touching the disk envelope at all (no read, no parse).
+    pub mem_hits: usize,
     /// Lookups that fell through to the engine (absent entries, read
     /// errors, plus rejected ones).
     pub misses: usize,
@@ -30,6 +33,8 @@ pub struct CacheStats {
     /// degrades to uncached behavior instead of failing — the computed
     /// profile is still used, it just is not persisted.
     pub write_errors: usize,
+    /// On-disk entries removed by the size-budget eviction policy.
+    pub evictions: usize,
 }
 
 impl CacheStats {
@@ -48,10 +53,12 @@ impl CacheStats {
     pub fn since(&self, earlier: &CacheStats) -> CacheStats {
         CacheStats {
             hits: self.hits.saturating_sub(earlier.hits),
+            mem_hits: self.mem_hits.saturating_sub(earlier.mem_hits),
             misses: self.misses.saturating_sub(earlier.misses),
             rejected: self.rejected.saturating_sub(earlier.rejected),
             writes: self.writes.saturating_sub(earlier.writes),
             write_errors: self.write_errors.saturating_sub(earlier.write_errors),
+            evictions: self.evictions.saturating_sub(earlier.evictions),
         }
     }
 }
@@ -60,10 +67,12 @@ impl CacheStats {
 #[derive(Debug, Default)]
 pub struct CacheCounters {
     hits: AtomicUsize,
+    mem_hits: AtomicUsize,
     misses: AtomicUsize,
     rejected: AtomicUsize,
     writes: AtomicUsize,
     write_errors: AtomicUsize,
+    evictions: AtomicUsize,
 }
 
 impl CacheCounters {
@@ -75,6 +84,13 @@ impl CacheCounters {
     /// Record a cache hit (one contraction avoided).
     pub fn record_hit(&self) {
         self.hits.fetch_add(1, Ordering::Relaxed);
+    }
+
+    /// Record a hit served by the in-memory LRU layer (counts as a hit
+    /// *and* a memory hit).
+    pub fn record_mem_hit(&self) {
+        self.hits.fetch_add(1, Ordering::Relaxed);
+        self.mem_hits.fetch_add(1, Ordering::Relaxed);
     }
 
     /// Record a miss on an absent entry.
@@ -99,14 +115,21 @@ impl CacheCounters {
         self.write_errors.fetch_add(1, Ordering::Relaxed);
     }
 
+    /// Record one entry evicted from the on-disk store.
+    pub fn record_eviction(&self) {
+        self.evictions.fetch_add(1, Ordering::Relaxed);
+    }
+
     /// Immutable snapshot of the current counts.
     pub fn snapshot(&self) -> CacheStats {
         CacheStats {
             hits: self.hits.load(Ordering::Relaxed),
+            mem_hits: self.mem_hits.load(Ordering::Relaxed),
             misses: self.misses.load(Ordering::Relaxed),
             rejected: self.rejected.load(Ordering::Relaxed),
             writes: self.writes.load(Ordering::Relaxed),
             write_errors: self.write_errors.load(Ordering::Relaxed),
+            evictions: self.evictions.load(Ordering::Relaxed),
         }
     }
 }
@@ -120,18 +143,22 @@ mod tests {
         let c = CacheCounters::new();
         c.record_hit();
         c.record_hit();
+        c.record_mem_hit();
         c.record_miss();
         c.record_rejected();
         c.record_write();
         c.record_write_error();
+        c.record_eviction();
         let s = c.snapshot();
-        assert_eq!(s.hits, 2);
+        assert_eq!(s.hits, 3); // two disk hits + one memory hit
+        assert_eq!(s.mem_hits, 1);
         assert_eq!(s.misses, 2); // absent + rejected
         assert_eq!(s.rejected, 1);
         assert_eq!(s.writes, 1);
         assert_eq!(s.write_errors, 1);
-        assert_eq!(s.contractions_avoided(), 2);
-        assert_eq!(s.lookups(), 4);
+        assert_eq!(s.evictions, 1);
+        assert_eq!(s.contractions_avoided(), 3);
+        assert_eq!(s.lookups(), 5);
     }
 
     #[test]
@@ -141,11 +168,12 @@ mod tests {
         c.record_write();
         let before = c.snapshot();
         c.record_hit();
-        c.record_hit();
+        c.record_mem_hit();
+        c.record_eviction();
         let delta = c.snapshot().since(&before);
         assert_eq!(
             delta,
-            CacheStats { hits: 2, misses: 0, rejected: 0, writes: 0, write_errors: 0 }
+            CacheStats { hits: 2, mem_hits: 1, evictions: 1, ..CacheStats::default() }
         );
         // Saturating: an impossible negative delta clamps to zero.
         assert_eq!(before.since(&c.snapshot()).hits, 0);

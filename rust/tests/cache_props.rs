@@ -1,19 +1,27 @@
 //! Property tests for the persistent profile cache and the resumable
-//! search — the determinism contract of the warm-start layer:
+//! sweep/search — the determinism contract of the warm-start layer:
 //!
 //! * a warm-start sweep over a cached space is **bit-identical** to the
 //!   cold run on the host engine and performs **zero** phase-A engine
-//!   contractions (the cache-stats delta proves it);
-//! * corrupted or stale-version cache entries are rejected and
-//!   recomputed — results never change, the entries are never trusted;
-//! * a search interrupted at *any* generation and resumed from its
-//!   (JSON round-tripped) checkpoint produces a bit-identical final
-//!   outcome.
+//!   contractions — through the in-memory LRU (same process) and
+//!   through the binary sidecars (fresh process) alike;
+//! * binary-envelope round-trips are bit-exact, a lost or corrupted
+//!   sidecar falls back to the JSON envelope bit-identically (and is
+//!   repaired), and corrupted or stale entries of either format are
+//!   rejected and recomputed — results never change, the entries are
+//!   never trusted;
+//! * the on-disk eviction policy keeps the store under its size budget
+//!   without ever evicting the most recent entry;
+//! * a sweep interrupted at *any* chunk and a search interrupted at
+//!   *any* generation both resume from their (JSON round-tripped)
+//!   checkpoints bit-identically.
 
 use xrcarbon::configfmt::{parse, Json};
-use xrcarbon::dse::cache::{ProfileCache, PROFILE_SCHEMA};
+use xrcarbon::dse::cache::{CacheConfig, ProfileCache, PROFILE_SCHEMA};
 use xrcarbon::dse::search::{SearchCheckpoint, SearchConfig, SearchDriver, SearchOutcome};
-use xrcarbon::dse::sweep::{sweep, sweep_with_cache, SweepConfig, SweepOutcome};
+use xrcarbon::dse::sweep::{
+    sweep, sweep_with_cache, SweepCheckpoint, SweepConfig, SweepDriver, SweepOutcome,
+};
 use xrcarbon::dse::{DesignPoint, ScenarioGrid, SearchSpace};
 use xrcarbon::matrixform::{ConfigRow, EvalRequest, TaskMatrix};
 use xrcarbon::runtime::HostEngineFactory;
@@ -93,7 +101,7 @@ fn sweeps_bit_identical(a: &SweepOutcome, b: &SweepOutcome) -> bool {
 #[test]
 fn prop_warm_sweep_bit_identical_to_cold_with_zero_contractions() {
     forall_cfg(
-        PropConfig { cases: 24, seed: 41 },
+        PropConfig { cases: 20, seed: 41 },
         |r| (gen_request(r), gen_grid(r)),
         |(req, grid)| {
             let dir = test_dir("cache_props_warm");
@@ -103,19 +111,32 @@ fn prop_warm_sweep_bit_identical_to_cold_with_zero_contractions() {
             let nocache = sweep(&HostEngineFactory, req, grid, &cfg).unwrap();
             let cold =
                 sweep_with_cache(&HostEngineFactory, req, grid, &cfg, Some(&cache)).unwrap();
+            // Warm #1: same process, same cache instance — the memory
+            // LRU serves every chunk (no disk read at all).
             let warm =
                 sweep_with_cache(&HostEngineFactory, req, grid, &cfg, Some(&cache)).unwrap();
+            // Warm #2: a fresh instance models a fresh process — cold
+            // memory, every chunk decoded from its binary sidecar.
+            let fresh = ProfileCache::open(&dir).unwrap();
+            let disk_warm =
+                sweep_with_cache(&HostEngineFactory, req, grid, &cfg, Some(&fresh)).unwrap();
 
             let chunks = cold.profile_chunks;
             let cs = cold.cache.unwrap();
             let ws = warm.cache.unwrap();
+            let ds = disk_warm.cache.unwrap();
             let ok = sweeps_bit_identical(&nocache, &cold)
                 && sweeps_bit_identical(&cold, &warm)
+                && sweeps_bit_identical(&cold, &disk_warm)
                 // Cold: every chunk missed and was written back.
                 && (cs.hits, cs.misses, cs.writes, cs.rejected) == (0, chunks, chunks, 0)
-                // Warm: zero engine contractions — everything a hit.
+                // Warm: zero engine contractions — everything a hit,
+                // served by the memory layer.
                 && (ws.hits, ws.misses, ws.writes) == (chunks, 0, 0)
+                && ws.mem_hits == chunks
                 && ws.contractions_avoided() == chunks
+                // Disk-warm: zero contractions with cold memory too.
+                && (ds.hits, ds.mem_hits, ds.misses) == (chunks, 0, 0)
                 && chunks >= 1;
             std::fs::remove_dir_all(&dir).ok();
             ok
@@ -123,7 +144,95 @@ fn prop_warm_sweep_bit_identical_to_cold_with_zero_contractions() {
     );
 }
 
-/// Corrupt one on-disk envelope in `kind`-dependent ways.
+#[test]
+fn prop_binary_roundtrip_fallback_and_rejection() {
+    forall_cfg(
+        PropConfig { cases: 16, seed: 45 },
+        |r| (gen_request(r), gen_grid(r), r.below(3)),
+        |(req, grid, sidecar_kind)| {
+            let dir = test_dir("cache_props_bin");
+            let cfg = SweepConfig::default();
+            let nomem = CacheConfig { mem_entries: 0, ..CacheConfig::default() };
+
+            // Populate.
+            let cache = ProfileCache::open_with(&dir, nomem).unwrap();
+            let cold =
+                sweep_with_cache(&HostEngineFactory, req, grid, &cfg, Some(&cache)).unwrap();
+            let chunks = cold.profile_chunks;
+
+            // (a) Binary round-trip: disk-only warm run is bit-identical.
+            let bin_warm =
+                sweep_with_cache(&HostEngineFactory, req, grid, &cfg, Some(&cache)).unwrap();
+            let bs = bin_warm.cache.unwrap();
+            if !(sweeps_bit_identical(&cold, &bin_warm) && (bs.hits, bs.misses) == (chunks, 0)) {
+                std::fs::remove_dir_all(&dir).ok();
+                return false;
+            }
+
+            // (b) Vandalize every sidecar; the JSON fallback must serve
+            // bit-identical profiles (hits, not rejections) and repair
+            // the sidecars in place.
+            let sidecars: Vec<std::path::PathBuf> = std::fs::read_dir(&dir)
+                .unwrap()
+                .flatten()
+                .map(|e| e.path())
+                .filter(|p| p.extension().is_some_and(|e| e == "bin"))
+                .collect();
+            if sidecars.len() != chunks {
+                std::fs::remove_dir_all(&dir).ok();
+                return false;
+            }
+            for p in &sidecars {
+                match sidecar_kind % 3 {
+                    0 => {
+                        std::fs::remove_file(p).unwrap();
+                    }
+                    1 => {
+                        let b = std::fs::read(p).unwrap();
+                        std::fs::write(p, &b[..b.len() / 2]).unwrap();
+                    }
+                    _ => {
+                        let mut b = std::fs::read(p).unwrap();
+                        let mid = b.len() / 2;
+                        b[mid] ^= 0x5A;
+                        std::fs::write(p, b).unwrap();
+                    }
+                }
+            }
+            let fallback =
+                sweep_with_cache(&HostEngineFactory, req, grid, &cfg, Some(&cache)).unwrap();
+            let fs_ = fallback.cache.unwrap();
+            let repaired = sidecars.iter().all(|p| p.exists());
+            if !(sweeps_bit_identical(&cold, &fallback)
+                && (fs_.hits, fs_.misses, fs_.rejected) == (chunks, 0, 0)
+                && repaired)
+            {
+                std::fs::remove_dir_all(&dir).ok();
+                return false;
+            }
+
+            // (c) Corrupt sidecar with the JSON envelope gone: rejected
+            // and recomputed — identical results, chunks re-written.
+            for entry in std::fs::read_dir(&dir).unwrap().flatten() {
+                let p = entry.path();
+                if p.extension().is_some_and(|e| e == "json") {
+                    std::fs::remove_file(&p).unwrap();
+                } else if p.extension().is_some_and(|e| e == "bin") {
+                    std::fs::write(&p, b"junk sidecar").unwrap();
+                }
+            }
+            let recomputed =
+                sweep_with_cache(&HostEngineFactory, req, grid, &cfg, Some(&cache)).unwrap();
+            let rs = recomputed.cache.unwrap();
+            let ok = sweeps_bit_identical(&cold, &recomputed)
+                && (rs.hits, rs.rejected, rs.writes) == (0, chunks, chunks);
+            std::fs::remove_dir_all(&dir).ok();
+            ok
+        },
+    );
+}
+
+/// Corrupt one on-disk JSON envelope in `kind`-dependent ways.
 fn corrupt(path: &std::path::Path, kind: usize) {
     let text = std::fs::read_to_string(path).unwrap();
     match kind % 5 {
@@ -178,18 +287,24 @@ fn prop_corrupted_or_stale_entries_are_recomputed_never_trusted() {
         |r| (gen_request(r), gen_grid(r), r.below(5)),
         |(req, grid, kind)| {
             let dir = test_dir("cache_props_corrupt");
-            let cache = ProfileCache::open(&dir).unwrap();
+            // Memory layer off: a same-instance warm hit would mask the
+            // on-disk corruption this property is about.
+            let nomem = CacheConfig { mem_entries: 0, ..CacheConfig::default() };
+            let cache = ProfileCache::open_with(&dir, nomem).unwrap();
             let cfg = SweepConfig::default();
             let cold =
                 sweep_with_cache(&HostEngineFactory, req, grid, &cfg, Some(&cache)).unwrap();
 
-            // Vandalize every stored envelope.
+            // Vandalize every stored JSON envelope and remove the
+            // sidecars (so the binary fast path cannot mask the damage).
             let mut corrupted = 0usize;
             for entry in std::fs::read_dir(&dir).unwrap() {
                 let path = entry.unwrap().path();
                 if path.extension().is_some_and(|e| e == "json") {
                     corrupt(&path, *kind);
                     corrupted += 1;
+                } else if path.extension().is_some_and(|e| e == "bin") {
+                    std::fs::remove_file(&path).unwrap();
                 }
             }
 
@@ -210,6 +325,141 @@ fn prop_corrupted_or_stale_entries_are_recomputed_never_trusted() {
                 && sweeps_bit_identical(&cold, &healed)
                 && (rs.hits, rs.rejected, rs.writes) == (0, chunks, chunks)
                 && (hs.hits, hs.misses) == (chunks, 0);
+            std::fs::remove_dir_all(&dir).ok();
+            ok
+        },
+    );
+}
+
+#[test]
+fn prop_eviction_honors_the_size_budget() {
+    forall_cfg(
+        PropConfig { cases: 8, seed: 44 },
+        |r| (r.below(6) + 4, r.below(3) + 2),
+        |&(entries, keep)| {
+            let dir = test_dir("cache_props_evict");
+            // Probe one entry's on-disk footprint.
+            let mk = |i: usize| {
+                let mut tasks = TaskMatrix::new(vec!["t".into()], vec!["k".into()]);
+                tasks.set(0, 0, 2.0);
+                EvalRequest {
+                    tasks,
+                    configs: vec![ConfigRow {
+                        name: format!("cfg{i}"),
+                        f_clk: 1e9,
+                        d_k: vec![1e-3 * (i + 1) as f64],
+                        e_dyn: vec![0.01],
+                        leak_w: 0.01,
+                        c_comp: vec![100.0],
+                    }],
+                    online: vec![1.0],
+                    qos: vec![f64::INFINITY],
+                    ci_use_g_per_j: 1e-4,
+                    lifetime_s: 1e6,
+                    beta: 1.0,
+                    p_max_w: f64::INFINITY,
+                }
+            };
+            let grid = ScenarioGrid::new().with_lifetime("lt", 1e6);
+            let cfg = SweepConfig::default();
+
+            let probe = ProfileCache::open(&dir).unwrap();
+            sweep_with_cache(&HostEngineFactory, &mk(0), &grid, &cfg, Some(&probe)).unwrap();
+            let per_entry = probe.disk_bytes();
+            std::fs::remove_dir_all(&dir).ok();
+            if per_entry == 0 {
+                return false;
+            }
+
+            // Budget for `keep` entries, then sweep `entries` distinct
+            // single-config spaces through one budgeted cache.
+            let budget = per_entry * keep as u64 + per_entry / 2;
+            let cache = ProfileCache::open_with(
+                &dir,
+                CacheConfig { budget_bytes: Some(budget), ..CacheConfig::default() },
+            )
+            .unwrap();
+            let mut outs = Vec::new();
+            for i in 0..entries {
+                outs.push(
+                    sweep_with_cache(&HostEngineFactory, &mk(i), &grid, &cfg, Some(&cache))
+                        .unwrap(),
+                );
+            }
+            let stats = cache.stats();
+            let on_disk = cache.disk_entries();
+            // Disk stays under budget (the policy never evicts the most
+            // recent entry, so a tiny budget still keeps exactly one);
+            // evictions are visible; the newest entry always survives.
+            let newest_key = ProfileCache::key_for_request(&mk(entries - 1), "host");
+            let ok = cache.disk_bytes() <= budget.max(per_entry * 2)
+                && on_disk >= 1
+                && on_disk <= keep + 1
+                && stats.evictions == entries - on_disk
+                && cache.envelope_path(&newest_key).exists()
+                // Results were never affected by eviction (each sweep
+                // re-derives from scratch or cache, both bit-exact).
+                && outs.iter().all(|o| o.scenarios.len() == 1);
+            std::fs::remove_dir_all(&dir).ok();
+            ok
+        },
+    );
+}
+
+#[test]
+fn prop_sweep_interrupted_at_any_chunk_resumes_bit_identically() {
+    forall_cfg(
+        PropConfig { cases: 10, seed: 46 },
+        |r| {
+            // Bias toward multi-chunk spaces: the interrupt needs chunks
+            // to land between.
+            let mut req = gen_request(r);
+            if r.chance(0.6) && req.configs.len() < 1100 {
+                let target = 1100 + r.below(400);
+                let base = req.configs[0].clone();
+                while req.configs.len() < target {
+                    let mut c = base.clone();
+                    let i = req.configs.len();
+                    c.name = format!("cfg{i}");
+                    c.d_k = c.d_k.iter().map(|d| d * (1.0 + i as f64 * 1e-4)).collect();
+                    req.configs.push(c);
+                }
+            }
+            (req, gen_grid(r), r.below(8))
+        },
+        |(req, grid, interrupt)| {
+            let dir = test_dir("cache_props_sweep_resume");
+            let cfg = SweepConfig { threads: 1 }; // one chunk per step
+            let reference = sweep(&HostEngineFactory, req, grid, &cfg).unwrap();
+            let total = reference.profile_chunks;
+
+            // Phase 1: drive `g` steps against a cache, then "crash".
+            let g = interrupt % (total + 2);
+            let cache = ProfileCache::open(&dir).unwrap();
+            let mut d = SweepDriver::new(&HostEngineFactory, req, grid, &cfg);
+            for _ in 0..g {
+                if d.step(&HostEngineFactory, Some(&cache)).unwrap() {
+                    break;
+                }
+            }
+            let ck =
+                SweepCheckpoint::from_json_str(&d.checkpoint().to_json_string()).unwrap();
+            if ck != d.checkpoint() {
+                std::fs::remove_dir_all(&dir).ok();
+                return false;
+            }
+
+            // Phase 2: a fresh process (fresh cache instance) resumes.
+            let cache2 = ProfileCache::open(&dir).unwrap();
+            let resumed = SweepDriver::resume(&HostEngineFactory, req, grid, &cfg, &ck)
+                .unwrap()
+                .run(&HostEngineFactory, Some(&cache2), None)
+                .unwrap();
+            let stats = resumed.cache.unwrap();
+            let done = g.min(total);
+            let ok = sweeps_bit_identical(&reference, &resumed)
+                && stats.hits == done
+                && stats.misses == total - done;
             std::fs::remove_dir_all(&dir).ok();
             ok
         },

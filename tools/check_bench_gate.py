@@ -23,7 +23,11 @@ advantage:
   profile chunks of a warm sweep over a fully cached space: every
   phase-A engine contraction must be served from disk; any value below
   1.0 means the cache failed to round-trip at least one chunk). Also a
-  deterministic counter check, immune to runner jitter.
+  deterministic counter check, immune to runner jitter. And
+  `cache/warm_read_speedup` must be >= 2.0x: the binary-sidecar warm
+  read must keep a decisive decode advantage over the JSON envelope
+  (observed well above 2x; the floor is the noise-shielded minimum the
+  raw-bits format must never lose).
 
 Usage: check_bench_gate.py BENCH_sweep.json BENCH_search.json BENCH_cache.json
 """
@@ -38,6 +42,8 @@ SEARCH_ANCHOR_MIN = 1.0 / 0.6
 SEARCH_EXPANDED_MIN = 5.0
 # A warm sweep must avoid every phase-A contraction (hits == chunks).
 CACHE_WARM_MIN = 1.0
+# Binary sidecar warm reads must beat JSON envelope parses by >= 2x.
+CACHE_BINARY_READ_MIN = 2.0
 
 
 def fail(msg):
@@ -115,6 +121,21 @@ def check_cache(path):
         fail(
             f"{name} reports {ratio:.2f}x < {CACHE_WARM_MIN:.2f}x — a warm sweep "
             f"re-contracted at least one cached chunk"
+        )
+    name = "cache/warm_read_speedup"
+    row = rows.get(name)
+    if row is None:
+        fail(f"{path}: missing entry {name}")
+    speedup = row.get("throughput")
+    if speedup is None:
+        fail(f"{path}: {name} has no ratio")
+    print(
+        f"cache gate: {name} = {speedup:.2f}x (min {CACHE_BINARY_READ_MIN:.2f}x)"
+    )
+    if speedup < CACHE_BINARY_READ_MIN:
+        fail(
+            f"{name} reports {speedup:.2f}x < {CACHE_BINARY_READ_MIN:.2f}x — the binary "
+            f"sidecar lost its warm-read advantage over the JSON envelope"
         )
 
 
