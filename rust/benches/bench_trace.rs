@@ -1,0 +1,105 @@
+//! Bench: the trace-scenario fan-out — a 24-segment diurnal trace
+//! crossed with the Fig 7 grid, swept over a warm profile cache (every
+//! trace segment is a phase-B overlay over the same cached phase-A
+//! profile) versus the fused reference that re-contracts the space for
+//! every lowered segment.
+//!
+//! Emits `BENCH_trace.json`. The CI smoke gate
+//! (`tools/check_bench_gate.py`) consumes one pseudo-entry:
+//!
+//! * `trace/warm_contractions_avoided` — `samples` = cache hits of the
+//!   warm trace sweep, `throughput` = hits / profile chunks. The floor
+//!   is 1.0×: the trace axis multiplies phase-B overlays, never phase-A
+//!   profiling, so a warm sweep must avoid **every** contraction no
+//!   matter how many segments the traces lower into (the stats are
+//!   deterministic counters, not timings).
+//!
+//! `trace/segment_fanout` (`samples` = work items, `throughput` = items
+//! per profile chunk) is informational: how many per-segment overlays
+//! rode on each cached contraction.
+//!
+//! Set `XRCARBON_BENCH_QUICK=1` for the short sampling mode CI uses.
+
+use std::time::Duration;
+
+use xrcarbon::bench::{write_json, BenchResult, Bencher};
+use xrcarbon::carbon::CiTrace;
+use xrcarbon::dse::cache::ProfileCache;
+use xrcarbon::dse::sweep::{sweep_fused, sweep_with_cache, SweepConfig};
+use xrcarbon::dse::ScenarioGrid;
+use xrcarbon::experiments::sweep_fig7::profile_cluster;
+use xrcarbon::runtime::HostEngineFactory;
+use xrcarbon::workloads::Cluster;
+
+/// Counter pseudo-entry: `samples` carries a count, `throughput` a
+/// ratio; timings are zero (this row is data, not a measurement).
+fn counter(name: &str, samples: usize, ratio: f64) -> BenchResult {
+    BenchResult {
+        name: name.to_string(),
+        samples,
+        mean: Duration::ZERO,
+        p50: Duration::ZERO,
+        p95: Duration::ZERO,
+        throughput: Some(ratio),
+    }
+}
+
+fn main() {
+    let mut results: Vec<BenchResult> = Vec::new();
+    let space = profile_cluster(Cluster::Ai5);
+    // Fig 7's three embodied-share scenarios, each carrying the
+    // 24-segment diurnal world-grid trace: 3 scenarios × 24 lowered
+    // segments over one 121-config profile chunk.
+    let grid = ScenarioGrid::fig7(&space.rows, &space.tasks, space.ci_use_g_per_j).cross(
+        ScenarioGrid::new().with_trace("trace=diurnal-world", CiTrace::diurnal_world()),
+    );
+    let dir = xrcarbon::testkit::test_dir("bench_trace");
+
+    // Populate the cache once, then every warm iteration serves phase A
+    // from disk and pays only the per-segment overlays.
+    std::fs::remove_dir_all(&dir).ok();
+    let cache = ProfileCache::open(&dir).unwrap();
+    sweep_with_cache(&HostEngineFactory, &space.base, &grid, &SweepConfig::default(), Some(&cache))
+        .unwrap();
+    let mut last = None;
+    let warm = Bencher::new("trace/warm_sweep_24seg").quick_if_env().run(|| {
+        let out = sweep_with_cache(
+            &HostEngineFactory,
+            &space.base,
+            &grid,
+            &SweepConfig::default(),
+            Some(&cache),
+        )
+        .unwrap();
+        last = Some(out);
+    });
+    println!("{}", warm.report());
+    let out = last.expect("warm bench ran at least once");
+    let stats = out.cache.expect("cached sweep reports stats");
+    let avoided_ratio = stats.hits as f64 / out.profile_chunks.max(1) as f64;
+    let fanout = out.items as f64 / out.profile_chunks.max(1) as f64;
+    println!(
+        "warm trace sweep: {} of {} chunk contraction(s) avoided ({avoided_ratio:.2}x floor \
+         metric), {} overlay item(s) ({fanout:.0} per chunk), {} miss(es)",
+        stats.hits, out.profile_chunks, out.items, stats.misses
+    );
+
+    // Fused reference: the engine re-contracts the space for every
+    // lowered segment — the cost the trace axis would multiply without
+    // the two-phase split.
+    let fused = Bencher::new("trace/fused_sweep_24seg")
+        .quick_if_env()
+        .run(|| sweep_fused(&HostEngineFactory, &space.base, &grid, &SweepConfig::default()).unwrap());
+    println!("{}", fused.report());
+    let speedup = fused.mean.as_secs_f64() / warm.mean.as_secs_f64().max(1e-12);
+    println!("warm two-phase vs fused per-segment: {speedup:.2}x wall clock");
+
+    results.push(warm);
+    results.push(fused);
+    results.push(counter("trace/warm_contractions_avoided", stats.hits, avoided_ratio));
+    results.push(counter("trace/segment_fanout", out.items, fanout));
+
+    std::fs::remove_dir_all(&dir).ok();
+    write_json(&results, "BENCH_trace.json").expect("writing BENCH_trace.json");
+    println!("[json] wrote BENCH_trace.json ({} benchmarks)", results.len());
+}

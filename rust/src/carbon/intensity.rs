@@ -46,11 +46,24 @@ pub enum UseGrid {
     Renewable,
     /// Coal-dominated grid (~820 g/kWh) — operational-carbon-dominant.
     Coal,
-    /// Custom intensity (g/kWh).
-    Custom(u32),
+    /// Custom intensity: the bits of an f64 g/kWh value (construct via
+    /// [`UseGrid::custom`]). Carrying bits instead of the float keeps
+    /// `Eq`/`Hash` derivable without truncating fractional intensities
+    /// (trace segments and marginal-intensity data are fractional).
+    Custom(u64),
 }
 
 impl UseGrid {
+    /// Custom use-phase intensity from a (possibly fractional) g/kWh
+    /// value.
+    pub fn custom(g_per_kwh: f64) -> Self {
+        assert!(
+            g_per_kwh.is_finite() && g_per_kwh >= 0.0,
+            "custom carbon intensity must be non-negative and finite (got {g_per_kwh})"
+        );
+        UseGrid::Custom(g_per_kwh.to_bits())
+    }
+
     /// Grid carbon intensity in gCO₂/kWh.
     pub fn g_per_kwh(self) -> f64 {
         match self {
@@ -58,7 +71,7 @@ impl UseGrid {
             UseGrid::UnitedStates => 380.0,
             UseGrid::Renewable => 30.0,
             UseGrid::Coal => 820.0,
-            UseGrid::Custom(v) => v as f64,
+            UseGrid::Custom(bits) => f64::from_bits(bits),
         }
     }
 
@@ -89,6 +102,35 @@ mod tests {
 
     #[test]
     fn custom_grid_passthrough() {
-        assert_eq!(UseGrid::Custom(123).g_per_kwh(), 123.0);
+        assert_eq!(UseGrid::custom(123.0).g_per_kwh(), 123.0);
+    }
+
+    #[test]
+    fn custom_grid_keeps_fractional_intensities() {
+        // Regression: `Custom(u32)` truncated to whole g/kWh; the
+        // bits-carrying variant round-trips any finite f64 exactly.
+        for v in [123.456, 31.07, 817.25, 0.0] {
+            assert_eq!(UseGrid::custom(v).g_per_kwh(), v);
+            assert_eq!(UseGrid::custom(v).g_per_joule(), v / 3.6e6);
+        }
+    }
+
+    #[test]
+    fn custom_grid_stays_hashable_and_comparable() {
+        use std::collections::HashSet;
+        let mut set = HashSet::new();
+        set.insert(UseGrid::custom(123.456));
+        set.insert(UseGrid::custom(123.456));
+        set.insert(UseGrid::custom(123.457));
+        set.insert(UseGrid::WorldAverage);
+        assert_eq!(set.len(), 3);
+        assert_eq!(UseGrid::custom(99.5), UseGrid::custom(99.5));
+        assert_ne!(UseGrid::custom(99.5), UseGrid::custom(99.6));
+    }
+
+    #[test]
+    #[should_panic(expected = "non-negative and finite")]
+    fn custom_grid_rejects_nan() {
+        UseGrid::custom(f64::NAN);
     }
 }

@@ -23,6 +23,11 @@
 //! * [`overlay`] — phase B of the two-phase evaluation pipeline: applies
 //!   the scenario knobs `(ci_use, lifetime, β, qos, p_max, online)` to a
 //!   scenario-invariant design profile, bit-identical to the fused path;
+//! * [`trace`] — time-varying `CI_use`: piecewise-constant diurnal /
+//!   seasonal / marginal traces with named grid presets, fleet-mix
+//!   weighting across regional cohorts, and the f32 segment combiner
+//!   that keeps trace results bit-identical to per-segment fused
+//!   evaluation;
 //! * [`replacement`] — the hardware-replacement-frequency model behind
 //!   Fig 14.
 
@@ -33,6 +38,7 @@ pub mod operational;
 pub mod overlay;
 pub mod process;
 pub mod replacement;
+pub mod trace;
 pub mod yield_model;
 
 pub use embodied::{embodied_carbon, ChipDesign, Die};
@@ -40,5 +46,6 @@ pub use intensity::{FabGrid, UseGrid};
 pub use metrics::{beta_regime, BetaRegime, MetricInputs, MetricKind, MetricSet};
 pub use operational::{amortized_embodied, operational_carbon};
 pub use overlay::ScenarioOverlay;
+pub use trace::{combine_segments, CiSegment, CiTrace, FleetCohort, FleetMix};
 pub use process::{ProcessNode, ProcessParams};
 pub use yield_model::{gross_die_per_wafer, YieldModel};

@@ -1,0 +1,489 @@
+//! Time-varying use-phase carbon intensity: piecewise-constant traces
+//! and fleet-mix scenarios.
+//!
+//! The paper evaluates operational carbon at a single `CI_use`, but grid
+//! intensity varies by hour (solar troughs, evening peaks), by season and
+//! by accounting convention (average vs. marginal). Because operational
+//! carbon is *linear* in `CI_use` (`C_op = CI_use × E`), a piecewise-
+//! constant [`CiTrace`] lowers exactly onto the existing scenario
+//! machinery: evaluate the space once per segment intensity (phase B
+//! overlays only — the scenario-invariant profiles are reused across all
+//! segments) and combine the per-segment results with the segments'
+//! time weights. [`combine_segments`] performs that combination in the
+//! fused graph's f32 arithmetic, in segment order, so a trace scenario's
+//! host result is bit-identical to combining per-segment *fused*
+//! evaluations — the same invariant the two-phase sweep already locks
+//! per scenario (see DESIGN.md §3.4 for the full contract).
+//!
+//! [`FleetMix`] extends the same linearity across device populations:
+//! cohorts of devices operating under different regional traces weight
+//! into one equivalent trace, with shares grounded in the synthetic
+//! fleet telemetry (`workloads::fleet::regional_usage_shares`).
+
+use crate::matrixform::{EvalResult, MetricRow};
+
+/// Joules per kWh (the runtime consumes g/J; sources quote g/kWh).
+const J_PER_KWH: f64 = 3.6e6;
+
+/// One piecewise-constant segment of a carbon-intensity trace.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct CiSegment {
+    /// Segment duration, s (only the *relative* duration matters — the
+    /// trace normalizes durations into time weights).
+    pub duration_s: f64,
+    /// Grid carbon intensity over the segment, gCO₂/kWh.
+    pub g_per_kwh: f64,
+}
+
+/// A periodic carbon-intensity trace: piecewise-constant gCO₂/kWh
+/// samples over one period (a day, a year). Construction validates that
+/// every segment has positive finite duration and non-negative finite
+/// intensity, so downstream weights are always well-formed.
+#[derive(Debug, Clone, PartialEq)]
+pub struct CiTrace {
+    segments: Vec<CiSegment>,
+}
+
+impl CiTrace {
+    /// New trace from validated segments. Panics on an empty segment
+    /// list, non-positive/non-finite durations or negative/non-finite
+    /// intensities.
+    pub fn new(segments: Vec<CiSegment>) -> Self {
+        assert!(!segments.is_empty(), "carbon-intensity trace needs at least one segment");
+        for (i, s) in segments.iter().enumerate() {
+            assert!(
+                s.duration_s.is_finite() && s.duration_s > 0.0,
+                "trace segment {i}: duration must be positive and finite (got {})",
+                s.duration_s
+            );
+            assert!(
+                s.g_per_kwh.is_finite() && s.g_per_kwh >= 0.0,
+                "trace segment {i}: intensity must be non-negative and finite (got {})",
+                s.g_per_kwh
+            );
+        }
+        CiTrace { segments }
+    }
+
+    /// Single-segment trace at a constant intensity (the static
+    /// reference point of a trace axis).
+    pub fn flat(g_per_kwh: f64) -> Self {
+        CiTrace::new(vec![CiSegment { duration_s: 24.0 * 3600.0, g_per_kwh }])
+    }
+
+    /// One segment per entry, each one hour long (diurnal traces).
+    pub fn hourly(g_per_kwh: &[f64]) -> Self {
+        CiTrace::new(
+            g_per_kwh.iter().map(|&g| CiSegment { duration_s: 3600.0, g_per_kwh: g }).collect(),
+        )
+    }
+
+    /// 24-hour sinusoidal diurnal shape: `base × (1 + swing·cos(2π(h −
+    /// peak_hour)/24))`, sampled hourly. `swing` must stay below 1 so
+    /// intensities remain positive.
+    pub fn diurnal(base_g_per_kwh: f64, swing: f64, peak_hour: f64) -> Self {
+        assert!((0.0..1.0).contains(&swing), "diurnal swing must be in [0,1)");
+        let samples: Vec<f64> = (0..24)
+            .map(|h| {
+                let phase = 2.0 * std::f64::consts::PI * (h as f64 - peak_hour) / 24.0;
+                base_g_per_kwh * (1.0 + swing * phase.cos())
+            })
+            .collect();
+        CiTrace::hourly(&samples)
+    }
+
+    /// The trace's segments.
+    pub fn segments(&self) -> &[CiSegment] {
+        &self.segments
+    }
+
+    /// Number of segments.
+    pub fn len(&self) -> usize {
+        self.segments.len()
+    }
+
+    /// A trace is never empty (enforced by [`CiTrace::new`]).
+    pub fn is_empty(&self) -> bool {
+        false
+    }
+
+    /// Total period, s.
+    pub fn period_s(&self) -> f64 {
+        self.segments.iter().map(|s| s.duration_s).sum()
+    }
+
+    /// Normalized per-segment time weights, as the f32 values
+    /// [`combine_segments`] consumes (computed in f64, cast once).
+    pub fn weights(&self) -> Vec<f32> {
+        let period = self.period_s();
+        self.segments.iter().map(|s| (s.duration_s / period) as f32).collect()
+    }
+
+    /// Time-weighted mean intensity, g/kWh (the trace's static collapse).
+    pub fn mean_g_per_kwh(&self) -> f64 {
+        let period = self.period_s();
+        self.segments.iter().map(|s| s.duration_s * s.g_per_kwh).sum::<f64>() / period
+    }
+
+    /// Lowest segment intensity, g/kWh.
+    pub fn min_g_per_kwh(&self) -> f64 {
+        self.segments.iter().map(|s| s.g_per_kwh).fold(f64::INFINITY, f64::min)
+    }
+
+    /// Highest segment intensity, g/kWh.
+    pub fn max_g_per_kwh(&self) -> f64 {
+        self.segments.iter().map(|s| s.g_per_kwh).fold(0.0, f64::max)
+    }
+
+    /// Time-weighted mean intensity in g/J (the base-request unit).
+    pub fn mean_g_per_j(&self) -> f64 {
+        self.mean_g_per_kwh() / J_PER_KWH
+    }
+
+    /// A segment's intensity in g/J.
+    pub fn segment_g_per_j(&self, i: usize) -> f64 {
+        self.segments[i].g_per_kwh / J_PER_KWH
+    }
+
+    /// Diurnal preset for a solar-heavy renewable grid: deep midday
+    /// trough, steep evening peak as the sun drops off the mix.
+    pub fn diurnal_renewable() -> Self {
+        CiTrace::diurnal(180.0, 0.65, 19.0)
+    }
+
+    /// Diurnal preset for the world-average grid (moderate swing,
+    /// evening peak).
+    pub fn diurnal_world() -> Self {
+        CiTrace::diurnal(440.0, 0.25, 19.0)
+    }
+
+    /// Diurnal preset for a coal-dominated grid: baseload generation
+    /// barely follows demand, so the swing is small and the base high.
+    pub fn diurnal_coal() -> Self {
+        CiTrace::diurnal(760.0, 0.08, 19.0)
+    }
+
+    /// Seasonal preset: twelve 30-day segments, winter-peaking around
+    /// the world average (heating load leans on fossil generation).
+    pub fn seasonal_world() -> Self {
+        let segments = (0..12)
+            .map(|m| {
+                let phase = 2.0 * std::f64::consts::PI * m as f64 / 12.0;
+                CiSegment {
+                    duration_s: 30.0 * 24.0 * 3600.0,
+                    g_per_kwh: 440.0 * (1.0 + 0.18 * phase.cos()),
+                }
+            })
+            .collect();
+        CiTrace::new(segments)
+    }
+
+    /// Marginal-intensity preset: the *marginal* generator displaced by
+    /// an extra watt is usually a gas peaker, so marginal intensity sits
+    /// well above the world *average* with a modest evening swing —
+    /// the average-vs-marginal accounting variant.
+    pub fn marginal_world() -> Self {
+        CiTrace::diurnal(650.0, 0.15, 20.0)
+    }
+
+    /// Names accepted by [`CiTrace::by_name`] (the CLI `--trace` values).
+    pub fn preset_names() -> &'static [&'static str] {
+        &[
+            "diurnal-renewable",
+            "diurnal-world",
+            "diurnal-coal",
+            "seasonal-world",
+            "marginal-world",
+            "flat-world",
+            "flat-renewable",
+            "flat-coal",
+        ]
+    }
+
+    /// Look up a named preset.
+    pub fn by_name(name: &str) -> Option<CiTrace> {
+        Some(match name {
+            "diurnal-renewable" => CiTrace::diurnal_renewable(),
+            "diurnal-world" => CiTrace::diurnal_world(),
+            "diurnal-coal" => CiTrace::diurnal_coal(),
+            "seasonal-world" => CiTrace::seasonal_world(),
+            "marginal-world" => CiTrace::marginal_world(),
+            "flat-world" => CiTrace::flat(440.0),
+            "flat-renewable" => CiTrace::flat(30.0),
+            "flat-coal" => CiTrace::flat(820.0),
+            _ => return None,
+        })
+    }
+}
+
+/// One cohort of a device fleet: a population share operating under a
+/// regional carbon-intensity trace.
+#[derive(Debug, Clone, PartialEq)]
+pub struct FleetCohort {
+    /// Cohort label ("us", "eu-renewable").
+    pub label: String,
+    /// Population share (relative weight; [`FleetMix::flatten`]
+    /// normalizes).
+    pub share: f64,
+    /// The cohort's regional trace.
+    pub trace: CiTrace,
+}
+
+/// A fleet mix: device cohorts under different regional traces. Because
+/// operational carbon is linear in `CI_use`, the expected per-device
+/// fleet carbon equals evaluation under one *equivalent* trace whose
+/// segment weights are the share-scaled cohort weights —
+/// [`FleetMix::flatten`] builds exactly that trace.
+#[derive(Debug, Clone, PartialEq)]
+pub struct FleetMix {
+    /// The cohorts (non-empty, positive shares).
+    pub cohorts: Vec<FleetCohort>,
+}
+
+impl FleetMix {
+    /// New mix over validated cohorts.
+    pub fn new(cohorts: Vec<FleetCohort>) -> Self {
+        assert!(!cohorts.is_empty(), "fleet mix needs at least one cohort");
+        for c in &cohorts {
+            assert!(
+                c.share.is_finite() && c.share > 0.0,
+                "fleet cohort '{}': share must be positive and finite (got {})",
+                c.label,
+                c.share
+            );
+        }
+        FleetMix { cohorts }
+    }
+
+    /// Collapse the mix into one equivalent trace: each cohort's
+    /// segments enter with duration `share × (segment / cohort period)`,
+    /// so the flattened weights are exactly the share-scaled cohort time
+    /// weights (durations become dimensionless fractions — only the
+    /// weights matter downstream).
+    pub fn flatten(&self) -> CiTrace {
+        let total: f64 = self.cohorts.iter().map(|c| c.share).sum();
+        let mut segments = Vec::new();
+        for c in &self.cohorts {
+            let period = c.trace.period_s();
+            for s in c.trace.segments() {
+                segments.push(CiSegment {
+                    duration_s: (c.share / total) * (s.duration_s / period),
+                    g_per_kwh: s.g_per_kwh,
+                });
+            }
+        }
+        CiTrace::new(segments)
+    }
+}
+
+/// Metric rows that depend on `ci_use` (the operational-carbon family:
+/// `C_op = ci·E`, `C_total = C_op + C_emb`, `tCDP = (C_op + β·C_emb)·D`).
+/// Every other row — and `d_task` — is bitwise identical across a
+/// trace's segments, because only the overlay's `ci_use` knob varies.
+const CI_DEPENDENT_ROWS: [MetricRow; 3] = [MetricRow::COp, MetricRow::CTotal, MetricRow::Tcdp];
+
+/// Combine per-segment evaluation results into the trace's time-weighted
+/// result, in the fused graph's exact f32 order: for each ci-dependent
+/// row and config, accumulate `acc += wₛ · vₛ` in f32, segments in trace
+/// order (segment values round-trip f64↔f32 exactly — they were produced
+/// in f32). All ci-independent rows, `d_task` and names are taken
+/// verbatim from segment 0. This is the *only* cross-segment combiner in
+/// the codebase; every sweep path lowers traces through it, which is
+/// what makes trace results bit-identical across the two-phase, fused
+/// and sequential paths.
+pub fn combine_segments(segments: &[EvalResult], weights: &[f32]) -> EvalResult {
+    assert!(!segments.is_empty(), "combine_segments: no segment results");
+    assert_eq!(
+        segments.len(),
+        weights.len(),
+        "combine_segments: {} segment(s) vs {} weight(s)",
+        segments.len(),
+        weights.len()
+    );
+    let mut out = segments[0].clone();
+    for (i, s) in segments.iter().enumerate().skip(1) {
+        assert_eq!(s.c, out.c, "combine_segments: segment {i} has a different config count");
+        assert_eq!(s.t, out.t, "combine_segments: segment {i} has a different task count");
+        debug_assert_eq!(s.names, out.names, "combine_segments: segment {i} names differ");
+    }
+    for row in CI_DEPENDENT_ROWS {
+        let r = row as usize;
+        for ci in 0..out.c {
+            let mut acc = 0.0f32;
+            for (s, &w) in segments.iter().zip(weights) {
+                acc += w * s.metrics[r * s.c + ci] as f32;
+            }
+            out.metrics[r * out.c + ci] = acc as f64;
+        }
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn diurnal_presets_have_24_hourly_segments() {
+        for t in [CiTrace::diurnal_renewable(), CiTrace::diurnal_world(), CiTrace::diurnal_coal()] {
+            assert_eq!(t.len(), 24);
+            assert!((t.period_s() - 24.0 * 3600.0).abs() < 1e-6);
+            assert!(t.min_g_per_kwh() > 0.0);
+            let w: f32 = t.weights().iter().sum();
+            assert!((w - 1.0).abs() < 1e-5, "weights sum to {w}");
+        }
+        assert_eq!(CiTrace::seasonal_world().len(), 12);
+    }
+
+    #[test]
+    fn renewable_grid_has_the_deep_trough_and_the_low_mean() {
+        let r = CiTrace::diurnal_renewable();
+        let c = CiTrace::diurnal_coal();
+        let w = CiTrace::diurnal_world();
+        // Solar trough well below 100 g/kWh; coal barely moves.
+        assert!(r.min_g_per_kwh() < 100.0, "renewable min {}", r.min_g_per_kwh());
+        assert!(c.min_g_per_kwh() > 600.0, "coal min {}", c.min_g_per_kwh());
+        assert!(r.mean_g_per_kwh() < w.mean_g_per_kwh());
+        assert!(w.mean_g_per_kwh() < c.mean_g_per_kwh());
+        // Swing ratio: renewable ~4.7x, coal ~1.17x.
+        assert!(r.max_g_per_kwh() / r.min_g_per_kwh() > 3.0);
+        assert!(c.max_g_per_kwh() / c.min_g_per_kwh() < 1.3);
+    }
+
+    #[test]
+    fn diurnal_mean_is_the_base_intensity() {
+        // Σ cos(2π(h−p)/24) over a full period is 0, so the hourly mean
+        // is the base.
+        let t = CiTrace::diurnal(500.0, 0.4, 19.0);
+        assert!((t.mean_g_per_kwh() - 500.0).abs() < 1e-9);
+        assert!((t.mean_g_per_j() * 3.6e6 - 500.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn every_preset_name_resolves() {
+        for name in CiTrace::preset_names() {
+            assert!(CiTrace::by_name(name).is_some(), "preset '{name}' missing");
+        }
+        assert!(CiTrace::by_name("no-such-trace").is_none());
+    }
+
+    #[test]
+    #[should_panic(expected = "duration must be positive")]
+    fn zero_duration_segment_rejected() {
+        CiTrace::new(vec![CiSegment { duration_s: 0.0, g_per_kwh: 100.0 }]);
+    }
+
+    #[test]
+    #[should_panic(expected = "at least one segment")]
+    fn empty_trace_rejected() {
+        CiTrace::new(Vec::new());
+    }
+
+    fn result(c_op: &[f64]) -> EvalResult {
+        // 2-config, 1-task result with distinguishable rows; only the
+        // ci-dependent rows vary across "segments".
+        let c = c_op.len();
+        let mut metrics = vec![0.0; 12 * c];
+        for ci in 0..c {
+            metrics[MetricRow::Energy as usize * c + ci] = 10.0 + ci as f64;
+            metrics[MetricRow::Delay as usize * c + ci] = 0.5;
+            metrics[MetricRow::COp as usize * c + ci] = c_op[ci];
+            metrics[MetricRow::CEmb as usize * c + ci] = 3.0;
+            metrics[MetricRow::CTotal as usize * c + ci] = c_op[ci] + 3.0;
+            metrics[MetricRow::Tcdp as usize * c + ci] = (c_op[ci] + 3.0) * 0.5;
+            metrics[MetricRow::Edp as usize * c + ci] = 7.0;
+            metrics[MetricRow::Feasible as usize * c + ci] = 1.0;
+        }
+        EvalResult {
+            names: (0..c).map(|i| format!("c{i}")).collect(),
+            metrics,
+            d_task: vec![0.5; c],
+            c,
+            t: 1,
+        }
+    }
+
+    #[test]
+    fn combine_weights_ci_rows_and_copies_the_rest() {
+        let a = result(&[2.0, 4.0]);
+        let b = result(&[6.0, 8.0]);
+        let out = combine_segments(&[a.clone(), b], &[0.25, 0.75]);
+        // f32 weighted sum, exact for these values.
+        assert_eq!(out.metric(MetricRow::COp, 0), (0.25f32 * 2.0 + 0.75 * 6.0) as f64);
+        assert_eq!(out.metric(MetricRow::COp, 1), (0.25f32 * 4.0 + 0.75 * 8.0) as f64);
+        assert_eq!(out.metric(MetricRow::CTotal, 0), (0.25f32 * 5.0 + 0.75 * 9.0) as f64);
+        // ci-independent rows come from segment 0, bitwise.
+        assert_eq!(out.metric(MetricRow::Energy, 1), a.metric(MetricRow::Energy, 1));
+        assert_eq!(out.metric(MetricRow::Edp, 0), 7.0);
+        assert_eq!(out.d_task, a.d_task);
+        assert_eq!(out.names, a.names);
+    }
+
+    #[test]
+    fn single_segment_combine_is_the_identity() {
+        let a = result(&[2.5, 4.5]);
+        let out = combine_segments(std::slice::from_ref(&a), &[1.0]);
+        assert_eq!(out.metrics, a.metrics);
+        assert_eq!(out.d_task, a.d_task);
+    }
+
+    #[test]
+    fn combine_order_is_segment_major() {
+        // f32 addition is not associative: the contract fixes the
+        // accumulation order to trace order, so a permuted segment list
+        // may differ in the last ulp. Assert the canonical order result.
+        let segs = [result(&[1.0e-3]), result(&[7.7e2]), result(&[3.3e-1])];
+        let w = [0.3f32, 0.4, 0.3];
+        let expect = ((0.3f32 * 1.0e-3f32 + 0.4f32 * 7.7e2f32) + 0.3f32 * 3.3e-1f32) as f64;
+        let out = combine_segments(&segs, &w);
+        assert_eq!(out.metric(MetricRow::COp, 0), expect);
+    }
+
+    #[test]
+    #[should_panic(expected = "different config count")]
+    fn combine_rejects_mismatched_shapes() {
+        combine_segments(&[result(&[1.0]), result(&[1.0, 2.0])], &[0.5, 0.5]);
+    }
+
+    #[test]
+    fn fleet_mix_flattens_to_share_weighted_trace() {
+        let mix = FleetMix::new(vec![
+            FleetCohort { label: "renewable".into(), share: 1.0, trace: CiTrace::flat(30.0) },
+            FleetCohort { label: "coal".into(), share: 3.0, trace: CiTrace::flat(820.0) },
+        ]);
+        let t = mix.flatten();
+        assert_eq!(t.len(), 2);
+        let w: f32 = t.weights().iter().sum();
+        assert!((w - 1.0).abs() < 1e-6);
+        // Mean = 0.25·30 + 0.75·820.
+        assert!((t.mean_g_per_kwh() - (0.25 * 30.0 + 0.75 * 820.0)).abs() < 1e-9);
+    }
+
+    #[test]
+    fn fleet_mix_preserves_cohort_diurnal_structure() {
+        let mix = FleetMix::new(vec![
+            FleetCohort {
+                label: "a".into(),
+                share: 0.5,
+                trace: CiTrace::diurnal_renewable(),
+            },
+            FleetCohort { label: "b".into(), share: 0.5, trace: CiTrace::diurnal_coal() },
+        ]);
+        let t = mix.flatten();
+        assert_eq!(t.len(), 48);
+        let lo = CiTrace::diurnal_renewable().mean_g_per_kwh();
+        let hi = CiTrace::diurnal_coal().mean_g_per_kwh();
+        let m = t.mean_g_per_kwh();
+        assert!(lo < m && m < hi, "{lo} < {m} < {hi}");
+    }
+
+    #[test]
+    #[should_panic(expected = "share must be positive")]
+    fn fleet_mix_rejects_zero_share() {
+        FleetMix::new(vec![FleetCohort {
+            label: "x".into(),
+            share: 0.0,
+            trace: CiTrace::flat(100.0),
+        }]);
+    }
+}

@@ -44,6 +44,7 @@ const VALUED: &[&str] = &[
     "cluster", "metric", "out", "artifacts", "engine", "seed", "beta", "ratio",
     "lifetime", "hours", "devices", "days", "workload", "cores", "csv-dir",
     "threads", "preset", "space", "max-evals", "cache-dir", "cache-budget", "resume",
+    "trace",
 ];
 
 /// Flag names (no value). Anything after `--` that is in neither list is
@@ -202,6 +203,13 @@ mod tests {
         // …and single-dash values (negative numbers) still parse.
         let a = Args::parse(vec!["x".into(), "--beta".into(), "-1.5".into()]).unwrap();
         assert_eq!(a.get_f64("beta", 0.0).unwrap(), -1.5);
+    }
+
+    #[test]
+    fn trace_option_is_registered() {
+        let a = parse("sweep --preset trace --trace diurnal-renewable");
+        assert_eq!(a.get("preset", "fig7"), "trace");
+        assert_eq!(a.get("trace", ""), "diurnal-renewable");
     }
 
     #[test]

@@ -14,8 +14,17 @@
 //! [`ScenarioGrid::lifetime_decades`] (the Fig 10 operational-lifetime
 //! axis) and [`ScenarioGrid::fig11`] (provisioning lifetimes × QoS
 //! on/off), plus [`ScenarioGrid::use_grids`] for CI diversity.
+//!
+//! Since PR 6 a grid also carries a **trace axis** ([`TracePoint`]): a
+//! scenario may hold a time-varying [`CiTrace`] instead of a static CI.
+//! The sweep coordinator expands such a scenario via
+//! [`SweepScenario::lower`] into one per-segment scenario per trace
+//! segment (each a plain `ci_use` override) and recombines the
+//! per-segment results with `carbon::combine_segments` — see DESIGN.md
+//! §3.4. The trace axis nests innermost, so grids without traces
+//! enumerate exactly as before.
 
-use crate::carbon::UseGrid;
+use crate::carbon::{CiTrace, UseGrid};
 use crate::matrixform::{ConfigRow, EvalRequest, TaskMatrix};
 
 use super::scenario::lifetime_for_ratio;
@@ -39,6 +48,15 @@ impl AxisPoint {
     }
 }
 
+/// One labeled point on the trace axis: a named time-varying CI trace.
+#[derive(Debug, Clone)]
+pub struct TracePoint {
+    /// Short label, unique within the axis ("trace=diurnal-world").
+    pub label: String,
+    /// The carbon-intensity trace.
+    pub trace: CiTrace,
+}
+
 /// One scenario of a sweep: the per-axis overrides to apply to a base
 /// request. `None` means "inherit the base request's value".
 #[derive(Debug, Clone)]
@@ -56,22 +74,37 @@ pub struct SweepScenario {
     pub beta: Option<f64>,
     /// Average-power-cap override, W.
     pub p_max_w: Option<f64>,
+    /// Time-varying CI trace. When set, the sweep paths evaluate through
+    /// [`SweepScenario::lower`] — one per-segment `ci_use` override per
+    /// trace segment, recombined by time weight — and the trace
+    /// supersedes any static `ci_use_g_per_j` override on this scenario.
+    pub trace: Option<CiTrace>,
 }
 
 impl SweepScenario {
     /// Rewrite a base request under this scenario. The design space
-    /// (tasks, configs, online mask) is untouched.
+    /// (tasks, configs, online mask) is untouched. A trace-carrying
+    /// scenario collapses to its time-weighted mean CI here — the sweep
+    /// paths never call `apply` on one directly (they lower it first);
+    /// this fallback keeps external callers sensible.
     pub fn apply(&self, base: &EvalRequest) -> EvalRequest {
         let mut req = base.clone();
         if let Some(v) = self.ci_use_g_per_j {
             req.ci_use_g_per_j = v;
+        }
+        if let Some(tr) = &self.trace {
+            req.ci_use_g_per_j = tr.mean_g_per_j();
         }
         if let Some(v) = self.lifetime_s {
             req.lifetime_s = v;
         }
         if let Some(s) = self.qos_scale {
             for q in req.qos.iter_mut() {
-                *q *= s;
+                // `qos=off` is scale ∞; a base bound of 0.0 would make
+                // `0.0 × ∞ = NaN`, which the overlay feasibility check
+                // treats as violated — set the bound directly instead
+                // of multiplying.
+                *q = if s.is_infinite() { f64::INFINITY } else { *q * s };
             }
         }
         if let Some(v) = self.beta {
@@ -81,6 +114,46 @@ impl SweepScenario {
             req.p_max_w = v;
         }
         req
+    }
+
+    /// Expand this scenario into its evaluation sequence: `(per-segment
+    /// scenario, time weight)` pairs, one per trace segment, each a
+    /// plain static scenario with the segment's intensity as its
+    /// `ci_use` override. A traceless scenario lowers to itself with
+    /// weight 1. Weights are the f32 values `carbon::combine_segments`
+    /// consumes, in trace-segment order.
+    pub fn lower(&self) -> Vec<(SweepScenario, f32)> {
+        match &self.trace {
+            None => vec![(self.clone(), 1.0)],
+            Some(tr) => {
+                let weights = tr.weights();
+                (0..tr.len())
+                    .map(|i| {
+                        let mut sc = self.clone();
+                        sc.ci_use_g_per_j = Some(tr.segment_g_per_j(i));
+                        sc.trace = None;
+                        (sc, weights[i])
+                    })
+                    .collect()
+            }
+        }
+    }
+
+    /// Number of per-segment evaluations [`Self::lower`] produces.
+    pub fn lowered_len(&self) -> usize {
+        self.trace.as_ref().map_or(1, CiTrace::len)
+    }
+
+    /// The static collapse of a trace scenario: same knobs, trace
+    /// replaced by its time-weighted mean intensity. Identity for
+    /// traceless scenarios. The sweep reports the trace-vs-static delta
+    /// against this scenario's outcome.
+    pub fn static_collapse(&self) -> SweepScenario {
+        let mut sc = self.clone();
+        if let Some(tr) = sc.trace.take() {
+            sc.ci_use_g_per_j = Some(tr.mean_g_per_j());
+        }
+        sc
     }
 }
 
@@ -97,6 +170,8 @@ pub struct ScenarioGrid {
     pub beta: Vec<AxisPoint>,
     /// Average-power-cap axis, W.
     pub p_max: Vec<AxisPoint>,
+    /// Time-varying CI trace axis (nests innermost in enumeration).
+    pub trace: Vec<TracePoint>,
 }
 
 /// Expand an axis into its iteration points (a single inherited point
@@ -106,6 +181,29 @@ fn points(axis: &[AxisPoint]) -> Vec<Option<&AxisPoint>> {
         vec![None]
     } else {
         axis.iter().map(Some).collect()
+    }
+}
+
+/// Suffix `label` (`#2`, `#3`, …) until `taken` no longer claims it.
+fn dedupe_label(label: String, taken: impl Fn(&str) -> bool) -> String {
+    if !taken(&label) {
+        return label;
+    }
+    let mut k = 2usize;
+    loop {
+        let candidate = format!("{label}#{k}");
+        if !taken(&candidate) {
+            return candidate;
+        }
+        k += 1;
+    }
+}
+
+/// Append `incoming` points to `axis`, renaming label collisions.
+fn extend_axis(axis: &mut Vec<AxisPoint>, incoming: Vec<AxisPoint>) {
+    for mut p in incoming {
+        p.label = dedupe_label(p.label, |l| axis.iter().any(|q| q.label == l));
+        axis.push(p);
     }
 }
 
@@ -145,14 +243,28 @@ impl ScenarioGrid {
         self
     }
 
+    /// Append a time-varying CI trace point.
+    pub fn with_trace(mut self, label: &str, trace: CiTrace) -> Self {
+        self.trace.push(TracePoint { label: label.to_string(), trace });
+        self
+    }
+
     /// Concatenate another grid's axes onto this one (axis-wise union —
     /// the cross-product cardinalities multiply for disjoint axes).
+    /// Incoming labels that collide with existing ones on the same axis
+    /// are suffixed (`"label#2"`, `"label#3"`, …) so crossed grids keep
+    /// unique scenario labels — report tables and checkpoint digests key
+    /// on them.
     pub fn cross(mut self, other: ScenarioGrid) -> Self {
-        self.ci.extend(other.ci);
-        self.lifetime.extend(other.lifetime);
-        self.qos_scale.extend(other.qos_scale);
-        self.beta.extend(other.beta);
-        self.p_max.extend(other.p_max);
+        extend_axis(&mut self.ci, other.ci);
+        extend_axis(&mut self.lifetime, other.lifetime);
+        extend_axis(&mut self.qos_scale, other.qos_scale);
+        extend_axis(&mut self.beta, other.beta);
+        extend_axis(&mut self.p_max, other.p_max);
+        for mut p in other.trace {
+            p.label = dedupe_label(p.label, |l| self.trace.iter().any(|q| q.label == l));
+            self.trace.push(p);
+        }
         self
     }
 
@@ -162,35 +274,49 @@ impl ScenarioGrid {
         [&self.ci, &self.lifetime, &self.qos_scale, &self.beta, &self.p_max]
             .iter()
             .map(|axis| axis.len().max(1))
-            .product()
+            .product::<usize>()
+            * self.trace.len().max(1)
     }
 
     /// Enumerate every scenario, axis-major in declaration order (ci ▸
-    /// lifetime ▸ qos ▸ β ▸ p_max), matching [`Self::cardinality`].
+    /// lifetime ▸ qos ▸ β ▸ p_max ▸ trace), matching
+    /// [`Self::cardinality`]. The trace axis is innermost so grids
+    /// without traces enumerate exactly as before PR 6.
     pub fn scenarios(&self) -> Vec<SweepScenario> {
+        let trace_points: Vec<Option<&TracePoint>> = if self.trace.is_empty() {
+            vec![None]
+        } else {
+            self.trace.iter().map(Some).collect()
+        };
         let mut out = Vec::with_capacity(self.cardinality());
         for ci in points(&self.ci) {
             for lt in points(&self.lifetime) {
                 for qs in points(&self.qos_scale) {
                     for beta in points(&self.beta) {
                         for pm in points(&self.p_max) {
-                            let parts: Vec<&str> = [ci, lt, qs, beta, pm]
-                                .iter()
-                                .filter_map(|p| p.map(|a| a.label.as_str()))
-                                .collect();
-                            let label = if parts.is_empty() {
-                                "base".to_string()
-                            } else {
-                                parts.join(" | ")
-                            };
-                            out.push(SweepScenario {
-                                label,
-                                ci_use_g_per_j: ci.map(|a| a.value),
-                                lifetime_s: lt.map(|a| a.value),
-                                qos_scale: qs.map(|a| a.value),
-                                beta: beta.map(|a| a.value),
-                                p_max_w: pm.map(|a| a.value),
-                            });
+                            for tr in &trace_points {
+                                let mut parts: Vec<&str> = [ci, lt, qs, beta, pm]
+                                    .iter()
+                                    .filter_map(|p| p.map(|a| a.label.as_str()))
+                                    .collect();
+                                if let Some(tp) = tr {
+                                    parts.push(tp.label.as_str());
+                                }
+                                let label = if parts.is_empty() {
+                                    "base".to_string()
+                                } else {
+                                    parts.join(" | ")
+                                };
+                                out.push(SweepScenario {
+                                    label,
+                                    ci_use_g_per_j: ci.map(|a| a.value),
+                                    lifetime_s: lt.map(|a| a.value),
+                                    qos_scale: qs.map(|a| a.value),
+                                    beta: beta.map(|a| a.value),
+                                    p_max_w: pm.map(|a| a.value),
+                                    trace: tr.map(|tp| tp.trace.clone()),
+                                });
+                            }
                         }
                     }
                 }
@@ -232,6 +358,27 @@ impl ScenarioGrid {
             g = g.with_lifetime(&format!("{years}y"), years as f64 * YEAR_S);
         }
         g.with_qos_scale("qos=on", 1.0).with_qos_scale("qos=off", f64::INFINITY)
+    }
+
+    /// Trace-diversity preset: the named diurnal/seasonal/marginal
+    /// traces plus the static world-average reference (`flat-world`) as
+    /// a same-grid comparison point.
+    pub fn traces() -> Self {
+        let mut g = ScenarioGrid::new();
+        for name in [
+            "diurnal-renewable",
+            "diurnal-world",
+            "diurnal-coal",
+            "seasonal-world",
+            "marginal-world",
+            "flat-world",
+        ] {
+            g = g.with_trace(
+                &format!("trace={name}"),
+                CiTrace::by_name(name).expect("named trace preset"),
+            );
+        }
+        g
     }
 
     /// CI-diversity preset: the named use-phase grids.
@@ -356,6 +503,117 @@ mod tests {
         assert!(g.lifetime[0].value < g.lifetime[1].value);
         assert!(g.lifetime[1].value < g.lifetime[2].value);
         assert!(g.lifetime.iter().all(|p| p.value > 0.0));
+    }
+
+    #[test]
+    fn qos_off_with_zero_base_bound_disables_instead_of_nan() {
+        // Regression (fig11 preset with a degenerate zero bound):
+        // `0.0 × ∞ = NaN`, and the overlay treats a NaN bound as
+        // violated — "QoS off" silently became "always infeasible".
+        let mut base = base_request();
+        base.qos = vec![0.0];
+        let off: Vec<SweepScenario> = ScenarioGrid::fig11()
+            .scenarios()
+            .into_iter()
+            .filter(|s| s.label.contains("qos=off"))
+            .collect();
+        assert_eq!(off.len(), 3);
+        for sc in off {
+            let req = sc.apply(&base);
+            assert_eq!(req.qos[0], f64::INFINITY, "{}: bound must be disabled, not NaN", sc.label);
+        }
+        // Finite scales still multiply (0.0 stays 0.0).
+        let on = ScenarioGrid::new().with_qos_scale("qos=on", 1.0).scenarios();
+        assert_eq!(on[0].apply(&base).qos[0], 0.0);
+    }
+
+    #[test]
+    fn trace_axis_nests_innermost_and_counts() {
+        let g = ScenarioGrid::new()
+            .with_lifetime("1y", YEAR_S)
+            .with_lifetime("3y", 3.0 * YEAR_S)
+            .with_trace("trace=flat", CiTrace::flat(440.0))
+            .with_trace("trace=diurnal", CiTrace::diurnal_world());
+        assert_eq!(g.cardinality(), 4);
+        let sc = g.scenarios();
+        assert_eq!(sc.len(), 4);
+        assert_eq!(sc[0].label, "1y | trace=flat");
+        assert_eq!(sc[1].label, "1y | trace=diurnal");
+        assert_eq!(sc[2].label, "3y | trace=flat");
+        assert!(sc[1].trace.as_ref().is_some_and(|t| t.len() == 24));
+    }
+
+    #[test]
+    fn lower_expands_trace_to_per_segment_ci_overrides() {
+        let trace = CiTrace::diurnal_world();
+        let sc = SweepScenario {
+            label: "t".into(),
+            ci_use_g_per_j: Some(9.9e-4), // superseded by the trace
+            lifetime_s: Some(1e6),
+            qos_scale: None,
+            beta: None,
+            p_max_w: None,
+            trace: Some(trace.clone()),
+        };
+        let lowered = sc.lower();
+        assert_eq!(lowered.len(), 24);
+        assert_eq!(sc.lowered_len(), 24);
+        for (i, (seg, w)) in lowered.iter().enumerate() {
+            assert_eq!(seg.ci_use_g_per_j, Some(trace.segment_g_per_j(i)));
+            assert!(seg.trace.is_none());
+            assert_eq!(seg.lifetime_s, Some(1e6));
+            assert_eq!(*w, trace.weights()[i]);
+        }
+        // Static collapse folds the trace into its mean CI.
+        let st = sc.static_collapse();
+        assert!(st.trace.is_none());
+        assert_eq!(st.ci_use_g_per_j, Some(trace.mean_g_per_j()));
+        // A traceless scenario lowers to itself with weight 1.
+        let plain = ScenarioGrid::new().with_lifetime("1y", YEAR_S).scenarios().remove(0);
+        let l = plain.lower();
+        assert_eq!(l.len(), 1);
+        assert_eq!(l[0].1, 1.0);
+        assert_eq!(plain.static_collapse().label, plain.label);
+    }
+
+    #[test]
+    fn trace_apply_falls_back_to_mean_ci() {
+        let base = base_request();
+        let g = ScenarioGrid::new().with_trace("trace=diurnal", CiTrace::diurnal_world());
+        let req = g.scenarios()[0].apply(&base);
+        assert_eq!(req.ci_use_g_per_j, CiTrace::diurnal_world().mean_g_per_j());
+    }
+
+    #[test]
+    fn cross_renames_colliding_axis_labels() {
+        // Regression: crossing two grids sharing axis labels used to
+        // produce duplicate scenario labels that collide in report keys.
+        let a = ScenarioGrid::new()
+            .with_lifetime("1y", YEAR_S)
+            .with_trace("trace=flat", CiTrace::flat(440.0));
+        let b = ScenarioGrid::new()
+            .with_lifetime("1y", 2.0 * YEAR_S)
+            .with_lifetime("1y", 3.0 * YEAR_S)
+            .with_trace("trace=flat", CiTrace::flat(30.0));
+        let g = a.cross(b);
+        assert_eq!(g.cardinality(), 6);
+        let mut labels: Vec<String> = g.scenarios().into_iter().map(|s| s.label).collect();
+        assert_eq!(labels.len(), 6);
+        labels.sort_unstable();
+        labels.dedup();
+        assert_eq!(labels.len(), 6, "crossed labels must stay unique: {labels:?}");
+        assert_eq!(g.lifetime[1].label, "1y#2");
+        assert_eq!(g.lifetime[2].label, "1y#3");
+        assert_eq!(g.trace[1].label, "trace=flat#2");
+        // Values survive the rename.
+        assert_eq!(g.lifetime[2].value, 3.0 * YEAR_S);
+    }
+
+    #[test]
+    fn traces_preset_resolves_all_names() {
+        let g = ScenarioGrid::traces();
+        assert_eq!(g.cardinality(), 6);
+        assert!(g.scenarios().iter().all(|s| s.trace.is_some()));
     }
 
     #[test]

@@ -20,7 +20,10 @@
 //! * [`scenario`] — embodied-ratio ↔ operational-lifetime calibration
 //!   (the 98 %/65 %/25 % scenarios of Fig 7);
 //! * [`grid`]     — labeled scenario cross-products (CI × lifetime × QoS
-//!   × β × power cap) with presets for the Fig 7/10/11 sweeps;
+//!   × β × power cap × CI-trace) with presets for the Fig 7/10/11 sweeps
+//!   and the named time-varying trace axis (`ScenarioGrid::traces`);
+//!   trace scenarios lower into per-segment `ci_use` overrides
+//!   (`SweepScenario::lower`) recombined by `carbon::combine_segments`;
 //! * [`sweep`]    — the two-phase parallel multi-scenario coordinator:
 //!   profiles config chunks once across per-thread engines (phase A),
 //!   then fans cheap scenario overlays over the cached profiles (phase
@@ -60,7 +63,7 @@ pub mod sweep;
 pub use batching::{evaluate_chunked, profile_chunk_requests, profile_chunked};
 pub use cache::{CacheConfig, CacheKey, ProfileCache, PROFILE_SCHEMA};
 pub use explore::{explore, summarize, ExploreOutcome, ExploreStats};
-pub use grid::{AxisPoint, ScenarioGrid, SweepScenario};
+pub use grid::{AxisPoint, ScenarioGrid, SweepScenario, TracePoint};
 pub use pareto::{beta_sweep, pareto_front, BetaPoint};
 pub use profile::{profile_configs, profiles_to_rows};
 pub use scenario::{lifetime_for_ratio, Scenario};
@@ -74,5 +77,5 @@ pub use space::{design_grid, DesignPoint, SearchSpace, SpaceIndex};
 pub use sweep::{
     read_sweep_checkpoint, sweep, sweep_fingerprint, sweep_fused, sweep_resumable,
     sweep_sequential, sweep_with_cache, write_sweep_checkpoint, ScenarioResult, SweepCheckpoint,
-    SweepConfig, SweepDriver, SweepOutcome, SWEEP_CHECKPOINT_SCHEMA,
+    SweepConfig, SweepDriver, SweepOutcome, TraceMeta, SWEEP_CHECKPOINT_SCHEMA,
 };

@@ -54,14 +54,25 @@ pub fn lifetime_for_ratio(
     assert!((0.0..1.0).contains(&ratio) && ratio > 0.0, "ratio must be in (0,1)");
     assert!(!rows.is_empty());
     let mut acc = 0.0;
+    let mut contributing = 0usize;
     for row in rows {
         let (energy, delay) = config_totals(row, tasks);
         let emb: f64 = row.c_comp.iter().sum();
         if energy > 0.0 {
             acc += emb * delay / (ci_use_g_per_j * energy);
+            contributing += 1;
         }
     }
-    let avg = acc / rows.len() as f64;
+    // Zero-energy rows have no operational carbon at any lifetime, so
+    // they carry no calibration signal — averaging over `rows.len()`
+    // would silently deflate the lifetime (to 0.0 for an all-zero
+    // space, which the overlay then divides by).
+    assert!(
+        contributing > 0,
+        "lifetime_for_ratio: no config consumes energy — the embodied share is lifetime-\
+         independent and cannot be calibrated"
+    );
+    let avg = acc / contributing as f64;
     avg * (1.0 - ratio) / ratio
 }
 
@@ -160,5 +171,44 @@ mod tests {
     fn bad_ratio_rejected() {
         let (rows, tasks) = rows();
         lifetime_for_ratio(&rows, &tasks, 1.5, 1e-4);
+    }
+
+    fn zero_energy_row(name: &str) -> ConfigRow {
+        ConfigRow {
+            name: name.into(),
+            f_clk: 1e9,
+            d_k: vec![1e-3],
+            e_dyn: vec![0.0],
+            leak_w: 0.0,
+            c_comp: vec![250.0],
+        }
+    }
+
+    #[test]
+    fn zero_energy_rows_do_not_deflate_the_calibration() {
+        // Regression: rows skipped in the accumulator were still counted
+        // in the denominator, shrinking the calibrated lifetime by the
+        // zero-energy fraction of the space.
+        let (rows, tasks) = rows();
+        let without = lifetime_for_ratio(&rows, &tasks, 0.65, 1e-4);
+        let mut padded = rows.clone();
+        padded.push(zero_energy_row("idle1"));
+        padded.push(zero_energy_row("idle2"));
+        let with = lifetime_for_ratio(&padded, &tasks, 0.65, 1e-4);
+        assert_eq!(
+            without.to_bits(),
+            with.to_bits(),
+            "zero-energy rows changed the calibration: {without} vs {with}"
+        );
+    }
+
+    #[test]
+    #[should_panic(expected = "no config consumes energy")]
+    fn all_zero_energy_space_panics_instead_of_returning_zero() {
+        // Regression: this returned lifetime 0.0, which the overlay then
+        // divided by.
+        let (_, tasks) = rows();
+        let rows = vec![zero_energy_row("idle1"), zero_energy_row("idle2")];
+        lifetime_for_ratio(&rows, &tasks, 0.65, 1e-4);
     }
 }

@@ -376,8 +376,9 @@ pub fn exhaustive_front(outcome: &SweepOutcome) -> BTreeSet<(usize, String)> {
 /// search-semantics change so stale checkpoints are rejected instead of
 /// silently resumed into a different trajectory. (v1: no evaluator
 /// fingerprint. v2: `eval_digest` member binds the checkpoint to its
-/// evaluator + base request.)
-pub const CHECKPOINT_SCHEMA: u32 = 2;
+/// evaluator + base request. v3: [`grid_digest`] hashes the trace axis —
+/// every scenario contributes a trace marker, changing all digests.)
+pub const CHECKPOINT_SCHEMA: u32 = 3;
 
 /// A serializable snapshot of the search loop at a generation boundary:
 /// everything [`SearchDriver::step`] reads — the evaluated set, candidate
@@ -470,6 +471,20 @@ pub fn grid_digest(grid: &ScenarioGrid) -> String {
                 }
                 None => h.write(&[0]),
             }
+        }
+        // The trace axis is content too: segment durations and
+        // intensities, in trace order (two same-mean traces with
+        // different shapes must digest differently).
+        match &sc.trace {
+            Some(tr) => {
+                h.write(&[1]);
+                h.write_u64(tr.len() as u64);
+                for s in tr.segments() {
+                    h.write_u64(s.duration_s.to_bits());
+                    h.write_u64(s.g_per_kwh.to_bits());
+                }
+            }
+            None => h.write(&[0]),
         }
     }
     h.finish_hex()
@@ -1785,6 +1800,25 @@ mod tests {
             .run(&HostEngineFactory, &space, &synth_row, &base, &grid)
             .unwrap();
         outcomes_identical(&full, &resumed_out);
+    }
+
+    #[test]
+    fn grid_digest_is_sensitive_to_the_trace_axis() {
+        use crate::carbon::CiTrace;
+        let base = synth_grid();
+        let with_diurnal = synth_grid()
+            .cross(ScenarioGrid::new().with_trace("trace=d", CiTrace::diurnal_world()));
+        // A flat trace with the same mean intensity but a different
+        // shape must digest differently from the diurnal one.
+        let with_flat =
+            synth_grid().cross(ScenarioGrid::new().with_trace("trace=d", CiTrace::flat(440.0)));
+        let d0 = grid_digest(&base);
+        let d1 = grid_digest(&with_diurnal);
+        let d2 = grid_digest(&with_flat);
+        assert_ne!(d0, d1);
+        assert_ne!(d1, d2);
+        // Determinism.
+        assert_eq!(d1, grid_digest(&with_diurnal));
     }
 
     #[test]

@@ -38,14 +38,14 @@
 use std::path::Path;
 use std::sync::atomic::{AtomicUsize, Ordering};
 
-use crate::carbon::ScenarioOverlay;
+use crate::carbon::{combine_segments, ScenarioOverlay};
 use crate::configfmt::{parse, ContentHasher, Json};
 use crate::matrixform::{
     ConfigRow, DesignProfile, EvalRequest, EvalResult, MetricRow, ProfileRequest, TaskMatrix,
 };
 use crate::runtime::{evaluate_fused, profile_request, CacheStats, Engine, EngineFactory};
 
-use super::batching::{chunk_ranges, chunk_size, merge, num_chunks, shallow};
+use super::batching::{chunk_ranges, chunk_size, evaluate_chunked, merge, num_chunks, shallow};
 use super::cache::{atomic_write, splice_digest, strip_and_verify_digest, CacheKey, ProfileCache};
 use super::explore::{explore, summarize, ExploreOutcome};
 use super::grid::ScenarioGrid;
@@ -68,7 +68,36 @@ pub struct ScenarioResult {
     /// Scenario label from the grid.
     pub label: String,
     /// Full exploration outcome (per-config results, optima, stats).
+    /// For a trace scenario this is the time-weighted combination of
+    /// the per-segment evaluations (`carbon::combine_segments`).
     pub outcome: ExploreOutcome,
+    /// Trace metadata when the scenario carried a CI trace. Filled by
+    /// the two-phase driver (the production path — the static collapse
+    /// costs one extra overlay fold); the fused/sequential oracle paths
+    /// leave it `None`, and bit-identity comparisons ignore it.
+    pub trace: Option<TraceMeta>,
+}
+
+/// Summary of one trace scenario: the trace's intensity profile plus
+/// the outcome of its *static collapse* (the same scenario at the
+/// trace's time-weighted mean CI), so reports can show the
+/// trace-vs-static delta. By linearity of `C_op` in `CI_use` the delta
+/// is f32-rounding-sized; the interesting signal is the swing *across*
+/// grids (see EXPERIMENTS.md §Trace).
+#[derive(Debug, Clone, Copy)]
+pub struct TraceMeta {
+    /// Number of trace segments the scenario lowered into.
+    pub segments: usize,
+    /// Time-weighted mean intensity, g/kWh.
+    pub mean_ci_g_per_kwh: f64,
+    /// Lowest segment intensity, g/kWh.
+    pub min_ci_g_per_kwh: f64,
+    /// Highest segment intensity, g/kWh.
+    pub max_ci_g_per_kwh: f64,
+    /// Best feasible tCDP of the static mean-CI collapse.
+    pub static_best_tcdp: f64,
+    /// Feasible-design count of the static collapse.
+    pub static_feasible: usize,
 }
 
 /// Aggregated sweep result, scenario order = grid enumeration order.
@@ -234,8 +263,10 @@ pub fn sweep_resumable(
 
 /// Checkpoint envelope schema version — bump on any layout *or*
 /// fingerprint-semantics change so stale checkpoints are rejected
-/// instead of silently resumed into a different problem.
-pub const SWEEP_CHECKPOINT_SCHEMA: u32 = 1;
+/// instead of silently resumed into a different problem. v2: the grid
+/// digest hashes the trace axis (every scenario now contributes a trace
+/// marker, changing all fingerprints).
+pub const SWEEP_CHECKPOINT_SCHEMA: u32 = 2;
 
 /// A snapshot of phase-A progress inside one sweep: how many chunks are
 /// done plus a fingerprint binding the checkpoint to its exact problem —
@@ -574,43 +605,70 @@ impl<'a> SweepDriver<'a> {
     /// Phase B: fold the scenario overlays over the completed profiles,
     /// merging (scenario × chunk) results in the same scenario-major,
     /// chunk-ascending order the fused paths use — bit-identical to them.
-    /// Panics if phase A is incomplete (drive [`Self::step`] to done
-    /// first); `cache_delta` is attached verbatim as the outcome's
-    /// `cache` field.
+    /// A trace scenario lowers into per-segment overlays (chunks merged
+    /// per segment first, then segments combined in trace order — the
+    /// DESIGN.md §3.4 contract) and additionally evaluates its static
+    /// mean-CI collapse for the [`TraceMeta`] report (one extra overlay
+    /// fold, not counted in `items`). Panics if phase A is incomplete
+    /// (drive [`Self::step`] to done first); `cache_delta` is attached
+    /// verbatim as the outcome's `cache` field.
     pub fn outcome(&self, cache_delta: Option<CacheStats>) -> SweepOutcome {
         assert!(self.is_done(), "sweep phase A incomplete: call step() until done");
         let profiles: Vec<&DesignProfile> =
             self.profiles.iter().map(|p| p.as_ref().expect("chunk left unprofiled")).collect();
         let scenarios = self.grid.scenarios();
-        let n_scenarios = scenarios.len();
         let shell = shallow(self.base);
+        // Overlay-fold one static scenario over every profile chunk, in
+        // chunk order. An empty design space profiles into zero chunks;
+        // the fold then reports the empty result.
+        let fold = |sc: &super::grid::SweepScenario| -> EvalResult {
+            let overlay = ScenarioOverlay::from_request(&sc.apply(&shell));
+            let mut merged: Option<EvalResult> = None;
+            for &prof in &profiles {
+                let res = overlay.apply(prof);
+                merged = Some(match merged {
+                    None => res,
+                    Some(acc) => merge(acc, res),
+                });
+            }
+            merged.unwrap_or_else(|| EvalResult::empty(self.base.tasks.num_tasks()))
+        };
+        let mut items = 0usize;
         let results: Vec<ScenarioResult> = scenarios
             .into_iter()
             .map(|sc| {
-                let overlay = ScenarioOverlay::from_request(&sc.apply(&shell));
-                let mut merged: Option<EvalResult> = None;
-                for &prof in &profiles {
-                    let res = overlay.apply(prof);
-                    merged = Some(match merged {
-                        None => res,
-                        Some(acc) => merge(acc, res),
-                    });
-                }
-                ScenarioResult {
-                    label: sc.label,
-                    // An empty design space profiles into zero chunks;
-                    // each scenario then reports the empty outcome.
-                    outcome: summarize(
-                        merged.unwrap_or_else(|| EvalResult::empty(self.base.tasks.num_tasks())),
-                    ),
-                }
+                let (combined, trace) = match &sc.trace {
+                    None => {
+                        items += profiles.len();
+                        (fold(&sc), None)
+                    }
+                    Some(tr) => {
+                        let lowered = sc.lower();
+                        items += lowered.len() * profiles.len();
+                        let seg_results: Vec<EvalResult> =
+                            lowered.iter().map(|(seg, _)| fold(seg)).collect();
+                        let weights: Vec<f32> = lowered.iter().map(|&(_, w)| w).collect();
+                        let combined = combine_segments(&seg_results, &weights);
+                        let st = summarize(fold(&sc.static_collapse()));
+                        let meta = TraceMeta {
+                            segments: tr.len(),
+                            mean_ci_g_per_kwh: tr.mean_g_per_kwh(),
+                            min_ci_g_per_kwh: tr.min_g_per_kwh(),
+                            max_ci_g_per_kwh: tr.max_g_per_kwh(),
+                            static_best_tcdp: st.stats.best,
+                            static_feasible: st.stats.feasible,
+                        };
+                        (combined, Some(meta))
+                    }
+                };
+                ScenarioResult { label: sc.label, outcome: summarize(combined), trace }
             })
             .collect();
         SweepOutcome {
             scenarios: results,
             engine: self.engine,
             threads: self.threads_used,
-            items: profiles.len() * n_scenarios,
+            items,
             profile_chunks: profiles.len(),
             cache: cache_delta,
         }
@@ -654,86 +712,107 @@ impl<'a> SweepDriver<'a> {
     }
 }
 
-/// One fanned-out unit of fused work: a config chunk under one scenario.
+/// One fanned-out unit of fused work: a config chunk under one lowered
+/// (scenario, trace-segment) pair.
 struct SweepItem {
     scenario: usize,
+    segment: usize,
     req: EvalRequest,
 }
 
-/// Build the (scenario × config-chunk) item list for the fused path.
-/// Chunk boundaries are exactly the ones `evaluate_chunked` would use
-/// sequentially — one engine call per item — so merging item results in
-/// order reproduces the sequential result bit-for-bit (a remainder chunk
-/// must run as one padded batch here, not be re-chunked, or the PJRT path
-/// would route it through a different artifact variant than the
-/// sequential run).
+/// Build the (scenario × trace-segment × config-chunk) item list for the
+/// fused path: every scenario lowers through [`SweepScenario::lower`]
+/// (one segment for static scenarios) before chunking. Chunk boundaries
+/// are exactly the ones `evaluate_chunked` would use sequentially — one
+/// engine call per item — so merging item results in order reproduces
+/// the sequential result bit-for-bit (a remainder chunk must run as one
+/// padded batch here, not be re-chunked, or the PJRT path would route it
+/// through a different artifact variant than the sequential run). Also
+/// returns each scenario's lowered segment weights.
+///
+/// [`SweepScenario::lower`]: super::grid::SweepScenario::lower
 fn build_items(
     base: &EvalRequest,
     grid: &ScenarioGrid,
-) -> (Vec<SweepItem>, Vec<super::grid::SweepScenario>) {
+) -> (Vec<SweepItem>, Vec<super::grid::SweepScenario>, Vec<Vec<f32>>) {
     let scenarios = grid.scenarios();
     let mut items = Vec::new();
+    let mut weights = Vec::with_capacity(scenarios.len());
     for (si, sc) in scenarios.iter().enumerate() {
-        let req = sc.apply(base);
-        if req.configs.is_empty() {
-            // No configs, no engine items; the merge below falls back to
-            // the empty result for every scenario.
-            continue;
-        }
-        let cs = chunk_size(req.configs.len());
-        if req.configs.len() <= cs {
-            items.push(SweepItem { scenario: si, req });
-        } else {
-            for chunk in req.configs.chunks(cs) {
-                items.push(SweepItem {
-                    scenario: si,
-                    req: EvalRequest { configs: chunk.to_vec(), ..shallow(&req) },
-                });
+        let lowered = sc.lower();
+        weights.push(lowered.iter().map(|&(_, w)| w).collect::<Vec<f32>>());
+        for (gi, (seg, _)) in lowered.iter().enumerate() {
+            let req = seg.apply(base);
+            if req.configs.is_empty() {
+                // No configs, no engine items; the merge below falls
+                // back to the empty result for every segment.
+                continue;
+            }
+            let cs = chunk_size(req.configs.len());
+            if req.configs.len() <= cs {
+                items.push(SweepItem { scenario: si, segment: gi, req });
+            } else {
+                for chunk in req.configs.chunks(cs) {
+                    items.push(SweepItem {
+                        scenario: si,
+                        segment: gi,
+                        req: EvalRequest { configs: chunk.to_vec(), ..shallow(&req) },
+                    });
+                }
             }
         }
     }
-    (items, scenarios)
+    (items, scenarios, weights)
 }
 
-/// The PR 1 per-scenario fused fan-out: every (scenario × config-chunk)
-/// item re-runs the engine with the scenario folded into the graph.
-/// Engine work is O(N_scenarios × C × T × K); kept as the baseline the
-/// two-phase [`sweep`] is benchmarked against
-/// (`benches/bench_sweep_parallel.rs`) and as a second bit-identity
-/// oracle in the property tests.
+/// The PR 1 per-scenario fused fan-out: every (scenario × trace-segment
+/// × config-chunk) item re-runs the engine with the scenario folded into
+/// the graph. Engine work is O(N_scenarios × C × T × K) — and another
+/// ×N_segments for trace scenarios, which is exactly the cost the
+/// two-phase path avoids; kept as the baseline the two-phase [`sweep`]
+/// is benchmarked against (`benches/bench_sweep_parallel.rs`,
+/// `benches/bench_trace.rs`) and as a second bit-identity oracle in the
+/// property tests.
 pub fn sweep_fused(
     factory: &dyn EngineFactory,
     base: &EvalRequest,
     grid: &ScenarioGrid,
     cfg: &SweepConfig,
 ) -> crate::Result<SweepOutcome> {
-    let (items, scenarios) = build_items(base, grid);
-    let n_scenarios = scenarios.len();
+    let (items, scenarios, weights) = build_items(base, grid);
     let n_items = items.len();
     let (slots, threads_used) = fan_out(factory, &items, cfg.threads, |engine, item| {
         evaluate_fused(engine, &item.req)
     })?;
 
-    // Order-preserving merge: items were emitted scenario-major in chunk
-    // order, so folding each scenario's slots left-to-right reproduces the
-    // sequential `evaluate_chunked` merge exactly.
-    let mut merged: Vec<Option<EvalResult>> = (0..n_scenarios).map(|_| None).collect();
+    // Order-preserving merge: items were emitted scenario-major,
+    // segment-major, in chunk order, so folding each (scenario, segment)
+    // slot left-to-right reproduces the sequential `evaluate_chunked`
+    // merge exactly; segments then combine in trace order.
+    let mut merged: Vec<Vec<Option<EvalResult>>> =
+        weights.iter().map(|w| (0..w.len()).map(|_| None).collect()).collect();
     for (item, res) in items.iter().zip(slots) {
-        let slot = &mut merged[item.scenario];
+        let slot = &mut merged[item.scenario][item.segment];
         *slot = Some(match slot.take() {
             None => res,
             Some(acc) => merge(acc, res),
         });
     }
 
+    let empty = || EvalResult::empty(base.tasks.num_tasks());
     let scenarios = scenarios
         .into_iter()
         .zip(merged)
-        .map(|(sc, res)| ScenarioResult {
-            label: sc.label,
-            outcome: summarize(
-                res.unwrap_or_else(|| EvalResult::empty(base.tasks.num_tasks())),
-            ),
+        .zip(weights)
+        .map(|((sc, segs), w)| {
+            let segs: Vec<EvalResult> =
+                segs.into_iter().map(|r| r.unwrap_or_else(empty)).collect();
+            let res = if sc.trace.is_none() {
+                segs.into_iter().next().unwrap_or_else(empty)
+            } else {
+                combine_segments(&segs, &w)
+            };
+            ScenarioResult { label: sc.label, outcome: summarize(res), trace: None }
         })
         .collect();
 
@@ -747,25 +826,41 @@ pub fn sweep_fused(
     })
 }
 
-/// Sequential reference path: one engine, scenarios in grid order. The
-/// parallel [`sweep`] and [`sweep_fused`] must match this bit-for-bit.
+/// Sequential reference path: one engine, scenarios in grid order,
+/// trace scenarios evaluated segment by segment and combined in trace
+/// order. The parallel [`sweep`] and [`sweep_fused`] must match this
+/// bit-for-bit.
 pub fn sweep_sequential(
     engine: &mut dyn Engine,
     base: &EvalRequest,
     grid: &ScenarioGrid,
 ) -> crate::Result<SweepOutcome> {
     let scenarios = grid.scenarios();
-    let n = scenarios.len();
-    let mut out = Vec::with_capacity(n);
+    let mut items = 0usize;
+    let mut out = Vec::with_capacity(scenarios.len());
     for sc in scenarios {
-        let req = sc.apply(base);
-        out.push(ScenarioResult { label: sc.label, outcome: explore(engine, &req)? });
+        let lowered = sc.lower();
+        items += lowered.len();
+        let outcome = if sc.trace.is_none() {
+            explore(engine, &lowered[0].0.apply(base))?
+        } else {
+            // Chunks merge per segment (inside `evaluate_chunked`), then
+            // segments combine — the same order as the other paths.
+            let mut segs = Vec::with_capacity(lowered.len());
+            let mut weights = Vec::with_capacity(lowered.len());
+            for (seg, w) in &lowered {
+                segs.push(evaluate_chunked(engine, &seg.apply(base))?);
+                weights.push(*w);
+            }
+            summarize(combine_segments(&segs, &weights))
+        };
+        out.push(ScenarioResult { label: sc.label, outcome, trace: None });
     }
     Ok(SweepOutcome {
         scenarios: out,
         engine: engine.name(),
         threads: 1,
-        items: n,
+        items,
         profile_chunks: num_chunks(base.configs.len()),
         cache: None,
     })
@@ -892,6 +987,77 @@ mod tests {
         assert_outcomes_identical(&cold, &disk_warm);
         let ds = disk_warm.cache.unwrap();
         assert_eq!((ds.hits, ds.mem_hits, ds.misses), (3, 0, 0));
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn trace_scenarios_match_fused_and_sequential_bitwise() {
+        let req = request(400);
+        let g = ScenarioGrid::new()
+            .with_lifetime("short", 1e5)
+            .with_trace("trace=diurnal", crate::carbon::CiTrace::diurnal_world())
+            .with_trace("trace=flat", crate::carbon::CiTrace::flat(440.0));
+        let two = sweep(&HostEngineFactory, &req, &g, &SweepConfig { threads: 4 }).unwrap();
+        let fused =
+            sweep_fused(&HostEngineFactory, &req, &g, &SweepConfig { threads: 4 }).unwrap();
+        let seq = sweep_sequential(&mut HostEngine::new(), &req, &g).unwrap();
+        assert_eq!(two.items, fused.items);
+        assert_outcomes_identical(&two, &fused);
+        assert_outcomes_identical(&two, &seq);
+        // Phase A ran once; phase B did (24 + 1) segment overlays/chunk.
+        assert_eq!(two.items, 25 * two.profile_chunks);
+        // Only the two-phase (production) path fills TraceMeta.
+        let m = two.scenarios[0].trace.expect("trace scenario carries meta");
+        assert_eq!(m.segments, 24);
+        assert!((m.mean_ci_g_per_kwh - 440.0).abs() < 1e-9);
+        assert!(m.min_ci_g_per_kwh < m.max_ci_g_per_kwh);
+        assert!(fused.scenarios[0].trace.is_none());
+        assert!(seq.scenarios[0].trace.is_none());
+    }
+
+    #[test]
+    fn trace_outcome_sits_within_f32_rounding_of_its_static_collapse() {
+        // Operational carbon is linear in CI, so the time-weighted trace
+        // result equals the static mean-CI result up to f32 rounding —
+        // the delta the report surfaces must be tiny, never structural.
+        let req = request(50);
+        let g = ScenarioGrid::new()
+            .with_trace("trace=diurnal", crate::carbon::CiTrace::diurnal_renewable());
+        let out = sweep(&HostEngineFactory, &req, &g, &SweepConfig::default()).unwrap();
+        let s = &out.scenarios[0];
+        let m = s.trace.expect("meta");
+        let rel = (s.outcome.stats.best - m.static_best_tcdp).abs() / m.static_best_tcdp;
+        assert!(rel < 1e-4, "trace vs static best diverged: rel={rel}");
+        assert_eq!(s.outcome.stats.feasible, m.static_feasible);
+    }
+
+    #[test]
+    fn warm_trace_sweep_over_fig7_grid_avoids_every_contraction() {
+        // Acceptance criterion: a 24-segment diurnal trace crossed with
+        // the fig7 grid over a warm profile cache performs zero phase-A
+        // contractions — traces are pure phase-B work.
+        let dir = crate::testkit::test_dir("sweep_trace_warm");
+        std::fs::remove_dir_all(&dir).ok();
+        let cache = crate::dse::cache::ProfileCache::open(&dir).unwrap();
+        let req = request(2500); // 3 profile chunks
+        let trace = crate::carbon::CiTrace::diurnal_world();
+        assert_eq!(trace.len(), 24);
+        let g = ScenarioGrid::fig7(&req.configs, &req.tasks, req.ci_use_g_per_j)
+            .cross(ScenarioGrid::new().with_trace("trace=diurnal-world", trace));
+        let cfg = SweepConfig { threads: 2 };
+
+        let cold = sweep_with_cache(&HostEngineFactory, &req, &g, &cfg, Some(&cache)).unwrap();
+        let warm = sweep_with_cache(&HostEngineFactory, &req, &g, &cfg, Some(&cache)).unwrap();
+        assert_outcomes_identical(&cold, &warm);
+        // 3 fig7 scenarios × 24 segments × 3 chunks of phase-B overlays…
+        assert_eq!(warm.items, 3 * 24 * 3);
+        let cs = cold.cache.unwrap();
+        assert_eq!((cs.hits, cs.misses, cs.writes), (0, 3, 3));
+        // …but zero warm phase-A contractions: all 3 chunks come back
+        // from the cache regardless of how many trace segments fan out.
+        let ws = warm.cache.unwrap();
+        assert_eq!((ws.hits, ws.misses), (3, 0));
+        assert_eq!(ws.contractions_avoided(), warm.profile_chunks);
         std::fs::remove_dir_all(&dir).ok();
     }
 

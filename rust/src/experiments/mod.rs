@@ -24,3 +24,4 @@ pub mod fig16_stacking_kernels;
 pub mod search_fig7;
 pub mod sweep_fig7;
 pub mod table5_vr_soc;
+pub mod trace_study;

@@ -1,0 +1,171 @@
+//! Trace study: how much the operational-carbon optimum swings when the
+//! use-phase grid varies over time instead of sitting at a static annual
+//! average.
+//!
+//! The study sweeps one profiled cluster space across the named
+//! carbon-intensity traces ([`ScenarioGrid::traces`]) plus a
+//! fleet-weighted regional mix derived from the synthetic deployment
+//! telemetry ([`fleet_mix_trace`]). Two findings the tables make visible:
+//!
+//! 1. **Across grids** the best-design tCDP swings by the ratio of the
+//!    traces' mean intensities (renewable-heavy vs coal-heavy is a ~4×
+//!    operational-carbon spread) — the actionable design signal.
+//! 2. **Within one grid** the trace-averaged result matches its static
+//!    mean-CI collapse to f32 rounding, because operational carbon is
+//!    linear in CI. The delta column of [`trace_table`] is therefore a
+//!    built-in correctness check, not a finding.
+
+use crate::carbon::{CiTrace, FleetCohort, FleetMix};
+use crate::dse::cache::ProfileCache;
+use crate::dse::grid::{ScenarioGrid, YEAR_S};
+use crate::dse::sweep::{sweep_with_cache, SweepConfig, SweepOutcome};
+use crate::report::{sweep_table, trace_table, Table};
+use crate::runtime::EngineFactory;
+use crate::workloads::{regional_usage_shares, Cluster, FleetConfig};
+
+use super::sweep_fig7::profile_cluster;
+
+/// Flatten the deployed fleet into one usage-weighted carbon-intensity
+/// trace: devices are split over four grid regions (US-like, renewable-
+/// heavy, world-average, coal-heavy) by [`regional_usage_shares`], each
+/// region carries its own diurnal trace, and the [`FleetMix`] weights the
+/// regional traces by usage share.
+pub fn fleet_mix_trace(cfg: &FleetConfig) -> CiTrace {
+    let shares = regional_usage_shares(cfg, 4);
+    let regional = [
+        ("us", CiTrace::diurnal(380.0, 0.30, 19.0)),
+        ("renewable", CiTrace::diurnal_renewable()),
+        ("world", CiTrace::diurnal_world()),
+        ("coal", CiTrace::diurnal_coal()),
+    ];
+    let cohorts: Vec<FleetCohort> = shares
+        .iter()
+        .zip(regional)
+        .filter(|(&share, _)| share > 0.0)
+        .map(|(&share, (label, trace))| FleetCohort { label: label.to_string(), share, trace })
+        .collect();
+    FleetMix::new(cohorts).flatten()
+}
+
+/// The study's scenario grid: the named trace presets plus the
+/// fleet-weighted regional mix for the default synthetic fleet.
+pub fn trace_grid() -> ScenarioGrid {
+    ScenarioGrid::traces()
+        .with_trace("trace=fleet-mix", fleet_mix_trace(&FleetConfig::default()))
+}
+
+/// Full study output.
+pub struct TraceStudy {
+    /// Cluster the space was profiled on.
+    pub cluster: Cluster,
+    /// The aggregated sweep outcome (trace scenarios in preset order).
+    pub outcome: SweepOutcome,
+    /// Rendered per-scenario stats table.
+    pub table: Table,
+    /// Rendered trace-vs-static comparison table.
+    pub traces: Table,
+}
+
+/// Run the trace study for one cluster on `threads` workers (0 = auto).
+/// The 121-config space is profiled once; every trace segment of every
+/// scenario is a cheap overlay over the same cached profile.
+pub fn run(
+    factory: &dyn EngineFactory,
+    cluster: Cluster,
+    threads: usize,
+) -> crate::Result<TraceStudy> {
+    run_cached(factory, cluster, threads, None)
+}
+
+/// Warm-start variant of [`run`]: phase A consults a persistent
+/// [`ProfileCache`]. On a warm cache the whole multi-trace sweep performs
+/// zero engine contractions — the trace fan-out multiplies phase-B
+/// overlays, never phase-A profiling.
+pub fn run_cached(
+    factory: &dyn EngineFactory,
+    cluster: Cluster,
+    threads: usize,
+    cache: Option<&ProfileCache>,
+) -> crate::Result<TraceStudy> {
+    let space = profile_cluster(cluster);
+    let mut base = space.base.clone();
+    // A mid-range device lifetime so neither carbon term dominates.
+    base.lifetime_s = 2.0 * YEAR_S;
+    let grid = trace_grid();
+    let outcome = sweep_with_cache(factory, &base, &grid, &SweepConfig { threads }, cache)?;
+    let mut table = sweep_table(&outcome);
+    table.title = format!("Trace study [{}] — {}", cluster.label(), table.title);
+    let traces = trace_table(&outcome);
+    Ok(TraceStudy { cluster, outcome, table, traces })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::runtime::HostEngineFactory;
+
+    fn best(study: &TraceStudy, label: &str) -> f64 {
+        study
+            .outcome
+            .scenarios
+            .iter()
+            .find(|s| s.label == label)
+            .unwrap_or_else(|| panic!("scenario {label} missing"))
+            .outcome
+            .stats
+            .best
+    }
+
+    #[test]
+    fn operational_carbon_swings_across_grids() {
+        let study = run(&HostEngineFactory, Cluster::Ai5, 2).unwrap();
+        assert_eq!(study.outcome.scenarios.len(), 7);
+        let renewable = best(&study, "trace=diurnal-renewable");
+        let world = best(&study, "trace=diurnal-world");
+        let coal = best(&study, "trace=diurnal-coal");
+        assert!(
+            renewable < world && world < coal,
+            "best tCDP not ordered by grid intensity: {renewable} < {world} < {coal}"
+        );
+        // The fleet mix blends all four regions, so it sits inside the
+        // renewable..coal envelope.
+        let mix = best(&study, "trace=fleet-mix");
+        assert!(renewable < mix && mix < coal, "fleet mix {mix} outside envelope");
+        assert_eq!(study.table.len(), 7);
+        assert_eq!(study.traces.len(), 7);
+    }
+
+    #[test]
+    fn every_scenario_carries_trace_metadata_with_tiny_static_delta() {
+        let study = run(&HostEngineFactory, Cluster::Ai5, 2).unwrap();
+        for s in &study.outcome.scenarios {
+            let meta = s.trace.unwrap_or_else(|| panic!("{} has no trace meta", s.label));
+            assert!(meta.segments >= 1, "{}", s.label);
+            assert!(meta.min_ci_g_per_kwh <= meta.mean_ci_g_per_kwh, "{}", s.label);
+            assert!(meta.mean_ci_g_per_kwh <= meta.max_ci_g_per_kwh, "{}", s.label);
+            // c_op is linear in CI, so trace-average == static mean-CI
+            // collapse up to f32 rounding in the overlay.
+            let best = s.outcome.stats.best;
+            let rel = (best - meta.static_best_tcdp).abs() / best;
+            assert!(rel < 1e-4, "{}: trace {best} vs static {}", s.label, meta.static_best_tcdp);
+            assert_eq!(s.outcome.stats.feasible, meta.static_feasible, "{}", s.label);
+        }
+    }
+
+    #[test]
+    fn fleet_mix_trace_is_deterministic_and_blended() {
+        let cfg = FleetConfig::default();
+        let a = fleet_mix_trace(&cfg);
+        let b = fleet_mix_trace(&cfg);
+        assert_eq!(a.segments(), b.segments());
+        assert_eq!(a.len(), 96, "4 regions x 24 hourly segments");
+        // The blend sits strictly between the cleanest and dirtiest
+        // regional means.
+        let mean = a.mean_g_per_kwh();
+        assert!(
+            mean > CiTrace::diurnal_renewable().mean_g_per_kwh()
+                && mean < CiTrace::diurnal_coal().mean_g_per_kwh(),
+            "blended mean {mean} outside regional envelope"
+        );
+    }
+}

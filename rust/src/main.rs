@@ -21,7 +21,7 @@ use xrcarbon::experiments::{
     fig13_core_configs, fig14_replacement, fig15_stacking, fig16_stacking_kernels, search_fig7,
     sweep_fig7, table5_vr_soc,
 };
-use xrcarbon::report::{search_archive_table, sweep_best_table, sweep_table, write_csv};
+use xrcarbon::report::{search_archive_table, sweep_best_table, sweep_table, trace_table, write_csv};
 use xrcarbon::runtime::{auto_factory, EngineFactory, HostEngineFactory};
 use xrcarbon::workloads::{Cluster, FleetConfig};
 
@@ -57,6 +57,13 @@ COMMANDS
                        fig10    operational lifetime 1e3..1e8 s (alias: lifetime)
                        fig11    provisioning lifetimes 1-3y x QoS on/off
                        ci       CI diversity (world|us|coal|renewable grids)
+                       trace    time-varying CI traces (diurnal renewable/
+                                world/coal, seasonal, marginal, fleet mix);
+                                prints the trace-vs-static comparison table
+              --trace NAME  (with --preset trace) sweep one named trace
+                        instead of the whole study grid: diurnal-renewable,
+                        diurnal-world, diurnal-coal, seasonal-world,
+                        marginal-world, flat-world, flat-renewable, flat-coal
               --cache-dir DIR  persistent profile cache: phase-A design
                         profiles are content-addressed on disk (JSON
                         envelope + binary sidecar, in-memory LRU in
@@ -181,6 +188,9 @@ fn run_search(args: &Args) -> anyhow::Result<()> {
     if args.options.contains_key("preset") {
         anyhow::bail!("--preset is incompatible with --search (choose --space fig7|expanded)");
     }
+    if args.options.contains_key("trace") {
+        anyhow::bail!("--trace is incompatible with --search (trace scenarios ride the exhaustive sweep: --preset trace)");
+    }
     let factory = factory_for(args);
     println!("[engine: {}]", factory.label());
     let space_name = args.get("space", "fig7").to_string();
@@ -282,6 +292,11 @@ fn run_sweep(args: &Args) -> anyhow::Result<()> {
     let cache = open_cache(args)?;
     let cache = cache.as_ref();
     let preset = args.get("preset", "fig7").to_string();
+    // A --trace silently dropped by a non-trace preset would hand back
+    // results for the wrong scenario grid.
+    if args.options.contains_key("trace") && preset != "trace" {
+        anyhow::bail!("--trace requires --preset trace");
+    }
     // Sweep-phase checkpointing: with a cache, phase-A progress persists
     // per chunk batch and `--resume` continues an interrupted run
     // bit-identically (the checkpoint's fingerprint rejects a different
@@ -362,7 +377,32 @@ fn run_sweep(args: &Args) -> anyhow::Result<()> {
             emit(args, "sweep_fig11", &sweep_table(&out))?;
             print!("{}", sweep_best_table(&out).render());
         }
-        other => anyhow::bail!("unknown sweep preset '{other}' (fig7|fig10|lifetime|fig11|ci)"),
+        "trace" => {
+            let space = sweep_fig7::profile_cluster(cluster_for(args)?);
+            // Traces override CI but not lifetime: pin a 2-year life.
+            let mut base = space.base.clone();
+            base.lifetime_s = 2.0 * xrcarbon::dse::grid::YEAR_S;
+            let grid = match args.options.get("trace") {
+                Some(name) => {
+                    let trace = xrcarbon::carbon::CiTrace::by_name(name).ok_or_else(|| {
+                        anyhow::anyhow!(
+                            "unknown trace '{name}' (known: {})",
+                            xrcarbon::carbon::CiTrace::preset_names().join(", ")
+                        )
+                    })?;
+                    ScenarioGrid::new().with_trace(&format!("trace={name}"), trace)
+                }
+                None => xrcarbon::experiments::trace_study::trace_grid(),
+            };
+            let out =
+                preset_sweep(factory.as_ref(), &base, &grid, threads, cache, resume, save_to)?;
+            emit(args, "sweep_trace", &sweep_table(&out))?;
+            print!("{}", trace_table(&out).render());
+            print!("{}", sweep_best_table(&out).render());
+        }
+        other => {
+            anyhow::bail!("unknown sweep preset '{other}' (fig7|fig10|lifetime|fig11|ci|trace)")
+        }
     }
     Ok(())
 }

@@ -10,5 +10,5 @@ mod sweep;
 mod table;
 
 pub use search::{search_archive_table, search_table};
-pub use sweep::{sweep_best_table, sweep_table};
+pub use sweep::{sweep_best_table, sweep_table, trace_table};
 pub use table::{ascii_bars, ascii_series, normalize_to, write_csv, Table};

@@ -84,9 +84,51 @@ pub fn sweep_best_table(out: &SweepOutcome) -> Table {
     t
 }
 
+/// Trace-scenario table: one row per scenario that carried a
+/// carbon-intensity trace, comparing the trace-averaged optimum against
+/// the static mean-CI collapse of the same trace. Because operational
+/// carbon is linear in CI, the delta is pure f32 rounding — the column is
+/// a built-in sanity check; the real signal is the swing in best tCDP
+/// *across* rows (renewable vs coal grids). Empty when the sweep had no
+/// trace axis (the CLI skips printing it then).
+pub fn trace_table(out: &SweepOutcome) -> Table {
+    let mut t = Table::new(
+        "Trace scenarios — trace vs static mean-CI collapse",
+        &[
+            "scenario",
+            "segments",
+            "mean CI [g/kWh]",
+            "CI range [g/kWh]",
+            "best tCDP (trace)",
+            "best tCDP (static)",
+            "delta",
+        ],
+    );
+    for s in &out.scenarios {
+        let Some(meta) = &s.trace else { continue };
+        let best = s.outcome.stats.best;
+        let delta = if best.is_finite() && meta.static_best_tcdp.is_finite() && best != 0.0 {
+            format!("{:+.2e}%", (best - meta.static_best_tcdp) / best * 100.0)
+        } else {
+            "-".to_string()
+        };
+        t.row(&[
+            s.label.clone(),
+            meta.segments.to_string(),
+            format!("{:.1}", meta.mean_ci_g_per_kwh),
+            format!("{:.1}..{:.1}", meta.min_ci_g_per_kwh, meta.max_ci_g_per_kwh),
+            format!("{best:.3e}"),
+            format!("{:.3e}", meta.static_best_tcdp),
+            delta,
+        ]);
+    }
+    t
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::carbon::CiTrace;
     use crate::dse::grid::ScenarioGrid;
     use crate::dse::sweep::{sweep, SweepConfig};
     use crate::matrixform::{ConfigRow, EvalRequest, TaskMatrix};
@@ -154,6 +196,41 @@ mod tests {
         let title = sweep_table(&out).title;
         assert!(title.contains("[2 from memory]"), "{title}");
         assert!(title.contains("4 evicted"), "{title}");
+    }
+
+    #[test]
+    fn trace_table_lists_only_trace_scenarios() {
+        let out = outcome();
+        // No trace axis → empty table.
+        assert_eq!(trace_table(&out).len(), 0);
+
+        let tasks = TaskMatrix::single_task("t", vec!["k".into()], &[5.0]);
+        let req = EvalRequest {
+            tasks,
+            configs: vec![ConfigRow {
+                name: "c0".into(),
+                f_clk: 1e9,
+                d_k: vec![1e-3],
+                e_dyn: vec![0.02],
+                leak_w: 0.0,
+                c_comp: vec![50.0],
+            }],
+            online: vec![1.0],
+            qos: vec![f64::INFINITY],
+            ci_use_g_per_j: 1e-4,
+            lifetime_s: 1e6,
+            beta: 1.0,
+            p_max_w: f64::INFINITY,
+        };
+        let grid = ScenarioGrid::new()
+            .with_lifetime("1y", 1e7)
+            .with_trace("trace=world", CiTrace::diurnal_world());
+        let out = sweep(&HostEngineFactory, &req, &grid, &SweepConfig::default()).unwrap();
+        let t = trace_table(&out);
+        assert_eq!(t.len(), 1, "one trace scenario, one row");
+        let rendered = t.render();
+        assert!(rendered.contains("trace=world"), "{rendered}");
+        assert!(rendered.contains("24"), "{rendered}");
     }
 
     #[test]

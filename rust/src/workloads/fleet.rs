@@ -223,6 +223,37 @@ pub fn generate_fleet(cfg: &FleetConfig) -> FleetSummary {
     FleetSummary { apps: stats, total_seconds, top10_cycle_share, category_share }
 }
 
+/// Per-region usage shares for a deployed fleet: the fraction of total
+/// expected session-seconds spent by devices homed in each of `regions`
+/// grid regions.
+///
+/// Devices are assigned to regions with a mildly skewed popularity law
+/// (region 0 is the largest market) and weighted by their expected usage,
+/// so the shares feed directly into a [`crate::carbon::FleetMix`] — each
+/// region carries its own carbon-intensity trace and the mix flattens to
+/// a single usage-weighted trace. Deterministic in `cfg.seed`.
+pub fn regional_usage_shares(cfg: &FleetConfig, regions: usize) -> Vec<f64> {
+    assert!(regions > 0, "regional_usage_shares: need at least one region");
+    let mut rng = Rng::new(cfg.seed ^ 0x9E67_0A5F_1D3C_8B24);
+    let mut usage = vec![0.0f64; regions];
+    for d in 0..cfg.devices {
+        let mut dev_rng = rng.fork(d as u64);
+        let region = dev_rng.zipf(regions, 1.1);
+        let n_sessions = cfg.days as f64 * cfg.sessions_per_day * dev_rng.range(0.6, 1.4);
+        let mean_s = cfg.session_minutes * 60.0 * dev_rng.range(0.7, 1.3);
+        usage[region] += n_sessions * mean_s;
+    }
+    let total: f64 = usage.iter().sum();
+    if total <= 0.0 {
+        // Degenerate fleet (zero devices/days): fall back to uniform.
+        return vec![1.0 / regions as f64; regions];
+    }
+    for u in usage.iter_mut() {
+        *u /= total;
+    }
+    usage
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -289,5 +320,38 @@ mod tests {
     fn catalog_has_100_apps() {
         let mut rng = Rng::new(1);
         assert_eq!(catalog(&mut rng).len(), 100);
+    }
+
+    #[test]
+    fn regional_shares_sum_to_one_and_are_deterministic() {
+        let cfg = FleetConfig { devices: 80, days: 5, ..Default::default() };
+        let a = regional_usage_shares(&cfg, 4);
+        let b = regional_usage_shares(&cfg, 4);
+        assert_eq!(a.len(), 4);
+        assert_eq!(a, b);
+        let sum: f64 = a.iter().sum();
+        assert!((sum - 1.0).abs() < 1e-12, "shares sum to {sum}");
+        assert!(a.iter().all(|&s| (0.0..=1.0).contains(&s)), "shares = {a:?}");
+    }
+
+    #[test]
+    fn region_zero_is_the_largest_market() {
+        let shares = regional_usage_shares(&FleetConfig::default(), 4);
+        for (r, &s) in shares.iter().enumerate().skip(1) {
+            assert!(shares[0] > s, "region 0 ({}) !> region {r} ({s})", shares[0]);
+        }
+    }
+
+    #[test]
+    fn zero_device_fleet_falls_back_to_uniform_shares() {
+        let cfg = FleetConfig { devices: 0, ..Default::default() };
+        let shares = regional_usage_shares(&cfg, 5);
+        assert!(shares.iter().all(|&s| (s - 0.2).abs() < 1e-12), "{shares:?}");
+    }
+
+    #[test]
+    #[should_panic(expected = "at least one region")]
+    fn zero_regions_rejected() {
+        regional_usage_shares(&FleetConfig::default(), 0);
     }
 }

@@ -23,5 +23,5 @@ pub mod tlp;
 
 pub use apps::{top10_apps, AppCategory, VrApp};
 pub use clusters::{Cluster, cluster_workloads};
-pub use fleet::{generate_fleet, FleetConfig, FleetSummary};
+pub use fleet::{generate_fleet, regional_usage_shares, FleetConfig, FleetSummary};
 pub use tlp::TlpDistribution;

@@ -4,7 +4,7 @@
 //! and two-phase (profile + overlay) vs fused bit-identity — over
 //! randomized requests.
 
-use xrcarbon::carbon::ScenarioOverlay;
+use xrcarbon::carbon::{combine_segments, CiTrace, ScenarioOverlay};
 use xrcarbon::dse::batching::evaluate_chunked;
 use xrcarbon::dse::sweep::{sweep, sweep_fused, sweep_sequential, SweepConfig, SweepOutcome};
 use xrcarbon::dse::ScenarioGrid;
@@ -329,6 +329,127 @@ fn parallel_sweep_bit_identical_across_chunk_boundaries() {
     assert_eq!(par.items, 12, "2500 configs should split into 3 chunks per scenario");
     let seq = sweep_sequential(&mut HostEngine::new(), &req, &grid).unwrap();
     assert!(sweeps_bit_identical(&par, &seq));
+}
+
+#[test]
+fn prop_trace_sweep_bit_identical_to_per_segment_fused() {
+    // Trace tentpole invariant: a trace scenario in the sweep equals
+    // lowering the trace to per-segment ci overrides, evaluating every
+    // segment through the engine, and recombining in the documented f32
+    // order — bit for bit — and the two-phase, fused and sequential
+    // sweep paths all agree.
+    forall_cfg(
+        PropConfig { cases: 8, seed: 31 },
+        |r| {
+            let req = gen_request(r);
+            let n = r.below(5) + 1;
+            let cis: Vec<f64> = (0..n).map(|_| r.range(20.0, 950.0)).collect();
+            (req, cis)
+        },
+        |(req, cis)| {
+            let grid = ScenarioGrid::new()
+                .with_lifetime("lt=1e5s", 1e5)
+                .with_lifetime("lt=1e7s", 1e7)
+                .with_trace("trace=rand", CiTrace::hourly(cis));
+            let two = sweep(&HostEngineFactory, req, &grid, &SweepConfig { threads: 4 }).unwrap();
+            let fused =
+                sweep_fused(&HostEngineFactory, req, &grid, &SweepConfig { threads: 4 }).unwrap();
+            let seq = sweep_sequential(&mut HostEngine::new(), req, &grid).unwrap();
+            if !(sweeps_bit_identical(&two, &fused) && sweeps_bit_identical(&two, &seq)) {
+                return false;
+            }
+            // Hand-rolled oracle, scenario by scenario.
+            let mut host = HostEngine::new();
+            grid.scenarios().iter().zip(&two.scenarios).all(|(sc, got)| {
+                let lowered = sc.lower();
+                let weights: Vec<f32> = lowered.iter().map(|(_, w)| *w).collect();
+                let segs: Vec<EvalResult> = lowered
+                    .iter()
+                    .map(|(s, _)| evaluate_chunked(&mut host, &s.apply(req)).unwrap())
+                    .collect();
+                let expect = combine_segments(&segs, &weights);
+                results_bit_identical(&expect, &got.outcome.result)
+            })
+        },
+    );
+}
+
+fn gen_grid(r: &mut Rng) -> ScenarioGrid {
+    // Labels reuse a tiny pool plus a per-axis index: unique within one
+    // grid, colliding often when two generated grids are crossed.
+    let pool = ["p", "q", "r"];
+    let mut g = ScenarioGrid::new();
+    for i in 0..r.below(3) {
+        g = g.with_lifetime(&format!("{}{i}", pool[r.below(3)]), r.range(1e4, 1e8));
+    }
+    for i in 0..r.below(3) {
+        g = g.with_ci(&format!("{}{i}", pool[r.below(3)]), r.range(1e-5, 1e-3));
+    }
+    for i in 0..r.below(2) {
+        g = g.with_beta(&format!("{}{i}", pool[r.below(3)]), r.range(0.1, 3.0));
+    }
+    for i in 0..r.below(2) {
+        g = g.with_trace(&format!("{}{i}", pool[r.below(3)]), CiTrace::flat(r.range(50.0, 900.0)));
+    }
+    g
+}
+
+#[test]
+fn prop_cross_preserves_cardinality_and_label_uniqueness() {
+    // cross() must multiply cardinalities axis-wise and keep scenario
+    // labels unique (report tables and checkpoint digests key on them),
+    // even when the two grids reuse the same axis labels.
+    forall_cfg(
+        PropConfig { cases: 64, seed: 32 },
+        |r| (gen_grid(r), gen_grid(r)),
+        |(a, b)| {
+            let crossed = a.clone().cross(b.clone());
+            let expect_card = [
+                a.ci.len() + b.ci.len(),
+                a.lifetime.len() + b.lifetime.len(),
+                a.qos_scale.len() + b.qos_scale.len(),
+                a.beta.len() + b.beta.len(),
+                a.p_max.len() + b.p_max.len(),
+                a.trace.len() + b.trace.len(),
+            ]
+            .iter()
+            .map(|&n| n.max(1))
+            .product::<usize>();
+            if crossed.cardinality() != expect_card {
+                return false;
+            }
+            // Per-axis labels stay unique and values survive in order.
+            for (ours, theirs, merged) in [
+                (&a.ci, &b.ci, &crossed.ci),
+                (&a.lifetime, &b.lifetime, &crossed.lifetime),
+                (&a.qos_scale, &b.qos_scale, &crossed.qos_scale),
+                (&a.beta, &b.beta, &crossed.beta),
+                (&a.p_max, &b.p_max, &crossed.p_max),
+            ] {
+                let labels: std::collections::HashSet<&str> =
+                    merged.iter().map(|p| p.label.as_str()).collect();
+                if labels.len() != merged.len() {
+                    return false;
+                }
+                let values: Vec<f64> = merged.iter().map(|p| p.value).collect();
+                let expect: Vec<f64> =
+                    ours.iter().chain(theirs.iter()).map(|p| p.value).collect();
+                if values != expect {
+                    return false;
+                }
+            }
+            let trace_labels: std::collections::HashSet<&str> =
+                crossed.trace.iter().map(|p| p.label.as_str()).collect();
+            if trace_labels.len() != crossed.trace.len() {
+                return false;
+            }
+            // Scenario labels are unique and match the cardinality.
+            let scs = crossed.scenarios();
+            let labels: std::collections::HashSet<&str> =
+                scs.iter().map(|s| s.label.as_str()).collect();
+            scs.len() == expect_card && labels.len() == scs.len()
+        },
+    );
 }
 
 #[test]

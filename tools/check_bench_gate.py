@@ -28,8 +28,13 @@ advantage:
   read must keep a decisive decode advantage over the JSON envelope
   (observed well above 2x; the floor is the noise-shielded minimum the
   raw-bits format must never lose).
+* trace — `trace/warm_contractions_avoided` must be >= 1.0x (hits /
+  profile chunks of a warm sweep whose scenarios carry a 24-segment
+  diurnal trace): the trace axis multiplies phase-B overlays, never
+  phase-A profiling, so every contraction must still come from the
+  cache regardless of segment fan-out. Deterministic counter check.
 
-Usage: check_bench_gate.py BENCH_sweep.json BENCH_search.json BENCH_cache.json
+Usage: check_bench_gate.py BENCH_sweep.json BENCH_search.json BENCH_cache.json BENCH_trace.json
 """
 import json
 import sys
@@ -44,6 +49,9 @@ SEARCH_EXPANDED_MIN = 5.0
 CACHE_WARM_MIN = 1.0
 # Binary sidecar warm reads must beat JSON envelope parses by >= 2x.
 CACHE_BINARY_READ_MIN = 2.0
+# A warm trace sweep must still avoid every phase-A contraction: the
+# trace fan-out is phase-B-only work.
+TRACE_WARM_MIN = 1.0
 
 
 def fail(msg):
@@ -139,14 +147,38 @@ def check_cache(path):
         )
 
 
-def main():
-    if len(sys.argv) != 4:
+def check_trace(path):
+    rows = load(path)
+    name = "trace/warm_contractions_avoided"
+    row = rows.get(name)
+    if row is None:
+        fail(f"{path}: missing entry {name}")
+    ratio = row.get("throughput")
+    if ratio is None:
+        fail(f"{path}: {name} has no ratio")
+    print(
+        f"trace gate: {name} = {ratio:.2f}x "
+        f"(min {TRACE_WARM_MIN:.2f}x, {row['samples']} contraction(s) avoided)"
+    )
+    if row["samples"] < 1:
+        fail(f"{name}: warm trace sweep avoided zero contractions")
+    if ratio < TRACE_WARM_MIN:
         fail(
-            "usage: check_bench_gate.py BENCH_sweep.json BENCH_search.json BENCH_cache.json"
+            f"{name} reports {ratio:.2f}x < {TRACE_WARM_MIN:.2f}x — the trace fan-out "
+            f"re-contracted at least one cached chunk (segments must be phase-B-only)"
+        )
+
+
+def main():
+    if len(sys.argv) != 5:
+        fail(
+            "usage: check_bench_gate.py BENCH_sweep.json BENCH_search.json "
+            "BENCH_cache.json BENCH_trace.json"
         )
     check_sweep(sys.argv[1])
     check_search(sys.argv[2])
     check_cache(sys.argv[3])
+    check_trace(sys.argv[4])
     print("bench gate: OK")
 
 
