@@ -1,0 +1,192 @@
+//! Bench: the PR 7 hot-loop optimizations, each against the exact code
+//! it replaced.
+//!
+//! 1. **Phase A, vector vs scalar** — the lane-blocked contraction
+//!    kernel (`HostEngine::new()`, 8 configs per pass over the columnar
+//!    views) against the per-config scalar oracle
+//!    (`HostEngine::scalar_oracle()`) on one dense packed batch.
+//! 2. **Phase B, batched vs single overlays** — one
+//!    `ScenarioOverlay::apply_batch` pass (reused scratch, hoisted
+//!    shared embodied-carbon fold) against the same overlays applied
+//!    one `apply` at a time.
+//! 3. **Scheduling, pool vs spawn** — the same multi-chunk sweep run on
+//!    the persistent `WorkerPool` (`HostEngineFactory` opts in) and on
+//!    the per-call scoped-spawn scheduler (`ScopedSpawn` adapter),
+//!    which pays thread spawn + engine build every call. A sweep per
+//!    iteration stands in for search generations: both go through the
+//!    same `fan_out`.
+//!
+//! All three pairs are bit-identical by construction (locked by
+//! `rust/tests/hotloop_props.rs`); this bench asserts cheap bit-equality
+//! on the way and measures the speedups. Emits `BENCH_hotloop.json`
+//! with three ratio pseudo-entries the CI smoke gate
+//! (`tools/check_bench_gate.py`) floors at 1.0×:
+//!
+//! * `hotloop/vector_speedup` — scalar mean / lane-kernel mean;
+//! * `hotloop/overlay_batch_speedup` — single-apply mean / batch mean;
+//! * `hotloop/pool_speedup` — scoped-spawn mean / pool mean.
+//!
+//! Set `XRCARBON_BENCH_QUICK=1` for the short sampling mode CI uses.
+
+use std::time::Duration;
+
+use xrcarbon::bench::{write_json, BenchResult, Bencher};
+use xrcarbon::carbon::{OverlayScratch, ScenarioOverlay};
+use xrcarbon::dse::sweep::{sweep, SweepConfig};
+use xrcarbon::dse::ScenarioGrid;
+use xrcarbon::matrixform::{ConfigRow, EvalRequest, PackedProblem, TaskMatrix};
+use xrcarbon::runtime::{profile_request, Engine, HostEngine, HostEngineFactory, ScopedSpawn};
+
+/// Counter pseudo-entry: `samples` carries a count, `throughput` a
+/// ratio; timings are zero (this row is data, not a measurement).
+fn counter(name: &str, samples: usize, ratio: f64) -> BenchResult {
+    BenchResult {
+        name: name.to_string(),
+        samples,
+        mean: Duration::ZERO,
+        p50: Duration::ZERO,
+        p95: Duration::ZERO,
+        throughput: Some(ratio),
+    }
+}
+
+/// A dense request at the padded shape ceiling (8 tasks × 32 kernels ×
+/// 8 components) so the contraction does maximal arithmetic per config —
+/// the regime the lane kernel targets.
+fn fat_request(c: usize) -> EvalRequest {
+    let kernels: Vec<String> = (0..32).map(|k| format!("k{k}")).collect();
+    let tasks: Vec<String> = (0..8).map(|t| format!("t{t}")).collect();
+    let mut tm = TaskMatrix::new(tasks, kernels);
+    for ti in 0..8 {
+        for ki in 0..32 {
+            tm.set(ti, ki, ((ti * 7 + ki * 3) % 23 + 1) as f64);
+        }
+    }
+    EvalRequest {
+        tasks: tm,
+        configs: (0..c)
+            .map(|i| ConfigRow {
+                name: format!("cfg{i}"),
+                f_clk: 1e9 + i as f64 * 1e5,
+                d_k: (0..32).map(|k| 1e-4 * ((i + k) % 13 + 1) as f64).collect(),
+                e_dyn: (0..32).map(|k| 1e-3 * ((i + 2 * k) % 7 + 1) as f64).collect(),
+                leak_w: 0.05 + (i % 11) as f64 * 0.01,
+                c_comp: (0..8).map(|j| 50.0 + ((i + j) % 17) as f64 * 5.0).collect(),
+            })
+            .collect(),
+        online: vec![1.0; 8],
+        qos: vec![f64::INFINITY; 8],
+        ci_use_g_per_j: 1.2e-4,
+        lifetime_s: 1e7,
+        beta: 1.0,
+        p_max_w: f64::INFINITY,
+    }
+}
+
+fn main() {
+    let mut results: Vec<BenchResult> = Vec::new();
+
+    // -- 1. Phase A: lane-blocked kernel vs scalar oracle --
+    let packed = PackedProblem::from_request(&fat_request(1000));
+    let mut lanes_eng = HostEngine::new();
+    let mut scalar_eng = HostEngine::scalar_oracle();
+    // The invariant the speedup is only allowed to exist under.
+    let a = lanes_eng.profile(&packed).unwrap();
+    let b = scalar_eng.profile(&packed).unwrap();
+    assert!(
+        a.energy.iter().zip(&b.energy).all(|(x, y)| x.to_bits() == y.to_bits())
+            && a.delay.iter().zip(&b.delay).all(|(x, y)| x.to_bits() == y.to_bits())
+            && a.d_task.iter().zip(&b.d_task).all(|(x, y)| x.to_bits() == y.to_bits()),
+        "lane kernel diverged from the scalar oracle"
+    );
+    let vector = Bencher::new("hotloop/profile_vector_1000cfg")
+        .quick_if_env()
+        .run(|| std::hint::black_box(lanes_eng.profile(std::hint::black_box(&packed)).unwrap()));
+    println!("{}", vector.report());
+    let scalar = Bencher::new("hotloop/profile_scalar_1000cfg")
+        .quick_if_env()
+        .run(|| std::hint::black_box(scalar_eng.profile(std::hint::black_box(&packed)).unwrap()));
+    println!("{}", scalar.report());
+    let vector_speedup = scalar.mean.as_secs_f64() / vector.mean.as_secs_f64().max(1e-12);
+    println!("phase A vector vs scalar: {vector_speedup:.2}x");
+
+    // -- 2. Phase B: batched overlays vs one-at-a-time --
+    let base = fat_request(1000);
+    let prof = profile_request(&mut HostEngine::new(), &base).unwrap();
+    // A realistic fan-out: 48 scenarios over one profile (think 2 grids
+    // × 24 trace segments), all sharing the base `online` mask so the
+    // batch may hoist the embodied-carbon fold.
+    let overlays: Vec<ScenarioOverlay> = (0..48)
+        .map(|s| {
+            let mut req = fat_request(0);
+            req.lifetime_s = 1e6 * (s % 8 + 1) as f64;
+            req.beta = 0.25 * (s % 5 + 1) as f64;
+            req.ci_use_g_per_j = 1e-4 + s as f64 * 1e-6;
+            ScenarioOverlay::from_request(&req)
+        })
+        .collect();
+    let mut scratch = OverlayScratch::new();
+    {
+        // Bit-equality spot check before timing anything.
+        let batched = ScenarioOverlay::apply_batch(&overlays, &prof, &mut scratch);
+        for (ov, res) in overlays.iter().zip(&batched) {
+            let single = ov.apply(&prof);
+            assert_eq!(single.metrics, res.metrics, "overlay batch diverged from apply()");
+        }
+    }
+    let batch = Bencher::new("hotloop/overlay_batch_48x1000cfg").quick_if_env().run(|| {
+        std::hint::black_box(ScenarioOverlay::apply_batch(
+            std::hint::black_box(&overlays),
+            &prof,
+            &mut scratch,
+        ))
+    });
+    println!("{}", batch.report());
+    let single = Bencher::new("hotloop/overlay_single_48x1000cfg").quick_if_env().run(|| {
+        let out: Vec<_> =
+            overlays.iter().map(|ov| ov.apply(std::hint::black_box(&prof))).collect();
+        std::hint::black_box(out)
+    });
+    println!("{}", single.report());
+    let overlay_speedup = single.mean.as_secs_f64() / batch.mean.as_secs_f64().max(1e-12);
+    println!("phase B batched vs single: {overlay_speedup:.2}x");
+
+    // -- 3. Scheduling: persistent pool vs per-call scoped spawn --
+    // 300 configs → 3 profile chunks on 3 workers; the spawn baseline
+    // pays 3 thread spawns + engine builds per sweep, the pool pays them
+    // once for the whole bench.
+    let space = fat_request(300);
+    let grid = ScenarioGrid::new().with_beta("b=1", 1.0).with_beta("b=2", 2.0);
+    let cfg = SweepConfig { threads: 3 };
+    let pool_out = sweep(&HostEngineFactory, &space, &grid, &cfg).unwrap();
+    let spawn_out = sweep(&ScopedSpawn(HostEngineFactory), &space, &grid, &cfg).unwrap();
+    for (p, s) in pool_out.scenarios.iter().zip(&spawn_out.scenarios) {
+        assert_eq!(
+            p.outcome.result.metrics, s.outcome.result.metrics,
+            "pool scheduler diverged from scoped spawn"
+        );
+    }
+    let pool = Bencher::new("hotloop/sweep_pool_3x100cfg")
+        .quick_if_env()
+        .run(|| std::hint::black_box(sweep(&HostEngineFactory, &space, &grid, &cfg).unwrap()));
+    println!("{}", pool.report());
+    let spawn = Bencher::new("hotloop/sweep_spawn_3x100cfg").quick_if_env().run(|| {
+        std::hint::black_box(sweep(&ScopedSpawn(HostEngineFactory), &space, &grid, &cfg).unwrap())
+    });
+    println!("{}", spawn.report());
+    let pool_speedup = spawn.mean.as_secs_f64() / pool.mean.as_secs_f64().max(1e-12);
+    println!("scheduling pool vs spawn: {pool_speedup:.2}x");
+
+    results.push(vector);
+    results.push(scalar);
+    results.push(counter("hotloop/vector_speedup", 1000, vector_speedup));
+    results.push(batch);
+    results.push(single);
+    results.push(counter("hotloop/overlay_batch_speedup", overlays.len(), overlay_speedup));
+    results.push(pool);
+    results.push(spawn);
+    results.push(counter("hotloop/pool_speedup", pool_out.profile_chunks, pool_speedup));
+
+    write_json(&results, "BENCH_hotloop.json").expect("writing BENCH_hotloop.json");
+    println!("[json] wrote BENCH_hotloop.json ({} benchmarks)", results.len());
+}

@@ -45,7 +45,7 @@ pub use embodied::{embodied_carbon, ChipDesign, Die};
 pub use intensity::{FabGrid, UseGrid};
 pub use metrics::{beta_regime, BetaRegime, MetricInputs, MetricKind, MetricSet};
 pub use operational::{amortized_embodied, operational_carbon};
-pub use overlay::ScenarioOverlay;
+pub use overlay::{OverlayScratch, ScenarioOverlay};
 pub use trace::{combine_segments, CiSegment, CiTrace, FleetCohort, FleetMix};
 pub use process::{ProcessNode, ProcessParams};
 pub use yield_model::{gross_die_per_wafer, YieldModel};

@@ -17,10 +17,35 @@
 //! Cost: O(C·J) per overlay application versus the engine's O(C·T·K)
 //! contraction, which is what lets multi-scenario sweeps profile once and
 //! fan only overlays across the scenario grid.
+//!
+//! Overlays apply one at a time ([`ScenarioOverlay::apply`]) or batched
+//! ([`ScenarioOverlay::apply_batch`]): the batch walks a profile's row
+//! block **once** for S overlays through a caller-provided
+//! [`OverlayScratch`] (no per-scenario metric allocation), hoists the
+//! `c_emb_overall` component contraction when every overlay shares one
+//! `online` mask, and is bit-identical to S sequential `apply` calls —
+//! identical f32 operations on identical inputs, per overlay (locked by
+//! `rust/tests/hotloop_props.rs::prop_apply_batch_bit_identical_to_apply`).
 
 use crate::matrixform::{
     DesignProfile, EvalRequest, EvalResult, PackedProblem, J_PAD, NUM_METRICS, T_PAD,
 };
+
+/// Reusable scratch for overlay application: one `[S × NUM_METRICS ×
+/// c_pad]` f32 slab, grown on demand and retained across calls so a
+/// sweep's phase B allocates it once per driver instead of once per
+/// (scenario × chunk).
+#[derive(Debug, Default)]
+pub struct OverlayScratch {
+    metrics: Vec<f32>,
+}
+
+impl OverlayScratch {
+    /// Empty scratch; buffers are sized lazily by the first batch.
+    pub fn new() -> Self {
+        OverlayScratch::default()
+    }
+}
 
 /// The scenario-dependent half of an evaluation request, padded f32.
 #[derive(Debug, Clone)]
@@ -82,47 +107,96 @@ impl ScenarioOverlay {
 
     /// Apply this scenario to a profile: the fused engine's carbon and
     /// feasibility arithmetic, operation for operation (keep in lockstep
-    /// with `runtime/host.rs::Engine::execute` — the bit-identity tests
-    /// fail loudly otherwise).
+    /// with `runtime/host.rs::fold_carbon` — the bit-identity tests fail
+    /// loudly otherwise). Allocates a fresh scratch; hot paths applying
+    /// many overlays should use [`Self::apply_with`] or
+    /// [`Self::apply_batch`] with a reused [`OverlayScratch`].
     pub fn apply(&self, prof: &DesignProfile) -> EvalResult {
+        self.apply_with(prof, &mut OverlayScratch::new())
+    }
+
+    /// [`Self::apply`] with a caller-provided scratch (no allocation
+    /// beyond the unpacked result).
+    pub fn apply_with(&self, prof: &DesignProfile, scratch: &mut OverlayScratch) -> EvalResult {
+        Self::apply_batch(std::slice::from_ref(self), prof, scratch)
+            .into_iter()
+            .next()
+            .expect("one overlay in, one result out")
+    }
+
+    /// Apply S overlays to one profile's row block in a single pass.
+    ///
+    /// The config loop is outermost so each config's `energy`/`delay`/
+    /// `c_comp` row is loaded once for all S scenarios, and when every
+    /// overlay carries the **same** `online` mask the `c_emb_overall`
+    /// component contraction is computed once per config and shared —
+    /// identical input bits through the identical f32 operation order,
+    /// so the hoist (like the batching itself) is bit-identical to S
+    /// sequential [`Self::apply`] calls. Results come back in overlay
+    /// order.
+    pub fn apply_batch(
+        overlays: &[ScenarioOverlay],
+        prof: &DesignProfile,
+        scratch: &mut OverlayScratch,
+    ) -> Vec<EvalResult> {
+        let s = overlays.len();
         let c_pad = prof.c_pad;
-        let mut metrics = vec![0.0f32; NUM_METRICS * c_pad];
+        let slab = NUM_METRICS * c_pad;
+        scratch.metrics.clear();
+        scratch.metrics.resize(s * slab, 0.0);
+        // `online` masks are exact f32 arrays (0.0/1.0 provisioning
+        // flags), so equality means the hoisted contraction is the same
+        // operation sequence every overlay would run itself.
+        let shared_online = s > 1 && overlays.windows(2).all(|w| w[0].online == w[1].online);
         for ci in 0..c_pad {
             let energy = prof.energy[ci];
             let delay = prof.delay[ci];
-
-            let c_op = self.ci_use * energy;
-            let mut c_emb_overall = 0.0f32;
-            for ji in 0..J_PAD {
-                c_emb_overall += prof.c_comp[ci * J_PAD + ji] * self.online[ji];
-            }
-            let c_emb = c_emb_overall * delay / self.lifetime;
-
-            let c_total = c_op + c_emb;
-            let tcdp = (c_op + self.beta * c_emb) * delay;
-            let edp = energy * delay;
-            let cdp = c_emb * delay;
-            let cep = c_emb * energy;
-            let ce2p = cep * energy;
-            let c2ep = c_emb * cep;
-
-            let mut qos_ok = true;
-            for ti in 0..T_PAD {
-                if !(prof.d_task[ci * T_PAD + ti] <= self.qos[ti]) {
-                    qos_ok = false;
+            let mut shared_emb = 0.0f32;
+            if shared_online {
+                for ji in 0..J_PAD {
+                    shared_emb += prof.c_comp[ci * J_PAD + ji] * overlays[0].online[ji];
                 }
             }
-            let avg_power = energy / delay.max(1e-30);
-            let feasible = if qos_ok && avg_power <= self.p_max { 1.0 } else { 0.0 };
+            for (si, ov) in overlays.iter().enumerate() {
+                let c_op = ov.ci_use * energy;
+                let c_emb_overall = if shared_online {
+                    shared_emb
+                } else {
+                    let mut acc = 0.0f32;
+                    for ji in 0..J_PAD {
+                        acc += prof.c_comp[ci * J_PAD + ji] * ov.online[ji];
+                    }
+                    acc
+                };
+                let c_emb = c_emb_overall * delay / ov.lifetime;
 
-            let rows = [
-                energy, delay, c_op, c_emb, c_total, tcdp, edp, cdp, cep, ce2p, c2ep, feasible,
-            ];
-            for (row, v) in rows.iter().enumerate() {
-                metrics[row * c_pad + ci] = *v;
+                let c_total = c_op + c_emb;
+                let tcdp = (c_op + ov.beta * c_emb) * delay;
+                let edp = energy * delay;
+                let cdp = c_emb * delay;
+                let cep = c_emb * energy;
+                let ce2p = cep * energy;
+                let c2ep = c_emb * cep;
+
+                let mut qos_ok = true;
+                for ti in 0..T_PAD {
+                    if !(prof.d_task[ci * T_PAD + ti] <= ov.qos[ti]) {
+                        qos_ok = false;
+                    }
+                }
+                let avg_power = energy / delay.max(1e-30);
+                let feasible = if qos_ok && avg_power <= ov.p_max { 1.0 } else { 0.0 };
+
+                let rows = [
+                    energy, delay, c_op, c_emb, c_total, tcdp, edp, cdp, cep, ce2p, c2ep, feasible,
+                ];
+                let m = &mut scratch.metrics[si * slab..(si + 1) * slab];
+                for (row, v) in rows.iter().enumerate() {
+                    m[row * c_pad + ci] = *v;
+                }
             }
         }
-        prof.unpack(&metrics)
+        (0..s).map(|si| prof.unpack(&scratch.metrics[si * slab..(si + 1) * slab])).collect()
     }
 }
 
@@ -193,6 +267,51 @@ mod tests {
         for (a, b) in two.d_task.iter().zip(&fused.d_task) {
             assert_eq!(a.to_bits(), b.to_bits());
         }
+    }
+
+    #[test]
+    fn apply_batch_matches_sequential_apply_bitwise() {
+        let req = request();
+        let mut host = HostEngine::new();
+        let prof = profile_request(&mut host, &ProfileRequest::from_eval(&req).to_eval()).unwrap();
+        // Mixed masks (hoist off) and shared masks (hoist on) both ride
+        // through the same batch entry point.
+        let mut variants = Vec::new();
+        for (i, online) in
+            [vec![1.0, 1.0], vec![1.0, 0.0], vec![1.0, 1.0], vec![0.0, 1.0]].iter().enumerate()
+        {
+            let mut r = req.clone();
+            r.online = online.clone();
+            r.lifetime_s = 1e6 * (i + 1) as f64;
+            r.beta = 0.5 * (i + 1) as f64;
+            variants.push(ScenarioOverlay::from_request(&r));
+        }
+        let shared: Vec<ScenarioOverlay> = (0..5)
+            .map(|i| {
+                let mut r = req.clone();
+                r.lifetime_s = 2e6 * (i + 1) as f64;
+                ScenarioOverlay::from_request(&r)
+            })
+            .collect();
+        let mut scratch = OverlayScratch::new();
+        for overlays in [&variants, &shared] {
+            let batched = ScenarioOverlay::apply_batch(overlays, &prof, &mut scratch);
+            assert_eq!(batched.len(), overlays.len());
+            for (ov, b) in overlays.iter().zip(&batched) {
+                let single = ov.apply(&prof);
+                assert_eq!(single.names, b.names);
+                assert_eq!(single.metrics, b.metrics);
+                assert_eq!(single.d_task, b.d_task);
+            }
+        }
+        // Scratch reuse across differently-sized batches stays clean.
+        let lone = ScenarioOverlay::apply_batch(
+            std::slice::from_ref(&variants[1]),
+            &prof,
+            &mut scratch,
+        );
+        assert_eq!(lone[0].metrics, variants[1].apply(&prof).metrics);
+        assert!(ScenarioOverlay::apply_batch(&[], &prof, &mut scratch).is_empty());
     }
 
     #[test]

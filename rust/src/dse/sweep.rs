@@ -8,11 +8,16 @@
 //! * **Phase A** — profile each config chunk **once** into a
 //!   scenario-invariant [`DesignProfile`], fanning chunks across worker
 //!   threads (engines are `!Send`, so each worker builds its own through
-//!   an [`EngineFactory`]). Chunk boundaries are exactly the engine-call
-//!   boundaries `evaluate_chunked` uses sequentially.
-//! * **Phase B** — apply a cheap pure-Rust [`ScenarioOverlay`] per
-//!   (scenario × chunk), merging chunk results scenario-major in chunk
-//!   order.
+//!   an [`EngineFactory`]; factories that opt into pooling via
+//!   `EngineFactory::shared` run on a persistent
+//!   [`WorkerPool`](crate::runtime::WorkerPool) that keeps workers and
+//!   their engines alive across chunks, sweeps and search generations).
+//!   Chunk boundaries are exactly the engine-call boundaries
+//!   `evaluate_chunked` uses sequentially.
+//! * **Phase B** — apply cheap pure-Rust [`ScenarioOverlay`]s, batched
+//!   per profile chunk ([`ScenarioOverlay::apply_batch`] folds every
+//!   lowered scenario of the grid over a chunk in one pass), merging
+//!   chunk results scenario-major in chunk order.
 //!
 //! Engine work drops from O(N_scenarios × C × T × K) to
 //! O(C × T × K + N_scenarios × C), yet on the host engine the output
@@ -36,9 +41,9 @@
 //! cluster, grid or engine) is rejected, never silently blended.
 
 use std::path::Path;
-use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::atomic::{AtomicBool, AtomicUsize, Ordering};
 
-use crate::carbon::{combine_segments, ScenarioOverlay};
+use crate::carbon::{combine_segments, OverlayScratch, ScenarioOverlay};
 use crate::configfmt::{parse, ContentHasher, Json};
 use crate::matrixform::{
     ConfigRow, DesignProfile, EvalRequest, EvalResult, MetricRow, ProfileRequest, TaskMatrix,
@@ -138,13 +143,59 @@ impl SweepOutcome {
     }
 }
 
-/// Fan `items` across up to `threads` worker threads, one engine per
-/// worker, shared atomic work queue; results return in item order.
+/// Fan owned `items` across worker engines; results return in item
+/// order. Dispatches to the calling thread's persistent
+/// [`WorkerPool`](crate::runtime::WorkerPool) when the factory opts in
+/// (`EngineFactory::shared`) and falls back to per-call scoped spawning
+/// otherwise. Both schedulers share one contract: order-preserving
+/// merge, fail-fast on the first error (workers check a shared abort
+/// flag before claiming each item instead of draining the queue), and
+/// deterministic lowest-item-index error selection — so for a
+/// deterministic engine the results, and the reported error, are
+/// independent of thread count and scheduler.
 fn fan_out<T, R, F>(
     factory: &dyn EngineFactory,
-    items: &[T],
+    items: Vec<T>,
     threads: usize,
     f: F,
+) -> crate::Result<(Vec<R>, usize)>
+where
+    T: Send + Sync + 'static,
+    R: Send + 'static,
+    F: Fn(&mut dyn Engine, &T) -> crate::Result<R> + Send + Sync + 'static,
+{
+    let n_items = items.len();
+    if n_items == 0 {
+        return Ok((Vec::new(), 1));
+    }
+    let threads = resolve_threads(threads);
+    if let Some(pool) = crate::runtime::shared_pool(factory, threads) {
+        // Persistent scheduler: even a single-item batch goes through
+        // the pool so its long-lived engines are reused instead of a
+        // fresh one being built per call.
+        return pool.fan_out(items, f);
+    }
+    let n_workers = threads.min(n_items).max(1);
+    if n_workers == 1 {
+        // Single-worker path: same items, same order, no thread overhead.
+        let mut engine = factory.build()?;
+        let mut out = Vec::with_capacity(n_items);
+        for item in &items {
+            out.push(f(engine.as_mut(), item)?);
+        }
+        return Ok((out, 1));
+    }
+    scoped_fan_out(factory, &items, n_workers, &f)
+}
+
+/// Per-call scoped-spawn scheduler — the fallback for factories that do
+/// not opt into pooling: one engine per spawned worker, shared atomic
+/// work queue, shared abort flag for fail-fast.
+fn scoped_fan_out<T, R, F>(
+    factory: &dyn EngineFactory,
+    items: &[T],
+    n_workers: usize,
+    f: &F,
 ) -> crate::Result<(Vec<R>, usize)>
 where
     T: Sync,
@@ -152,46 +203,71 @@ where
     F: Fn(&mut dyn Engine, &T) -> crate::Result<R> + Sync,
 {
     let n_items = items.len();
-    let threads = resolve_threads(threads);
-    let n_workers = threads.min(n_items).max(1);
-
-    if n_workers == 1 {
-        // Single-worker path: same items, same order, no thread overhead.
-        let mut engine = factory.build()?;
-        let mut out = Vec::with_capacity(n_items);
-        for item in items {
-            out.push(f(engine.as_mut(), item)?);
-        }
-        return Ok((out, 1));
-    }
-
     let mut slots: Vec<Option<R>> = (0..n_items).map(|_| None).collect();
     let next = AtomicUsize::new(0);
-    std::thread::scope(|s| -> crate::Result<()> {
+    let abort = AtomicBool::new(false);
+    let mut first_err: Option<(usize, anyhow::Error)> = None;
+    std::thread::scope(|s| {
         let mut handles = Vec::with_capacity(n_workers);
         for _ in 0..n_workers {
-            let next = &next;
-            let f = &f;
-            handles.push(s.spawn(move || -> crate::Result<Vec<(usize, R)>> {
-                let mut engine = factory.build()?;
+            let (next, abort) = (&next, &abort);
+            handles.push(s.spawn(move || -> Vec<(usize, crate::Result<R>)> {
                 let mut done = Vec::new();
+                let mut engine = match factory.build() {
+                    Ok(e) => e,
+                    Err(e) => {
+                        // Attribute the build failure to the next
+                        // unclaimed item so nobody evaluates it and the
+                        // error surfaces at a definite index.
+                        abort.store(true, Ordering::Relaxed);
+                        let i = next.fetch_add(1, Ordering::Relaxed);
+                        if i < n_items {
+                            done.push((i, Err(e)));
+                        }
+                        return done;
+                    }
+                };
                 loop {
+                    if abort.load(Ordering::Relaxed) {
+                        break; // fail-fast: a sibling already failed
+                    }
                     let i = next.fetch_add(1, Ordering::Relaxed);
-                    if i >= items.len() {
+                    if i >= n_items {
                         break;
                     }
-                    done.push((i, f(engine.as_mut(), &items[i])?));
+                    let res = f(engine.as_mut(), &items[i]);
+                    let failed = res.is_err();
+                    if failed {
+                        abort.store(true, Ordering::Relaxed);
+                    }
+                    done.push((i, res));
+                    if failed {
+                        break;
+                    }
                 }
-                Ok(done)
+                done
             }));
         }
         for h in handles {
-            for (i, res) in h.join().expect("sweep worker panicked")? {
-                slots[i] = Some(res);
+            let results = match h.join() {
+                Ok(r) => r,
+                Err(payload) => std::panic::resume_unwind(payload),
+            };
+            for (i, res) in results {
+                match res {
+                    Ok(r) => slots[i] = Some(r),
+                    Err(e) => {
+                        if first_err.as_ref().is_none_or(|(j, _)| i < *j) {
+                            first_err = Some((i, e));
+                        }
+                    }
+                }
             }
         }
-        Ok(())
-    })?;
+    });
+    if let Some((_, e)) = first_err {
+        return Err(e);
+    }
     let out = slots.into_iter().map(|s| s.expect("work item left unevaluated")).collect();
     Ok((out, n_workers))
 }
@@ -388,10 +464,10 @@ pub fn sweep_fingerprint(
     h.finish_hex()
 }
 
-/// Neutral chunk request over a borrowed slice of the space (the same
-/// shape [`chunk_neutral`] builds, one chunk at a time — miss workers
-/// build theirs on demand instead of the coordinator cloning the whole
-/// space up front).
+/// Neutral chunk request over a borrowed slice of the space, one chunk
+/// at a time — the coordinator builds one per cache miss as the owned
+/// work item the (possibly pooled) workers receive; only the missed
+/// chunks are ever cloned, never the whole space.
 fn neutral_chunk(tasks: &TaskMatrix, configs: &[ConfigRow]) -> EvalRequest {
     ProfileRequest { tasks: tasks.clone(), configs: Vec::new() }.chunk_eval(configs.to_vec())
 }
@@ -532,10 +608,12 @@ impl<'a> SweepDriver<'a> {
     }
 
     /// Profile the next batch of chunks (one per worker thread): cache
-    /// lookups first, then one fan-out over the misses — which pack,
-    /// contract and write back *inside the workers*, keeping the
-    /// coordinator thread off the miss path entirely. Returns `true`
-    /// when phase A is complete.
+    /// lookups first, then one fan-out over the misses — which pack and
+    /// contract *inside the workers*. The coordinator builds each
+    /// miss's neutral chunk request up front and writes results back to
+    /// the cache once they return (pooled workers outlive the borrow of
+    /// `cache`, and the store is cheap next to a contraction). Returns
+    /// `true` when phase A is complete.
     pub fn step(
         &mut self,
         factory: &dyn EngineFactory,
@@ -576,25 +654,27 @@ impl<'a> SweepDriver<'a> {
             self.profiles[i] = Some(profile);
         }
         if !misses.is_empty() {
-            let (base, ranges, engine) = (self.base, &self.ranges, self.engine);
-            let keys: Option<&[CacheKey]> = self.keys.get().map(Vec::as_slice);
+            let ranges = &self.ranges;
+            let items: Vec<EvalRequest> = misses
+                .iter()
+                .map(|&i| neutral_chunk(&self.base.tasks, &self.base.configs[ranges[i].clone()]))
+                .collect();
+            // Packing happens inside the workers (the coordinator only
+            // hashed `ConfigRow`s for the key); the closure captures
+            // nothing, so it runs on pooled workers unchanged.
             let (computed, threads) =
-                fan_out(factory, &misses, self.cfg.threads, |eng, &i: &usize| {
-                    // Packing happens here, inside the worker — the
-                    // coordinator only hashed `ConfigRow`s for the key.
-                    let req = neutral_chunk(&base.tasks, &base.configs[ranges[i].clone()]);
-                    let profile = profile_request(eng, &req)?;
-                    // A failed write-back (disk full, permissions) must
-                    // not abort a sweep whose engine work succeeded —
-                    // the profile is used anyway and the failure shows
-                    // up as `write_errors` on the stats surface.
-                    if let (Some(c), Some(keys)) = (cache, keys) {
-                        let _ = c.store(&keys[i], &profile, engine);
-                    }
-                    Ok(profile)
+                fan_out(factory, items, self.cfg.threads, |eng, req: &EvalRequest| {
+                    profile_request(eng, req)
                 })?;
             self.threads_used = self.threads_used.max(threads);
             for (&i, profile) in misses.iter().zip(computed) {
+                // A failed write-back (disk full, permissions) must not
+                // abort a sweep whose engine work succeeded — the
+                // profile is used anyway and the failure shows up as
+                // `write_errors` on the stats surface.
+                if let (Some(c), Some(keys)) = (cache, self.keys.get()) {
+                    let _ = c.store(&keys[i], &profile, self.engine);
+                }
                 self.profiles[i] = Some(profile);
             }
         }
@@ -605,63 +685,93 @@ impl<'a> SweepDriver<'a> {
     /// Phase B: fold the scenario overlays over the completed profiles,
     /// merging (scenario × chunk) results in the same scenario-major,
     /// chunk-ascending order the fused paths use — bit-identical to them.
-    /// A trace scenario lowers into per-segment overlays (chunks merged
-    /// per segment first, then segments combined in trace order — the
-    /// DESIGN.md §3.4 contract) and additionally evaluates its static
-    /// mean-CI collapse for the [`TraceMeta`] report (one extra overlay
-    /// fold, not counted in `items`). Panics if phase A is incomplete
-    /// (drive [`Self::step`] to done first); `cache_delta` is attached
-    /// verbatim as the outcome's `cache` field.
+    /// Every scenario's lowered overlays (one for a static scenario, one
+    /// per segment for a trace, plus the trace's static mean-CI collapse
+    /// for the [`TraceMeta`] report — not counted in `items`) flatten
+    /// into **one** overlay batch, so each profile chunk is traversed by
+    /// a single [`ScenarioOverlay::apply_batch`] pass over the whole
+    /// grid; per-segment results then combine in trace order (the
+    /// DESIGN.md §3.4 contract). Panics if phase A is incomplete (drive
+    /// [`Self::step`] to done first); `cache_delta` is attached verbatim
+    /// as the outcome's `cache` field.
     pub fn outcome(&self, cache_delta: Option<CacheStats>) -> SweepOutcome {
         assert!(self.is_done(), "sweep phase A incomplete: call step() until done");
         let profiles: Vec<&DesignProfile> =
             self.profiles.iter().map(|p| p.as_ref().expect("chunk left unprofiled")).collect();
         let scenarios = self.grid.scenarios();
         let shell = shallow(self.base);
-        // Overlay-fold one static scenario over every profile chunk, in
-        // chunk order. An empty design space profiles into zero chunks;
-        // the fold then reports the empty result.
-        let fold = |sc: &super::grid::SweepScenario| -> EvalResult {
-            let overlay = ScenarioOverlay::from_request(&sc.apply(&shell));
-            let mut merged: Option<EvalResult> = None;
-            for &prof in &profiles {
-                let res = overlay.apply(prof);
-                merged = Some(match merged {
+
+        // How to slice the flat overlay batch back per scenario.
+        struct Plan {
+            label: String,
+            /// This scenario's first overlay in the flat batch.
+            first: usize,
+            /// Lowered segment weights (len 1 for static scenarios).
+            weights: Vec<f32>,
+            /// Trace ingredients: segments, mean/min/max CI (g/kWh). The
+            /// static collapse sits at `first + weights.len()`.
+            trace: Option<(usize, f64, f64, f64)>,
+        }
+        let mut overlays: Vec<ScenarioOverlay> = Vec::new();
+        let mut plans: Vec<Plan> = Vec::with_capacity(scenarios.len());
+        let mut items = 0usize;
+        for sc in scenarios {
+            let first = overlays.len();
+            let lowered = sc.lower();
+            items += lowered.len() * profiles.len();
+            let weights: Vec<f32> = lowered.iter().map(|&(_, w)| w).collect();
+            for (seg, _) in &lowered {
+                overlays.push(ScenarioOverlay::from_request(&seg.apply(&shell)));
+            }
+            let trace = sc.trace.as_ref().map(|tr| {
+                let collapse = sc.static_collapse().apply(&shell);
+                overlays.push(ScenarioOverlay::from_request(&collapse));
+                (tr.len(), tr.mean_g_per_kwh(), tr.min_g_per_kwh(), tr.max_g_per_kwh())
+            });
+            plans.push(Plan { label: sc.label, first, weights, trace });
+        }
+
+        // One batched pass per chunk, merged chunk-ascending per overlay
+        // — the same (scenario-major, chunk order) merge the fused and
+        // sequential paths use. An empty design space profiles into zero
+        // chunks; every slot then reports the empty result.
+        let mut merged: Vec<Option<EvalResult>> = (0..overlays.len()).map(|_| None).collect();
+        let mut scratch = OverlayScratch::new();
+        for &prof in &profiles {
+            let batch = ScenarioOverlay::apply_batch(&overlays, prof, &mut scratch);
+            for (slot, res) in merged.iter_mut().zip(batch) {
+                *slot = Some(match slot.take() {
                     None => res,
                     Some(acc) => merge(acc, res),
                 });
             }
-            merged.unwrap_or_else(|| EvalResult::empty(self.base.tasks.num_tasks()))
-        };
-        let mut items = 0usize;
-        let results: Vec<ScenarioResult> = scenarios
+        }
+        let t = self.base.tasks.num_tasks();
+        let mut take = |i: usize| merged[i].take().unwrap_or_else(|| EvalResult::empty(t));
+
+        let results: Vec<ScenarioResult> = plans
             .into_iter()
-            .map(|sc| {
-                let (combined, trace) = match &sc.trace {
-                    None => {
-                        items += profiles.len();
-                        (fold(&sc), None)
-                    }
-                    Some(tr) => {
-                        let lowered = sc.lower();
-                        items += lowered.len() * profiles.len();
-                        let seg_results: Vec<EvalResult> =
-                            lowered.iter().map(|(seg, _)| fold(seg)).collect();
-                        let weights: Vec<f32> = lowered.iter().map(|&(_, w)| w).collect();
-                        let combined = combine_segments(&seg_results, &weights);
-                        let st = summarize(fold(&sc.static_collapse()));
+            .map(|plan| {
+                let n_segs = plan.weights.len();
+                let (combined, trace) = match plan.trace {
+                    None => (take(plan.first), None),
+                    Some((segments, mean, min, max)) => {
+                        let segs: Vec<EvalResult> =
+                            (0..n_segs).map(|gi| take(plan.first + gi)).collect();
+                        let combined = combine_segments(&segs, &plan.weights);
+                        let st = summarize(take(plan.first + n_segs));
                         let meta = TraceMeta {
-                            segments: tr.len(),
-                            mean_ci_g_per_kwh: tr.mean_g_per_kwh(),
-                            min_ci_g_per_kwh: tr.min_g_per_kwh(),
-                            max_ci_g_per_kwh: tr.max_g_per_kwh(),
+                            segments,
+                            mean_ci_g_per_kwh: mean,
+                            min_ci_g_per_kwh: min,
+                            max_ci_g_per_kwh: max,
                             static_best_tcdp: st.stats.best,
                             static_feasible: st.stats.feasible,
                         };
                         (combined, Some(meta))
                     }
                 };
-                ScenarioResult { label: sc.label, outcome: summarize(combined), trace }
+                ScenarioResult { label: plan.label, outcome: summarize(combined), trace }
             })
             .collect();
         SweepOutcome {
@@ -781,9 +891,13 @@ pub fn sweep_fused(
 ) -> crate::Result<SweepOutcome> {
     let (items, scenarios, weights) = build_items(base, grid);
     let n_items = items.len();
-    let (slots, threads_used) = fan_out(factory, &items, cfg.threads, |engine, item| {
-        evaluate_fused(engine, &item.req)
-    })?;
+    // The fan-out takes the items by value (pooled workers need owned
+    // work), so remember each item's (scenario, segment) slot first.
+    let meta: Vec<(usize, usize)> = items.iter().map(|it| (it.scenario, it.segment)).collect();
+    let (slots, threads_used) =
+        fan_out(factory, items, cfg.threads, |engine, item: &SweepItem| {
+            evaluate_fused(engine, &item.req)
+        })?;
 
     // Order-preserving merge: items were emitted scenario-major,
     // segment-major, in chunk order, so folding each (scenario, segment)
@@ -791,8 +905,8 @@ pub fn sweep_fused(
     // merge exactly; segments then combine in trace order.
     let mut merged: Vec<Vec<Option<EvalResult>>> =
         weights.iter().map(|w| (0..w.len()).map(|_| None).collect()).collect();
-    for (item, res) in items.iter().zip(slots) {
-        let slot = &mut merged[item.scenario][item.segment];
+    for (&(si, gi), res) in meta.iter().zip(slots) {
+        let slot = &mut merged[si][gi];
         *slot = Some(match slot.take() {
             None => res,
             Some(acc) => merge(acc, res),
@@ -947,7 +1061,8 @@ mod tests {
         // per scenario, bit-for-bit.
         for c in [9usize, 400] {
             let req = request(c);
-            let two = sweep(&HostEngineFactory, &req, &grid(), &SweepConfig { threads: 4 }).unwrap();
+            let two =
+                sweep(&HostEngineFactory, &req, &grid(), &SweepConfig { threads: 4 }).unwrap();
             let fused =
                 sweep_fused(&HostEngineFactory, &req, &grid(), &SweepConfig { threads: 4 })
                     .unwrap();
@@ -1267,5 +1382,47 @@ mod tests {
         let stats = resumed.cache.unwrap();
         assert_eq!((stats.hits, stats.misses), (3, 0));
         std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn fan_out_fails_fast_and_reports_lowest_failing_item() {
+        use std::sync::Arc;
+        // Regression: the first failure used to leave sibling workers
+        // draining the whole queue before the error surfaced. Both
+        // schedulers — the persistent pool (`HostEngineFactory` opts in)
+        // and the scoped-spawn fallback — must abandon it, and both must
+        // report the lowest-indexed failure deterministically.
+        let scoped = crate::runtime::ScopedSpawn(HostEngineFactory);
+        let factories: [&dyn EngineFactory; 2] = [&HostEngineFactory, &scoped];
+        for factory in factories {
+            let processed = Arc::new(AtomicUsize::new(0));
+            let p = Arc::clone(&processed);
+            let items: Vec<usize> = (0..64).collect();
+            let err = fan_out(factory, items, 2, move |_eng, &i: &usize| {
+                p.fetch_add(1, Ordering::SeqCst);
+                std::thread::sleep(std::time::Duration::from_millis(1));
+                if i == 3 {
+                    anyhow::bail!("boom at {i}");
+                }
+                Ok(i)
+            })
+            .unwrap_err();
+            assert_eq!(err.to_string(), "boom at 3");
+            // Generous bound — what matters is "not all 64".
+            assert!(
+                processed.load(Ordering::SeqCst) < 48,
+                "fan-out drained the queue after a failure"
+            );
+        }
+    }
+
+    #[test]
+    fn pooled_and_scoped_schedulers_sweep_bit_identically() {
+        let req = request(2500); // 3 profile chunks
+        let cfg = SweepConfig { threads: 2 };
+        let pooled = sweep(&HostEngineFactory, &req, &grid(), &cfg).unwrap();
+        let spawned =
+            sweep(&crate::runtime::ScopedSpawn(HostEngineFactory), &req, &grid(), &cfg).unwrap();
+        assert_outcomes_identical(&pooled, &spawned);
     }
 }

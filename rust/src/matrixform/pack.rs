@@ -6,6 +6,16 @@
 //! * `f_clk` pads with 1.0 (avoids 0/0 in the energy division);
 //! * `qos` pads with +∞ (never constrains phantom tasks);
 //! * config rows beyond the logical batch are zeros → zero metrics.
+//!
+//! The per-kernel tensors are carried in two layouts: the row-major
+//! `[c_pad × K_PAD]` arrays the AOT artifacts consume, and a columnar
+//! (config-transposed) `[K_PAD × c_pad]` view (`p_leak_col`, `p_dyn_col`,
+//! `d_k_col`) built once at packing time for the host engine's
+//! lane-blocked phase-A kernel: with configs contiguous per kernel row, a
+//! block of `LANES` adjacent configs loads as one contiguous slice per
+//! `ki` (see `runtime/host.rs::contract_tasks_block`). The columnar view
+//! is a pure transpose of the padded row-major data — same f32 bits, no
+//! re-quantization — so either layout contracts bit-identically.
 
 use super::types::{EvalRequest, EvalResult};
 
@@ -33,6 +43,12 @@ pub struct PackedProblem {
     pub f_clk: Vec<f32>,
     /// `[c_pad × K_PAD]`.
     pub d_k: Vec<f32>,
+    /// Columnar view of `p_leak`: `[K_PAD × c_pad]` (configs contiguous).
+    pub p_leak_col: Vec<f32>,
+    /// Columnar view of `p_dyn`: `[K_PAD × c_pad]`.
+    pub p_dyn_col: Vec<f32>,
+    /// Columnar view of `d_k`: `[K_PAD × c_pad]`.
+    pub d_k_col: Vec<f32>,
     /// `[c_pad × J_PAD]`.
     pub c_comp: Vec<f32>,
     /// `[J_PAD]`.
@@ -101,6 +117,20 @@ impl PackedProblem {
             names.push(cfg.name.clone());
         }
 
+        // Columnar transpose for the lane-blocked kernel. Padding
+        // configs (ci >= c) are all-zero in the row-major arrays, so the
+        // zero-initialized columns already carry them.
+        let mut p_leak_col = vec![0.0f32; K_PAD * c_pad];
+        let mut p_dyn_col = vec![0.0f32; K_PAD * c_pad];
+        let mut d_k_col = vec![0.0f32; K_PAD * c_pad];
+        for ci in 0..c {
+            for ki in 0..K_PAD {
+                p_leak_col[ki * c_pad + ci] = p_leak[ci * K_PAD + ki];
+                p_dyn_col[ki * c_pad + ci] = p_dyn[ci * K_PAD + ki];
+                d_k_col[ki * c_pad + ci] = d_k[ci * K_PAD + ki];
+            }
+        }
+
         let mut online = vec![0.0f32; J_PAD];
         for ji in 0..j {
             online[ji] = req.online[ji] as f32;
@@ -116,6 +146,9 @@ impl PackedProblem {
             p_dyn,
             f_clk,
             d_k,
+            p_leak_col,
+            p_dyn_col,
+            d_k_col,
             c_comp,
             online,
             qos,
@@ -213,6 +246,30 @@ mod tests {
         assert_eq!(p.c_comp[1], 20.0);
         assert_eq!(p.online[1], 1.0);
         assert_eq!(p.online[2], 0.0);
+    }
+
+    #[test]
+    fn columnar_view_is_an_exact_transpose() {
+        let p = PackedProblem::from_request(&request(3));
+        assert_eq!(p.p_leak_col.len(), K_PAD * p.c_pad);
+        assert_eq!(p.p_dyn_col.len(), K_PAD * p.c_pad);
+        assert_eq!(p.d_k_col.len(), K_PAD * p.c_pad);
+        for ci in 0..p.c_pad {
+            for ki in 0..K_PAD {
+                assert_eq!(
+                    p.p_leak_col[ki * p.c_pad + ci].to_bits(),
+                    p.p_leak[ci * K_PAD + ki].to_bits()
+                );
+                assert_eq!(
+                    p.p_dyn_col[ki * p.c_pad + ci].to_bits(),
+                    p.p_dyn[ci * K_PAD + ki].to_bits()
+                );
+                assert_eq!(
+                    p.d_k_col[ki * p.c_pad + ci].to_bits(),
+                    p.d_k[ci * K_PAD + ki].to_bits()
+                );
+            }
+        }
     }
 
     #[test]

@@ -16,6 +16,29 @@ pub trait EngineFactory: Send + Sync {
 
     /// Label naming the engines this factory produces ("host", "pjrt").
     fn label(&self) -> &'static str;
+
+    /// Opt into the persistent [`WorkerPool`](super::WorkerPool): return a
+    /// shareable clone of this recipe and `dse::sweep::fan_out` will run
+    /// on long-lived pooled workers instead of per-call scoped threads.
+    ///
+    /// The default is `None` (scoped spawning), which is always correct.
+    /// Implementations returning `Some` must hand back a recipe whose
+    /// `build()` produces engines indistinguishable from this factory's —
+    /// pooled workers cache engines across batches, so a stale recipe
+    /// would silently evaluate with stale state.
+    fn shared(&self) -> Option<std::sync::Arc<dyn EngineFactory>> {
+        None
+    }
+
+    /// Key identifying this factory's engine configuration in the pool
+    /// registry: two factories with equal identities must build
+    /// interchangeable engines (they may be handed each other's pooled
+    /// workers). Defaults to [`label`](Self::label); factories with
+    /// per-instance state (e.g. an artifacts directory) must fold that
+    /// state into the identity.
+    fn pool_identity(&self) -> String {
+        self.label().to_string()
+    }
 }
 
 /// Factory for the pure-Rust [`HostEngine`]; always available and free to
@@ -30,6 +53,11 @@ impl EngineFactory for HostEngineFactory {
 
     fn label(&self) -> &'static str {
         "host"
+    }
+
+    fn shared(&self) -> Option<std::sync::Arc<dyn EngineFactory>> {
+        // Stateless: any `HostEngineFactory` is the same recipe.
+        Some(std::sync::Arc::new(HostEngineFactory))
     }
 }
 
@@ -59,6 +87,17 @@ impl EngineFactory for PjrtEngineFactory {
 
     fn label(&self) -> &'static str {
         "pjrt"
+    }
+
+    fn shared(&self) -> Option<std::sync::Arc<dyn EngineFactory>> {
+        Some(std::sync::Arc::new(PjrtEngineFactory {
+            artifacts_dir: self.artifacts_dir.clone(),
+        }))
+    }
+
+    fn pool_identity(&self) -> String {
+        // Engines are artifact-dir-specific; pools must be too.
+        format!("pjrt:{}", self.artifacts_dir)
     }
 }
 

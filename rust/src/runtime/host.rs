@@ -3,20 +3,56 @@
 //! Arithmetic is done in f32 in the same order as the JAX reference
 //! (`python/compile/kernels/ref.py`) so PJRT-vs-host differences stay at
 //! rounding level; the integration tests assert ≤ 1e-5 relative error.
+//!
+//! The phase-A contraction runs in two interchangeable shapes:
+//!
+//! * [`contract_tasks`] — the original scalar kernel, one config at a
+//!   time. Kept as the bit-identity **oracle** (and the remainder path
+//!   for batch sizes that are not a multiple of [`LANES`], which the
+//!   `C_VARIANTS` padding currently never produces).
+//! * [`contract_tasks_block`] — the lane-parallel kernel: [`LANES`] = 8
+//!   adjacent configs advance together through fixed `[f32; LANES]`
+//!   accumulator arrays over the columnar `[K_PAD × c_pad]` tensors
+//!   (`PackedProblem::{p_leak_col, p_dyn_col, d_k_col}`). Each lane is an
+//!   independent config whose K-accumulation runs in exactly the scalar
+//!   kernel's f32 order, so the block kernel is **bit-identical by
+//!   construction** — no `unsafe`, no intrinsics; the fixed-size lane
+//!   loops are written for the autovectorizer. Locked by
+//!   `rust/tests/hotloop_props.rs::prop_lane_kernel_bit_identical_to_scalar`.
 
 use super::engine::{Engine, RawOutput, RawProfile};
 use crate::matrixform::{PackedProblem, J_PAD, K_PAD, NUM_METRICS, T_PAD};
 
+/// Lane width of the blocked phase-A kernel: 8 f32 lanes fill one AVX2
+/// register (and two NEON registers), and both `C_VARIANTS` are multiples
+/// of it, so full sweeps never hit the scalar remainder path.
+pub const LANES: usize = 8;
+
 /// Host (no-XLA) engine.
-#[derive(Debug, Default)]
+#[derive(Debug)]
 pub struct HostEngine {
-    _private: (),
+    /// Use the lane-blocked kernel (`false` = scalar oracle).
+    lanes: bool,
+}
+
+impl Default for HostEngine {
+    fn default() -> Self {
+        HostEngine::new()
+    }
 }
 
 impl HostEngine {
-    /// Create a host engine.
+    /// Create a host engine (lane-blocked contraction kernel).
     pub fn new() -> Self {
-        HostEngine { _private: () }
+        HostEngine { lanes: true }
+    }
+
+    /// Reference engine that keeps every contraction on the scalar
+    /// kernel. Output is bit-identical to [`HostEngine::new`] — the
+    /// property tests and `benches/bench_hotloop.rs` use it to prove
+    /// (and price) exactly that.
+    pub fn scalar_oracle() -> Self {
+        HostEngine { lanes: false }
     }
 }
 
@@ -44,58 +80,127 @@ fn contract_tasks(p: &PackedProblem, ci: usize) -> ([f32; T_PAD], [f32; T_PAD]) 
     (e_task, d_task)
 }
 
+/// Lane-parallel contraction of the config block `[c0, c0 + LANES)`:
+/// per lane `l` (config `c0 + l`) the operations and their order are
+/// exactly [`contract_tasks`]'s — `e_k = (p_leak + p_dyn) / f_clk`,
+/// `e += e_k·n`, `d += d_k·n`, `ki` ascending — on the same f32 inputs
+/// (the columnar tensors are bit-exact transposes), so every lane is
+/// bit-identical to the scalar kernel while the compiler vectorizes
+/// across lanes.
+#[inline]
+fn contract_tasks_block(
+    p: &PackedProblem,
+    c0: usize,
+) -> ([[f32; LANES]; T_PAD], [[f32; LANES]; T_PAD]) {
+    let c_pad = p.c_pad;
+    let mut f_clk = [0.0f32; LANES];
+    f_clk.copy_from_slice(&p.f_clk[c0..c0 + LANES]);
+    let mut e_task = [[0.0f32; LANES]; T_PAD];
+    let mut d_task = [[0.0f32; LANES]; T_PAD];
+    for ti in 0..T_PAD {
+        let mut e_acc = [0.0f32; LANES];
+        let mut d_acc = [0.0f32; LANES];
+        for ki in 0..K_PAD {
+            let n = p.n[ti * K_PAD + ki];
+            let pl = &p.p_leak_col[ki * c_pad + c0..ki * c_pad + c0 + LANES];
+            let pd = &p.p_dyn_col[ki * c_pad + c0..ki * c_pad + c0 + LANES];
+            let dk = &p.d_k_col[ki * c_pad + c0..ki * c_pad + c0 + LANES];
+            for l in 0..LANES {
+                let e_k = (pl[l] + pd[l]) / f_clk[l];
+                e_acc[l] += e_k * n;
+                d_acc[l] += dk[l] * n;
+            }
+        }
+        e_task[ti] = e_acc;
+        d_task[ti] = d_acc;
+    }
+    (e_task, d_task)
+}
+
+/// Extract one lane of a blocked contraction as the `[f32; T_PAD]` shape
+/// the downstream carbon math consumes (a pure shuffle, no arithmetic).
+#[inline]
+fn lane(blk: &[[f32; LANES]; T_PAD], l: usize) -> [f32; T_PAD] {
+    let mut out = [0.0f32; T_PAD];
+    for (o, row) in out.iter_mut().zip(blk) {
+        *o = row[l];
+    }
+    out
+}
+
+/// Fold one config's contracted `e_task`/`d_task` into the metric rows:
+/// the carbon/feasibility arithmetic of the fused graph, shared by the
+/// scalar and lane paths so blocking cannot perturb it. Mirrored in
+/// `carbon/overlay.rs::ScenarioOverlay` (phase B); keep the two in
+/// lockstep — the bit-identity property tests fail otherwise.
+#[inline]
+fn fold_carbon(
+    p: &PackedProblem,
+    ci: usize,
+    e_task: &[f32; T_PAD],
+    d_task: &[f32; T_PAD],
+    metrics: &mut [f32],
+    d_task_out: &mut [f32],
+) {
+    let c_pad = p.c_pad;
+    let (ci_use, lifetime, beta, p_max) =
+        (p.scalars[0], p.scalars[1], p.scalars[2], p.scalars[3]);
+    let energy: f32 = e_task.iter().sum();
+    let delay: f32 = d_task.iter().sum();
+
+    let c_op = ci_use * energy;
+    let mut c_emb_overall = 0.0f32;
+    for ji in 0..J_PAD {
+        c_emb_overall += p.c_comp[ci * J_PAD + ji] * p.online[ji];
+    }
+    let c_emb = c_emb_overall * delay / lifetime;
+
+    let c_total = c_op + c_emb;
+    let tcdp = (c_op + beta * c_emb) * delay;
+    let edp = energy * delay;
+    let cdp = c_emb * delay;
+    let cep = c_emb * energy;
+    let ce2p = cep * energy;
+    let c2ep = c_emb * cep;
+
+    let mut qos_ok = true;
+    for ti in 0..T_PAD {
+        if !(d_task[ti] <= p.qos[ti]) {
+            qos_ok = false;
+        }
+    }
+    let avg_power = energy / delay.max(1e-30);
+    let feasible = if qos_ok && avg_power <= p_max { 1.0 } else { 0.0 };
+
+    let rows = [
+        energy, delay, c_op, c_emb, c_total, tcdp, edp, cdp, cep, ce2p, c2ep, feasible,
+    ];
+    for (row, v) in rows.iter().enumerate() {
+        metrics[row * c_pad + ci] = *v;
+    }
+    d_task_out[ci * T_PAD..(ci + 1) * T_PAD].copy_from_slice(d_task);
+}
+
 impl Engine for HostEngine {
-    // The carbon/feasibility arithmetic below is mirrored in
-    // `carbon/overlay.rs::ScenarioOverlay::apply` (phase B); keep the two
-    // in lockstep — the bit-identity property tests fail otherwise.
     fn execute(&mut self, p: &PackedProblem) -> crate::Result<RawOutput> {
         let c_pad = p.c_pad;
-        let (ci_use, lifetime, beta, p_max) = (
-            p.scalars[0],
-            p.scalars[1],
-            p.scalars[2],
-            p.scalars[3],
-        );
-
         let mut metrics = vec![0.0f32; NUM_METRICS * c_pad];
         let mut d_task_out = vec![0.0f32; c_pad * T_PAD];
 
-        for ci in 0..c_pad {
+        let full = if self.lanes { c_pad - c_pad % LANES } else { 0 };
+        let mut ci = 0;
+        while ci < full {
+            let (e_blk, d_blk) = contract_tasks_block(p, ci);
+            for l in 0..LANES {
+                let (e_task, d_task) = (lane(&e_blk, l), lane(&d_blk, l));
+                fold_carbon(p, ci + l, &e_task, &d_task, &mut metrics, &mut d_task_out);
+            }
+            ci += LANES;
+        }
+        while ci < c_pad {
             let (e_task, d_task) = contract_tasks(p, ci);
-            let energy: f32 = e_task.iter().sum();
-            let delay: f32 = d_task.iter().sum();
-
-            let c_op = ci_use * energy;
-            let mut c_emb_overall = 0.0f32;
-            for ji in 0..J_PAD {
-                c_emb_overall += p.c_comp[ci * J_PAD + ji] * p.online[ji];
-            }
-            let c_emb = c_emb_overall * delay / lifetime;
-
-            let c_total = c_op + c_emb;
-            let tcdp = (c_op + beta * c_emb) * delay;
-            let edp = energy * delay;
-            let cdp = c_emb * delay;
-            let cep = c_emb * energy;
-            let ce2p = cep * energy;
-            let c2ep = c_emb * cep;
-
-            let mut qos_ok = true;
-            for ti in 0..T_PAD {
-                if !(d_task[ti] <= p.qos[ti]) {
-                    qos_ok = false;
-                }
-            }
-            let avg_power = energy / delay.max(1e-30);
-            let feasible = if qos_ok && avg_power <= p_max { 1.0 } else { 0.0 };
-
-            let rows = [
-                energy, delay, c_op, c_emb, c_total, tcdp, edp, cdp, cep, ce2p, c2ep, feasible,
-            ];
-            for (row, v) in rows.iter().enumerate() {
-                metrics[row * c_pad + ci] = *v;
-            }
-            d_task_out[ci * T_PAD..(ci + 1) * T_PAD].copy_from_slice(&d_task);
+            fold_carbon(p, ci, &e_task, &d_task, &mut metrics, &mut d_task_out);
+            ci += 1;
         }
 
         Ok(RawOutput { metrics, d_task: d_task_out })
@@ -108,11 +213,25 @@ impl Engine for HostEngine {
         let mut energy = vec![0.0f32; c_pad];
         let mut delay = vec![0.0f32; c_pad];
         let mut d_task_out = vec![0.0f32; c_pad * T_PAD];
-        for ci in 0..c_pad {
+
+        let full = if self.lanes { c_pad - c_pad % LANES } else { 0 };
+        let mut ci = 0;
+        while ci < full {
+            let (e_blk, d_blk) = contract_tasks_block(p, ci);
+            for l in 0..LANES {
+                let (e_task, d_task) = (lane(&e_blk, l), lane(&d_blk, l));
+                energy[ci + l] = e_task.iter().sum();
+                delay[ci + l] = d_task.iter().sum();
+                d_task_out[(ci + l) * T_PAD..(ci + l + 1) * T_PAD].copy_from_slice(&d_task);
+            }
+            ci += LANES;
+        }
+        while ci < c_pad {
             let (e_task, d_task) = contract_tasks(p, ci);
             energy[ci] = e_task.iter().sum();
             delay[ci] = d_task.iter().sum();
             d_task_out[ci * T_PAD..(ci + 1) * T_PAD].copy_from_slice(&d_task);
+            ci += 1;
         }
         Ok(RawProfile { energy, delay, d_task: d_task_out })
     }
@@ -231,6 +350,31 @@ mod tests {
         assert_eq!(prof.d_task.len(), fused.d_task.len());
         for (a, b) in prof.d_task.iter().zip(&fused.d_task) {
             assert_eq!(a.to_bits(), b.to_bits());
+        }
+    }
+
+    #[test]
+    fn lane_kernel_bit_identical_to_scalar_oracle() {
+        // The blocked kernel's whole contract in one smoke check (the
+        // randomized-shape version lives in tests/hotloop_props.rs).
+        let packed = PackedProblem::from_request(&request());
+        let mut fast = HostEngine::new();
+        let mut oracle = HostEngine::scalar_oracle();
+        let a = fast.profile(&packed).unwrap();
+        let b = oracle.profile(&packed).unwrap();
+        for (x, y) in a.energy.iter().zip(&b.energy) {
+            assert_eq!(x.to_bits(), y.to_bits());
+        }
+        for (x, y) in a.delay.iter().zip(&b.delay) {
+            assert_eq!(x.to_bits(), y.to_bits());
+        }
+        for (x, y) in a.d_task.iter().zip(&b.d_task) {
+            assert_eq!(x.to_bits(), y.to_bits());
+        }
+        let fa = fast.execute(&packed).unwrap();
+        let fb = oracle.execute(&packed).unwrap();
+        for (x, y) in fa.metrics.iter().zip(&fb.metrics) {
+            assert_eq!(x.to_bits(), y.to_bits());
         }
     }
 

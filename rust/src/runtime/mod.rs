@@ -13,6 +13,9 @@
 //!
 //! Engines are `!Send` by design; parallel sweeps construct one engine per
 //! worker thread through an [`EngineFactory`] instead of sharing one.
+//! Factories that opt in via [`EngineFactory::shared`] run on a persistent
+//! per-thread [`WorkerPool`] that keeps workers and their engines alive
+//! across fan-outs; the rest fall back to per-call scoped spawning.
 //!
 //! Evaluation is two-phase: [`Engine::profile`] contracts a packed batch
 //! into its scenario-invariant [`DesignProfile`] (phase A — the only part
@@ -27,13 +30,15 @@ mod factory;
 mod host;
 #[cfg(feature = "pjrt")]
 mod pjrt;
+mod pool;
 mod stats;
 
 pub use engine::{Engine, RawOutput, RawProfile};
 pub use factory::{auto_factory, EngineFactory, HostEngineFactory};
 #[cfg(feature = "pjrt")]
 pub use factory::PjrtEngineFactory;
-pub use host::HostEngine;
+pub use host::{HostEngine, LANES};
+pub use pool::{shared_pool, ScopedSpawn, WorkerPool};
 pub use stats::{CacheCounters, CacheStats};
 #[cfg(feature = "pjrt")]
 pub use pjrt::PjrtEngine;

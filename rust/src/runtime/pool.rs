@@ -1,0 +1,383 @@
+//! Persistent worker pool for parallel fan-outs.
+//!
+//! Before PR 7 every `dse::sweep::fan_out` call spawned fresh
+//! `std::thread::scope` workers and built fresh engines — paid once per
+//! profile-chunk batch, per fused sweep, per trace segment fan-out and
+//! per search generation. A [`WorkerPool`] amortizes both costs: it
+//! spawns its worker threads once, each worker lazily builds **one**
+//! long-lived engine from a shared [`EngineFactory`] recipe, and batches
+//! of type-erased tasks stream through an MPMC job channel. Engines are
+//! `!Send` by design, so they are born and die on their worker thread;
+//! only the factory and the task closures cross threads.
+//!
+//! Scheduling contract (shared with the scoped-spawn fallback in
+//! `dse::sweep`):
+//!
+//! * **Order-preserving** — results return indexed by item, so the
+//!   caller's merge order is independent of worker count and of which
+//!   worker ran what. Deterministic engines therefore make the whole
+//!   fan-out deterministic across thread counts and schedulers.
+//! * **Fail-fast** — the first task error flips a per-batch abort flag;
+//!   workers check it before starting each item and skip instead of
+//!   draining the queue. The error reported is the one with the
+//!   **lowest item index** among failures, so error selection is
+//!   deterministic too.
+//! * **Panic-transparent** — a panicking task poisons nothing: the
+//!   worker catches the unwind, discards its (possibly wedged) engine
+//!   for a lazy rebuild, and the coordinator re-raises the original
+//!   payload after the batch drains.
+//!
+//! Pools are cached per calling thread in a registry keyed by
+//! `(factory identity, worker count)` — see [`shared_pool`] — so
+//! repeated sweeps and every generation of a search reuse the same
+//! threads and engines. Factories opt in by implementing
+//! [`EngineFactory::shared`]; those that return `None` (the default,
+//! e.g. ad-hoc test factories or the [`ScopedSpawn`] adapter) keep the
+//! per-call scoped spawning.
+
+use std::any::Any;
+use std::cell::RefCell;
+use std::collections::HashMap;
+use std::panic::{catch_unwind, resume_unwind, AssertUnwindSafe};
+use std::rc::Rc;
+use std::sync::atomic::{AtomicBool, AtomicUsize, Ordering};
+use std::sync::mpsc::{channel, Receiver, Sender};
+use std::sync::{Arc, Mutex};
+use std::thread::JoinHandle;
+
+use super::engine::Engine;
+use super::factory::EngineFactory;
+
+/// One type-erased unit of pool work: runs on a worker's engine, returns
+/// an erased result the typed [`WorkerPool::fan_out`] wrapper downcasts.
+type Task = Box<dyn FnOnce(&mut dyn Engine) -> crate::Result<Box<dyn Any + Send>> + Send>;
+
+/// A task envelope queued to the workers.
+struct Envelope {
+    idx: usize,
+    task: Task,
+    abort: Arc<AtomicBool>,
+    reply: Sender<Reply>,
+}
+
+/// What a worker sends back for one envelope (exactly one per envelope,
+/// which is what lets the collector count replies instead of guessing).
+enum Reply {
+    Done(usize, crate::Result<Box<dyn Any + Send>>),
+    Skipped(usize),
+    Panicked(usize, Box<dyn Any + Send>),
+}
+
+/// A persistent pool of worker threads, each owning one lazily-built,
+/// long-lived engine. See the module docs for the scheduling contract.
+pub struct WorkerPool {
+    job_tx: Option<Sender<Envelope>>,
+    handles: Vec<JoinHandle<()>>,
+    workers: usize,
+    engines_built: Arc<AtomicUsize>,
+}
+
+impl WorkerPool {
+    /// Spawn `workers` threads (at least one) sharing `factory` as their
+    /// engine recipe. Engines are built lazily on first use, so an idle
+    /// pool costs threads but no engine state.
+    pub fn new(factory: Arc<dyn EngineFactory>, workers: usize) -> Self {
+        let workers = workers.max(1);
+        let (job_tx, job_rx) = channel::<Envelope>();
+        let job_rx = Arc::new(Mutex::new(job_rx));
+        let engines_built = Arc::new(AtomicUsize::new(0));
+        let handles = (0..workers)
+            .map(|_| {
+                let rx = Arc::clone(&job_rx);
+                let factory = Arc::clone(&factory);
+                let built = Arc::clone(&engines_built);
+                std::thread::spawn(move || worker_loop(factory, rx, built))
+            })
+            .collect();
+        WorkerPool { job_tx: Some(job_tx), handles, workers, engines_built }
+    }
+
+    /// Worker threads in this pool.
+    pub fn workers(&self) -> usize {
+        self.workers
+    }
+
+    /// Engines built over the pool's lifetime — stays at ≤ `workers`
+    /// across arbitrarily many batches unless a panic forced a rebuild;
+    /// the reuse the pool exists for, and what the tests assert.
+    pub fn engines_built(&self) -> usize {
+        self.engines_built.load(Ordering::Relaxed)
+    }
+
+    /// Run `f` over every item on the pool's workers; results return in
+    /// item order, with the `dse::sweep::fan_out` thread-count
+    /// convention (`min(workers, items)` reported as threads used).
+    pub fn fan_out<T, R, F>(&self, items: Vec<T>, f: F) -> crate::Result<(Vec<R>, usize)>
+    where
+        T: Send + Sync + 'static,
+        R: Send + 'static,
+        F: Fn(&mut dyn Engine, &T) -> crate::Result<R> + Send + Sync + 'static,
+    {
+        let n = items.len();
+        if n == 0 {
+            return Ok((Vec::new(), 1));
+        }
+        let items = Arc::new(items);
+        let f = Arc::new(f);
+        let abort = Arc::new(AtomicBool::new(false));
+        let (reply_tx, reply_rx) = channel::<Reply>();
+        let tx = self.job_tx.as_ref().expect("pool channel alive until drop");
+        for idx in 0..n {
+            let items = Arc::clone(&items);
+            let f = Arc::clone(&f);
+            let task: Task = Box::new(move |engine| {
+                f(engine, &items[idx]).map(|r| Box::new(r) as Box<dyn Any + Send>)
+            });
+            let env =
+                Envelope { idx, task, abort: Arc::clone(&abort), reply: reply_tx.clone() };
+            tx.send(env).map_err(|_| anyhow::anyhow!("worker pool is shut down"))?;
+        }
+        drop(reply_tx);
+
+        let mut slots: Vec<Option<R>> = (0..n).map(|_| None).collect();
+        let mut first_err: Option<(usize, anyhow::Error)> = None;
+        let mut first_panic: Option<(usize, Box<dyn Any + Send>)> = None;
+        for _ in 0..n {
+            let reply = reply_rx
+                .recv()
+                .map_err(|_| anyhow::anyhow!("worker pool lost its workers mid-batch"))?;
+            match reply {
+                Reply::Done(i, Ok(boxed)) => {
+                    let v = boxed.downcast::<R>().expect("pool task returned a foreign type");
+                    slots[i] = Some(*v);
+                }
+                Reply::Done(i, Err(e)) => {
+                    if first_err.as_ref().is_none_or(|(j, _)| i < *j) {
+                        first_err = Some((i, e));
+                    }
+                }
+                Reply::Skipped(_) => {}
+                Reply::Panicked(i, payload) => {
+                    if first_panic.as_ref().is_none_or(|(j, _)| i < *j) {
+                        first_panic = Some((i, payload));
+                    }
+                }
+            }
+        }
+        if let Some((_, payload)) = first_panic {
+            resume_unwind(payload);
+        }
+        if let Some((_, e)) = first_err {
+            return Err(e);
+        }
+        let out = slots.into_iter().map(|s| s.expect("work item left unevaluated")).collect();
+        Ok((out, self.workers.min(n)))
+    }
+}
+
+impl Drop for WorkerPool {
+    fn drop(&mut self) {
+        // Closing the job channel is the shutdown signal: workers drain
+        // what is queued, see the disconnect and exit.
+        self.job_tx.take();
+        for h in self.handles.drain(..) {
+            let _ = h.join();
+        }
+    }
+}
+
+fn worker_loop(
+    factory: Arc<dyn EngineFactory>,
+    jobs: Arc<Mutex<Receiver<Envelope>>>,
+    engines_built: Arc<AtomicUsize>,
+) {
+    let mut engine: Option<Box<dyn Engine>> = None;
+    loop {
+        let env = {
+            let guard = match jobs.lock() {
+                Ok(g) => g,
+                // A sibling panicked *outside* catch_unwind while holding
+                // the lock — unreachable in practice, but exiting beats
+                // propagating poison forever.
+                Err(_) => return,
+            };
+            match guard.recv() {
+                Ok(env) => env,
+                Err(_) => return, // pool dropped: no more jobs, ever
+            }
+        };
+        if env.abort.load(Ordering::Relaxed) {
+            // Fail-fast: a sibling already failed this batch; skip
+            // instead of draining the queue.
+            let _ = env.reply.send(Reply::Skipped(env.idx));
+            continue;
+        }
+        if engine.is_none() {
+            match factory.build() {
+                Ok(e) => {
+                    engines_built.fetch_add(1, Ordering::Relaxed);
+                    engine = Some(e);
+                }
+                Err(e) => {
+                    env.abort.store(true, Ordering::Relaxed);
+                    let _ = env.reply.send(Reply::Done(env.idx, Err(e)));
+                    continue;
+                }
+            }
+        }
+        let eng = engine.as_mut().expect("engine built above");
+        match catch_unwind(AssertUnwindSafe(|| (env.task)(eng.as_mut()))) {
+            Ok(res) => {
+                if res.is_err() {
+                    env.abort.store(true, Ordering::Relaxed);
+                }
+                let _ = env.reply.send(Reply::Done(env.idx, res));
+            }
+            Err(payload) => {
+                // The engine may be mid-mutation; discard it and rebuild
+                // lazily on the next task.
+                engine = None;
+                env.abort.store(true, Ordering::Relaxed);
+                let _ = env.reply.send(Reply::Panicked(env.idx, payload));
+            }
+        }
+    }
+}
+
+thread_local! {
+    /// Per-thread pool registry. Thread-local (not global) so parallel
+    /// test threads and independent coordinators never contend for — or
+    /// observe — each other's pools, and `Rc` keeps the handles cheap.
+    static REGISTRY: RefCell<HashMap<(String, usize), Rc<WorkerPool>>> =
+        RefCell::new(HashMap::new());
+}
+
+/// The calling thread's persistent pool for `factory`, sized to
+/// `workers` — or `None` when the factory opts out of pooling
+/// ([`EngineFactory::shared`] returns `None`), in which case callers
+/// fall back to per-call scoped spawning. Pools are created on first use
+/// and live until the thread exits, so every later fan-out with the same
+/// `(identity, workers)` reuses the same threads and engines.
+pub fn shared_pool(factory: &dyn EngineFactory, workers: usize) -> Option<Rc<WorkerPool>> {
+    let recipe = factory.shared()?;
+    let key = (factory.pool_identity(), workers.max(1));
+    Some(REGISTRY.with(|reg| {
+        Rc::clone(
+            reg.borrow_mut()
+                .entry(key)
+                .or_insert_with(|| Rc::new(WorkerPool::new(recipe, workers))),
+        )
+    }))
+}
+
+/// Adapter that forces the scoped-spawn scheduler: engine construction
+/// delegates to the inner factory, but [`EngineFactory::shared`] stays
+/// `None` (the trait default), so `dse::sweep::fan_out` never pools it.
+/// The pool-vs-spawn bench (`benches/bench_hotloop.rs`) and the
+/// scheduler bit-identity property tests use it as the spawn baseline.
+#[derive(Debug, Clone, Copy)]
+pub struct ScopedSpawn<F>(pub F);
+
+impl<F: EngineFactory> EngineFactory for ScopedSpawn<F> {
+    fn build(&self) -> crate::Result<Box<dyn Engine>> {
+        self.0.build()
+    }
+
+    fn label(&self) -> &'static str {
+        self.0.label()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::runtime::HostEngineFactory;
+
+    #[test]
+    fn pool_preserves_order_and_reuses_engines_across_batches() {
+        let pool = WorkerPool::new(Arc::new(HostEngineFactory), 3);
+        for round in 0..4u32 {
+            let items: Vec<usize> = (0..17).collect();
+            let (out, used) =
+                pool.fan_out(items, move |_eng, &i: &usize| Ok(i * 2 + round as usize)).unwrap();
+            assert_eq!(used, 3);
+            assert_eq!(out, (0..17).map(|i| i * 2 + round as usize).collect::<Vec<_>>());
+        }
+        // Four batches, still at most one engine per worker.
+        let built = pool.engines_built();
+        assert!(built >= 1 && built <= 3, "engines_built={built}");
+    }
+
+    #[test]
+    fn pool_reports_lowest_indexed_error_and_skips_after_abort() {
+        let pool = WorkerPool::new(Arc::new(HostEngineFactory), 2);
+        let processed = Arc::new(AtomicUsize::new(0));
+        let p = Arc::clone(&processed);
+        let items: Vec<usize> = (0..200).collect();
+        let err = pool
+            .fan_out(items, move |_eng, &i: &usize| {
+                p.fetch_add(1, Ordering::SeqCst);
+                std::thread::sleep(std::time::Duration::from_micros(200));
+                if i % 7 == 3 {
+                    anyhow::bail!("task {i} failed");
+                }
+                Ok(i)
+            })
+            .unwrap_err();
+        assert_eq!(err.to_string(), "task 3 failed");
+        // Fail-fast: nowhere near the full queue was drained.
+        assert!(processed.load(Ordering::SeqCst) < 100);
+        // The pool stays usable for the next batch.
+        let (out, _) = pool.fan_out(vec![5usize], |_eng, &i: &usize| Ok(i + 1)).unwrap();
+        assert_eq!(out, vec![6]);
+    }
+
+    #[test]
+    fn pool_resurfaces_task_panics_and_recovers() {
+        let pool = Rc::new(WorkerPool::new(Arc::new(HostEngineFactory), 2));
+        let p = Rc::clone(&pool);
+        let caught = catch_unwind(AssertUnwindSafe(move || {
+            let _ = p.fan_out(vec![0usize, 1, 2], |_eng, &i: &usize| {
+                if i == 1 {
+                    panic!("task panic marker");
+                }
+                Ok(i)
+            });
+        }));
+        let payload = caught.expect_err("panic must propagate");
+        let msg = payload.downcast_ref::<&str>().copied().unwrap_or_default();
+        assert_eq!(msg, "task panic marker");
+        // The worker discarded its engine and rebuilt; the pool lives on.
+        let (out, _) = pool.fan_out(vec![7usize], |_eng, &i: &usize| Ok(i)).unwrap();
+        assert_eq!(out, vec![7]);
+    }
+
+    #[test]
+    fn shared_pool_registry_reuses_by_identity_and_size() {
+        let a = shared_pool(&HostEngineFactory, 2).expect("host factory pools");
+        let b = shared_pool(&HostEngineFactory, 2).expect("host factory pools");
+        assert!(Rc::ptr_eq(&a, &b), "same (identity, size) must share one pool");
+        let c = shared_pool(&HostEngineFactory, 3).expect("host factory pools");
+        assert!(!Rc::ptr_eq(&a, &c), "different sizes are different pools");
+        assert_eq!(a.workers(), 2);
+        assert_eq!(c.workers(), 3);
+    }
+
+    #[test]
+    fn scoped_spawn_adapter_opts_out_of_pooling() {
+        let f = ScopedSpawn(HostEngineFactory);
+        assert_eq!(f.label(), "host");
+        assert!(f.shared().is_none());
+        assert!(shared_pool(&f, 2).is_none());
+        assert_eq!(f.build().unwrap().name(), "host");
+    }
+
+    #[test]
+    fn zero_items_is_a_no_op() {
+        let pool = WorkerPool::new(Arc::new(HostEngineFactory), 2);
+        let (out, used) = pool.fan_out(Vec::<usize>::new(), |_eng, &i: &usize| Ok(i)).unwrap();
+        assert!(out.is_empty());
+        assert_eq!(used, 1);
+        assert_eq!(pool.engines_built(), 0, "no items, no engines");
+    }
+}

@@ -1,0 +1,205 @@
+//! Property tests locking the PR 7 hot-loop optimizations to their
+//! baselines, bit for bit, over randomized problems:
+//!
+//! * the lane-blocked phase-A contraction kernel vs the per-config
+//!   scalar oracle (`HostEngine::scalar_oracle`), across shapes that
+//!   exercise both `C_VARIANTS` paddings and the scalar remainder;
+//! * `ScenarioOverlay::apply_batch` (shared-scratch, hoisted embodied
+//!   fold) vs one `apply` per overlay, with and without a shared
+//!   `online` mask, reusing one scratch across differently-sized
+//!   batches;
+//! * the persistent worker-pool scheduler vs the scoped-spawn scheduler
+//!   vs the sequential reference, across thread counts below, equal to
+//!   and above the chunk count (including trace scenarios).
+//!
+//! "Bit-identical" is literal: raw f32 buffers compare by `to_bits`,
+//! unpacked f64 results by exact equality.
+
+use xrcarbon::carbon::{CiTrace, OverlayScratch, ScenarioOverlay};
+use xrcarbon::dse::sweep::{sweep, sweep_sequential, SweepConfig, SweepOutcome};
+use xrcarbon::dse::ScenarioGrid;
+use xrcarbon::matrixform::{ConfigRow, EvalRequest, PackedProblem, TaskMatrix};
+use xrcarbon::runtime::{profile_request, Engine, HostEngine, HostEngineFactory, ScopedSpawn};
+use xrcarbon::testkit::{forall_cfg, PropConfig, Rng};
+
+/// Randomized request up to the full padded shape (8 tasks × 32
+/// kernels); `c` picks the 128-config variant most of the time and the
+/// 1024-config variant (129+) otherwise, so both artifact paddings and
+/// the lane kernel's remainder handling get traffic.
+fn gen_request(r: &mut Rng) -> EvalRequest {
+    let t = r.below(8) + 1;
+    let k = r.below(32) + 1;
+    let c = if r.chance(0.3) { 129 + r.below(200) } else { r.below(128) + 1 };
+    let j = r.below(8) + 1;
+    let mut tasks = TaskMatrix::new(
+        (0..t).map(|i| format!("t{i}")).collect(),
+        (0..k).map(|i| format!("k{i}")).collect(),
+    );
+    for ti in 0..t {
+        for ki in 0..k {
+            if r.chance(0.6) {
+                tasks.set(ti, ki, r.below(30) as f64);
+            }
+        }
+    }
+    EvalRequest {
+        tasks,
+        configs: (0..c)
+            .map(|i| ConfigRow {
+                name: format!("cfg{i}"),
+                f_clk: r.range(1e8, 2e9),
+                d_k: (0..k).map(|_| r.range(1e-5, 1e-1)).collect(),
+                e_dyn: (0..k).map(|_| r.range(1e-4, 1.0)).collect(),
+                leak_w: r.range(0.0, 0.2),
+                c_comp: (0..j).map(|_| r.range(0.0, 1000.0)).collect(),
+            })
+            .collect(),
+        online: (0..j).map(|_| if r.chance(0.8) { 1.0 } else { 0.0 }).collect(),
+        qos: (0..t)
+            .map(|_| if r.chance(0.3) { r.range(0.1, 100.0) } else { f64::INFINITY })
+            .collect(),
+        ci_use_g_per_j: r.range(1e-5, 1e-3),
+        lifetime_s: r.range(1e4, 1e8),
+        beta: r.range(0.0, 4.0),
+        p_max_w: if r.chance(0.4) { r.range(0.5, 100.0) } else { f64::INFINITY },
+    }
+}
+
+fn bits_eq(a: &[f32], b: &[f32]) -> bool {
+    a.len() == b.len() && a.iter().zip(b).all(|(x, y)| x.to_bits() == y.to_bits())
+}
+
+#[test]
+fn prop_lane_kernel_bit_identical_to_scalar_oracle() {
+    forall_cfg(
+        PropConfig { cases: 24, seed: 71 },
+        gen_request,
+        |req| {
+            let packed = PackedProblem::from_request(req);
+            let mut lanes = HostEngine::new();
+            let mut scalar = HostEngine::scalar_oracle();
+            // Phase A (profile): the raw padded buffers, full range —
+            // padding lanes included.
+            let a = lanes.profile(&packed).unwrap();
+            let b = scalar.profile(&packed).unwrap();
+            // Fused path (execute): the carbon fold over the lane
+            // results must match too.
+            let x = lanes.execute(&packed).unwrap();
+            let y = scalar.execute(&packed).unwrap();
+            bits_eq(&a.energy, &b.energy)
+                && bits_eq(&a.delay, &b.delay)
+                && bits_eq(&a.d_task, &b.d_task)
+                && bits_eq(&x.metrics, &y.metrics)
+                && bits_eq(&x.d_task, &y.d_task)
+        },
+    );
+}
+
+#[test]
+fn prop_apply_batch_bit_identical_to_apply() {
+    // One scratch reused across every case (and so across batch sizes
+    // and profile shapes) — reuse must never leak state between calls.
+    // RefCell because the property closure is `Fn`, not `FnMut`.
+    let scratch = std::cell::RefCell::new(OverlayScratch::new());
+    forall_cfg(
+        PropConfig { cases: 24, seed: 72 },
+        |r| {
+            let base = gen_request(r);
+            let s = r.below(6) + 1;
+            let shared_mask = r.chance(0.5);
+            let overlays: Vec<EvalRequest> = (0..s)
+                .map(|_| {
+                    let mut req = base.clone();
+                    req.configs = Vec::new();
+                    req.ci_use_g_per_j = r.range(1e-5, 1e-3);
+                    req.lifetime_s = r.range(1e4, 1e8);
+                    req.beta = r.range(0.0, 4.0);
+                    req.p_max_w = if r.chance(0.4) { r.range(0.5, 100.0) } else { f64::INFINITY };
+                    for q in req.qos.iter_mut() {
+                        if r.chance(0.3) {
+                            *q = r.range(0.1, 100.0);
+                        }
+                    }
+                    if !shared_mask {
+                        for o in req.online.iter_mut() {
+                            *o = if r.chance(0.7) { 1.0 } else { 0.0 };
+                        }
+                    }
+                    req
+                })
+                .collect();
+            (base, overlays)
+        },
+        |(base, overlay_reqs)| {
+            let prof = profile_request(&mut HostEngine::new(), base).unwrap();
+            let overlays: Vec<ScenarioOverlay> =
+                overlay_reqs.iter().map(ScenarioOverlay::from_request).collect();
+            let batched =
+                ScenarioOverlay::apply_batch(&overlays, &prof, &mut scratch.borrow_mut());
+            batched.len() == overlays.len()
+                && overlays.iter().zip(&batched).all(|(ov, got)| {
+                    let want = ov.apply(&prof);
+                    want.names == got.names
+                        && want.metrics == got.metrics
+                        && want.d_task == got.d_task
+                })
+        },
+    );
+}
+
+/// Exact-equality outcome comparison (the same fields the unit tests'
+/// `assert_outcomes_identical` checks, as a predicate).
+fn outcomes_identical(a: &SweepOutcome, b: &SweepOutcome) -> bool {
+    a.scenarios.len() == b.scenarios.len()
+        && a.scenarios.iter().zip(&b.scenarios).all(|(x, y)| {
+            x.label == y.label
+                && x.outcome.result.names == y.outcome.result.names
+                && x.outcome.result.metrics == y.outcome.result.metrics
+                && x.outcome.result.d_task == y.outcome.result.d_task
+                && x.outcome.optimal == y.outcome.optimal
+                && x.outcome.stats.best.to_bits() == y.outcome.stats.best.to_bits()
+                && x.outcome.stats.mean.to_bits() == y.outcome.stats.mean.to_bits()
+                && x.outcome.stats.feasible == y.outcome.stats.feasible
+        })
+}
+
+#[test]
+fn prop_pool_scheduler_bit_identical_across_thread_counts() {
+    forall_cfg(
+        PropConfig { cases: 6, seed: 73 },
+        |r| {
+            let mut req = gen_request(r);
+            // 40..=300 configs: 1 to 3 profile chunks, so some thread
+            // counts under- and some oversubscribe the chunk count.
+            let c = 40 + r.below(261);
+            let proto = req.configs[0].clone();
+            req.configs = (0..c)
+                .map(|i| ConfigRow { name: format!("cfg{i}"), ..proto.clone() })
+                .collect();
+            for (i, cfg) in req.configs.iter_mut().enumerate() {
+                cfg.f_clk = 1e9 + i as f64 * 1e5;
+                for d in cfg.d_k.iter_mut() {
+                    *d *= 1.0 + (i % 9) as f64 * 0.1;
+                }
+            }
+            req
+        },
+        |req| {
+            let grid = ScenarioGrid::new()
+                .with_lifetime("short", 1e5)
+                .with_beta("b=2", 2.0)
+                .with_trace("trace=flat", CiTrace::flat(440.0));
+            let reference = sweep_sequential(&mut HostEngine::new(), req, &grid).unwrap();
+            // Thread counts below, at and above the chunk count (1–3
+            // chunks); 7 oversubscribes every space this test builds.
+            [1usize, 2, 3, 7].iter().all(|&threads| {
+                let cfg = SweepConfig { threads };
+                let pooled = sweep(&HostEngineFactory, req, &grid, &cfg).unwrap();
+                let spawned =
+                    sweep(&ScopedSpawn(HostEngineFactory), req, &grid, &cfg).unwrap();
+                outcomes_identical(&reference, &pooled)
+                    && outcomes_identical(&reference, &spawned)
+            })
+        },
+    );
+}

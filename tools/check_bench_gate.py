@@ -33,8 +33,18 @@ advantage:
   diurnal trace): the trace axis multiplies phase-B overlays, never
   phase-A profiling, so every contraction must still come from the
   cache regardless of segment fan-out. Deterministic counter check.
+* hotloop — the three PR 7 optimizations, each measured against the
+  exact code it replaced (same inputs, bit-identical outputs):
+  `hotloop/vector_speedup` (lane-blocked phase-A kernel vs the scalar
+  oracle), `hotloop/overlay_batch_speedup` (one apply_batch pass vs
+  per-overlay apply) and `hotloop/pool_speedup` (persistent worker
+  pool vs per-call scoped spawn). Each must stay >= 1.0x: an optimized
+  path that loses to its own baseline is a regression, full stop;
+  observed margins are comfortably above the floor, so quick-mode
+  jitter does not graze it.
 
-Usage: check_bench_gate.py BENCH_sweep.json BENCH_search.json BENCH_cache.json BENCH_trace.json
+Usage: check_bench_gate.py BENCH_sweep.json BENCH_search.json \\
+       BENCH_cache.json BENCH_trace.json BENCH_hotloop.json
 """
 import json
 import sys
@@ -52,6 +62,12 @@ CACHE_BINARY_READ_MIN = 2.0
 # A warm trace sweep must still avoid every phase-A contraction: the
 # trace fan-out is phase-B-only work.
 TRACE_WARM_MIN = 1.0
+# Optimized hot-loop paths must never lose to their own baselines.
+HOTLOOP_MINS = {
+    "hotloop/vector_speedup": 1.0,
+    "hotloop/overlay_batch_speedup": 1.0,
+    "hotloop/pool_speedup": 1.0,
+}
 
 
 def fail(msg):
@@ -169,16 +185,34 @@ def check_trace(path):
         )
 
 
+def check_hotloop(path):
+    rows = load(path)
+    for name, minimum in sorted(HOTLOOP_MINS.items()):
+        row = rows.get(name)
+        if row is None:
+            fail(f"{path}: missing entry {name}")
+        ratio = row.get("throughput")
+        if ratio is None:
+            fail(f"{path}: {name} has no ratio")
+        print(f"hotloop gate: {name} = {ratio:.2f}x (min {minimum:.2f}x)")
+        if ratio < minimum:
+            fail(
+                f"{name} reports {ratio:.2f}x < {minimum:.2f}x — the optimized "
+                f"path lost to the baseline it replaced"
+            )
+
+
 def main():
-    if len(sys.argv) != 5:
+    if len(sys.argv) != 6:
         fail(
             "usage: check_bench_gate.py BENCH_sweep.json BENCH_search.json "
-            "BENCH_cache.json BENCH_trace.json"
+            "BENCH_cache.json BENCH_trace.json BENCH_hotloop.json"
         )
     check_sweep(sys.argv[1])
     check_search(sys.argv[2])
     check_cache(sys.argv[3])
     check_trace(sys.argv[4])
+    check_hotloop(sys.argv[5])
     print("bench gate: OK")
 
 
