@@ -1,0 +1,185 @@
+//! Bench: the service-layer concurrency story — N identical sweep
+//! clients racing over one shared [`ProfileCache`] + [`Coalescer`]
+//! (exactly how the exploration server's executor threads share them),
+//! versus the same N clients with coalescing disabled.
+//!
+//! Emits `BENCH_service.json`. The CI smoke gate
+//! (`tools/check_bench_gate.py`) consumes one pseudo-entry:
+//!
+//! * `service/coalesced_contractions_avoided` — `samples` = phase-A
+//!   contractions the N-client run avoided (`N·chunks − cache writes`),
+//!   `throughput` = that count over the ideal `(N−1)·chunks`. The floor
+//!   is 1.0×: with coalescing on, every unique chunk must be contracted
+//!   **exactly once** across all clients — the leader computes, every
+//!   concurrent duplicate waits on the in-flight slot, every later
+//!   arrival hits the cache. The stats are deterministic counters, not
+//!   timings, so 1.0 is an exact identity, not a tuned threshold.
+//!
+//! `service/uncoalesced_duplicate_contractions` (how many duplicate
+//! contractions the coalescer-free baseline performed; `throughput` =
+//! its writes / chunks, ≥ 1.0 by construction) is informational — on a
+//! fast machine the baseline's races can collapse by timing luck, which
+//! is exactly why the *gate* rides on the coalesced identity instead.
+//!
+//! Set `XRCARBON_BENCH_QUICK=1` for the short sampling mode CI uses.
+
+use std::time::Duration;
+
+use xrcarbon::bench::{write_json, BenchResult, Bencher};
+use xrcarbon::dse::cache::ProfileCache;
+use xrcarbon::dse::coalesce::Coalescer;
+use xrcarbon::dse::sweep::{SweepConfig, SweepDriver};
+use xrcarbon::dse::ScenarioGrid;
+use xrcarbon::matrixform::{ConfigRow, EvalRequest, TaskMatrix};
+use xrcarbon::runtime::HostEngineFactory;
+
+/// Concurrent identical clients (the server's executor fan-in shape).
+const CLIENTS: usize = 4;
+
+/// Counter pseudo-entry: `samples` carries a count, `throughput` a
+/// ratio; timings are zero (this row is data, not a measurement).
+fn counter(name: &str, samples: usize, ratio: f64) -> BenchResult {
+    BenchResult {
+        name: name.to_string(),
+        samples,
+        mean: Duration::ZERO,
+        p50: Duration::ZERO,
+        p95: Duration::ZERO,
+        throughput: Some(ratio),
+    }
+}
+
+/// Deterministic synthetic request sized to span several profile
+/// chunks (chunking is ~1024 configs), so the coalescer is exercised
+/// per chunk, not just once.
+fn request(n: usize) -> EvalRequest {
+    let k = 2usize;
+    let mut tasks =
+        TaskMatrix::new(vec!["t0".into()], (0..k).map(|i| format!("k{i}")).collect());
+    for ki in 0..k {
+        tasks.set(0, ki, 3.0 + ki as f64);
+    }
+    EvalRequest {
+        tasks,
+        configs: (0..n)
+            .map(|i| {
+                let x = (i as f64 + 1.0) / n as f64;
+                ConfigRow {
+                    name: format!("cfg{i}"),
+                    f_clk: 1.0e9 + 1.0e6 * i as f64,
+                    d_k: (0..k).map(|j| 1e-3 * (1.0 + x + j as f64 * 0.1)).collect(),
+                    e_dyn: (0..k).map(|j| 1e-2 * (1.0 + 0.5 * x + j as f64 * 0.05)).collect(),
+                    leak_w: 0.05 * x,
+                    c_comp: vec![120.0 * x, 40.0, 15.0],
+                }
+            })
+            .collect(),
+        online: vec![1.0, 1.0, 1.0],
+        qos: vec![f64::INFINITY],
+        ci_use_g_per_j: 1.1e-4,
+        lifetime_s: 2.0 * 3.156e7,
+        beta: 1.0,
+        p_max_w: f64::INFINITY,
+    }
+}
+
+fn main() {
+    let mut results: Vec<BenchResult> = Vec::new();
+    let req = request(2500);
+    let grid = ScenarioGrid::new().with_lifetime("lt=1y", 3.156e7).with_beta("beta=2", 2.0);
+    let cfg = SweepConfig { threads: 1 };
+    let dir = xrcarbon::testkit::test_dir("bench_service");
+
+    // Probe: one cold run to learn the chunk count.
+    std::fs::remove_dir_all(&dir).ok();
+    let probe_cache = ProfileCache::open(&dir).unwrap();
+    let probe = SweepDriver::new(&HostEngineFactory, &req, &grid, &cfg)
+        .run_with(&HostEngineFactory, Some(&probe_cache), None, None)
+        .unwrap();
+    let chunks = probe.profile_chunks;
+    assert!(chunks >= 2, "request should span several chunks, got {chunks}");
+
+    // Coalesced: every iteration starts cold — fresh directory, fresh
+    // cache + coalescer shared by CLIENTS racing identical sweeps.
+    let mut last = None;
+    let coalesced = Bencher::new("service/concurrent_sweeps_x4_coalesced").quick_if_env().run(
+        || {
+            std::fs::remove_dir_all(&dir).ok();
+            let cache = ProfileCache::open(&dir).unwrap();
+            let co = Coalescer::new();
+            std::thread::scope(|s| {
+                let handles: Vec<_> = (0..CLIENTS)
+                    .map(|_| {
+                        s.spawn(|| {
+                            SweepDriver::new(&HostEngineFactory, &req, &grid, &cfg)
+                                .run_with(&HostEngineFactory, Some(&cache), Some(&co), None)
+                                .unwrap()
+                        })
+                    })
+                    .collect();
+                for h in handles {
+                    h.join().unwrap();
+                }
+            });
+            last = Some((cache.stats(), co.stats()));
+        },
+    );
+    println!("{}", coalesced.report());
+    let (cs, co) = last.expect("coalesced bench ran at least once");
+
+    // Uncoalesced baseline: same shared cache, no coalescer — racing
+    // cold misses each contract on their own.
+    let mut last_base = None;
+    let uncoalesced = Bencher::new("service/concurrent_sweeps_x4_uncoalesced")
+        .quick_if_env()
+        .run(|| {
+            std::fs::remove_dir_all(&dir).ok();
+            let cache = ProfileCache::open(&dir).unwrap();
+            std::thread::scope(|s| {
+                let handles: Vec<_> = (0..CLIENTS)
+                    .map(|_| {
+                        s.spawn(|| {
+                            SweepDriver::new(&HostEngineFactory, &req, &grid, &cfg)
+                                .run_with(&HostEngineFactory, Some(&cache), None, None)
+                                .unwrap()
+                        })
+                    })
+                    .collect();
+                for h in handles {
+                    h.join().unwrap();
+                }
+            });
+            last_base = Some(cache.stats());
+        });
+    println!("{}", uncoalesced.report());
+    let bs = last_base.expect("baseline bench ran at least once");
+
+    // The deterministic identity the gate rides on: CLIENTS·chunks
+    // lookups, cache writes = actual contractions, the rest avoided.
+    let lookups = CLIENTS * chunks;
+    let avoided = lookups - cs.writes;
+    let ideal = (CLIENTS - 1) * chunks;
+    let ratio = avoided as f64 / ideal as f64;
+    println!(
+        "coalesced: {avoided}/{ideal} duplicate contraction(s) avoided ({ratio:.2}x floor \
+         metric) — {} write(s) for {chunks} chunk(s), coalescer {:?}",
+        cs.writes, co
+    );
+    let dup = bs.writes.saturating_sub(chunks);
+    println!(
+        "uncoalesced baseline: {} write(s) for {chunks} chunk(s) ({dup} duplicate(s))",
+        bs.writes
+    );
+    results.push(coalesced);
+    results.push(uncoalesced);
+    results.push(counter("service/coalesced_contractions_avoided", avoided, ratio));
+    results.push(counter(
+        "service/uncoalesced_duplicate_contractions",
+        dup,
+        bs.writes as f64 / chunks.max(1) as f64,
+    ));
+
+    std::fs::remove_dir_all(&dir).ok();
+    write_json(&results, "BENCH_service.json").expect("writing BENCH_service.json");
+    println!("[json] wrote BENCH_service.json ({} benchmarks)", results.len());
+}

@@ -44,7 +44,7 @@ const VALUED: &[&str] = &[
     "cluster", "metric", "out", "artifacts", "engine", "seed", "beta", "ratio",
     "lifetime", "hours", "devices", "days", "workload", "cores", "csv-dir",
     "threads", "preset", "space", "max-evals", "cache-dir", "cache-budget", "resume",
-    "trace",
+    "trace", "addr", "state-dir", "executors",
 ];
 
 /// Flag names (no value). Anything after `--` that is in neither list is
@@ -127,6 +127,43 @@ impl Args {
     /// Flag presence.
     pub fn has_flag(&self, name: &str) -> bool {
         self.flags.iter().any(|f| f == name)
+    }
+}
+
+/// Byte size with optional K/M/G suffix (powers of two). `None` for
+/// anything that does not parse as a `u64` count of bytes — including
+/// values whose suffixed product overflows `u64` (`checked_mul`, not a
+/// silent wrap: `20000000000G` used to be representable garbage).
+pub fn parse_byte_size(s: &str) -> Option<u64> {
+    let s = s.trim();
+    let (num, mult) = match s.chars().last()? {
+        'k' | 'K' => (&s[..s.len() - 1], 1u64 << 10),
+        'm' | 'M' => (&s[..s.len() - 1], 1u64 << 20),
+        'g' | 'G' => (&s[..s.len() - 1], 1u64 << 30),
+        _ => (s, 1),
+    };
+    num.parse::<u64>().ok()?.checked_mul(mult)
+}
+
+/// `--cache-budget` value: a byte size that must be **positive**. A
+/// budget of `0` is rejected rather than interpreted — it would mean
+/// "evict everything but the newest entry on every write", which nobody
+/// asks for on purpose; "no eviction" is spelled by omitting the option
+/// entirely (the cache's `budget_bytes: None` default).
+pub fn parse_cache_budget(s: &str) -> Result<u64, CliError> {
+    match parse_byte_size(s) {
+        None => Err(CliError::BadValue(
+            "cache-budget".to_string(),
+            s.to_string(),
+            "byte size (e.g. 67108864, 64M, 2G)",
+        )),
+        Some(0) => Err(CliError::BadValue(
+            "cache-budget".to_string(),
+            s.to_string(),
+            "positive byte size (0 would evict every entry but the newest; omit \
+             --cache-budget to disable eviction)",
+        )),
+        Some(n) => Ok(n),
     }
 }
 
@@ -234,5 +271,57 @@ mod tests {
     fn bad_value_is_error() {
         let a = parse("x --ratio notanumber");
         assert!(matches!(a.get_f64("ratio", 1.0), Err(CliError::BadValue(..))));
+    }
+
+    #[test]
+    fn serve_options_are_registered() {
+        let a = parse("serve --addr 127.0.0.1:7878 --state-dir .state --executors 4");
+        assert_eq!(a.get("addr", ""), "127.0.0.1:7878");
+        assert_eq!(a.get("state-dir", ""), ".state");
+        assert_eq!(a.get_usize("executors", 2).unwrap(), 4);
+    }
+
+    #[test]
+    fn byte_sizes_parse_with_and_without_suffix() {
+        assert_eq!(parse_byte_size("1024"), Some(1024));
+        assert_eq!(parse_byte_size("64K"), Some(64 << 10));
+        assert_eq!(parse_byte_size("64k"), Some(64 << 10));
+        assert_eq!(parse_byte_size("512M"), Some(512 << 20));
+        assert_eq!(parse_byte_size("2G"), Some(2u64 << 30));
+        assert_eq!(parse_byte_size(" 8m "), Some(8 << 20));
+        assert_eq!(parse_byte_size(""), None);
+        assert_eq!(parse_byte_size("M"), None);
+        assert_eq!(parse_byte_size("1.5G"), None);
+        assert_eq!(parse_byte_size("-3"), None);
+    }
+
+    #[test]
+    fn byte_sizes_reject_overflow_at_both_boundaries() {
+        // Exactly u64::MAX in plain bytes is representable…
+        assert_eq!(parse_byte_size("18446744073709551615"), Some(u64::MAX));
+        // …one past it is not (u64 parse fails)…
+        assert_eq!(parse_byte_size("18446744073709551616"), None);
+        // …and a suffixed product past u64::MAX must fail via checked_mul,
+        // not wrap: 2^34 G = 2^64 bytes.
+        assert_eq!(parse_byte_size("17179869184G"), None);
+        assert_eq!(parse_byte_size("999999999999G"), None);
+        // The largest suffixed values that still fit do fit.
+        assert_eq!(parse_byte_size("17179869183G"), Some(17179869183u64 << 30));
+    }
+
+    #[test]
+    fn cache_budget_rejects_zero_and_garbage() {
+        assert_eq!(parse_cache_budget("64M").unwrap(), 64 << 20);
+        assert_eq!(parse_cache_budget("18446744073709551615").unwrap(), u64::MAX);
+        assert!(matches!(parse_cache_budget("0"), Err(CliError::BadValue(..))));
+        assert!(matches!(parse_cache_budget("0K"), Err(CliError::BadValue(..))));
+        assert!(matches!(parse_cache_budget("nope"), Err(CliError::BadValue(..))));
+        assert!(matches!(
+            parse_cache_budget("18446744073709551616"),
+            Err(CliError::BadValue(..))
+        ));
+        let msg = parse_cache_budget("0").unwrap_err().to_string();
+        assert!(msg.contains("cache-budget"), "{msg}");
+        assert!(msg.contains("omit"), "{msg}");
     }
 }

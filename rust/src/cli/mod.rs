@@ -5,4 +5,4 @@
 
 mod args;
 
-pub use args::{Args, CliError};
+pub use args::{parse_byte_size, parse_cache_budget, Args, CliError};

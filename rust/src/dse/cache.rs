@@ -48,6 +48,15 @@
 //! only known from disk by their write generation (file mtime), and the
 //! oldest are removed first — never the most recently written — with
 //! every eviction counted on [`CacheStats::evictions`].
+//!
+//! The store is safe to share between clients (threads of one service
+//! process or whole separate processes on one directory): writers hold
+//! a shared advisory lock on `<dir>/.lock` while their files land, and
+//! the eviction pass holds it exclusively for its scan+delete window,
+//! so it can never observe — let alone delete — half of an in-flight
+//! write. An entry whose write generation cannot be read ranks as
+//! newest and is never picked as a victim: it could be another client's
+//! just-written entry.
 
 use std::collections::BTreeMap;
 use std::path::{Path, PathBuf};
@@ -347,7 +356,11 @@ impl ProfileCache {
                         // size budget like any other write — a fully
                         // warm run over a legacy JSON-only cache must
                         // not grow past the budget unnoticed.
-                        if let Ok(written) = self.write_sidecar(key, &profile, engine) {
+                        let written = {
+                            let _dir = self.lock_dir(false);
+                            self.write_sidecar(key, &profile, engine).ok()
+                        };
+                        if let Some(written) = written {
                             self.account_write(written);
                         }
                     }
@@ -417,16 +430,22 @@ impl ProfileCache {
         self.touch(key);
         let text = encode_envelope(key, profile, engine);
         let mut written = text.len() as u64;
-        match atomic_write(&self.envelope_path(key), &text) {
-            Ok(()) => self.counters.record_write(),
-            Err(e) => {
-                self.counters.record_write_error();
-                return Err(e);
+        {
+            // Shared directory lock for the write window: a concurrent
+            // eviction pass (exclusive) can never scan or delete while
+            // this entry's files are landing.
+            let _dir = self.lock_dir(false);
+            match atomic_write(&self.envelope_path(key), &text) {
+                Ok(()) => self.counters.record_write(),
+                Err(e) => {
+                    self.counters.record_write_error();
+                    return Err(e);
+                }
             }
-        }
-        if self.cfg.binary_sidecars {
-            if let Ok(bytes) = self.write_sidecar(key, profile, engine) {
-                written += bytes;
+            if self.cfg.binary_sidecars {
+                if let Ok(bytes) = self.write_sidecar(key, profile, engine) {
+                    written += bytes;
+                }
             }
         }
         self.remember(key, profile);
@@ -449,28 +468,52 @@ impl ProfileCache {
             return;
         }
         // Over (possibly only approximately — overwrites double-count):
-        // rescan for the exact picture, then evict oldest-first.
+        // rescan for the exact picture, then evict oldest-first. The
+        // exclusive directory lock keeps every other client's store out
+        // of the scan+delete window, so the scan only ever sees complete
+        // entries and a concurrent writer can never lose a file
+        // mid-write.
+        let _dir = self.lock_dir(true);
         let mut entries = scan_entries(&self.dir);
         let mut total: u64 = entries.iter().map(|e| e.bytes).sum();
-        // Recency rank: in-process access tick when known, else 0 — so
-        // disk-only entries order among themselves by write generation
-        // (mtime) and always evict before anything touched this process.
-        entries.sort_by(|a, b| {
-            let ra = disk.touched.get(&a.key).copied().unwrap_or(0);
-            let rb = disk.touched.get(&b.key).copied().unwrap_or(0);
-            ra.cmp(&rb).then(a.mtime.cmp(&b.mtime)).then(a.key.cmp(&b.key))
-        });
-        let mut evicted = 0usize;
-        while total > budget && entries.len() - evicted > 1 {
-            let victim = &entries[evicted];
+        entries.sort_by(|a, b| eviction_order(&disk.touched, a, b));
+        let mut idx = 0usize;
+        let mut remaining = entries.len();
+        while total > budget && remaining > 1 && idx < entries.len() {
+            let victim = &entries[idx];
+            idx += 1;
+            if never_evict(&disk.touched, victim) {
+                continue;
+            }
             std::fs::remove_file(self.envelope_path(&victim.key)).ok();
             std::fs::remove_file(self.sidecar_path(&victim.key)).ok();
             total = total.saturating_sub(victim.bytes);
             disk.touched.remove(&victim.key);
             self.counters.record_eviction();
-            evicted += 1;
+            remaining -= 1;
         }
         disk.approx_bytes = total;
+    }
+
+    /// Advisory cross-process lock over the cache directory. Writers
+    /// take it shared (many stores in flight at once is fine — atomic
+    /// temp+rename keeps them from clobbering each other); the eviction
+    /// pass takes it exclusive so its scan+delete window can never
+    /// interleave with a half-landed write from another client. `None`
+    /// inside the guard when the lock could not be taken (an exotic
+    /// filesystem): callers proceed unlocked, degrading to the old
+    /// single-process behavior rather than failing the operation.
+    fn lock_dir(&self, exclusive: bool) -> DirLock {
+        let file = std::fs::OpenOptions::new()
+            .create(true)
+            .truncate(false)
+            .read(true)
+            .write(true)
+            .open(self.dir.join(".lock"))
+            .ok();
+        let file =
+            file.filter(|f| if exclusive { f.lock() } else { f.lock_shared() }.is_ok());
+        DirLock { _file: file }
     }
 
     /// Total bytes of envelope + sidecar files currently on disk
@@ -485,12 +528,45 @@ impl ProfileCache {
     }
 }
 
+/// RAII guard for the advisory `.lock` file: the OS lock releases when
+/// the handle drops (and with it on process death, so a crashed client
+/// can never wedge the directory).
+struct DirLock {
+    _file: Option<std::fs::File>,
+}
+
 /// One on-disk entry (envelope + sidecar) as seen by a directory scan.
 struct DiskEntry {
     key: CacheKey,
     bytes: u64,
     /// Newest mtime across the entry's files — its write generation.
-    mtime: std::time::SystemTime,
+    /// `None` when no generation could be read: the entry's age is
+    /// unknown, so eviction must assume it was written a moment ago.
+    mtime: Option<std::time::SystemTime>,
+}
+
+/// Victim ordering of the eviction pass: in-process recency rank first
+/// (untouched entries evict before anything touched this process), then
+/// write generation oldest-first — an *unknown* generation ranking
+/// newest within its class — then key for determinism.
+fn eviction_order(
+    touched: &BTreeMap<CacheKey, u64>,
+    a: &DiskEntry,
+    b: &DiskEntry,
+) -> std::cmp::Ordering {
+    let ra = touched.get(&a.key).copied().unwrap_or(0);
+    let rb = touched.get(&b.key).copied().unwrap_or(0);
+    let ga = (a.mtime.is_none(), a.mtime.unwrap_or(std::time::SystemTime::UNIX_EPOCH));
+    let gb = (b.mtime.is_none(), b.mtime.unwrap_or(std::time::SystemTime::UNIX_EPOCH));
+    ra.cmp(&rb).then(ga.cmp(&gb)).then(a.key.cmp(&b.key))
+}
+
+/// A foreign entry (never touched by this process) whose write
+/// generation could not be read must be assumed just-written by another
+/// client: it is never selected as an eviction victim. (The old policy
+/// ranked it at `UNIX_EPOCH` — the *first* victim, exactly wrong.)
+fn never_evict(touched: &BTreeMap<CacheKey, u64>, e: &DiskEntry) -> bool {
+    e.mtime.is_none() && !touched.contains_key(&e.key)
 }
 
 fn scan_entries(dir: &Path) -> Vec<DiskEntry> {
@@ -508,16 +584,15 @@ fn scan_entries(dir: &Path) -> Vec<DiskEntry> {
         };
         let Some(key) = CacheKey::from_hex(stem) else { continue };
         let Ok(meta) = entry.metadata() else { continue };
-        let mtime = meta.modified().unwrap_or(std::time::SystemTime::UNIX_EPOCH);
-        let e = map.entry(key).or_insert(DiskEntry {
-            key,
-            bytes: 0,
-            mtime: std::time::SystemTime::UNIX_EPOCH,
-        });
+        let mtime = meta.modified().ok();
+        let e = map.entry(key).or_insert(DiskEntry { key, bytes: 0, mtime });
         e.bytes += meta.len();
-        if mtime > e.mtime {
-            e.mtime = mtime;
-        }
+        e.mtime = match (e.mtime, mtime) {
+            (Some(a), Some(b)) => Some(a.max(b)),
+            // Any file with an unreadable write generation poisons the
+            // whole entry: age unknown, never evict.
+            _ => None,
+        };
     }
     map.into_values().collect()
 }
@@ -1100,6 +1175,97 @@ mod tests {
         assert!(s.evictions >= 3, "expected ≥3 evictions, got {}", s.evictions);
         // Evicted entries are plain misses; surviving ones still load.
         assert!(cache.load(&keys[4], "host").is_some());
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn unreadable_write_generation_ranks_newest_and_is_never_a_victim() {
+        // Regression for the eviction-order bug: a metadata/mtime read
+        // failure used to rank an entry at UNIX_EPOCH — the *first*
+        // eviction victim, exactly wrong for a just-written entry from
+        // another process. Unknown generation must rank newest within
+        // its recency class and never be picked at all.
+        let k = |lo: u64| CacheKey { hi: 0, lo };
+        let t = |s: u64| std::time::SystemTime::UNIX_EPOCH + std::time::Duration::from_secs(s);
+        let touched: BTreeMap<CacheKey, u64> = BTreeMap::new();
+        let mut entries = vec![
+            DiskEntry { key: k(1), bytes: 10, mtime: None },
+            DiskEntry { key: k(2), bytes: 10, mtime: Some(t(2_000_000)) },
+            DiskEntry { key: k(3), bytes: 10, mtime: Some(t(1_000_000)) },
+        ];
+        entries.sort_by(|a, b| eviction_order(&touched, a, b));
+        let order: Vec<u64> = entries.iter().map(|e| e.key.lo).collect();
+        assert_eq!(order, vec![3, 2, 1], "unknown generation sorts newest, not oldest");
+        assert!(never_evict(&touched, &entries[2]), "unknown foreign entry is protected");
+        assert!(!never_evict(&touched, &entries[0]), "known-old entries stay evictable");
+        // An entry this process touched is rankable by its recency tick
+        // even if its mtime read failed — it stays evictable.
+        let touched: BTreeMap<CacheKey, u64> = [(k(1), 7u64)].into_iter().collect();
+        assert!(!never_evict(&touched, &entries[2]));
+    }
+
+    #[test]
+    fn scan_merges_unknown_generation_as_poisoning() {
+        // scan_entries merges per-file mtimes into one entry-level
+        // generation; a None from either file must poison the pair.
+        let dir = test_dir("cache_unit");
+        let cache = ProfileCache::open_with(&dir, no_mem()).unwrap();
+        let req = request(2);
+        let key = ProfileCache::key_for_request(&req, "host");
+        cache.store(&key, &profile_of(&req), "host").unwrap();
+        let entries = scan_entries(&dir);
+        assert_eq!(entries.len(), 1);
+        assert!(entries[0].mtime.is_some(), "healthy files carry a generation");
+        assert!(entries[0].bytes > 0);
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn foreign_entries_evict_by_write_generation_oldest_first() {
+        let dir = test_dir("cache_unit");
+        // A writer lays down three entries and back-dates two, standing
+        // in for older processes' writes.
+        let writer = ProfileCache::open_with(&dir, no_mem()).unwrap();
+        let reqs: Vec<EvalRequest> = (0..3)
+            .map(|i| {
+                let mut r = request(1);
+                r.configs[0].d_k[0] = 1e-3 * (i + 1) as f64;
+                r
+            })
+            .collect();
+        let keys: Vec<CacheKey> =
+            reqs.iter().map(|r| ProfileCache::key_for_request(r, "host")).collect();
+        for (k, r) in keys.iter().zip(&reqs) {
+            writer.store(k, &profile_of(r), "host").unwrap();
+        }
+        let per_entry = writer.disk_bytes() / 3;
+        let now = std::time::SystemTime::now();
+        for (i, k) in keys.iter().enumerate().take(2) {
+            let old = now - std::time::Duration::from_secs(3600 * (2 - i as u64));
+            for p in [writer.envelope_path(k), writer.sidecar_path(k)] {
+                std::fs::File::options().write(true).open(p).unwrap().set_modified(old).unwrap();
+            }
+        }
+        // A second handle (fresh recency map — a new process as far as
+        // eviction ranking goes) stores one more entry under a budget
+        // that fits two: the back-dated foreign entries go first,
+        // oldest first, and the handle's own just-written entry — plus
+        // the freshest foreign one — survive.
+        let budget = per_entry * 5 / 2;
+        let b = ProfileCache::open_with(
+            &dir,
+            CacheConfig { budget_bytes: Some(budget), mem_entries: 0, ..CacheConfig::default() },
+        )
+        .unwrap();
+        let mut r3 = request(1);
+        r3.configs[0].d_k[0] = 5e-3;
+        let k3 = ProfileCache::key_for_request(&r3, "host");
+        b.store(&k3, &profile_of(&r3), "host").unwrap();
+        assert!(b.envelope_path(&k3).exists(), "own just-written entry survives");
+        assert!(!b.envelope_path(&keys[0]).exists(), "oldest foreign entry evicted first");
+        assert!(!b.envelope_path(&keys[1]).exists(), "next-oldest foreign entry evicted second");
+        assert!(b.envelope_path(&keys[2]).exists(), "freshest foreign entry spared");
+        assert!(b.disk_bytes() <= budget);
         std::fs::remove_dir_all(&dir).ok();
     }
 

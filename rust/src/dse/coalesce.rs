@@ -1,0 +1,344 @@
+//! Cross-job coalescing of identical in-flight profile computations.
+//!
+//! N clients asking a warm cache for the same chunk already cost zero
+//! engine contractions; N clients asking a *cold* cache for the same
+//! chunk used to cost N. The [`Coalescer`] closes that gap: profile
+//! requests are keyed by the existing [`CacheKey`] content hash, the
+//! first requester of a key becomes its **leader** (and computes), and
+//! every concurrent requester becomes a **waiter** that blocks until the
+//! leader publishes the finished [`DesignProfile`] — one phase-A
+//! contraction per unique chunk, however many jobs ask.
+//!
+//! Protocol (the order is load-bearing):
+//!
+//! 1. A requester that misses the cache calls [`Coalescer::begin`]. If
+//!    no computation for the key is in flight it receives a
+//!    [`LeadGuard`]; otherwise a [`Waiter`].
+//! 2. A leader **re-checks the cache after winning leadership**: the
+//!    previous leader stores to the cache *before* retiring its
+//!    in-flight entry, so "absent from the in-flight map" can mean
+//!    "already in the cache" — the re-check turns that race into a hit.
+//! 3. A leader that computed stores the profile to the shared cache,
+//!    then calls [`LeadGuard::publish`], which wakes every waiter and
+//!    only then removes the in-flight entry (store-before-retire is the
+//!    invariant step 2 relies on).
+//! 4. A leader that dies without publishing (engine error, fail-fast
+//!    abort, panic) poisons its slot on [`Drop`], so waiters return
+//!    `None` instead of blocking forever and fall back to computing
+//!    themselves.
+//!
+//! Deadlock freedom: a driver step publishes every key it leads before
+//! it waits on any key it follows, so the wait graph between concurrent
+//! jobs is leader→waiter only and acyclic. Bit-identity is free: phase-A
+//! contraction is deterministic per engine, so a waiter's profile is the
+//! same bits it would have computed itself.
+
+use std::collections::HashMap;
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::{Arc, Condvar, Mutex, PoisonError};
+
+use super::cache::CacheKey;
+use crate::matrixform::DesignProfile;
+
+/// One in-flight computation: state under a mutex plus a condvar the
+/// waiters park on.
+#[derive(Debug)]
+enum SlotState {
+    Pending,
+    Done(DesignProfile),
+    Failed,
+}
+
+type Slot = Arc<(Mutex<SlotState>, Condvar)>;
+
+/// Counter snapshot of a [`Coalescer`] (process lifetime, aggregated
+/// across every job that shares the instance).
+#[derive(Debug, Clone, Copy, Default, PartialEq, Eq)]
+pub struct CoalesceStats {
+    /// `begin` calls — cache-missing profile requests that entered the
+    /// coalescer.
+    pub requests: u64,
+    /// Requests that won leadership of their key.
+    pub led: u64,
+    /// Leaders resolved by the post-leadership cache re-check (the
+    /// store-before-retire race, turned into a hit).
+    pub lead_cache_hits: u64,
+    /// Leaders that went on to compute (published after an engine
+    /// contraction).
+    pub computed: u64,
+    /// Leaders that died without publishing.
+    pub lead_failures: u64,
+    /// Requests that joined an in-flight computation as waiters.
+    pub waited: u64,
+    /// Waits resolved with a published profile.
+    pub served_from_wait: u64,
+    /// Waits resolved by a failed leader (the waiter recomputes).
+    pub failed_waits: u64,
+}
+
+impl CoalesceStats {
+    /// Duplicate engine contractions avoided by coalescing alone:
+    /// every request served by someone else's in-flight computation.
+    pub fn coalesced_avoided(&self) -> u64 {
+        self.served_from_wait + self.lead_cache_hits
+    }
+}
+
+/// Shared in-flight map over profile-chunk keys. One instance per
+/// service/process, shared by reference across every concurrent job.
+#[derive(Debug, Default)]
+pub struct Coalescer {
+    inflight: Mutex<HashMap<CacheKey, Slot>>,
+    requests: AtomicU64,
+    led: AtomicU64,
+    lead_cache_hits: AtomicU64,
+    computed: AtomicU64,
+    lead_failures: AtomicU64,
+    waited: AtomicU64,
+    served_from_wait: AtomicU64,
+    failed_waits: AtomicU64,
+}
+
+/// `begin`'s verdict: compute it yourself, or wait for whoever is.
+pub enum Admission<'a> {
+    /// This requester owns the computation for the key.
+    Lead(LeadGuard<'a>),
+    /// An identical computation is in flight; block on [`Waiter::wait`].
+    Wait(Waiter<'a>),
+}
+
+impl Coalescer {
+    /// Fresh coalescer with zeroed counters and an empty in-flight map.
+    pub fn new() -> Coalescer {
+        Coalescer::default()
+    }
+
+    /// Admit a cache-missing request for `key`: the first requester
+    /// leads, everyone else waits.
+    pub fn begin(&self, key: CacheKey) -> Admission<'_> {
+        self.requests.fetch_add(1, Ordering::Relaxed);
+        let mut map = self.inflight.lock().unwrap_or_else(PoisonError::into_inner);
+        if let Some(slot) = map.get(&key) {
+            self.waited.fetch_add(1, Ordering::Relaxed);
+            return Admission::Wait(Waiter { co: self, slot: slot.clone() });
+        }
+        let slot: Slot = Arc::new((Mutex::new(SlotState::Pending), Condvar::new()));
+        map.insert(key, slot.clone());
+        drop(map);
+        self.led.fetch_add(1, Ordering::Relaxed);
+        Admission::Lead(LeadGuard { co: self, key, slot, resolved: false })
+    }
+
+    /// Counter snapshot.
+    pub fn stats(&self) -> CoalesceStats {
+        CoalesceStats {
+            requests: self.requests.load(Ordering::Relaxed),
+            led: self.led.load(Ordering::Relaxed),
+            lead_cache_hits: self.lead_cache_hits.load(Ordering::Relaxed),
+            computed: self.computed.load(Ordering::Relaxed),
+            lead_failures: self.lead_failures.load(Ordering::Relaxed),
+            waited: self.waited.load(Ordering::Relaxed),
+            served_from_wait: self.served_from_wait.load(Ordering::Relaxed),
+            failed_waits: self.failed_waits.load(Ordering::Relaxed),
+        }
+    }
+}
+
+/// Leadership of one in-flight key. Publish exactly once; dropping the
+/// guard without publishing poisons the slot so waiters fall back to
+/// computing themselves instead of blocking forever.
+pub struct LeadGuard<'a> {
+    co: &'a Coalescer,
+    key: CacheKey,
+    slot: Slot,
+    resolved: bool,
+}
+
+impl LeadGuard<'_> {
+    fn resolve(&mut self, state: SlotState) {
+        *self.slot.0.lock().unwrap_or_else(PoisonError::into_inner) = state;
+        self.slot.1.notify_all();
+        self.co
+            .inflight
+            .lock()
+            .unwrap_or_else(PoisonError::into_inner)
+            .remove(&self.key);
+        self.resolved = true;
+    }
+
+    /// Publish a freshly computed profile to every waiter and retire
+    /// the in-flight entry. Call *after* the profile was stored to the
+    /// shared cache: retirement is the signal "check the cache" for
+    /// requesters that arrive later.
+    pub fn publish(mut self, profile: &DesignProfile) {
+        self.co.computed.fetch_add(1, Ordering::Relaxed);
+        self.resolve(SlotState::Done(profile.clone()));
+    }
+
+    /// Publish a profile the post-leadership cache re-check produced
+    /// (no computation happened; counted separately).
+    pub fn publish_cached(mut self, profile: &DesignProfile) {
+        self.co.lead_cache_hits.fetch_add(1, Ordering::Relaxed);
+        self.resolve(SlotState::Done(profile.clone()));
+    }
+}
+
+impl Drop for LeadGuard<'_> {
+    fn drop(&mut self) {
+        if self.resolved {
+            return;
+        }
+        // Leader died without publishing: fail the waiters so they
+        // recompute instead of parking forever.
+        self.co.lead_failures.fetch_add(1, Ordering::Relaxed);
+        self.resolve(SlotState::Failed);
+    }
+}
+
+/// A ticket on someone else's in-flight computation.
+pub struct Waiter<'a> {
+    co: &'a Coalescer,
+    slot: Slot,
+}
+
+impl Waiter<'_> {
+    /// Block until the leader resolves the slot. `Some(profile)` on a
+    /// publish (bit-identical to computing it locally — phase A is
+    /// deterministic per engine); `None` when the leader failed, in
+    /// which case the caller recomputes.
+    pub fn wait(self) -> Option<DesignProfile> {
+        let (lock, cv) = &*self.slot;
+        let mut st = lock.lock().unwrap_or_else(PoisonError::into_inner);
+        while matches!(*st, SlotState::Pending) {
+            st = cv.wait(st).unwrap_or_else(PoisonError::into_inner);
+        }
+        match &*st {
+            SlotState::Done(profile) => {
+                self.co.served_from_wait.fetch_add(1, Ordering::Relaxed);
+                Some(profile.clone())
+            }
+            SlotState::Failed => {
+                self.co.failed_waits.fetch_add(1, Ordering::Relaxed);
+                None
+            }
+            SlotState::Pending => unreachable!("loop exits only on a resolved slot"),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::matrixform::C_VARIANTS;
+
+    fn key(lo: u64) -> CacheKey {
+        // Any 32-hex-char string round-trips into a key; synthesize
+        // distinct ones from the low word.
+        CacheKey::from_hex(&format!("{:016x}{:016x}", 0u64, lo)).unwrap()
+    }
+
+    fn tiny_profile(tag: f32) -> DesignProfile {
+        let c_pad = C_VARIANTS[0];
+        DesignProfile {
+            energy: vec![tag; c_pad],
+            delay: vec![2.0 * tag; c_pad],
+            d_task: vec![0.5; c_pad * crate::matrixform::T_PAD],
+            c_comp: vec![1.0; c_pad * crate::matrixform::J_PAD],
+            c_pad,
+            c: 1,
+            t: 1,
+            names: vec!["cfg0".into()],
+        }
+    }
+
+    #[test]
+    fn second_requester_waits_and_gets_the_leaders_bits() {
+        let co = Coalescer::new();
+        let k = key(1);
+        let lead = match co.begin(k) {
+            Admission::Lead(g) => g,
+            Admission::Wait(_) => panic!("first requester must lead"),
+        };
+        let wait = match co.begin(k) {
+            Admission::Wait(w) => w,
+            Admission::Lead(_) => panic!("second requester must wait"),
+        };
+        let profile = tiny_profile(3.5);
+        std::thread::scope(|s| {
+            let h = s.spawn(move || wait.wait());
+            lead.publish(&profile);
+            let got = h.join().unwrap().expect("published profile reaches the waiter");
+            assert_eq!(
+                got.energy.iter().map(|x| x.to_bits()).collect::<Vec<_>>(),
+                profile.energy.iter().map(|x| x.to_bits()).collect::<Vec<_>>()
+            );
+        });
+        let s = co.stats();
+        assert_eq!((s.requests, s.led, s.waited, s.computed, s.served_from_wait), (2, 1, 1, 1, 1));
+        assert_eq!(s.coalesced_avoided(), 1);
+        // The entry retired with the publish: the next requester leads.
+        assert!(matches!(co.begin(k), Admission::Lead(_)));
+    }
+
+    #[test]
+    fn dropped_leader_fails_waiters_instead_of_wedging_them() {
+        let co = Coalescer::new();
+        let k = key(2);
+        let lead = match co.begin(k) {
+            Admission::Lead(g) => g,
+            Admission::Wait(_) => panic!("first requester must lead"),
+        };
+        let wait = match co.begin(k) {
+            Admission::Wait(w) => w,
+            Admission::Lead(_) => panic!("second requester must wait"),
+        };
+        drop(lead); // engine error / fail-fast abort path
+        assert!(wait.wait().is_none(), "failed leader yields None, not a hang");
+        let s = co.stats();
+        assert_eq!((s.lead_failures, s.failed_waits, s.computed), (1, 1, 0));
+        // The key is free again: the waiter's retry can lead.
+        assert!(matches!(co.begin(k), Admission::Lead(_)));
+    }
+
+    #[test]
+    fn distinct_keys_do_not_coalesce() {
+        let co = Coalescer::new();
+        let a = co.begin(key(3));
+        let b = co.begin(key(4));
+        assert!(matches!(a, Admission::Lead(_)));
+        assert!(matches!(b, Admission::Lead(_)));
+    }
+
+    #[test]
+    fn many_concurrent_requesters_one_computation() {
+        let co = Coalescer::new();
+        let k = key(5);
+        let profile = tiny_profile(1.25);
+        let done = std::sync::atomic::AtomicU64::new(0);
+        std::thread::scope(|s| {
+            for _ in 0..8 {
+                s.spawn(|| match co.begin(k) {
+                    Admission::Lead(g) => {
+                        g.publish(&profile);
+                        done.fetch_add(1, Ordering::Relaxed);
+                    }
+                    Admission::Wait(w) => {
+                        if w.wait().is_some() {
+                            done.fetch_add(1, Ordering::Relaxed);
+                        }
+                    }
+                });
+            }
+        });
+        assert_eq!(done.load(Ordering::Relaxed), 8, "every requester resolved");
+        let s = co.stats();
+        assert_eq!(s.requests, 8);
+        // At most one computation can be in flight per key at a time;
+        // late arrivals after retirement may lead again, but in this
+        // test every leader publishes instantly, so served waiters plus
+        // leaders account for all eight requests with zero failures.
+        assert_eq!(s.led + s.waited, 8);
+        assert_eq!(s.lead_failures, 0);
+        assert_eq!(s.served_from_wait, s.waited);
+    }
+}

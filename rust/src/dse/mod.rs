@@ -47,10 +47,17 @@
 //!   JSON envelopes with binary sidecars for fast warm reads, fronted
 //!   by an in-memory LRU and kept under an optional on-disk size budget
 //!   by LRU/generation-stamped eviction — warm-start sweeps skip every
-//!   cached contraction.
+//!   cached contraction. Safe for concurrent clients: writes and the
+//!   eviction pass coordinate through an advisory directory lock;
+//! * [`coalesce`] — cross-job coalescing of identical in-flight profile
+//!   requests (`Coalescer`), keyed by the cache's content hash: N
+//!   concurrent jobs asking for the same cold chunk trigger exactly one
+//!   phase-A contraction, the rest wait for the leader's published
+//!   bits. The service layer shares one instance across every job.
 
 pub mod batching;
 pub mod cache;
+pub mod coalesce;
 pub mod explore;
 pub mod grid;
 pub mod pareto;
@@ -62,6 +69,7 @@ pub mod sweep;
 
 pub use batching::{evaluate_chunked, profile_chunk_requests, profile_chunked};
 pub use cache::{CacheConfig, CacheKey, ProfileCache, PROFILE_SCHEMA};
+pub use coalesce::{Admission, CoalesceStats, Coalescer, LeadGuard, Waiter};
 pub use explore::{explore, summarize, ExploreOutcome, ExploreStats};
 pub use grid::{AxisPoint, ScenarioGrid, SweepScenario, TracePoint};
 pub use pareto::{beta_sweep, pareto_front, BetaPoint};

@@ -52,6 +52,7 @@ use crate::runtime::{evaluate_fused, profile_request, CacheStats, Engine, Engine
 
 use super::batching::{chunk_ranges, chunk_size, evaluate_chunked, merge, num_chunks, shallow};
 use super::cache::{atomic_write, splice_digest, strip_and_verify_digest, CacheKey, ProfileCache};
+use super::coalesce::{Admission, Coalescer, LeadGuard, Waiter};
 use super::explore::{explore, summarize, ExploreOutcome};
 use super::grid::ScenarioGrid;
 use super::search::grid_digest;
@@ -619,6 +620,26 @@ impl<'a> SweepDriver<'a> {
         factory: &dyn EngineFactory,
         cache: Option<&ProfileCache>,
     ) -> crate::Result<bool> {
+        self.step_with(factory, cache, None)
+    }
+
+    /// [`Self::step`] with an optional cross-job [`Coalescer`]: each
+    /// miss is admitted per content key — the first job in wins
+    /// leadership of the chunk and computes it, every concurrent job
+    /// waits for the leader's published bits instead of re-contracting.
+    /// The order is load-bearing: every led chunk is computed, stored
+    /// and published *before* this step waits on any followed chunk, so
+    /// the cross-job wait graph is leader→waiter only and deadlock-free,
+    /// and the store-before-publish/retire sequence means a requester
+    /// that arrives after retirement finds the profile in the cache.
+    /// With a deterministic engine a waited-for profile is bit-identical
+    /// to computing it locally, so coalescing never changes results.
+    pub fn step_with(
+        &mut self,
+        factory: &dyn EngineFactory,
+        cache: Option<&ProfileCache>,
+        coalescer: Option<&Coalescer>,
+    ) -> crate::Result<bool> {
         if factory.label() != self.engine {
             anyhow::bail!(
                 "engine '{}' does not match the '{}' this sweep was keyed under",
@@ -629,9 +650,9 @@ impl<'a> SweepDriver<'a> {
         if self.is_done() {
             return Ok(true);
         }
-        // Materialize keys only when a cache is in play — the uncached
-        // path never hashes the design space.
-        if cache.is_some() {
+        // Materialize keys only when a cache or coalescer is in play —
+        // the plain uncached path never hashes the design space.
+        if cache.is_some() || coalescer.is_some() {
             self.chunk_keys();
         }
         let batch = resolve_threads(self.cfg.threads).max(1);
@@ -654,25 +675,105 @@ impl<'a> SweepDriver<'a> {
             self.profiles[i] = Some(profile);
         }
         if !misses.is_empty() {
-            let ranges = &self.ranges;
-            let items: Vec<EvalRequest> = misses
-                .iter()
-                .map(|&i| neutral_chunk(&self.base.tasks, &self.base.configs[ranges[i].clone()]))
-                .collect();
-            // Packing happens inside the workers (the coordinator only
-            // hashed `ConfigRow`s for the key); the closure captures
-            // nothing, so it runs on pooled workers unchanged.
-            let (computed, threads) =
-                fan_out(factory, items, self.cfg.threads, |eng, req: &EvalRequest| {
-                    profile_request(eng, req)
-                })?;
-            self.threads_used = self.threads_used.max(threads);
-            for (&i, profile) in misses.iter().zip(computed) {
-                // A failed write-back (disk full, permissions) must not
-                // abort a sweep whose engine work succeeded — the
-                // profile is used anyway and the failure shows up as
-                // `write_errors` on the stats surface.
-                if let (Some(c), Some(keys)) = (cache, self.keys.get()) {
+            // Partition the misses: chunks this job leads (it computes
+            // them) vs chunks an identical concurrent job already has in
+            // flight (this job waits). Without a coalescer every miss is
+            // a local compute, exactly the old behavior.
+            let mut compute: Vec<usize> = Vec::new();
+            let mut guards: Vec<Option<LeadGuard<'_>>> = Vec::new();
+            let mut waits: Vec<(usize, Waiter<'_>)> = Vec::new();
+            match coalescer {
+                Some(co) => {
+                    let keys = self.keys.get().expect("keys materialized above");
+                    for &i in &misses {
+                        match co.begin(keys[i]) {
+                            Admission::Lead(g) => {
+                                // Re-check the cache after winning
+                                // leadership: the previous leader stores
+                                // before retiring its in-flight entry,
+                                // so "absent from the map" can mean
+                                // "already in the cache".
+                                match cache.and_then(|c| c.load(&keys[i], self.engine)) {
+                                    Some(p) => {
+                                        g.publish_cached(&p);
+                                        self.profiles[i] = Some(p);
+                                    }
+                                    None => {
+                                        compute.push(i);
+                                        guards.push(Some(g));
+                                    }
+                                }
+                            }
+                            Admission::Wait(w) => waits.push((i, w)),
+                        }
+                    }
+                }
+                None => {
+                    guards = misses.iter().map(|_| None).collect();
+                    compute = misses;
+                }
+            }
+            if !compute.is_empty() {
+                let ranges = &self.ranges;
+                let items: Vec<EvalRequest> = compute
+                    .iter()
+                    .map(|&i| {
+                        neutral_chunk(&self.base.tasks, &self.base.configs[ranges[i].clone()])
+                    })
+                    .collect();
+                // Packing happens inside the workers (the coordinator
+                // only hashed `ConfigRow`s for the key); the closure
+                // captures nothing, so it runs on pooled workers
+                // unchanged. On error the guards drop unpublished,
+                // poisoning their slots so cross-job waiters recompute
+                // instead of hanging.
+                let (computed, threads) =
+                    fan_out(factory, items, self.cfg.threads, |eng, req: &EvalRequest| {
+                        profile_request(eng, req)
+                    })?;
+                self.threads_used = self.threads_used.max(threads);
+                for ((&i, profile), guard) in compute.iter().zip(computed).zip(guards) {
+                    // A failed write-back (disk full, permissions) must
+                    // not abort a sweep whose engine work succeeded —
+                    // the profile is used anyway and the failure shows
+                    // up as `write_errors` on the stats surface. Store
+                    // BEFORE publish: retirement of the in-flight entry
+                    // is the "check the cache" signal.
+                    if let (Some(c), Some(keys)) = (cache, self.keys.get()) {
+                        let _ = c.store(&keys[i], &profile, self.engine);
+                    }
+                    if let Some(g) = guard {
+                        g.publish(&profile);
+                    }
+                    self.profiles[i] = Some(profile);
+                }
+            }
+            for (i, w) in waits {
+                if let Some(profile) = w.wait() {
+                    // The leader stored before publishing — no second
+                    // store, no second contraction.
+                    self.profiles[i] = Some(profile);
+                    continue;
+                }
+                // The leader died without publishing (engine error,
+                // fail-fast abort in its job). Fall back deterministically:
+                // re-check the cache, then compute locally — a real
+                // engine failure reproduces here and surfaces as this
+                // job's own error.
+                let keys = self.keys.get().expect("keys materialized above");
+                if let Some(p) = cache.and_then(|c| c.load(&keys[i], self.engine)) {
+                    self.profiles[i] = Some(p);
+                    continue;
+                }
+                let item =
+                    neutral_chunk(&self.base.tasks, &self.base.configs[self.ranges[i].clone()]);
+                let (mut computed, threads) =
+                    fan_out(factory, vec![item], self.cfg.threads, |eng, req: &EvalRequest| {
+                        profile_request(eng, req)
+                    })?;
+                self.threads_used = self.threads_used.max(threads);
+                let profile = computed.pop().expect("one item in, one profile out");
+                if let Some(c) = cache {
                     let _ = c.store(&keys[i], &profile, self.engine);
                 }
                 self.profiles[i] = Some(profile);
@@ -791,15 +892,29 @@ impl<'a> SweepDriver<'a> {
     /// once and keep going uncheckpointed, mirroring the cache layer's
     /// degrade-on-write-failure policy.
     pub fn run(
+        self,
+        factory: &dyn EngineFactory,
+        cache: Option<&ProfileCache>,
+        save_to: Option<&Path>,
+    ) -> crate::Result<SweepOutcome> {
+        self.run_with(factory, cache, None, save_to)
+    }
+
+    /// [`Self::run`] through [`Self::step_with`]: the service layer's
+    /// entry point, sharing one [`Coalescer`] across every concurrent
+    /// job so N identical cold sweeps trigger one phase-A contraction
+    /// per unique chunk.
+    pub fn run_with(
         mut self,
         factory: &dyn EngineFactory,
         cache: Option<&ProfileCache>,
+        coalescer: Option<&Coalescer>,
         save_to: Option<&Path>,
     ) -> crate::Result<SweepOutcome> {
         let before = cache.map(|c| c.stats());
         let mut sink = save_to;
         loop {
-            let done = self.step(factory, cache)?;
+            let done = self.step_with(factory, cache, coalescer)?;
             if let Some(path) = sink {
                 if let Err(e) = write_sweep_checkpoint(path, &self.checkpoint()) {
                     eprintln!(

@@ -33,6 +33,9 @@
 //! [`dse::cache::ProfileCache`] (warm-start sweeps perform zero engine
 //! contractions, bit-identically), and [`dse::search`] checkpoints its
 //! generation loop so interrupted searches resume bit-identically.
+//! [`service`] packages all of the above as a resident exploration
+//! server: jobs submitted over a std-only HTTP surface are persisted
+//! checkpoints, so a killed server resumes every in-flight job.
 //!
 //! See `DESIGN.md` for the per-experiment index and `EXPERIMENTS.md` for
 //! paper-vs-measured results.
@@ -47,6 +50,7 @@ pub mod experiments;
 pub mod matrixform;
 pub mod report;
 pub mod runtime;
+pub mod service;
 pub mod soc;
 pub mod testkit;
 pub mod workloads;

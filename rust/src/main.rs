@@ -5,7 +5,7 @@
 
 use std::path::{Path, PathBuf};
 
-use xrcarbon::cli::Args;
+use xrcarbon::cli::{parse_cache_budget, Args};
 use xrcarbon::dse::cache::{CacheConfig, ProfileCache};
 use xrcarbon::dse::search::{read_checkpoint, SearchConfig};
 use xrcarbon::dse::sweep::{
@@ -98,6 +98,18 @@ COMMANDS
                         values; a conflicting seed/space/engine/grid is an
                         error; pass a larger --max-evals to extend a
                         budget-capped search)
+  serve       resident exploration server: queue sweep/search jobs over
+              HTTP, poll progress, fetch results  [--addr HOST:PORT
+                                                    (default 127.0.0.1:7878)
+                                                    --state-dir DIR (required)
+                                                    --executors N (default 2)
+                                                    --cache-dir DIR
+                                                    --cache-budget N[K|M|G]
+                                                    --threads N]
+              jobs persist under --state-dir as spec + checkpoint files;
+              a restarted server resumes every unfinished job
+              bit-identically. Endpoints: POST /v1/sweep, POST /v1/search,
+              GET /v1/jobs/<id>, GET /v1/jobs/<id>/result, GET /v1/stats
   all         run everything above in order
 ";
 
@@ -129,25 +141,11 @@ fn cluster_for(args: &Args) -> anyhow::Result<Cluster> {
     Cluster::parse(name).ok_or_else(|| anyhow::anyhow!("unknown cluster '{name}'"))
 }
 
-/// Byte size with optional K/M/G suffix (powers of two).
-fn parse_byte_size(s: &str) -> Option<u64> {
-    let s = s.trim();
-    let (num, mult) = match s.chars().last()? {
-        'k' | 'K' => (&s[..s.len() - 1], 1u64 << 10),
-        'm' | 'M' => (&s[..s.len() - 1], 1u64 << 20),
-        'g' | 'G' => (&s[..s.len() - 1], 1u64 << 30),
-        _ => (s, 1),
-    };
-    num.parse::<u64>().ok()?.checked_mul(mult)
-}
-
 /// Open the profile cache the CLI flags describe (`--cache-dir` plus the
 /// optional `--cache-budget` eviction knob).
 fn open_cache(args: &Args) -> anyhow::Result<Option<ProfileCache>> {
     let budget = match args.options.get("cache-budget") {
-        Some(s) => Some(parse_byte_size(s).ok_or_else(|| {
-            anyhow::anyhow!("--cache-budget: cannot parse '{s}' (use e.g. 67108864, 64M, 2G)")
-        })?),
+        Some(s) => Some(parse_cache_budget(s)?),
         None => None,
     };
     match args.options.get("cache-dir") {
@@ -407,6 +405,29 @@ fn run_sweep(args: &Args) -> anyhow::Result<()> {
     Ok(())
 }
 
+fn run_serve(args: &Args) -> anyhow::Result<()> {
+    let state_dir = args.options.get("state-dir").ok_or_else(|| {
+        anyhow::anyhow!(
+            "serve requires --state-dir DIR (job specs, checkpoints and results live there)"
+        )
+    })?;
+    let cache_budget = match args.options.get("cache-budget") {
+        Some(s) => Some(parse_cache_budget(s)?),
+        None => None,
+    };
+    let cfg = xrcarbon::service::ServiceConfig {
+        state_dir: PathBuf::from(state_dir),
+        cache_dir: args.options.get("cache-dir").map(PathBuf::from),
+        cache_budget,
+        threads: args.get_usize("threads", 0)?,
+        engine: args.get("engine", "auto").to_string(),
+    };
+    let service = std::sync::Arc::new(xrcarbon::service::Service::open(cfg)?);
+    let addr = args.get("addr", "127.0.0.1:7878");
+    let executors = args.get_usize("executors", 2)?.max(1);
+    xrcarbon::service::serve(service, addr, executors)
+}
+
 fn emit(args: &Args, name: &str, table: &xrcarbon::report::Table) -> anyhow::Result<()> {
     print!("{}", table.render());
     if let Some(dir) = args.options.get("csv-dir") {
@@ -477,29 +498,10 @@ fn run_one(cmd: &str, args: &Args) -> anyhow::Result<()> {
         }
         "table5" => emit(args, "table5", &table5_vr_soc::run().table)?,
         "sweep" => run_sweep(args)?,
+        "serve" => run_serve(args)?,
         other => anyhow::bail!("unknown command '{other}'\n\n{USAGE}"),
     }
     Ok(())
-}
-
-#[cfg(test)]
-mod tests {
-    use super::parse_byte_size;
-
-    #[test]
-    fn byte_sizes_parse_with_and_without_suffix() {
-        assert_eq!(parse_byte_size("1024"), Some(1024));
-        assert_eq!(parse_byte_size("64K"), Some(64 << 10));
-        assert_eq!(parse_byte_size("64k"), Some(64 << 10));
-        assert_eq!(parse_byte_size("512M"), Some(512 << 20));
-        assert_eq!(parse_byte_size("2G"), Some(2u64 << 30));
-        assert_eq!(parse_byte_size(" 8m "), Some(8 << 20));
-        assert_eq!(parse_byte_size(""), None);
-        assert_eq!(parse_byte_size("M"), None);
-        assert_eq!(parse_byte_size("1.5G"), None);
-        assert_eq!(parse_byte_size("-3"), None);
-        assert_eq!(parse_byte_size("999999999999G"), None); // overflow
-    }
 }
 
 fn main() -> anyhow::Result<()> {

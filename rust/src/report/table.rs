@@ -73,6 +73,20 @@ impl Table {
         out
     }
 
+    /// Structured JSON view — `{title, headers, rows}` with every cell
+    /// the exact string `render`/`to_csv` would emit. The service layer
+    /// returns this next to the rendered text so HTTP clients get the
+    /// same numbers machine-readably.
+    pub fn to_json(&self) -> crate::configfmt::Json {
+        use crate::configfmt::Json;
+        let strs = |xs: &[String]| Json::Arr(xs.iter().map(|s| Json::Str(s.clone())).collect());
+        Json::obj(vec![
+            ("title", Json::Str(self.title.clone())),
+            ("headers", strs(&self.headers)),
+            ("rows", Json::Arr(self.rows.iter().map(|r| strs(r)).collect())),
+        ])
+    }
+
     /// CSV rendering (RFC-4180-ish quoting).
     pub fn to_csv(&self) -> String {
         let esc = |s: &str| -> String {
@@ -164,6 +178,21 @@ mod tests {
     fn row_width_checked() {
         let mut t = Table::new("x", &["a", "b"]);
         t.row(&["only-one".into()]);
+    }
+
+    #[test]
+    fn json_view_matches_cells() {
+        let mut t = Table::new("demo", &["name", "v"]);
+        t.row(&["a".into(), "1.5".into()]);
+        let j = t.to_json();
+        assert_eq!(j.get("title").and_then(|v| v.as_str()), Some("demo"));
+        let headers = j.get("headers").and_then(|v| v.as_arr()).unwrap();
+        assert_eq!(headers.len(), 2);
+        let rows = j.get("rows").and_then(|v| v.as_arr()).unwrap();
+        assert_eq!(rows.len(), 1);
+        assert_eq!(rows[0].as_arr().unwrap()[1].as_str(), Some("1.5"));
+        // Deterministic rendering (sorted keys) — stable for clients.
+        assert!(j.to_string().starts_with("{\"headers\""));
     }
 
     #[test]

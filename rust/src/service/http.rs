@@ -1,0 +1,338 @@
+//! The std-only HTTP/1.1 surface: a pure request router (testable
+//! without sockets) and a thin `TcpListener` loop around it.
+//!
+//! Endpoints (all JSON bodies):
+//!
+//! * `POST /v1/sweep`  `{preset?, cluster?, threads?, trace?}` → 202 `{job}`
+//! * `POST /v1/search` `{space?, cluster?, threads?, seed?, max_evals?}` → 202 `{job}`
+//! * `GET /v1/jobs/<id>` → `{id, kind, state, done, total, detail}`
+//! * `GET /v1/jobs/<id>/result` → the persisted result (409 while pending)
+//! * `GET /v1/stats` → process-total cache + coalescer counters
+//!
+//! Deliberately minimal: one request per connection (`Connection:
+//! close`), no chunked bodies, no TLS — the server is a trusted-network
+//! lab tool, not an internet-facing daemon.
+
+use std::io::{Read, Write};
+use std::net::{SocketAddr, TcpListener, TcpStream};
+use std::sync::Arc;
+
+use super::jobs::{ResultFetch, Submit};
+use super::Service;
+use crate::configfmt::{parse, Json};
+use crate::testkit::parse_seed;
+
+/// Route one request. Pure: status code + JSON payload out, no I/O —
+/// the unit tests drive this directly and the TCP loop stays trivial.
+pub fn handle_request(service: &Service, method: &str, path: &str, body: &str) -> (u16, String) {
+    match (method, path) {
+        ("POST", "/v1/sweep") => submit_sweep(service, body),
+        ("POST", "/v1/search") => submit_search(service, body),
+        (_, "/v1/sweep" | "/v1/search") => (405, err_json("use POST")),
+        ("GET", "/v1/stats") => (200, service.stats_json().to_string()),
+        (_, "/v1/stats") => (405, err_json("use GET")),
+        ("GET", p) if p.starts_with("/v1/jobs/") => jobs_get(service, &p["/v1/jobs/".len()..]),
+        (_, p) if p.starts_with("/v1/jobs/") => (405, err_json("use GET")),
+        _ => (404, err_json("no such endpoint")),
+    }
+}
+
+fn err_json(msg: &str) -> String {
+    Json::obj(vec![("error", Json::Str(msg.to_string()))]).to_string()
+}
+
+fn body_json(body: &str) -> Result<Json, String> {
+    let trimmed = body.trim();
+    if trimmed.is_empty() {
+        return Ok(Json::obj(Vec::new()));
+    }
+    parse(trimmed).map_err(|e| format!("request body: {e}"))
+}
+
+fn get_str(doc: &Json, key: &str, default: &str) -> Result<String, String> {
+    match doc.get(key) {
+        None | Some(Json::Null) => Ok(default.to_string()),
+        Some(j) => {
+            j.as_str().map(str::to_string).ok_or_else(|| format!("field `{key}` must be a string"))
+        }
+    }
+}
+
+fn get_usize(doc: &Json, key: &str, default: usize) -> Result<usize, String> {
+    match doc.get(key) {
+        None | Some(Json::Null) => Ok(default),
+        Some(j) => j.as_usize().ok_or_else(|| format!("field `{key}` must be a whole number")),
+    }
+}
+
+/// Seeds accept a JSON number or a (hex) string — u64 does not fit an
+/// f64 number losslessly.
+fn get_seed(doc: &Json, key: &str, default: u64) -> Result<u64, String> {
+    match doc.get(key) {
+        None | Some(Json::Null) => Ok(default),
+        Some(Json::Str(s)) => {
+            parse_seed(s).ok_or_else(|| format!("field `{key}` must be a u64 (decimal or 0x hex)"))
+        }
+        Some(j) => j
+            .as_usize()
+            .map(|v| v as u64)
+            .ok_or_else(|| format!("field `{key}` must be a u64 (decimal or 0x hex)")),
+    }
+}
+
+fn submit_sweep(service: &Service, body: &str) -> (u16, String) {
+    let parsed = (|| {
+        let doc = body_json(body)?;
+        let preset = get_str(&doc, "preset", "fig7")?;
+        let cluster = get_str(&doc, "cluster", "5ai")?;
+        let threads = get_usize(&doc, "threads", 0)?;
+        let trace = match doc.get("trace") {
+            None | Some(Json::Null) => None,
+            Some(j) => Some(
+                j.as_str().map(str::to_string).ok_or("field `trace` must be a string")?,
+            ),
+        };
+        Ok::<_, String>((preset, cluster, threads, trace))
+    })();
+    let (preset, cluster, threads, trace) = match parsed {
+        Ok(p) => p,
+        Err(msg) => return (400, err_json(&msg)),
+    };
+    match service.submit_sweep(&preset, &cluster, threads, trace.as_deref()) {
+        Ok(Submit::Accepted(id)) => (202, Json::obj(vec![("job", Json::Num(id as f64))]).to_string()),
+        Ok(Submit::Rejected(msg)) => (400, err_json(&msg)),
+        Err(e) => (500, err_json(&format!("{e:#}"))),
+    }
+}
+
+fn submit_search(service: &Service, body: &str) -> (u16, String) {
+    let parsed = (|| {
+        let doc = body_json(body)?;
+        let space = get_str(&doc, "space", "fig7")?;
+        let cluster = get_str(&doc, "cluster", "5ai")?;
+        let threads = get_usize(&doc, "threads", 0)?;
+        let seed = get_seed(&doc, "seed", 0xC0FFEE)?;
+        let max_evals = get_usize(&doc, "max_evals", 0)?;
+        Ok::<_, String>((space, cluster, threads, seed, max_evals))
+    })();
+    let (space, cluster, threads, seed, max_evals) = match parsed {
+        Ok(p) => p,
+        Err(msg) => return (400, err_json(&msg)),
+    };
+    match service.submit_search(&space, &cluster, threads, seed, max_evals) {
+        Ok(Submit::Accepted(id)) => (202, Json::obj(vec![("job", Json::Num(id as f64))]).to_string()),
+        Ok(Submit::Rejected(msg)) => (400, err_json(&msg)),
+        Err(e) => (500, err_json(&format!("{e:#}"))),
+    }
+}
+
+fn jobs_get(service: &Service, rest: &str) -> (u16, String) {
+    let (idpart, want_result) = match rest.strip_suffix("/result") {
+        Some(p) => (p, true),
+        None => (rest, false),
+    };
+    let Ok(id) = idpart.parse::<u64>() else { return (404, err_json("bad job id")) };
+    if !want_result {
+        return match service.job_status(id) {
+            Some(j) => (200, j.to_string()),
+            None => (404, err_json(&format!("no job {id}"))),
+        };
+    }
+    match service.job_result(id) {
+        ResultFetch::Unknown => (404, err_json(&format!("no job {id}"))),
+        ResultFetch::Pending(state) => (
+            409,
+            Json::obj(vec![
+                ("error", Json::Str(format!("job {id} not finished"))),
+                ("state", Json::Str(state.to_string())),
+            ])
+            .to_string(),
+        ),
+        ResultFetch::Failed(detail) => (500, err_json(&detail)),
+        ResultFetch::Ready(text) => (200, text),
+    }
+}
+
+/// Bind `addr` and serve connections on a background thread. Returns
+/// the bound address (pass port 0 to let the OS pick — the e2e tests
+/// do). One thread per connection: requests are tiny and the expensive
+/// work happens on the executor threads, not here.
+pub fn spawn_listener(service: Arc<Service>, addr: &str) -> crate::Result<SocketAddr> {
+    let listener = TcpListener::bind(addr)?;
+    let local = listener.local_addr()?;
+    std::thread::spawn(move || {
+        for conn in listener.incoming() {
+            let Ok(stream) = conn else { continue };
+            let svc = Arc::clone(&service);
+            std::thread::spawn(move || {
+                let _ = handle_connection(&svc, stream);
+            });
+        }
+    });
+    Ok(local)
+}
+
+/// Run the full server: the listener plus `executors` job-runner
+/// threads looping [`Service::run_next`]. Blocks forever (the serve
+/// subcommand's terminal state); errors only on a failed bind.
+pub fn serve(service: Arc<Service>, addr: &str, executors: usize) -> crate::Result<()> {
+    let local = spawn_listener(Arc::clone(&service), addr)?;
+    println!(
+        "[serve] listening on http://{local} ({} executor(s), state in {})",
+        executors.max(1),
+        service.cfg.state_dir.display()
+    );
+    let mut handles = Vec::new();
+    for _ in 0..executors.max(1) {
+        let svc = Arc::clone(&service);
+        handles.push(std::thread::spawn(move || loop {
+            match svc.run_next(None) {
+                Ok(true) => {}
+                Ok(false) => std::thread::sleep(std::time::Duration::from_millis(50)),
+                Err(e) => {
+                    eprintln!("[serve] executor error: {e:#}");
+                    std::thread::sleep(std::time::Duration::from_millis(200));
+                }
+            }
+        }));
+    }
+    for h in handles {
+        let _ = h.join();
+    }
+    Ok(())
+}
+
+fn handle_connection(service: &Service, mut stream: TcpStream) -> std::io::Result<()> {
+    let mut buf: Vec<u8> = Vec::new();
+    let mut chunk = [0u8; 4096];
+    let header_end = loop {
+        if let Some(pos) = buf.windows(4).position(|w| w == b"\r\n\r\n") {
+            break pos;
+        }
+        if buf.len() > 64 * 1024 {
+            return respond(&mut stream, 431, &err_json("headers too large"));
+        }
+        let n = stream.read(&mut chunk)?;
+        if n == 0 {
+            return Ok(());
+        }
+        buf.extend_from_slice(&chunk[..n]);
+    };
+    let head = String::from_utf8_lossy(&buf[..header_end]).into_owned();
+    let mut lines = head.split("\r\n");
+    let request_line = lines.next().unwrap_or("");
+    let mut parts = request_line.split_whitespace();
+    let method = parts.next().unwrap_or("").to_string();
+    let path = parts.next().unwrap_or("").to_string();
+    let mut content_length = 0usize;
+    for line in lines {
+        if let Some((k, v)) = line.split_once(':') {
+            if k.trim().eq_ignore_ascii_case("content-length") {
+                content_length = v.trim().parse().unwrap_or(0);
+            }
+        }
+    }
+    if content_length > 1 << 20 {
+        return respond(&mut stream, 413, &err_json("body too large"));
+    }
+    let mut body = buf[header_end + 4..].to_vec();
+    while body.len() < content_length {
+        let n = stream.read(&mut chunk)?;
+        if n == 0 {
+            break;
+        }
+        body.extend_from_slice(&chunk[..n]);
+    }
+    body.truncate(content_length);
+    let body = String::from_utf8_lossy(&body).into_owned();
+    let (status, payload) = handle_request(service, &method, &path, &body);
+    respond(&mut stream, status, &payload)
+}
+
+fn respond(stream: &mut TcpStream, status: u16, body: &str) -> std::io::Result<()> {
+    let reason = match status {
+        200 => "OK",
+        202 => "Accepted",
+        400 => "Bad Request",
+        404 => "Not Found",
+        405 => "Method Not Allowed",
+        409 => "Conflict",
+        413 => "Payload Too Large",
+        431 => "Request Header Fields Too Large",
+        _ => "Internal Server Error",
+    };
+    let resp = format!(
+        "HTTP/1.1 {status} {reason}\r\nContent-Type: application/json\r\nContent-Length: \
+         {}\r\nConnection: close\r\n\r\n{body}",
+        body.len()
+    );
+    stream.write_all(resp.as_bytes())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::service::ServiceConfig;
+
+    fn open(tag: &str) -> (Service, std::path::PathBuf) {
+        let dir = crate::testkit::test_dir(tag);
+        std::fs::remove_dir_all(&dir).ok();
+        let svc = Service::open(ServiceConfig {
+            state_dir: dir.clone(),
+            cache_dir: None,
+            cache_budget: None,
+            threads: 1,
+            engine: "host".to_string(),
+        })
+        .unwrap();
+        (svc, dir)
+    }
+
+    #[test]
+    fn router_handles_submissions_status_and_errors() {
+        let (svc, dir) = open("svc_router");
+        // Unknown endpoint and wrong methods.
+        assert_eq!(handle_request(&svc, "GET", "/nope", "").0, 404);
+        assert_eq!(handle_request(&svc, "GET", "/v1/sweep", "").0, 405);
+        assert_eq!(handle_request(&svc, "POST", "/v1/stats", "").0, 405);
+        // Bad submissions are 400 with a message, not queued jobs.
+        assert_eq!(handle_request(&svc, "POST", "/v1/sweep", r#"{"preset":"nope"}"#).0, 400);
+        assert_eq!(handle_request(&svc, "POST", "/v1/sweep", r#"{"cluster":"zz"}"#).0, 400);
+        assert_eq!(handle_request(&svc, "POST", "/v1/sweep", r#"{"trace":"x"}"#).0, 400);
+        assert_eq!(handle_request(&svc, "POST", "/v1/search", r#"{"space":"zz"}"#).0, 400);
+        assert_eq!(handle_request(&svc, "POST", "/v1/sweep", "{not json").0, 400);
+        // A good submission queues and is visible.
+        let (code, body) = handle_request(&svc, "POST", "/v1/sweep", r#"{"preset":"fig7"}"#);
+        assert_eq!(code, 202, "{body}");
+        let id = parse(&body).unwrap().get("job").and_then(Json::as_usize).unwrap();
+        let (code, status) = handle_request(&svc, "GET", &format!("/v1/jobs/{id}"), "");
+        assert_eq!(code, 200);
+        let status = parse(&status).unwrap();
+        assert_eq!(status.get("state").and_then(Json::as_str), Some("queued"));
+        assert_eq!(status.get("kind").and_then(Json::as_str), Some("sweep"));
+        // Result of a pending job is a 409, of an unknown job a 404.
+        assert_eq!(handle_request(&svc, "GET", &format!("/v1/jobs/{id}/result"), "").0, 409);
+        assert_eq!(handle_request(&svc, "GET", "/v1/jobs/999/result", "").0, 404);
+        assert_eq!(handle_request(&svc, "GET", "/v1/jobs/xx", "").0, 404);
+        // Stats always answer.
+        let (code, stats) = handle_request(&svc, "GET", "/v1/stats", "");
+        assert_eq!(code, 200);
+        let stats = parse(&stats).unwrap();
+        assert!(stats.get("cache").is_some() && stats.get("coalescer").is_some());
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn search_submission_accepts_hex_seeds() {
+        let (svc, dir) = open("svc_seed");
+        let (code, body) = handle_request(
+            &svc,
+            "POST",
+            "/v1/search",
+            r#"{"space":"fig7","seed":"0xDEADBEEFDEADBEEF","max_evals":5}"#,
+        );
+        assert_eq!(code, 202, "{body}");
+        assert_eq!(handle_request(&svc, "POST", "/v1/search", r#"{"seed":"zz"}"#).0, 400);
+        std::fs::remove_dir_all(&dir).ok();
+    }
+}

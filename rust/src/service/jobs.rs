@@ -1,0 +1,728 @@
+//! Job specs, the durable registry, and the job runner.
+//!
+//! Specs are digest-sealed JSON envelopes like every other persisted
+//! artifact in this repo; the runner builds each job's problem the exact
+//! same way the CLI does (same presets, same grids, same drivers), so a
+//! job's result is bit-identical to the one-shot CLI run — locked by
+//! `rust/tests/service_e2e.rs`.
+
+use std::collections::{BTreeMap, VecDeque};
+use std::path::{Path, PathBuf};
+use std::sync::PoisonError;
+
+use super::Service;
+use crate::carbon::{CiTrace, FabGrid};
+use crate::configfmt::{parse, Json};
+use crate::dse::cache::{atomic_write, splice_digest, strip_and_verify_digest};
+use crate::dse::grid::{ScenarioGrid, YEAR_S};
+use crate::dse::search::{
+    read_checkpoint, ReplayEvaluator, SearchConfig, SearchDriver, SimulatorEvaluator,
+    SpaceEvaluator,
+};
+use crate::dse::space::SearchSpace;
+use crate::dse::sweep::{read_sweep_checkpoint, write_sweep_checkpoint, SweepConfig, SweepDriver};
+use crate::experiments::common::{provisioning_request, rows_request};
+use crate::experiments::{search_fig7, sweep_fig7, trace_study};
+use crate::matrixform::EvalRequest;
+use crate::report::{
+    search_archive_table, search_table, sweep_best_table, sweep_table, trace_table, Table,
+};
+use crate::testkit::parse_seed;
+use crate::workloads::{cluster_workloads, top10_apps, Cluster};
+
+/// What a job runs.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum JobKind {
+    /// Exhaustive multi-scenario sweep (a `sweep --preset` run).
+    Sweep,
+    /// Adaptive Pareto-guided search (a `sweep --search` run).
+    Search,
+}
+
+impl JobKind {
+    /// Wire label.
+    pub fn label(self) -> &'static str {
+        match self {
+            JobKind::Sweep => "sweep",
+            JobKind::Search => "search",
+        }
+    }
+}
+
+/// Job lifecycle. Only specs and results persist — `Running` reverts to
+/// queued on restart (the checkpoint carries the progress), and `Failed`
+/// reverts to queued too (a restart retries from the last checkpoint).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum JobState {
+    /// Waiting for an executor.
+    Queued,
+    /// An executor is driving it.
+    Running,
+    /// Result persisted under the state directory.
+    Done,
+    /// The run errored; the detail string says why. In-memory only.
+    Failed,
+}
+
+impl JobState {
+    /// Wire label.
+    pub fn label(self) -> &'static str {
+        match self {
+            JobState::Queued => "queued",
+            JobState::Running => "running",
+            JobState::Done => "done",
+            JobState::Failed => "failed",
+        }
+    }
+}
+
+/// A submitted job, exactly as persisted. One flat struct for both
+/// kinds; the fields the other kind ignores stay at their defaults.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct JobSpec {
+    /// Registry id (also the state-file stem).
+    pub id: u64,
+    /// Sweep or search.
+    pub kind: JobKind,
+    /// Sweep preset (fig7|fig10|lifetime|fig11|ci|trace).
+    pub preset: String,
+    /// Search space (fig7|expanded).
+    pub space: String,
+    /// Workload cluster name.
+    pub cluster: String,
+    /// Profile-phase worker threads (0 = auto).
+    pub threads: usize,
+    /// Search seed.
+    pub seed: u64,
+    /// Search evaluation budget (0 = uncapped).
+    pub max_evals: usize,
+    /// Named CI trace (trace preset only).
+    pub trace: Option<String>,
+}
+
+impl JobSpec {
+    /// Render the digest-sealed envelope.
+    pub fn to_json_string(&self) -> String {
+        let body = Json::obj(vec![
+            ("id", Json::Num(self.id as f64)),
+            ("kind", Json::Str(self.kind.label().to_string())),
+            ("preset", Json::Str(self.preset.clone())),
+            ("space", Json::Str(self.space.clone())),
+            ("cluster", Json::Str(self.cluster.clone())),
+            ("threads", Json::Num(self.threads as f64)),
+            // Hex string: seeds are u64 and `Json::Num` is an f64.
+            ("seed", Json::Str(format!("{:#018x}", self.seed))),
+            ("max_evals", Json::Num(self.max_evals as f64)),
+            (
+                "trace",
+                match &self.trace {
+                    Some(t) => Json::Str(t.clone()),
+                    None => Json::Null,
+                },
+            ),
+        ])
+        .to_string();
+        splice_digest(&body)
+    }
+
+    /// Parse and validate an envelope (integrity digest first). Any
+    /// defect is a typed error, never a partial spec.
+    pub fn from_json_str(text: &str) -> crate::Result<JobSpec> {
+        let mut doc = parse(text).map_err(|e| anyhow::anyhow!("job spec: {e}"))?;
+        strip_and_verify_digest(&mut doc, "job spec")?;
+        let bad = |f: &str| anyhow::anyhow!("job spec: missing or invalid field `{f}`");
+        let id = doc.get("id").and_then(Json::as_usize).ok_or_else(|| bad("id"))? as u64;
+        let kind = match doc.get("kind").and_then(Json::as_str) {
+            Some("sweep") => JobKind::Sweep,
+            Some("search") => JobKind::Search,
+            _ => return Err(bad("kind")),
+        };
+        let text_field = |f: &str| {
+            doc.get(f).and_then(Json::as_str).map(str::to_string).ok_or_else(|| bad(f))
+        };
+        let preset = text_field("preset")?;
+        let space = text_field("space")?;
+        let cluster = text_field("cluster")?;
+        let threads = doc.get("threads").and_then(Json::as_usize).ok_or_else(|| bad("threads"))?;
+        let seed = doc
+            .get("seed")
+            .and_then(Json::as_str)
+            .and_then(parse_seed)
+            .ok_or_else(|| bad("seed"))?;
+        let max_evals =
+            doc.get("max_evals").and_then(Json::as_usize).ok_or_else(|| bad("max_evals"))?;
+        let trace = match doc.get("trace") {
+            None | Some(Json::Null) => None,
+            Some(j) => Some(j.as_str().ok_or_else(|| bad("trace"))?.to_string()),
+        };
+        Ok(JobSpec { id, kind, preset, space, cluster, threads, seed, max_evals, trace })
+    }
+}
+
+/// In-memory view of one job.
+pub(super) struct Entry {
+    pub(super) spec: JobSpec,
+    pub(super) state: JobState,
+    /// Progress: driver units done (chunks or evaluations).
+    pub(super) done: usize,
+    /// Progress denominator (0 = unknown/uncapped).
+    pub(super) total: usize,
+    /// Human-readable phase or failure detail.
+    pub(super) detail: String,
+}
+
+/// The job table plus the FIFO of runnable ids.
+pub(super) struct Registry {
+    next_id: u64,
+    queue: VecDeque<u64>,
+    jobs: BTreeMap<u64, Entry>,
+}
+
+impl Registry {
+    /// Rebuild the registry from the state directory: every persisted
+    /// spec becomes an entry; specs without a result re-queue in id
+    /// order (the restart-resume contract). A corrupt spec is an error —
+    /// silently dropping a submitted job would be worse than refusing
+    /// to start.
+    pub(super) fn scan(dir: &Path) -> crate::Result<Registry> {
+        let mut jobs: BTreeMap<u64, Entry> = BTreeMap::new();
+        if let Ok(rd) = std::fs::read_dir(dir) {
+            for entry in rd.flatten() {
+                let name = entry.file_name().to_string_lossy().into_owned();
+                let Some(stem) =
+                    name.strip_prefix("job_").and_then(|r| r.strip_suffix(".spec.json"))
+                else {
+                    continue;
+                };
+                let Ok(id) = stem.parse::<u64>() else { continue };
+                let text = std::fs::read_to_string(entry.path())?;
+                let spec = JobSpec::from_json_str(&text)?;
+                if spec.id != id {
+                    anyhow::bail!("job spec {name} carries id {} (file/spec mismatch)", spec.id);
+                }
+                let finished = dir.join(format!("job_{id}.result.json")).exists();
+                jobs.insert(
+                    id,
+                    Entry {
+                        spec,
+                        state: if finished { JobState::Done } else { JobState::Queued },
+                        done: 0,
+                        total: 0,
+                        detail: if finished { "result on disk".to_string() } else { String::new() },
+                    },
+                );
+            }
+        }
+        let queue: VecDeque<u64> = jobs
+            .iter()
+            .filter(|(_, e)| e.state == JobState::Queued)
+            .map(|(&id, _)| id)
+            .collect();
+        let next_id = jobs.keys().next_back().map(|&id| id + 1).unwrap_or(1);
+        Ok(Registry { next_id, queue, jobs })
+    }
+}
+
+/// Submission verdict: accepted with an id, or rejected with a client
+/// error (the router's 400).
+pub enum Submit {
+    /// Job queued under this id.
+    Accepted(u64),
+    /// Request invalid — message for the client.
+    Rejected(String),
+}
+
+/// Result-fetch verdict, mapped to a status code by the router.
+pub enum ResultFetch {
+    /// No such job (404).
+    Unknown,
+    /// Job exists but has no result yet; carries the state label (409).
+    Pending(&'static str),
+    /// Job failed; carries the error detail (500).
+    Failed(String),
+    /// The persisted result JSON, verbatim (200).
+    Ready(String),
+}
+
+/// How one `run_next` call left its job.
+enum Step {
+    Finished,
+    Paused,
+}
+
+const SWEEP_PRESETS: &[&str] = &["fig7", "fig10", "lifetime", "fig11", "ci", "trace"];
+const SEARCH_SPACES: &[&str] = &["fig7", "expanded"];
+
+impl Service {
+    fn spec_path(&self, id: u64) -> PathBuf {
+        self.cfg.state_dir.join(format!("job_{id}.spec.json"))
+    }
+
+    fn ckpt_path(&self, id: u64) -> PathBuf {
+        self.cfg.state_dir.join(format!("job_{id}.ckpt.json"))
+    }
+
+    fn result_path(&self, id: u64) -> PathBuf {
+        self.cfg.state_dir.join(format!("job_{id}.result.json"))
+    }
+
+    /// Queue a sweep job. Validation happens here, at submit time —
+    /// a bad preset/cluster/trace is a client error, not a job that
+    /// fails minutes later.
+    pub fn submit_sweep(
+        &self,
+        preset: &str,
+        cluster: &str,
+        threads: usize,
+        trace: Option<&str>,
+    ) -> crate::Result<Submit> {
+        if !SWEEP_PRESETS.contains(&preset) {
+            return Ok(Submit::Rejected(format!(
+                "unknown sweep preset '{preset}' ({})",
+                SWEEP_PRESETS.join("|")
+            )));
+        }
+        if Cluster::parse(cluster).is_none() {
+            return Ok(Submit::Rejected(format!("unknown cluster '{cluster}'")));
+        }
+        if let Some(name) = trace {
+            if preset != "trace" {
+                return Ok(Submit::Rejected("trace requires preset 'trace'".to_string()));
+            }
+            if CiTrace::by_name(name).is_none() {
+                return Ok(Submit::Rejected(format!(
+                    "unknown trace '{name}' (known: {})",
+                    CiTrace::preset_names().join(", ")
+                )));
+            }
+        }
+        let spec = JobSpec {
+            id: 0,
+            kind: JobKind::Sweep,
+            preset: preset.to_string(),
+            space: String::new(),
+            cluster: cluster.to_string(),
+            threads,
+            seed: 0,
+            max_evals: 0,
+            trace: trace.map(str::to_string),
+        };
+        Ok(Submit::Accepted(self.enqueue(spec)?))
+    }
+
+    /// Queue a search job.
+    pub fn submit_search(
+        &self,
+        space: &str,
+        cluster: &str,
+        threads: usize,
+        seed: u64,
+        max_evals: usize,
+    ) -> crate::Result<Submit> {
+        if !SEARCH_SPACES.contains(&space) {
+            return Ok(Submit::Rejected(format!(
+                "unknown search space '{space}' ({})",
+                SEARCH_SPACES.join("|")
+            )));
+        }
+        if Cluster::parse(cluster).is_none() {
+            return Ok(Submit::Rejected(format!("unknown cluster '{cluster}'")));
+        }
+        let spec = JobSpec {
+            id: 0,
+            kind: JobKind::Search,
+            preset: String::new(),
+            space: space.to_string(),
+            cluster: cluster.to_string(),
+            threads,
+            seed,
+            max_evals,
+            trace: None,
+        };
+        Ok(Submit::Accepted(self.enqueue(spec)?))
+    }
+
+    /// Assign an id, persist the spec (before the entry becomes visible
+    /// — a job the registry knows about must survive a crash), enqueue.
+    fn enqueue(&self, mut spec: JobSpec) -> crate::Result<u64> {
+        let mut st = self.state.lock().unwrap_or_else(PoisonError::into_inner);
+        let id = st.next_id;
+        spec.id = id;
+        atomic_write(&self.spec_path(id), &spec.to_json_string())?;
+        st.next_id += 1;
+        st.jobs.insert(
+            id,
+            Entry { spec, state: JobState::Queued, done: 0, total: 0, detail: String::new() },
+        );
+        st.queue.push_back(id);
+        Ok(id)
+    }
+
+    /// Status JSON for one job, `None` for an unknown id.
+    pub fn job_status(&self, id: u64) -> Option<Json> {
+        let st = self.state.lock().unwrap_or_else(PoisonError::into_inner);
+        let e = st.jobs.get(&id)?;
+        Some(Json::obj(vec![
+            ("id", Json::Num(id as f64)),
+            ("kind", Json::Str(e.spec.kind.label().to_string())),
+            ("state", Json::Str(e.state.label().to_string())),
+            ("done", Json::Num(e.done as f64)),
+            ("total", Json::Num(e.total as f64)),
+            ("detail", Json::Str(e.detail.clone())),
+        ]))
+    }
+
+    /// Fetch a job's persisted result.
+    pub fn job_result(&self, id: u64) -> ResultFetch {
+        let (state, detail) = {
+            let st = self.state.lock().unwrap_or_else(PoisonError::into_inner);
+            match st.jobs.get(&id) {
+                None => return ResultFetch::Unknown,
+                Some(e) => (e.state, e.detail.clone()),
+            }
+        };
+        match state {
+            JobState::Done => match std::fs::read_to_string(self.result_path(id)) {
+                Ok(text) => ResultFetch::Ready(text),
+                Err(e) => ResultFetch::Failed(format!("result file unreadable: {e}")),
+            },
+            JobState::Failed => ResultFetch::Failed(detail),
+            other => ResultFetch::Pending(other.label()),
+        }
+    }
+
+    /// Process-lifetime cache + coalescer counters, aggregated across
+    /// every job this instance has run.
+    pub fn stats_json(&self) -> Json {
+        let n = |v: usize| Json::Num(v as f64);
+        let c = self.cache.stats();
+        let co = self.coalescer.stats();
+        Json::obj(vec![
+            (
+                "cache",
+                Json::obj(vec![
+                    ("hits", n(c.hits)),
+                    ("mem_hits", n(c.mem_hits)),
+                    ("misses", n(c.misses)),
+                    ("rejected", n(c.rejected)),
+                    ("writes", n(c.writes)),
+                    ("write_errors", n(c.write_errors)),
+                    ("evictions", n(c.evictions)),
+                    ("contractions_avoided", n(c.contractions_avoided())),
+                ]),
+            ),
+            (
+                "coalescer",
+                Json::obj(vec![
+                    ("requests", n(co.requests as usize)),
+                    ("led", n(co.led as usize)),
+                    ("lead_cache_hits", n(co.lead_cache_hits as usize)),
+                    ("computed", n(co.computed as usize)),
+                    ("lead_failures", n(co.lead_failures as usize)),
+                    ("waited", n(co.waited as usize)),
+                    ("served_from_wait", n(co.served_from_wait as usize)),
+                    ("failed_waits", n(co.failed_waits as usize)),
+                    ("coalesced_avoided", n(co.coalesced_avoided() as usize)),
+                ]),
+            ),
+        ])
+    }
+
+    fn set_progress(&self, id: u64, done: usize, total: usize, detail: &str) {
+        let mut st = self.state.lock().unwrap_or_else(PoisonError::into_inner);
+        if let Some(e) = st.jobs.get_mut(&id) {
+            e.done = done;
+            e.total = total;
+            e.detail = detail.to_string();
+        }
+    }
+
+    /// Pop and drive the lowest queued job. `max_steps` caps driver
+    /// steps for this call (tests use it to exercise the kill/resume
+    /// path deterministically); an uncapped call runs the job to
+    /// completion. Returns `false` when the queue was empty. Job errors
+    /// are recorded on the entry, never propagated — one bad job must
+    /// not kill an executor thread.
+    pub fn run_next(&self, max_steps: Option<usize>) -> crate::Result<bool> {
+        let spec = {
+            let mut st = self.state.lock().unwrap_or_else(PoisonError::into_inner);
+            let Some(id) = st.queue.pop_front() else { return Ok(false) };
+            let e = st.jobs.get_mut(&id).expect("queued job has an entry");
+            e.state = JobState::Running;
+            e.spec.clone()
+        };
+        let id = spec.id;
+        let ran = match spec.kind {
+            JobKind::Sweep => self.drive_sweep(&spec, max_steps),
+            JobKind::Search => self.drive_search(&spec, max_steps),
+        };
+        let mut st = self.state.lock().unwrap_or_else(PoisonError::into_inner);
+        let e = st.jobs.get_mut(&id).expect("running job has an entry");
+        match ran {
+            Ok(Step::Finished) => e.state = JobState::Done,
+            Ok(Step::Paused) => {
+                e.state = JobState::Queued;
+                st.queue.push_back(id);
+            }
+            Err(err) => {
+                e.state = JobState::Failed;
+                e.detail = format!("{err:#}");
+            }
+        }
+        Ok(true)
+    }
+
+    fn drive_sweep(&self, spec: &JobSpec, max_steps: Option<usize>) -> crate::Result<Step> {
+        let factory = self.factory();
+        let cluster = Cluster::parse(&spec.cluster)
+            .ok_or_else(|| anyhow::anyhow!("unknown cluster '{}'", spec.cluster))?;
+        let (base, grid) = sweep_problem(spec, cluster)?;
+        let cfg = SweepConfig { threads: spec.threads };
+        let ckpt = self.ckpt_path(spec.id);
+        // Resume from the job's own checkpoint when one exists —
+        // progress itself comes back through the shared profile cache.
+        let mut driver = if ckpt.exists() {
+            let ck = read_sweep_checkpoint(&ckpt)?;
+            SweepDriver::resume(factory.as_ref(), &base, &grid, &cfg, &ck)?
+        } else {
+            SweepDriver::new(factory.as_ref(), &base, &grid, &cfg)
+        };
+        self.set_progress(spec.id, driver.chunks_done(), driver.total_chunks(), "phase A");
+        let before = self.cache.stats();
+        let mut steps = 0usize;
+        loop {
+            let done = driver.step_with(factory.as_ref(), Some(&self.cache), Some(&self.coalescer))?;
+            write_sweep_checkpoint(&ckpt, &driver.checkpoint())?;
+            self.set_progress(spec.id, driver.chunks_done(), driver.total_chunks(), "phase A");
+            steps += 1;
+            if done {
+                break;
+            }
+            if max_steps.is_some_and(|cap| steps >= cap) {
+                return Ok(Step::Paused);
+            }
+        }
+        let outcome = driver.outcome(Some(self.cache.stats().since(&before)));
+        let mut tables = Vec::new();
+        match spec.preset.as_str() {
+            "fig7" => {
+                let mut t = sweep_table(&outcome);
+                t.title = format!("Fig 7 sweep [{}] — {}", cluster.label(), t.title);
+                tables.push(t);
+            }
+            "trace" => {
+                tables.push(sweep_table(&outcome));
+                tables.push(trace_table(&outcome));
+            }
+            _ => tables.push(sweep_table(&outcome)),
+        }
+        tables.push(sweep_best_table(&outcome));
+        self.finish(spec, &tables)?;
+        Ok(Step::Finished)
+    }
+
+    fn drive_search(&self, spec: &JobSpec, max_steps: Option<usize>) -> crate::Result<Step> {
+        let factory = self.factory();
+        let cluster = Cluster::parse(&spec.cluster)
+            .ok_or_else(|| anyhow::anyhow!("unknown cluster '{}'", spec.cluster))?;
+        let cfg = SearchConfig {
+            threads: spec.threads,
+            seed: spec.seed,
+            max_evals: spec.max_evals,
+            ..SearchConfig::default()
+        };
+        match spec.space.as_str() {
+            // The exhaustive anchor stays a CLI concern: the service
+            // runs the search itself (the anchor is a correctness
+            // cross-check, not part of the job's deliverable).
+            "fig7" => {
+                let space = sweep_fig7::profile_cluster(cluster);
+                let grid = ScenarioGrid::fig7(&space.rows, &space.tasks, space.ci_use_g_per_j);
+                let sspace = SearchSpace::fig7_grid();
+                let evaluator = ReplayEvaluator::new(&space.rows);
+                self.search_loop(
+                    spec, &cfg, &sspace, &evaluator, &space.base, &grid,
+                    factory.as_ref(), max_steps,
+                )
+            }
+            "expanded" => {
+                let sspace = SearchSpace::expanded_2d3d();
+                let workloads = cluster_workloads(cluster);
+                let evaluator =
+                    SimulatorEvaluator { workloads: workloads.clone(), fab: FabGrid::Coal };
+                let base: EvalRequest = rows_request(Vec::new(), &workloads, YEAR_S, 1.0);
+                let grid = search_fig7::expanded_grid();
+                self.search_loop(
+                    spec, &cfg, &sspace, &evaluator, &base, &grid,
+                    factory.as_ref(), max_steps,
+                )
+            }
+            other => anyhow::bail!("unknown search space '{other}'"),
+        }
+    }
+
+    #[allow(clippy::too_many_arguments)]
+    fn search_loop(
+        &self,
+        spec: &JobSpec,
+        cfg: &SearchConfig,
+        sspace: &SearchSpace,
+        evaluator: &dyn SpaceEvaluator,
+        base: &EvalRequest,
+        grid: &ScenarioGrid,
+        factory: &dyn crate::runtime::EngineFactory,
+        max_steps: Option<usize>,
+    ) -> crate::Result<Step> {
+        let ckpt = self.ckpt_path(spec.id);
+        let mut driver = if ckpt.exists() {
+            let ck = read_checkpoint(&ckpt)?;
+            SearchDriver::resume(sspace, cfg, &ck)?
+        } else {
+            SearchDriver::new(sspace, cfg)
+        };
+        let mut steps = 0usize;
+        loop {
+            // Always step at least once: a no-op step on a resumed-
+            // finished driver still binds the engine label the outcome
+            // reports.
+            let done = driver.step(factory, sspace, evaluator, base, grid, Some(&self.cache))?;
+            atomic_write(&ckpt, &driver.checkpoint_string())?;
+            self.set_progress(spec.id, driver.evaluations(), spec.max_evals, "search");
+            steps += 1;
+            if done {
+                break;
+            }
+            if max_steps.is_some_and(|cap| steps >= cap) {
+                return Ok(Step::Paused);
+            }
+        }
+        let outcome = driver.outcome(sspace, grid);
+        let tables = vec![search_table(&outcome), search_archive_table(&outcome)];
+        self.finish(spec, &tables)?;
+        Ok(Step::Finished)
+    }
+
+    /// Persist the result (tables as structured JSON *and* rendered
+    /// text) and retire the checkpoint — the spec+result pair is the
+    /// job's durable record.
+    fn finish(&self, spec: &JobSpec, tables: &[Table]) -> crate::Result<()> {
+        let body = Json::obj(vec![
+            ("id", Json::Num(spec.id as f64)),
+            ("kind", Json::Str(spec.kind.label().to_string())),
+            ("tables", Json::Arr(tables.iter().map(Table::to_json).collect())),
+            ("rendered", Json::Arr(tables.iter().map(|t| Json::Str(t.render())).collect())),
+        ]);
+        atomic_write(&self.result_path(spec.id), &body.to_string())?;
+        std::fs::remove_file(self.ckpt_path(spec.id)).ok();
+        Ok(())
+    }
+}
+
+/// Build a sweep preset's problem exactly as `xrcarbon sweep` does —
+/// same base request, same scenario grid, chunk-for-chunk the same
+/// content keys, which is what makes service jobs and CLI runs share
+/// cache entries and coalesce with each other.
+fn sweep_problem(spec: &JobSpec, cluster: Cluster) -> crate::Result<(EvalRequest, ScenarioGrid)> {
+    match spec.preset.as_str() {
+        "fig7" => {
+            let space = sweep_fig7::profile_cluster(cluster);
+            let grid = ScenarioGrid::fig7(&space.rows, &space.tasks, space.ci_use_g_per_j);
+            Ok((space.base, grid))
+        }
+        "fig10" | "lifetime" => {
+            let space = sweep_fig7::profile_cluster(cluster);
+            Ok((space.base, ScenarioGrid::lifetime_decades(3, 8)))
+        }
+        "ci" => {
+            let space = sweep_fig7::profile_cluster(cluster);
+            let mut base = space.base;
+            base.lifetime_s = 2.0 * YEAR_S;
+            Ok((base, ScenarioGrid::use_grids()))
+        }
+        "fig11" => {
+            let apps = top10_apps();
+            let base = provisioning_request(
+                &apps[..4],
+                &crate::soc::VrSoc::default(),
+                2.0 * YEAR_S,
+                true,
+            );
+            Ok((base, ScenarioGrid::fig11()))
+        }
+        "trace" => {
+            let space = sweep_fig7::profile_cluster(cluster);
+            let mut base = space.base;
+            base.lifetime_s = 2.0 * YEAR_S;
+            let grid = match &spec.trace {
+                Some(name) => {
+                    let trace = CiTrace::by_name(name)
+                        .ok_or_else(|| anyhow::anyhow!("unknown trace '{name}'"))?;
+                    ScenarioGrid::new().with_trace(&format!("trace={name}"), trace)
+                }
+                None => trace_study::trace_grid(),
+            };
+            Ok((base, grid))
+        }
+        other => anyhow::bail!("unknown sweep preset '{other}'"),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn spec(kind: JobKind) -> JobSpec {
+        JobSpec {
+            id: 7,
+            kind,
+            preset: "fig7".to_string(),
+            space: "expanded".to_string(),
+            cluster: "5ai".to_string(),
+            threads: 2,
+            seed: 0xDEAD_BEEF_DEAD_BEEF,
+            max_evals: 40,
+            trace: Some("diurnal-renewable".to_string()),
+        }
+    }
+
+    #[test]
+    fn job_spec_round_trips_through_the_sealed_envelope() {
+        for kind in [JobKind::Sweep, JobKind::Search] {
+            let s = spec(kind);
+            let text = s.to_json_string();
+            assert_eq!(JobSpec::from_json_str(&text).unwrap(), s);
+        }
+        let mut s = spec(JobKind::Sweep);
+        s.trace = None;
+        assert_eq!(JobSpec::from_json_str(&s.to_json_string()).unwrap(), s);
+        // Large seeds survive (u64 does not fit an f64 JSON number).
+        let got = JobSpec::from_json_str(&spec(JobKind::Search).to_json_string()).unwrap();
+        assert_eq!(got.seed, 0xDEAD_BEEF_DEAD_BEEF);
+    }
+
+    #[test]
+    fn tampered_spec_is_rejected() {
+        let text = spec(JobKind::Sweep).to_json_string();
+        let bent = text.replace("\"5ai\"", "\"10xr\"");
+        assert!(JobSpec::from_json_str(&bent).is_err());
+    }
+
+    #[test]
+    fn registry_scan_requeues_unfinished_specs_in_id_order() {
+        let dir = crate::testkit::test_dir("svc_registry");
+        std::fs::remove_dir_all(&dir).ok();
+        std::fs::create_dir_all(&dir).unwrap();
+        for id in [3u64, 1, 2] {
+            let s = JobSpec { id, ..spec(JobKind::Sweep) };
+            std::fs::write(dir.join(format!("job_{id}.spec.json")), s.to_json_string()).unwrap();
+        }
+        // Job 2 already has a result: it must come back Done, unqueued.
+        std::fs::write(dir.join("job_2.result.json"), "{}").unwrap();
+        let reg = Registry::scan(&dir).unwrap();
+        assert_eq!(reg.next_id, 4);
+        assert_eq!(reg.queue, VecDeque::from(vec![1, 3]));
+        assert_eq!(reg.jobs[&2].state, JobState::Done);
+        assert_eq!(reg.jobs[&1].state, JobState::Queued);
+        std::fs::remove_dir_all(&dir).ok();
+    }
+}

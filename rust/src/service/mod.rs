@@ -1,0 +1,108 @@
+//! DSE-as-a-service: the resident exploration server (DESIGN.md §3.6).
+//!
+//! A long-lived process that accepts sweep/search jobs over a tiny
+//! std-only HTTP/1.1 surface, runs them on the existing
+//! [`crate::dse::sweep::SweepDriver`] / [`crate::dse::search::SearchDriver`]
+//! state machines, and serves the same tables the CLI prints — as
+//! structured JSON ([`crate::report::Table::to_json`]) next to the
+//! rendered text. No new dependencies: the listener is a
+//! `std::net::TcpListener`, the JSON is [`crate::configfmt`].
+//!
+//! The load-bearing design decision: **a job *is* a resumable
+//! checkpoint**. Submitting a job persists its spec under the state
+//! directory (`job_<id>.spec.json`, digest-sealed like every other
+//! envelope in this repo); each driver step persists the corresponding
+//! sweep/search checkpoint (`job_<id>.ckpt.json`); completion persists
+//! the result (`job_<id>.result.json`) and deletes the checkpoint. A
+//! killed server therefore loses nothing: [`Service::open`] re-queues
+//! every spec without a result, and the drivers' fingerprint-validated
+//! resume paths — progress re-read through the [`ProfileCache`] —
+//! reproduce the uninterrupted run bit-identically (locked by
+//! `rust/tests/service_e2e.rs`). A job that was mid-flight when the
+//! process died simply restarts its phase loop; completed chunks come
+//! back as warm cache hits. Failures are deliberately *not* persisted:
+//! a restart retries the job from its last checkpoint.
+//!
+//! Concurrency: executor threads share one [`ProfileCache`] (safe for
+//! concurrent clients — see [`crate::dse::cache`]'s advisory-lock notes)
+//! and one [`Coalescer`], so N jobs asking for the same cold chunk
+//! trigger exactly one phase-A contraction; `/v1/stats` aggregates both
+//! counters across every job the process has run.
+//!
+//! * [`jobs`] — specs, registry, and the job runner ([`Service::run_next`]);
+//! * [`http`] — the request router (pure, testable) and the TCP loop.
+
+mod http;
+mod jobs;
+
+pub use http::{handle_request, serve, spawn_listener};
+pub use jobs::{JobKind, JobState, ResultFetch, Submit};
+
+use std::path::PathBuf;
+use std::sync::Mutex;
+
+use crate::dse::cache::{CacheConfig, ProfileCache};
+use crate::dse::coalesce::Coalescer;
+use crate::runtime::{auto_factory, EngineFactory, HostEngineFactory};
+
+/// Server configuration (the `serve` subcommand's knobs).
+pub struct ServiceConfig {
+    /// Job specs, checkpoints and results live here. Required.
+    pub state_dir: PathBuf,
+    /// Profile-cache directory; defaults to `<state_dir>/cache`.
+    pub cache_dir: Option<PathBuf>,
+    /// Optional on-disk cache budget (see `--cache-budget`).
+    pub cache_budget: Option<u64>,
+    /// Worker threads per job's profile phase (0 = auto).
+    pub threads: usize,
+    /// Engine selector: "host" forces the pure-Rust mirror, anything
+    /// else auto-detects (PJRT when built in, host otherwise).
+    pub engine: String,
+}
+
+/// The resident exploration service: one shared cache + coalescer, a
+/// job registry, and durable per-job state under `state_dir`. `Sync` —
+/// wrap in an `Arc` and share it between executor threads and the
+/// listener.
+pub struct Service {
+    pub(crate) cfg: ServiceConfig,
+    pub(crate) cache: ProfileCache,
+    pub(crate) coalescer: Coalescer,
+    pub(crate) state: Mutex<jobs::Registry>,
+}
+
+impl Service {
+    /// Open (or re-open) a service over `cfg.state_dir`: creates the
+    /// directory and the cache, then re-queues every persisted job spec
+    /// that has no result yet — the restart-resume half of the job
+    /// contract.
+    pub fn open(cfg: ServiceConfig) -> crate::Result<Service> {
+        std::fs::create_dir_all(&cfg.state_dir)?;
+        let cache_dir = cfg.cache_dir.clone().unwrap_or_else(|| cfg.state_dir.join("cache"));
+        let cache = ProfileCache::open_with(
+            &cache_dir,
+            CacheConfig { budget_bytes: cfg.cache_budget, ..CacheConfig::default() },
+        )?;
+        let state = Mutex::new(jobs::Registry::scan(&cfg.state_dir)?);
+        Ok(Service { cfg, cache, coalescer: Coalescer::new(), state })
+    }
+
+    /// The shared profile cache (process-wide counters).
+    pub fn cache(&self) -> &ProfileCache {
+        &self.cache
+    }
+
+    /// The shared cross-job request coalescer.
+    pub fn coalescer(&self) -> &Coalescer {
+        &self.coalescer
+    }
+
+    /// Build a fresh engine factory per job run — factories are cheap;
+    /// the engines themselves come from the per-thread worker pools.
+    pub(crate) fn factory(&self) -> Box<dyn EngineFactory> {
+        match self.cfg.engine.as_str() {
+            "host" => Box::new(HostEngineFactory),
+            _ => auto_factory(crate::experiments::common::ARTIFACTS_DIR),
+        }
+    }
+}

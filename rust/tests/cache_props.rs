@@ -12,6 +12,11 @@
 //!   never trusted;
 //! * the on-disk eviction policy keeps the store under its size budget
 //!   without ever evicting the most recent entry;
+//! * two cache handles over one directory (one evicting under a byte
+//!   budget, one not) interleave store/load/evict traffic without a
+//!   single corrupt load: every lookup is a bit-identical hit or a
+//!   clean miss/rejection followed by recomputation, and the budget
+//!   holds;
 //! * a sweep interrupted at *any* chunk and a search interrupted at
 //!   *any* generation both resume from their (JSON round-tripped)
 //!   checkpoints bit-identically.
@@ -400,6 +405,117 @@ fn prop_eviction_honors_the_size_budget() {
                 // Results were never affected by eviction (each sweep
                 // re-derives from scratch or cache, both bit-exact).
                 && outs.iter().all(|o| o.scenarios.len() == 1);
+            std::fs::remove_dir_all(&dir).ok();
+            ok
+        },
+    );
+}
+
+#[test]
+fn prop_two_handles_share_a_directory_under_interleaved_eviction() {
+    forall_cfg(
+        PropConfig { cases: 8, seed: 47 },
+        |r| (r.below(5) + 4, r.below(2) + 2, r.below(10)),
+        |&(distinct, keep, corrupt_at)| {
+            let dir = test_dir("cache_props_two_handles");
+            let mk = |i: usize| {
+                let mut tasks = TaskMatrix::new(vec!["t".into()], vec!["k".into()]);
+                tasks.set(0, 0, 2.0);
+                EvalRequest {
+                    tasks,
+                    configs: vec![ConfigRow {
+                        name: format!("cfg{i}"),
+                        f_clk: 1e9,
+                        d_k: vec![1e-3 * (i + 1) as f64],
+                        e_dyn: vec![0.01],
+                        leak_w: 0.01,
+                        c_comp: vec![100.0],
+                    }],
+                    online: vec![1.0],
+                    qos: vec![f64::INFINITY],
+                    ci_use_g_per_j: 1e-4,
+                    lifetime_s: 1e6,
+                    beta: 1.0,
+                    p_max_w: f64::INFINITY,
+                }
+            };
+            let grid = ScenarioGrid::new().with_lifetime("lt", 1e6);
+            let cfg = SweepConfig::default();
+
+            // Probe one entry's footprint, then open the two handles:
+            // `plain` has no budget, `evicting` keeps ~`keep` entries.
+            // Memory LRUs off so every lookup exercises the shared disk.
+            let probe = ProfileCache::open(&dir).unwrap();
+            sweep_with_cache(&HostEngineFactory, &mk(0), &grid, &cfg, Some(&probe)).unwrap();
+            let per_entry = probe.disk_bytes();
+            std::fs::remove_dir_all(&dir).ok();
+            if per_entry == 0 {
+                return false;
+            }
+            let budget = per_entry * keep as u64 + per_entry / 2;
+            let nomem = CacheConfig { mem_entries: 0, ..CacheConfig::default() };
+            let plain = ProfileCache::open_with(&dir, nomem).unwrap();
+            let evicting = ProfileCache::open_with(
+                &dir,
+                CacheConfig { budget_bytes: Some(budget), ..nomem },
+            )
+            .unwrap();
+
+            // References: the uncached truth per request.
+            let refs: Vec<SweepOutcome> = (0..distinct)
+                .map(|i| sweep(&HostEngineFactory, &mk(i), &grid, &cfg).unwrap())
+                .collect();
+
+            // Interleave: `plain` cycles over a fixed key set (loads —
+            // often of entries `evicting`'s passes just deleted, which
+            // must come back as clean misses and recompute), while
+            // `evicting` stores a *fresh* key every round, repeatedly
+            // blowing the budget and evicting. Once mid-stream,
+            // vandalize one envelope so a rejection lands in the mix.
+            let rounds = 2 * distinct;
+            for round in 0..rounds {
+                if round == corrupt_at % rounds {
+                    for entry in std::fs::read_dir(&dir).unwrap().flatten() {
+                        let p = entry.path();
+                        if p.extension().is_some_and(|e| e == "json") {
+                            std::fs::write(&p, b"{\"not\": \"an envelope\"}").unwrap();
+                            std::fs::remove_file(p.with_extension("bin")).ok();
+                            break;
+                        }
+                    }
+                }
+                let a = sweep_with_cache(
+                    &HostEngineFactory, &mk(round % distinct), &grid, &cfg, Some(&plain),
+                )
+                .unwrap();
+                if !sweeps_bit_identical(&a, &refs[round % distinct]) {
+                    std::fs::remove_dir_all(&dir).ok();
+                    return false;
+                }
+                let b = sweep(&HostEngineFactory, &mk(distinct + round), &grid, &cfg).unwrap();
+                let b2 = sweep_with_cache(
+                    &HostEngineFactory, &mk(distinct + round), &grid, &cfg, Some(&evicting),
+                )
+                .unwrap();
+                if !sweeps_bit_identical(&b, &b2) {
+                    std::fs::remove_dir_all(&dir).ok();
+                    return false;
+                }
+            }
+
+            // Both handles only ever saw clean outcomes (checked above);
+            // the books must balance too: every miss/rejection was
+            // recomputed and written back, the evicting handle really
+            // did evict, and the shared store ends under its budget
+            // (modulo the never-evict-the-newest floor).
+            let ps = plain.stats();
+            let es = evicting.stats();
+            let ok = ps.writes == ps.misses + ps.rejected
+                && ps.hits + ps.misses + ps.rejected == rounds
+                && ps.rejected <= 1
+                && (es.hits, es.misses, es.writes) == (0, rounds, rounds)
+                && es.evictions > 0
+                && evicting.disk_bytes() <= budget.max(per_entry * 2);
             std::fs::remove_dir_all(&dir).ok();
             ok
         },

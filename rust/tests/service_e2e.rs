@@ -1,0 +1,245 @@
+//! Integration: the resident exploration service end to end — the
+//! acceptance contract of DESIGN.md §3.6:
+//!
+//! * N concurrent identical sweep jobs against one service perform
+//!   exactly **one** phase-A engine contraction between them (the
+//!   coalescer + shared cache), and every job's result is bit-identical
+//!   to the direct one-shot sweep;
+//! * against a warm cache the same jobs perform **zero** contractions;
+//! * a killed server (dropped `Service`) re-opened over the same state
+//!   directory resumes every in-flight job — including one paused
+//!   mid-search with a live checkpoint — and finishes bit-identically
+//!   to an uninterrupted server;
+//! * the HTTP surface round-trips over a real socket: submit, poll,
+//!   fetch the result.
+//!
+//! "Bit-identical" is checked on the tables' headers + rows (every
+//! metric, formatted from the same f64 bits). Titles are excluded on
+//! purpose: they embed run observables — thread counts, cache
+//! hit/miss tallies — that legitimately differ between a cold job, a
+//! warm job and the direct run.
+
+use std::io::{Read, Write};
+use std::net::TcpStream;
+use std::path::Path;
+use std::sync::Arc;
+
+use xrcarbon::configfmt::{parse, Json};
+use xrcarbon::dse::grid::ScenarioGrid;
+use xrcarbon::dse::sweep::{sweep, SweepConfig};
+use xrcarbon::experiments::sweep_fig7;
+use xrcarbon::report::{sweep_best_table, sweep_table, Table};
+use xrcarbon::runtime::HostEngineFactory;
+use xrcarbon::service::{spawn_listener, ResultFetch, Service, ServiceConfig, Submit};
+use xrcarbon::testkit::test_dir;
+use xrcarbon::workloads::Cluster;
+
+fn open_service(dir: &Path) -> Service {
+    Service::open(ServiceConfig {
+        state_dir: dir.to_path_buf(),
+        cache_dir: None,
+        cache_budget: None,
+        threads: 1,
+        engine: "host".to_string(),
+    })
+    .unwrap()
+}
+
+fn accepted(s: Submit) -> u64 {
+    match s {
+        Submit::Accepted(id) => id,
+        Submit::Rejected(msg) => panic!("submission rejected: {msg}"),
+    }
+}
+
+fn state_of(svc: &Service, id: u64) -> String {
+    svc.job_status(id)
+        .unwrap()
+        .get("state")
+        .and_then(Json::as_str)
+        .unwrap()
+        .to_string()
+}
+
+/// A table's comparison body: `(headers, rows)` rendered to canonical
+/// JSON strings, title excluded (see the module doc).
+fn body(t: &Json) -> (String, String) {
+    (t.get("headers").unwrap().to_string(), t.get("rows").unwrap().to_string())
+}
+
+fn direct_body(t: &Table) -> (String, String) {
+    body(&t.to_json())
+}
+
+/// The job's persisted tables as comparison bodies.
+fn result_bodies(svc: &Service, id: u64) -> Vec<(String, String)> {
+    let text = match svc.job_result(id) {
+        ResultFetch::Ready(text) => text,
+        ResultFetch::Failed(msg) => panic!("job {id} failed: {msg}"),
+        _ => panic!("job {id} has no result"),
+    };
+    let doc = parse(&text).unwrap();
+    assert_eq!(doc.get("id").and_then(Json::as_usize), Some(id as usize));
+    let tables = doc.get("tables").and_then(Json::as_arr).unwrap();
+    let rendered = doc.get("rendered").and_then(Json::as_arr).unwrap();
+    assert_eq!(tables.len(), rendered.len());
+    tables.iter().map(body).collect()
+}
+
+#[test]
+fn concurrent_identical_sweeps_coalesce_and_match_the_direct_run() {
+    let dir = test_dir("service_e2e_coalesce");
+    std::fs::remove_dir_all(&dir).ok();
+    let svc = open_service(&dir);
+
+    // Three identical cold jobs, three racing executors.
+    let ids: Vec<u64> =
+        (0..3).map(|_| accepted(svc.submit_sweep("fig7", "5ai", 1, None).unwrap())).collect();
+    std::thread::scope(|s| {
+        for _ in 0..3 {
+            s.spawn(|| while svc.run_next(None).unwrap() {});
+        }
+    });
+    for &id in &ids {
+        assert_eq!(state_of(&svc, id), "done");
+    }
+
+    // One phase-A contraction between the three of them: one leader
+    // computed and stored; everyone else waited on the in-flight slot
+    // or hit the cache it had just filled.
+    let cs = svc.cache().stats();
+    let co = svc.coalescer().stats();
+    assert_eq!(co.computed, 1, "{co:?}");
+    assert_eq!(cs.writes, 1, "{cs:?}");
+    assert_eq!(cs.write_errors, 0);
+
+    // Every job's tables equal the direct one-shot sweep's, bit for bit.
+    let space = sweep_fig7::profile_cluster(Cluster::Ai5);
+    let grid = ScenarioGrid::fig7(&space.rows, &space.tasks, space.ci_use_g_per_j);
+    let out = sweep(&HostEngineFactory, &space.base, &grid, &SweepConfig { threads: 1 }).unwrap();
+    let direct = vec![direct_body(&sweep_table(&out)), direct_body(&sweep_best_table(&out))];
+    for &id in &ids {
+        assert_eq!(result_bodies(&svc, id), direct);
+    }
+
+    // Warm re-submissions: zero contractions, zero writes, same tables.
+    let before = svc.cache().stats();
+    let warm: Vec<u64> =
+        (0..2).map(|_| accepted(svc.submit_sweep("fig7", "5ai", 1, None).unwrap())).collect();
+    std::thread::scope(|s| {
+        for _ in 0..2 {
+            s.spawn(|| while svc.run_next(None).unwrap() {});
+        }
+    });
+    let delta = svc.cache().stats().since(&before);
+    assert_eq!((delta.hits, delta.misses, delta.writes), (2, 0, 0), "{delta:?}");
+    for &id in &warm {
+        assert_eq!(result_bodies(&svc, id), direct);
+    }
+    std::fs::remove_dir_all(&dir).ok();
+}
+
+#[test]
+fn killed_server_resumes_in_flight_jobs_bit_identically() {
+    let submit_both = |svc: &Service| -> (u64, u64) {
+        let search = accepted(svc.submit_search("fig7", "5ai", 1, 0xFEED_5EED, 0).unwrap());
+        let sweep = accepted(svc.submit_sweep("fig7", "5ai", 1, None).unwrap());
+        (search, sweep)
+    };
+
+    // Reference: an uninterrupted server runs both jobs to completion.
+    let dir_a = test_dir("service_e2e_ref");
+    std::fs::remove_dir_all(&dir_a).ok();
+    let reference: Vec<Vec<(String, String)>> = {
+        let svc = open_service(&dir_a);
+        let (search, sweep) = submit_both(&svc);
+        while svc.run_next(None).unwrap() {}
+        vec![result_bodies(&svc, search), result_bodies(&svc, sweep)]
+    };
+    std::fs::remove_dir_all(&dir_a).ok();
+
+    // Interrupted: the search runs exactly one generation, then the
+    // process "dies" (the Service is dropped mid-queue).
+    let dir_b = test_dir("service_e2e_resume");
+    std::fs::remove_dir_all(&dir_b).ok();
+    let (search, sweep) = {
+        let svc = open_service(&dir_b);
+        let ids = submit_both(&svc);
+        assert!(svc.run_next(Some(1)).unwrap());
+        // Paused mid-search: re-queued, with a live checkpoint on disk.
+        assert_eq!(state_of(&svc, ids.0), "queued");
+        assert!(dir_b.join(format!("job_{}.ckpt.json", ids.0)).exists());
+        ids
+    };
+
+    // Restart: both jobs come back queued (specs re-scanned), resume
+    // from the persisted state and finish identically to the reference.
+    let svc = open_service(&dir_b);
+    assert_eq!(state_of(&svc, search), "queued");
+    assert_eq!(state_of(&svc, sweep), "queued");
+    while svc.run_next(None).unwrap() {}
+    assert_eq!(result_bodies(&svc, search), reference[0]);
+    assert_eq!(result_bodies(&svc, sweep), reference[1]);
+    // Finished jobs retire their checkpoints; the durable record is the
+    // spec + result pair.
+    assert!(!dir_b.join(format!("job_{search}.ckpt.json")).exists());
+    assert!(dir_b.join(format!("job_{search}.result.json")).exists());
+    std::fs::remove_dir_all(&dir_b).ok();
+}
+
+/// Minimal HTTP/1.1 client for the round-trip test.
+fn http(addr: std::net::SocketAddr, method: &str, path: &str, body: &str) -> (u16, String) {
+    let mut stream = TcpStream::connect(addr).unwrap();
+    let req = format!(
+        "{method} {path} HTTP/1.1\r\nHost: test\r\nContent-Length: {}\r\n\r\n{body}",
+        body.len()
+    );
+    stream.write_all(req.as_bytes()).unwrap();
+    let mut raw = Vec::new();
+    stream.read_to_end(&mut raw).unwrap();
+    let text = String::from_utf8(raw).unwrap();
+    let status: u16 =
+        text.split_whitespace().nth(1).and_then(|s| s.parse().ok()).expect("status line");
+    let payload = text.split_once("\r\n\r\n").map(|(_, b)| b.to_string()).unwrap_or_default();
+    (status, payload)
+}
+
+#[test]
+fn http_surface_round_trips_over_a_real_socket() {
+    let dir = test_dir("service_e2e_http");
+    std::fs::remove_dir_all(&dir).ok();
+    let svc = Arc::new(open_service(&dir));
+    let addr = spawn_listener(Arc::clone(&svc), "127.0.0.1:0").unwrap();
+
+    // Submit over the wire; hex seeds survive the JSON surface.
+    let (code, text) = http(
+        addr,
+        "POST",
+        "/v1/search",
+        r#"{"space": "fig7", "cluster": "5ai", "seed": "0xFEED5EED", "threads": 1}"#,
+    );
+    assert_eq!(code, 202, "{text}");
+    let id = parse(&text).unwrap().get("job").and_then(Json::as_usize).unwrap() as u64;
+
+    let (code, text) = http(addr, "GET", &format!("/v1/jobs/{id}"), "");
+    assert_eq!(code, 200);
+    assert_eq!(parse(&text).unwrap().get("state").and_then(Json::as_str), Some("queued"));
+    // Result before the job ran: a conflict, not an error.
+    assert_eq!(http(addr, "GET", &format!("/v1/jobs/{id}/result"), "").0, 409);
+
+    // Run the queue (inline executor), then fetch the result by HTTP —
+    // it must equal the in-process view byte for byte.
+    while svc.run_next(None).unwrap() {}
+    let (code, text) = http(addr, "GET", &format!("/v1/jobs/{id}/result"), "");
+    assert_eq!(code, 200);
+    match svc.job_result(id) {
+        ResultFetch::Ready(expect) => assert_eq!(text, expect),
+        _ => panic!("job should be done"),
+    }
+    let (code, text) = http(addr, "GET", "/v1/stats", "");
+    assert_eq!(code, 200);
+    assert!(parse(&text).unwrap().get("coalescer").is_some());
+    let (code, _) = http(addr, "GET", "/v1/nope", "");
+    assert_eq!(code, 404);
+    std::fs::remove_dir_all(&dir).ok();
+}

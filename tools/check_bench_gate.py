@@ -42,9 +42,17 @@ advantage:
   path that loses to its own baseline is a regression, full stop;
   observed margins are comfortably above the floor, so quick-mode
   jitter does not graze it.
+* service — `service/coalesced_contractions_avoided` must be >= 1.0x
+  (duplicate phase-A contractions avoided by N identical concurrent
+  sweep clients sharing one cache + coalescer, over the ideal
+  (N-1)*chunks). The ratio is an exact counter identity — each unique
+  chunk is contracted exactly once across all clients — so anything
+  below 1.0 means a duplicate contraction slipped through the
+  coalescer. Deterministic, immune to runner jitter.
 
 Usage: check_bench_gate.py BENCH_sweep.json BENCH_search.json \\
-       BENCH_cache.json BENCH_trace.json BENCH_hotloop.json
+       BENCH_cache.json BENCH_trace.json BENCH_hotloop.json \\
+       BENCH_service.json
 """
 import json
 import sys
@@ -68,6 +76,8 @@ HOTLOOP_MINS = {
     "hotloop/overlay_batch_speedup": 1.0,
     "hotloop/pool_speedup": 1.0,
 }
+# N coalesced clients must contract each unique chunk exactly once.
+SERVICE_COALESCE_MIN = 1.0
 
 
 def fail(msg):
@@ -202,17 +212,40 @@ def check_hotloop(path):
             )
 
 
+def check_service(path):
+    rows = load(path)
+    name = "service/coalesced_contractions_avoided"
+    row = rows.get(name)
+    if row is None:
+        fail(f"{path}: missing entry {name}")
+    ratio = row.get("throughput")
+    if ratio is None:
+        fail(f"{path}: {name} has no ratio")
+    print(
+        f"service gate: {name} = {ratio:.2f}x "
+        f"(min {SERVICE_COALESCE_MIN:.2f}x, {row['samples']} contraction(s) avoided)"
+    )
+    if row["samples"] < 1:
+        fail(f"{name}: concurrent clients avoided zero duplicate contractions")
+    if ratio < SERVICE_COALESCE_MIN:
+        fail(
+            f"{name} reports {ratio:.2f}x < {SERVICE_COALESCE_MIN:.2f}x — a duplicate "
+            f"phase-A contraction slipped through the request coalescer"
+        )
+
+
 def main():
-    if len(sys.argv) != 6:
+    if len(sys.argv) != 7:
         fail(
             "usage: check_bench_gate.py BENCH_sweep.json BENCH_search.json "
-            "BENCH_cache.json BENCH_trace.json BENCH_hotloop.json"
+            "BENCH_cache.json BENCH_trace.json BENCH_hotloop.json BENCH_service.json"
         )
     check_sweep(sys.argv[1])
     check_search(sys.argv[2])
     check_cache(sys.argv[3])
     check_trace(sys.argv[4])
     check_hotloop(sys.argv[5])
+    check_service(sys.argv[6])
     print("bench gate: OK")
 
 

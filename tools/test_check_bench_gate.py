@@ -1,0 +1,227 @@
+#!/usr/bin/env python3
+"""Self-test for check_bench_gate.py on synthetic artifacts.
+
+Builds a healthy set of the six BENCH_*.json files in a temp directory,
+asserts the gate passes, then breaks one artifact at a time and asserts
+the gate fails with a message naming the broken metric. No cargo run
+needed — this locks the gate's *logic* (row lookup, ratio floors,
+sample floors, argv handling) so a gate edit can't silently stop
+guarding a metric.
+
+Usage: python3 tools/test_check_bench_gate.py
+"""
+import json
+import os
+import subprocess
+import sys
+import tempfile
+
+GATE = os.path.join(os.path.dirname(os.path.abspath(__file__)), "check_bench_gate.py")
+
+
+def row(name, samples=8, mean_ns=1_000_000, throughput=None):
+    return {
+        "name": name,
+        "samples": samples,
+        "mean_ns": mean_ns,
+        "p50_ns": mean_ns,
+        "p95_ns": mean_ns,
+        "throughput": throughput,
+    }
+
+
+def healthy():
+    """A full artifact set that clears every floor with margin."""
+    return {
+        "BENCH_sweep.json": [
+            row("sweep/fused_per_scenario_threads=1", mean_ns=9_000_000),
+            row("sweep/two_phase_threads=1", mean_ns=1_000_000),
+            row("sweep/fused_per_scenario_threads=4", mean_ns=3_000_000),
+            row("sweep/two_phase_threads=4", mean_ns=500_000),
+        ],
+        "BENCH_search.json": [
+            row("search/evaluations_vs_exhaustive", samples=68, throughput=121 / 68),
+            row("search/expanded_coverage", samples=200, throughput=51.0),
+        ],
+        "BENCH_cache.json": [
+            row("cache/warm_contractions_avoided", samples=9, throughput=1.0),
+            row("cache/warm_read_speedup", samples=20, throughput=6.5),
+        ],
+        "BENCH_trace.json": [
+            row("trace/warm_contractions_avoided", samples=9, throughput=1.0),
+        ],
+        "BENCH_hotloop.json": [
+            row("hotloop/vector_speedup", throughput=2.4),
+            row("hotloop/overlay_batch_speedup", throughput=1.8),
+            row("hotloop/pool_speedup", throughput=1.3),
+        ],
+        "BENCH_service.json": [
+            row("service/concurrent_sweeps_x4_coalesced"),
+            row("service/concurrent_sweeps_x4_uncoalesced"),
+            row("service/coalesced_contractions_avoided", samples=9, throughput=1.0),
+            row("service/uncoalesced_duplicate_contractions", samples=6, throughput=3.0),
+        ],
+    }
+
+
+ORDER = [
+    "BENCH_sweep.json",
+    "BENCH_search.json",
+    "BENCH_cache.json",
+    "BENCH_trace.json",
+    "BENCH_hotloop.json",
+    "BENCH_service.json",
+]
+
+
+def run_gate(tmp, artifacts):
+    for fname, rows in artifacts.items():
+        with open(os.path.join(tmp, fname), "w") as f:
+            json.dump(rows, f)
+    return subprocess.run(
+        [sys.executable, GATE] + [os.path.join(tmp, f) for f in ORDER],
+        capture_output=True,
+        text=True,
+    )
+
+
+def expect_pass(tmp, artifacts, label):
+    r = run_gate(tmp, artifacts)
+    assert r.returncode == 0, f"{label}: expected pass, got:\n{r.stdout}{r.stderr}"
+    assert "bench gate: OK" in r.stdout, f"{label}: no OK line:\n{r.stdout}"
+    print(f"  pass: {label}")
+
+
+def expect_fail(tmp, artifacts, needle, label):
+    r = run_gate(tmp, artifacts)
+    assert r.returncode != 0, f"{label}: expected failure, gate passed:\n{r.stdout}"
+    assert "BENCH GATE FAIL" in r.stderr, f"{label}: no FAIL banner:\n{r.stderr}"
+    assert needle in r.stderr, f"{label}: stderr lacks {needle!r}:\n{r.stderr}"
+    print(f"  fail as expected: {label}")
+
+
+def mutate(base, fname, match, **changes):
+    """Copy the artifact set, editing the matching row's fields."""
+    out = {k: [dict(r) for r in v] for k, v in base.items()}
+    hit = [r for r in out[fname] if r["name"] == match]
+    assert hit, f"no row {match} in {fname}"
+    hit[0].update(changes)
+    return out
+
+
+def drop(base, fname, match):
+    out = {k: [dict(r) for r in v] for k, v in base.items()}
+    out[fname] = [r for r in out[fname] if r["name"] != match]
+    return out
+
+
+def main():
+    base = healthy()
+    with tempfile.TemporaryDirectory() as tmp:
+        expect_pass(tmp, base, "healthy artifact set")
+
+        # Boundary values sit exactly on their floors — still a pass.
+        boundary = mutate(
+            base, "BENCH_sweep.json", "sweep/fused_per_scenario_threads=1", mean_ns=800_000
+        )
+        boundary = mutate(
+            boundary, "BENCH_service.json", "service/coalesced_contractions_avoided",
+            samples=1, throughput=1.0,
+        )
+        expect_pass(tmp, boundary, "every ratio exactly at its floor")
+
+        expect_fail(
+            tmp,
+            mutate(base, "BENCH_sweep.json", "sweep/fused_per_scenario_threads=1",
+                   mean_ns=700_000),
+            "two-phase sweep slower than fused",
+            "sweep regression below 0.8x",
+        )
+        expect_fail(
+            tmp,
+            drop(drop(base, "BENCH_sweep.json", "sweep/two_phase_threads=1"),
+                 "BENCH_sweep.json", "sweep/two_phase_threads=4"),
+            "no fused/two-phase pair",
+            "sweep artifact with no comparable pair",
+        )
+        expect_fail(
+            tmp,
+            mutate(base, "BENCH_search.json", "search/evaluations_vs_exhaustive",
+                   throughput=1.2),
+            "search/evaluations_vs_exhaustive",
+            "search over the anchor budget",
+        )
+        expect_fail(
+            tmp,
+            mutate(base, "BENCH_cache.json", "cache/warm_contractions_avoided",
+                   throughput=0.89),
+            "re-contracted at least one cached chunk",
+            "warm cache miss",
+        )
+        expect_fail(
+            tmp,
+            mutate(base, "BENCH_cache.json", "cache/warm_read_speedup", throughput=1.4),
+            "warm-read advantage",
+            "binary sidecar losing to JSON",
+        )
+        expect_fail(
+            tmp,
+            mutate(base, "BENCH_trace.json", "trace/warm_contractions_avoided", samples=0,
+                   throughput=0.0),
+            "avoided zero contractions",
+            "trace warm sweep with zero hits",
+        )
+        expect_fail(
+            tmp,
+            mutate(base, "BENCH_hotloop.json", "hotloop/pool_speedup", throughput=0.93),
+            "hotloop/pool_speedup",
+            "hotloop optimization losing to its baseline",
+        )
+        expect_fail(
+            tmp,
+            mutate(base, "BENCH_service.json", "service/coalesced_contractions_avoided",
+                   throughput=0.92),
+            "slipped through the request coalescer",
+            "duplicate contraction under coalescing",
+        )
+        expect_fail(
+            tmp,
+            mutate(base, "BENCH_service.json", "service/coalesced_contractions_avoided",
+                   samples=0, throughput=0.0),
+            "avoided zero duplicate contractions",
+            "coalescer avoiding nothing",
+        )
+        expect_fail(
+            tmp,
+            drop(base, "BENCH_service.json", "service/coalesced_contractions_avoided"),
+            "missing entry service/coalesced_contractions_avoided",
+            "service artifact missing its counter row",
+        )
+        expect_fail(
+            tmp,
+            mutate(base, "BENCH_service.json", "service/coalesced_contractions_avoided",
+                   throughput=None),
+            "has no ratio",
+            "service counter row without a ratio",
+        )
+
+        # argv handling: the gate takes exactly six artifacts.
+        short = subprocess.run(
+            [sys.executable, GATE, os.path.join(tmp, "BENCH_sweep.json")],
+            capture_output=True,
+            text=True,
+        )
+        assert short.returncode != 0 and "usage:" in short.stderr, short.stderr
+        print("  fail as expected: wrong artifact count")
+
+        missing = dict(base)
+        missing.pop("BENCH_service.json")
+        for f in list(os.listdir(tmp)):
+            os.remove(os.path.join(tmp, f))
+        expect_fail(tmp, missing, "cannot read", "unreadable artifact")
+
+    print("gate self-test: OK")
+
+
+if __name__ == "__main__":
+    main()
