@@ -105,6 +105,7 @@ impl ScenarioOverlay {
         }
     }
 
+    // xrlint: region(bit-identical)
     /// Apply this scenario to a profile: the fused engine's carbon and
     /// feasibility arithmetic, operation for operation (keep in lockstep
     /// with `runtime/host.rs::fold_carbon` — the bit-identity tests fail
@@ -198,6 +199,7 @@ impl ScenarioOverlay {
         }
         (0..s).map(|si| prof.unpack(&scratch.metrics[si * slab..(si + 1) * slab])).collect()
     }
+    // xrlint: endregion(bit-identical)
 }
 
 #[cfg(test)]

@@ -291,6 +291,7 @@ const CI_DEPENDENT_ROWS: [MetricRow; 3] = [MetricRow::COp, MetricRow::CTotal, Me
 /// the codebase; every sweep path lowers traces through it, which is
 /// what makes trace results bit-identical across the two-phase, fused
 /// and sequential paths.
+// xrlint: region(bit-identical)
 pub fn combine_segments(segments: &[EvalResult], weights: &[f32]) -> EvalResult {
     assert!(!segments.is_empty(), "combine_segments: no segment results");
     assert_eq!(
@@ -318,6 +319,7 @@ pub fn combine_segments(segments: &[EvalResult], weights: &[f32]) -> EvalResult 
     }
     out
 }
+// xrlint: endregion(bit-identical)
 
 #[cfg(test)]
 mod tests {

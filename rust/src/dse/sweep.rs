@@ -832,6 +832,7 @@ impl<'a> SweepDriver<'a> {
             plans.push(Plan { label: sc.label, first, weights, trace });
         }
 
+        // xrlint: region(bit-identical)
         // One batched pass per chunk, merged chunk-ascending per overlay
         // — the same (scenario-major, chunk order) merge the fused and
         // sequential paths use. An empty design space profiles into zero
@@ -875,6 +876,7 @@ impl<'a> SweepDriver<'a> {
                 ScenarioResult { label: plan.label, outcome: summarize(combined), trace }
             })
             .collect();
+        // xrlint: endregion(bit-identical)
         SweepOutcome {
             scenarios: results,
             engine: self.engine,

@@ -111,6 +111,16 @@ COMMANDS
               bit-identically. Endpoints: POST /v1/sweep, POST /v1/search,
               GET /v1/jobs/<id>, GET /v1/jobs/<id>/result, GET /v1/stats
   all         run everything above in order
+
+GLOBAL OPTIONS
+  --help          print this usage text and exit
+  --engine pjrt|host  evaluation backend (auto-detects when omitted)
+  --csv-dir DIR   also write each table as CSV under DIR
+  --csv           reserved alias for CSV output (parsed, tables print
+                  to stdout regardless)
+  accepted for figure scripts (parsed; figure-specific wiring):
+  --metric NAME --out PATH --artifacts DIR --beta X --ratio X
+  --lifetime S --hours N --cores N
 ";
 
 fn fleet_cfg(args: &Args) -> anyhow::Result<FleetConfig> {

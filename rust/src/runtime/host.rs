@@ -56,6 +56,7 @@ impl HostEngine {
     }
 }
 
+// xrlint: region(bit-identical)
 /// The Layer-1 hot loop for one config row: per-task energy/delay
 /// contraction (K accumulation in f32, matching XLA's row-major dot).
 /// Shared by the fused `execute` and the phase-A `profile` so the two
@@ -240,6 +241,7 @@ impl Engine for HostEngine {
         "host"
     }
 }
+// xrlint: endregion(bit-identical)
 
 #[cfg(test)]
 mod tests {

@@ -126,11 +126,13 @@ impl WorkerPool {
         let f = Arc::new(f);
         let abort = Arc::new(AtomicBool::new(false));
         let (reply_tx, reply_rx) = channel::<Reply>();
+        // xrlint: allow(panic, "job_tx is only taken in Drop; fan_out needs &self")
         let tx = self.job_tx.as_ref().expect("pool channel alive until drop");
         for idx in 0..n {
             let items = Arc::clone(&items);
             let f = Arc::clone(&f);
             let task: Task = Box::new(move |engine| {
+                // xrlint: allow(panic, "idx < items.len() by the 0..n loop")
                 f(engine, &items[idx]).map(|r| Box::new(r) as Box<dyn Any + Send>)
             });
             let env =
@@ -148,7 +150,9 @@ impl WorkerPool {
                 .map_err(|_| anyhow::anyhow!("worker pool lost its workers mid-batch"))?;
             match reply {
                 Reply::Done(i, Ok(boxed)) => {
+                    // xrlint: allow(panic, "the task closure above boxes exactly an R")
                     let v = boxed.downcast::<R>().expect("pool task returned a foreign type");
+                    // xrlint: allow(panic, "workers echo the idx they were sent, idx < n")
                     slots[i] = Some(*v);
                 }
                 Reply::Done(i, Err(e)) => {
@@ -170,6 +174,7 @@ impl WorkerPool {
         if let Some((_, e)) = first_err {
             return Err(e);
         }
+        // xrlint: allow(panic, "n replies received and panics/errors returned early above")
         let out = slots.into_iter().map(|s| s.expect("work item left unevaluated")).collect();
         Ok((out, self.workers.min(n)))
     }
@@ -225,6 +230,7 @@ fn worker_loop(
                 }
             }
         }
+        // xrlint: allow(panic, "the match above either filled `engine` or continued")
         let eng = engine.as_mut().expect("engine built above");
         match catch_unwind(AssertUnwindSafe(|| (env.task)(eng.as_mut()))) {
             Ok(res) => {

@@ -31,6 +31,7 @@ pub fn handle_request(service: &Service, method: &str, path: &str, body: &str) -
         (_, "/v1/sweep" | "/v1/search") => (405, err_json("use POST")),
         ("GET", "/v1/stats") => (200, service.stats_json().to_string()),
         (_, "/v1/stats") => (405, err_json("use GET")),
+        // xrlint: allow(panic, "slice start is the literal prefix length, guarded by starts_with")
         ("GET", p) if p.starts_with("/v1/jobs/") => jobs_get(service, &p["/v1/jobs/".len()..]),
         (_, p) if p.starts_with("/v1/jobs/") => (405, err_json("use GET")),
         _ => (404, err_json("no such endpoint")),
@@ -216,31 +217,50 @@ fn handle_connection(service: &Service, mut stream: TcpStream) -> std::io::Resul
         if n == 0 {
             return Ok(());
         }
+        // xrlint: allow(panic, "n <= chunk.len() by the read contract")
         buf.extend_from_slice(&chunk[..n]);
     };
+    // xrlint: allow(panic, "header_end < buf.len() from the windows() scan above")
     let head = String::from_utf8_lossy(&buf[..header_end]).into_owned();
     let mut lines = head.split("\r\n");
     let request_line = lines.next().unwrap_or("");
     let mut parts = request_line.split_whitespace();
-    let method = parts.next().unwrap_or("").to_string();
-    let path = parts.next().unwrap_or("").to_string();
+    // A malformed request line is the client's fault, never ours: 400,
+    // not a 404-for-garbage and never a worker panic.
+    let (method, path) = match (parts.next(), parts.next(), parts.next()) {
+        (Some(m), Some(p), Some(v))
+            if !m.is_empty() && p.starts_with('/') && v.starts_with("HTTP/") =>
+        {
+            (m.to_string(), p.to_string())
+        }
+        _ => return respond(&mut stream, 400, &err_json("malformed request line")),
+    };
     let mut content_length = 0usize;
     for line in lines {
         if let Some((k, v)) = line.split_once(':') {
             if k.trim().eq_ignore_ascii_case("content-length") {
-                content_length = v.trim().parse().unwrap_or(0);
+                content_length = match v.trim().parse() {
+                    Ok(n) => n,
+                    Err(_) => {
+                        return respond(&mut stream, 400, &err_json("invalid content-length"))
+                    }
+                };
             }
         }
     }
     if content_length > 1 << 20 {
         return respond(&mut stream, 413, &err_json("body too large"));
     }
+    // xrlint: allow(panic, "header_end + 4 <= buf.len(): the CRLFCRLF terminator was found")
     let mut body = buf[header_end + 4..].to_vec();
     while body.len() < content_length {
         let n = stream.read(&mut chunk)?;
         if n == 0 {
-            break;
+            // Peer hung up mid-body: reject, don't hand a prefix to the
+            // JSON layer as if it were the whole request.
+            return respond(&mut stream, 400, &err_json("truncated body"));
         }
+        // xrlint: allow(panic, "n <= chunk.len() by the read contract")
         body.extend_from_slice(&chunk[..n]);
     }
     body.truncate(content_length);

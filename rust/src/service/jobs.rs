@@ -344,12 +344,24 @@ impl Service {
 
     /// Assign an id, persist the spec (before the entry becomes visible
     /// — a job the registry knows about must survive a crash), enqueue.
+    ///
+    /// The spec write happens *between* two short registry critical
+    /// sections, never under the lock: the registry lock sits on every
+    /// status/submit poll path, so disk latency must not ride on it.
+    /// An id claimed here but never inserted (write failed) is just a
+    /// gap in the sequence; a spec written but not inserted (crash
+    /// in between) is re-queued by the restart scan like any other
+    /// persisted job.
     fn enqueue(&self, mut spec: JobSpec) -> crate::Result<u64> {
-        let mut st = self.state.lock().unwrap_or_else(PoisonError::into_inner);
-        let id = st.next_id;
+        let id = {
+            let mut st = self.state.lock().unwrap_or_else(PoisonError::into_inner);
+            let id = st.next_id;
+            st.next_id += 1;
+            id
+        };
         spec.id = id;
         atomic_write(&self.spec_path(id), &spec.to_json_string())?;
-        st.next_id += 1;
+        let mut st = self.state.lock().unwrap_or_else(PoisonError::into_inner);
         st.jobs.insert(
             id,
             Entry { spec, state: JobState::Queued, done: 0, total: 0, detail: String::new() },
@@ -447,6 +459,7 @@ impl Service {
         let spec = {
             let mut st = self.state.lock().unwrap_or_else(PoisonError::into_inner);
             let Some(id) = st.queue.pop_front() else { return Ok(false) };
+            // xrlint: allow(panic, "queue ids are inserted into jobs in the same critical section")
             let e = st.jobs.get_mut(&id).expect("queued job has an entry");
             e.state = JobState::Running;
             e.spec.clone()
@@ -457,6 +470,7 @@ impl Service {
             JobKind::Search => self.drive_search(&spec, max_steps),
         };
         let mut st = self.state.lock().unwrap_or_else(PoisonError::into_inner);
+        // xrlint: allow(panic, "entries are never removed while a job runs")
         let e = st.jobs.get_mut(&id).expect("running job has an entry");
         match ran {
             Ok(Step::Finished) => e.state = JobState::Done,
@@ -642,6 +656,7 @@ fn sweep_problem(spec: &JobSpec, cluster: Cluster) -> crate::Result<(EvalRequest
         "fig11" => {
             let apps = top10_apps();
             let base = provisioning_request(
+                // xrlint: allow(panic, "top10_apps always returns 10 entries")
                 &apps[..4],
                 &crate::soc::VrSoc::default(),
                 2.0 * YEAR_S,

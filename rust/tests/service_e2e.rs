@@ -243,3 +243,61 @@ fn http_surface_round_trips_over_a_real_socket() {
     assert_eq!(code, 404);
     std::fs::remove_dir_all(&dir).ok();
 }
+
+/// Write raw bytes, optionally half-close the write side, read the
+/// response. Lets the tests below send requests no sane client would.
+fn http_raw(addr: std::net::SocketAddr, raw: &[u8], half_close: bool) -> u16 {
+    let mut stream = TcpStream::connect(addr).unwrap();
+    // The server is allowed to respond-and-close before the whole
+    // request is written; a failed tail write is part of the scenario.
+    let _ = stream.write_all(raw);
+    if half_close {
+        let _ = stream.shutdown(std::net::Shutdown::Write);
+    }
+    let mut buf = Vec::new();
+    stream.read_to_end(&mut buf).unwrap();
+    let text = String::from_utf8_lossy(&buf);
+    text.split_whitespace().nth(1).and_then(|s| s.parse().ok()).expect("status line")
+}
+
+#[test]
+fn malformed_requests_get_400_not_a_worker_panic() {
+    let dir = test_dir("service_e2e_malformed");
+    std::fs::remove_dir_all(&dir).ok();
+    let svc = Arc::new(open_service(&dir));
+    let addr = spawn_listener(Arc::clone(&svc), "127.0.0.1:0").unwrap();
+
+    // Garbage request line: not HTTP at all.
+    assert_eq!(http_raw(addr, b"GARBAGE\r\n\r\n", false), 400);
+    // Three tokens but no HTTP/ version, and a path with no leading /.
+    assert_eq!(http_raw(addr, b"GET /v1/stats FTP/1.0\r\n\r\n", false), 400);
+    assert_eq!(http_raw(addr, b"GET v1stats HTTP/1.1\r\n\r\n", false), 400);
+    // Content-Length that doesn't parse must be rejected, not read as 0.
+    assert_eq!(
+        http_raw(addr, b"POST /v1/sweep HTTP/1.1\r\nContent-Length: banana\r\n\r\n", false),
+        400
+    );
+    // Truncated body: the client promises 100 bytes and hangs up after 4.
+    assert_eq!(
+        http_raw(addr, b"POST /v1/sweep HTTP/1.1\r\nContent-Length: 100\r\n\r\n{\"a\"", true),
+        400
+    );
+    // Oversized declared body and oversized headers keep their codes.
+    assert_eq!(
+        http_raw(addr, b"POST /v1/sweep HTTP/1.1\r\nContent-Length: 9999999\r\n\r\n", false),
+        413
+    );
+    // Sized so the server's limit trips exactly when the last byte is
+    // consumed — nothing is left unread, so the close can't RST away
+    // the 431 before the client reads it.
+    let mut big = b"GET /v1/stats HTTP/1.1\r\n".to_vec();
+    let pad = 64 * 1024 + 1 - big.len();
+    big.extend(std::iter::repeat(b'x').take(pad));
+    assert_eq!(http_raw(addr, &big, false), 431);
+
+    // The listener survived all of it: a well-formed request still works.
+    assert_eq!(http(addr, "GET", "/v1/stats", "").0, 200);
+    // And an unknown-but-well-formed path is still a 404, not a 400.
+    assert_eq!(http(addr, "GET", "/v1/nope", "").0, 404);
+    std::fs::remove_dir_all(&dir).ok();
+}

@@ -1,0 +1,9 @@
+// BAD: carbon/overlay.rs must fence its kernel in a bit-identical
+// region; this copy carries none (R002).
+fn apply(xs: &[f32]) -> f32 {
+    let mut acc = 0.0f32;
+    for &x in xs {
+        acc += x;
+    }
+    acc
+}

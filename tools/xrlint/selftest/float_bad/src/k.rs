@@ -1,0 +1,13 @@
+// BAD: every float-determinism hazard inside one bit-identical fence —
+// an unordered HashMap fold (F001 + F002), a fused mul_add (F003) and a
+// thread spawn (F004).
+use std::collections::HashMap;
+
+// xrlint: region(bit-identical)
+fn total(m: &HashMap<u32, f32>) -> f32 {
+    let s: f32 = m.values().sum();
+    let t = 1.0f32.mul_add(2.0, s);
+    std::thread::spawn(|| {});
+    t
+}
+// xrlint: endregion(bit-identical)

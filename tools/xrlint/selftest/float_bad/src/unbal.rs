@@ -1,0 +1,3 @@
+// BAD: endregion with no opening fence (R001).
+fn noop() {}
+// xrlint: endregion(bit-identical)

@@ -1,0 +1,17 @@
+// BAD: `one` takes a then b, `two` takes b then a — a cycle in the
+// acquired-while-held graph (L001).
+impl Pair {
+    fn one(&self) {
+        let g1 = self.a.lock().unwrap_or_else(std::sync::PoisonError::into_inner);
+        let g2 = self.b.lock().unwrap_or_else(std::sync::PoisonError::into_inner);
+        drop(g2);
+        drop(g1);
+    }
+
+    fn two(&self) {
+        let g2 = self.b.lock().unwrap_or_else(std::sync::PoisonError::into_inner);
+        let g1 = self.a.lock().unwrap_or_else(std::sync::PoisonError::into_inner);
+        drop(g1);
+        drop(g2);
+    }
+}

@@ -1,0 +1,8 @@
+// BAD: filesystem I/O while holding the registry lock (L002) — disk
+// latency rides on the lock every status poll contends on.
+impl Registry {
+    fn persist(&self) {
+        let st = self.state.lock().unwrap_or_else(std::sync::PoisonError::into_inner);
+        std::fs::write("spec.json", st.render()).ok();
+    }
+}

@@ -1,0 +1,17 @@
+// GOOD: both paths take a before b — the acquired-while-held graph is
+// a → b, acyclic.
+impl Pair {
+    fn one(&self) {
+        let g1 = self.a.lock().unwrap_or_else(std::sync::PoisonError::into_inner);
+        let g2 = self.b.lock().unwrap_or_else(std::sync::PoisonError::into_inner);
+        drop(g2);
+        drop(g1);
+    }
+
+    fn two(&self) {
+        let g1 = self.a.lock().unwrap_or_else(std::sync::PoisonError::into_inner);
+        let g2 = self.b.lock().unwrap_or_else(std::sync::PoisonError::into_inner);
+        drop(g2);
+        drop(g1);
+    }
+}

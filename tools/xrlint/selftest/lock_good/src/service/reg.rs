@@ -1,0 +1,10 @@
+// GOOD: render under the lock, write after it is released.
+impl Registry {
+    fn persist(&self) {
+        let text = {
+            let st = self.state.lock().unwrap_or_else(std::sync::PoisonError::into_inner);
+            st.render()
+        };
+        std::fs::write("spec.json", text).ok();
+    }
+}

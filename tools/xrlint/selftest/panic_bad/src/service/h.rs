@@ -1,0 +1,5 @@
+// BAD: a bare unwrap on a service request path (P001) — a malformed
+// request would kill the worker thread instead of returning a 400.
+fn parse_len(s: &str) -> usize {
+    s.trim().parse().unwrap()
+}

@@ -1,0 +1,10 @@
+// GOOD: the one justified panic carries an allow with a reason; the
+// fallible parse returns an error to the caller.
+fn parse_len(s: &str) -> Result<usize, String> {
+    s.trim().parse().map_err(|_| "invalid content-length".to_string())
+}
+
+fn first_byte(buf: &[u8]) -> u8 {
+    // xrlint: allow(panic, "caller checked is_empty one line above")
+    buf[0]
+}

@@ -1,0 +1,15 @@
+// BAD: field set changed without a version bump (S001) and a trailer is
+// appended after splice_digest sealed the body (S003).
+pub const PROFILE_SCHEMA: u32 = 1;
+
+pub fn to_json_string(a: f32, b: f32, c: f32) -> String {
+    let body = Json::obj(vec![
+        ("alpha", Json::Num(a as f64)),
+        ("bravo", Json::Num(b as f64)),
+        ("charlie", Json::Num(c as f64)),
+    ])
+    .to_string();
+    let mut out = splice_digest(&body);
+    out.push_str(",\"trailer\":1");
+    out
+}

@@ -1,0 +1,13 @@
+// GOOD: the rendered field set matches schemas.lock and nothing touches
+// the body after splice_digest seals it.
+pub const PROFILE_SCHEMA: u32 = 1;
+
+pub fn to_json_string(a: f32, b: f32, c: f32) -> String {
+    let body = Json::obj(vec![
+        ("alpha", Json::Num(a as f64)),
+        ("bravo", Json::Num(b as f64)),
+        ("charlie", Json::Num(c as f64)),
+    ])
+    .to_string();
+    splice_digest(&body)
+}

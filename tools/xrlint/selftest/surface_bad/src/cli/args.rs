@@ -1,0 +1,4 @@
+// BAD: `--beta` is registered but undocumented; USAGE sells `--gamma`
+// which the parser rejects (C001 both directions).
+const VALUED: &[&str] = &["alpha"];
+const FLAGS: &[&str] = &["beta"];

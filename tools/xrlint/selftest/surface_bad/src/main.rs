@@ -1,0 +1,3 @@
+const USAGE: &str = "usage: tool --alpha N --gamma";
+
+fn main() {}

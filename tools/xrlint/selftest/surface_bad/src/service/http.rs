@@ -1,0 +1,9 @@
+// BAD: `/v1/extra` is served but missing from the DESIGN.md §3.6 table,
+// and the documented `/v1/stats` is not routed (C002 both directions).
+pub fn handle_request(method: &str, path: &str) -> u16 {
+    match (method, path) {
+        ("POST", "/v1/sweep") => 200,
+        ("GET", "/v1/extra") => 200,
+        _ => 404,
+    }
+}

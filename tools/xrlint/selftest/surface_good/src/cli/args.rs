@@ -1,0 +1,2 @@
+const VALUED: &[&str] = &["alpha"];
+const FLAGS: &[&str] = &["beta"];

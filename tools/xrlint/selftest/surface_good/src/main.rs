@@ -1,0 +1,3 @@
+const USAGE: &str = "usage: tool --alpha N [--beta]";
+
+fn main() {}

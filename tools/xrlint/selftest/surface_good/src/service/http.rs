@@ -1,0 +1,7 @@
+pub fn handle_request(method: &str, path: &str) -> u16 {
+    match (method, path) {
+        ("POST", "/v1/sweep") => 200,
+        ("GET", "/v1/stats") => 200,
+        _ => 404,
+    }
+}

@@ -1,0 +1,171 @@
+#!/usr/bin/env python3
+"""Self-test for tools/xrlint/xrlint.py (stdlib-only; run before the
+real lint in CI, like tools/test_check_bench_gate.py).
+
+Three layers:
+  1. Fixture corpus: every `selftest/<family>_bad` tree must fail with
+     that family's rule codes; every `<family>_good` tree must pass.
+  2. The real repo must lint clean: `xrlint.py rust/src` exits 0.
+  3. Mutation checks on a copy of rust/src — removing a digest-rendered
+     field, deleting a region(bit-identical) fence, or stripping an
+     allow(panic) annotation must each flip the lint to failing, and a
+     legitimate schema bump must be recordable via --update-schemas-lock.
+"""
+
+import os
+import shutil
+import subprocess
+import sys
+import tempfile
+
+HERE = os.path.dirname(os.path.abspath(__file__))
+XRLINT = os.path.join(HERE, "xrlint.py")
+REPO = os.path.dirname(os.path.dirname(HERE))
+SELFTEST = os.path.join(HERE, "selftest")
+
+failures = []
+
+
+def run(*args):
+    return subprocess.run(
+        [sys.executable, XRLINT, *args], capture_output=True, text=True
+    )
+
+
+def check(name, ok, detail=""):
+    status = "ok" if ok else "FAIL"
+    print(f"[{status}] {name}")
+    if not ok:
+        failures.append(name)
+        if detail:
+            print(detail)
+
+
+def expect_fail(case, codes, lock):
+    src = os.path.join(SELFTEST, case, "src")
+    r = run(src, "--schemas-lock", lock)
+    out = r.stdout + r.stderr
+    ok = r.returncode == 1 and all(c in out for c in codes)
+    check(f"{case} fails with {'/'.join(codes)}", ok, out)
+
+
+def expect_pass(case, lock):
+    src = os.path.join(SELFTEST, case, "src")
+    r = run(src, "--schemas-lock", lock)
+    ok = r.returncode == 0
+    check(f"{case} passes", ok, r.stdout + r.stderr)
+
+
+def case_lock(case):
+    own = os.path.join(SELFTEST, case, "schemas.lock")
+    return own if os.path.exists(own) else os.path.join(SELFTEST, "empty.lock")
+
+
+def mutate(tmp, rel, pred, why):
+    """Drop the first line of rel matching pred from the copied tree."""
+    path = os.path.join(tmp, "src", rel)
+    with open(path, encoding="utf-8") as fh:
+        lines = fh.readlines()
+    kept, dropped = [], 0
+    for line in lines:
+        if not dropped and pred(line):
+            dropped = 1
+            continue
+        kept.append(line)
+    if not dropped:
+        raise AssertionError(f"mutation target not found in {rel}: {why}")
+    with open(path, "w", encoding="utf-8") as fh:
+        fh.writelines(kept)
+
+
+def fresh_copy(tmp_root, label):
+    tmp = os.path.join(tmp_root, label)
+    shutil.copytree(os.path.join(REPO, "rust", "src"), os.path.join(tmp, "src"))
+    return tmp
+
+
+def main():
+    # 1. Fixture corpus — one bad + one good tree per rule family.
+    expect_fail("schema_bad", ["S001", "S003"], case_lock("schema_bad"))
+    expect_pass("schema_good", case_lock("schema_good"))
+    expect_fail("float_bad", ["F001", "F002", "F003", "F004", "R001", "R002"],
+                case_lock("float_bad"))
+    expect_pass("float_good", case_lock("float_good"))
+    expect_fail("lock_bad", ["L001", "L002"], case_lock("lock_bad"))
+    expect_pass("lock_good", case_lock("lock_good"))
+    expect_fail("panic_bad", ["P001"], case_lock("panic_bad"))
+    expect_pass("panic_good", case_lock("panic_good"))
+    expect_fail("surface_bad", ["C001", "C002"], case_lock("surface_bad"))
+    expect_pass("surface_good", case_lock("surface_good"))
+
+    # Suppression mechanism: a baseline entry silences panic_bad's P001.
+    with tempfile.TemporaryDirectory() as tmp:
+        baseline = os.path.join(tmp, "baseline.txt")
+        with open(baseline, "w", encoding="utf-8") as fh:
+            fh.write("P001|service/h.rs|unwrap\n")
+        r = run(os.path.join(SELFTEST, "panic_bad", "src"),
+                "--schemas-lock", case_lock("panic_bad"), "--baseline", baseline)
+        check("baseline suppresses panic_bad", r.returncode == 0,
+              r.stdout + r.stderr)
+
+    # 2. The real repo lints clean with the checked-in schemas.lock.
+    r = run(os.path.join(REPO, "rust", "src"))
+    check("repo rust/src lints clean", r.returncode == 0, r.stdout + r.stderr)
+
+    # 3. Mutation checks: each guarded invariant, when broken, fails.
+    with tempfile.TemporaryDirectory() as tmp_root:
+        tmp = fresh_copy(tmp_root, "field")
+        mutate(tmp, os.path.join("dse", "sweep.rs"),
+               lambda l: '("chunks_done"' in l, "chunks_done render")
+        r = run(os.path.join(tmp, "src"))
+        check("removing a digest-rendered field fails (S001)",
+              r.returncode == 1 and "S001" in r.stderr, r.stdout + r.stderr)
+
+        tmp = fresh_copy(tmp_root, "region")
+        mutate(tmp, os.path.join("runtime", "host.rs"),
+               lambda l: "xrlint: region(bit-identical)" in l, "region fence")
+        r = run(os.path.join(tmp, "src"))
+        check("deleting a region(bit-identical) fence fails (R001/R002)",
+              r.returncode == 1 and ("R001" in r.stderr or "R002" in r.stderr),
+              r.stdout + r.stderr)
+
+        tmp = fresh_copy(tmp_root, "allow")
+        mutate(tmp, os.path.join("runtime", "pool.rs"),
+               lambda l: "xrlint: allow(panic" in l, "allow(panic) annotation")
+        r = run(os.path.join(tmp, "src"))
+        check("stripping an allow(panic) fails (P001)",
+              r.returncode == 1 and "P001" in r.stderr, r.stdout + r.stderr)
+
+        # Legitimate schema bump workflow: field change + version bump is
+        # still S002 (stale lock) until --update-schemas-lock re-records,
+        # after which the lint is clean again.
+        tmp = fresh_copy(tmp_root, "bump")
+        sweep = os.path.join(tmp, "src", "dse", "sweep.rs")
+        with open(sweep, encoding="utf-8") as fh:
+            text = fh.read()
+        assert "SWEEP_CHECKPOINT_SCHEMA: u32 = 2" in text
+        text = text.replace("SWEEP_CHECKPOINT_SCHEMA: u32 = 2",
+                            "SWEEP_CHECKPOINT_SCHEMA: u32 = 3")
+        with open(sweep, "w", encoding="utf-8") as fh:
+            fh.write(text)
+        lock = os.path.join(tmp, "schemas.lock")
+        shutil.copy(os.path.join(HERE, "schemas.lock"), lock)
+        r = run(os.path.join(tmp, "src"), "--schemas-lock", lock)
+        check("version bump without re-record fails (S002)",
+              r.returncode == 1 and "S002" in r.stderr, r.stdout + r.stderr)
+        r = run(os.path.join(tmp, "src"), "--schemas-lock", lock,
+                "--update-schemas-lock")
+        check("--update-schemas-lock re-records", r.returncode == 0,
+              r.stdout + r.stderr)
+        r = run(os.path.join(tmp, "src"), "--schemas-lock", lock)
+        check("clean after re-record", r.returncode == 0, r.stdout + r.stderr)
+
+    if failures:
+        print(f"\n{len(failures)} xrlint self-test failure(s)", file=sys.stderr)
+        return 1
+    print("\nall xrlint self-tests passed")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

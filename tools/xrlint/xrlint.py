@@ -1,0 +1,843 @@
+#!/usr/bin/env python3
+"""xrlint — repo-invariant static analysis over rust/src (stdlib-only).
+
+The bit-identity, persistence and concurrency guarantees this repo makes
+(DESIGN.md §3.3–§3.6) are invariants the type system cannot see: digest
+coverage of serialized envelopes, schema-version bumps on layout change,
+a fixed f32 fold order in the bit-identical kernels, a cycle-free lock
+acquisition order, and panic-free service/pool request paths. No cargo
+toolchain exists in the growth containers (ROADMAP), so this analyzer is
+the verification layer that actually executes there — and it runs in CI
+before the build.
+
+Rule families (each suppressible, see DESIGN.md §3.7):
+
+* S — schema/digest drift. Every `const *_SCHEMA: u32` file's rendered
+  field set is fingerprinted into `schemas.lock`; changing the fields
+  without bumping the version (S001), diverging from the lock (S002) or
+  appending to a body *after* `splice_digest` sealed it (S003) fails.
+* F/R — float determinism. Inside `// xrlint: region(bit-identical)`
+  fences: unordered f32 folds (F001), unordered containers (F002),
+  `mul_add` contraction (F003), thread spawns (F004). Unbalanced fences
+  are R001; deleting a fence from a file that must carry one is R002.
+* L — lock order. Extracts Mutex/flock acquisition sites, builds the
+  acquired-while-held graph (one level of interprocedural summaries),
+  fails on cycles (L001) and on filesystem I/O performed while the
+  service registry lock is held (L002).
+* P — panic paths. `unwrap`/`expect`/`panic!`/indexing in `service/`
+  and `runtime/pool.rs` must carry `// xrlint: allow(panic, "why")`.
+* C — surface consistency. CLI options registered in `cli/args.rs` vs
+  the `USAGE` text in `main.rs` (C001); routes in `service/http.rs` vs
+  the DESIGN.md §3.6 endpoint table (C002).
+
+Suppression: `// xrlint: allow(<family>[, "reason"])` on the finding's
+line or the line above (family ∈ schema|float|lock|panic|surface; panic
+requires a non-empty reason). A baseline file (default
+tools/xrlint/baseline.txt, `RULE|path-substring|message-substring` per
+line) suppresses legacy findings wholesale.
+
+Usage:
+  xrlint.py SRC_ROOT [--schemas-lock PATH] [--baseline PATH]
+            [--update-schemas-lock]
+
+Exit 0 when clean, 1 on findings, 2 on usage/internal errors.
+"""
+
+import os
+import re
+import sys
+
+# --- configuration ---------------------------------------------------------
+
+# Files that must carry at least this many region(bit-identical) fences
+# when present under the scanned root: the kernels and combiners whose
+# f32 operation order is the repo's bit-identity contract.
+REQUIRED_REGIONS = {
+    "carbon/overlay.rs": 1,
+    "carbon/trace.rs": 1,
+    "runtime/host.rs": 1,
+    "dse/sweep.rs": 1,
+}
+
+# Canonical lock names: (path suffix or prefix fragment, receiver ident)
+# -> name. Fallback is "<file stem>.<ident>".
+LOCK_ALIASES = [
+    ("service/", "state", "service.registry"),
+    ("dse/coalesce.rs", "inflight", "coalesce.inflight"),
+    ("dse/coalesce.rs", "slot", "coalesce.slot"),
+    ("dse/coalesce.rs", "lock", "coalesce.slot"),
+    ("dse/cache.rs", "mem", "cache.mem"),
+    ("dse/cache.rs", "disk", "cache.disk"),
+    ("dse/cache.rs", "f", "cache.flock"),
+    ("dse/cache.rs", "file", "cache.flock"),
+    ("runtime/pool.rs", "jobs", "pool.jobs"),
+]
+
+# Locks under which no filesystem I/O may run (they sit on every poll
+# path; DESIGN.md §3.7 lock-order contract).
+NO_IO_LOCKS = {"service.registry"}
+
+IO_TOKENS = re.compile(
+    r"\batomic_write(?:_bytes)?\s*\(|\bstd::fs::|\bread_to_string\s*\(|"
+    r"\bFile::|\bOpenOptions\b|\bwrite_all\s*\(|\bremove_file\s*\(|"
+    r"\bcreate_dir"
+)
+
+# Slice-backed (deterministically ordered) iterator sources that make a
+# same-statement `.sum()` / `.fold(` acceptable inside a region.
+ORDERED_ITER = re.compile(r"\.iter\(\)|\.iter_mut\(\)|\.chunks|\.windows|\.enumerate\(\)")
+
+FAMILY_OF = {"S": "schema", "F": "float", "R": "float", "L": "lock", "P": "panic", "C": "surface"}
+
+
+def fail(msg):
+    print(f"xrlint error: {msg}", file=sys.stderr)
+    sys.exit(2)
+
+
+# --- source model ----------------------------------------------------------
+
+DIRECTIVE = re.compile(r"//\s*xrlint:\s*(allow|region|endregion)\((.*)\)")
+
+
+class SourceFile:
+    """One .rs file: raw text plus comment/string-stripped views and the
+    parsed `// xrlint:` directives. Line counts are preserved across the
+    stripped views so findings carry real line numbers."""
+
+    def __init__(self, root, rel):
+        self.rel = rel
+        self.path = os.path.join(root, rel)
+        with open(self.path, encoding="utf-8") as fh:
+            self.raw = fh.read()
+        self.raw_lines = self.raw.split("\n")
+        # code_ws: comments removed, strings kept (field/route/option
+        # extraction). code_ns: comments AND string contents removed
+        # (token analysis that must not trip on words inside strings).
+        self.code_ws = _strip(self.raw, keep_strings=True).split("\n")
+        self.code_ns = _strip(self.raw, keep_strings=False).split("\n")
+        # Everything from the first `#[cfg(test)]` on is test scaffolding
+        # (the repo convention puts test modules at file end).
+        self.test_start = len(self.raw_lines)
+        for i, line in enumerate(self.raw_lines):
+            if "#[cfg(test)]" in line:
+                self.test_start = i
+                break
+        self.directives = {}  # line index -> (kind, args)
+        for i, line in enumerate(self.raw_lines):
+            m = DIRECTIVE.search(line)
+            if m:
+                self.directives[i] = (m.group(1), m.group(2).strip())
+
+    def code_text(self, strings=True, tests=False):
+        lines = self.code_ws if strings else self.code_ns
+        end = len(lines) if tests else self.test_start
+        return "\n".join(lines[:end])
+
+    def allow_on(self, line_idx, family):
+        """True when an allow(<family>) directive sits on this line or
+        the one above (0-based index)."""
+        for i in (line_idx, line_idx - 1):
+            if i in self.directives:
+                kind, args = self.directives[i]
+                if kind == "allow" and args.split(",")[0].strip() == family:
+                    return True
+        return False
+
+    def allow_reason(self, line_idx, family):
+        """The quoted reason of a matching allow, or None."""
+        for i in (line_idx, line_idx - 1):
+            if i in self.directives:
+                kind, args = self.directives[i]
+                if kind == "allow" and args.split(",")[0].strip() == family:
+                    m = re.search(r'"([^"]*)"', args)
+                    return m.group(1) if m else ""
+        return None
+
+
+def _strip(text, keep_strings):
+    """Strip comments (line + block) and optionally string/char literal
+    contents, preserving newlines so line numbers survive."""
+    out = []
+    i, n = 0, len(text)
+    while i < n:
+        c = text[i]
+        if c == "/" and i + 1 < n and text[i + 1] == "/":
+            while i < n and text[i] != "\n":
+                i += 1
+            continue
+        if c == "/" and i + 1 < n and text[i + 1] == "*":
+            depth = 1
+            i += 2
+            while i < n and depth:
+                if text[i] == "/" and i + 1 < n and text[i + 1] == "*":
+                    depth += 1
+                    i += 2
+                elif text[i] == "*" and i + 1 < n and text[i + 1] == "/":
+                    depth -= 1
+                    i += 2
+                else:
+                    if text[i] == "\n":
+                        out.append("\n")
+                    i += 1
+            continue
+        if c == '"' or (c in "br" and _string_ahead(text, i)):
+            j, literal = _scan_string(text, i)
+            if keep_strings:
+                out.append(literal)
+            else:
+                out.append('""')
+                out.extend("\n" for ch in literal if ch == "\n")
+            i = j
+            continue
+        if c == "'" and i + 2 < n:
+            # Char literal ('x' / '\n'); lifetimes ('a>) fall through.
+            if text[i + 1] == "\\" and i + 3 < n and text[i + 3] == "'":
+                out.append("' '" if not keep_strings else text[i : i + 4])
+                i += 4
+                continue
+            if text[i + 1] != "\\" and text[i + 2] == "'":
+                out.append("' '" if not keep_strings else text[i : i + 3])
+                i += 3
+                continue
+        out.append(c)
+        i += 1
+    return "".join(out)
+
+
+def _string_ahead(text, i):
+    """At `b"..."`, `r"..."` or `br"..."`/`r#"..."#` openers."""
+    m = re.match(r'(?:b?r#*|b)"', text[i:])
+    return bool(m) and (i == 0 or not (text[i - 1].isalnum() or text[i - 1] == "_"))
+
+
+def _scan_string(text, i):
+    """Consume a string literal starting at i; returns (end, literal)."""
+    m = re.match(r'(b?r(#*))"', text[i:])
+    if m:  # raw string: ends at "#...# with matching hash count
+        hashes = m.group(2)
+        start = i
+        i += m.end()
+        end_marker = '"' + hashes
+        j = text.find(end_marker, i)
+        j = len(text) if j < 0 else j + len(end_marker)
+        return j, text[start:j]
+    start = i
+    i += 2 if text[i] == "b" else 1  # opening quote (skip b prefix)
+    n = len(text)
+    while i < n:
+        if text[i] == "\\":
+            i += 2
+            continue
+        if text[i] == '"':
+            i += 1
+            break
+        i += 1
+    return i, text[start:i]
+
+
+def function_spans(sf):
+    """[(name, start_line, end_line)] per `fn` in non-test code, by brace
+    matching on the string-stripped view."""
+    text = sf.code_text(strings=False)
+    spans = []
+    for m in re.finditer(r"(?:^|[\s>])fn\s+(\w+)", text):
+        name = m.group(1)
+        brace = text.find("{", m.end())
+        semi = text.find(";", m.end())
+        if brace < 0 or (0 <= semi < brace):  # trait signature, no body
+            continue
+        depth, i = 0, brace
+        while i < len(text):
+            if text[i] == "{":
+                depth += 1
+            elif text[i] == "}":
+                depth -= 1
+                if depth == 0:
+                    break
+            i += 1
+        start = text.count("\n", 0, m.start()) + 1
+        end = text.count("\n", 0, min(i, len(text) - 1)) + 1
+        spans.append((name, start, end))
+    return spans
+
+
+# --- findings --------------------------------------------------------------
+
+class Findings:
+    def __init__(self, baseline):
+        self.rows = []
+        self.baseline = baseline
+        self.suppressed = 0
+
+    def add(self, rule, sf, line_idx, msg):
+        """line_idx is 0-based; reported 1-based. Applies inline allow
+        and baseline suppression."""
+        family = FAMILY_OF[rule[0]]
+        if sf is not None and sf.allow_on(line_idx, family):
+            if family != "panic":  # panic allows additionally need a reason
+                self.suppressed += 1
+                return
+            if sf.allow_reason(line_idx, "panic"):
+                self.suppressed += 1
+                return
+        rel = sf.rel if sf is not None else "<repo>"
+        for brule, bpath, bmsg in self.baseline:
+            if rule == brule and bpath in rel and bmsg in msg:
+                self.suppressed += 1
+                return
+        self.rows.append((rule, rel, line_idx + 1, msg))
+
+
+# --- rule S: schema / digest drift ----------------------------------------
+
+SCHEMA_CONST = re.compile(r"const\s+([A-Z][A-Z0-9_]*)_SCHEMA\s*:\s*u32\s*=\s*(\d+)")
+FIELD_KEY = re.compile(r'\(\s*"([a-z][a-z0-9_]*)"\s*,')
+
+
+def extract_schemas(files):
+    """{name: (version, sorted field tuple, SourceFile)} from every file
+    declaring a `*_SCHEMA: u32` const."""
+    out = {}
+    for sf in files:
+        text = sf.code_text(strings=True)
+        m = SCHEMA_CONST.search(text)
+        if not m:
+            continue
+        name = m.group(1).lower()
+        version = int(m.group(2))
+        fields = tuple(sorted(set(FIELD_KEY.findall(text))))
+        out[name] = (version, fields, sf)
+    return out
+
+
+def parse_lock(path):
+    locks = {}
+    with open(path, encoding="utf-8") as fh:
+        for line in fh:
+            line = line.strip()
+            if not line or line.startswith("#"):
+                continue
+            m = re.match(r"(\w+)\s+v(\d+)\s+fields=(\S*)", line)
+            if not m:
+                fail(f"{path}: unparseable lock line: {line}")
+            locks[m.group(1)] = (int(m.group(2)), tuple(m.group(3).split(",")) if m.group(3) else ())
+    return locks
+
+
+def write_lock(path, schemas):
+    lines = [
+        "# xrlint schemas.lock — per-schema serialized-field fingerprints.",
+        "# Regenerate ONLY after bumping the matching *_SCHEMA const:",
+        "#   python3 tools/xrlint/xrlint.py rust/src --update-schemas-lock",
+        "# (see DESIGN.md §3.7 for the schema-bump workflow)",
+    ]
+    for name in sorted(schemas):
+        version, fields, _ = schemas[name]
+        lines.append(f"{name} v{version} fields={','.join(fields)}")
+    with open(path, "w", encoding="utf-8") as fh:
+        fh.write("\n".join(lines) + "\n")
+
+
+def rule_schema(files, lock_path, update, findings):
+    schemas = extract_schemas(files)
+    if update:
+        write_lock(lock_path, schemas)
+        for name in sorted(schemas):
+            version, fields, _ = schemas[name]
+            print(f"schemas.lock: recorded {name} v{version} ({len(fields)} fields)")
+        return True
+    if not os.path.exists(lock_path):
+        if schemas:
+            findings.add(
+                "S002",
+                None,
+                0,
+                f"schemas.lock not found at {lock_path}; run --update-schemas-lock "
+                f"to record the current schema shapes",
+            )
+        return False
+    locked = parse_lock(lock_path)
+    for name, (version, fields, sf) in sorted(schemas.items()):
+        line = _const_line(sf, name)
+        if name not in locked:
+            findings.add(
+                "S002", sf, line,
+                f"schema `{name}` (v{version}) is not in schemas.lock; a new schema "
+                f"must be recorded with --update-schemas-lock",
+            )
+            continue
+        lver, lfields = locked[name]
+        if version == lver and fields != lfields:
+            added = sorted(set(fields) - set(lfields))
+            removed = sorted(set(lfields) - set(fields))
+            delta = "; ".join(
+                p for p in (
+                    f"added: {', '.join(added)}" if added else "",
+                    f"removed: {', '.join(removed)}" if removed else "",
+                ) if p
+            )
+            findings.add(
+                "S001", sf, line,
+                f"schema `{name}` serialized field set changed without a version bump "
+                f"(still v{version}; {delta}) — bump {name.upper()}_SCHEMA and "
+                f"re-run --update-schemas-lock",
+            )
+        elif version != lver:
+            findings.add(
+                "S002", sf, line,
+                f"schema `{name}` version changed (lock v{lver} -> code v{version}); "
+                f"re-record with --update-schemas-lock so the lint tracks the new shape",
+            )
+    for name in sorted(set(locked) - set(schemas)):
+        findings.add(
+            "S002", None, 0,
+            f"schemas.lock records schema `{name}` but no scanned file declares "
+            f"{name.upper()}_SCHEMA — deleted schemas must be removed from the lock",
+        )
+    # S003: nothing may be appended to a body after splice_digest sealed it.
+    post_seal = re.compile(r"Json::obj\s*\(|push_str\s*\(|format!\s*\(|write!\s*\(")
+    for _, (_, _, sf) in sorted(schemas.items()):
+        lines = sf.code_ns[: sf.test_start]
+        for fname, start, end in function_spans(sf):
+            seal = None
+            for i in range(start - 1, min(end, len(lines))):
+                if re.search(r"(?<![\w:])splice_digest\s*\(", lines[i]) and not re.search(
+                    r"fn\s+splice_digest", lines[i]
+                ):
+                    seal = i
+            if seal is None:
+                continue
+            # The splice call's own argument may span lines; skip until
+            # its parenthesis closes before hunting for post-seal renders.
+            depth = 0
+            j = seal
+            closed = False
+            while j < min(end, len(lines)) and not closed:
+                for ch in lines[j]:
+                    if ch == "(":
+                        depth += 1
+                    elif ch == ")":
+                        depth -= 1
+                        if depth == 0:
+                            closed = True
+                j += 1
+            for i in range(j, min(end, len(lines))):
+                if post_seal.search(lines[i]):
+                    findings.add(
+                        "S003", sf, i,
+                        f"`{fname}` renders content after splice_digest sealed the "
+                        f"body — the appended bytes escape digest coverage",
+                    )
+    return False
+
+
+def _const_line(sf, name):
+    pat = re.compile(rf"const\s+{name.upper()}_SCHEMA")
+    for i, line in enumerate(sf.code_ws):
+        if pat.search(line):
+            return i
+    return 0
+
+
+# --- rules F/R: float determinism inside bit-identical regions -------------
+
+def rule_float(files, findings):
+    for sf in files:
+        regions = []  # (start, end) 0-based, inclusive
+        stack = []
+        for i in sorted(sf.directives):
+            kind, args = sf.directives[i]
+            if kind == "region" and args == "bit-identical":
+                stack.append(i)
+            elif kind == "endregion" and args == "bit-identical":
+                if not stack:
+                    findings.add("R001", sf, i, "endregion(bit-identical) without a matching region")
+                else:
+                    regions.append((stack.pop(), i))
+        for i in stack:
+            findings.add("R001", sf, i, "region(bit-identical) never closed (missing endregion)")
+        want = REQUIRED_REGIONS.get(sf.rel)
+        if want and len(regions) < want:
+            findings.add(
+                "R002", sf, 0,
+                f"{sf.rel} must fence its kernels with at least {want} "
+                f"region(bit-identical) guard(s); found {len(regions)} — the f32 fold "
+                f"order here is the repo's bit-identity contract",
+            )
+        for start, end in regions:
+            for i in range(start + 1, min(end, len(sf.code_ns))):
+                line = sf.code_ns[i]
+                if re.search(r"\.sum\s*(?:::<[^>]*>)?\(\)|\.fold\s*\(", line):
+                    window = " ".join(sf.code_ns[max(0, i - 2) : i + 1])
+                    if not ORDERED_ITER.search(window):
+                        findings.add(
+                            "F001", sf, i,
+                            "unordered fold: .sum()/.fold( without a slice-backed "
+                            "iterator in reach — accumulation order must be fixed "
+                            "inside a bit-identical region",
+                        )
+                if re.search(r"\bHashMap\b|\bHashSet\b|\.values\(\)|\.keys\(\)", line):
+                    findings.add(
+                        "F002", sf, i,
+                        "unordered container inside a bit-identical region — HashMap/"
+                        "HashSet iteration order is nondeterministic",
+                    )
+                if ".mul_add(" in line:
+                    findings.add(
+                        "F003", sf, i,
+                        "mul_add contracts rounding — bit-identical regions must keep "
+                        "the separate mul/add the oracle paths use",
+                    )
+                if re.search(r"\bspawn\s*\(|thread::scope|par_iter", line):
+                    findings.add(
+                        "F004", sf, i,
+                        "thread spawn inside a bit-identical region — merge order must "
+                        "not depend on scheduling",
+                    )
+
+
+# --- rule L: lock-order graph ---------------------------------------------
+
+ACQUIRE = re.compile(r"(?:let\s+(?:mut\s+)?(\w+)\s*=\s*(?:match\s+)?)?([\w.()?*&]*?)\.lock(?:_shared)?\s*\(\)")
+
+
+def lock_name(rel, ident):
+    for frag, field, name in LOCK_ALIASES:
+        if frag in rel and ident == field:
+            return name
+    stem = os.path.splitext(os.path.basename(rel))[0]
+    return f"{stem}.{ident}"
+
+
+def receiver_ident(sf, line_idx, recv):
+    """Last named component of the receiver chain; looks up for
+    continuation lines (`.lock()` starting its own line)."""
+    chain = recv
+    k = line_idx
+    while (not chain or chain.lstrip().startswith(".")) and k > 0:
+        k -= 1
+        chain = sf.code_ns[k].strip() + chain
+    parts = [p for p in re.split(r"[.\s()&*?]+", chain) if p and p not in ("self", "co", "mut", "let")]
+    parts = [p for p in parts if not p.isdigit()]
+    return parts[-1] if parts else "anon"
+
+
+def rule_lock(files, findings):
+    # Pass 1: per-function direct acquisitions + guard scopes + edges.
+    fn_locks = {}  # fn name -> set of lock names it acquires directly
+    per_fn = []  # (sf, fname, start, end)
+    for sf in files:
+        for fname, start, end in function_spans(sf):
+            per_fn.append((sf, fname, start, end))
+            acquired = set()
+            for i in range(start - 1, min(end, sf.test_start, len(sf.code_ns))):
+                for m in ACQUIRE.finditer(sf.code_ns[i]):
+                    acquired.add(lock_name(sf.rel, receiver_ident(sf, i, m.group(2))))
+                if re.search(r"\.lock_dir\s*\(", sf.code_ns[i]):
+                    acquired.add("cache.flock")
+            if acquired:
+                fn_locks.setdefault(fname, set()).update(acquired)
+
+    edges = {}  # (from, to) -> (rel, line)
+    io_sites = []
+    for sf, fname, start, end in per_fn:
+        held = []  # (lock, var name or None, brace depth at acquisition)
+        depth = 0
+        limit = min(end, sf.test_start, len(sf.code_ns))
+        for i in range(start - 1, limit):
+            line = sf.code_ns[i]
+            for m in ACQUIRE.finditer(line):
+                var, recv = m.group(1), m.group(2)
+                lock = lock_name(sf.rel, receiver_ident(sf, i, recv))
+                for h, _, _ in held:
+                    if h != lock:
+                        edges.setdefault((h, lock), (sf.rel, i + 1))
+                if var and var != "_":
+                    held.append((lock, var, depth))
+            m = re.search(r"(?:let\s+(?:mut\s+)?(\w+)\s*=\s*)?(?:self\.)?lock_dir\s*\(", line)
+            if m and "fn " not in line:
+                for h, _, _ in held:
+                    if h != "cache.flock":
+                        edges.setdefault((h, "cache.flock"), (sf.rel, i + 1))
+                if m.group(1) and m.group(1) != "_":
+                    held.append(("cache.flock", m.group(1), depth))
+            # One-level interprocedural: calling a lock-acquiring fn
+            # while holding a lock creates the same edges.
+            if held:
+                for cm in re.finditer(r"(?<![\w!])(\w+)\s*\(", line):
+                    callee = cm.group(1)
+                    if callee == fname or callee not in fn_locks:
+                        continue
+                    for h, _, _ in held:
+                        for inner in fn_locks[callee]:
+                            if inner != h:
+                                edges.setdefault((h, inner), (sf.rel, i + 1))
+                for h, _, _ in held:
+                    if h in NO_IO_LOCKS and IO_TOKENS.search(line):
+                        io_sites.append((sf, i, h))
+            # Scope maintenance: explicit drops, then brace depth.
+            dm = re.findall(r"\bdrop\s*\(\s*(\w+)\s*\)", line)
+            if dm:
+                held = [h for h in held if h[1] not in dm]
+            depth += line.count("{")
+            closes = line.count("}")
+            if closes:
+                depth -= closes
+                held = [h for h in held if h[2] < depth or (h[2] == depth and "{" not in line)]
+                held = [h for h in held if h[2] <= depth]
+
+    # Cycle detection (DFS) over the acquired-while-held graph.
+    graph = {}
+    for (a, b), site in edges.items():
+        graph.setdefault(a, []).append(b)
+    state = {}
+    cycle = []
+
+    def dfs(node, path):
+        state[node] = 1
+        for nxt in graph.get(node, ()):
+            if state.get(nxt) == 1:
+                cycle.append(path[path.index(nxt):] + [nxt] if nxt in path else [node, nxt])
+                return True
+            if state.get(nxt, 0) == 0 and dfs(nxt, path + [nxt]):
+                return True
+        state[node] = 2
+        return False
+
+    for node in sorted(graph):
+        if state.get(node, 0) == 0 and dfs(node, [node]):
+            break
+    if cycle:
+        loop = cycle[0]
+        key = None
+        for a, b in zip(loop, loop[1:]):
+            if (a, b) in edges:
+                key = (a, b)
+                break
+        rel, line = edges[key] if key else ("<graph>", 0)
+        sf = next((s for s in files if s.rel == rel), None)
+        findings.add(
+            "L001", sf, line - 1,
+            f"lock-order cycle: {' -> '.join(loop)} — a cycle in the "
+            f"acquired-while-held graph is a deadlock waiting for schedule",
+        )
+    for sf, i, h in io_sites:
+        findings.add(
+            "L002", sf, i,
+            f"filesystem I/O while holding `{h}` — this lock sits on every status/"
+            f"submit poll path; move the I/O outside the critical section",
+        )
+
+
+# --- rule P: panic-path audit ----------------------------------------------
+
+PANIC_TOKENS = re.compile(
+    r"\.unwrap\(\)|\.expect\s*\(|\bpanic!\s*\(|\bunreachable!\s*\(|"
+    r"\btodo!\s*\(|\bunimplemented!\s*\("
+)
+INDEXING = re.compile(r"[\w)\]]\[")
+
+
+def rule_panic(files, findings):
+    for sf in files:
+        if not (sf.rel.startswith("service/") or sf.rel == "runtime/pool.rs"):
+            continue
+        for i in range(min(sf.test_start, len(sf.code_ns))):
+            line = sf.code_ns[i]
+            hit = None
+            if PANIC_TOKENS.search(line):
+                hit = PANIC_TOKENS.search(line).group(0).strip("(").strip()
+            elif INDEXING.search(line):
+                hit = "indexing"
+            if hit is None:
+                continue
+            reason = sf.allow_reason(i, "panic")
+            if reason:
+                continue
+            if reason == "":
+                findings.add(
+                    "P001", sf, i,
+                    f"`{hit}` on a service/pool request path has an allow(panic) with "
+                    f'no reason — write allow(panic, "<why this cannot fire>")',
+                )
+                continue
+            findings.add(
+                "P001", sf, i,
+                f"`{hit}` on a service/pool request path without "
+                f'`// xrlint: allow(panic, "<why>")` — a worker panic kills the '
+                f"executor; return an error (HTTP 400/500) instead or justify it",
+            )
+
+
+# --- rule C: surface consistency -------------------------------------------
+
+def rule_surface(files, src_root, findings):
+    by_rel = {sf.rel: sf for sf in files}
+    args_sf = by_rel.get("cli/args.rs")
+    main_sf = by_rel.get("main.rs")
+    if args_sf and main_sf:
+        text = args_sf.code_text(strings=True)
+        registered = set()
+        for const in ("VALUED", "FLAGS"):
+            m = re.search(rf"const\s+{const}\s*:[^=]*=\s*&\[(.*?)\]", text, re.S)
+            if m:
+                registered.update(re.findall(r'"([a-z][a-z0-9-]*)"', m.group(1)))
+        usage = re.search(r"const\s+USAGE[^=]*=\s*(r?#*\"|\")", main_sf.raw)
+        usage_opts = set()
+        if usage:
+            _, literal = _scan_string(main_sf.raw, usage.start(1))
+            usage_opts = set(re.findall(r"--([a-z][a-z0-9-]*)", literal))
+        for opt in sorted(registered - usage_opts):
+            findings.add(
+                "C001", args_sf, _line_of(args_sf, f'"{opt}"'),
+                f"CLI option --{opt} is registered in cli/args.rs but absent from "
+                f"the USAGE text in main.rs",
+            )
+        for opt in sorted(usage_opts - registered):
+            findings.add(
+                "C001", main_sf, _line_of(main_sf, f"--{opt}"),
+                f"USAGE documents --{opt} but cli/args.rs does not register it "
+                f"(users get UnknownOption)",
+            )
+    http_sf = by_rel.get("service/http.rs")
+    design = _find_up(src_root, "DESIGN.md")
+    if http_sf and design:
+        code_routes = set()
+        text = http_sf.code_text(strings=True)
+        m = re.search(r"fn\s+handle_request.*?\n\}", text, re.S)
+        body = m.group(0) if m else text
+        for mm in re.finditer(r'\(\s*"(GET|POST|PUT|DELETE)"\s*,\s*"(/[^"]*)"', body):
+            code_routes.add((mm.group(1), mm.group(2)))
+        for mm in re.finditer(
+            r'\(\s*"(GET|POST|PUT|DELETE)"\s*,\s*\w+\s*\)\s*if\s*\w+\.starts_with\(\s*"(/[^"]*)"',
+            body,
+        ):
+            code_routes.add((mm.group(1), mm.group(2)))
+        doc_routes = set()
+        with open(design, encoding="utf-8") as fh:
+            dtext = fh.read()
+        sec = re.search(r"#+ *§3\.6.*?(?=\n#+ *§|\Z)", dtext, re.S)
+        if sec:
+            for mm in re.finditer(r"`(GET|POST|PUT|DELETE)\s+(/\S+?)`", sec.group(0)):
+                path = mm.group(2)
+                if "{" in path:
+                    path = path[: path.index("{")]
+                doc_routes.add((mm.group(1), path))
+        norm = lambda routes: {(m2, p[: p.index("{")] if "{" in p else p) for m2, p in routes}
+        code_n, doc_n = norm(code_routes), norm(doc_routes)
+        for method, path in sorted(code_n - doc_n):
+            findings.add(
+                "C002", http_sf, _line_of(http_sf, f'"{path}'),
+                f"route {method} {path} is served by service/http.rs but missing from "
+                f"the DESIGN.md §3.6 endpoint table",
+            )
+        for method, path in sorted(doc_n - code_n):
+            findings.add(
+                "C002", http_sf, 0,
+                f"DESIGN.md §3.6 documents {method} {path} but service/http.rs does "
+                f"not route it",
+            )
+
+
+def _line_of(sf, needle):
+    for i, line in enumerate(sf.raw_lines):
+        if needle in line:
+            return i
+    return 0
+
+
+def _find_up(start, name, levels=4):
+    d = os.path.abspath(start)
+    for _ in range(levels):
+        d = os.path.dirname(d)
+        cand = os.path.join(d, name)
+        if os.path.exists(cand):
+            return cand
+    return None
+
+
+# --- driver ----------------------------------------------------------------
+
+def load_baseline(path):
+    rows = []
+    if path and os.path.exists(path):
+        with open(path, encoding="utf-8") as fh:
+            for line in fh:
+                line = line.strip()
+                if not line or line.startswith("#"):
+                    continue
+                parts = line.split("|", 2)
+                if len(parts) != 3:
+                    fail(f"{path}: baseline line needs RULE|path-sub|msg-sub: {line}")
+                rows.append(tuple(parts))
+    return rows
+
+
+def main():
+    argv = sys.argv[1:]
+    update = "--update-schemas-lock" in argv
+    argv = [a for a in argv if a != "--update-schemas-lock"]
+    lock_path = None
+    baseline_path = None
+    pos = []
+    i = 0
+    while i < len(argv):
+        if argv[i] == "--schemas-lock":
+            i += 1
+            lock_path = argv[i] if i < len(argv) else fail("--schemas-lock needs a path")
+        elif argv[i] == "--baseline":
+            i += 1
+            baseline_path = argv[i] if i < len(argv) else fail("--baseline needs a path")
+        elif argv[i].startswith("--"):
+            fail(f"unknown option {argv[i]}")
+        else:
+            pos.append(argv[i])
+        i += 1
+    if len(pos) != 1:
+        fail("usage: xrlint.py SRC_ROOT [--schemas-lock PATH] [--baseline PATH] [--update-schemas-lock]")
+    src_root = pos[0]
+    if not os.path.isdir(src_root):
+        fail(f"{src_root}: not a directory")
+    here = os.path.dirname(os.path.abspath(__file__))
+    if lock_path is None:
+        lock_path = os.path.join(here, "schemas.lock")
+    if baseline_path is None:
+        cand = os.path.join(here, "baseline.txt")
+        baseline_path = cand if os.path.exists(cand) else None
+
+    files = []
+    for dirpath, dirnames, filenames in os.walk(src_root):
+        dirnames.sort()
+        for fn in sorted(filenames):
+            if fn.endswith(".rs"):
+                rel = os.path.relpath(os.path.join(dirpath, fn), src_root).replace(os.sep, "/")
+                files.append(SourceFile(src_root, rel))
+    if not files:
+        fail(f"{src_root}: no .rs files found")
+
+    findings = Findings(load_baseline(baseline_path))
+    updated = rule_schema(files, lock_path, update, findings)
+    if updated:
+        print("xrlint: schemas.lock updated")
+        return 0
+    rule_float(files, findings)
+    rule_lock(files, findings)
+    rule_panic(files, findings)
+    rule_surface(files, src_root, findings)
+
+    for rule, rel, line, msg in sorted(findings.rows):
+        print(f"{rule} {rel}:{line} {msg}", file=sys.stderr)
+    if findings.rows:
+        print(
+            f"xrlint: {len(findings.rows)} finding(s) "
+            f"({findings.suppressed} suppressed) over {len(files)} file(s)",
+            file=sys.stderr,
+        )
+        return 1
+    print(f"xrlint: OK ({len(files)} files, {findings.suppressed} suppressed finding(s))")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())
