@@ -44,7 +44,7 @@ const VALUED: &[&str] = &[
     "cluster", "metric", "out", "artifacts", "engine", "seed", "beta", "ratio",
     "lifetime", "hours", "devices", "days", "workload", "cores", "csv-dir",
     "threads", "preset", "space", "max-evals", "cache-dir", "cache-budget", "resume",
-    "trace", "addr", "state-dir", "executors",
+    "trace", "addr", "state-dir", "executors", "auth-token",
 ];
 
 /// Flag names (no value). Anything after `--` that is in neither list is

@@ -410,6 +410,12 @@ impl ProfileCache {
         Ok(bytes.len() as u64)
     }
 
+    // xrverify: model(cache_eviction)
+    // Fenced: the store window + budget/eviction pass verified
+    // exhaustively by tools/xrverify/model_cache.py (every interleaving
+    // of two handles over one directory, bounded config). Editing this
+    // region without re-reviewing the model is a V001 finding.
+
     /// Write a profile back under its key: the JSON envelope (source of
     /// truth; temp file + rename, so concurrent readers never observe a
     /// partial envelope) plus the binary sidecar (best-effort — a
@@ -515,6 +521,7 @@ impl ProfileCache {
             file.filter(|f| if exclusive { f.lock() } else { f.lock_shared() }.is_ok());
         DirLock { _file: file }
     }
+    // xrverify: endmodel(cache_eviction)
 
     /// Total bytes of envelope + sidecar files currently on disk
     /// (fresh directory scan — test/report surface).
@@ -545,6 +552,7 @@ struct DiskEntry {
     mtime: Option<std::time::SystemTime>,
 }
 
+// xrverify: model(cache_eviction)
 /// Victim ordering of the eviction pass: in-process recency rank first
 /// (untouched entries evict before anything touched this process), then
 /// write generation oldest-first — an *unknown* generation ranking
@@ -568,6 +576,7 @@ fn eviction_order(
 fn never_evict(touched: &BTreeMap<CacheKey, u64>, e: &DiskEntry) -> bool {
     e.mtime.is_none() && !touched.contains_key(&e.key)
 }
+// xrverify: endmodel(cache_eviction)
 
 fn scan_entries(dir: &Path) -> Vec<DiskEntry> {
     let mut map: BTreeMap<CacheKey, DiskEntry> = BTreeMap::new();

@@ -113,6 +113,14 @@ impl Coalescer {
         Coalescer::default()
     }
 
+    // xrverify: model(coalescer)
+    // Fenced: the admission protocol verified exhaustively by
+    // tools/xrverify/model_coalescer.py (3 requesters, one key, leader
+    // death injected; every interleaving). The check-then-insert below
+    // is ONE critical section — splitting it is the model's
+    // `begin_race` seeded bug. Editing fenced code without re-reviewing
+    // the model is a V001 finding.
+
     /// Admit a cache-missing request for `key`: the first requester
     /// leads, everyone else waits.
     pub fn begin(&self, key: CacheKey) -> Admission<'_> {
@@ -128,6 +136,7 @@ impl Coalescer {
         self.led.fetch_add(1, Ordering::Relaxed);
         Admission::Lead(LeadGuard { co: self, key, slot, resolved: false })
     }
+    // xrverify: endmodel(coalescer)
 
     /// Counter snapshot.
     pub fn stats(&self) -> CoalesceStats {
@@ -144,6 +153,7 @@ impl Coalescer {
     }
 }
 
+// xrverify: model(coalescer)
 /// Leadership of one in-flight key. Publish exactly once; dropping the
 /// guard without publishing poisons the slot so waiters fall back to
 /// computing themselves instead of blocking forever.
@@ -225,6 +235,7 @@ impl Waiter<'_> {
         }
     }
 }
+// xrverify: endmodel(coalescer)
 
 #[cfg(test)]
 mod tests {

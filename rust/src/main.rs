@@ -105,11 +105,14 @@ COMMANDS
                                                     --executors N (default 2)
                                                     --cache-dir DIR
                                                     --cache-budget N[K|M|G]
-                                                    --threads N]
+                                                    --threads N
+                                                    --auth-token TOKEN]
               jobs persist under --state-dir as spec + checkpoint files;
               a restarted server resumes every unfinished job
               bit-identically. Endpoints: POST /v1/sweep, POST /v1/search,
               GET /v1/jobs/<id>, GET /v1/jobs/<id>/result, GET /v1/stats
+              with --auth-token every request must carry
+              `Authorization: Bearer TOKEN` or it is rejected with 401
   all         run everything above in order
 
 GLOBAL OPTIONS
@@ -431,6 +434,7 @@ fn run_serve(args: &Args) -> anyhow::Result<()> {
         cache_budget,
         threads: args.get_usize("threads", 0)?,
         engine: args.get("engine", "auto").to_string(),
+        auth_token: args.options.get("auth-token").cloned(),
     };
     let service = std::sync::Arc::new(xrcarbon::service::Service::open(cfg)?);
     let addr = args.get("addr", "127.0.0.1:7878");

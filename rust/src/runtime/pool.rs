@@ -141,6 +141,12 @@ impl WorkerPool {
         }
         drop(reply_tx);
 
+        // xrverify: model(worker_pool)
+        // Fenced: the collector protocol verified exhaustively by
+        // tools/xrverify/model_pool.py (2 workers × 3 envelopes, failures
+        // injected; every interleaving): exactly one reply per envelope,
+        // lowest-indexed error wins, slot-indexed merge. Editing fenced
+        // code without re-reviewing the model is a V001 finding.
         let mut slots: Vec<Option<R>> = (0..n).map(|_| None).collect();
         let mut first_err: Option<(usize, anyhow::Error)> = None;
         let mut first_panic: Option<(usize, Box<dyn Any + Send>)> = None;
@@ -177,6 +183,7 @@ impl WorkerPool {
         // xrlint: allow(panic, "n replies received and panics/errors returned early above")
         let out = slots.into_iter().map(|s| s.expect("work item left unevaluated")).collect();
         Ok((out, self.workers.min(n)))
+        // xrverify: endmodel(worker_pool)
     }
 }
 
@@ -191,6 +198,7 @@ impl Drop for WorkerPool {
     }
 }
 
+// xrverify: model(worker_pool)
 fn worker_loop(
     factory: Arc<dyn EngineFactory>,
     jobs: Arc<Mutex<Receiver<Envelope>>>,
@@ -249,6 +257,7 @@ fn worker_loop(
         }
     }
 }
+// xrverify: endmodel(worker_pool)
 
 thread_local! {
     /// Per-thread pool registry. Thread-local (not global) so parallel

@@ -11,7 +11,9 @@
 //!
 //! Deliberately minimal: one request per connection (`Connection:
 //! close`), no chunked bodies, no TLS — the server is a trusted-network
-//! lab tool, not an internet-facing daemon.
+//! lab tool, not an internet-facing daemon. With `--auth-token TOKEN`
+//! every request additionally needs `Authorization: Bearer TOKEN`
+//! (compared in constant time) or it is 401'd before routing.
 
 use std::io::{Read, Write};
 use std::net::{SocketAddr, TcpListener, TcpStream};
@@ -236,6 +238,7 @@ fn handle_connection(service: &Service, mut stream: TcpStream) -> std::io::Resul
         _ => return respond(&mut stream, 400, &err_json("malformed request line")),
     };
     let mut content_length = 0usize;
+    let mut authorization: Option<String> = None;
     for line in lines {
         if let Some((k, v)) = line.split_once(':') {
             if k.trim().eq_ignore_ascii_case("content-length") {
@@ -245,7 +248,22 @@ fn handle_connection(service: &Service, mut stream: TcpStream) -> std::io::Resul
                         return respond(&mut stream, 400, &err_json("invalid content-length"))
                     }
                 };
+            } else if k.trim().eq_ignore_ascii_case("authorization") {
+                authorization = Some(v.trim().to_string());
             }
+        }
+    }
+    // Auth gate, before routing AND before the body read: an
+    // unauthenticated client must not be able to make the server buffer
+    // a megabyte of body it will never parse.
+    if let Some(expected) = service.cfg.auth_token.as_deref() {
+        let supplied = authorization.as_deref().and_then(|v| v.strip_prefix("Bearer "));
+        let ok = match supplied {
+            Some(token) => token_eq(token.trim(), expected),
+            None => false,
+        };
+        if !ok {
+            return respond(&mut stream, 401, &err_json("missing or invalid bearer token"));
         }
     }
     if content_length > 1 << 20 {
@@ -269,11 +287,26 @@ fn handle_connection(service: &Service, mut stream: TcpStream) -> std::io::Resul
     respond(&mut stream, status, &payload)
 }
 
+/// Constant-time token comparison: every byte of both strings is
+/// examined regardless of where they first differ, so the 401 latency
+/// does not leak how long a correct prefix the attacker has guessed.
+fn token_eq(supplied: &str, expected: &str) -> bool {
+    let (a, b) = (supplied.as_bytes(), expected.as_bytes());
+    let mut diff = a.len() ^ b.len();
+    for i in 0..a.len().max(b.len()) {
+        let x = a.get(i).copied().unwrap_or(0);
+        let y = b.get(i).copied().unwrap_or(0);
+        diff |= usize::from(x ^ y);
+    }
+    diff == 0
+}
+
 fn respond(stream: &mut TcpStream, status: u16, body: &str) -> std::io::Result<()> {
     let reason = match status {
         200 => "OK",
         202 => "Accepted",
         400 => "Bad Request",
+        401 => "Unauthorized",
         404 => "Not Found",
         405 => "Method Not Allowed",
         409 => "Conflict",
@@ -281,9 +314,10 @@ fn respond(stream: &mut TcpStream, status: u16, body: &str) -> std::io::Result<(
         431 => "Request Header Fields Too Large",
         _ => "Internal Server Error",
     };
+    let challenge = if status == 401 { "WWW-Authenticate: Bearer\r\n" } else { "" };
     let resp = format!(
         "HTTP/1.1 {status} {reason}\r\nContent-Type: application/json\r\nContent-Length: \
-         {}\r\nConnection: close\r\n\r\n{body}",
+         {}\r\n{challenge}Connection: close\r\n\r\n{body}",
         body.len()
     );
     stream.write_all(resp.as_bytes())
@@ -303,6 +337,7 @@ mod tests {
             cache_budget: None,
             threads: 1,
             engine: "host".to_string(),
+            auth_token: None,
         })
         .unwrap();
         (svc, dir)
@@ -340,6 +375,16 @@ mod tests {
         let stats = parse(&stats).unwrap();
         assert!(stats.get("cache").is_some() && stats.get("coalescer").is_some());
         std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn token_comparison_matches_exactly_and_only_exactly() {
+        assert!(token_eq("s3cret", "s3cret"));
+        assert!(!token_eq("s3cret", "s3creT"));
+        assert!(!token_eq("s3cre", "s3cret")); // prefix, shorter
+        assert!(!token_eq("s3cret!", "s3cret")); // prefix, longer
+        assert!(!token_eq("", "s3cret"));
+        assert!(token_eq("", "")); // vacuous but must not panic
     }
 
     #[test]

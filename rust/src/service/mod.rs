@@ -58,6 +58,12 @@ pub struct ServiceConfig {
     /// Engine selector: "host" forces the pure-Rust mirror, anything
     /// else auto-detects (PJRT when built in, host otherwise).
     pub engine: String,
+    /// Optional bearer token (`--auth-token`). When set, every HTTP
+    /// request must carry `Authorization: Bearer <token>` or it is
+    /// rejected with 401 before routing; the comparison is
+    /// constant-time so response latency leaks nothing about a prefix
+    /// match.
+    pub auth_token: Option<String>,
 }
 
 /// The resident exploration service: one shared cache + coalescer, a

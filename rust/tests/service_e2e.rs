@@ -41,6 +41,19 @@ fn open_service(dir: &Path) -> Service {
         cache_budget: None,
         threads: 1,
         engine: "host".to_string(),
+        auth_token: None,
+    })
+    .unwrap()
+}
+
+fn open_service_with_token(dir: &Path, token: &str) -> Service {
+    Service::open(ServiceConfig {
+        state_dir: dir.to_path_buf(),
+        cache_dir: None,
+        cache_budget: None,
+        threads: 1,
+        engine: "host".to_string(),
+        auth_token: Some(token.to_string()),
     })
     .unwrap()
 }
@@ -241,6 +254,61 @@ fn http_surface_round_trips_over_a_real_socket() {
     assert!(parse(&text).unwrap().get("coalescer").is_some());
     let (code, _) = http(addr, "GET", "/v1/nope", "");
     assert_eq!(code, 404);
+    std::fs::remove_dir_all(&dir).ok();
+}
+
+/// Like [`http`] but with an optional raw `Authorization` header value;
+/// returns the status code plus the whole response text (headers
+/// included, so the 401 challenge is assertable).
+fn http_auth(
+    addr: std::net::SocketAddr,
+    method: &str,
+    path: &str,
+    body: &str,
+    auth: Option<&str>,
+) -> (u16, String) {
+    let mut stream = TcpStream::connect(addr).unwrap();
+    let auth_line = auth.map(|v| format!("Authorization: {v}\r\n")).unwrap_or_default();
+    let req = format!(
+        "{method} {path} HTTP/1.1\r\nHost: test\r\n{auth_line}Content-Length: {}\r\n\r\n{body}",
+        body.len()
+    );
+    stream.write_all(req.as_bytes()).unwrap();
+    let mut raw = Vec::new();
+    stream.read_to_end(&mut raw).unwrap();
+    let text = String::from_utf8(raw).unwrap();
+    let status: u16 =
+        text.split_whitespace().nth(1).and_then(|s| s.parse().ok()).expect("status line");
+    (status, text)
+}
+
+#[test]
+fn auth_token_gates_every_request_with_401() {
+    let dir = test_dir("service_e2e_auth");
+    std::fs::remove_dir_all(&dir).ok();
+    let svc = Arc::new(open_service_with_token(&dir, "s3cret-token"));
+    let addr = spawn_listener(Arc::clone(&svc), "127.0.0.1:0").unwrap();
+
+    // Missing header: 401 with the Bearer challenge, before routing.
+    let (code, text) = http_auth(addr, "GET", "/v1/stats", "", None);
+    assert_eq!(code, 401, "{text}");
+    assert!(text.contains("WWW-Authenticate: Bearer"), "{text}");
+    // Wrong token, a strict prefix of the real one, and the right
+    // credential under the wrong scheme are all equally 401.
+    assert_eq!(http_auth(addr, "GET", "/v1/stats", "", Some("Bearer wrong")).0, 401);
+    assert_eq!(http_auth(addr, "GET", "/v1/stats", "", Some("Bearer s3cret")).0, 401);
+    assert_eq!(http_auth(addr, "GET", "/v1/stats", "", Some("Basic s3cret-token")).0, 401);
+    // Unauthenticated submissions never reach the router: 401, not 202.
+    let (code, _) = http_auth(addr, "POST", "/v1/sweep", r#"{"preset":"fig7"}"#, None);
+    assert_eq!(code, 401);
+
+    // The correct token restores normal routing end to end.
+    let token = Some("Bearer s3cret-token");
+    let (code, text) = http_auth(addr, "GET", "/v1/stats", "", token);
+    assert_eq!(code, 200, "{text}");
+    assert_eq!(http_auth(addr, "GET", "/v1/nope", "", token).0, 404);
+    let (code, text) = http_auth(addr, "POST", "/v1/sweep", r#"{"preset":"fig7","threads":1}"#, token);
+    assert_eq!(code, 202, "{text}");
     std::fs::remove_dir_all(&dir).ok();
 }
 

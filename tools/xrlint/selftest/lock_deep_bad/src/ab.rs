@@ -1,0 +1,36 @@
+// BAD: the cycle only appears three calls deep. `front` holds `a` and
+// calls `mid_b`, which calls `leaf_b`, which takes `b`; `back` holds
+// `b` and calls `mid_a` -> `leaf_a`, which takes `a`. One-level callee
+// summaries saw no locks on `mid_b`/`mid_a` and missed both edges; the
+// interprocedural fixpoint closes the chain and reports L001.
+impl Pair {
+    fn leaf_b(&self) {
+        let g = self.b.lock().unwrap_or_else(std::sync::PoisonError::into_inner);
+        drop(g);
+    }
+
+    fn mid_b(&self) {
+        self.leaf_b();
+    }
+
+    fn front(&self) {
+        let g = self.a.lock().unwrap_or_else(std::sync::PoisonError::into_inner);
+        self.mid_b();
+        drop(g);
+    }
+
+    fn leaf_a(&self) {
+        let g = self.a.lock().unwrap_or_else(std::sync::PoisonError::into_inner);
+        drop(g);
+    }
+
+    fn mid_a(&self) {
+        self.leaf_a();
+    }
+
+    fn back(&self) {
+        let g = self.b.lock().unwrap_or_else(std::sync::PoisonError::into_inner);
+        self.mid_a();
+        drop(g);
+    }
+}

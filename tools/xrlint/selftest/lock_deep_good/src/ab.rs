@@ -1,0 +1,26 @@
+// GOOD: both outer functions hold `a` while reaching `b` through the
+// same two-call chain — every transitive edge is a -> b, acyclic. This
+// guards the fixpoint against manufacturing false edges out of deep
+// `self.` call chains.
+impl Pair {
+    fn leaf_b(&self) {
+        let g = self.b.lock().unwrap_or_else(std::sync::PoisonError::into_inner);
+        drop(g);
+    }
+
+    fn mid_b(&self) {
+        self.leaf_b();
+    }
+
+    fn front(&self) {
+        let g = self.a.lock().unwrap_or_else(std::sync::PoisonError::into_inner);
+        self.mid_b();
+        drop(g);
+    }
+
+    fn back(&self) {
+        let g = self.a.lock().unwrap_or_else(std::sync::PoisonError::into_inner);
+        self.mid_b();
+        drop(g);
+    }
+}

@@ -93,6 +93,10 @@ def main():
     expect_pass("float_good", case_lock("float_good"))
     expect_fail("lock_bad", ["L001", "L002"], case_lock("lock_bad"))
     expect_pass("lock_good", case_lock("lock_good"))
+    # Interprocedural fixpoint: the cycle sits three calls deep, where
+    # one-level callee summaries were blind.
+    expect_fail("lock_deep_bad", ["L001"], case_lock("lock_deep_bad"))
+    expect_pass("lock_deep_good", case_lock("lock_deep_good"))
     expect_fail("panic_bad", ["P001"], case_lock("panic_bad"))
     expect_pass("panic_good", case_lock("panic_good"))
     expect_fail("surface_bad", ["C001", "C002"], case_lock("surface_bad"))
@@ -107,6 +111,32 @@ def main():
                 "--schemas-lock", case_lock("panic_bad"), "--baseline", baseline)
         check("baseline suppresses panic_bad", r.returncode == 0,
               r.stdout + r.stderr)
+
+        # Stale-baseline detection: an entry that suppresses nothing is
+        # itself a B001 finding...
+        with open(baseline, "w", encoding="utf-8") as fh:
+            fh.write("# legacy debt\n")
+            fh.write("P001|service/h.rs|unwrap\n")
+            fh.write("L001|nowhere.rs|no such cycle\n")
+        r = run(os.path.join(SELFTEST, "panic_bad", "src"),
+                "--schemas-lock", case_lock("panic_bad"), "--baseline", baseline)
+        out = r.stdout + r.stderr
+        check("stale baseline entry fails with B001",
+              r.returncode == 1 and "B001" in out and "no such cycle" in out, out)
+        # ...and --prune-baseline rewrites the file keeping only the
+        # entries (and comments) that earned their keep.
+        r = run(os.path.join(SELFTEST, "panic_bad", "src"),
+                "--schemas-lock", case_lock("panic_bad"), "--baseline", baseline,
+                "--prune-baseline")
+        with open(baseline, encoding="utf-8") as fh:
+            pruned = fh.read()
+        check("--prune-baseline drops the stale entry",
+              r.returncode == 0 and "no such cycle" not in pruned
+              and "P001|service/h.rs|unwrap" in pruned and "# legacy debt" in pruned,
+              r.stdout + r.stderr + "\n--- baseline after prune ---\n" + pruned)
+        r = run(os.path.join(SELFTEST, "panic_bad", "src"),
+                "--schemas-lock", case_lock("panic_bad"), "--baseline", baseline)
+        check("clean after prune", r.returncode == 0, r.stdout + r.stderr)
 
     # 2. The real repo lints clean with the checked-in schemas.lock.
     r = run(os.path.join(REPO, "rust", "src"))

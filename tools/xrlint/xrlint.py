@@ -21,9 +21,14 @@ Rule families (each suppressible, see DESIGN.md §3.7):
   `mul_add` contraction (F003), thread spawns (F004). Unbalanced fences
   are R001; deleting a fence from a file that must carry one is R002.
 * L — lock order. Extracts Mutex/flock acquisition sites, builds the
-  acquired-while-held graph (one level of interprocedural summaries),
-  fails on cycles (L001) and on filesystem I/O performed while the
-  service registry lock is held (L002).
+  acquired-while-held graph (interprocedural: per-function acquisition
+  summaries are closed over the call graph to a fixpoint, so a lock
+  taken three calls deep still contributes edges at every transitive
+  caller; the call graph covers free/path/`self.` calls resolved
+  same-file first, else to a globally unique definition — receiver-
+  dispatched method names and ambiguous cross-file names are excluded
+  as unresolvable), fails on cycles (L001) and on filesystem I/O
+  performed while the service registry lock is held (L002).
 * P — panic paths. `unwrap`/`expect`/`panic!`/indexing in `service/`
   and `runtime/pool.rs` must carry `// xrlint: allow(panic, "why")`.
 * C — surface consistency. CLI options registered in `cli/args.rs` vs
@@ -34,11 +39,15 @@ Suppression: `// xrlint: allow(<family>[, "reason"])` on the finding's
 line or the line above (family ∈ schema|float|lock|panic|surface; panic
 requires a non-empty reason). A baseline file (default
 tools/xrlint/baseline.txt, `RULE|path-substring|message-substring` per
-line) suppresses legacy findings wholesale.
+line) suppresses legacy findings wholesale. Baseline entries are debt,
+not configuration: an entry that suppressed nothing over a whole run is
+stale and becomes a B001 finding itself, so fixed debt cannot silently
+keep a suppression hole open; `--prune-baseline` rewrites the file with
+the stale entries removed.
 
 Usage:
   xrlint.py SRC_ROOT [--schemas-lock PATH] [--baseline PATH]
-            [--update-schemas-lock]
+            [--update-schemas-lock] [--prune-baseline]
 
 Exit 0 when clean, 1 on findings, 2 on usage/internal errors.
 """
@@ -268,6 +277,7 @@ class Findings:
     def __init__(self, baseline):
         self.rows = []
         self.baseline = baseline
+        self.baseline_hits = set()  # indices of entries that suppressed ≥1 finding
         self.suppressed = 0
 
     def add(self, rule, sf, line_idx, msg):
@@ -282,8 +292,9 @@ class Findings:
                 self.suppressed += 1
                 return
         rel = sf.rel if sf is not None else "<repo>"
-        for brule, bpath, bmsg in self.baseline:
+        for idx, (brule, bpath, bmsg, _lineno, _raw) in enumerate(self.baseline):
             if rule == brule and bpath in rel and bmsg in msg:
+                self.baseline_hits.add(idx)
                 self.suppressed += 1
                 return
         self.rows.append((rule, rel, line_idx + 1, msg))
@@ -501,6 +512,12 @@ def rule_float(files, findings):
 
 ACQUIRE = re.compile(r"(?:let\s+(?:mut\s+)?(\w+)\s*=\s*(?:match\s+)?)?([\w.()?*&]*?)\.lock(?:_shared)?\s*\(\)")
 
+# Call sites that feed the interprocedural summaries: free calls, path
+# calls (`Type::f(`) and `self.f(` — but NOT receiver-dispatched method
+# names (`map.get(`), which are unresolvable by name and collide across
+# files (`get`, `insert`, `clone` …), manufacturing false lock edges.
+CALL = re.compile(r"(?:(?<=self\.)|(?<![\w!.]))(\w+)\s*\(")
+
 
 def lock_name(rel, ident):
     for frag, field, name in LOCK_ALIASES:
@@ -525,11 +542,16 @@ def receiver_ident(sf, line_idx, recv):
 
 def rule_lock(files, findings):
     # Pass 1: per-function direct acquisitions + guard scopes + edges.
-    fn_locks = {}  # fn name -> set of lock names it acquires directly
+    # Summaries are keyed (file, fn name): bare-name keying merged every
+    # `new` in the repo into one summary, which under transitive closure
+    # manufactured lock edges (and cycles) out of `Vec::new(` calls.
+    fn_locks = {}  # (file, fn name) -> set of lock names acquired directly
+    defs = {}  # fn name -> set of files defining it
     per_fn = []  # (sf, fname, start, end)
     for sf in files:
         for fname, start, end in function_spans(sf):
             per_fn.append((sf, fname, start, end))
+            defs.setdefault(fname, set()).add(sf.rel)
             acquired = set()
             for i in range(start - 1, min(end, sf.test_start, len(sf.code_ns))):
                 for m in ACQUIRE.finditer(sf.code_ns[i]):
@@ -537,7 +559,45 @@ def rule_lock(files, findings):
                 if re.search(r"\.lock_dir\s*\(", sf.code_ns[i]):
                     acquired.add("cache.flock")
             if acquired:
-                fn_locks.setdefault(fname, set()).update(acquired)
+                fn_locks.setdefault((sf.rel, fname), set()).update(acquired)
+
+    def resolve(rel, callee):
+        """Callee name -> summary key: same-file definition first, else a
+        globally unique one; ambiguous cross-file names resolve to None
+        rather than to the union of every same-named function."""
+        homes = defs.get(callee)
+        if not homes:
+            return None
+        if rel in homes:
+            return (rel, callee)
+        if len(homes) == 1:
+            return (next(iter(homes)), callee)
+        return None
+
+    # Pass 1b: interprocedural fixpoint. Propagate each function's
+    # acquisition set up the call graph until nothing changes, so a lock
+    # taken N calls deep still contributes edges at every transitive
+    # caller — one-level summaries missed any chain longer than
+    # caller -> callee -> lock.
+    fn_calls = {}  # (file, fn name) -> set of resolved callee keys
+    for sf, fname, start, end in per_fn:
+        callees = fn_calls.setdefault((sf.rel, fname), set())
+        for i in range(start - 1, min(end, sf.test_start, len(sf.code_ns))):
+            for cm in CALL.finditer(sf.code_ns[i]):
+                key = resolve(sf.rel, cm.group(1))
+                if key is not None and key != (sf.rel, fname):
+                    callees.add(key)
+    changed = True
+    while changed:
+        changed = False
+        for caller, callees in fn_calls.items():
+            inherited = set()
+            for key in callees:
+                inherited |= fn_locks.get(key, set())
+            have = fn_locks.get(caller, set())
+            if not inherited <= have:
+                fn_locks[caller] = have | inherited
+                changed = True
 
     edges = {}  # (from, to) -> (rel, line)
     io_sites = []
@@ -562,15 +622,16 @@ def rule_lock(files, findings):
                         edges.setdefault((h, "cache.flock"), (sf.rel, i + 1))
                 if m.group(1) and m.group(1) != "_":
                     held.append(("cache.flock", m.group(1), depth))
-            # One-level interprocedural: calling a lock-acquiring fn
-            # while holding a lock creates the same edges.
+            # Interprocedural: calling a fn whose fixpoint-closed summary
+            # acquires locks, while holding a lock, creates the same edges
+            # as acquiring those locks here directly.
             if held:
-                for cm in re.finditer(r"(?<![\w!])(\w+)\s*\(", line):
-                    callee = cm.group(1)
-                    if callee == fname or callee not in fn_locks:
+                for cm in CALL.finditer(line):
+                    key = resolve(sf.rel, cm.group(1))
+                    if key is None or key == (sf.rel, fname) or key not in fn_locks:
                         continue
                     for h, _, _ in held:
-                        for inner in fn_locks[callee]:
+                        for inner in fn_locks[key]:
                             if inner != h:
                                 edges.setdefault((h, inner), (sf.rel, i + 1))
                 for h, _, _ in held:
@@ -760,24 +821,41 @@ def _find_up(start, name, levels=4):
 # --- driver ----------------------------------------------------------------
 
 def load_baseline(path):
+    """Entries as (rule, path-sub, msg-sub, lineno, raw-line) so stale
+    entries can be reported at their own file:line and pruned by text."""
     rows = []
     if path and os.path.exists(path):
         with open(path, encoding="utf-8") as fh:
-            for line in fh:
+            for lineno, line in enumerate(fh, 1):
                 line = line.strip()
                 if not line or line.startswith("#"):
                     continue
                 parts = line.split("|", 2)
                 if len(parts) != 3:
                     fail(f"{path}: baseline line needs RULE|path-sub|msg-sub: {line}")
-                rows.append(tuple(parts))
+                rows.append((parts[0], parts[1], parts[2], lineno, line))
     return rows
+
+
+def prune_baseline(path, baseline, hits):
+    """Rewrite the baseline keeping comments, blanks, and entries that
+    suppressed at least one finding this run."""
+    live = {raw for idx, (_r, _p, _m, _ln, raw) in enumerate(baseline) if idx in hits}
+    kept = []
+    with open(path, encoding="utf-8") as fh:
+        for line in fh:
+            s = line.strip()
+            if not s or s.startswith("#") or s in live:
+                kept.append(line)
+    with open(path, "w", encoding="utf-8") as fh:
+        fh.writelines(kept)
 
 
 def main():
     argv = sys.argv[1:]
     update = "--update-schemas-lock" in argv
-    argv = [a for a in argv if a != "--update-schemas-lock"]
+    prune = "--prune-baseline" in argv
+    argv = [a for a in argv if a not in ("--update-schemas-lock", "--prune-baseline")]
     lock_path = None
     baseline_path = None
     pos = []
@@ -795,7 +873,8 @@ def main():
             pos.append(argv[i])
         i += 1
     if len(pos) != 1:
-        fail("usage: xrlint.py SRC_ROOT [--schemas-lock PATH] [--baseline PATH] [--update-schemas-lock]")
+        fail("usage: xrlint.py SRC_ROOT [--schemas-lock PATH] [--baseline PATH] "
+             "[--update-schemas-lock] [--prune-baseline]")
     src_root = pos[0]
     if not os.path.isdir(src_root):
         fail(f"{src_root}: not a directory")
@@ -825,6 +904,31 @@ def main():
     rule_lock(files, findings)
     rule_panic(files, findings)
     rule_surface(files, src_root, findings)
+
+    # Stale-baseline audit: an entry that suppressed nothing over the
+    # whole run guards debt that no longer exists — flag it (B001) so the
+    # suppression hole closes, or drop it in place with --prune-baseline.
+    stale = [
+        (idx, entry) for idx, entry in enumerate(findings.baseline)
+        if idx not in findings.baseline_hits
+    ]
+    if prune:
+        if baseline_path is None or not os.path.exists(baseline_path):
+            fail("--prune-baseline: no baseline file to prune")
+        prune_baseline(baseline_path, findings.baseline, findings.baseline_hits)
+        print(
+            f"xrlint: baseline pruned — {len(stale)} stale entr"
+            f"{'y' if len(stale) == 1 else 'ies'} removed, "
+            f"{len(findings.baseline) - len(stale)} kept"
+        )
+    else:
+        for _idx, (brule, _bpath, _bmsg, lineno, raw) in stale:
+            findings.rows.append((
+                "B001", baseline_path, lineno,
+                f"stale baseline entry `{raw}` suppressed no {brule} finding this "
+                f"run — the debt it excused is gone; delete the line or run "
+                f"--prune-baseline",
+            ))
 
     for rule, rel, line, msg in sorted(findings.rows):
         print(f"{rule} {rel}:{line} {msg}", file=sys.stderr)

@@ -1,0 +1,166 @@
+"""Exhaustive bounded-interleaving explorer for xrverify protocol models.
+
+A model is a transition system over one explicit shared state:
+
+* ``initial()``      -> the starting state (a plain dict of plain data)
+* ``actions(state)`` -> every enabled scheduler choice as ``(label, next)``
+                        pairs — each pair is one thread taking one atomic
+                        step (or an environment event such as a crash)
+* ``check(state)``   -> a violation message, or ``None`` when every safety
+                        invariant holds in this state
+* ``check_final(s)`` -> called on states with no enabled action; ``None``
+                        means the run terminated acceptably, a message
+                        means deadlock / an unacceptable final state
+
+The explorer enumerates EVERY interleaving up to the model's bounded
+configuration with a breadth-first search over hashed states, so the
+first violation found is a minimal-depth counterexample.  After a clean
+sweep it runs a liveness pass: every reachable state must be able to
+reach an acceptable terminal state (backward reachability from the
+terminal-ok set over the recorded transition graph); a state that
+cannot — a cycle with no escape, e.g. a lost wakeup that parks a waiter
+forever behind a spinning peer — is reported with the trace that
+reaches it.
+
+Everything here is stdlib-only: the containers this repo grows in have
+no Rust toolchain (ROADMAP), so this explorer and xrlint are the
+verification layer that actually executes.
+"""
+
+import copy
+from collections import deque
+
+DEFAULT_MAX_STATES = 400_000
+
+
+def freeze(value):
+    """Canonical hashable form of a state built from dict/list/set/scalars."""
+    if isinstance(value, dict):
+        return ("d",) + tuple(sorted((k, freeze(v)) for k, v in value.items()))
+    if isinstance(value, (list, tuple)):
+        return ("l",) + tuple(freeze(v) for v in value)
+    if isinstance(value, (set, frozenset)):
+        return ("s",) + tuple(sorted(freeze(v) for v in value))
+    return value
+
+
+def clone(state):
+    """Successor builder: models mutate a deep copy, never the original."""
+    return copy.deepcopy(state)
+
+
+class Violation:
+    """kind is 'safety', 'deadlock' or 'liveness'; trace is the step-label
+    path from the initial state to the offending state."""
+
+    def __init__(self, kind, message, trace):
+        self.kind = kind
+        self.message = message
+        self.trace = trace
+
+    def render(self, model_name):
+        lines = [
+            f"xrverify: {self.kind} violation in model `{model_name}`",
+            f"  invariant: {self.message}",
+            f"  counterexample ({len(self.trace)} steps, minimal depth):",
+        ]
+        if not self.trace:
+            lines.append("    (violated in the initial state)")
+        for n, label in enumerate(self.trace, 1):
+            lines.append(f"    {n:3d}. {label}")
+        return "\n".join(lines)
+
+
+class Result:
+    def __init__(self, model_name, states, transitions, terminals, violation):
+        self.model_name = model_name
+        self.states = states
+        self.transitions = transitions
+        self.terminals = terminals
+        self.violation = violation
+
+    @property
+    def ok(self):
+        return self.violation is None
+
+
+def _trace_of(parents, key):
+    steps = []
+    while parents[key] is not None:
+        key, label = parents[key]
+        steps.append(label)
+    steps.reverse()
+    return steps
+
+
+def explore(model, max_states=DEFAULT_MAX_STATES):
+    init = model.initial()
+    k0 = freeze(init)
+    parents = {k0: None}  # key -> None | (parent key, step label)
+    states = {k0: init}
+    preds = {}  # key -> [predecessor keys] for the liveness pass
+    transitions = 0
+    terminal_ok = []
+
+    msg = model.check(init)
+    if msg is not None:
+        return Result(model.name, 1, 0, 0, Violation("safety", msg, []))
+
+    frontier = deque([k0])
+    while frontier:
+        key = frontier.popleft()
+        acts = model.actions(states[key])
+        if not acts:
+            fmsg = model.check_final(states[key])
+            if fmsg is not None:
+                return Result(
+                    model.name, len(parents), transitions, len(terminal_ok),
+                    Violation("deadlock", fmsg, _trace_of(parents, key)),
+                )
+            terminal_ok.append(key)
+            continue
+        for label, nxt in acts:
+            transitions += 1
+            nk = freeze(nxt)
+            preds.setdefault(nk, []).append(key)
+            if nk in parents:
+                continue
+            parents[nk] = (key, label)
+            states[nk] = nxt
+            smsg = model.check(nxt)
+            if smsg is not None:
+                return Result(
+                    model.name, len(parents), transitions, len(terminal_ok),
+                    Violation("safety", smsg, _trace_of(parents, nk)),
+                )
+            if len(parents) > max_states:
+                raise RuntimeError(
+                    f"model `{model.name}` exceeded {max_states} states — "
+                    f"tighten its bounded configuration"
+                )
+            frontier.append(nk)
+
+    # Liveness: backward reachability from the terminal-ok set.  Every
+    # reachable state must have SOME schedule that terminates acceptably;
+    # a state outside this set sits in a cycle (or feeds only cycles)
+    # with no escape — a livelock / lost-wakeup signature.
+    can_finish = set(terminal_ok)
+    work = deque(terminal_ok)
+    while work:
+        key = work.popleft()
+        for p in preds.get(key, ()):
+            if p not in can_finish:
+                can_finish.add(p)
+                work.append(p)
+    for key in parents:  # insertion order is BFS order => minimal depth first
+        if key not in can_finish:
+            return Result(
+                model.name, len(parents), transitions, len(terminal_ok),
+                Violation(
+                    "liveness",
+                    "state cannot reach any acceptable terminal state under "
+                    "any schedule (livelock / lost wakeup)",
+                    _trace_of(parents, key),
+                ),
+            )
+    return Result(model.name, len(parents), transitions, len(terminal_ok), None)

@@ -1,0 +1,243 @@
+"""Model `cache_eviction` — two ProfileCache handles over one directory.
+
+Mirrors the fenced protocol in rust/src/dse/cache.rs (see models.lock):
+``store()`` touches the key in the handle's recency map BEFORE any file
+lands, writes envelope then sidecar under a SHARED flock (each file
+individually atomic via temp+rename), and the budget pass rescans and
+deletes victims under the EXCLUSIVE flock, ranking candidates with
+``eviction_order`` (recency rank, then ``(mtime.is_none(), mtime)`` so a
+missing mtime parks "newest", then key) and skipping ``never_evict``
+entries (mtime None and foreign to this handle).  A reader validates the
+sidecar before returning a hit — an envelope without its sidecar is a
+miss, never data.
+
+Bounded configuration: handles w0 (stores "a") and w1 (stores "b", then
+loads "a"), a pre-existing foreign entry "old" (mtime 0) and a foreign
+metadata-race entry "m" (mtime None), budget 3 entries of size 1 — so
+the two stores overflow the budget by exactly one and every interleaving
+must evict exactly the LRU foreign victim ("old").
+
+Invariants checked in every reachable state:
+  * a handle's completed store is still on disk, envelope AND sidecar
+    (eviction never deletes a concurrent writer's just-stored entry);
+  * the mtime-None entry "m" is never evicted (the PR 8 inversion bug
+    stamped UNIX_EPOCH instead — "oldest, evict first");
+  * no reader ever returns a hit from a torn (sidecar-less) entry;
+  * flock sanity: the exclusive lock never coexists with shared holders.
+Terminal states additionally require the byte budget honored and both
+handles done.
+
+MUTATIONS seed real bugs (two of them the ones PRs 8–9 fixed by hand)
+and must each produce a counterexample trace — see test_xrverify.py.
+"""
+
+from explorer import clone
+
+BUDGET = 3  # entries (uniform size 1); stores push the total to 4
+
+MUTATIONS = {
+    "mtime_epoch_inversion": (
+        "mtime-read failure stamps UNIX_EPOCH instead of parking the entry "
+        "'newest, never evict' — the actual PR 8 bug: ranks it oldest and "
+        "evicts it first"
+    ),
+    "touch_rank_inverted": (
+        "eviction_order compares recency ranks in descending order, so the "
+        "handle's own just-touched entry sorts FIRST instead of last"
+    ),
+    "eviction_noop": (
+        "the exclusive-lock budget pass returns without deleting anything, "
+        "so the size budget is never honored"
+    ),
+    "trust_envelope": (
+        "the reader returns a hit from the envelope without validating the "
+        "sidecar — observes a torn entry mid-store"
+    ),
+}
+
+
+class CacheModel:
+    name = "cache_eviction"
+
+    def __init__(self, mutation=None):
+        if mutation is not None and mutation not in MUTATIONS:
+            raise ValueError(f"unknown cache mutation {mutation!r}")
+        self.mutation = mutation
+
+    # -- state ---------------------------------------------------------------
+
+    def initial(self):
+        return {
+            # key -> {env, side, mtime}; each file individually atomic.
+            "disk": {
+                "old": {"env": True, "side": True, "mtime": 0},
+                "m": {"env": True, "side": True, "mtime": None},
+            },
+            "lock": {"ex": None, "sh": []},  # advisory flock on <dir>/.lock
+            "clock": 10,  # mtime source for new envelopes
+            "threads": {
+                "w0": {"pc": "touch", "key": "a", "touched": {}, "seq": 1},
+                "w1": {"pc": "touch", "key": "b", "touched": {}, "seq": 1},
+            },
+            "stored": {},  # tid -> key once its store completed
+            "torn_hit": None,  # key, if a reader returned torn data
+        }
+
+    # -- transition relation -------------------------------------------------
+
+    def actions(self, s):
+        acts = []
+        for tid in ("w0", "w1"):
+            th = s["threads"][tid]
+            pc = th["pc"]
+            k = th["key"]
+            lock = s["lock"]
+            if pc == "touch":
+                n = clone(s)
+                t = n["threads"][tid]
+                # touch-before-write: the eviction pass must never rank a
+                # just-written entry as untouched.
+                t["touched"][k] = t["seq"]
+                t["seq"] += 1
+                t["pc"] = "lock_sh"
+                acts.append((f"{tid}: touch({k}) before any file lands", n))
+            elif pc == "lock_sh" and lock["ex"] is None:
+                n = clone(s)
+                n["lock"]["sh"] = sorted(n["lock"]["sh"] + [tid])
+                n["threads"][tid]["pc"] = "write_env"
+                acts.append((f"{tid}: acquire SHARED flock for the store window", n))
+            elif pc == "write_env":
+                n = clone(s)
+                n["disk"][k] = {"env": True, "side": False, "mtime": n["clock"]}
+                n["clock"] += 1
+                n["threads"][tid]["pc"] = "write_side"
+                acts.append((f"{tid}: atomic_write envelope({k}) — entry now visible, torn", n))
+            elif pc == "write_side":
+                n = clone(s)
+                n["disk"][k]["side"] = True
+                n["threads"][tid]["pc"] = "unlock_sh"
+                acts.append((f"{tid}: atomic_write sidecar({k}) — entry complete", n))
+            elif pc == "unlock_sh":
+                n = clone(s)
+                n["lock"]["sh"] = [t for t in n["lock"]["sh"] if t != tid]
+                n["stored"][tid] = k
+                n["threads"][tid]["pc"] = "budget_check"
+                acts.append((f"{tid}: release SHARED flock — store({k}) done", n))
+            elif pc == "budget_check":
+                n = clone(s)
+                total = len(n["disk"])
+                n["threads"][tid]["pc"] = "lock_ex" if total > BUDGET else self._after_evict(tid)
+                acts.append((f"{tid}: account_write sees {total}/{BUDGET} entries", n))
+            elif pc == "lock_ex" and lock["ex"] is None and not lock["sh"]:
+                n = clone(s)
+                n["lock"]["ex"] = tid
+                n["threads"][tid]["pc"] = "evict"
+                acts.append((f"{tid}: acquire EXCLUSIVE flock for the eviction pass", n))
+            elif pc == "evict":
+                n = clone(s)
+                victims = self._evict(n, tid)
+                n["threads"][tid]["pc"] = "unlock_ex"
+                acts.append(
+                    (f"{tid}: rescan + evict under exclusive flock "
+                     f"(victims: {victims or 'none'})", n)
+                )
+            elif pc == "unlock_ex":
+                n = clone(s)
+                n["lock"]["ex"] = None
+                n["threads"][tid]["pc"] = self._after_evict(tid)
+                acts.append((f"{tid}: release EXCLUSIVE flock", n))
+            elif pc == "read_lock" and lock["ex"] is None:
+                n = clone(s)
+                n["lock"]["sh"] = sorted(n["lock"]["sh"] + [tid])
+                n["threads"][tid]["pc"] = "read"
+                acts.append((f"{tid}: acquire SHARED flock for load(a)", n))
+            elif pc == "read":
+                n = clone(s)
+                ent = n["disk"].get("a")
+                outcome = "miss"
+                if ent is not None and ent["env"]:
+                    if ent["side"]:
+                        outcome = "hit"
+                    elif self.mutation == "trust_envelope":
+                        outcome = "torn-hit"
+                        n["torn_hit"] = "a"
+                    # else: sidecar validation fails -> miss, never data
+                n["lock"]["sh"] = [t for t in n["lock"]["sh"] if t != tid]
+                n["threads"][tid]["pc"] = "done"
+                acts.append((f"{tid}: load(a) under shared flock -> {outcome}", n))
+        return acts
+
+    def _after_evict(self, tid):
+        return "read_lock" if tid == "w1" else "done"
+
+    # -- the eviction pass, transcribed from cache.rs ------------------------
+
+    def _order_key(self, touched, key, ent):
+        rank = touched.get(key, 0)
+        if self.mutation == "touch_rank_inverted":
+            rank = -rank
+        if self.mutation == "mtime_epoch_inversion":
+            # The pre-PR-8 policy: a missing mtime becomes UNIX_EPOCH,
+            # i.e. "oldest, evict first".
+            grp = (0, -1 if ent["mtime"] is None else ent["mtime"])
+        else:
+            grp = (1 if ent["mtime"] is None else 0, ent["mtime"] or 0)
+        return (rank, grp, key)
+
+    def _never_evict(self, touched, key, ent):
+        if self.mutation == "mtime_epoch_inversion":
+            return False  # the buggy policy had no such guard
+        return ent["mtime"] is None and key not in touched
+
+    def _evict(self, n, tid):
+        if self.mutation == "eviction_noop":
+            return []
+        touched = n["threads"][tid]["touched"]
+        total = len(n["disk"])
+        victims = []
+        for key in sorted(n["disk"], key=lambda k: self._order_key(touched, k, n["disk"][k])):
+            if total <= BUDGET:
+                break
+            if self._never_evict(touched, key, n["disk"][key]):
+                continue
+            if len(n["disk"]) - len(victims) <= 1:
+                break  # never evict the last remaining entry
+            victims.append(key)
+            total -= 1
+        for key in victims:
+            del n["disk"][key]
+        return victims
+
+    # -- invariants ----------------------------------------------------------
+
+    def check(self, s):
+        for tid, key in s["stored"].items():
+            ent = s["disk"].get(key)
+            if ent is None or not (ent["env"] and ent["side"]):
+                return (
+                    f"{tid}'s just-stored entry `{key}` was deleted (or torn) "
+                    f"by a concurrent eviction pass"
+                )
+        ent = s["disk"].get("m")
+        if ent is None:
+            return "the mtime-None entry `m` was evicted — None-mtime must park 'newest, never evict'"
+        if s["torn_hit"] is not None:
+            return f"a reader returned a hit from torn entry `{s['torn_hit']}` (envelope without sidecar)"
+        if s["lock"]["ex"] is not None and s["lock"]["sh"]:
+            return "flock broken: exclusive holder coexists with shared holders"
+        return None
+
+    def check_final(self, s):
+        if len(s["disk"]) > BUDGET:
+            return (
+                f"terminated with {len(s['disk'])} entries over the "
+                f"{BUDGET}-entry budget — budget must eventually be honored"
+            )
+        for tid, th in s["threads"].items():
+            if th["pc"] != "done":
+                return f"deadlock: {tid} stuck at pc `{th['pc']}`"
+        return None
+
+
+def build(mutation=None):
+    return CacheModel(mutation)

@@ -1,0 +1,281 @@
+"""Model `coalescer` — leader/waiter in-flight request coalescing.
+
+Mirrors the fenced protocol in rust/src/dse/coalesce.rs (see
+models.lock): ``begin()`` atomically (under the inflight-map mutex)
+either finds an existing slot for the key (-> waiter) or inserts a fresh
+``Pending`` slot (-> leader).  The leader re-checks the cache after
+winning leadership, computes, STORES the profile, and only then
+publishes ``Done`` — waiters are woken only after the entry is durable —
+then retires the slot from the inflight map.  A leader that dies before
+resolving poisons the slot (``Failed`` + notify) from its Drop guard, so
+waiters fall back to cache-then-local-compute instead of hanging.
+Checking the wait predicate and going to sleep is one atomic step (the
+slot mutex is held across ``Condvar::wait``), which is exactly what
+makes the protocol immune to lost wakeups — and what the ``begin_race``
+and ``lost_wakeup`` mutations break.
+
+Bounded configuration: three threads request the same key; the first
+leader may nondeterministically die mid-compute (one death budget).
+
+Invariants checked in every reachable state:
+  * store-before-publish: a slot is never ``Done`` while the cache is
+    still empty;
+  * exactly-one-leader: never two live leaders for the key;
+plus termination (no deadlock, no lost wakeup — via the explorer's
+liveness pass) and, in terminal states, every surviving thread holds the
+correct value and a death-free run computed exactly once.
+"""
+
+from explorer import clone
+
+VALUE = "V"
+
+MUTATIONS = {
+    "begin_race": (
+        "begin() checks the inflight map and inserts the slot as two "
+        "separate steps — two threads can both win leadership for one key"
+    ),
+    "publish_before_store": (
+        "the leader publishes Done before the cache store lands — waiters "
+        "wake to a value that is not durable yet"
+    ),
+    "lost_wakeup": (
+        "resolve() sets Done but forgets notify_all — a waiter already "
+        "asleep on the condvar never wakes"
+    ),
+    "no_poison_on_death": (
+        "the leader's Drop guard retires the slot without poisoning it — "
+        "sleeping waiters wait on Pending forever"
+    ),
+}
+
+
+class CoalescerModel:
+    name = "coalescer"
+
+    def __init__(self, mutation=None):
+        if mutation is not None and mutation not in MUTATIONS:
+            raise ValueError(f"unknown coalescer mutation {mutation!r}")
+        self.mutation = mutation
+
+    # -- state ---------------------------------------------------------------
+
+    def initial(self):
+        return {
+            "cache": None,  # the profile cache entry for the one key
+            "slots": [],  # slot objects live past retirement (Arc'd)
+            "inflight": None,  # index into slots, or None
+            "death_budget": 1,
+            "computes": 0,
+            "threads": {
+                t: {"pc": "check_cache", "role": None, "slot": None, "result": None}
+                for t in ("t0", "t1", "t2")
+            },
+        }
+
+    # -- transition relation -------------------------------------------------
+
+    def actions(self, s):
+        acts = []
+        for tid in sorted(s["threads"]):
+            th = s["threads"][tid]
+            pc = th["pc"]
+            if pc == "check_cache":
+                n = clone(s)
+                t = n["threads"][tid]
+                if n["cache"] is not None:
+                    t["result"] = n["cache"]
+                    t["pc"] = "done"
+                    acts.append((f"{tid}: cache hit before begin() — done", n))
+                else:
+                    t["pc"] = "begin_check" if self.mutation == "begin_race" else "begin"
+                    acts.append((f"{tid}: cache miss — entering begin()", n))
+            elif pc == "begin":
+                # Atomic under the inflight-map mutex: check + insert.
+                n = clone(s)
+                t = n["threads"][tid]
+                if n["inflight"] is not None:
+                    t["role"] = "waiter"
+                    t["slot"] = n["inflight"]
+                    t["pc"] = "wait"
+                    acts.append((f"{tid}: slot in flight — joining as waiter", n))
+                else:
+                    n["slots"].append({"state": "pending", "sleeping": []})
+                    n["inflight"] = len(n["slots"]) - 1
+                    t["role"] = "leader"
+                    t["slot"] = n["inflight"]
+                    t["pc"] = "recheck_cache"
+                    acts.append((f"{tid}: no slot in flight — won leadership", n))
+            elif pc == "begin_check":  # begin_race mutation: check...
+                n = clone(s)
+                t = n["threads"][tid]
+                if n["inflight"] is not None:
+                    t["role"] = "waiter"
+                    t["slot"] = n["inflight"]
+                    t["pc"] = "wait"
+                    acts.append((f"{tid}: [begin_race] saw a slot — joining as waiter", n))
+                else:
+                    t["pc"] = "begin_insert"
+                    acts.append((f"{tid}: [begin_race] saw no slot (map unlocked)", n))
+            elif pc == "begin_insert":  # ...then insert, racily
+                n = clone(s)
+                t = n["threads"][tid]
+                n["slots"].append({"state": "pending", "sleeping": []})
+                n["inflight"] = len(n["slots"]) - 1
+                t["role"] = "leader"
+                t["slot"] = n["inflight"]
+                t["pc"] = "recheck_cache"
+                acts.append((f"{tid}: [begin_race] inserted slot — claims leadership", n))
+            elif pc == "recheck_cache":
+                n = clone(s)
+                t = n["threads"][tid]
+                if n["cache"] is not None:
+                    t["pc"] = "publish"  # publish_cached: resolve with the cached value
+                    acts.append((f"{tid}: leader re-check found the cache warm", n))
+                else:
+                    t["pc"] = "compute"
+                    acts.append((f"{tid}: leader re-check still cold — computing", n))
+            elif pc == "compute":
+                n = clone(s)
+                n["computes"] += 1
+                n["threads"][tid]["pc"] = (
+                    "publish" if self.mutation == "publish_before_store" else "store"
+                )
+                acts.append((f"{tid}: leader ran the phase-A contraction", n))
+                if s["death_budget"] > 0:
+                    d = clone(s)
+                    d["death_budget"] -= 1
+                    d["threads"][tid]["pc"] = "poison"
+                    acts.append((f"{tid}: leader DIES mid-compute (Drop guard runs)", d))
+            elif pc == "store":
+                n = clone(s)
+                n["cache"] = VALUE
+                n["threads"][tid]["pc"] = "publish"
+                acts.append((f"{tid}: leader stored the entry (durable before publish)", n))
+            elif pc == "publish":
+                n = clone(s)
+                t = n["threads"][tid]
+                slot = n["slots"][t["slot"]]
+                slot["state"] = "done"
+                label = f"{tid}: leader set slot Done + notify_all"
+                if self.mutation != "lost_wakeup":
+                    for w in slot["sleeping"]:
+                        n["threads"][w]["pc"] = "consume"
+                    slot["sleeping"] = []
+                else:
+                    label = f"{tid}: [lost_wakeup] leader set slot Done, FORGOT notify_all"
+                if self.mutation == "publish_before_store":
+                    t["pc"] = "late_store"
+                else:
+                    t["result"] = VALUE
+                    t["pc"] = "retire"
+                acts.append((label, n))
+            elif pc == "late_store":  # publish_before_store mutation tail
+                n = clone(s)
+                n["cache"] = VALUE
+                n["threads"][tid]["result"] = VALUE
+                n["threads"][tid]["pc"] = "retire"
+                acts.append((f"{tid}: [publish_before_store] store lands after publish", n))
+            elif pc == "retire":
+                n = clone(s)
+                t = n["threads"][tid]
+                if n["inflight"] == t["slot"]:
+                    n["inflight"] = None
+                t["pc"] = "done"
+                acts.append((f"{tid}: leader removed the slot from the inflight map", n))
+            elif pc == "poison":
+                n = clone(s)
+                t = n["threads"][tid]
+                slot = n["slots"][t["slot"]]
+                if self.mutation != "no_poison_on_death":
+                    slot["state"] = "failed"
+                    for w in slot["sleeping"]:
+                        n["threads"][w]["pc"] = "consume"
+                    slot["sleeping"] = []
+                if n["inflight"] == t["slot"]:
+                    n["inflight"] = None
+                t["result"] = "DEAD"
+                t["pc"] = "done"
+                acts.append((f"{tid}: Drop guard poisons slot (Failed + notify) + retires it", n))
+            elif pc == "wait":
+                # One atomic step: predicate check + sleep, slot mutex held
+                # across Condvar::wait — the no-lost-wakeup guarantee.
+                n = clone(s)
+                t = n["threads"][tid]
+                slot = n["slots"][t["slot"]]
+                if slot["state"] != "pending":
+                    t["pc"] = "consume"
+                    acts.append((f"{tid}: wait predicate already resolved — no sleep", n))
+                else:
+                    slot["sleeping"] = sorted(slot["sleeping"] + [tid])
+                    t["pc"] = "sleeping"
+                    acts.append((f"{tid}: slot Pending — waiter sleeps on the condvar", n))
+            elif pc == "sleeping":
+                pass  # only a notify can wake this thread
+            elif pc == "consume":
+                n = clone(s)
+                t = n["threads"][tid]
+                slot = n["slots"][t["slot"]]
+                if slot["state"] == "done":
+                    t["result"] = VALUE
+                    t["pc"] = "done"
+                    acts.append((f"{tid}: waiter woke to Done — took the value", n))
+                elif slot["state"] == "failed":
+                    t["pc"] = "fallback"
+                    acts.append((f"{tid}: waiter woke to Failed — falling back", n))
+                else:  # spurious-looking wake on Pending: loop back to wait
+                    t["pc"] = "wait"
+                    acts.append((f"{tid}: waiter woke to Pending — re-arming wait", n))
+            elif pc == "fallback":
+                n = clone(s)
+                t = n["threads"][tid]
+                if n["cache"] is not None:
+                    t["result"] = n["cache"]
+                    acts.append((f"{tid}: fallback found the cache warm", n))
+                else:
+                    n["computes"] += 1
+                    n["cache"] = VALUE
+                    t["result"] = VALUE
+                    acts.append((f"{tid}: fallback computed locally (leader died)", n))
+                t["pc"] = "done"
+        return acts
+
+    # -- invariants ----------------------------------------------------------
+
+    def check(self, s):
+        for slot in s["slots"]:
+            if slot["state"] == "done" and s["cache"] is None:
+                return (
+                    "slot published Done while the cache is still empty — "
+                    "store-before-publish violated (waiters may read a "
+                    "non-durable value)"
+                )
+        live_leaders = [
+            t for t, th in s["threads"].items()
+            if th["role"] == "leader" and th["pc"] in
+            ("recheck_cache", "compute", "store", "publish", "late_store")
+        ]
+        if len(live_leaders) > 1:
+            return (
+                f"two live leaders for one key ({', '.join(sorted(live_leaders))}) — "
+                f"exactly-one-leader violated, the contraction will run twice"
+            )
+        return None
+
+    def check_final(self, s):
+        deaths = 1 - s["death_budget"]
+        for tid, th in s["threads"].items():
+            if th["pc"] != "done":
+                return f"deadlock: {tid} stuck at pc `{th['pc']}` (slot never resolved?)"
+            if th["result"] not in (VALUE, "DEAD"):
+                return f"{tid} terminated with wrong value {th['result']!r}"
+        if deaths == 0 and s["computes"] != 1:
+            return (
+                f"death-free run performed {s['computes']} contractions for one "
+                f"key — coalescing must make it exactly one"
+            )
+        return None
+
+
+def build(mutation=None):
+    return CoalescerModel(mutation)

@@ -1,0 +1,218 @@
+"""Model `worker_pool` — fail-fast MPMC scheduling with indexed merge.
+
+Mirrors the fenced protocol in rust/src/runtime/pool.rs (see
+models.lock): workers claim envelopes off one shared channel (the recv
+is atomic under the receiver mutex), check the batch's abort flag at
+claim time — a set flag means reply ``Skipped`` without executing — and
+otherwise run the task; a task failure sets the abort flag and replies
+with the error.  The collector receives EXACTLY one reply per envelope,
+keeps the LOWEST-indexed error seen so far (``is_none_or(|(j, _)| i <
+*j)``), and on an error-free batch fills result slots by envelope index,
+so the merged output is interleaving-independent.  An in-flight task is
+deliberately NOT interrupted when another worker fails — only future
+claims observe the abort.
+
+Bounded configuration: 2 workers, 3 envelopes; tasks 1 and 2 may
+nondeterministically fail (scheduler choice), task 0 always succeeds.
+
+Invariants checked in every reachable state:
+  * no worker executes an envelope whose claim-time abort check observed
+    the flag set (fail-fast: abort stops all claims after first failure);
+and in terminal states:
+  * exactly one reply per envelope (none lost, none duplicated);
+  * if any task errored, the collector reports the lowest-indexed error
+    among the errors that actually ran, in EVERY interleaving;
+  * an error-free batch merges to the slot-ordered outputs regardless of
+    claim order or reply arrival order.
+"""
+
+from explorer import clone
+
+N_TASKS = 3
+FAILABLE = {1, 2}
+
+
+def _task_value(i):
+    return i * 10
+
+
+MUTATIONS = {
+    "first_error_by_arrival": (
+        "the collector keeps the first error RECEIVED instead of the "
+        "lowest-indexed one — the reported error depends on reply timing"
+    ),
+    "no_abort_check": (
+        "workers skip the claim-time abort check and execute every "
+        "envelope even after a failure poisoned the batch"
+    ),
+    "skip_without_reply": (
+        "an aborted claim returns to the loop without sending Skipped — "
+        "the collector waits for a reply that never comes"
+    ),
+    "merge_by_arrival": (
+        "the collector appends results in reply-arrival order instead of "
+        "by envelope index — the merge depends on the interleaving"
+    ),
+}
+
+
+class PoolModel:
+    name = "worker_pool"
+
+    def __init__(self, mutation=None):
+        if mutation is not None and mutation not in MUTATIONS:
+            raise ValueError(f"unknown pool mutation {mutation!r}")
+        self.mutation = mutation
+
+    # -- state ---------------------------------------------------------------
+
+    def initial(self):
+        return {
+            "queue": list(range(N_TASKS)),  # the MPMC channel
+            "abort": False,
+            "replies": [],  # (kind, idx, value) in send order
+            "workers": {
+                w: {"pc": "claim", "env": None, "observed_abort": False}
+                for w in ("wa", "wb")
+            },
+            "collector": {
+                "received": 0,
+                "first_err": None,
+                "slots": {},
+                "arrival": [],
+                "result": None,
+                "pc": "recv",
+            },
+        }
+
+    # -- transition relation -------------------------------------------------
+
+    def actions(self, s):
+        acts = []
+        for wid in sorted(s["workers"]):
+            w = s["workers"][wid]
+            if w["pc"] == "claim":
+                n = clone(s)
+                nw = n["workers"][wid]
+                if n["queue"]:
+                    nw["env"] = n["queue"].pop(0)
+                    nw["pc"] = "check"
+                    acts.append((f"{wid}: recv envelope {nw['env']} off the channel", n))
+                else:
+                    nw["pc"] = "done"
+                    acts.append((f"{wid}: channel drained — worker exits", n))
+            elif w["pc"] == "check":
+                n = clone(s)
+                nw = n["workers"][wid]
+                i = nw["env"]
+                nw["observed_abort"] = n["abort"]
+                if n["abort"] and self.mutation != "no_abort_check":
+                    if self.mutation != "skip_without_reply":
+                        n["replies"].append(("skipped", i, None))
+                    nw["env"] = None
+                    nw["pc"] = "claim"
+                    acts.append((f"{wid}: abort set at claim — envelope {i} Skipped", n))
+                else:
+                    nw["pc"] = "exec"
+                    acts.append((f"{wid}: abort clear at claim of envelope {i} — running"
+                                 if not n["abort"] else
+                                 f"{wid}: [no_abort_check] runs envelope {i} despite abort", n))
+            elif w["pc"] == "exec":
+                i = w["env"]
+                n = clone(s)
+                nw = n["workers"][wid]
+                n["replies"].append(("ok", i, _task_value(i)))
+                nw["env"] = None
+                nw["observed_abort"] = False
+                nw["pc"] = "claim"
+                acts.append((f"{wid}: task {i} succeeded — replied Done(Ok)", n))
+                if i in FAILABLE:
+                    f = clone(s)
+                    fw = f["workers"][wid]
+                    f["abort"] = True
+                    f["replies"].append(("err", i, None))
+                    fw["env"] = None
+                    fw["observed_abort"] = False
+                    fw["pc"] = "claim"
+                    acts.append((f"{wid}: task {i} FAILED — abort set, replied Done(Err)", f))
+
+        col = s["collector"]
+        if col["pc"] == "recv" and col["received"] < len(s["replies"]):
+            n = clone(s)
+            c = n["collector"]
+            kind, i, value = n["replies"][c["received"]]
+            c["received"] += 1
+            if kind == "err":
+                if self.mutation == "first_error_by_arrival":
+                    if c["first_err"] is None:
+                        c["first_err"] = i
+                elif c["first_err"] is None or i < c["first_err"]:
+                    c["first_err"] = i
+            elif kind == "ok":
+                c["slots"][i] = value
+                c["arrival"].append(value)
+            if c["received"] == N_TASKS:
+                c["pc"] = "finish"
+            acts.append((f"collector: received {kind}({i}) "
+                         f"[{c['received']}/{N_TASKS}]", n))
+        elif col["pc"] == "finish":
+            n = clone(s)
+            c = n["collector"]
+            if c["first_err"] is not None:
+                c["result"] = ("err", c["first_err"])
+            elif self.mutation == "merge_by_arrival":
+                c["result"] = ("ok", list(c["arrival"]))
+            else:
+                c["result"] = ("ok", [c["slots"][i] for i in sorted(c["slots"])])
+            c["pc"] = "done"
+            acts.append((f"collector: merged result {c['result']}", n))
+        return acts
+
+    # -- invariants ----------------------------------------------------------
+
+    def check(self, s):
+        for wid, w in s["workers"].items():
+            if w["pc"] == "exec" and w["observed_abort"]:
+                return (
+                    f"{wid} is executing envelope {w['env']} although its "
+                    f"claim-time check observed the abort flag — fail-fast "
+                    f"must stop every claim after the first failure"
+                )
+        return None
+
+    def check_final(self, s):
+        for wid, w in s["workers"].items():
+            if w["pc"] != "done":
+                return f"deadlock: worker {wid} stuck at pc `{w['pc']}`"
+        col = s["collector"]
+        if col["pc"] != "done":
+            return (
+                f"deadlock: collector stuck at pc `{col['pc']}` with "
+                f"{col['received']}/{N_TASKS} replies — some envelope never "
+                f"got its exactly-one reply"
+            )
+        idxs = sorted(i for _, i, _ in s["replies"])
+        if idxs != list(range(N_TASKS)):
+            return f"reply multiset {idxs} != one reply per envelope"
+        errs = sorted(i for kind, i, _ in s["replies"] if kind == "err")
+        kind, payload = col["result"]
+        if errs:
+            if kind != "err" or payload != errs[0]:
+                return (
+                    f"errors {errs} occurred but the collector reported "
+                    f"{col['result']} — the LOWEST-indexed error must win in "
+                    f"every interleaving"
+                )
+        else:
+            expected = [_task_value(i) for i in range(N_TASKS)]
+            if kind != "ok" or payload != expected:
+                return (
+                    f"error-free batch merged to {col['result']} instead of "
+                    f"{('ok', expected)} — merge order must be "
+                    f"interleaving-independent"
+                )
+        return None
+
+
+def build(mutation=None):
+    return PoolModel(mutation)

@@ -1,0 +1,290 @@
+"""Model `job_registry` — crash-resumable enqueue/complete persistence.
+
+Mirrors the fenced protocol in rust/src/service/jobs.rs (see
+models.lock): ``enqueue`` allocates the id inside one registry critical
+section, atomic-writes the spec OUTSIDE the lock (the PR 9 L002 fix —
+disk latency must never ride on the lock every status poll takes), then
+inserts + queues inside a second critical section.  The executor pops a
+job, persists a checkpoint, persists the result, and only then deletes
+the checkpoint.  ``Registry::scan`` on restart rebuilds the registry
+from durable state alone: a spec with a result is Done, a spec without
+one is re-queued in id order, and ``next_id`` resumes at max+1.
+
+Bounded configuration: two enqueuers and one executor run pre-crash; a
+crash may be injected between ANY two steps (single fault); restart
+scans and a post-restart enqueuer + executor drain the registry.
+
+Invariants checked in every reachable state:
+  * no filesystem write while the registry lock is held (the L002 bug);
+  * a job visible in the queue always has a durable spec
+    (visible => durable, the crash-resume ack contract);
+  * an id is never spec-written twice (no duplicated job);
+  * a job whose result is durable is never run again.
+Terminal states require every durable spec to own a durable result (no
+lost job — an id allocated but never spec-written is an id GAP, which
+the contract allows) and each job run at most... exactly once per
+durable result.
+"""
+
+from explorer import clone
+
+MUTATIONS = {
+    "spec_write_under_lock": (
+        "enqueue atomic-writes the spec inside the registry critical "
+        "section — the actual PR 9 L002 bug: every status poll now rides "
+        "on disk latency"
+    ),
+    "insert_before_spec_write": (
+        "enqueue makes the job visible in the queue before its spec is "
+        "durable — a crash in between acks a job that restart cannot see"
+    ),
+    "next_id_from_count": (
+        "scan resumes next_id from the COUNT of durable specs instead of "
+        "max+1 — an id gap makes a fresh enqueue collide with a live job"
+    ),
+    "requeue_if_ckpt": (
+        "scan re-queues any spec with a leftover checkpoint even when its "
+        "result is durable — a crash between result-write and ckpt-delete "
+        "runs the job twice"
+    ),
+}
+
+PRE_ENQ = ("e0", "e1")
+
+
+class RegistryModel:
+    name = "job_registry"
+
+    def __init__(self, mutation=None):
+        if mutation is not None and mutation not in MUTATIONS:
+            raise ValueError(f"unknown registry mutation {mutation!r}")
+        self.mutation = mutation
+
+    # -- state ---------------------------------------------------------------
+
+    def initial(self):
+        threads = {}
+        for e in PRE_ENQ:
+            threads[e] = {"pc": "lock1", "id": None}
+        threads["x"] = {"pc": "pop", "job": None}  # pre-crash executor
+        threads["e2"] = {"pc": "await_restart", "id": None}  # post-restart
+        threads["x2"] = {"pc": "await_restart", "job": None}
+        return {
+            "durable": {"specs": [], "results": [], "ckpts": []},  # sorted id lists
+            "mem": {"next_id": 0, "queue": [], "jobs": {}},
+            "lock": None,  # registry-lock holder tid
+            "crashed": False,
+            "restarted": False,
+            "io_under_lock": None,  # tid that wrote durable state while locked
+            "dup_spec": None,  # id spec-written twice
+            "ran_after_result": None,  # id run again after its result landed
+            "threads": threads,
+        }
+
+    # -- helpers -------------------------------------------------------------
+
+    def _write_spec(self, n, tid):
+        th = n["threads"][tid]
+        if n["lock"] == tid:
+            n["io_under_lock"] = tid
+        if th["id"] in n["durable"]["specs"]:
+            n["dup_spec"] = th["id"]
+        else:
+            n["durable"]["specs"] = sorted(n["durable"]["specs"] + [th["id"]])
+
+    def _enqueuer_steps(self, s, tid, acts):
+        th = s["threads"][tid]
+        pc = th["pc"]
+        under_lock = self.mutation == "spec_write_under_lock"
+        if pc == "lock1" and s["lock"] is None:
+            n = clone(s)
+            n["lock"] = tid
+            n["threads"][tid]["pc"] = "alloc"
+            acts.append((f"{tid}: acquire registry lock (critical section 1)", n))
+        elif pc == "alloc":
+            n = clone(s)
+            t = n["threads"][tid]
+            t["id"] = n["mem"]["next_id"]
+            n["mem"]["next_id"] += 1
+            if under_lock:
+                t["pc"] = "write_spec"
+            elif self.mutation == "insert_before_spec_write":
+                t["pc"] = "insert"  # stays inside critical section 1
+            else:
+                t["pc"] = "unlock1"
+            acts.append((f"{tid}: allocated job id {t['id']} under the lock", n))
+        elif pc == "unlock1":
+            n = clone(s)
+            n["lock"] = None
+            n["threads"][tid]["pc"] = "write_spec"
+            acts.append((f"{tid}: release registry lock before the spec write", n))
+        elif pc == "write_spec":
+            n = clone(s)
+            self._write_spec(n, tid)
+            t = n["threads"][tid]
+            if under_lock:
+                t["pc"] = "insert"  # still inside the critical section
+            elif self.mutation == "insert_before_spec_write":
+                t["pc"] = "done"  # insert + unlock already happened
+            else:
+                t["pc"] = "lock2"
+            acts.append((f"{tid}: atomic_write spec for job {t['id']} (durable)", n))
+        elif pc == "lock2" and s["lock"] is None:
+            n = clone(s)
+            n["lock"] = tid
+            n["threads"][tid]["pc"] = "insert"
+            acts.append((f"{tid}: re-acquire registry lock (critical section 2)", n))
+        elif pc == "insert":
+            n = clone(s)
+            t = n["threads"][tid]
+            n["mem"]["jobs"][t["id"]] = "queued"
+            n["mem"]["queue"].append(t["id"])
+            if self.mutation == "insert_before_spec_write":
+                t["pc"] = "unlock1b"
+            else:
+                t["pc"] = "unlock2"
+            acts.append((f"{tid}: insert job {t['id']} into registry + queue", n))
+        elif pc == "unlock1b":  # insert_before_spec_write: unlock, then write
+            n = clone(s)
+            n["lock"] = None
+            n["threads"][tid]["pc"] = "write_spec"
+            acts.append((f"{tid}: [insert_before_spec_write] unlock, spec still not durable", n))
+        elif pc == "unlock2":
+            n = clone(s)
+            n["lock"] = None
+            n["threads"][tid]["pc"] = "done"
+            acts.append((f"{tid}: release registry lock — enqueue({n['threads'][tid]['id']}) acked", n))
+
+    def _executor_steps(self, s, tid, acts, enqueuers):
+        th = s["threads"][tid]
+        pc = th["pc"]
+        if pc == "pop":
+            if s["mem"]["queue"]:
+                if s["lock"] is None:
+                    n = clone(s)
+                    t = n["threads"][tid]
+                    t["job"] = n["mem"]["queue"].pop(0)  # one critical section
+                    n["mem"]["jobs"][t["job"]] = "running"
+                    if t["job"] in n["durable"]["results"]:
+                        n["ran_after_result"] = t["job"]
+                    t["pc"] = "ckpt"
+                    acts.append((f"{tid}: popped job {t['job']} (Queued -> Running)", n))
+            elif all(s["threads"][e]["pc"] == "done" for e in enqueuers):
+                n = clone(s)
+                n["threads"][tid]["pc"] = "done"
+                acts.append((f"{tid}: queue drained, enqueuers done — executor exits", n))
+        elif pc == "ckpt":
+            n = clone(s)
+            t = n["threads"][tid]
+            if t["job"] not in n["durable"]["ckpts"]:
+                n["durable"]["ckpts"] = sorted(n["durable"]["ckpts"] + [t["job"]])
+            t["pc"] = "result"
+            acts.append((f"{tid}: atomic_write checkpoint for job {t['job']}", n))
+        elif pc == "result":
+            n = clone(s)
+            t = n["threads"][tid]
+            if t["job"] not in n["durable"]["results"]:
+                n["durable"]["results"] = sorted(n["durable"]["results"] + [t["job"]])
+            t["pc"] = "del_ckpt"
+            acts.append((f"{tid}: atomic_write result for job {t['job']} (durable)", n))
+        elif pc == "del_ckpt":
+            n = clone(s)
+            t = n["threads"][tid]
+            n["durable"]["ckpts"] = [c for c in n["durable"]["ckpts"] if c != t["job"]]
+            n["mem"]["jobs"][t["job"]] = "done"
+            t["job"] = None
+            t["pc"] = "pop"
+            acts.append((f"{tid}: delete checkpoint — job retired (Done)", n))
+
+    # -- transition relation -------------------------------------------------
+
+    def actions(self, s):
+        acts = []
+        if not s["crashed"]:
+            for e in PRE_ENQ:
+                self._enqueuer_steps(s, e, acts)
+            self._executor_steps(s, "x", acts, PRE_ENQ)
+            # The fault: a crash may strike between ANY two steps (once).
+            n = clone(s)
+            n["crashed"] = True
+            n["mem"] = None
+            n["lock"] = None
+            for t in (*PRE_ENQ, "x"):
+                n["threads"][t]["pc"] = "dead"
+                if "job" in n["threads"][t]:
+                    n["threads"][t]["job"] = None
+            acts.append(("CRASH: process dies — all in-memory state lost", n))
+        elif not s["restarted"]:
+            n = clone(s)
+            n["restarted"] = True
+            d = n["durable"]
+            if self.mutation == "next_id_from_count":
+                next_id = len(d["specs"])
+            else:
+                next_id = (max(d["specs"]) + 1) if d["specs"] else 0
+            jobs, queue = {}, []
+            for i in d["specs"]:  # sorted => re-queued in id order
+                if i in d["results"] and not (
+                    self.mutation == "requeue_if_ckpt" and i in d["ckpts"]
+                ):
+                    jobs[i] = "done"
+                else:
+                    jobs[i] = "queued"
+                    queue.append(i)
+            n["mem"] = {"next_id": next_id, "queue": queue, "jobs": jobs}
+            n["threads"]["e2"]["pc"] = "lock1"
+            n["threads"]["x2"]["pc"] = "pop"
+            acts.append((f"RESTART: scan rebuilt registry (re-queued {queue}, "
+                         f"next_id={next_id})", n))
+        else:
+            self._enqueuer_steps(s, "e2", acts)
+            self._executor_steps(s, "x2", acts, ("e2",))
+        return acts
+
+    # -- invariants ----------------------------------------------------------
+
+    def check(self, s):
+        if s["io_under_lock"] is not None:
+            return (
+                f"{s['io_under_lock']} performed a filesystem write while "
+                f"holding the registry lock — every status poll now rides on "
+                f"disk latency (L002)"
+            )
+        if s["dup_spec"] is not None:
+            return (
+                f"job id {s['dup_spec']} was spec-written twice — a restarted "
+                f"registry handed out a live job's id (duplicated job)"
+            )
+        if s["ran_after_result"] is not None:
+            return (
+                f"job {s['ran_after_result']} ran again after its result was "
+                f"already durable (duplicated job)"
+            )
+        if s["mem"] is not None:
+            for i in s["mem"]["queue"]:
+                if i not in s["durable"]["specs"]:
+                    return (
+                        f"job {i} is visible in the queue without a durable "
+                        f"spec — a crash here loses an acked job"
+                    )
+            if len(set(s["mem"]["queue"])) != len(s["mem"]["queue"]):
+                return f"queue holds a duplicate id: {s['mem']['queue']}"
+        return None
+
+    def check_final(self, s):
+        for tid, th in s["threads"].items():
+            if th["pc"] not in ("done", "dead", "await_restart"):
+                return f"deadlock: {tid} stuck at pc `{th['pc']}`"
+        if s["crashed"] and not s["restarted"]:
+            return "crashed but never restarted (explorer bug: restart is always enabled)"
+        missing = [i for i in s["durable"]["specs"] if i not in s["durable"]["results"]]
+        if missing:
+            return (
+                f"terminated with durable specs {missing} lacking results — "
+                f"restart-resume lost the job(s)"
+            )
+        return None
+
+
+def build(mutation=None):
+    return RegistryModel(mutation)

@@ -1,0 +1,166 @@
+#!/usr/bin/env python3
+"""Self-test for tools/xrverify (stdlib-only; runs before the real
+verification in CI, like tools/xrlint/test_xrlint.py).
+
+Four layers:
+  1. Clean verification: every registered model passes exhaustively,
+     with explored-state counts above per-model floors — a model whose
+     state space collapses (a transition system accidentally gutted by
+     an edit) fails here even though it still "passes".
+  2. Mutation corpus: every seeded bug in every model's MUTATIONS table
+     (>= 2 per model, including the two bugs PRs 8 and 9 fixed by hand)
+     must produce an invariant violation with a readable, minimal-depth
+     counterexample trace written to the trace dir.
+  3. Digest-lock workflow on a copy of rust/src: editing fenced code is
+     V001, deleting a fence is V002, and --update-models-lock
+     re-records to a clean state.
+  4. CLI contract: usage errors exit 2, not 0 or a stack trace.
+"""
+
+import os
+import re
+import shutil
+import subprocess
+import sys
+import tempfile
+
+HERE = os.path.dirname(os.path.abspath(__file__))
+XRVERIFY = os.path.join(HERE, "xrverify.py")
+REPO = os.path.dirname(os.path.dirname(HERE))
+
+sys.path.insert(0, HERE)
+import model_cache  # noqa: E402
+import model_coalescer  # noqa: E402
+import model_pool  # noqa: E402
+import model_registry  # noqa: E402
+
+# Model name -> (module, floor on explored states in the clean run).
+# Floors sit well under the observed counts (140 / 1193 / 1311 / 845)
+# but far above what a gutted transition system would reach.
+MODELS = {
+    "cache_eviction": (model_cache, 100),
+    "coalescer": (model_coalescer, 800),
+    "job_registry": (model_registry, 900),
+    "worker_pool": (model_pool, 600),
+}
+
+failures = []
+
+
+def run(*args):
+    return subprocess.run(
+        [sys.executable, XRVERIFY, *args], capture_output=True, text=True
+    )
+
+
+def check(name, ok, detail=""):
+    status = "ok" if ok else "FAIL"
+    print(f"[{status}] {name}")
+    if not ok:
+        failures.append(name)
+        if detail:
+            print(detail)
+
+
+def main():
+    # 1. The real repo verifies clean, every model exhaustively explored
+    #    with a healthy state count.
+    with tempfile.TemporaryDirectory() as traces:
+        r = run("--trace-dir", traces)
+        check("repo verifies clean", r.returncode == 0 and "xrverify: OK" in r.stdout,
+              r.stdout + r.stderr)
+        explored = {
+            m.group(1): int(m.group(2))
+            for m in re.finditer(r"model (\w+): OK — (\d+) states", r.stdout)
+        }
+        for name, (_, floor) in sorted(MODELS.items()):
+            got = explored.get(name, 0)
+            check(f"{name} explores >= {floor} states (got {got})", got >= floor,
+                  r.stdout)
+            check(f"{name} reports every interleaving explored",
+                  re.search(rf"model {name}: OK.*every interleaving explored",
+                            r.stdout) is not None, r.stdout)
+
+    # 2. Every seeded bug is caught with a readable counterexample.
+    for name, (module, _) in sorted(MODELS.items()):
+        check(f"{name} seeds >= 2 mutations", len(module.MUTATIONS) >= 2,
+              str(module.MUTATIONS))
+        for mut in sorted(module.MUTATIONS):
+            with tempfile.TemporaryDirectory() as traces:
+                r = run("--mutate", f"{name}:{mut}", "--trace-dir", traces)
+                out = r.stdout + r.stderr
+                ok = r.returncode == 1 and "violation in model" in out
+                trace = os.path.join(traces, f"{name}.{mut}.trace.txt")
+                text = ""
+                if os.path.exists(trace):
+                    with open(trace, encoding="utf-8") as fh:
+                        text = fh.read()
+                ok = ok and "counterexample (" in text and text.count("\n") > 3
+                check(f"mutation {name}:{mut} produces a violation trace", ok, out)
+
+    # The two historical bugs (PR 8: mtime eviction inversion, PR 9:
+    # spec write under the registry lock) must stay in the corpus.
+    check("PR-8 bug seeded", "mtime_epoch_inversion" in model_cache.MUTATIONS)
+    check("PR-9 bug seeded", "spec_write_under_lock" in model_registry.MUTATIONS)
+
+    # 3. Digest-lock workflow on a scratch copy of the tree.
+    with tempfile.TemporaryDirectory() as tmp:
+        src = os.path.join(tmp, "src")
+        shutil.copytree(os.path.join(REPO, "rust", "src"), src)
+        lock = os.path.join(tmp, "models.lock")
+        shutil.copy(os.path.join(HERE, "models.lock"), lock)
+        traces = os.path.join(tmp, "traces")
+
+        r = run(src, "--models-lock", lock, "--trace-dir", traces)
+        check("scratch copy starts clean", r.returncode == 0, r.stdout + r.stderr)
+
+        # Edit a line INSIDE a fenced region: drift, not a fence error.
+        cache_rs = os.path.join(src, "dse", "cache.rs")
+        with open(cache_rs, encoding="utf-8") as fh:
+            lines = fh.readlines()
+        for i, line in enumerate(lines):
+            if "xrverify: model(cache_eviction)" in line:
+                lines.insert(i + 1, "    // drifted: pretend the protocol changed\n")
+                break
+        else:
+            raise AssertionError("cache_eviction fence not found")
+        with open(cache_rs, "w", encoding="utf-8") as fh:
+            fh.writelines(lines)
+        r = run(src, "--models-lock", lock, "--trace-dir", traces)
+        check("edited fenced code fails with V001",
+              r.returncode == 1 and "V001" in r.stderr, r.stdout + r.stderr)
+
+        # Re-record (the reviewed-model workflow), then clean again.
+        r = run(src, "--models-lock", lock, "--update-models-lock")
+        check("--update-models-lock re-records", r.returncode == 0,
+              r.stdout + r.stderr)
+        r = run(src, "--models-lock", lock, "--trace-dir", traces)
+        check("clean after re-record", r.returncode == 0, r.stdout + r.stderr)
+
+        # Deleting a fence is V002 — the protocol must stay locked.
+        with open(cache_rs, encoding="utf-8") as fh:
+            text = fh.read()
+        text = text.replace("// xrverify: endmodel(cache_eviction)", "", 1)
+        with open(cache_rs, "w", encoding="utf-8") as fh:
+            fh.write(text)
+        r = run(src, "--models-lock", lock, "--trace-dir", traces)
+        check("deleted fence fails with V002",
+              r.returncode == 1 and "V002" in r.stderr, r.stdout + r.stderr)
+
+    # 4. CLI contract.
+    r = run("--no-such-option")
+    check("unknown option exits 2", r.returncode == 2, r.stdout + r.stderr)
+    r = run("--mutate", "cache_eviction:not_a_mutation")
+    check("unknown mutation exits 2", r.returncode == 2, r.stdout + r.stderr)
+    r = run("--mutate", "garbage")
+    check("malformed --mutate exits 2", r.returncode == 2, r.stdout + r.stderr)
+
+    if failures:
+        print(f"\n{len(failures)} xrverify self-test failure(s)", file=sys.stderr)
+        return 1
+    print("\nall xrverify self-tests passed")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -1,0 +1,313 @@
+#!/usr/bin/env python3
+"""xrverify — exhaustive bounded model checking of the repo's concurrency
+protocols (stdlib-only; runs in CI after xrlint, before the build).
+
+The four hand-written protocols the service layer stands on — the
+flock-guarded ProfileCache eviction, the Coalescer leader/waiter slots,
+the WorkerPool fail-fast scheduler, and the crash-resumable job
+registry — have never been executed in these containers (no cargo;
+ROADMAP toolchain debt).  xrlint checks them syntactically; xrverify
+checks the protocol DESIGNS semantically: each is a small transition
+system (threads = step functions over explicit shared state,
+nondeterminism = scheduler choice, crashes = environment actions), and
+a breadth-first explorer with state hashing enumerates EVERY
+interleaving up to a bounded configuration, checking safety invariants
+in every reachable state and termination/liveness by backward
+reachability from the acceptable terminal states.  A violation prints a
+minimal-depth scheduler trace.
+
+The models are digest-locked to the Rust they describe, the same way
+xrlint's schemas.lock pins serialized layouts:
+
+    // xrverify: model(<name>)
+    ...protocol code the model transcribes...
+    // xrverify: endmodel(<name>)
+
+fences in the four source files are fingerprinted into
+tools/xrverify/models.lock; editing fenced code without re-recording
+(``--update-models-lock``, which you should only run together with a
+model review) is finding V001, a missing/unbalanced fence is V002 —
+so the Rust cannot silently diverge from the verified model.
+
+Usage:
+  xrverify.py [SRC_ROOT] [--models-lock PATH] [--update-models-lock]
+              [--model NAME] [--mutate NAME:MUTATION] [--trace-dir DIR]
+              [--list-mutations] [--skip-lock-check]
+
+Exit 0 when clean, 1 on findings or an invariant violation, 2 on usage
+errors.
+"""
+
+import hashlib
+import os
+import re
+import sys
+
+sys.path.insert(0, os.path.dirname(os.path.abspath(__file__)))
+
+import explorer  # noqa: E402
+import model_cache  # noqa: E402
+import model_coalescer  # noqa: E402
+import model_pool  # noqa: E402
+import model_registry  # noqa: E402
+
+# model name -> (module, source file that must carry its fences)
+MODELS = {
+    "cache_eviction": (model_cache, "dse/cache.rs"),
+    "coalescer": (model_coalescer, "dse/coalesce.rs"),
+    "worker_pool": (model_pool, "runtime/pool.rs"),
+    "job_registry": (model_registry, "service/jobs.rs"),
+}
+
+FENCE = re.compile(r"//\s*xrverify:\s*(model|endmodel)\((\w+)\)")
+
+
+def fail(msg):
+    print(f"xrverify error: {msg}", file=sys.stderr)
+    sys.exit(2)
+
+
+# --- fence fingerprinting ---------------------------------------------------
+
+def extract_regions(src_root, rel):
+    """{model name: [region text]} plus fence findings for one file."""
+    path = os.path.join(src_root, rel)
+    regions, findings = {}, []
+    if not os.path.exists(path):
+        return regions, [f"V002 {rel}: file not found under {src_root}"]
+    with open(path, encoding="utf-8") as fh:
+        lines = fh.read().split("\n")
+    open_at = {}  # name -> (start line idx, [lines])
+    for i, line in enumerate(lines):
+        m = FENCE.search(line)
+        if not m:
+            for name in open_at:
+                open_at[name][1].append(line)
+            continue
+        kind, name = m.group(1), m.group(2)
+        if kind == "model":
+            if name in open_at:
+                findings.append(f"V002 {rel}:{i + 1} model({name}) fence reopened before endmodel")
+            else:
+                open_at[name] = (i, [])
+        else:
+            if name not in open_at:
+                findings.append(f"V002 {rel}:{i + 1} endmodel({name}) without a matching model fence")
+            else:
+                _, body = open_at.pop(name)
+                regions.setdefault(name, []).append("\n".join(body))
+    for name, (i, _) in sorted(open_at.items()):
+        findings.append(f"V002 {rel}:{i + 1} model({name}) fence never closed")
+    return regions, findings
+
+
+def fingerprint(src_root):
+    """{model: (file, region count, line count, sha256 hex)} + findings."""
+    prints, findings = {}, []
+    for name, (_, rel) in sorted(MODELS.items()):
+        regions, file_findings = extract_regions(src_root, rel)
+        findings.extend(file_findings)
+        body = regions.get(name)
+        if not body:
+            findings.append(
+                f"V002 {rel}: no `// xrverify: model({name})` fence — the {name} "
+                f"protocol must stay digest-locked to its verified model"
+            )
+            continue
+        # Trailing whitespace is not semantics; everything else is.
+        norm = "\n---\n".join("\n".join(l.rstrip() for l in r.split("\n")) for r in body)
+        digest = hashlib.sha256(norm.encode("utf-8")).hexdigest()
+        nlines = sum(r.count("\n") + 1 for r in body)
+        prints[name] = (rel, len(body), nlines, digest)
+        stray = sorted(set(regions) - set(MODELS))
+        for s in stray:
+            findings.append(f"V002 {rel}: fence model({s}) matches no registered model")
+    return prints, findings
+
+
+def parse_models_lock(path):
+    locked = {}
+    with open(path, encoding="utf-8") as fh:
+        for line in fh:
+            line = line.strip()
+            if not line or line.startswith("#"):
+                continue
+            m = re.match(r"(\w+)\s+file=(\S+)\s+regions=(\d+)\s+lines=(\d+)\s+sha256=([0-9a-f]{64})", line)
+            if not m:
+                fail(f"{path}: unparseable models.lock line: {line}")
+            locked[m.group(1)] = (m.group(2), int(m.group(3)), int(m.group(4)), m.group(5))
+    return locked
+
+
+def write_models_lock(path, prints):
+    lines = [
+        "# xrverify models.lock — fenced-region fingerprints per verified model.",
+        "# A digest here asserts the fenced Rust still matches the transition",
+        "# system tools/xrverify checks exhaustively. Regenerate ONLY together",
+        "# with a review of the corresponding model_*.py:",
+        "#   python3 tools/xrverify/xrverify.py --update-models-lock",
+        "# (see DESIGN.md §3.8 for the fence/lock workflow)",
+    ]
+    for name in sorted(prints):
+        rel, nregions, nlines, digest = prints[name]
+        lines.append(f"{name} file={rel} regions={nregions} lines={nlines} sha256={digest}")
+    with open(path, "w", encoding="utf-8") as fh:
+        fh.write("\n".join(lines) + "\n")
+
+
+def check_lock(src_root, lock_path, update):
+    """Returns (findings, updated?)."""
+    prints, findings = fingerprint(src_root)
+    if update:
+        if findings:
+            return findings, False
+        write_models_lock(lock_path, prints)
+        for name in sorted(prints):
+            rel, nregions, nlines, digest = prints[name]
+            print(f"models.lock: recorded {name} ({rel}, {nregions} region(s), "
+                  f"{nlines} lines, {digest[:16]}…)")
+        return [], True
+    if not os.path.exists(lock_path):
+        findings.append(
+            f"V003 models.lock not found at {lock_path}; run --update-models-lock "
+            f"together with a model review to record the fenced regions"
+        )
+        return findings, False
+    locked = parse_models_lock(lock_path)
+    for name in sorted(prints):
+        rel, nregions, nlines, digest = prints[name]
+        if name not in locked:
+            findings.append(
+                f"V001 {rel}: model `{name}` is fenced but not in models.lock — "
+                f"record it with --update-models-lock after reviewing model_*.py"
+            )
+            continue
+        lrel, lregions, llines, ldigest = locked[name]
+        if (rel, nregions, digest) != (lrel, lregions, ldigest):
+            findings.append(
+                f"V001 {rel}: fenced source for model `{name}` drifted from "
+                f"models.lock (lock {ldigest[:16]}…/{llines} lines, code "
+                f"{digest[:16]}…/{nlines} lines) — re-verify that "
+                f"tools/xrverify/model_{_modfile(name)}.py still transcribes this "
+                f"protocol, then re-record with --update-models-lock"
+            )
+    for name in sorted(set(locked) - set(prints)):
+        findings.append(
+            f"V003 models.lock records model `{name}` but no fenced region "
+            f"provides it — stale entries must be removed with --update-models-lock"
+        )
+    return findings, False
+
+
+def _modfile(name):
+    return {"cache_eviction": "cache", "coalescer": "coalescer",
+            "worker_pool": "pool", "job_registry": "registry"}.get(name, name)
+
+
+# --- model runs -------------------------------------------------------------
+
+def run_model(name, mutation, trace_dir):
+    module, _ = MODELS[name]
+    result = explorer.explore(module.build(mutation))
+    tag = f"{name}" + (f" [mutation {mutation}]" if mutation else "")
+    if result.ok:
+        print(f"xrverify: model {tag}: OK — {result.states} states, "
+              f"{result.transitions} transitions, {result.terminals} terminal(s), "
+              f"every interleaving explored")
+        return True
+    text = result.violation.render(tag)
+    print(text, file=sys.stderr)
+    if trace_dir:
+        os.makedirs(trace_dir, exist_ok=True)
+        out = os.path.join(trace_dir, f"{name}{'.' + mutation if mutation else ''}.trace.txt")
+        with open(out, "w", encoding="utf-8") as fh:
+            fh.write(text + "\n")
+        print(f"xrverify: counterexample trace written to {out}", file=sys.stderr)
+    return False
+
+
+def main():
+    argv = sys.argv[1:]
+    update = "--update-models-lock" in argv
+    skip_lock = "--skip-lock-check" in argv
+    list_mut = "--list-mutations" in argv
+    argv = [a for a in argv if a not in
+            ("--update-models-lock", "--skip-lock-check", "--list-mutations")]
+    lock_path = trace_dir = only_model = mutate = None
+    pos = []
+    i = 0
+    while i < len(argv):
+        if argv[i] == "--models-lock":
+            i += 1
+            lock_path = argv[i] if i < len(argv) else fail("--models-lock needs a path")
+        elif argv[i] == "--trace-dir":
+            i += 1
+            trace_dir = argv[i] if i < len(argv) else fail("--trace-dir needs a path")
+        elif argv[i] == "--model":
+            i += 1
+            only_model = argv[i] if i < len(argv) else fail("--model needs a name")
+        elif argv[i] == "--mutate":
+            i += 1
+            mutate = argv[i] if i < len(argv) else fail("--mutate needs NAME:MUTATION")
+        elif argv[i].startswith("--"):
+            fail(f"unknown option {argv[i]}")
+        else:
+            pos.append(argv[i])
+        i += 1
+    if len(pos) > 1:
+        fail("usage: xrverify.py [SRC_ROOT] [--models-lock PATH] [--update-models-lock] "
+             "[--model NAME] [--mutate NAME:MUTATION] [--trace-dir DIR] [--list-mutations]")
+
+    here = os.path.dirname(os.path.abspath(__file__))
+    src_root = pos[0] if pos else os.path.join(os.path.dirname(os.path.dirname(here)), "rust", "src")
+    if lock_path is None:
+        lock_path = os.path.join(here, "models.lock")
+    if trace_dir is None:
+        trace_dir = os.path.join(here, "traces")
+
+    if list_mut:
+        for name in sorted(MODELS):
+            module, rel = MODELS[name]
+            print(f"{name} ({rel}):")
+            for mut, desc in sorted(module.MUTATIONS.items()):
+                print(f"  {mut}: {desc}")
+        return 0
+
+    if mutate:
+        if ":" not in mutate:
+            fail("--mutate needs NAME:MUTATION (see --list-mutations)")
+        name, mut = mutate.split(":", 1)
+        if name not in MODELS:
+            fail(f"unknown model {name!r} (known: {', '.join(sorted(MODELS))})")
+        if mut not in MODELS[name][0].MUTATIONS:
+            fail(f"unknown mutation {mut!r} for model {name} (see --list-mutations)")
+        return 0 if run_model(name, mut, trace_dir) else 1
+
+    if not os.path.isdir(src_root):
+        fail(f"{src_root}: not a directory")
+
+    findings = []
+    if not skip_lock:
+        findings, updated = check_lock(src_root, lock_path, update)
+        if updated:
+            print("xrverify: models.lock updated")
+            return 0
+    for f in findings:
+        print(f, file=sys.stderr)
+
+    names = [only_model] if only_model else sorted(MODELS)
+    if only_model and only_model not in MODELS:
+        fail(f"unknown model {only_model!r} (known: {', '.join(sorted(MODELS))})")
+    ok = all([run_model(name, None, trace_dir) for name in names])
+
+    if findings or not ok:
+        print(f"xrverify: FAILED ({len(findings)} lock/fence finding(s), "
+              f"models {'clean' if ok else 'VIOLATED'})", file=sys.stderr)
+        return 1
+    print(f"xrverify: OK — {len(names)} model(s) exhaustively explored, "
+          f"models.lock digests match the fenced Rust")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())
